@@ -1,0 +1,129 @@
+"""AOT lowering: JAX (L2+L1) → HLO **text** artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, for each requested variant:
+  artifacts/<variant>_train.hlo.txt   (params…, x, onehot) → (loss, grads…)
+  artifacts/<variant>_eval.hlo.txt    (params…, x, onehot) → (loss_sum, n_correct)
+  artifacts/manifest.json             shapes + entry-point metadata the Rust
+                                      runtime uses to allocate/validate I/O.
+
+Usage:  python -m compile.aot --out ../artifacts [--variants tiny,cifar,...]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import VARIANTS, eval_step, train_step
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for rust unwrap)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def specs_for(variant, batch):
+    f32 = jnp.float32
+    params = [jax.ShapeDtypeStruct(s, f32) for _, s in variant.param_shapes]
+    x = jax.ShapeDtypeStruct((batch, variant.input_dim), f32)
+    y = jax.ShapeDtypeStruct((batch, variant.classes), f32)
+    return params, x, y
+
+
+def lower_variant(variant):
+    params, xt, yt = specs_for(variant, variant.train_batch)
+
+    def train(*args):
+        nparam = len(params)
+        return train_step(variant, list(args[:nparam]), args[nparam], args[nparam + 1])
+
+    train_lowered = jax.jit(train).lower(*params, xt, yt)
+
+    params_e, xe, ye = specs_for(variant, variant.eval_batch)
+
+    def evalf(*args):
+        nparam = len(params_e)
+        return eval_step(variant, list(args[:nparam]), args[nparam], args[nparam + 1])
+
+    eval_lowered = jax.jit(evalf).lower(*params_e, xe, ye)
+    return to_hlo_text(train_lowered), to_hlo_text(eval_lowered)
+
+
+def manifest_entry(variant):
+    return {
+        "name": variant.name,
+        "input_dim": variant.input_dim,
+        "hidden": list(variant.hidden),
+        "classes": variant.classes,
+        "train_batch": variant.train_batch,
+        "eval_batch": variant.eval_batch,
+        "n_params": int(variant.n_params),
+        "params": [
+            {"name": n, "shape": list(s)} for n, s in variant.param_shapes
+        ],
+        "train": {
+            "file": f"{variant.name}_train.hlo.txt",
+            # inputs: params..., x (B,D), onehot (B,K); outputs: loss, grads...
+            "outputs": 1 + len(variant.param_shapes),
+        },
+        "eval": {
+            "file": f"{variant.name}_eval.hlo.txt",
+            "outputs": 2,
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--variants", default="tiny,cifar,wide,tinyimg")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    from . import model as model_mod
+
+    manifest = {"format": "hlo-text", "variants": {}}
+    for name in args.variants.split(","):
+        name = name.strip()
+        variant = VARIANTS[name]
+        # two flavors per variant: the Pallas-kernel lowering (default) and
+        # a pure-jnp lowering ("<name>_jnp") that XLA:CPU optimizes better —
+        # numerically identical; see EXPERIMENTS.md §Perf.
+        for impl, suffix in (("pallas", ""), ("jnp", "_jnp")):
+            model_mod.set_impl(impl)
+            out_name = f"{name}{suffix}"
+            train_txt, eval_txt = lower_variant(variant)
+            tf = os.path.join(args.out, f"{out_name}_train.hlo.txt")
+            ef = os.path.join(args.out, f"{out_name}_eval.hlo.txt")
+            with open(tf, "w") as f:
+                f.write(train_txt)
+            with open(ef, "w") as f:
+                f.write(eval_txt)
+            entry = manifest_entry(variant)
+            entry["name"] = out_name
+            entry["train"]["file"] = f"{out_name}_train.hlo.txt"
+            entry["eval"]["file"] = f"{out_name}_eval.hlo.txt"
+            manifest["variants"][out_name] = entry
+            print(f"[aot] {out_name}: train {len(train_txt)//1024} KiB, "
+                  f"eval {len(eval_txt)//1024} KiB, {variant.n_params} params")
+        model_mod.set_impl("pallas")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote manifest with {len(manifest['variants'])} variants")
+
+
+if __name__ == "__main__":
+    main()

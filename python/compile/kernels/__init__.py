@@ -1,0 +1,4 @@
+# L1: Pallas kernels for the paper's compute hot-spot (MLP matmuls + fused
+# softmax cross-entropy).  interpret=True everywhere — see DESIGN.md
+# §Hardware-Adaptation.
+from . import matmul, ref, softmax_xent  # noqa: F401

@@ -1,0 +1,184 @@
+"""L1 Pallas kernels: tiled matmul family (+ fused bias / ReLU epilogues).
+
+These are the compute hot-spots of the L2 model (every layer of the MLP
+forward and backward is one of these matmuls). They are written TPU-style:
+
+* The grid is ``(M/bm, N/bn, K/bk)``; the output block ``(bm, bn)`` stays
+  resident in VMEM and is revisited along the reduction axis ``k`` (the
+  classic "revisiting output" schedule — what a CUDA kernel would do with a
+  shared-memory accumulator tile, re-thought for the Pallas HBM→VMEM
+  pipeline; the Pallas pipeline double-buffers the ``x``/``y`` block fetches
+  automatically).
+* Block shapes default to MXU-friendly multiples of (8, 128) lanes /
+  128×128 systolic tiles, clamped to the problem size (see
+  ``_pick_block``).
+* Accumulation is always in float32 (``preferred_element_type``),
+  regardless of input dtype — this mirrors bf16-in/f32-acc MXU semantics.
+* ``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+  custom-calls; the HLO that reaches the Rust runtime is the interpreted
+  lowering.  Real-TPU efficiency is estimated from the BlockSpec footprint
+  in DESIGN.md §Perf.
+
+Shapes that do not divide the block are padded with zeros on the way in and
+sliced on the way out — zero padding is exact for matmul (and for the bias /
+ReLU epilogues, which are applied before slicing on padded rows that are
+then discarded).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default VMEM-friendly tile sizes.  (128, 128) output tiles with a 128-deep
+# reduction slab keep the working set at
+#   bm*bk + bk*bn + bm*bn floats = 3 * 128*128 * 4B = 192 KiB  « 16 MiB VMEM,
+# leaving ample room for the pipeline's double buffers.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _pick_block(dim: int, preferred: int, lane: int = 8) -> int:
+    """Largest multiple of ``lane`` ≤ preferred that is ≥ min(dim, lane)."""
+    if dim >= preferred:
+        return preferred
+    # round dim up to the lane width so tiny shapes still vectorize
+    return max(lane, -(-dim // lane) * lane)
+
+
+def _pad2(a, bm, bn):
+    m, n = a.shape
+    pm = (-m) % bm
+    pn = (-n) % bn
+    if pm or pn:
+        a = jnp.pad(a, ((0, pm), (0, pn)))
+    return a
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nk: int, epilogue: str, b_ref=None):
+    """Grid point (i, j, l): o[i,j] += x[i,l] @ y[l,j]; epilogue at l==nk-1."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        y_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    if epilogue != "none":
+
+        @pl.when(pl.program_id(2) == nk - 1)
+        def _epilogue():
+            acc = o_ref[...]
+            if b_ref is not None:
+                acc = acc + b_ref[...].astype(jnp.float32)
+            if epilogue in ("bias_relu", "relu"):
+                acc = jnp.maximum(acc, 0.0)
+            o_ref[...] = acc
+
+
+def _run(x, y, bias, epilogue, bm, bn, bk, out_dtype):
+    """Shared pallas_call driver for the NN (non-transposed) layout."""
+    m, k = x.shape
+    _, n = y.shape
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn, lane=128 if n >= 128 else 8)
+    bk = _pick_block(k, bk)
+    xp = _pad2(x, bm, bk)
+    yp = _pad2(y, bk, bn)
+    mp, kp = xp.shape
+    _, np_ = yp.shape
+    nk = kp // bk
+    grid = (mp // bm, np_ // bn, nk)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+        pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+    ]
+    operands = [xp, yp]
+    if bias is not None:
+        bp = jnp.pad(bias, ((0, np_ - n),)).reshape(1, np_)
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, l: (0, j)))
+        operands.append(bp)
+        kernel = functools.partial(_matmul_kernel, nk=nk, epilogue=epilogue)
+
+        def wrapped(x_ref, y_ref, b_ref, o_ref):
+            kernel(x_ref, y_ref, o_ref, b_ref=b_ref)
+
+        body = wrapped
+    else:
+        body = functools.partial(_matmul_kernel, nk=nk, epilogue=epilogue)
+
+    out = pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(*operands)
+    return out[:m, :n].astype(out_dtype)
+
+
+def matmul(x, y, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK, out_dtype=jnp.float32):
+    """``x @ y`` with f32 accumulation. x: (M, K), y: (K, N)."""
+    return _run(x, y, None, "none", bm, bn, bk, out_dtype)
+
+
+def linear(x, w, b, *, relu=False, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK,
+           out_dtype=jnp.float32):
+    """Fused ``x @ w + b`` with optional ReLU epilogue (one VMEM round-trip)."""
+    epilogue = "bias_relu" if relu else "bias"
+    return _run(x, w, b, epilogue, bm, bn, bk, out_dtype)
+
+
+def matmul_nt(x, y, **kw):
+    """``x @ y.T`` — backward pass dX = dY @ W.T.
+
+    The transpose is materialized by the BlockSpec index map on ``y`` rather
+    than a separate transpose op: we feed y.T's blocks by swapping indices.
+    For interpret-mode simplicity (and because XLA:CPU folds transposes into
+    the dot anyway), we transpose eagerly here; on TPU the same kernel would
+    use a swapped index_map with dimension_semantics to avoid the copy.
+    """
+    return matmul(x, y.T, **kw)
+
+
+def matmul_tn(x, y, **kw):
+    """``x.T @ y`` — backward pass dW = X.T @ dY."""
+    return matmul(x.T, y, **kw)
+
+
+def vmem_footprint_bytes(bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK,
+                         bytes_per_el=4, double_buffered=True):
+    """Estimated VMEM working set of one grid step (see DESIGN.md §Perf).
+
+    x-block + y-block (+ their pipeline double buffers) + resident o-block.
+    """
+    xb = bm * bk * bytes_per_el
+    yb = bk * bn * bytes_per_el
+    ob = bm * bn * 4  # accumulator is always f32
+    mult = 2 if double_buffered else 1
+    return mult * (xb + yb) + ob
+
+
+def mxu_utilization_estimate(m, n, k, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK,
+                             mxu=(128, 128)):
+    """Fraction of MXU lanes fed by the chosen tiling (structure estimate).
+
+    The MXU is a 128x128 systolic array; a (bm, bn, bk) tile keeps it fully
+    fed when bm and bn are multiples of 128.  Edge tiles (from padding) are
+    counted at their true occupancy.
+    """
+    import math
+
+    gm, gn, gk = math.ceil(m / bm), math.ceil(n / bn), math.ceil(k / bk)
+    useful = m * n * k
+    issued = (gm * bm) * (gn * bn) * (gk * bk)
+    tile_eff = min(bm / mxu[0], 1.0) * min(bn / mxu[1], 1.0)
+    return (useful / issued) * tile_eff

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Every kernel in this package must match its `*_ref` twin to float32
+tolerance across the shape/dtype sweeps in python/tests/test_kernel.py.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def linear_ref(x, w, b, relu=False):
+    out = matmul_ref(x, w) + b.astype(jnp.float32)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def matmul_nt_ref(x, y):
+    return matmul_ref(x, y.T)
+
+
+def matmul_tn_ref(x, y):
+    return matmul_ref(x.T, y)
+
+
+def softmax_xent_fwd_ref(logits, onehot):
+    z = logits.astype(jnp.float32)
+    y = onehot.astype(jnp.float32)
+    zmax = jnp.max(z, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(z - zmax), axis=-1, keepdims=True)) + zmax
+    loss = lse[:, 0] - jnp.sum(y * z, axis=-1)
+    probs = jnp.exp(z - lse)
+    return loss, probs
+
+
+def softmax_xent_grad_ref(probs, onehot, g_rows):
+    return (probs.astype(jnp.float32) - onehot.astype(jnp.float32)) * \
+        g_rows.reshape(-1, 1).astype(jnp.float32)
+
+
+def mean_xent_ref(logits, onehot):
+    loss, _ = softmax_xent_fwd_ref(logits, onehot)
+    return jnp.mean(loss)

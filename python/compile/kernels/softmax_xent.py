@@ -1,0 +1,130 @@
+"""L1 Pallas kernel: fused softmax cross-entropy (forward + gradient).
+
+One row-blocked pass computes, per example row:
+  * the numerically-stable log-sum-exp of the logits,
+  * the loss  ``lse - <onehot, logits>``,
+  * the softmax probabilities (saved for the backward pass).
+
+The gradient kernel computes ``(probs - onehot) * g`` fused, where ``g`` is
+the (broadcast) upstream cotangent of the mean loss.
+
+Labels are one-hot float tensors: the Rust data pipeline emits one-hot
+batches, which keeps the kernel free of integer gather ops (gathers lower
+poorly on both MXU-era TPUs and the interpret path).
+
+Class-dimension blocking: the class axis is kept whole inside one block
+(10 or 200 classes both fit VMEM trivially: 128 rows x 200 cols x 4 B
+= 100 KiB).  Rows are blocked by ``bb``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BB = 128  # rows per block
+
+
+def _pick_bb(b, bb):
+    return min(bb, max(8, -(-b // 8) * 8)) if b < bb else bb
+
+
+def _fwd_kernel(logits_ref, onehot_ref, loss_ref, probs_ref):
+    z = logits_ref[...].astype(jnp.float32)
+    y = onehot_ref[...].astype(jnp.float32)
+    zmax = jnp.max(z, axis=-1, keepdims=True)
+    ez = jnp.exp(z - zmax)
+    sez = jnp.sum(ez, axis=-1, keepdims=True)
+    lse = jnp.log(sez) + zmax
+    probs_ref[...] = ez / sez
+    loss_ref[...] = (lse[:, 0] - jnp.sum(y * z, axis=-1))[:, None]
+
+
+def _grad_kernel(probs_ref, onehot_ref, g_ref, dz_ref):
+    p = probs_ref[...].astype(jnp.float32)
+    y = onehot_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)  # (bb, 1) per-row upstream cotangent
+    dz_ref[...] = (p - y) * g
+
+
+def softmax_xent_fwd(logits, onehot, *, bb=DEFAULT_BB):
+    """Returns (loss_vec [B], probs [B, C])."""
+    b, c = logits.shape
+    bb = _pick_bb(b, bb)
+    pb = (-b) % bb
+    if pb:
+        logits = jnp.pad(logits, ((0, pb), (0, 0)))
+        # pad onehot with a valid row (class 0) so lse stays finite
+        pad_rows = jnp.zeros((pb, c), logits.dtype).at[:, 0].set(1.0)
+        onehot = jnp.concatenate([onehot, pad_rows], axis=0)
+    bp = logits.shape[0]
+    grid = (bp // bb,)
+    loss, probs = pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, c), lambda i: (i, 0)),
+            pl.BlockSpec((bb, c), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bb, c), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((bp, c), jnp.float32),
+        ],
+        interpret=True,
+    )(logits, onehot)
+    return loss[:b, 0], probs[:b]
+
+
+def softmax_xent_grad(probs, onehot, g_rows, *, bb=DEFAULT_BB):
+    """dlogits = (probs - onehot) * g_rows[:, None], fused."""
+    b, c = probs.shape
+    bb = _pick_bb(b, bb)
+    pb = (-b) % bb
+    g2 = g_rows.reshape(b, 1).astype(jnp.float32)
+    if pb:
+        probs = jnp.pad(probs, ((0, pb), (0, 0)))
+        onehot = jnp.pad(onehot, ((0, pb), (0, 0)))
+        g2 = jnp.pad(g2, ((0, pb), (0, 0)))
+    bp = probs.shape[0]
+    grid = (bp // bb,)
+    dz = pl.pallas_call(
+        _grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, c), lambda i: (i, 0)),
+            pl.BlockSpec((bb, c), lambda i: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, c), jnp.float32),
+        interpret=True,
+    )(probs, onehot, g2)
+    return dz[:b]
+
+
+@functools.partial(jax.custom_vjp)
+def mean_xent(logits, onehot):
+    """Mean softmax cross-entropy over the batch (differentiable)."""
+    loss, _ = softmax_xent_fwd(logits, onehot)
+    return jnp.mean(loss)
+
+
+def _mean_xent_fwd(logits, onehot):
+    loss, probs = softmax_xent_fwd(logits, onehot)
+    return jnp.mean(loss), (probs, onehot)
+
+
+def _mean_xent_bwd(res, g):
+    probs, onehot = res
+    b = probs.shape[0]
+    g_rows = jnp.full((b,), g / b, jnp.float32)
+    dz = softmax_xent_grad(probs, onehot, g_rows)
+    return dz, None
+
+
+mean_xent.defvjp(_mean_xent_fwd, _mean_xent_bwd)

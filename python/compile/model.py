@@ -1,0 +1,197 @@
+"""L2: the JAX model — an MLP image classifier with custom-VJP Pallas layers.
+
+This is the gradient oracle of the federated learning system: the Rust
+coordinator (L3) calls the AOT-compiled ``train_step`` to obtain the client
+gradient ``g̃_i(w)`` of Algorithm 1 and ``eval_step`` to measure the central
+server model.  Python never runs at request time — these functions are
+lowered once by aot.py to HLO text.
+
+Model variants (see VARIANTS):
+  tiny    4x4x3  inputs → [32]           → 10 classes   (fast tests)
+  cifar   32x32x3 inputs → [512, 256]    → 10 classes   (Fig 6 / Table 2)
+  wide    32x32x3 inputs → [2048, 1024]  → 10 classes   (~8.6M params, e2e)
+  tinyimg 64x64x3 inputs → [512, 256]    → 200 classes  (Fig 7)
+
+Every dense layer is the fused Pallas ``linear`` kernel (matmul + bias +
+ReLU epilogue); its backward pass uses the ``matmul_nt`` / ``matmul_tn``
+kernels.  The loss head is the fused Pallas softmax-cross-entropy.
+"""
+
+import functools
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul as mk
+from .kernels.softmax_xent import mean_xent
+
+
+@dataclass(frozen=True)
+class Variant:
+    name: str
+    input_dim: int
+    hidden: Tuple[int, ...]
+    classes: int
+    train_batch: int
+    eval_batch: int
+
+    @property
+    def layer_dims(self):
+        """[(in, out)] for each dense layer."""
+        dims = (self.input_dim,) + self.hidden + (self.classes,)
+        return list(zip(dims[:-1], dims[1:]))
+
+    @property
+    def param_shapes(self):
+        """Flat list of (name, shape) in the order train_step expects them."""
+        out = []
+        for li, (din, dout) in enumerate(self.layer_dims):
+            out.append((f"w{li}", (din, dout)))
+            out.append((f"b{li}", (dout,)))
+        return out
+
+    @property
+    def n_params(self):
+        return sum(int(jnp.prod(jnp.array(s))) for _, s in self.param_shapes)
+
+
+VARIANTS = {
+    "tiny": Variant("tiny", 4 * 4 * 3, (32,), 10, 16, 32),
+    "cifar": Variant("cifar", 32 * 32 * 3, (512, 256), 10, 128, 250),
+    "wide": Variant("wide", 32 * 32 * 3, (2048, 1024), 10, 128, 250),
+    "tinyimg": Variant("tinyimg", 64 * 64 * 3, (512, 256), 200, 128, 250),
+}
+
+
+# ---------------------------------------------------------------------------
+# Differentiable fused dense layer built on the Pallas kernels.
+#
+# IMPL switch: "pallas" (default) lowers every dense layer through the L1
+# Pallas kernels (interpret=True).  "jnp" routes through plain jnp ops —
+# identical numerics (see ref.py/tests), but XLA:CPU fuses and vectorizes
+# the straight-line HLO far better than the interpreter's grid loop.  The
+# AOT pipeline emits BOTH flavors; the runtime picks per variant (see
+# EXPERIMENTS.md §Perf for the measured gap).  On a real TPU the pallas
+# flavor is the one that exercises the Mosaic path.
+# ---------------------------------------------------------------------------
+
+_IMPL = "pallas"
+
+
+def set_impl(impl: str) -> None:
+    global _IMPL
+    assert impl in ("pallas", "jnp"), impl
+    _IMPL = impl
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x, w, b, relu):
+    if _IMPL == "jnp":
+        from .kernels import ref
+
+        return ref.linear_ref(x, w, b, relu=relu)
+    return mk.linear(x, w, b, relu=relu)
+
+
+def _dense_fwd(x, w, b, relu):
+    out = dense(x, w, b, relu)
+    # Save the activation mask rather than the pre-activation: smaller and
+    # sufficient (relu'(z) = 1{z>0} = 1{out>0} since out = max(z, 0)).
+    mask = (out > 0).astype(jnp.float32) if relu else None
+    return out, (x, w, mask)
+
+
+def _dense_bwd(relu, res, dout):
+    x, w, mask = res
+    if relu:
+        dout = dout * mask
+    if _IMPL == "jnp":
+        from .kernels import ref
+
+        dx = ref.matmul_nt_ref(dout, w)
+        dw = ref.matmul_tn_ref(x, dout)
+    else:
+        dx = mk.matmul_nt(dout, w)    # dY @ W^T
+        dw = mk.matmul_tn(x, dout)    # X^T @ dY
+    db = jnp.sum(dout, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Model fwd / loss / steps.
+# ---------------------------------------------------------------------------
+
+def forward(variant: Variant, params, x):
+    """params: flat list [w0, b0, w1, b1, ...]; x: (B, input_dim) f32."""
+    h = x
+    nlayers = len(variant.layer_dims)
+    for li in range(nlayers):
+        w, b = params[2 * li], params[2 * li + 1]
+        h = dense(h, w, b, li < nlayers - 1)  # ReLU on all but the head
+    return h  # logits
+
+
+def loss_fn(variant: Variant, params, x, onehot):
+    if _IMPL == "jnp":
+        from .kernels import ref
+
+        return ref.mean_xent_ref(forward(variant, params, x), onehot)
+    return mean_xent(forward(variant, params, x), onehot)
+
+
+def train_step(variant: Variant, params, x, onehot):
+    """→ (loss, *grads) in the same order as ``params``.
+
+    The 1/(n p_i) Generalized-AsyncSGD scaling is applied by the Rust server
+    at update time (keeping the artifact pure and reusable by the baselines).
+    """
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(variant, p, x, onehot))(
+        list(params)
+    )
+    return (loss, *grads)
+
+
+def eval_step(variant: Variant, params, x, onehot):
+    """→ (loss_sum, n_correct) both f32 scalars, for server-side evaluation."""
+    logits = forward(variant, params, x)
+    from .kernels.softmax_xent import softmax_xent_fwd
+
+    loss_vec, _ = softmax_xent_fwd(logits, onehot)
+    pred = jnp.argmax(logits, axis=-1)
+    label = jnp.argmax(onehot, axis=-1)
+    return jnp.sum(loss_vec), jnp.sum((pred == label).astype(jnp.float32))
+
+
+# Pure-jnp reference model (no Pallas) for gradient cross-checks in tests.
+def forward_ref(variant: Variant, params, x):
+    from .kernels import ref
+
+    h = x
+    nlayers = len(variant.layer_dims)
+    for li in range(nlayers):
+        w, b = params[2 * li], params[2 * li + 1]
+        h = ref.linear_ref(h, w, b, relu=li < nlayers - 1)
+    return h
+
+
+def loss_ref(variant: Variant, params, x, onehot):
+    from .kernels import ref
+
+    return ref.mean_xent_ref(forward_ref(variant, params, x), onehot)
+
+
+def init_params(variant: Variant, key):
+    """He-normal init (reference only — the Rust runtime has its own init
+    that matches these shapes; numeric equality is not required)."""
+    params = []
+    for (din, dout) in variant.layer_dims:
+        key, k1 = jax.random.split(key)
+        params.append(jax.random.normal(k1, (din, dout), jnp.float32)
+                      * jnp.sqrt(2.0 / din))
+        params.append(jnp.zeros((dout,), jnp.float32))
+    return params

@@ -1,0 +1,57 @@
+# pytest: AOT pipeline — lowered HLO text is well-formed and the manifest
+# matches the model metadata.  Uses the in-process lowering (no files).
+import json
+
+import pytest
+
+from compile import aot
+from compile.model import VARIANTS
+
+
+@pytest.fixture(scope="module")
+def tiny_lowered():
+    return aot.lower_variant(VARIANTS["tiny"])
+
+
+def test_hlo_text_structure(tiny_lowered):
+    train_txt, eval_txt = tiny_lowered
+    for txt in (train_txt, eval_txt):
+        assert txt.startswith("HloModule")
+        assert "ENTRY" in txt
+        assert "ROOT" in txt
+
+
+def test_train_hlo_io_arity(tiny_lowered):
+    train_txt, _ = tiny_lowered
+    v = VARIANTS["tiny"]
+    # params (4) + x + onehot = 6 parameters
+    nparams = len(v.param_shapes) + 2
+    for i in range(nparams):
+        assert f"parameter({i})" in train_txt
+    assert f"parameter({nparams})" not in train_txt
+    # output tuple: loss + 4 grads
+    assert f"f32[{v.input_dim},32]" in train_txt  # w0 grad shape appears
+    assert f"f32[{v.train_batch},{v.input_dim}]" in train_txt
+
+
+def test_eval_hlo_io_arity(tiny_lowered):
+    _, eval_txt = tiny_lowered
+    v = VARIANTS["tiny"]
+    assert f"f32[{v.eval_batch},{v.input_dim}]" in eval_txt
+
+
+def test_manifest_entry_roundtrips_json():
+    entry = aot.manifest_entry(VARIANTS["cifar"])
+    txt = json.dumps(entry)
+    back = json.loads(txt)
+    assert back["n_params"] == VARIANTS["cifar"].n_params
+    assert back["train"]["outputs"] == 1 + len(VARIANTS["cifar"].param_shapes)
+    assert [p["name"] for p in back["params"]][:2] == ["w0", "b0"]
+
+
+def test_specs_for_shapes():
+    v = VARIANTS["tiny"]
+    params, x, y = aot.specs_for(v, 8)
+    assert x.shape == (8, v.input_dim)
+    assert y.shape == (8, v.classes)
+    assert [p.shape for p in params] == [s for _, s in v.param_shapes]

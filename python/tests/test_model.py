@@ -1,0 +1,107 @@
+# pytest: L2 model — Pallas-backed grads vs jax.grad of the pure-jnp ref.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    v = M.VARIANTS["tiny"]
+    key = jax.random.PRNGKey(42)
+    params = M.init_params(v, key)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (v.train_batch, v.input_dim), jnp.float32)
+    lab = jax.random.randint(k2, (v.train_batch,), 0, v.classes)
+    onehot = jax.nn.one_hot(lab, v.classes, dtype=jnp.float32)
+    return v, params, x, onehot
+
+
+def test_forward_matches_ref(tiny_setup):
+    v, params, x, _ = tiny_setup
+    got = M.forward(v, params, x)
+    want = M.forward_ref(v, params, x)
+    assert got.shape == (v.train_batch, v.classes)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_train_step_loss_matches_ref(tiny_setup):
+    v, params, x, onehot = tiny_setup
+    out = M.train_step(v, params, x, onehot)
+    loss = out[0]
+    want = M.loss_ref(v, params, x, onehot)
+    assert_allclose(float(loss), float(want), rtol=1e-5)
+
+
+def test_train_step_grads_match_jax_grad_of_ref(tiny_setup):
+    v, params, x, onehot = tiny_setup
+    out = M.train_step(v, params, x, onehot)
+    grads = out[1:]
+    ref_grads = jax.grad(lambda p: M.loss_ref(v, p, x, onehot))(list(params))
+    assert len(grads) == len(ref_grads)
+    for g, gr in zip(grads, ref_grads):
+        assert g.shape == gr.shape
+        assert_allclose(np.asarray(g), np.asarray(gr), rtol=1e-4, atol=1e-5)
+
+
+def test_eval_step_counts(tiny_setup):
+    v, params, x, onehot = tiny_setup
+    loss_sum, ncorrect = M.eval_step(v, params, x, onehot)
+    logits = M.forward_ref(v, params, x)
+    pred = jnp.argmax(logits, -1)
+    lab = jnp.argmax(onehot, -1)
+    assert float(ncorrect) == float(jnp.sum((pred == lab).astype(jnp.float32)))
+    assert float(loss_sum) == pytest.approx(
+        float(M.loss_ref(v, params, x, onehot)) * v.train_batch, rel=1e-4)
+
+
+def test_gradient_descent_reduces_loss(tiny_setup):
+    v, params, x, onehot = tiny_setup
+    params = [jnp.array(p) for p in params]
+    out = M.train_step(v, params, x, onehot)
+    loss0 = float(out[0])
+    for _ in range(5):
+        out = M.train_step(v, params, x, onehot)
+        grads = out[1:]
+        params = [p - 0.1 * g for p, g in zip(params, grads)]
+    loss1 = float(M.train_step(v, params, x, onehot)[0])
+    assert loss1 < loss0
+
+
+def test_param_shapes_metadata():
+    v = M.VARIANTS["cifar"]
+    shapes = v.param_shapes
+    assert shapes[0] == ("w0", (3072, 512))
+    assert shapes[-1] == ("b2", (10,))
+    # n_params: 3072*512+512 + 512*256+256 + 256*10+10
+    assert v.n_params == 3072 * 512 + 512 + 512 * 256 + 256 + 256 * 10 + 10
+
+
+@pytest.mark.parametrize("name", ["tiny", "cifar", "wide", "tinyimg"])
+def test_variant_dims_consistent(name):
+    v = M.VARIANTS[name]
+    dims = v.layer_dims
+    assert dims[0][0] == v.input_dim
+    assert dims[-1][1] == v.classes
+    for (a, b), (c, d) in zip(dims[:-1], dims[1:]):
+        assert b == c
+
+
+def test_impl_switch_jnp_matches_pallas(tiny_setup):
+    # the two artifact flavors (pallas vs jnp lowering) must be numerically
+    # interchangeable — this is the python-side half of the contract that
+    # rust/tests/integration_flavors.rs checks on the compiled artifacts.
+    v, params, x, onehot = tiny_setup
+    M.set_impl("pallas")
+    out_p = M.train_step(v, params, x, onehot)
+    M.set_impl("jnp")
+    try:
+        out_j = M.train_step(v, params, x, onehot)
+    finally:
+        M.set_impl("pallas")
+    assert_allclose(float(out_p[0]), float(out_j[0]), rtol=1e-5)
+    for gp, gj in zip(out_p[1:], out_j[1:]):
+        assert_allclose(np.asarray(gp), np.asarray(gj), rtol=1e-4, atol=1e-5)

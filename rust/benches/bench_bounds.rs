@@ -1,0 +1,37 @@
+//! Bound-machinery bench: Theorem-1 evaluation, cubic η solve, Table-1
+//! comparators, and the Fig-2/3/4 regeneration cost per grid point.
+
+use fedqueue::bound::{BoundParams, EtaPoly, MiSource, Theorem1, TwoClusterStudy};
+use fedqueue::util::bench::{black_box, Bencher};
+
+fn main() {
+    let b = Bencher::default();
+    println!("# bench_bounds");
+    let params = BoundParams::worked_example(100);
+    let p = vec![0.01; 100];
+    let m = vec![10.0; 100];
+    let th = Theorem1::new(params, p, m).unwrap();
+    b.run("theorem1/optimize_eta", || {
+        black_box(th.optimize_eta().1);
+    });
+    let poly = EtaPoly { inv: 0.01, lin: 20.0, quad: 4e5 };
+    b.run("cubic/unconstrained_min", || {
+        black_box(poly.unconstrained_min());
+    });
+    let study = TwoClusterStudy {
+        params,
+        n_fast: 90,
+        mu_fast: 8.0,
+        mu_slow: 1.0,
+        source: MiSource::default(),
+    };
+    b.run("study/evaluate-one-p (theory m_i)", || {
+        black_box(study.evaluate(0.005).unwrap().bound);
+    });
+    b.run("study/baseline_bounds (Table 1)", || {
+        black_box(study.baseline_bounds().unwrap().0);
+    });
+    b.run("study/physical-time-point (App E.2)", || {
+        black_box(study.evaluate_physical_time(0.005, 1000.0).unwrap().bound);
+    });
+}

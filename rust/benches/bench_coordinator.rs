@@ -1,0 +1,104 @@
+//! End-to-end coordinator bench: CS steps/sec through the full async loop
+//! (simulator + snapshots + update rule + native backend), and the
+//! coordinator-only overhead (zero-cost gradient) — §Perf: coordinator
+//! overhead must be < 5% of the step budget at n=100.
+
+use fedqueue::coordinator::{build_loaders, Driver, DriverConfig};
+use fedqueue::data::{generate, EvalBatches, Partition, PartitionScheme, SynthSpec};
+use fedqueue::fl::UpdateRule;
+use fedqueue::runtime::{Backend, NativeBackend};
+use fedqueue::simulator::{ServiceDist, ServiceFamily, SimConfig};
+use fedqueue::util::bench::Bencher;
+use std::sync::Arc;
+
+fn main() {
+    let b = Bencher::quick();
+    println!("# bench_coordinator — full async loop (native backend, tiny model)");
+    for (n, c, steps) in [(20usize, 5usize, 200u64), (100, 10, 200)] {
+        let spec = SynthSpec::tiny_test();
+        let train = Arc::new(generate(&spec, 2000, 1));
+        let val = generate(&spec, 200, 2);
+        let part = Partition::build(
+            &train,
+            n,
+            PartitionScheme::ClassSubset { classes_per_client: 7 },
+            3,
+        )
+        .unwrap();
+        let rates: Vec<f64> = (0..n).map(|i| if i < n / 2 { 4.0 } else { 1.0 }).collect();
+        let r = b.run(&format!("coordinator/n={n}/C={c}/{steps}-steps"), || {
+            let mut backend = NativeBackend::tiny();
+            let loaders =
+                build_loaders(train.clone(), &part, backend.spec().train_batch, true, 4).unwrap();
+            let val_b = EvalBatches::new(&val, backend.spec().eval_batch);
+            let p = vec![1.0 / n as f64; n];
+            let sim = SimConfig {
+                seed: 5,
+                ..SimConfig::new(
+                    p.clone(),
+                    ServiceDist::from_rates(&rates, ServiceFamily::Exponential),
+                    c,
+                    steps,
+                )
+            };
+            let mut model = backend.spec().init_model(6);
+            let mut driver = Driver::new(&mut backend, loaders, val_b);
+            let res = driver
+                .run(
+                    DriverConfig {
+                        sim,
+                        rule: UpdateRule::GenAsync { eta: 0.05, p },
+                        eval_every: 0,
+                        loss_window: 10,
+                    },
+                    &mut model,
+                )
+                .unwrap();
+            std::hint::black_box(res.final_accuracy);
+        });
+        println!("    -> {:.0} CS steps/s end-to-end", r.throughput(steps as f64));
+    }
+    // coordinator overhead: same loop with the cheapest possible model —
+    // gradient cost ~ 0, exposing snapshot/bookkeeping costs
+    {
+        let n = 100;
+        let steps = 2000u64;
+        let spec = SynthSpec::tiny_test();
+        let train = Arc::new(generate(&spec, 500, 7));
+        let val = generate(&spec, 50, 8);
+        let part = Partition::build(&train, n, PartitionScheme::Iid, 9).unwrap();
+        let r = b.run("coordinator-overhead/n=100/tiny-model", || {
+            let mut backend = NativeBackend::tiny();
+            let loaders =
+                build_loaders(train.clone(), &part, backend.spec().train_batch, false, 10)
+                    .unwrap();
+            let val_b = EvalBatches::new(&val, backend.spec().eval_batch);
+            let p = vec![0.01; n];
+            let rates = vec![1.0; n];
+            let sim = SimConfig {
+                seed: 11,
+                ..SimConfig::new(
+                    p.clone(),
+                    ServiceDist::from_rates(&rates, ServiceFamily::Exponential),
+                    10,
+                    steps,
+                )
+            };
+            let mut model = backend.spec().init_model(12);
+            let mut driver = Driver::new(&mut backend, loaders, val_b);
+            let res = driver
+                .run(
+                    DriverConfig {
+                        sim,
+                        rule: UpdateRule::GenAsync { eta: 0.05, p },
+                        eval_every: 0,
+                        loss_window: 10,
+                    },
+                    &mut model,
+                )
+                .unwrap();
+            std::hint::black_box(res.final_accuracy);
+        });
+        println!("    -> {:.0} CS steps/s with ~free gradients", r.throughput(steps as f64));
+    }
+}

@@ -1,0 +1,19 @@
+//! Figure-regeneration bench: wall time of each paper table/figure target
+//! in quick mode — the "does the whole evaluation stay runnable" guardrail.
+
+use fedqueue::figures;
+use std::time::Instant;
+
+fn main() {
+    let out = std::env::temp_dir().join("fedqueue_bench_figures");
+    std::fs::create_dir_all(&out).unwrap();
+    println!("# bench_figures — quick-mode regeneration wall time");
+    for target in ["fig1", "fig3", "fig4", "fig5", "fig8", "fig9", "fig11", "fig12", "table1"] {
+        let t0 = Instant::now();
+        match figures::run_target(target, &out, true) {
+            Ok(_) => println!("{target:<8} {:>8.2}s", t0.elapsed().as_secs_f64()),
+            Err(e) => println!("{target:<8} FAILED: {e}"),
+        }
+    }
+    std::fs::remove_dir_all(&out).ok();
+}

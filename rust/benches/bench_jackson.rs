@@ -1,0 +1,36 @@
+//! Theory bench: Buzen convolution + m_i analysis cost — this sits inside
+//! the (p, η) optimizer's inner loop, so it must stay microseconds-fast.
+
+use fedqueue::queueing::{ClosedNetwork, MiEstimator};
+use fedqueue::util::bench::{black_box, Bencher};
+
+fn net(n: usize) -> ClosedNetwork {
+    let rates: Vec<f64> = (0..n).map(|i| if i < n / 2 { 4.0 } else { 1.0 }).collect();
+    ClosedNetwork::new(vec![1.0 / n as f64; n], rates).unwrap()
+}
+
+fn main() {
+    let b = Bencher::default();
+    println!("# bench_jackson — exact theory kernels");
+    for (n, c) in [(10usize, 1000usize), (100, 10), (100, 100), (100, 1000), (1000, 1000)] {
+        let network = net(n);
+        b.run(&format!("buzen/n={n}/C={c}"), || {
+            black_box(network.buzen(c).g[c]);
+        });
+        b.run(&format!("mi_analysis/n={n}/C={c}"), || {
+            black_box(network.mi_analysis(c, MiEstimator::Throughput).m[0]);
+        });
+    }
+    // the full optimizer sweep used by Algorithm 1's setup step
+    use fedqueue::bound::{BoundParams, MiSource, TwoClusterStudy};
+    let study = TwoClusterStudy {
+        params: BoundParams::worked_example(100),
+        n_fast: 90,
+        mu_fast: 8.0,
+        mu_slow: 1.0,
+        source: MiSource::default(),
+    };
+    b.run("optimize_p/50-point-grid/C=100", || {
+        black_box(study.optimize_p(50).unwrap().0.bound);
+    });
+}

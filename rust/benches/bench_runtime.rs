@@ -1,0 +1,66 @@
+//! L1/L2 bench: gradient-computation latency through the PJRT path (AOT
+//! JAX + Pallas HLO) vs the native backend, per model variant.
+//! §Perf target: PJRT cifar train_step competitive with native (see
+//! EXPERIMENTS.md §Perf for the optimization log).
+
+use fedqueue::data::Batch;
+use fedqueue::runtime::{Backend, Manifest, NativeBackend, PjrtBackend};
+use fedqueue::util::bench::{black_box, Bencher};
+use fedqueue::util::rng::Rng;
+
+fn batch_for(spec: &fedqueue::runtime::ModelSpec, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let b = spec.train_batch;
+    let x: Vec<f32> = (0..b * spec.input_dim).map(|_| rng.normal() as f32).collect();
+    let mut onehot = vec![0.0f32; b * spec.classes];
+    for bi in 0..b {
+        onehot[bi * spec.classes + rng.usize_below(spec.classes)] = 1.0;
+    }
+    Batch { x, onehot, batch: b }
+}
+
+fn main() {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("# bench_runtime SKIPPED — run `make artifacts` first");
+        return;
+    }
+    let b = Bencher::default();
+    println!("# bench_runtime — gradient latency per backend/variant");
+    for variant in ["tiny", "cifar", "cifar_jnp"] {
+        let mut pj = PjrtBackend::load(&dir, variant).unwrap();
+        let spec = pj.spec().clone();
+        let model = spec.init_model(1);
+        let batch = batch_for(&spec, 2);
+        let flops = 6.0
+            * spec.train_batch as f64
+            * spec
+                .layer_dims()
+                .iter()
+                .map(|(a, o)| (a * o) as f64)
+                .sum::<f64>();
+        let r = b.run(&format!("pjrt/{variant}/train_step"), || {
+            black_box(pj.train_step(&model, &batch).unwrap().0);
+        });
+        println!("    -> {:.2} GFLOP/s", flops / r.mean_ns);
+        let mut nat = NativeBackend::new(spec.clone());
+        let r = b.run(&format!("native/{variant}/train_step"), || {
+            black_box(nat.train_step(&model, &batch).unwrap().0);
+        });
+        println!("    -> {:.2} GFLOP/s", flops / r.mean_ns);
+        // eval latency
+        let eb = {
+            let mut rng = Rng::new(3);
+            let bsz = spec.eval_batch;
+            let x: Vec<f32> = (0..bsz * spec.input_dim).map(|_| rng.normal() as f32).collect();
+            let mut onehot = vec![0.0f32; bsz * spec.classes];
+            for bi in 0..bsz {
+                onehot[bi * spec.classes + rng.usize_below(spec.classes)] = 1.0;
+            }
+            Batch { x, onehot, batch: bsz }
+        };
+        b.run(&format!("pjrt/{variant}/eval_batch"), || {
+            black_box(pj.eval_batch(&model, &eb, eb.batch).unwrap().0);
+        });
+    }
+}

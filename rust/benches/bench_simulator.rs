@@ -1,0 +1,48 @@
+//! L3 bench: event-driven simulator throughput (CS steps/sec).
+//! §Perf target: ≥ 5M steps/s on the Fig-5 network (n=10, C=1000).
+
+use fedqueue::simulator::{run, ServiceDist, ServiceFamily, SimConfig};
+use fedqueue::util::bench::{black_box, Bencher};
+
+fn cfg(n: usize, c: usize, steps: u64, family: ServiceFamily) -> SimConfig {
+    let rates: Vec<f64> = (0..n).map(|i| if i < n / 2 { 1.2 } else { 1.0 }).collect();
+    SimConfig {
+        seed: 1,
+        ..SimConfig::new(
+            vec![1.0 / n as f64; n],
+            ServiceDist::from_rates(&rates, family),
+            c,
+            steps,
+        )
+    }
+}
+
+fn main() {
+    let b = Bencher::default();
+    println!("# bench_simulator — event-engine throughput");
+    for (label, n, c) in [
+        ("fig5-network n=10 C=1000", 10usize, 1000usize),
+        ("fig1-small   n=10 C=10", 10, 10),
+        ("dl-protocol  n=100 C=10", 100, 10),
+        ("large        n=1000 C=1000", 1000, 1000),
+    ] {
+        let steps = 100_000u64;
+        let r = b.run(&format!("sim/{label}/100k-steps"), || {
+            let res = run(cfg(n, c, steps, ServiceFamily::Exponential)).unwrap();
+            black_box(res.tau_max);
+        });
+        println!("    -> {:.2} M steps/s", r.throughput(steps as f64) / 1e6);
+    }
+    // service family overhead comparison
+    for fam in [
+        ServiceFamily::Exponential,
+        ServiceFamily::Deterministic,
+        ServiceFamily::LogNormal(0.5),
+    ] {
+        let steps = 100_000u64;
+        let r = b.run(&format!("sim/family/{fam:?}"), || {
+            black_box(run(cfg(10, 100, steps, fam)).unwrap().tau_c);
+        });
+        println!("    -> {:.2} M steps/s", r.throughput(steps as f64) / 1e6);
+    }
+}

@@ -1,0 +1,11 @@
+//! Convergence-bound machinery: Theorem 1 (`theorem1`), the FedBuff /
+//! AsyncSGD comparators of Table 1 (`table1`), and the (p, η) optimizer of
+//! Algorithm 1 (`optimizer`).
+
+pub mod optimizer;
+pub mod table1;
+pub mod theorem1;
+
+pub use optimizer::{relative_improvement, BoundPoint, MiSource, TwoClusterStudy};
+pub use table1::DelayStats;
+pub use theorem1::{BoundParams, EtaPoly, Theorem1};

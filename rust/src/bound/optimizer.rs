@@ -1,0 +1,379 @@
+//! The (p, η) optimizer — Algorithm 1's "Compute optimal (p, η) by
+//! minimizing (3)" step, specialized (as in the paper's §2 worked example
+//! and all figures) to 2-cluster fast/slow populations where p is a single
+//! scalar: the probability of selecting each fast client.
+//!
+//! m_i can be supplied by exact Jackson theory (fast — default) or by the
+//! Monte-Carlo simulator (the paper's own approach in App E); they agree
+//! within MC noise (see integration tests).
+
+use super::table1::{self, DelayStats};
+use super::theorem1::{BoundParams, Theorem1};
+use crate::queueing::{ClosedNetwork, MiEstimator, TwoCluster};
+use crate::simulator::{run, ServiceDist, ServiceFamily, SimConfig};
+
+/// Where the delay estimates m_i come from.
+#[derive(Clone, Copy, Debug)]
+pub enum MiSource {
+    /// exact arrival-theorem analysis, with the chosen step-rate estimator
+    Theory(MiEstimator),
+    /// event-driven simulation: (steps, service family, seed)
+    MonteCarlo { steps: u64, family: ServiceFamily, seed: u64 },
+}
+
+impl Default for MiSource {
+    fn default() -> Self {
+        // Throughput-rate refinement: CS steps accrue at the stationary step
+        // rate Λ(C), not the total capacity Σμ.  In light traffic (C ≪ n)
+        // the Prop-5 bound with λ = Σμ overestimates m_i by orders of
+        // magnitude; Λ(C) tracks the simulator within a few percent at all
+        // loads (see tests + integration tests).
+        MiSource::Theory(MiEstimator::Throughput)
+    }
+}
+
+/// Study of the bound over the fast-selection probability p.
+#[derive(Clone, Debug)]
+pub struct TwoClusterStudy {
+    pub params: BoundParams,
+    pub n_fast: usize,
+    pub mu_fast: f64,
+    pub mu_slow: f64,
+    pub source: MiSource,
+}
+
+/// One evaluated point of the study.
+#[derive(Clone, Copy, Debug)]
+pub struct BoundPoint {
+    /// per-fast-node selection probability
+    pub p_fast: f64,
+    /// optimal step size at this p
+    pub eta: f64,
+    /// η_max(p)
+    pub eta_max: f64,
+    /// optimized bound value G(p, η*)
+    pub bound: f64,
+    /// fast/slow delay estimates used
+    pub m_fast: f64,
+    pub m_slow: f64,
+    /// stationary CS step rate λ(p) (physical-time studies)
+    pub cs_rate: f64,
+}
+
+impl TwoClusterStudy {
+    pub fn cluster(&self, p_fast: f64) -> TwoCluster {
+        TwoCluster {
+            n: self.params.n,
+            n_fast: self.n_fast,
+            mu_fast: self.mu_fast,
+            mu_slow: self.mu_slow,
+            p_fast,
+            c: self.params.c,
+        }
+    }
+
+    /// Largest admissible p (slow-node probability must stay positive).
+    pub fn p_max(&self) -> f64 {
+        1.0 / self.n_fast as f64
+    }
+
+    /// Per-node delays m_i and the CS step rate for a given p.
+    pub fn delays(&self, p_fast: f64) -> Result<(Vec<f64>, f64), String> {
+        let tc = self.cluster(p_fast);
+        tc.valid()?;
+        match self.source {
+            MiSource::Theory(est) => {
+                let net = ClosedNetwork::new(tc.p_vec(), tc.mu_vec())?;
+                let an = net.mi_analysis(self.params.c, est);
+                Ok((an.m, an.cs_rate))
+            }
+            MiSource::MonteCarlo { steps, family, seed } => {
+                let cfg = SimConfig {
+                    seed,
+                    ..SimConfig::new(
+                        tc.p_vec(),
+                        ServiceDist::from_rates(&tc.mu_vec(), family),
+                        self.params.c,
+                        steps,
+                    )
+                };
+                let res = run(cfg)?;
+                // unobserved nodes fall back to the theory estimate
+                let net = ClosedNetwork::new(tc.p_vec(), tc.mu_vec())?;
+                let theory = net.mi_analysis(self.params.c, MiEstimator::Throughput);
+                let m: Vec<f64> = res
+                    .m_empirical()
+                    .iter()
+                    .zip(&theory.m)
+                    .map(|(&emp, &th)| if emp.is_nan() { th } else { emp })
+                    .collect();
+                Ok((m, res.step_rate(steps)))
+            }
+        }
+    }
+
+    /// Evaluate the optimized bound at a given p.
+    pub fn evaluate(&self, p_fast: f64) -> Result<BoundPoint, String> {
+        let tc = self.cluster(p_fast);
+        tc.valid()?;
+        let (m, cs_rate) = self.delays(p_fast)?;
+        let th = Theorem1::new(self.params, tc.p_vec(), m.clone())?;
+        let (eta, bound) = th.optimize_eta();
+        let n_f = self.n_fast;
+        Ok(BoundPoint {
+            p_fast,
+            eta,
+            eta_max: th.eta_max(),
+            bound,
+            m_fast: m[..n_f].iter().sum::<f64>() / n_f as f64,
+            m_slow: m[n_f..].iter().sum::<f64>() / (self.params.n - n_f) as f64,
+            cs_rate,
+        })
+    }
+
+    /// Physical-time variant (App E.2): fix a time budget U and set
+    /// T = λ(p)·U, so slower-stepping configurations get fewer CS steps.
+    pub fn evaluate_physical_time(&self, p_fast: f64, u: f64) -> Result<BoundPoint, String> {
+        let tc = self.cluster(p_fast);
+        tc.valid()?;
+        let (m, cs_rate) = self.delays(p_fast)?;
+        let t_eff = (cs_rate * u).max(1.0) as u64;
+        let params = BoundParams { t: t_eff, ..self.params };
+        let th = Theorem1::new(params, tc.p_vec(), m.clone())?;
+        let (eta, bound) = th.optimize_eta();
+        let n_f = self.n_fast;
+        Ok(BoundPoint {
+            p_fast,
+            eta,
+            eta_max: th.eta_max(),
+            bound,
+            m_fast: m[..n_f].iter().sum::<f64>() / n_f as f64,
+            m_slow: m[n_f..].iter().sum::<f64>() / (self.params.n - n_f) as f64,
+            cs_rate,
+        })
+    }
+
+    /// Log-spaced grid over (p_lo, p_max) — the paper sweeps 50 values.
+    pub fn p_grid(&self, points: usize) -> Vec<f64> {
+        let lo: f64 = (self.p_max() * 1e-3).max(1e-6);
+        let hi = self.p_max() * 0.999;
+        (0..points)
+            .map(|i| {
+                let t = i as f64 / (points - 1) as f64;
+                lo * (hi / lo).powf(t)
+            })
+            .collect()
+    }
+
+    /// Minimize over the grid; returns (best point, uniform point).
+    pub fn optimize_p(&self, points: usize) -> Result<(BoundPoint, BoundPoint), String> {
+        let uniform = self.evaluate(1.0 / self.params.n as f64)?;
+        let mut best = uniform;
+        for p in self.p_grid(points) {
+            if let Ok(pt) = self.evaluate(p) {
+                if pt.bound < best.bound {
+                    best = pt;
+                }
+            }
+        }
+        Ok((best, uniform))
+    }
+
+    /// Same sweep under the physical-time objective.
+    pub fn optimize_p_physical(
+        &self,
+        points: usize,
+        u: f64,
+    ) -> Result<(BoundPoint, BoundPoint), String> {
+        let uniform = self.evaluate_physical_time(1.0 / self.params.n as f64, u)?;
+        let mut best = uniform;
+        for p in self.p_grid(points) {
+            if let Ok(pt) = self.evaluate_physical_time(p, u) {
+                if pt.bound < best.bound {
+                    best = pt;
+                }
+            }
+        }
+        Ok((best, uniform))
+    }
+
+    /// FedBuff / AsyncSGD comparators at uniform sampling (Fig 4), using
+    /// the deterministic-service worst case for τ_max and theory-derived
+    /// τ_c, τ_sum (τ_sum^i ≈ m_i · p_i · T completions).
+    pub fn baseline_bounds(&self) -> Result<(f64, f64), String> {
+        let p_uni = 1.0 / self.params.n as f64;
+        let tc = self.cluster(p_uni);
+        let net = ClosedNetwork::new(tc.p_vec(), tc.mu_vec())?;
+        let an = net.mi_analysis(self.params.c, MiEstimator::Throughput);
+        let b = net.buzen(self.params.c);
+        let tau_c: f64 = (0..self.params.n)
+            .map(|i| b.utilization(i, self.params.c))
+            .sum();
+        // τ_sum^i/(T+1) → m_i stationarily; Σ_i gives the Table-1 quantity
+        let tau_sum_avg: f64 = an.m.iter().sum();
+        let stats = DelayStats::deterministic_worst_case(
+            self.params.c,
+            self.mu_slow,
+            tc.lambda_total(),
+            tau_c,
+            tau_sum_avg,
+        );
+        let (_, g_fedbuff) = table1::optimize(
+            &table1::fedbuff_poly(&self.params, &stats),
+            table1::fedbuff_eta_max(&self.params, &stats),
+        );
+        let (_, g_async) = table1::optimize(
+            &table1::async_sgd_poly(&self.params, &stats),
+            table1::async_sgd_eta_max(&self.params, &stats),
+        );
+        Ok((g_fedbuff, g_async))
+    }
+}
+
+/// Relative improvement of `better` over `worse` (paper's Figs 3/4/9).
+pub fn relative_improvement(better: f64, worse: f64) -> f64 {
+    (worse - better) / worse
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn study(mu_fast: f64, c: usize) -> TwoClusterStudy {
+        TwoClusterStudy {
+            params: BoundParams::worked_example(c),
+            n_fast: 90,
+            mu_fast,
+            mu_slow: 1.0,
+            source: MiSource::default(),
+        }
+    }
+
+    #[test]
+    fn uniform_point_evaluates() {
+        let s = study(4.0, 10);
+        let pt = s.evaluate(0.01).unwrap();
+        assert!(pt.bound > 0.0 && pt.bound.is_finite());
+        assert!(pt.eta > 0.0 && pt.eta <= pt.eta_max);
+        assert!(pt.m_slow > pt.m_fast);
+    }
+
+    #[test]
+    fn grid_is_increasing_and_bounded() {
+        let s = study(4.0, 10);
+        let g = s.p_grid(50);
+        assert_eq!(g.len(), 50);
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+        assert!(*g.last().unwrap() < s.p_max());
+    }
+
+    #[test]
+    fn optimal_p_below_uniform_and_improves() {
+        // the paper's headline: fast clients should be sampled LESS than
+        // uniformly, improving the bound by ~30-55% for μ_f in [2,16]
+        let s = study(8.0, 10);
+        let (best, uniform) = s.optimize_p(50).unwrap();
+        assert!(
+            best.p_fast < 0.01,
+            "optimal p {} should be below uniform 0.01",
+            best.p_fast
+        );
+        let imp = relative_improvement(best.bound, uniform.bound);
+        assert!(imp > 0.15, "improvement {imp} too small");
+        assert!(imp < 0.9, "improvement {imp} implausibly large");
+    }
+
+    #[test]
+    fn improvement_grows_with_speed_ratio() {
+        let imp = |mu: f64| {
+            let s = study(mu, 10);
+            let (b, u) = s.optimize_p(40).unwrap();
+            relative_improvement(b.bound, u.bound)
+        };
+        let (i2, i16) = (imp(2.0), imp(16.0));
+        assert!(
+            i16 > i2,
+            "improvement should grow with μ_f: {i2} (μ=2) vs {i16} (μ=16)"
+        );
+    }
+
+    #[test]
+    fn optimal_sampling_cuts_fast_delays() {
+        // App F.2: optimal p divides fast delay by ~10, slow by ~2
+        let s = TwoClusterStudy {
+            params: BoundParams { n: 10, c: 1000, ..BoundParams::worked_example(1000) },
+            n_fast: 5,
+            mu_fast: 1.2,
+            mu_slow: 1.0,
+            source: MiSource::default(),
+        };
+        let uni = s.evaluate(0.1).unwrap();
+        let opt = s.evaluate(0.0075).unwrap();
+        assert!(
+            opt.m_fast < uni.m_fast / 5.0,
+            "fast delay {} vs uniform {}",
+            opt.m_fast,
+            uni.m_fast
+        );
+        assert!(
+            opt.m_slow < uni.m_slow,
+            "slow delay should also drop: {} vs {}",
+            opt.m_slow,
+            uni.m_slow
+        );
+    }
+
+    #[test]
+    fn gen_async_sgd_beats_baselines() {
+        // Fig 4: massive improvement over FedBuff/AsyncSGD bounds
+        let s = study(8.0, 10);
+        let (best, _) = s.optimize_p(40).unwrap();
+        let (g_fedbuff, g_async) = s.baseline_bounds().unwrap();
+        assert!(best.bound < g_async, "{} !< {g_async}", best.bound);
+        assert!(best.bound < g_fedbuff, "{} !< {g_fedbuff}", best.bound);
+        // FedBuff (τ_max²·n) should be the weakest
+        assert!(g_fedbuff > g_async);
+    }
+
+    #[test]
+    fn physical_time_variant_penalizes_slow_stepping() {
+        // App E.2: under a fixed time budget, tilting mass to slow nodes
+        // reduces the CS step rate; the optimizer must account for it.
+        let s = study(4.0, 100);
+        let (best, uniform) = s.optimize_p_physical(40, 1000.0).unwrap();
+        assert!(best.bound <= uniform.bound);
+        assert!(best.cs_rate > 0.0);
+    }
+
+    #[test]
+    fn monte_carlo_source_agrees_with_theory() {
+        let mut s = study(4.0, 10);
+        let th_pt = s.evaluate(0.01).unwrap();
+        s.source = MiSource::MonteCarlo {
+            steps: 60_000,
+            family: ServiceFamily::Exponential,
+            seed: 7,
+        };
+        let mc_pt = s.evaluate(0.01).unwrap();
+        // Throughput-rate theory should track MC within ~20%
+        assert!(
+            (mc_pt.m_slow / th_pt.m_slow - 1.0).abs() < 0.2,
+            "mc {} vs theory {}",
+            mc_pt.m_slow,
+            th_pt.m_slow
+        );
+        assert!(
+            (mc_pt.m_fast / th_pt.m_fast - 1.0).abs() < 0.25,
+            "mc {} vs theory {}",
+            mc_pt.m_fast,
+            th_pt.m_fast
+        );
+    }
+
+    #[test]
+    fn invalid_p_rejected() {
+        let s = study(4.0, 10);
+        assert!(s.evaluate(0.2).is_err()); // q would be negative
+        assert!(s.evaluate(0.0).is_err());
+    }
+}

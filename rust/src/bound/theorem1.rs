@@ -1,0 +1,273 @@
+//! Theorem 1: the non-convex convergence bound of Generalized AsyncSGD.
+//!
+//! For learning rate η ≤ η_max(p), the average gradient norm obeys
+//!
+//!   Σ_k E‖∇f(w_k)‖² / 8(T+1)  ≤  G(p, η)
+//!     :=  A/(η(T+1))
+//!       + η L B Σ_i 1/(n² p_i)
+//!       + η² L² B C Σ_i m̄_i /(n² p_i²)
+//!
+//! with A = E[f(μ_0) − f(μ_{T+1})], B = 2G² + σ², and m̄_i the (stationary)
+//! per-node delay in CS steps.  (We fold the paper's  Σ_k m_{i,k}^T/(T+1)
+//! into its stationary limit m_i — Prop 3 — which the paper itself uses for
+//! all numerical studies.)
+//!
+//! The optimal step size for fixed p minimizes φ(η) = a/η + bη + cη², a
+//! strictly convex problem on (0, η_max]; the stationary point solves the
+//! cubic 2cη³ + bη² − a = 0 (unique positive root), clamped to η_max.
+
+/// Problem constants of the bound.
+#[derive(Clone, Copy, Debug)]
+pub struct BoundParams {
+    /// A = E[f(μ_0) − f_*] — initialization gap
+    pub a: f64,
+    /// B = 2G² + σ² — heterogeneity + gradient noise
+    pub b: f64,
+    /// L — smoothness
+    pub l: f64,
+    /// C — concurrency (tasks in flight)
+    pub c: usize,
+    /// T — number of CS steps
+    pub t: u64,
+    /// n — number of clients
+    pub n: usize,
+}
+
+impl BoundParams {
+    /// The paper's worked example (§2): n=100, L=1, B=20, A=100, T=1e4.
+    pub fn worked_example(c: usize) -> Self {
+        BoundParams { a: 100.0, b: 20.0, l: 1.0, c, t: 10_000, n: 100 }
+    }
+}
+
+/// The three coefficients of φ(η) = a/η + b·η + c·η² for given (p, m).
+#[derive(Clone, Copy, Debug)]
+pub struct EtaPoly {
+    pub inv: f64,  // a
+    pub lin: f64,  // b
+    pub quad: f64, // c
+}
+
+impl EtaPoly {
+    pub fn eval(&self, eta: f64) -> f64 {
+        self.inv / eta + self.lin * eta + self.quad * eta * eta
+    }
+
+    /// Unique positive root of φ'(η) = −a/η² + b + 2cη = 0, i.e. the
+    /// unconstrained minimizer of φ.  Solved by safeguarded Newton.
+    pub fn unconstrained_min(&self) -> f64 {
+        let (a, b, c) = (self.inv, self.lin, self.quad);
+        debug_assert!(a > 0.0 && b >= 0.0 && c >= 0.0);
+        if b == 0.0 && c == 0.0 {
+            return f64::INFINITY;
+        }
+        // g(η) = 2cη³ + bη² − a; g(0) = −a < 0, g increasing for η>0.
+        let mut hi = 1.0;
+        while 2.0 * c * hi * hi * hi + b * hi * hi < a {
+            hi *= 2.0;
+            if hi > 1e12 {
+                break;
+            }
+        }
+        let mut lo = 0.0;
+        for _ in 0..200 {
+            let mid = 0.5 * (lo + hi);
+            let g = 2.0 * c * mid * mid * mid + b * mid * mid - a;
+            if g < 0.0 {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+            if (hi - lo) < 1e-15 * hi {
+                break;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+}
+
+/// Theorem 1 bound evaluator for a concrete sampling distribution.
+#[derive(Clone, Debug)]
+pub struct Theorem1 {
+    pub params: BoundParams,
+    /// sampling probabilities p_i (sum 1)
+    pub p: Vec<f64>,
+    /// stationary delays m_i (CS steps)
+    pub m: Vec<f64>,
+}
+
+impl Theorem1 {
+    pub fn new(params: BoundParams, p: Vec<f64>, m: Vec<f64>) -> Result<Self, String> {
+        if p.len() != params.n || m.len() != params.n {
+            return Err(format!(
+                "p/m must have n={} entries (got {}/{})",
+                params.n,
+                p.len(),
+                m.len()
+            ));
+        }
+        if p.iter().any(|&x| x <= 0.0) {
+            return Err("all p_i must be > 0 (unbiasedness needs full support)".into());
+        }
+        let s: f64 = p.iter().sum();
+        if (s - 1.0).abs() > 1e-8 {
+            return Err(format!("p sums to {s}"));
+        }
+        if m.iter().any(|&x| x < 0.0 || !x.is_finite()) {
+            return Err("delays m_i must be finite and >= 0".into());
+        }
+        Ok(Theorem1 { params, p, m })
+    }
+
+    /// Σ_i 1/(n² p_i)
+    pub fn inv_p_sum(&self) -> f64 {
+        let n = self.params.n as f64;
+        self.p.iter().map(|p| 1.0 / (n * n * p)).sum()
+    }
+
+    /// m̄ = Σ_i m_i/(n² p_i²)  (the paper's stationary m_k^T)
+    pub fn m_bar(&self) -> f64 {
+        let n = self.params.n as f64;
+        self.m
+            .iter()
+            .zip(&self.p)
+            .map(|(m, p)| m / (n * n * p * p))
+            .sum()
+    }
+
+    /// η_max(p) = (1/4L) · min( (C·m̄)^{-1/2}, 2 / Σ 1/(n²p_i) ).
+    pub fn eta_max(&self) -> f64 {
+        let l = self.params.l;
+        let c = self.params.c as f64;
+        let mbar = self.m_bar();
+        let lhs = if mbar > 0.0 { 1.0 / (c * mbar).sqrt() } else { f64::INFINITY };
+        let rhs = 2.0 / self.inv_p_sum();
+        (lhs.min(rhs)) / (4.0 * l)
+    }
+
+    /// Coefficients of G(p, ·).
+    pub fn poly(&self) -> EtaPoly {
+        let q = &self.params;
+        EtaPoly {
+            inv: q.a / (q.t as f64 + 1.0),
+            lin: q.l * q.b * self.inv_p_sum(),
+            quad: q.l * q.l * q.b * q.c as f64 * self.m_bar(),
+        }
+    }
+
+    /// G(p, η) for a specific η.
+    pub fn bound_at(&self, eta: f64) -> f64 {
+        self.poly().eval(eta)
+    }
+
+    /// (η*, G(p, η*)) with η* the constrained optimum.
+    pub fn optimize_eta(&self) -> (f64, f64) {
+        let poly = self.poly();
+        let eta = poly.unconstrained_min().min(self.eta_max());
+        (eta, poly.eval(eta))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform(n: usize) -> Vec<f64> {
+        vec![1.0 / n as f64; n]
+    }
+
+    fn t1(n: usize, c: usize, m: Vec<f64>) -> Theorem1 {
+        let params = BoundParams { a: 100.0, b: 20.0, l: 1.0, c, t: 10_000, n };
+        Theorem1::new(params, uniform(n), m).unwrap()
+    }
+
+    #[test]
+    fn construction_validates() {
+        let params = BoundParams::worked_example(10);
+        assert!(Theorem1::new(params, uniform(100), vec![1.0; 100]).is_ok());
+        assert!(Theorem1::new(params, uniform(50), vec![1.0; 100]).is_err());
+        let mut p = uniform(100);
+        p[0] = 0.0;
+        p[1] += 0.01;
+        assert!(Theorem1::new(params, p, vec![1.0; 100]).is_err());
+        assert!(Theorem1::new(params, uniform(100), vec![f64::NAN; 100]).is_err());
+    }
+
+    #[test]
+    fn uniform_p_identities() {
+        // uniform p: Σ 1/(n²p_i) = 1 and m̄ = Σ m_i
+        let th = t1(10, 10, vec![2.0; 10]);
+        assert!((th.inv_p_sum() - 1.0).abs() < 1e-12);
+        assert!((th.m_bar() - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cubic_minimizer_is_stationary() {
+        let poly = EtaPoly { inv: 0.01, lin: 20.0, quad: 400.0 };
+        let e = poly.unconstrained_min();
+        let d = -poly.inv / (e * e) + poly.lin + 2.0 * poly.quad * e;
+        assert!(d.abs() < 1e-6, "derivative {d} at η={e}");
+        // and it's a minimum: φ larger on both sides
+        assert!(poly.eval(e * 0.9) > poly.eval(e));
+        assert!(poly.eval(e * 1.1) > poly.eval(e));
+    }
+
+    #[test]
+    fn cubic_no_quadratic_term() {
+        // c=0 ⇒ η* = sqrt(a/b)
+        let poly = EtaPoly { inv: 4.0, lin: 1.0, quad: 0.0 };
+        assert!((poly.unconstrained_min() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eta_max_decreases_with_delays() {
+        let lo = t1(10, 10, vec![1.0; 10]);
+        let hi = t1(10, 10, vec![100.0; 10]);
+        assert!(hi.eta_max() < lo.eta_max());
+    }
+
+    #[test]
+    fn optimized_bound_beats_arbitrary_eta() {
+        let th = t1(100, 50, vec![10.0; 100]);
+        let (eta, g) = th.optimize_eta();
+        assert!(eta > 0.0 && eta <= th.eta_max());
+        for &scale in &[0.25, 0.5, 2.0] {
+            let e2 = (eta * scale).min(th.eta_max());
+            if (e2 - eta).abs() > 1e-12 {
+                assert!(th.bound_at(e2) >= g - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn larger_t_improves_bound() {
+        let params_small = BoundParams { t: 100, ..BoundParams::worked_example(10) };
+        let params_big = BoundParams { t: 100_000, ..BoundParams::worked_example(10) };
+        let m = vec![5.0; 100];
+        let a = Theorem1::new(params_small, uniform(100), m.clone()).unwrap();
+        let b = Theorem1::new(params_big, uniform(100), m).unwrap();
+        assert!(b.optimize_eta().1 < a.optimize_eta().1);
+    }
+
+    #[test]
+    fn t_to_infinity_prefers_uniform() {
+        // §3: as T → ∞ the second term dominates; Σ 1/p_i is minimized by
+        // uniform p, so any tilt must not improve the optimized bound.
+        let params = BoundParams { t: 100_000_000, ..BoundParams::worked_example(10) };
+        let m = vec![3.0; 100];
+        let uni = Theorem1::new(params, uniform(100), m.clone()).unwrap();
+        let mut tilted_p = uniform(100);
+        for (i, item) in tilted_p.iter_mut().enumerate() {
+            *item = if i < 50 { 0.015 } else { 0.005 };
+        }
+        let tilted = Theorem1::new(params, tilted_p, m).unwrap();
+        assert!(uni.optimize_eta().1 <= tilted.optimize_eta().1);
+    }
+
+    #[test]
+    fn delay_penalty_monotone_in_m() {
+        let lo = t1(10, 10, vec![1.0; 10]);
+        let hi = t1(10, 10, vec![50.0; 10]);
+        assert!(lo.optimize_eta().1 <= hi.optimize_eta().1);
+    }
+}

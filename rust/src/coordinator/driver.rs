@@ -1,0 +1,376 @@
+//! The asynchronous central server — Algorithm 1's event loop (L3).
+//!
+//! Binds together:
+//!   * the **closed-network simulator** (virtual time, FIFO client queues,
+//!     routing `K_{k+1} ~ p`),
+//!   * the **gradient backend** (PJRT-executed AOT JAX/Pallas model, or the
+//!     native cross-check backend),
+//!   * the **server update rule** (Generalized AsyncSGD / AsyncSGD /
+//!     FedBuff),
+//!   * per-client **data loaders** (non-iid shards).
+//!
+//! Faithful to the paper's semantics: the gradient completed at CS step `k`
+//! was computed on the model version dispatched at step `I_k` — the driver
+//! snapshots the model at dispatch time and keeps `C` snapshots alive (one
+//! per in-flight task; Lemma 9's constant-cardinality invariant is asserted
+//! in tests).
+
+use crate::data::{ClientLoader, EvalBatches};
+use crate::fl::{ModelState, ServerAlgo, UpdateRule};
+use crate::runtime::Backend;
+use crate::simulator::{Network, SimConfig};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// One point of the training curve.
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    pub step: u64,
+    pub virtual_time: f64,
+    pub train_loss: f64,
+    pub val_loss: f64,
+    pub val_accuracy: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    pub curve: Vec<CurvePoint>,
+    pub final_accuracy: f64,
+    pub final_val_loss: f64,
+    /// per-node mean delay in CS steps (empirical m_i)
+    pub mean_delay: Vec<f64>,
+    pub tau_max: u64,
+    pub total_virtual_time: f64,
+    /// wall-clock seconds spent in gradient computation (backend)
+    pub backend_secs: f64,
+    /// wall-clock seconds total
+    pub wall_secs: f64,
+    pub steps: u64,
+}
+
+pub struct DriverConfig {
+    /// closed-network dynamics (p, service rates, C, seed)
+    pub sim: SimConfig,
+    /// server update rule
+    pub rule: UpdateRule,
+    /// evaluate every this many CS steps (0 = only at end)
+    pub eval_every: u64,
+    /// moving-average window for train loss reporting
+    pub loss_window: usize,
+}
+
+pub struct Driver<'a> {
+    pub backend: &'a mut dyn Backend,
+    pub loaders: Vec<ClientLoader>,
+    pub val: EvalBatches,
+}
+
+impl<'a> Driver<'a> {
+    pub fn new(
+        backend: &'a mut dyn Backend,
+        loaders: Vec<ClientLoader>,
+        val: EvalBatches,
+    ) -> Driver<'a> {
+        Driver { backend, loaders, val }
+    }
+
+    /// Run `cfg.sim.steps` CS steps of the asynchronous algorithm.
+    pub fn run(&mut self, cfg: DriverConfig, model: &mut ModelState) -> Result<TrainResult, String> {
+        let n = cfg.sim.p.len();
+        if self.loaders.len() != n {
+            return Err(format!("{} loaders for n={n} clients", self.loaders.len()));
+        }
+        let steps = cfg.sim.steps;
+        let wall0 = std::time::Instant::now();
+        let mut backend_secs = 0.0f64;
+        let mut net = Network::new(cfg.sim)?;
+        let mut algo = ServerAlgo::new(cfg.rule);
+        // model snapshots per dispatch step; step 0 counts all initial
+        // tasks.  Rc so handing a snapshot to the backend costs a pointer
+        // copy, not a full parameter copy (§Perf: halves per-step memcpy).
+        let mut snapshots: HashMap<u64, (Rc<ModelState>, u32)> = HashMap::new();
+        snapshots.insert(0, (Rc::new(model.clone()), net.population() as u32));
+        let mut curve = Vec::new();
+        let mut delay_sum = vec![0.0f64; n];
+        let mut delay_cnt = vec![0u64; n];
+        let mut tau_max = 0u64;
+        let mut recent_losses: Vec<f64> = Vec::new();
+        for k in 0..steps {
+            let out = net.advance().ok_or("network drained")?;
+            let node = out.completed_node as usize;
+            // model version this client computed on (dispatched at I_k)
+            let dispatched: Rc<ModelState> = {
+                let entry = snapshots
+                    .get_mut(&out.record.dispatch_step)
+                    .ok_or_else(|| format!("missing snapshot for step {}", out.record.dispatch_step))?;
+                entry.1 -= 1;
+                let m = Rc::clone(&entry.0);
+                if entry.1 == 0 {
+                    snapshots.remove(&out.record.dispatch_step);
+                }
+                m
+            };
+            let batch = self.loaders[node].next_batch();
+            let t0 = std::time::Instant::now();
+            let (loss, grads) = self.backend.train_step(&dispatched, &batch)?;
+            backend_secs += t0.elapsed().as_secs_f64();
+            algo.on_gradient(model, node, &grads);
+            // bookkeeping
+            let d = out.record.delay_steps();
+            delay_sum[node] += d as f64;
+            delay_cnt[node] += 1;
+            tau_max = tau_max.max(d);
+            recent_losses.push(loss);
+            if recent_losses.len() > cfg.loss_window.max(1) {
+                recent_losses.remove(0);
+            }
+            // dispatch of the fresh task (already performed inside advance):
+            // snapshot the CURRENT server model for it
+            snapshots.insert(k + 1, (Rc::new(model.clone()), 1));
+            debug_assert_eq!(
+                snapshots.values().map(|(_, c)| *c as usize).sum::<usize>(),
+                net.population(),
+                "in-flight snapshot count must equal C (Lemma 9)"
+            );
+            let do_eval = cfg.eval_every > 0 && (k + 1) % cfg.eval_every == 0;
+            if do_eval || k + 1 == steps {
+                let t0 = std::time::Instant::now();
+                let ev = self.backend.evaluate(model, &self.val)?;
+                backend_secs += t0.elapsed().as_secs_f64();
+                curve.push(CurvePoint {
+                    step: k + 1,
+                    virtual_time: out.time,
+                    train_loss: recent_losses.iter().sum::<f64>() / recent_losses.len() as f64,
+                    val_loss: ev.mean_loss,
+                    val_accuracy: ev.accuracy,
+                });
+            }
+        }
+        let last = curve.last().copied().ok_or("no evaluation points")?;
+        Ok(TrainResult {
+            final_accuracy: last.val_accuracy,
+            final_val_loss: last.val_loss,
+            curve,
+            mean_delay: delay_sum
+                .iter()
+                .zip(&delay_cnt)
+                .map(|(s, c)| if *c > 0 { s / *c as f64 } else { f64::NAN })
+                .collect(),
+            tau_max,
+            total_virtual_time: net.now,
+            backend_secs,
+            wall_secs: wall0.elapsed().as_secs_f64(),
+            steps,
+        })
+    }
+}
+
+/// Convenience: build the per-client loaders + validation batches for a
+/// dataset/partition/backend combination.
+pub fn build_loaders(
+    data: std::sync::Arc<crate::data::Dataset>,
+    partition: &crate::data::Partition,
+    train_batch: usize,
+    augment: bool,
+    seed: u64,
+) -> Result<Vec<ClientLoader>, String> {
+    let mut out = Vec::with_capacity(partition.n_clients());
+    for (ci, shard) in partition.shards.iter().enumerate() {
+        // empty shards get a fallback singleton so the loader is valid;
+        // their gradients are still real (one repeated sample).
+        let shard = if shard.is_empty() { vec![0u32] } else { shard.clone() };
+        out.push(ClientLoader::new(
+            data.clone(),
+            shard,
+            train_batch,
+            augment,
+            seed.wrapping_add(ci as u64).wrapping_mul(0x2545F4914F6CDD1D),
+        )?);
+    }
+    Ok(out)
+}
+
+/// The update rule for a named algorithm + sampling distribution.
+pub fn rule_for(algo: &str, eta: f64, p: &[f64], fedbuff_z: usize) -> Result<UpdateRule, String> {
+    match algo {
+        "gasync" | "generalized" => Ok(UpdateRule::GenAsync { eta, p: p.to_vec() }),
+        "async" | "asyncsgd" => Ok(UpdateRule::AsyncSgd { eta }),
+        "fedbuff" => Ok(UpdateRule::FedBuff { eta, z: fedbuff_z }),
+        other => Err(format!("unknown async algorithm '{other}' (gasync|async|fedbuff)")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, Partition, PartitionScheme, SynthSpec};
+    use crate::runtime::{Backend, NativeBackend};
+    use crate::simulator::{ServiceDist, ServiceFamily};
+    use std::sync::Arc;
+
+    fn setup(
+        n: usize,
+        steps: u64,
+    ) -> (NativeBackend, Vec<ClientLoader>, EvalBatches, SimConfig, ModelState) {
+        let spec = SynthSpec::tiny_test();
+        let train = Arc::new(generate(&spec, 800, 21));
+        let val = generate(&spec, 200, 22);
+        let part = Partition::build(
+            &train,
+            n,
+            PartitionScheme::ClassSubset { classes_per_client: 7 },
+            23,
+        )
+        .unwrap();
+        let backend = NativeBackend::tiny();
+        let loaders =
+            build_loaders(train, &part, backend.spec().train_batch, true, 24).unwrap();
+        let val_batches = EvalBatches::new(&val, backend.spec().eval_batch);
+        let rates: Vec<f64> = (0..n).map(|i| if i < n / 2 { 2.0 } else { 1.0 }).collect();
+        let sim = SimConfig {
+            seed: 25,
+            ..SimConfig::new(
+                vec![1.0 / n as f64; n],
+                ServiceDist::from_rates(&rates, ServiceFamily::Exponential),
+                4,
+                steps,
+            )
+        };
+        let model = backend.spec().init_model(26);
+        (backend, loaders, val_batches, sim, model)
+    }
+
+    #[test]
+    fn gasync_training_improves_accuracy() {
+        let (mut be, loaders, val, sim, mut model) = setup(8, 150);
+        let p = sim.p.clone();
+        let mut driver = Driver::new(&mut be, loaders, val);
+        let res = driver
+            .run(
+                DriverConfig {
+                    sim,
+                    rule: UpdateRule::GenAsync { eta: 0.05, p },
+                    eval_every: 50,
+                    loss_window: 20,
+                },
+                &mut model,
+            )
+            .unwrap();
+        assert_eq!(res.steps, 150);
+        assert_eq!(res.curve.len(), 3);
+        assert!(
+            res.final_accuracy > 0.3,
+            "accuracy {} should beat 0.1 chance",
+            res.final_accuracy
+        );
+        // loss should broadly decrease
+        assert!(res.curve.last().unwrap().val_loss < res.curve[0].val_loss * 1.2);
+        assert!(res.tau_max >= 1);
+        assert!(res.total_virtual_time > 0.0);
+    }
+
+    #[test]
+    fn all_async_rules_run() {
+        for algo in ["gasync", "async", "fedbuff"] {
+            let (mut be, loaders, val, sim, mut model) = setup(6, 60);
+            let p = sim.p.clone();
+            let rule = rule_for(algo, 0.05, &p, 5).unwrap();
+            let mut driver = Driver::new(&mut be, loaders, val);
+            let res = driver
+                .run(DriverConfig { sim, rule, eval_every: 0, loss_window: 10 }, &mut model)
+                .unwrap();
+            assert_eq!(res.curve.len(), 1, "{algo}: final eval only");
+            assert!(res.final_accuracy > 0.05, "{algo}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seeds() {
+        let run_once = || {
+            let (mut be, loaders, val, sim, mut model) = setup(6, 40);
+            let p = sim.p.clone();
+            let mut driver = Driver::new(&mut be, loaders, val);
+            driver
+                .run(
+                    DriverConfig {
+                        sim,
+                        rule: UpdateRule::GenAsync { eta: 0.05, p },
+                        eval_every: 0,
+                        loss_window: 10,
+                    },
+                    &mut model,
+                )
+                .unwrap();
+            (model.l2_norm(), model.tensors[0][0])
+        };
+        let a = run_once();
+        let b = run_once();
+        assert_eq!(a.1.to_bits(), b.1.to_bits());
+        assert_eq!(a.0.to_bits(), b.0.to_bits());
+    }
+
+    #[test]
+    fn stale_gradients_are_used() {
+        // with C=4 tasks over 6 nodes some gradients must be delayed ≥1 step
+        let (mut be, loaders, val, sim, mut model) = setup(6, 80);
+        let p = sim.p.clone();
+        let mut driver = Driver::new(&mut be, loaders, val);
+        let res = driver
+            .run(
+                DriverConfig {
+                    sim,
+                    rule: UpdateRule::GenAsync { eta: 0.02, p },
+                    eval_every: 0,
+                    loss_window: 10,
+                },
+                &mut model,
+            )
+            .unwrap();
+        assert!(res.tau_max >= 2, "tau_max {} suspiciously small", res.tau_max);
+        let mean_delay: f64 = res.mean_delay.iter().filter(|d| d.is_finite()).sum::<f64>();
+        assert!(mean_delay > 0.0);
+    }
+
+    #[test]
+    fn loader_count_validated() {
+        let (mut be, loaders, val, sim, mut model) = setup(6, 10);
+        let p = sim.p.clone();
+        let mut short = loaders;
+        short.pop();
+        let mut driver = Driver::new(&mut be, short, val);
+        let err = driver
+            .run(
+                DriverConfig {
+                    sim,
+                    rule: UpdateRule::GenAsync { eta: 0.05, p },
+                    eval_every: 0,
+                    loss_window: 10,
+                },
+                &mut model,
+            )
+            .unwrap_err();
+        assert!(err.contains("loaders"));
+    }
+
+    #[test]
+    fn nonuniform_sampling_runs_and_converges() {
+        let (mut be, loaders, val, mut sim, mut model) = setup(8, 150);
+        // tilt: fast nodes (0..4) sampled less — the paper's optimal shape
+        let mut p = vec![0.08; 4];
+        p.extend(vec![0.17; 4]);
+        sim.p = p.clone();
+        let mut driver = Driver::new(&mut be, loaders, val);
+        let res = driver
+            .run(
+                DriverConfig {
+                    sim,
+                    rule: UpdateRule::GenAsync { eta: 0.05, p },
+                    eval_every: 0,
+                    loss_window: 10,
+                },
+                &mut model,
+            )
+            .unwrap();
+        assert!(res.final_accuracy > 0.3, "accuracy {}", res.final_accuracy);
+    }
+}

@@ -1,0 +1,11 @@
+//! L3 coordinator — the paper's system contribution: the asynchronous
+//! central server (`driver`), synchronous baselines (`sync`), and the
+//! multi-seed experiment runner (`experiment`).
+
+pub mod driver;
+pub mod experiment;
+pub mod sync;
+
+pub use driver::{build_loaders, rule_for, CurvePoint, Driver, DriverConfig, TrainResult};
+pub use experiment::{run_experiment, seed_sweep, table2_seeds, ExperimentConfig, SeedSweep};
+pub use sync::{run_favano, run_fedavg, DataOracle, SyncResult};

@@ -1,0 +1,218 @@
+//! Synchronous / semi-synchronous baselines driver (FedAvg, FAVANO) over
+//! real data + backends — used by the Fig 7 comparison where the x-axis is
+//! *virtual time*, making the straggler penalty of synchronous rounds
+//! visible.
+
+use super::driver::CurvePoint;
+use crate::data::{ClientLoader, EvalBatches};
+use crate::fl::{Favano, FavanoConfig, FedAvg, FedAvgConfig, GradOracle, ModelState};
+use crate::runtime::Backend;
+use crate::simulator::ServiceDist;
+
+/// GradOracle over a backend + per-client loaders (each call consumes the
+/// client's next mini-batch).
+pub struct DataOracle<'a> {
+    pub backend: &'a mut dyn Backend,
+    pub loaders: &'a mut [ClientLoader],
+}
+
+impl<'a> GradOracle for DataOracle<'a> {
+    fn grad(&mut self, client: usize, model: &ModelState) -> (f64, Vec<Vec<f32>>) {
+        let batch = self.loaders[client].next_batch();
+        self.backend
+            .train_step(model, &batch)
+            .unwrap_or_else(|e| panic!("backend failure for client {client}: {e}"))
+    }
+
+    fn n_clients(&self) -> usize {
+        self.loaders.len()
+    }
+}
+
+pub struct SyncResult {
+    pub curve: Vec<CurvePoint>,
+    pub final_accuracy: f64,
+    pub total_virtual_time: f64,
+    pub rounds: u64,
+}
+
+/// Run FedAvg until the virtual-time budget is exhausted.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fedavg(
+    backend: &mut dyn Backend,
+    loaders: &mut [ClientLoader],
+    val: &EvalBatches,
+    model: &mut ModelState,
+    cfg: FedAvgConfig,
+    service: &[ServiceDist],
+    time_budget: f64,
+    eval_every_rounds: u64,
+    seed: u64,
+) -> Result<SyncResult, String> {
+    let mut fa = FedAvg::new(cfg, seed);
+    let mut t = 0.0;
+    let mut rounds = 0u64;
+    let mut curve = Vec::new();
+    while t < time_budget {
+        let out = {
+            let mut oracle = DataOracle { backend, loaders };
+            fa.round(model, &mut oracle, service)
+        };
+        t += out.duration;
+        rounds += 1;
+        if rounds % eval_every_rounds.max(1) == 0 || t >= time_budget {
+            let ev = backend.evaluate(model, val)?;
+            curve.push(CurvePoint {
+                step: rounds,
+                virtual_time: t,
+                train_loss: out.mean_loss,
+                val_loss: ev.mean_loss,
+                val_accuracy: ev.accuracy,
+            });
+        }
+        if rounds > 1_000_000 {
+            return Err("fedavg round runaway".into());
+        }
+    }
+    let last = curve.last().ok_or("no rounds completed")?;
+    Ok(SyncResult {
+        final_accuracy: last.val_accuracy,
+        total_virtual_time: t,
+        rounds,
+        curve,
+    })
+}
+
+/// Run FAVANO until the virtual-time budget is exhausted.
+#[allow(clippy::too_many_arguments)]
+pub fn run_favano(
+    backend: &mut dyn Backend,
+    loaders: &mut [ClientLoader],
+    val: &EvalBatches,
+    model: &mut ModelState,
+    cfg: FavanoConfig,
+    service: &[ServiceDist],
+    time_budget: f64,
+    eval_every_rounds: u64,
+    seed: u64,
+) -> Result<SyncResult, String> {
+    let n = loaders.len();
+    let mut fv = Favano::new(cfg, model, n, seed);
+    let mut t = 0.0;
+    let mut rounds = 0u64;
+    let mut curve = Vec::new();
+    while t < time_budget {
+        let out = {
+            let mut oracle = DataOracle { backend, loaders };
+            fv.round(model, &mut oracle, service)
+        };
+        t += out.duration;
+        rounds += 1;
+        if rounds % eval_every_rounds.max(1) == 0 || t >= time_budget {
+            let ev = backend.evaluate(model, val)?;
+            curve.push(CurvePoint {
+                step: rounds,
+                virtual_time: t,
+                train_loss: out.mean_loss,
+                val_loss: ev.mean_loss,
+                val_accuracy: ev.accuracy,
+            });
+        }
+        if rounds > 1_000_000 {
+            return Err("favano round runaway".into());
+        }
+    }
+    let last = curve.last().ok_or("no rounds completed")?;
+    Ok(SyncResult {
+        final_accuracy: last.val_accuracy,
+        total_virtual_time: t,
+        rounds,
+        curve,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::driver::build_loaders;
+    use crate::data::{generate, Partition, PartitionScheme, SynthSpec};
+    use crate::runtime::{Backend, NativeBackend};
+    use crate::simulator::ServiceFamily;
+    use std::sync::Arc;
+
+    fn setup(n: usize) -> (NativeBackend, Vec<ClientLoader>, EvalBatches, ModelState) {
+        let spec = SynthSpec::tiny_test();
+        let train = Arc::new(generate(&spec, 600, 31));
+        let val = generate(&spec, 150, 32);
+        let part = Partition::build(&train, n, PartitionScheme::Iid, 33).unwrap();
+        let backend = NativeBackend::tiny();
+        let loaders = build_loaders(train, &part, backend.spec().train_batch, false, 34).unwrap();
+        let val_b = EvalBatches::new(&val, backend.spec().eval_batch);
+        let model = backend.spec().init_model(35);
+        (backend, loaders, val_b, model)
+    }
+
+    #[test]
+    fn fedavg_learns() {
+        let (mut be, mut loaders, val, mut model) = setup(6);
+        let service = ServiceDist::from_rates(&vec![1.0; 6], ServiceFamily::Exponential);
+        let res = run_fedavg(
+            &mut be,
+            &mut loaders,
+            &val,
+            &mut model,
+            FedAvgConfig { s: 4, k_local: 3, eta_local: 0.08 },
+            &service,
+            120.0,
+            5,
+            36,
+        )
+        .unwrap();
+        assert!(res.rounds > 5);
+        assert!(res.final_accuracy > 0.25, "acc {}", res.final_accuracy);
+        assert!(res.total_virtual_time >= 120.0);
+    }
+
+    #[test]
+    fn favano_learns() {
+        let (mut be, mut loaders, val, mut model) = setup(6);
+        let service = ServiceDist::from_rates(&vec![1.5; 6], ServiceFamily::Exponential);
+        let res = run_favano(
+            &mut be,
+            &mut loaders,
+            &val,
+            &mut model,
+            FavanoConfig { interval: 3.0, k_max: 4, eta_local: 0.05 },
+            &service,
+            90.0,
+            5,
+            37,
+        )
+        .unwrap();
+        assert!(res.rounds == 30);
+        assert!(res.final_accuracy > 0.25, "acc {}", res.final_accuracy);
+    }
+
+    #[test]
+    fn fedavg_time_dominated_by_stragglers() {
+        let (mut be, mut loaders, val, mut model) = setup(6);
+        // one node 100x slower: with s=n every round waits for it
+        let mut rates = vec![10.0; 6];
+        rates[5] = 0.1;
+        let service = ServiceDist::from_rates(&rates, ServiceFamily::Deterministic);
+        let res = run_fedavg(
+            &mut be,
+            &mut loaders,
+            &val,
+            &mut model,
+            FedAvgConfig { s: 6, k_local: 1, eta_local: 0.05 },
+            &service,
+            50.0,
+            1,
+            38,
+        )
+        .unwrap();
+        // each round costs exactly 10 time units (the straggler)
+        assert_eq!(res.rounds, 5);
+    }
+}

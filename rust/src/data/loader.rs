@@ -1,0 +1,209 @@
+//! Per-client batch loading: shuffled epochs over the client's shard,
+//! horizontal-flip augmentation (the paper's "standard augmentation"),
+//! one-hot label encoding — produces exactly the (x, onehot) tensors the
+//! AOT-compiled train/eval steps expect.
+
+use super::synth::Dataset;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// A batch ready for the backend: flattened f32 tensors.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// (batch, dim) row-major
+    pub x: Vec<f32>,
+    /// (batch, classes) one-hot
+    pub onehot: Vec<f32>,
+    pub batch: usize,
+}
+
+/// Cyclic shuffled sampler over one client's shard.
+pub struct ClientLoader {
+    data: Arc<Dataset>,
+    indices: Vec<u32>,
+    cursor: usize,
+    rng: Rng,
+    pub batch_size: usize,
+    pub augment: bool,
+}
+
+impl ClientLoader {
+    pub fn new(
+        data: Arc<Dataset>,
+        shard: Vec<u32>,
+        batch_size: usize,
+        augment: bool,
+        seed: u64,
+    ) -> Result<ClientLoader, String> {
+        if batch_size == 0 {
+            return Err("batch_size must be > 0".into());
+        }
+        if shard.is_empty() {
+            return Err("client shard is empty".into());
+        }
+        let mut rng = Rng::new(seed).derive(0x10AD);
+        let mut indices = shard;
+        rng.shuffle(&mut indices);
+        Ok(ClientLoader { data, indices, cursor: 0, rng, batch_size, augment })
+    }
+
+    /// Next batch; wraps with a reshuffle at epoch boundaries (samples may
+    /// repeat within a batch if the shard is smaller than the batch).
+    pub fn next_batch(&mut self) -> Batch {
+        let d = &self.data;
+        let mut x = Vec::with_capacity(self.batch_size * d.dim);
+        let mut onehot = vec![0.0f32; self.batch_size * d.classes];
+        for b in 0..self.batch_size {
+            if self.cursor >= self.indices.len() {
+                self.rng.shuffle(&mut self.indices);
+                self.cursor = 0;
+            }
+            let idx = self.indices[self.cursor] as usize;
+            self.cursor += 1;
+            let flip = self.augment && self.rng.uniform() < 0.5;
+            push_sample(d, idx, flip, &mut x);
+            onehot[b * d.classes + d.y[idx] as usize] = 1.0;
+        }
+        Batch { x, onehot, batch: self.batch_size }
+    }
+}
+
+/// Append sample `idx` (optionally horizontally flipped) to `out`.
+fn push_sample(d: &Dataset, idx: usize, flip: bool, out: &mut Vec<f32>) {
+    let s = d.sample(idx);
+    if !flip {
+        out.extend_from_slice(s);
+        return;
+    }
+    let (h, w, ch) = (d.height, d.width, d.channels);
+    for yy in 0..h {
+        for xx in 0..w {
+            let sx = w - 1 - xx;
+            let base = (yy * w + sx) * ch;
+            out.extend_from_slice(&s[base..base + ch]);
+        }
+    }
+}
+
+/// Whole-set evaluation batches (no shuffle, no augmentation, padded by
+/// repeating the last sample; `valid` counts real samples per batch).
+pub struct EvalBatches {
+    pub batches: Vec<(Batch, usize)>,
+}
+
+impl EvalBatches {
+    pub fn new(data: &Dataset, batch_size: usize) -> EvalBatches {
+        let mut batches = Vec::new();
+        let mut i = 0;
+        while i < data.len() {
+            let valid = batch_size.min(data.len() - i);
+            let mut x = Vec::with_capacity(batch_size * data.dim);
+            let mut onehot = vec![0.0f32; batch_size * data.classes];
+            for b in 0..batch_size {
+                let idx = (i + b).min(data.len() - 1);
+                push_sample(data, idx, false, &mut x);
+                onehot[b * data.classes + data.y[idx] as usize] = 1.0;
+            }
+            batches.push((Batch { x, onehot, batch: batch_size }, valid));
+            i += valid;
+        }
+        EvalBatches { batches }
+    }
+
+    pub fn total_valid(&self) -> usize {
+        self.batches.iter().map(|(_, v)| v).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+
+    fn setup() -> (Arc<Dataset>, Vec<u32>) {
+        let d = Arc::new(generate(&SynthSpec::tiny_test(), 100, 1));
+        let shard: Vec<u32> = (0..50).collect();
+        (d, shard)
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let (d, shard) = setup();
+        let mut l = ClientLoader::new(d.clone(), shard, 8, false, 7).unwrap();
+        let b = l.next_batch();
+        assert_eq!(b.x.len(), 8 * d.dim);
+        assert_eq!(b.onehot.len(), 8 * d.classes);
+        for r in 0..8 {
+            let row = &b.onehot[r * d.classes..(r + 1) * d.classes];
+            assert_eq!(row.iter().sum::<f32>(), 1.0);
+        }
+    }
+
+    #[test]
+    fn epoch_covers_shard() {
+        let (d, shard) = setup();
+        let mut l = ClientLoader::new(d, shard, 10, false, 7).unwrap();
+        // 5 batches of 10 = one epoch over 50 distinct samples: every
+        // sample appears exactly once — verified via x-row uniqueness
+        let mut rows = std::collections::BTreeSet::new();
+        for _ in 0..5 {
+            let b = l.next_batch();
+            for r in 0..10 {
+                let row: Vec<u32> = b.x[r * 48..(r + 1) * 48]
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect();
+                rows.insert(row);
+            }
+        }
+        assert_eq!(rows.len(), 50);
+    }
+
+    #[test]
+    fn flip_is_involutive_geometry() {
+        let (d, _) = setup();
+        let mut plain = Vec::new();
+        push_sample(&d, 0, false, &mut plain);
+        let mut flipped = Vec::new();
+        push_sample(&d, 0, true, &mut flipped);
+        assert_ne!(plain, flipped);
+        // flipping the flipped reconstructs the original
+        let tmp = Dataset {
+            x: flipped.clone(),
+            y: vec![0],
+            dim: d.dim,
+            classes: d.classes,
+            height: d.height,
+            width: d.width,
+            channels: d.channels,
+        };
+        let mut back = Vec::new();
+        push_sample(&tmp, 0, true, &mut back);
+        assert_eq!(plain, back);
+    }
+
+    #[test]
+    fn rejects_empty_shard_and_zero_batch() {
+        let (d, shard) = setup();
+        assert!(ClientLoader::new(d.clone(), vec![], 8, false, 1).is_err());
+        assert!(ClientLoader::new(d, shard, 0, false, 1).is_err());
+    }
+
+    #[test]
+    fn eval_batches_cover_exactly() {
+        let (d, _) = setup();
+        let ev = EvalBatches::new(&d, 32);
+        assert_eq!(ev.total_valid(), 100);
+        assert_eq!(ev.batches.len(), 4); // 32+32+32+4
+        assert_eq!(ev.batches[3].1, 4);
+        assert_eq!(ev.batches[3].0.x.len(), 32 * d.dim);
+    }
+
+    #[test]
+    fn loader_deterministic_per_seed() {
+        let (d, shard) = setup();
+        let mut a = ClientLoader::new(d.clone(), shard.clone(), 8, true, 9).unwrap();
+        let mut b = ClientLoader::new(d, shard, 8, true, 9).unwrap();
+        assert_eq!(a.next_batch().x, b.next_batch().x);
+    }
+}

@@ -1,0 +1,11 @@
+//! Data pipeline: synthetic dataset generation (`synth`), non-iid client
+//! partitioning (`partition`), and batch loading with augmentation
+//! (`loader`).
+
+pub mod loader;
+pub mod partition;
+pub mod synth;
+
+pub use loader::{Batch, ClientLoader, EvalBatches};
+pub use partition::{Partition, PartitionScheme};
+pub use synth::{generate, Dataset, SynthSpec};

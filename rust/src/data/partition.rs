@@ -1,0 +1,195 @@
+//! Client data partitioning — the paper's statistical-heterogeneity setup.
+//!
+//! CIFAR experiment (§5): "each client takes seven classes (out of the ten
+//! possible) without replacement" — every client holds a class subset of
+//! size `classes_per_client`; each training sample is assigned to a client
+//! that holds its class (uniformly among them).  TinyImageNet uses IID.
+
+use super::synth::Dataset;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PartitionScheme {
+    Iid,
+    /// each client draws `classes_per_client` distinct classes
+    ClassSubset { classes_per_client: usize },
+}
+
+/// Per-client view: indices into the shared dataset.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub shards: Vec<Vec<u32>>,
+    pub scheme: PartitionScheme,
+}
+
+impl Partition {
+    pub fn build(
+        data: &Dataset,
+        n_clients: usize,
+        scheme: PartitionScheme,
+        seed: u64,
+    ) -> Result<Partition, String> {
+        if n_clients == 0 {
+            return Err("need at least one client".into());
+        }
+        let mut rng = Rng::new(seed).derive(0x9A47);
+        let mut shards = vec![Vec::new(); n_clients];
+        match scheme {
+            PartitionScheme::Iid => {
+                for i in 0..data.len() {
+                    shards[rng.usize_below(n_clients)].push(i as u32);
+                }
+            }
+            PartitionScheme::ClassSubset { classes_per_client } => {
+                if classes_per_client == 0 || classes_per_client > data.classes {
+                    return Err(format!(
+                        "classes_per_client {classes_per_client} out of range 1..={}",
+                        data.classes
+                    ));
+                }
+                // each client picks its class subset without replacement
+                let client_classes: Vec<Vec<usize>> = (0..n_clients)
+                    .map(|_| rng.sample_distinct(data.classes, classes_per_client))
+                    .collect();
+                // invert: class -> clients holding it
+                let mut holders: Vec<Vec<u32>> = vec![Vec::new(); data.classes];
+                for (ci, classes) in client_classes.iter().enumerate() {
+                    for &c in classes {
+                        holders[c].push(ci as u32);
+                    }
+                }
+                // a class nobody holds (possible for tiny n_clients): assign
+                // round-robin fallback holders so no data is dropped
+                for (c, h) in holders.iter_mut().enumerate() {
+                    if h.is_empty() {
+                        h.push((c % n_clients) as u32);
+                    }
+                }
+                for i in 0..data.len() {
+                    let class = data.y[i] as usize;
+                    let h = &holders[class];
+                    let client = h[rng.usize_below(h.len())];
+                    shards[client as usize].push(i as u32);
+                }
+            }
+        }
+        Ok(Partition { shards, scheme })
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn total_samples(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+
+    /// Number of distinct classes present on a client.
+    pub fn client_classes(&self, data: &Dataset, client: usize) -> usize {
+        let mut seen = vec![false; data.classes];
+        for &i in &self.shards[client] {
+            seen[data.y[i as usize] as usize] = true;
+        }
+        seen.iter().filter(|&&s| s).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+
+    fn data() -> Dataset {
+        generate(&SynthSpec::tiny_test(), 2000, 42)
+    }
+
+    #[test]
+    fn iid_partition_covers_everything() {
+        let d = data();
+        let p = Partition::build(&d, 10, PartitionScheme::Iid, 1).unwrap();
+        assert_eq!(p.total_samples(), 2000);
+        let mut seen = vec![false; 2000];
+        for s in &p.shards {
+            for &i in s {
+                assert!(!seen[i as usize], "sample assigned twice");
+                seen[i as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+        // balanced within 4 sigma
+        for s in &p.shards {
+            assert!((s.len() as f64 - 200.0).abs() < 4.0 * (200.0f64 * 0.9).sqrt());
+        }
+    }
+
+    #[test]
+    fn class_subset_respects_subsets() {
+        let d = data();
+        let p = Partition::build(
+            &d,
+            20,
+            PartitionScheme::ClassSubset { classes_per_client: 7 },
+            3,
+        )
+        .unwrap();
+        assert_eq!(p.total_samples(), 2000);
+        for c in 0..20 {
+            let k = p.client_classes(&d, c);
+            assert!(k <= 7, "client {c} has {k} classes (> 7)");
+        }
+        // heterogeneity: clients differ in their class sets
+        let distinct: std::collections::BTreeSet<Vec<u16>> = (0..20)
+            .map(|c| {
+                let mut classes: Vec<u16> =
+                    p.shards[c].iter().map(|&i| d.y[i as usize]).collect();
+                classes.sort_unstable();
+                classes.dedup();
+                classes
+            })
+            .collect();
+        assert!(distinct.len() > 5, "class subsets suspiciously uniform");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let d = data();
+        let a = Partition::build(&d, 10, PartitionScheme::ClassSubset { classes_per_client: 7 }, 5)
+            .unwrap();
+        let b = Partition::build(&d, 10, PartitionScheme::ClassSubset { classes_per_client: 7 }, 5)
+            .unwrap();
+        assert_eq!(a.shards, b.shards);
+        let c = Partition::build(&d, 10, PartitionScheme::ClassSubset { classes_per_client: 7 }, 6)
+            .unwrap();
+        assert_ne!(a.shards, c.shards);
+    }
+
+    #[test]
+    fn rejects_bad_args() {
+        let d = data();
+        assert!(Partition::build(&d, 0, PartitionScheme::Iid, 1).is_err());
+        assert!(Partition::build(
+            &d,
+            4,
+            PartitionScheme::ClassSubset { classes_per_client: 0 },
+            1
+        )
+        .is_err());
+        assert!(Partition::build(
+            &d,
+            4,
+            PartitionScheme::ClassSubset { classes_per_client: 11 },
+            1
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn single_client_gets_all() {
+        let d = data();
+        let p = Partition::build(&d, 1, PartitionScheme::ClassSubset { classes_per_client: 7 }, 1)
+            .unwrap();
+        // fallback holders guarantee nothing is dropped even though the
+        // single client only "holds" 7 of 10 classes
+        assert_eq!(p.total_samples(), 2000);
+    }
+}

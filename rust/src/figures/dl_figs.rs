@@ -1,0 +1,236 @@
+//! Deep-learning experiment figures: Fig 6 (CIFAR-like accuracy vs CS
+//! steps), Fig 7 (TinyImageNet-like accuracy vs virtual time, incl.
+//! synchronous baselines), Table 2 (multi-seed accuracy mean ± std).
+//!
+//! These run the full three-layer stack (Rust coordinator → PJRT-executed
+//! AOT JAX model → Pallas kernels).  `quick` mode uses the tiny variant +
+//! native backend so the complete figure suite stays runnable in CI.
+
+use crate::coordinator::{
+    build_loaders, run_experiment, run_favano, run_fedavg, seed_sweep, table2_seeds,
+    ExperimentConfig,
+};
+use crate::data::{generate, EvalBatches, Partition, PartitionScheme};
+use crate::fl::{FavanoConfig, FedAvgConfig};
+use crate::runtime::{make_backend, BackendKind};
+use crate::simulator::{ServiceDist, ServiceFamily};
+use crate::util::table::{Series, TextTable};
+
+/// Fig 6 configuration, honoring quick mode.
+pub fn fig6_config(algo: &str, quick: bool) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::fig6(algo);
+    if quick {
+        cfg.variant = "tiny".into();
+        cfg.backend = BackendKind::Native;
+        cfg.n_clients = 20;
+        cfg.steps = 120;
+        cfg.eval_every = 20;
+        cfg.n_train = 2_000;
+        cfg.n_val = 400;
+        cfg.concurrency = 5;
+        cfg.eta = 0.05;
+    }
+    cfg
+}
+
+/// Fig 6: validation accuracy vs CS steps for Generalized AsyncSGD
+/// (bound-optimal p), AsyncSGD (uniform) and FedBuff (Z=10).
+/// Paper (Table 2): 66.6 vs 59.1 vs 49.9 after 200 steps.
+pub fn fig6(quick: bool) -> Result<(Series, String), String> {
+    let algos = ["gasync", "async", "fedbuff"];
+    let mut curves = Vec::new();
+    for algo in algos {
+        let mut cfg = fig6_config(algo, quick);
+        if algo == "gasync" {
+            cfg = cfg.with_optimal_p()?;
+        }
+        if algo == "fedbuff" {
+            // the paper finetunes η per method; FedBuff's 1/Z-averaged,
+            // T/Z-cadenced updates need a larger step size to be competitive
+            cfg.eta *= 4.0;
+        }
+        let res = run_experiment(&cfg)?;
+        curves.push(res);
+    }
+    let mut s = Series::new(&["step", "acc_gasync", "acc_async", "acc_fedbuff"]);
+    for i in 0..curves[0].curve.len() {
+        s.push(vec![
+            curves[0].curve[i].step as f64,
+            curves[0].curve[i].val_accuracy,
+            curves[1].curve.get(i).map(|c| c.val_accuracy).unwrap_or(f64::NAN),
+            curves[2].curve.get(i).map(|c| c.val_accuracy).unwrap_or(f64::NAN),
+        ]);
+    }
+    let summary = format!(
+        "fig6: final val acc — gasync {:.3} / async {:.3} / fedbuff {:.3} \
+         (paper ordering: gasync > async > fedbuff; 0.666/0.591/0.499)",
+        curves[0].final_accuracy, curves[1].final_accuracy, curves[2].final_accuracy
+    );
+    Ok((s, summary))
+}
+
+/// Fig 7: accuracy vs virtual time on the TinyImageNet-like task, adding
+/// the synchronous FedAvg and semi-synchronous FAVANO baselines.
+pub fn fig7(quick: bool) -> Result<(Series, String), String> {
+    // async methods measured against a fixed time budget by converting
+    // their per-step virtual times; sync methods run rounds to the budget.
+    let (variant, backend, n, time_budget, n_train, n_val) = if quick {
+        ("tiny", BackendKind::Native, 16usize, 60.0, 1_500, 300)
+    } else {
+        ("tinyimg_jnp", BackendKind::Pjrt, 60usize, 60.0, 8_000, 1_000)
+    };
+    let mut base = ExperimentConfig {
+        variant: variant.into(),
+        backend,
+        algo: "gasync".into(),
+        n_clients: n,
+        concurrency: (n / 6).max(4),
+        steps: 0, // set below from the time budget heuristic
+        eta: 0.1,
+        fedbuff_z: 10,
+        slow_fraction: 0.5,
+        mu_fast: 4.0,
+        p_fast: None,
+        n_train,
+        n_val,
+        classes_per_client: 0, // IID as in the paper's TinyImageNet setup
+        eval_every: 0,
+        seed: 0xF7,
+    };
+    // step budget ≈ time budget × CS step rate (theory)
+    let (_, rate) = crate::coordinator::experiment::theory_summary(&base)?;
+    base.steps = (time_budget * rate) as u64;
+    base.eval_every = (base.steps / 8).max(1);
+
+    let mut rows: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+    for algo in ["gasync", "async", "fedbuff"] {
+        let mut cfg = base.clone();
+        cfg.algo = algo.into();
+        if algo == "gasync" {
+            cfg = cfg.with_optimal_p()?;
+        }
+        let res = run_experiment(&cfg)?;
+        rows.push((
+            algo.to_string(),
+            res.curve.iter().map(|c| (c.virtual_time, c.val_accuracy)).collect(),
+        ));
+    }
+    // synchronous baselines share the dataset/partition/backend protocol
+    {
+        let sspec = base.synth_spec();
+        let mut backend = make_backend(base.backend, &base.variant, None)?;
+        let bspec = backend.spec().clone();
+        let train = std::sync::Arc::new(generate(&sspec, base.n_train, base.seed ^ 0xDA7A));
+        let val = generate(&sspec, base.n_val, base.seed ^ 0x7A11);
+        let partition = Partition::build(&train, n, PartitionScheme::Iid, base.seed ^ 0x9A47)?;
+        let val_b = EvalBatches::new(&val, bspec.eval_batch);
+        let service = ServiceDist::from_rates(&base.rates(), ServiceFamily::Exponential);
+        // FedAvg
+        let mut loaders =
+            build_loaders(train.clone(), &partition, bspec.train_batch, true, base.seed)?;
+        let mut model = bspec.init_model(base.seed ^ 0x1417);
+        let fa = run_fedavg(
+            backend.as_mut(),
+            &mut loaders,
+            &val_b,
+            &mut model,
+            FedAvgConfig { s: (n / 10).max(2), k_local: 2, eta_local: base.eta },
+            &service,
+            time_budget,
+            1,
+            base.seed ^ 0xFEDA,
+        )?;
+        rows.push((
+            "fedavg".into(),
+            fa.curve.iter().map(|c| (c.virtual_time, c.val_accuracy)).collect(),
+        ));
+        // FAVANO
+        let mut loaders =
+            build_loaders(train, &partition, bspec.train_batch, true, base.seed ^ 1)?;
+        let mut model = bspec.init_model(base.seed ^ 0x1418);
+        let fv = run_favano(
+            backend.as_mut(),
+            &mut loaders,
+            &val_b,
+            &mut model,
+            FavanoConfig { interval: 4.0, k_max: 4, eta_local: base.eta },
+            &service,
+            time_budget,
+            2,
+            base.seed ^ 0xFA7A,
+        )?;
+        rows.push((
+            "favano".into(),
+            fv.curve.iter().map(|c| (c.virtual_time, c.val_accuracy)).collect(),
+        ));
+    }
+    // long-form series: method-id, time, accuracy
+    let mut s = Series::new(&["method_id", "virtual_time", "val_accuracy"]);
+    for (mi, (_, curve)) in rows.iter().enumerate() {
+        for &(t, a) in curve {
+            s.push(vec![mi as f64, t, a]);
+        }
+    }
+    let finals: Vec<String> = rows
+        .iter()
+        .map(|(name, c)| format!("{name} {:.3}", c.last().map(|x| x.1).unwrap_or(f64::NAN)))
+        .collect();
+    let summary = format!(
+        "fig7: final accuracies at equal time budget — {} \
+         (paper ordering: gasync best; FedBuff sensitive to stragglers; methods: 0=gasync 1=async 2=fedbuff 3=fedavg 4=favano)",
+        finals.join(", ")
+    );
+    Ok((s, summary))
+}
+
+/// Table 2: accuracy mean ± std over seeds for the Fig-6 task.
+/// Paper: FedBuff 49.89±0.77, AsyncSGD 59.09±1.97, GenAsyncSGD 66.61±3.26.
+pub fn table2(quick: bool, n_seeds: usize) -> Result<(TextTable, String), String> {
+    let seeds = table2_seeds(n_seeds);
+    let mut t = TextTable::new(&["Method", "Accuracy (mean ± std)", "seeds"]);
+    let mut summary_parts = Vec::new();
+    let mut means = Vec::new();
+    for algo in ["fedbuff", "async", "gasync"] {
+        let mut cfg = fig6_config(algo, quick);
+        if algo == "gasync" {
+            cfg = cfg.with_optimal_p()?;
+        }
+        if algo == "fedbuff" {
+            cfg.eta *= 4.0; // per-method η tuning, as in the paper
+        }
+        let sweep = seed_sweep(&cfg, &seeds)?;
+        t.push(vec![
+            algo.to_string(),
+            format!("{:.2} ± {:.2}", sweep.mean * 100.0, sweep.std * 100.0),
+            format!("{}", seeds.len()),
+        ]);
+        summary_parts.push(format!("{algo} {:.1}%", sweep.mean * 100.0));
+        means.push(sweep.mean);
+    }
+    let ordered = means[2] > means[1] && means[1] > means[0];
+    let summary = format!(
+        "table2: {} — ordering gasync > async > fedbuff {} (paper: 66.6 > 59.1 > 49.9)",
+        summary_parts.join(", "),
+        if ordered { "HOLDS" } else { "VIOLATED" }
+    );
+    Ok((t, summary))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_quick_runs_and_orders() {
+        let (s, summary) = fig6(true).unwrap();
+        assert!(s.rows.len() >= 4);
+        assert!(summary.contains("gasync"));
+    }
+
+    #[test]
+    fn table2_quick_two_seeds() {
+        let (t, summary) = table2(true, 2).unwrap();
+        assert_eq!(t.rows.len(), 3);
+        assert!(summary.contains("table2"));
+    }
+}

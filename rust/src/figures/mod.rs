@@ -1,0 +1,117 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (see DESIGN.md per-experiment index).  Each target writes
+//! `results/<id>.csv`, prints an ASCII preview, and returns a one-line
+//! paper-vs-measured summary recorded in EXPERIMENTS.md.
+
+pub mod bound_figs;
+pub mod dl_figs;
+pub mod queueing_figs;
+
+use crate::util::table::Series;
+use std::path::Path;
+
+/// All regenerable targets, in paper order.
+pub const ALL: [&str; 12] = [
+    "fig1", "fig2", "fig3", "fig4", "table1", "fig5", "fig6", "fig7", "table2", "fig8",
+    "fig9", "fig11",
+];
+
+/// fig10 is identical to fig5 in the paper (App F repeats it); fig12 is the
+/// 3-cluster App-G study — both available explicitly.
+pub const EXTRA: [&str; 2] = ["fig10", "fig12"];
+
+/// Run one target.  `quick` trades sample counts for speed (CI);
+/// the full setting reproduces the paper's parameters.
+pub fn run_target(name: &str, out_dir: &Path, quick: bool) -> Result<String, String> {
+    let write = |series: &Series, id: &str| -> Result<(), String> {
+        let path = out_dir.join(format!("{id}.csv"));
+        series.write_csv(&path).map_err(|e| format!("write {}: {e}", path.display()))?;
+        println!("{}", series.ascii(12));
+        Ok(())
+    };
+    let summary = match name {
+        "fig1" => {
+            let (s, sum) = queueing_figs::fig1(if quick { 50 } else { 500 })?;
+            write(&s, "fig1")?;
+            sum
+        }
+        "fig2" => {
+            let (s, sum) =
+                bound_figs::fig2(if quick { 25 } else { 50 }, if quick { 20_000 } else { 100_000 })?;
+            write(&s, "fig2")?;
+            sum
+        }
+        "fig3" => {
+            let (s, sum) = bound_figs::fig3(if quick { 30 } else { 50 })?;
+            write(&s, "fig3")?;
+            sum
+        }
+        "fig4" => {
+            let (s, sum) = bound_figs::fig4(if quick { 30 } else { 50 })?;
+            write(&s, "fig4")?;
+            sum
+        }
+        "table1" => {
+            let (t, sum) = bound_figs::table1()?;
+            t.write_csv(&out_dir.join("table1.csv"))
+                .map_err(|e| format!("table1: {e}"))?;
+            println!("{}", t.ascii());
+            sum
+        }
+        "fig5" | "fig10" => {
+            let (s, sum) = queueing_figs::fig5(if quick { 100_000 } else { 1_000_000 })?;
+            write(&s, name)?;
+            sum
+        }
+        "fig11" => {
+            let (s, sum) = queueing_figs::fig11(if quick { 100_000 } else { 1_000_000 })?;
+            write(&s, "fig11")?;
+            sum
+        }
+        "fig12" => {
+            let (s, sum) = queueing_figs::fig12(if quick { 100_000 } else { 1_000_000 })?;
+            write(&s, "fig12")?;
+            sum
+        }
+        "fig8" => {
+            let (s, sum) = bound_figs::fig8()?;
+            write(&s, "fig8")?;
+            sum
+        }
+        "fig9" => {
+            let (s, sum) = bound_figs::fig9(if quick { 30 } else { 50 })?;
+            write(&s, "fig9")?;
+            sum
+        }
+        "fig6" => {
+            let (s, sum) = dl_figs::fig6(quick)?;
+            write(&s, "fig6")?;
+            sum
+        }
+        "fig7" => {
+            let (s, sum) = dl_figs::fig7(quick)?;
+            write(&s, "fig7")?;
+            sum
+        }
+        "table2" => {
+            let (t, sum) = dl_figs::table2(quick, if quick { 3 } else { 10 })?;
+            t.write_csv(&out_dir.join("table2.csv"))
+                .map_err(|e| format!("table2: {e}"))?;
+            println!("{}", t.ascii());
+            sum
+        }
+        other => return Err(format!("unknown figure target '{other}'; known: {ALL:?} + {EXTRA:?}")),
+    };
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_target_is_error() {
+        let err = run_target("fig99", Path::new("/tmp"), true).unwrap_err();
+        assert!(err.contains("fig99"));
+    }
+}

@@ -1,0 +1,175 @@
+//! FAVANO-style time-sliced asynchronous averaging (Leconte et al. 2023),
+//! the second asynchronous baseline of Fig 7.
+//!
+//! No queues: the central server updates on a FIXED interval Δ.  Between
+//! server updates every client keeps taking local SGD steps on its local
+//! model (as many as fit in Δ given its speed, capped at `k_max`; a slow
+//! client may contribute 0 — it is "interrupted").  At each boundary the
+//! server averages its own model with all clients' local models and
+//! re-broadcasts.  The paper's caveat reproduced here: Δ must be long
+//! enough for slow clients to finish at least one gradient or their
+//! information never enters the average.
+
+use super::model::ModelState;
+use super::oracle::GradOracle;
+use crate::simulator::ServiceDist;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct FavanoConfig {
+    /// server update interval Δ (virtual time)
+    pub interval: f64,
+    /// cap on local steps per interval (QuAFL's K)
+    pub k_max: usize,
+    pub eta_local: f64,
+}
+
+pub struct Favano {
+    pub cfg: FavanoConfig,
+    rng: Rng,
+    /// per-client local models (synced to the server at each boundary)
+    locals: Vec<ModelState>,
+    /// per-client leftover service time carried across boundaries
+    carry: Vec<f64>,
+}
+
+pub struct FavanoRound {
+    pub duration: f64,
+    pub mean_loss: f64,
+    /// local steps contributed per client this round
+    pub steps: Vec<usize>,
+}
+
+impl Favano {
+    pub fn new(cfg: FavanoConfig, model: &ModelState, n: usize, seed: u64) -> Favano {
+        Favano {
+            cfg,
+            rng: Rng::new(seed).derive(0xFA7A_0),
+            locals: vec![model.clone(); n],
+            carry: vec![0.0; n],
+        }
+    }
+
+    pub fn round<O: GradOracle>(
+        &mut self,
+        model: &mut ModelState,
+        oracle: &mut O,
+        service: &[ServiceDist],
+    ) -> FavanoRound {
+        let n = self.locals.len();
+        let mut steps = vec![0usize; n];
+        let mut loss_sum = 0.0f64;
+        let mut loss_cnt = 0usize;
+        for ci in 0..n {
+            let mut t = self.carry[ci];
+            while steps[ci] < self.cfg.k_max {
+                let dur = service[ci].sample(&mut self.rng);
+                if t + dur > self.cfg.interval {
+                    // interrupted mid-computation; remaining time carries
+                    self.carry[ci] = 0.0; // interrupted work is discarded
+                    break;
+                }
+                t += dur;
+                let (loss, g) = oracle.grad(ci, &self.locals[ci]);
+                self.locals[ci].apply_update(&g, self.cfg.eta_local as f32);
+                steps[ci] += 1;
+                loss_sum += loss;
+                loss_cnt += 1;
+            }
+        }
+        // server average: w ← (w + Σ_i w_i)/(n+1), then re-broadcast
+        let mut acc = model.accumulator(); // Σ (w − w_i)
+        for local in &self.locals {
+            for (a, (wt, lt)) in acc.iter_mut().zip(model.tensors.iter().zip(&local.tensors)) {
+                for (av, (wv, lv)) in a.iter_mut().zip(wt.iter().zip(lt)) {
+                    *av += (*wv as f64) - (*lv as f64);
+                }
+            }
+        }
+        model.apply_accumulator(&acc, 1.0 / (n as f64 + 1.0));
+        for local in self.locals.iter_mut() {
+            *local = model.clone();
+        }
+        FavanoRound {
+            duration: self.cfg.interval,
+            mean_loss: if loss_cnt > 0 { loss_sum / loss_cnt as f64 } else { f64::NAN },
+            steps,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::oracle::QuadraticOracle;
+    use crate::simulator::ServiceFamily;
+
+    #[test]
+    fn fast_clients_contribute_more_steps() {
+        let mut oracle = QuadraticOracle::new(vec![vec![1.0], vec![1.0]], 0.0, 1);
+        let model = ModelState { tensors: vec![vec![0.0]], shapes: vec![vec![1]] };
+        let service = ServiceDist::from_rates(&[10.0, 0.5], ServiceFamily::Deterministic);
+        let mut fv = Favano::new(
+            FavanoConfig { interval: 1.0, k_max: 100, eta_local: 0.05 },
+            &model,
+            2,
+            2,
+        );
+        let mut m = model.clone();
+        let r = fv.round(&mut m, &mut oracle, &service);
+        assert_eq!(r.steps[0], 10); // 10 services of 0.1 fit in Δ=1
+        assert_eq!(r.steps[1], 0); // service of 2.0 never fits — interrupted
+    }
+
+    #[test]
+    fn k_max_caps_fast_clients() {
+        let mut oracle = QuadraticOracle::new(vec![vec![1.0]], 0.0, 3);
+        let model = ModelState { tensors: vec![vec![0.0]], shapes: vec![vec![1]] };
+        let service = ServiceDist::from_rates(&[1000.0], ServiceFamily::Deterministic);
+        let mut fv = Favano::new(
+            FavanoConfig { interval: 1.0, k_max: 5, eta_local: 0.05 },
+            &model,
+            1,
+            4,
+        );
+        let mut m = model.clone();
+        let r = fv.round(&mut m, &mut oracle, &service);
+        assert_eq!(r.steps[0], 5);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let centers: Vec<Vec<f32>> = (0..8).map(|i| vec![i as f32]).collect();
+        let mut oracle = QuadraticOracle::new(centers, 0.02, 5);
+        let mut model = ModelState { tensors: vec![vec![10.0]], shapes: vec![vec![1]] };
+        let service = ServiceDist::from_rates(&vec![2.0; 8], ServiceFamily::Exponential);
+        let mut fv = Favano::new(
+            FavanoConfig { interval: 2.0, k_max: 8, eta_local: 0.15 },
+            &model,
+            8,
+            6,
+        );
+        for _ in 0..250 {
+            fv.round(&mut model, &mut oracle, &service);
+        }
+        let w = model.tensors[0][0];
+        assert!((w - 3.5).abs() < 0.5, "w={w}, want ≈3.5");
+    }
+
+    #[test]
+    fn interval_too_short_stalls_slow_info() {
+        // if NO client can finish a step, the model must stay unchanged
+        let mut oracle = QuadraticOracle::new(vec![vec![5.0]], 0.0, 7);
+        let mut model = ModelState { tensors: vec![vec![0.0]], shapes: vec![vec![1]] };
+        let service = ServiceDist::from_rates(&[0.1], ServiceFamily::Deterministic);
+        let mut fv = Favano::new(
+            FavanoConfig { interval: 1.0, k_max: 10, eta_local: 0.1 },
+            &model,
+            1,
+            8,
+        );
+        let r = fv.round(&mut model, &mut oracle, &service);
+        assert_eq!(r.steps[0], 0);
+        assert_eq!(model.tensors[0][0], 0.0);
+    }
+}

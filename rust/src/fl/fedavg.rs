@@ -1,0 +1,139 @@
+//! FedAvg (McMahan et al. 2017) — the synchronous baseline of Fig 7.
+//!
+//! Each round the server samples `s` clients uniformly, broadcasts the
+//! model, each client runs exactly `k_local` local SGD steps, and the
+//! server averages the returned models.  The round's wall time is the MAX
+//! over the selected clients of their total compute time (the synchronous
+//! straggler penalty the asynchronous methods avoid).
+
+use super::model::ModelState;
+use super::oracle::GradOracle;
+use crate::simulator::ServiceDist;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct FedAvgConfig {
+    /// clients per round
+    pub s: usize,
+    /// local steps per selected client
+    pub k_local: usize,
+    /// local learning rate
+    pub eta_local: f64,
+}
+
+pub struct FedAvg {
+    pub cfg: FedAvgConfig,
+    rng: Rng,
+}
+
+/// Result of one synchronous round.
+pub struct RoundOutcome {
+    /// wall-clock (virtual) duration of the round = max client time
+    pub duration: f64,
+    /// mean local training loss over participating clients
+    pub mean_loss: f64,
+    pub participants: Vec<usize>,
+}
+
+impl FedAvg {
+    pub fn new(cfg: FedAvgConfig, seed: u64) -> FedAvg {
+        FedAvg { cfg, rng: Rng::new(seed).derive(0xFEDA) }
+    }
+
+    pub fn round<O: GradOracle>(
+        &mut self,
+        model: &mut ModelState,
+        oracle: &mut O,
+        service: &[ServiceDist],
+    ) -> RoundOutcome {
+        let n = oracle.n_clients();
+        let s = self.cfg.s.min(n);
+        let participants = self.rng.sample_distinct(n, s);
+        let mut acc = model.accumulator(); // sum of (w_i − w)
+        let mut max_time = 0.0f64;
+        let mut loss_sum = 0.0f64;
+        for &ci in &participants {
+            let mut local = model.clone();
+            let mut t = 0.0;
+            for _ in 0..self.cfg.k_local {
+                let (loss, g) = oracle.grad(ci, &local);
+                local.apply_update(&g, self.cfg.eta_local as f32);
+                t += service[ci].sample(&mut self.rng);
+                loss_sum += loss / (s * self.cfg.k_local) as f64;
+            }
+            // accumulate the model delta w − w_local (so apply_accumulator
+            // with scale 1/s implements model averaging)
+            for (a, (wt, lt)) in acc.iter_mut().zip(model.tensors.iter().zip(&local.tensors)) {
+                for (av, (wv, lv)) in a.iter_mut().zip(wt.iter().zip(lt)) {
+                    *av += (*wv as f64) - (*lv as f64);
+                }
+            }
+            max_time = max_time.max(t);
+        }
+        model.apply_accumulator(&acc, 1.0 / s as f64);
+        RoundOutcome { duration: max_time, mean_loss: loss_sum, participants }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::oracle::QuadraticOracle;
+    use crate::simulator::ServiceFamily;
+
+    fn service(n: usize) -> Vec<ServiceDist> {
+        ServiceDist::from_rates(&vec![1.0; n], ServiceFamily::Exponential)
+    }
+
+    #[test]
+    fn round_averages_models() {
+        // two clients, deterministic gradients, s = n: after one round with
+        // k_local=1, w moves toward mean of centers
+        let mut oracle = QuadraticOracle::new(vec![vec![0.0], vec![4.0]], 0.0, 1);
+        let mut model = ModelState { tensors: vec![vec![0.0]], shapes: vec![vec![1]] };
+        let mut fa = FedAvg::new(FedAvgConfig { s: 2, k_local: 1, eta_local: 0.5 }, 2);
+        let out = fa.round(&mut model, &mut oracle, &service(2));
+        // each local: w0=0: client0 grad 0 → stays 0; client1 grad −4 →
+        // 0 + 0.5·4 = 2; average = 1
+        assert!((model.tensors[0][0] - 1.0).abs() < 1e-6);
+        assert_eq!(out.participants.len(), 2);
+        assert!(out.duration > 0.0);
+    }
+
+    #[test]
+    fn converges_to_global_mean() {
+        let centers: Vec<Vec<f32>> = (0..10).map(|i| vec![i as f32]).collect();
+        let mut oracle = QuadraticOracle::new(centers, 0.05, 3);
+        let mut model = ModelState { tensors: vec![vec![20.0]], shapes: vec![vec![1]] };
+        let mut fa = FedAvg::new(FedAvgConfig { s: 10, k_local: 3, eta_local: 0.2 }, 4);
+        for _ in 0..100 {
+            fa.round(&mut model, &mut oracle, &service(10));
+        }
+        let w = model.tensors[0][0];
+        assert!((w - 4.5).abs() < 0.3, "w={w}, want ≈4.5");
+    }
+
+    #[test]
+    fn partial_participation_still_converges() {
+        let centers: Vec<Vec<f32>> = (0..20).map(|i| vec![(i % 5) as f32]).collect();
+        let mut oracle = QuadraticOracle::new(centers, 0.0, 5);
+        let mut model = ModelState { tensors: vec![vec![-3.0]], shapes: vec![vec![1]] };
+        let mut fa = FedAvg::new(FedAvgConfig { s: 5, k_local: 2, eta_local: 0.3 }, 6);
+        for _ in 0..300 {
+            fa.round(&mut model, &mut oracle, &service(20));
+        }
+        let w = model.tensors[0][0];
+        assert!((w - 2.0).abs() < 0.4, "w={w}, want ≈2.0");
+    }
+
+    #[test]
+    fn straggler_penalty_round_time_is_max() {
+        // one very slow client (rate 0.01): rounds including it take long
+        let mut oracle = QuadraticOracle::new(vec![vec![0.0], vec![0.0]], 0.0, 7);
+        let mut model = ModelState { tensors: vec![vec![0.0]], shapes: vec![vec![1]] };
+        let service = ServiceDist::from_rates(&[100.0, 0.01], ServiceFamily::Deterministic);
+        let mut fa = FedAvg::new(FedAvgConfig { s: 2, k_local: 1, eta_local: 0.1 }, 8);
+        let out = fa.round(&mut model, &mut oracle, &service);
+        assert!((out.duration - 100.0).abs() < 1e-9, "round limited by straggler");
+    }
+}

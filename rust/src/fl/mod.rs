@@ -1,0 +1,17 @@
+//! Federated-learning algorithm zoo: the paper's **Generalized AsyncSGD**
+//! plus the baselines it is evaluated against (AsyncSGD, FedBuff, FedAvg,
+//! FAVANO).  Algorithms are expressed as backend-agnostic update rules /
+//! round engines over a [`oracle::GradOracle`]; the coordinator binds them
+//! to queueing dynamics and the PJRT/native gradient backends.
+
+pub mod favano;
+pub mod fedavg;
+pub mod model;
+pub mod oracle;
+pub mod update;
+
+pub use favano::{Favano, FavanoConfig};
+pub use fedavg::{FedAvg, FedAvgConfig};
+pub use model::ModelState;
+pub use oracle::{GradOracle, QuadraticOracle};
+pub use update::{ServerAlgo, UpdateRule};

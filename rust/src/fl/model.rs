@@ -1,0 +1,168 @@
+//! Server-side model state: a flat list of f32 tensors matching the AOT
+//! artifact's parameter order (w0, b0, w1, b1, ...).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ModelState {
+    pub tensors: Vec<Vec<f32>>,
+    pub shapes: Vec<Vec<usize>>,
+}
+
+impl ModelState {
+    /// He-normal init for 2-D weights (fan-in scaling), zeros for 1-D
+    /// biases — mirrors the L2 model's scheme.
+    pub fn init_he(shapes: &[Vec<usize>], seed: u64) -> ModelState {
+        let mut rng = Rng::new(seed).derive(0x1417);
+        let tensors = shapes
+            .iter()
+            .map(|s| {
+                let numel: usize = s.iter().product();
+                let mut t = vec![0.0f32; numel];
+                if s.len() == 2 {
+                    rng.he_normal(s[0], &mut t);
+                }
+                t
+            })
+            .collect();
+        ModelState { shapes: shapes.to_vec(), tensors }
+    }
+
+    pub fn zeros_like(&self) -> ModelState {
+        ModelState {
+            shapes: self.shapes.clone(),
+            tensors: self.tensors.iter().map(|t| vec![0.0; t.len()]).collect(),
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// w ← w − scale · g   (the Generalized AsyncSGD server update with
+    /// scale = η/(n p_i)).
+    pub fn apply_update(&mut self, grads: &[Vec<f32>], scale: f32) {
+        debug_assert_eq!(grads.len(), self.tensors.len());
+        for (t, g) in self.tensors.iter_mut().zip(grads) {
+            debug_assert_eq!(t.len(), g.len());
+            for (w, gv) in t.iter_mut().zip(g) {
+                *w -= scale * gv;
+            }
+        }
+    }
+
+    /// acc ← acc + scale · g  (buffer accumulation for FedBuff / FedAvg).
+    pub fn accumulate(acc: &mut [Vec<f64>], grads: &[Vec<f32>], scale: f64) {
+        for (a, g) in acc.iter_mut().zip(grads) {
+            for (av, gv) in a.iter_mut().zip(g) {
+                *av += scale * *gv as f64;
+            }
+        }
+    }
+
+    pub fn accumulator(&self) -> Vec<Vec<f64>> {
+        self.tensors.iter().map(|t| vec![0.0f64; t.len()]).collect()
+    }
+
+    /// w ← w − scale · acc
+    pub fn apply_accumulator(&mut self, acc: &[Vec<f64>], scale: f64) {
+        for (t, a) in self.tensors.iter_mut().zip(acc) {
+            for (w, av) in t.iter_mut().zip(a) {
+                *w = (*w as f64 - scale * av) as f32;
+            }
+        }
+    }
+
+    /// Euclidean distance to another state (testing / drift metrics).
+    pub fn l2_distance(&self, other: &ModelState) -> f64 {
+        self.tensors
+            .iter()
+            .zip(&other.tensors)
+            .map(|(a, b)| {
+                a.iter()
+                    .zip(b)
+                    .map(|(x, y)| {
+                        let d = *x as f64 - *y as f64;
+                        d * d
+                    })
+                    .sum::<f64>()
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.tensors
+            .iter()
+            .map(|t| t.iter().map(|x| *x as f64 * *x as f64).sum::<f64>())
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shapes() -> Vec<Vec<usize>> {
+        vec![vec![4, 3], vec![3], vec![3, 2], vec![2]]
+    }
+
+    #[test]
+    fn init_shapes_and_determinism() {
+        let m = ModelState::init_he(&shapes(), 5);
+        assert_eq!(m.n_params(), 12 + 3 + 6 + 2);
+        assert_eq!(m.tensors[1], vec![0.0; 3]); // bias zero
+        assert!(m.tensors[0].iter().any(|&v| v != 0.0));
+        let m2 = ModelState::init_he(&shapes(), 5);
+        assert_eq!(m.tensors, m2.tensors);
+        let m3 = ModelState::init_he(&shapes(), 6);
+        assert_ne!(m.tensors, m3.tensors);
+    }
+
+    #[test]
+    fn he_scale_reasonable() {
+        let m = ModelState::init_he(&[vec![1000, 500]], 7);
+        let var: f64 = m.tensors[0]
+            .iter()
+            .map(|v| *v as f64 * *v as f64)
+            .sum::<f64>()
+            / 500_000.0;
+        assert!((var - 2.0 / 1000.0).abs() < 2e-4, "var={var}");
+    }
+
+    #[test]
+    fn apply_update_is_sgd_step() {
+        let mut m = ModelState::init_he(&shapes(), 1);
+        let before = m.clone();
+        let grads: Vec<Vec<f32>> = m.tensors.iter().map(|t| vec![1.0; t.len()]).collect();
+        m.apply_update(&grads, 0.5);
+        for (a, b) in m.tensors.iter().zip(&before.tensors) {
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - (y - 0.5)).abs() < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn accumulator_roundtrip() {
+        let mut m = ModelState::init_he(&shapes(), 2);
+        let before = m.clone();
+        let mut acc = m.accumulator();
+        let g1: Vec<Vec<f32>> = m.tensors.iter().map(|t| vec![2.0; t.len()]).collect();
+        let g2: Vec<Vec<f32>> = m.tensors.iter().map(|t| vec![4.0; t.len()]).collect();
+        ModelState::accumulate(&mut acc, &g1, 0.5);
+        ModelState::accumulate(&mut acc, &g2, 0.5);
+        // acc = 3.0 everywhere; apply with scale 1/3 → each w drops by 1
+        m.apply_accumulator(&acc, 1.0 / 3.0);
+        let d = m.l2_distance(&before);
+        assert!((d - (m.n_params() as f64).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn distances() {
+        let m = ModelState::init_he(&shapes(), 3);
+        assert_eq!(m.l2_distance(&m), 0.0);
+        assert!(m.l2_norm() > 0.0);
+    }
+}

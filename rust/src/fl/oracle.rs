@@ -1,0 +1,79 @@
+//! Gradient-oracle abstraction: the algorithms only need "stochastic
+//! gradient of client i at model w".  Production oracle = runtime backend
+//! (PJRT / native) over the client's data shard; test oracle = synthetic
+//! quadratics.
+
+use super::model::ModelState;
+
+pub trait GradOracle {
+    /// Stochastic gradient of client `client`'s objective at `model`.
+    /// Returns (loss, grads) with grads matching model.tensors layout.
+    fn grad(&mut self, client: usize, model: &ModelState) -> (f64, Vec<Vec<f32>>);
+
+    /// Number of clients.
+    fn n_clients(&self) -> usize;
+}
+
+/// f_i(w) = ½‖w − c_i‖² with optional additive Gaussian-ish noise — the
+/// classic testbed: the global optimum is the mean of the c_i.
+pub struct QuadraticOracle {
+    pub centers: Vec<Vec<f32>>,
+    pub noise: f32,
+    rng: crate::util::rng::Rng,
+}
+
+impl QuadraticOracle {
+    pub fn new(centers: Vec<Vec<f32>>, noise: f32, seed: u64) -> QuadraticOracle {
+        QuadraticOracle { centers, noise, rng: crate::util::rng::Rng::new(seed) }
+    }
+
+    pub fn optimum(&self) -> Vec<f32> {
+        let d = self.centers[0].len();
+        let mut opt = vec![0.0f32; d];
+        for c in &self.centers {
+            for (o, v) in opt.iter_mut().zip(c) {
+                *o += v / self.centers.len() as f32;
+            }
+        }
+        opt
+    }
+}
+
+impl GradOracle for QuadraticOracle {
+    fn grad(&mut self, client: usize, model: &ModelState) -> (f64, Vec<Vec<f32>>) {
+        let c = &self.centers[client];
+        let w = &model.tensors[0];
+        let mut g = Vec::with_capacity(w.len());
+        let mut loss = 0.0f64;
+        for (wv, cv) in w.iter().zip(c) {
+            let d = wv - cv;
+            loss += 0.5 * (d as f64) * (d as f64);
+            g.push(d + self.noise * self.rng.normal() as f32);
+        }
+        (loss, vec![g])
+    }
+
+    fn n_clients(&self) -> usize {
+        self.centers.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_oracle_gradient_points_at_center() {
+        let mut o = QuadraticOracle::new(vec![vec![2.0, -1.0]], 0.0, 1);
+        let m = ModelState { tensors: vec![vec![0.0, 0.0]], shapes: vec![vec![2]] };
+        let (loss, g) = o.grad(0, &m);
+        assert_eq!(g[0], vec![-2.0, 1.0]);
+        assert!((loss - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn optimum_is_mean() {
+        let o = QuadraticOracle::new(vec![vec![0.0], vec![4.0]], 0.0, 1);
+        assert_eq!(o.optimum(), vec![2.0]);
+    }
+}

@@ -1,0 +1,233 @@
+//! Server update rules for the asynchronous algorithms (Algorithm 1 and
+//! baselines).  Pure state machines over gradient arrivals — independent of
+//! the queueing dynamics and the gradient backend, hence unit-testable on
+//! synthetic oracles.
+//!
+//! * `GenAsync` — the paper's contribution: immediate update scaled by
+//!   `η/(n p_i)` to keep the aggregate direction unbiased under non-uniform
+//!   sampling (line 10 of Algorithm 1).
+//! * `AsyncSgd` — Koloskova et al.: uniform sampling, immediate update
+//!   `w ← w − η g` (the special case p_i = 1/n of the above).
+//! * `FedBuff` — Nguyen et al.: server buffers Z client updates, then
+//!   applies their average once.
+
+use super::model::ModelState;
+
+#[derive(Clone, Debug)]
+pub enum UpdateRule {
+    GenAsync { eta: f64, p: Vec<f64> },
+    AsyncSgd { eta: f64 },
+    FedBuff { eta: f64, z: usize },
+}
+
+/// Mutable server-side algorithm state.
+pub struct ServerAlgo {
+    pub rule: UpdateRule,
+    buffer: Option<Vec<Vec<f64>>>,
+    buffered: usize,
+    /// CS model version counter (k in the paper): bumps on every applied
+    /// server update
+    pub version: u64,
+    /// total gradients received (≥ version for FedBuff)
+    pub received: u64,
+}
+
+impl ServerAlgo {
+    pub fn new(rule: UpdateRule) -> ServerAlgo {
+        ServerAlgo { rule, buffer: None, buffered: 0, version: 0, received: 0 }
+    }
+
+    /// Effective per-gradient scale for client i (diagnostics + tests).
+    pub fn scale_for(&self, node: usize) -> f64 {
+        match &self.rule {
+            UpdateRule::GenAsync { eta, p } => eta / (p.len() as f64 * p[node]),
+            UpdateRule::AsyncSgd { eta } => *eta,
+            UpdateRule::FedBuff { eta, z } => eta / *z as f64,
+        }
+    }
+
+    /// A gradient from client `node` arrives at the server.
+    /// Returns true iff the global model stepped (version bumped).
+    pub fn on_gradient(
+        &mut self,
+        model: &mut ModelState,
+        node: usize,
+        grads: &[Vec<f32>],
+    ) -> bool {
+        self.received += 1;
+        match &self.rule {
+            UpdateRule::GenAsync { eta, p } => {
+                let scale = (*eta / (p.len() as f64 * p[node])) as f32;
+                model.apply_update(grads, scale);
+                self.version += 1;
+                true
+            }
+            UpdateRule::AsyncSgd { eta } => {
+                model.apply_update(grads, *eta as f32);
+                self.version += 1;
+                true
+            }
+            UpdateRule::FedBuff { eta, z } => {
+                let (eta, z) = (*eta, *z);
+                let buf = self.buffer.get_or_insert_with(|| model.accumulator());
+                ModelState::accumulate(buf, grads, 1.0);
+                self.buffered += 1;
+                if self.buffered >= z {
+                    let buf = self.buffer.take().unwrap();
+                    model.apply_accumulator(&buf, eta / z as f64);
+                    self.buffered = 0;
+                    self.version += 1;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    pub fn pending_in_buffer(&self) -> usize {
+        self.buffered
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{AliasTable, Rng};
+
+    fn model1d(v: f32) -> ModelState {
+        ModelState { tensors: vec![vec![v]], shapes: vec![vec![1]] }
+    }
+
+    #[test]
+    fn gen_async_scaling_is_unbiased() {
+        // E[update direction] = Σ p_i · (1/(n p_i)) g_i = (1/n) Σ g_i for
+        // ANY p: estimate empirically with per-client constant gradients.
+        let n = 4;
+        let p = vec![0.1, 0.2, 0.3, 0.4];
+        let g_of = |i: usize| vec![vec![(i + 1) as f32]]; // g_i = i+1
+        let mut rng = Rng::new(3);
+        let alias = AliasTable::new(&p).unwrap();
+        let eta = 1.0;
+        let mut total = 0.0f64;
+        let trials = 200_000;
+        for _ in 0..trials {
+            let mut m = model1d(0.0);
+            let mut s = ServerAlgo::new(UpdateRule::GenAsync { eta, p: p.clone() });
+            let i = alias.sample(&mut rng);
+            s.on_gradient(&mut m, i, &g_of(i));
+            total += -m.tensors[0][0] as f64; // applied step
+        }
+        let mean_step = total / trials as f64;
+        let expected = (1.0 + 2.0 + 3.0 + 4.0) / 4.0; // (1/n)Σg_i · η
+        assert!(
+            (mean_step - expected).abs() < 0.02,
+            "mean {mean_step} vs unbiased target {expected}"
+        );
+    }
+
+    #[test]
+    fn async_sgd_is_gen_async_at_uniform() {
+        let n = 5;
+        let p = vec![1.0 / n as f64; n];
+        let g = vec![vec![2.0f32]];
+        let mut m1 = model1d(1.0);
+        let mut m2 = model1d(1.0);
+        let mut a = ServerAlgo::new(UpdateRule::GenAsync { eta: 0.1, p });
+        let mut b = ServerAlgo::new(UpdateRule::AsyncSgd { eta: 0.1 });
+        a.on_gradient(&mut m1, 2, &g);
+        b.on_gradient(&mut m2, 2, &g);
+        assert!((m1.tensors[0][0] - m2.tensors[0][0]).abs() < 1e-7);
+    }
+
+    #[test]
+    fn fedbuff_waits_for_z() {
+        let mut m = model1d(0.0);
+        let mut s = ServerAlgo::new(UpdateRule::FedBuff { eta: 1.0, z: 3 });
+        assert!(!s.on_gradient(&mut m, 0, &[vec![3.0]]));
+        assert!(!s.on_gradient(&mut m, 1, &[vec![6.0]]));
+        assert_eq!(m.tensors[0][0], 0.0); // nothing applied yet
+        assert_eq!(s.pending_in_buffer(), 2);
+        assert!(s.on_gradient(&mut m, 2, &[vec![9.0]]));
+        // averaged update: (3+6+9)/3 = 6
+        assert!((m.tensors[0][0] + 6.0).abs() < 1e-7);
+        assert_eq!(s.version, 1);
+        assert_eq!(s.received, 3);
+        assert_eq!(s.pending_in_buffer(), 0);
+    }
+
+    #[test]
+    fn fedbuff_multiple_rounds() {
+        let mut m = model1d(0.0);
+        let mut s = ServerAlgo::new(UpdateRule::FedBuff { eta: 0.5, z: 2 });
+        for k in 0..10 {
+            s.on_gradient(&mut m, k % 3, &[vec![1.0]]);
+        }
+        assert_eq!(s.version, 5);
+        // each round applies 0.5 * avg(1,1) = 0.5
+        assert!((m.tensors[0][0] + 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quadratic_convergence_all_rules() {
+        // f_i(w) = ½(w − c_i)², optimum of the average = mean(c); all three
+        // rules must converge there under uniform arrivals.
+        let c = [1.0f32, 2.0, 3.0, 6.0];
+        let opt = 3.0f32;
+        for rule in [
+            UpdateRule::GenAsync { eta: 0.05, p: vec![0.25; 4] },
+            UpdateRule::AsyncSgd { eta: 0.05 },
+            UpdateRule::FedBuff { eta: 0.2, z: 4 },
+        ] {
+            let mut m = model1d(0.0);
+            let mut s = ServerAlgo::new(rule.clone());
+            let mut rng = Rng::new(11);
+            for _ in 0..4000 {
+                let i = rng.usize_below(4);
+                let g = vec![vec![m.tensors[0][0] - c[i]]];
+                s.on_gradient(&mut m, i, &g);
+            }
+            let w = m.tensors[0][0];
+            assert!(
+                (w - opt).abs() < 0.4,
+                "{rule:?} converged to {w}, want ≈{opt}"
+            );
+        }
+    }
+
+    #[test]
+    fn gen_async_nonuniform_still_converges_to_global_opt() {
+        // the whole point of the 1/(np_i) scaling: heavily skewed sampling
+        // must not bias the fixed point.
+        let c = [0.0f32, 0.0, 0.0, 8.0];
+        let opt = 2.0f32;
+        let p = vec![0.4, 0.3, 0.2, 0.1]; // client 3 sampled rarely
+        let alias = AliasTable::new(&p).unwrap();
+        let mut m = model1d(0.0);
+        let mut s = ServerAlgo::new(UpdateRule::GenAsync { eta: 0.01, p: p.clone() });
+        let mut rng = Rng::new(13);
+        let mut avg = 0.0f64;
+        let steps = 60_000;
+        for k in 0..steps {
+            let i = alias.sample(&mut rng);
+            let g = vec![vec![m.tensors[0][0] - c[i]]];
+            s.on_gradient(&mut m, i, &g);
+            if k > steps / 2 {
+                avg += m.tensors[0][0] as f64;
+            }
+        }
+        let w = avg / (steps / 2 - 1) as f64;
+        assert!((w - opt as f64).abs() < 0.25, "converged to {w}, want {opt}");
+    }
+
+    #[test]
+    fn version_counts() {
+        let mut m = model1d(0.0);
+        let mut s = ServerAlgo::new(UpdateRule::AsyncSgd { eta: 0.1 });
+        for _ in 0..7 {
+            s.on_gradient(&mut m, 0, &[vec![0.5]]);
+        }
+        assert_eq!(s.version, 7);
+        assert_eq!(s.received, 7);
+    }
+}

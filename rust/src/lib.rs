@@ -1,0 +1,32 @@
+//! # fedqueue
+//!
+//! Reproduction of **"Queuing dynamics of asynchronous Federated Learning"**
+//! (Leconte, Jonckheere, Samsonov, Moulines — AISTATS 2024):
+//! **Generalized AsyncSGD**, an asynchronous FL server with non-uniform
+//! client sampling chosen by minimizing a convergence bound driven by exact
+//! closed-Jackson-network delay analysis.
+//!
+//! Architecture (see DESIGN.md): Rust coordinator (this crate, L3) executes
+//! AOT-compiled JAX models (L2) whose hot-spots are Pallas kernels (L1),
+//! via PJRT; Python never runs on the request path.
+//!
+//! Top-level modules:
+//! * [`queueing`] — exact product-form theory (Buzen, arrival theorem, m_i)
+//! * [`simulator`] — event-driven closed-network dynamics
+//! * [`bound`] — Theorem 1 convergence bound + (p, η) optimizer
+//! * [`fl`] — algorithm zoo: Generalized AsyncSGD + 4 baselines
+//! * [`data`] — synthetic datasets + non-iid partitioning
+//! * [`runtime`] — PJRT executor for HLO artifacts + native backend
+//! * [`coordinator`] — the asynchronous central server event loop
+//! * [`figures`] — regeneration of every paper table/figure
+//! * [`util`] — offline substrates (PRNG, stats, TOML/JSON, CLI, bench)
+
+pub mod bound;
+pub mod coordinator;
+pub mod data;
+pub mod figures;
+pub mod fl;
+pub mod queueing;
+pub mod runtime;
+pub mod simulator;
+pub mod util;

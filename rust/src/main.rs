@@ -1,0 +1,265 @@
+//! fedqueue CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   train      run one asynchronous FL experiment (Algorithm 1 + baselines)
+//!   simulate   run the closed-network simulator and report delay stats
+//!   bounds     evaluate/optimize the Theorem-1 bound for a 2-cluster setup
+//!   figure N   regenerate one paper figure/table (fig1..fig12, table1/2)
+//!   figures    regenerate everything into --out (default results/)
+//!   info       runtime/artifact diagnostics
+
+use fedqueue::bound::{BoundParams, MiSource, TwoClusterStudy};
+use fedqueue::coordinator::{run_experiment, ExperimentConfig};
+use fedqueue::figures;
+use fedqueue::queueing::ClosedNetwork;
+use fedqueue::runtime::{BackendKind, Manifest};
+use fedqueue::simulator::{run as sim_run, ServiceDist, ServiceFamily, SimConfig};
+use fedqueue::util::cli::Args;
+use fedqueue::util::table::Series;
+use std::path::Path;
+
+const USAGE: &str = "\
+fedqueue — Queuing dynamics of asynchronous Federated Learning (AISTATS 2024)
+
+USAGE: fedqueue <command> [options]
+
+COMMANDS
+  train     --algo gasync|async|fedbuff --variant tiny|cifar|wide|tinyimg
+            --backend pjrt|native --steps N --clients N --concurrency C
+            --eta F --mu-fast F --optimal-p --seed S --out results/train.csv
+  simulate  --n N --c C --steps N --mu-fast F --n-fast N --p-fast F --seed S
+  bounds    --c C --mu-fast F --n N --n-fast N [--physical-time U]
+  figure    <fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|table1|table2>
+            [--out DIR] [--quick]
+  figures   [--out DIR] [--quick]      regenerate every table/figure
+  info      print artifact + backend diagnostics
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    }
+    let cmd = argv[0].clone();
+    let args = match Args::parse(&argv[1..], &["quick", "optimal-p", "record-tasks"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "simulate" => cmd_simulate(&args),
+        "bounds" => cmd_bounds(&args),
+        "figure" => cmd_figure(&args),
+        "figures" => cmd_figures(&args),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n\n{USAGE}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<(), String> {
+    let algo = args.str_or("algo", "gasync");
+    let mut cfg = ExperimentConfig {
+        variant: args.str_or("variant", "cifar"),
+        backend: args.str_or("backend", "pjrt").parse::<BackendKind>()?,
+        algo: algo.clone(),
+        n_clients: args.usize_or("clients", 100)?,
+        concurrency: args.usize_or("concurrency", 10)?,
+        steps: args.u64_or("steps", 200)?,
+        eta: args.f64_or("eta", 0.05)?,
+        fedbuff_z: args.usize_or("fedbuff-z", 10)?,
+        slow_fraction: args.f64_or("slow-fraction", 0.5)?,
+        mu_fast: args.f64_or("mu-fast", 4.0)?,
+        p_fast: args.get("p-fast").map(|v| v.parse().map_err(|_| "bad --p-fast")).transpose()?,
+        n_train: args.usize_or("n-train", 20_000)?,
+        n_val: args.usize_or("n-val", 2_000)?,
+        classes_per_client: args.usize_or("classes-per-client", 7)?,
+        eval_every: args.u64_or("eval-every", 20)?,
+        seed: args.u64_or("seed", 0)?,
+    };
+    if args.has("optimal-p") {
+        cfg = cfg.with_optimal_p()?;
+        println!(
+            "# optimal p_fast = {:.4e} (uniform would be {:.4e})",
+            cfg.p_fast.unwrap(),
+            1.0 / cfg.n_clients as f64
+        );
+    }
+    let (m_theory, rate) = fedqueue::coordinator::experiment::theory_summary(&cfg)?;
+    println!(
+        "# theory: CS step rate {:.2}/unit-time; mean delay fast {:.1} / slow {:.1} steps",
+        rate,
+        m_theory[..cfg.n_fast()].iter().sum::<f64>() / cfg.n_fast() as f64,
+        m_theory[cfg.n_fast()..].iter().sum::<f64>() / (cfg.n_clients - cfg.n_fast()) as f64
+    );
+    let res = run_experiment(&cfg)?;
+    let mut s = Series::new(&["step", "virtual_time", "train_loss", "val_loss", "val_acc"]);
+    for c in &res.curve {
+        s.push(vec![c.step as f64, c.virtual_time, c.train_loss, c.val_loss, c.val_accuracy]);
+    }
+    println!("{}", s.ascii(50));
+    let out = args.str_or("out", "results/train.csv");
+    s.write_csv(Path::new(&out)).map_err(|e| e.to_string())?;
+    println!(
+        "final: acc {:.4}, val loss {:.4}, τ_max {}, backend {:.1}s / wall {:.1}s → {}",
+        res.final_accuracy, res.final_val_loss, res.tau_max, res.backend_secs, res.wall_secs, out
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<(), String> {
+    let n = args.usize_or("n", 10)?;
+    let c = args.usize_or("c", 1000)?;
+    let steps = args.u64_or("steps", 1_000_000)?;
+    let mu_fast = args.f64_or("mu-fast", 1.2)?;
+    let n_fast = args.usize_or("n-fast", n / 2)?;
+    let p_fast = args.f64_or("p-fast", 1.0 / n as f64)?;
+    let family: ServiceFamily = args.str_or("service", "exp").parse()?;
+    let q = (1.0 - n_fast as f64 * p_fast) / (n - n_fast) as f64;
+    if q <= 0.0 {
+        return Err(format!("p-fast {p_fast} leaves no mass for slow nodes"));
+    }
+    let p: Vec<f64> = (0..n).map(|i| if i < n_fast { p_fast } else { q }).collect();
+    let rates: Vec<f64> = (0..n).map(|i| if i < n_fast { mu_fast } else { 1.0 }).collect();
+    let cfg = SimConfig {
+        seed: args.u64_or("seed", 0)?,
+        ..SimConfig::new(p.clone(), ServiceDist::from_rates(&rates, family), c, steps)
+    };
+    let res = sim_run(cfg)?;
+    let net = ClosedNetwork::new(p, rates)?;
+    let an = net.mi_analysis(c, fedqueue::queueing::MiEstimator::Throughput);
+    println!("node  mean_delay(sim)  m_i(theory)  mean_queue(sim)  E[X_i](theory)");
+    let b = net.buzen(c);
+    for i in 0..n {
+        println!(
+            "{i:>4}  {:>14.1}  {:>11.1}  {:>15.2}  {:>14.2}",
+            res.delay_steps[i].mean(),
+            an.m[i],
+            res.mean_queue[i],
+            b.mean_queue(i, c)
+        );
+    }
+    println!(
+        "τ_max {} | τ_c {:.2} | CS step rate {:.3} (theory {:.3}) | virtual time {:.0}",
+        res.tau_max,
+        res.tau_c,
+        res.step_rate(steps),
+        an.cs_rate,
+        res.total_time
+    );
+    Ok(())
+}
+
+fn cmd_bounds(args: &Args) -> Result<(), String> {
+    let c = args.usize_or("c", 10)?;
+    let n = args.usize_or("n", 100)?;
+    let n_fast = args.usize_or("n-fast", 90)?;
+    let mu_fast = args.f64_or("mu-fast", 8.0)?;
+    let study = TwoClusterStudy {
+        params: BoundParams {
+            a: args.f64_or("a", 100.0)?,
+            b: args.f64_or("b", 20.0)?,
+            l: args.f64_or("l", 1.0)?,
+            c,
+            t: args.u64_or("t", 10_000)?,
+            n,
+        },
+        n_fast,
+        mu_fast,
+        mu_slow: 1.0,
+        source: MiSource::default(),
+    };
+    let (best, uniform) = if let Some(u) = args.get("physical-time") {
+        let u: f64 = u.parse().map_err(|_| "bad --physical-time")?;
+        study.optimize_p_physical(50, u)?
+    } else {
+        study.optimize_p(50)?
+    };
+    println!("uniform : p={:.4e} η={:.3e} bound={:.4}", uniform.p_fast, uniform.eta, uniform.bound);
+    println!(
+        "optimal : p={:.4e} η={:.3e} bound={:.4}  (improvement {:.1}%)",
+        best.p_fast,
+        best.eta,
+        best.bound,
+        100.0 * (uniform.bound - best.bound) / uniform.bound
+    );
+    println!(
+        "delays  : uniform fast/slow {:.1}/{:.1} → optimal {:.1}/{:.1} CS steps",
+        uniform.m_fast, uniform.m_slow, best.m_fast, best.m_slow
+    );
+    let (g_fedbuff, g_async) = study.baseline_bounds()?;
+    println!("baselines: FedBuff {g_fedbuff:.4}, AsyncSGD {g_async:.4}");
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<(), String> {
+    let target = args
+        .positional
+        .first()
+        .ok_or("figure: which one? e.g. `fedqueue figure fig5`")?;
+    let out = args.str_or("out", "results");
+    std::fs::create_dir_all(&out).map_err(|e| e.to_string())?;
+    let summary = figures::run_target(target, Path::new(&out), args.has("quick"))?;
+    println!("{summary}");
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<(), String> {
+    let out = args.str_or("out", "results");
+    std::fs::create_dir_all(&out).map_err(|e| e.to_string())?;
+    let quick = args.has("quick");
+    let mut summaries = Vec::new();
+    for target in figures::ALL.iter().chain(figures::EXTRA.iter()) {
+        println!("=== {target} ===");
+        let t0 = std::time::Instant::now();
+        match figures::run_target(target, Path::new(&out), quick) {
+            Ok(s) => {
+                println!("{s}  [{:.1}s]", t0.elapsed().as_secs_f64());
+                summaries.push(s);
+            }
+            Err(e) => {
+                println!("FAILED: {e}");
+                summaries.push(format!("{target}: FAILED {e}"));
+            }
+        }
+    }
+    let all = summaries.join("\n");
+    std::fs::write(Path::new(&out).join("SUMMARY.txt"), &all).map_err(|e| e.to_string())?;
+    println!("\n=== summary ===\n{all}");
+    Ok(())
+}
+
+fn cmd_info() -> Result<(), String> {
+    let dir = Manifest::default_dir();
+    println!("artifact dir: {}", dir.display());
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            for v in &m.variants {
+                println!(
+                    "  {}: {}→{:?}→{} ({} params, train batch {})",
+                    v.name, v.input_dim, v.hidden, v.classes, v.n_params, v.train_batch
+                );
+            }
+        }
+        Err(e) => println!("  (no artifacts: {e})"),
+    }
+    let client = xla::PjRtClient::cpu().map_err(|e| format!("{e:?}"))?;
+    println!(
+        "PJRT: platform {} ({}), {} device(s)",
+        client.platform_name(),
+        client.platform_version(),
+        client.device_count()
+    );
+    Ok(())
+}

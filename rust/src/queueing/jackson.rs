@@ -1,0 +1,430 @@
+//! Exact stationary analysis of the paper's closed Jackson network (§4).
+//!
+//! The network: `n` single-server FIFO nodes, `C` circulating tasks, routing
+//! probabilities `p_i` (the dispatcher), exponential service rates `μ_i`.
+//! Proposition 2 gives the product-form stationary law
+//! `π_C(x) = H_C^{-1} Π θ_i^{x_i}` with `θ_i = p_i / μ_i`.
+//!
+//! This module computes everything downstream of that law *exactly*:
+//! normalization constants via **Buzen's convolution algorithm** (O(nC)),
+//! marginal queue-length distributions, expected queue lengths, node
+//! utilizations, network throughput (= CS step rate), and the paper's key
+//! delay quantity `m_i` (Prop 3) through the arrival theorem (Thm 11):
+//! an arriving task sees the network in state `π_{C-1}`, so its sojourn is
+//! `E^{C-1}[X_i] + 1` services at rate `μ_i`, during which CS steps accrue
+//! at (at most) the total departure rate.
+//!
+//! Numerical care: θ is rescaled by its maximum before convolution (the
+//! paper does the same — it only changes the normalization constant), so
+//! `g[c]` stays in f64 range even at C = 1000 with extreme speed ratios;
+//! the scale factor re-enters only in the (rate-valued) throughput.
+
+use crate::util::stats::Welford;
+
+#[derive(Clone, Debug)]
+pub struct ClosedNetwork {
+    /// routing probabilities (visit ratios), sum to 1
+    pub p: Vec<f64>,
+    /// exponential service rates
+    pub mu: Vec<f64>,
+}
+
+/// Precomputed Buzen table for one (network, C): g[c] = Σ_{|x|=c} Π θ'^x
+/// with θ' = θ / max θ.
+#[derive(Clone, Debug)]
+pub struct Buzen {
+    /// scaled loads θ'_i = θ_i / θ_max  (max = 1)
+    pub theta: Vec<f64>,
+    /// scale factor s = max_i θ_i
+    pub scale: f64,
+    /// g[c] for populations 0..=C (over ALL nodes)
+    pub g: Vec<f64>,
+}
+
+impl ClosedNetwork {
+    pub fn new(p: Vec<f64>, mu: Vec<f64>) -> Result<Self, String> {
+        if p.len() != mu.len() || p.is_empty() {
+            return Err("p and mu must be equal-length, non-empty".into());
+        }
+        let sum: f64 = p.iter().sum();
+        if (sum - 1.0).abs() > 1e-9 {
+            return Err(format!("routing probabilities sum to {sum}, expected 1"));
+        }
+        if p.iter().any(|&x| x < 0.0) || mu.iter().any(|&m| m <= 0.0) {
+            return Err("p must be >= 0 and mu must be > 0".into());
+        }
+        Ok(ClosedNetwork { p, mu })
+    }
+
+    pub fn n(&self) -> usize {
+        self.p.len()
+    }
+
+    /// θ_i = p_i / μ_i  (unscaled traffic loads).
+    pub fn theta(&self) -> Vec<f64> {
+        self.p.iter().zip(&self.mu).map(|(p, m)| p / m).collect()
+    }
+
+    /// Total service capacity λ = Σ_j μ_j (the paper's λ in Prop 5).
+    pub fn lambda_total(&self) -> f64 {
+        self.mu.iter().sum()
+    }
+
+    /// Buzen convolution up to population C.
+    pub fn buzen(&self, c: usize) -> Buzen {
+        let theta = self.theta();
+        let scale = theta.iter().cloned().fold(f64::MIN, f64::max);
+        let th: Vec<f64> = theta.iter().map(|t| t / scale).collect();
+        let mut g = vec![0.0; c + 1];
+        g[0] = 1.0;
+        for &t in &th {
+            for pop in 1..=c {
+                g[pop] += t * g[pop - 1];
+            }
+        }
+        Buzen { theta: th, scale, g }
+    }
+}
+
+impl Buzen {
+    pub fn population(&self) -> usize {
+        self.g.len() - 1
+    }
+
+    /// P(X_i >= k) at population c:  θ'^k g(c-k)/g(c)   (scale-free).
+    pub fn tail(&self, i: usize, k: usize, c: usize) -> f64 {
+        if k > c {
+            return 0.0;
+        }
+        self.theta[i].powi(k as i32) * self.g[c - k] / self.g[c]
+    }
+
+    /// P(X_i = k) at population c.
+    pub fn pmf(&self, i: usize, k: usize, c: usize) -> f64 {
+        if k > c {
+            return 0.0;
+        }
+        if k == c {
+            return self.theta[i].powi(c as i32) / self.g[c];
+        }
+        let t = self.theta[i];
+        t.powi(k as i32) * (self.g[c - k] - t * self.g[c - k - 1]) / self.g[c]
+    }
+
+    /// E[X_i] at population c: Σ_{k=1..c} P(X_i >= k).
+    pub fn mean_queue(&self, i: usize, c: usize) -> f64 {
+        (1..=c).map(|k| self.tail(i, k, c)).sum()
+    }
+
+    /// Utilization ρ_i = P(X_i > 0) at population c.
+    pub fn utilization(&self, i: usize, c: usize) -> f64 {
+        self.tail(i, 1, c)
+    }
+
+    /// Network throughput Λ(c) = Σ_i λ_i(c) = G(c-1)/G(c) in *unscaled*
+    /// units (this is the CS step rate; visit ratios sum to 1).
+    pub fn throughput(&self, c: usize) -> f64 {
+        assert!(c >= 1);
+        (1.0 / self.scale) * self.g[c - 1] / self.g[c]
+    }
+
+    /// Node-i throughput p_i Λ(c).
+    pub fn node_throughput(&self, net: &ClosedNetwork, i: usize, c: usize) -> f64 {
+        net.p[i] * self.throughput(c)
+    }
+}
+
+/// The three estimators of the paper's delay-in-CS-steps `m_i`
+/// (number of server steps between dispatch to node i and completion).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MiEstimator {
+    /// Prop 5 upper bound: λ_total · E^{C-1}[S_i]
+    UpperBound,
+    /// Throughput refinement: Λ(C) · E^{C-1}[S_i]  (CS steps accrue at the
+    /// stationary step rate rather than the maximal service capacity)
+    Throughput,
+}
+
+#[derive(Clone, Debug)]
+pub struct MiAnalysis {
+    /// E^{C-1}[X_i]: queue length seen on arrival (arrival theorem)
+    pub arrival_queue: Vec<f64>,
+    /// E^{C-1}[S_i] = (E^{C-1}[X_i] + 1) / μ_i: expected sojourn (time)
+    pub sojourn: Vec<f64>,
+    /// m_i estimate (CS steps)
+    pub m: Vec<f64>,
+    /// the stationary CS step rate Λ(C)
+    pub cs_rate: f64,
+}
+
+impl ClosedNetwork {
+    /// Exact-arrival-theorem analysis of `m_i` for all nodes at population C.
+    ///
+    /// The arrival theorem needs the distribution seen by a job arriving at
+    /// node i, which for a closed network is the stationary law of the
+    /// *whole* network at population C-1 (Theorem 11 / MUSTA). The sojourn
+    /// S_i is then (X_i + 1) exponential(μ_i) services (FIFO + memoryless),
+    /// and m_i = E[∫_0^{S_i} Σ_j μ_j 1(X_j>0) ds] is bounded (resp.
+    /// approximated) by λ_total·E[S_i] (resp. Λ(C)·E[S_i]).
+    pub fn mi_analysis(&self, c: usize, est: MiEstimator) -> MiAnalysis {
+        assert!(c >= 1, "need at least one task");
+        let b = self.buzen(c);
+        let n = self.n();
+        let mut arrival_queue = Vec::with_capacity(n);
+        let mut sojourn = Vec::with_capacity(n);
+        let cs_rate = b.throughput(c);
+        let rate = match est {
+            MiEstimator::UpperBound => self.lambda_total(),
+            MiEstimator::Throughput => cs_rate,
+        };
+        let mut m = Vec::with_capacity(n);
+        for i in 0..n {
+            let q = b.mean_queue(i, c - 1);
+            let s = (q + 1.0) / self.mu[i];
+            arrival_queue.push(q);
+            sojourn.push(s);
+            m.push(rate * s);
+        }
+        MiAnalysis { arrival_queue, sojourn, m, cs_rate }
+    }
+
+    /// m_k^T := Σ_i m_i / (n² p_i²)  (the step-size-controlling quantity of
+    /// Theorem 1, in its stationary limit).
+    pub fn m_bar(&self, mi: &[f64]) -> f64 {
+        let n = self.n() as f64;
+        mi.iter()
+            .zip(&self.p)
+            .map(|(m, p)| m / (n * n * p * p))
+            .sum()
+    }
+
+    /// Exact π_C by state enumeration — O(states); for validation only.
+    pub fn enumerate_stationary(&self, c: usize) -> Vec<(Vec<usize>, f64)> {
+        let theta = self.theta();
+        let scale = theta.iter().cloned().fold(f64::MIN, f64::max);
+        let th: Vec<f64> = theta.iter().map(|t| t / scale).collect();
+        let mut states = Vec::new();
+        let mut x = vec![0usize; self.n()];
+        enumerate_comps(c, 0, &mut x, &mut states, &th);
+        let z: f64 = states.iter().map(|(_, w)| *w).sum();
+        states.iter_mut().for_each(|(_, w)| *w /= z);
+        states
+    }
+}
+
+fn enumerate_comps(
+    rem: usize,
+    i: usize,
+    x: &mut Vec<usize>,
+    out: &mut Vec<(Vec<usize>, f64)>,
+    th: &[f64],
+) {
+    if i == x.len() - 1 {
+        x[i] = rem;
+        let w: f64 = x.iter().zip(th).map(|(&k, t)| t.powi(k as i32)).product();
+        out.push((x.clone(), w));
+        return;
+    }
+    for k in 0..=rem {
+        x[i] = k;
+        enumerate_comps(rem - k, i + 1, x, out, th);
+    }
+}
+
+/// Summarize a set of per-node values into (fast cluster, slow cluster)
+/// means given the cluster boundary — convenience for 2-cluster studies.
+pub fn cluster_means(values: &[f64], n_fast: usize) -> (f64, f64) {
+    let mut fast = Welford::new();
+    let mut slow = Welford::new();
+    for (i, &v) in values.iter().enumerate() {
+        if i < n_fast {
+            fast.push(v);
+        } else {
+            slow.push(v);
+        }
+    }
+    (fast.mean(), slow.mean())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform_net(n: usize, mu: Vec<f64>) -> ClosedNetwork {
+        ClosedNetwork::new(vec![1.0 / n as f64; n], mu).unwrap()
+    }
+
+    #[test]
+    fn rejects_invalid_networks() {
+        assert!(ClosedNetwork::new(vec![0.5, 0.6], vec![1.0, 1.0]).is_err());
+        assert!(ClosedNetwork::new(vec![1.0], vec![0.0]).is_err());
+        assert!(ClosedNetwork::new(vec![], vec![]).is_err());
+        assert!(ClosedNetwork::new(vec![0.5, 0.5], vec![1.0]).is_err());
+        assert!(ClosedNetwork::new(vec![1.1, -0.1], vec![1.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn buzen_matches_enumeration_small() {
+        let net = ClosedNetwork::new(vec![0.3, 0.25, 0.45], vec![1.0, 2.0, 0.7]).unwrap();
+        let c = 6;
+        let b = net.buzen(c);
+        let states = net.enumerate_stationary(c);
+        for i in 0..3 {
+            for k in 0..=c {
+                let exact: f64 = states
+                    .iter()
+                    .filter(|(x, _)| x[i] == k)
+                    .map(|(_, w)| *w)
+                    .sum();
+                let got = b.pmf(i, k, c);
+                assert!(
+                    (exact - got).abs() < 1e-10,
+                    "node {i} k={k}: exact {exact} vs buzen {got}"
+                );
+            }
+            let exact_mean: f64 = states.iter().map(|(x, w)| x[i] as f64 * w).sum();
+            assert!((b.mean_queue(i, c) - exact_mean).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn queue_lengths_sum_to_population() {
+        let net = uniform_net(5, vec![1.0, 1.0, 2.0, 0.5, 3.0]);
+        for &c in &[1usize, 3, 10, 50] {
+            let b = net.buzen(c);
+            let total: f64 = (0..5).map(|i| b.mean_queue(i, c)).sum();
+            assert!((total - c as f64).abs() < 1e-8, "C={c}: total {total}");
+        }
+    }
+
+    #[test]
+    fn pmf_normalizes() {
+        let net = uniform_net(4, vec![2.0, 1.0, 1.0, 0.25]);
+        let c = 12;
+        let b = net.buzen(c);
+        for i in 0..4 {
+            let total: f64 = (0..=c).map(|k| b.pmf(i, k, c)).sum();
+            assert!((total - 1.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn single_node_holds_everything() {
+        let net = ClosedNetwork::new(vec![1.0], vec![3.0]).unwrap();
+        let b = net.buzen(7);
+        assert!((b.mean_queue(0, 7) - 7.0).abs() < 1e-12);
+        assert!((b.utilization(0, 7) - 1.0).abs() < 1e-12);
+        // throughput of a single always-busy node is its service rate
+        assert!((b.throughput(7) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn symmetric_network_is_balanced() {
+        let net = uniform_net(4, vec![1.5; 4]);
+        let b = net.buzen(8);
+        let q0 = b.mean_queue(0, 8);
+        for i in 1..4 {
+            assert!((b.mean_queue(i, 8) - q0).abs() < 1e-12);
+        }
+        assert!((q0 - 2.0).abs() < 1e-12); // C/n by symmetry
+    }
+
+    #[test]
+    fn throughput_saturates_at_bottleneck() {
+        // node 1 is a severe bottleneck: as C grows, Λ → μ_bottleneck / p_b
+        // capped by bottleneck: λ_1 = p_1 Λ <= μ_1 → Λ <= μ_1/p_1 = 0.2/0.5
+        let net = ClosedNetwork::new(vec![0.5, 0.5], vec![10.0, 0.2]).unwrap();
+        let b = net.buzen(200);
+        let lam = b.throughput(200);
+        assert!((lam - 0.4).abs() < 1e-6, "Λ={lam}");
+    }
+
+    #[test]
+    fn throughput_scale_invariance() {
+        // identical network expressed with different absolute θ scale must
+        // produce identical distributions and the same physical throughput
+        let a = ClosedNetwork::new(vec![0.5, 0.5], vec![1.0, 2.0]).unwrap();
+        let ba = a.buzen(10);
+        // tail probabilities are scale-free by construction
+        assert!(ba.tail(0, 3, 10) > 0.0);
+        let thr = ba.throughput(10);
+        assert!(thr > 0.0 && thr < a.lambda_total());
+    }
+
+    #[test]
+    fn mi_upper_bound_dominates_throughput_estimate() {
+        let net = uniform_net(10, vec![1.2, 1.2, 1.2, 1.2, 1.2, 1.0, 1.0, 1.0, 1.0, 1.0]);
+        let ub = net.mi_analysis(50, MiEstimator::UpperBound);
+        let th = net.mi_analysis(50, MiEstimator::Throughput);
+        for i in 0..10 {
+            assert!(ub.m[i] >= th.m[i]);
+            assert!(th.m[i] > 0.0);
+        }
+    }
+
+    #[test]
+    fn arrival_theorem_uses_population_c_minus_1() {
+        let net = uniform_net(2, vec![1.0, 1.0]);
+        let an = net.mi_analysis(1, MiEstimator::UpperBound);
+        // with C=1, an arriving task sees an empty network: E^{0}[X_i] = 0
+        assert!((an.arrival_queue[0] - 0.0).abs() < 1e-12);
+        assert!((an.sojourn[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slow_nodes_have_longer_queues_and_delays() {
+        // half fast (μ=2), half slow (μ=1), uniform routing
+        let mu: Vec<f64> = (0..10).map(|i| if i < 5 { 2.0 } else { 1.0 }).collect();
+        let net = uniform_net(10, mu);
+        let b = net.buzen(100);
+        assert!(b.mean_queue(0, 100) < b.mean_queue(9, 100));
+        let an = net.mi_analysis(100, MiEstimator::Throughput);
+        assert!(an.m[0] < an.m[9]);
+    }
+
+    #[test]
+    fn fig5_configuration_delay_scale() {
+        // Paper App F: n=10, μ_f=1.2, μ_s=1, C=1000 uniform ⇒ empirical
+        // delays ≈ 59 (fast) / 1938 (slow); the Prop-5 upper bound evaluates
+        // to ≈ 55 / 2145 (the paper's own closed form gives 45.8 / 2145 —
+        // it drops the "+1" sojourn term and a (μ_f+μ_s)/2μ_s factor in the
+        // "≈195n" shorthand).  Check we land in that envelope.
+        let mu: Vec<f64> = (0..10).map(|i| if i < 5 { 1.2 } else { 1.0 }).collect();
+        let net = uniform_net(10, mu);
+        let an = net.mi_analysis(1000, MiEstimator::UpperBound);
+        let (mf, ms) = cluster_means(&an.m, 5);
+        assert!((40.0..70.0).contains(&mf), "fast delay bound {mf}, want ≈50");
+        assert!((1900.0..2300.0).contains(&ms), "slow delay bound {ms}, want ≈2000");
+    }
+
+    #[test]
+    fn m_bar_uniform_formula() {
+        // uniform p: m̄ = Σ m_i / n²p_i² = Σ m_i
+        let net = uniform_net(4, vec![1.0; 4]);
+        let mi = vec![2.0, 3.0, 4.0, 5.0];
+        assert!((net.m_bar(&mi) - 14.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn buzen_insensitive_to_node_order() {
+        // convolution order must not matter
+        let a = ClosedNetwork::new(vec![0.2, 0.3, 0.5], vec![1.0, 0.5, 2.0]).unwrap();
+        let b = ClosedNetwork::new(vec![0.5, 0.3, 0.2], vec![2.0, 0.5, 1.0]).unwrap();
+        let ba = a.buzen(15);
+        let bb = b.buzen(15);
+        for c in 0..=15 {
+            assert!((ba.g[c] - bb.g[c]).abs() < 1e-9 * ba.g[c].max(1.0));
+        }
+        assert!((ba.throughput(15) - bb.throughput(15)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn extreme_heterogeneity_stays_finite() {
+        let net = ClosedNetwork::new(vec![0.5, 0.5], vec![1000.0, 0.001]).unwrap();
+        let b = net.buzen(1000);
+        let q = b.mean_queue(1, 1000);
+        assert!(q.is_finite() && q > 999.0);
+        let an = net.mi_analysis(1000, MiEstimator::Throughput);
+        assert!(an.m.iter().all(|m| m.is_finite()));
+    }
+}

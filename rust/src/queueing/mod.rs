@@ -1,0 +1,8 @@
+//! Closed Jackson network theory (paper §4) — exact product-form analysis
+//! (`jackson`) and heavy-traffic scaling closed forms (`scaling`).
+
+pub mod jackson;
+pub mod scaling;
+
+pub use jackson::{ClosedNetwork, MiAnalysis, MiEstimator};
+pub use scaling::{gamma_ratio, ThreeCluster, TwoCluster};

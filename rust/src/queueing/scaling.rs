@@ -1,0 +1,353 @@
+//! Saturation scaling regimes (paper §4 "Scaling regime", Props 4/5,
+//! App F 2-cluster and App G 3-cluster closed forms).
+//!
+//! These give the *closed-form* delay/queue-length estimates that Generalized
+//! AsyncSGD uses to pick sampling probabilities without running a simulation:
+//! under heavy traffic (C ≫ n) the saturated-node queue lengths concentrate
+//! via Van Kreveld et al. (2021), with the Γ-ratio correction
+//! `Γ(c) = P(n_f+2, c)/P(n_f+1, c)` of Erlang CDFs.
+
+use crate::util::stats::erlang_cdf;
+
+/// Γ(c) = P(F+2, c) / P(F+1, c) — the conditional-mean correction of
+/// Proposition 4 (`F` = number of fast nodes).  Γ → 1 as c → ∞.
+pub fn gamma_ratio(n_fast: usize, c: f64) -> f64 {
+    if c <= 0.0 {
+        return 0.0;
+    }
+    let num = erlang_cdf(n_fast as u64 + 2, c);
+    let den = erlang_cdf(n_fast as u64 + 1, c);
+    if den <= 0.0 {
+        // deep in the tail both CDFs vanish; the ratio limit is
+        // c/(F+2) → use the leading-order term ratio instead.
+        return c / (n_fast as f64 + 2.0);
+    }
+    num / den
+}
+
+/// A 2-cluster network specification (fast/slow), the paper's workhorse.
+#[derive(Clone, Copy, Debug)]
+pub struct TwoCluster {
+    pub n: usize,
+    pub n_fast: usize,
+    pub mu_fast: f64,
+    pub mu_slow: f64,
+    /// probability of selecting EACH fast node
+    pub p_fast: f64,
+    /// total number of circulating tasks
+    pub c: usize,
+}
+
+impl TwoCluster {
+    pub fn uniform(n: usize, n_fast: usize, mu_fast: f64, mu_slow: f64, c: usize) -> Self {
+        TwoCluster { n, n_fast, mu_fast, mu_slow, p_fast: 1.0 / n as f64, c }
+    }
+
+    /// probability of selecting EACH slow node:
+    /// q = (1 - n_f p) / (n - n_f)
+    pub fn p_slow(&self) -> f64 {
+        (1.0 - self.n_fast as f64 * self.p_fast) / (self.n - self.n_fast) as f64
+    }
+
+    /// Validity: all probabilities positive and the *slow* cluster must be
+    /// the saturated one (θ_s > θ_f) for the scaling regime to apply.
+    pub fn valid(&self) -> Result<(), String> {
+        if self.n_fast == 0 || self.n_fast >= self.n {
+            return Err("need 0 < n_fast < n".into());
+        }
+        let q = self.p_slow();
+        if self.p_fast <= 0.0 || q <= 0.0 {
+            return Err(format!("probabilities out of range: p={}, q={q}", self.p_fast));
+        }
+        if self.mu_fast <= 0.0 || self.mu_slow <= 0.0 {
+            return Err("rates must be positive".into());
+        }
+        Ok(())
+    }
+
+    pub fn theta_fast(&self) -> f64 {
+        self.p_fast / self.mu_fast
+    }
+
+    pub fn theta_slow(&self) -> f64 {
+        self.p_slow() / self.mu_slow
+    }
+
+    /// γ_f = θ_s / θ_f  (scaled intensity of the non-saturated cluster).
+    pub fn gamma_fast(&self) -> f64 {
+        self.theta_slow() / self.theta_fast()
+    }
+
+    /// c_f β = (γ_f − 1)(C + 1): the argument of the Γ-ratio under the
+    /// identification γ_f = 1 + c_f ι^{α−1}, β ι^{1−α} = C + 1.
+    pub fn cf_beta(&self) -> f64 {
+        (self.gamma_fast() - 1.0) * (self.c as f64 + 1.0)
+    }
+
+    /// λ = Σ_i μ_i.
+    pub fn lambda_total(&self) -> f64 {
+        self.n_fast as f64 * self.mu_fast + (self.n - self.n_fast) as f64 * self.mu_slow
+    }
+
+    /// Scaling-limit expected queue lengths (Prop 4):
+    ///   E[X_fast] ≈ Γ(c_f β)/(γ_f − 1)
+    ///   E[X_slow] ≈ (C − n_f E[X_fast]) / (n − n_f)
+    /// Returns (fast, slow).
+    pub fn queue_lengths(&self) -> (f64, f64) {
+        let g = self.gamma_fast();
+        let xf = if g > 1.0 {
+            gamma_ratio(self.n_fast, self.cf_beta()) / (g - 1.0)
+        } else {
+            // no separation: fall back to even split
+            self.c as f64 / self.n as f64
+        };
+        let xf = xf.min(self.c as f64 / self.n_fast as f64);
+        let xs = (self.c as f64 - self.n_fast as f64 * xf) / (self.n - self.n_fast) as f64;
+        (xf, xs)
+    }
+
+    /// Prop 5 delay bounds in CS steps, (fast, slow):
+    ///   m_i ≤ (λ/μ_i)(E[X_i] + 1).
+    pub fn delay_bounds(&self) -> (f64, f64) {
+        let lam = self.lambda_total();
+        let (xf, xs) = self.queue_lengths();
+        (lam / self.mu_fast * (xf + 1.0), lam / self.mu_slow * (xs + 1.0))
+    }
+
+    /// App F closed forms for the uniform, n_f = n/2, Γ≈1 special case:
+    ///   m_f ≤ n(μ_f+μ_s) / (2 μ_f (μ_f/μ_s − 1))
+    ///   m_s ≤ (2C/n − 1/(μ_f/μ_s − 1)) · n(μ_f+μ_s) / (2 μ_s)
+    pub fn delay_closed_form_uniform(&self) -> (f64, f64) {
+        let n = self.n as f64;
+        let (mf, ms) = (self.mu_fast, self.mu_slow);
+        let ratio = mf / ms - 1.0;
+        let fast = n * (mf + ms) / (2.0 * mf * ratio);
+        let slow = (2.0 * self.c as f64 / n - 1.0 / ratio) * n * (mf + ms) / (2.0 * ms);
+        (fast, slow)
+    }
+
+    /// Per-node probability vector [p_fast × n_f, p_slow × (n−n_f)].
+    pub fn p_vec(&self) -> Vec<f64> {
+        let q = self.p_slow();
+        (0..self.n)
+            .map(|i| if i < self.n_fast { self.p_fast } else { q })
+            .collect()
+    }
+
+    /// Per-node service-rate vector.
+    pub fn mu_vec(&self) -> Vec<f64> {
+        (0..self.n)
+            .map(|i| if i < self.n_fast { self.mu_fast } else { self.mu_slow })
+            .collect()
+    }
+}
+
+/// 3-cluster saturation regime (App G): fast queues degenerate to 0,
+/// medium saturates at rate c_m, slow carries the rest.
+#[derive(Clone, Copy, Debug)]
+pub struct ThreeCluster {
+    pub n: usize,
+    pub n_fast: usize,
+    pub n_medium: usize, // cumulative boundary: nodes [n_fast, n_medium)
+    pub mu_fast: f64,
+    pub mu_medium: f64,
+    pub mu_slow: f64,
+    pub c: usize,
+}
+
+impl ThreeCluster {
+    pub fn sizes(&self) -> (usize, usize, usize) {
+        (self.n_fast, self.n_medium - self.n_fast, self.n - self.n_medium)
+    }
+
+    /// P(X_fast > 0) in the degenerate regime: uniform routing forces equal
+    /// node throughputs λ_i = Λ/n; slow nodes saturate (ρ_s ≈ 1) so
+    /// Λ ≈ n μ_s and ρ_f = Λ/(n μ_f) = μ_s/μ_f.
+    pub fn p_fast_busy(&self) -> f64 {
+        (self.mu_slow / self.mu_fast).min(1.0)
+    }
+
+    /// Effective λ of App G: fast nodes contribute only when busy.
+    pub fn lambda_effective(&self) -> f64 {
+        let (nf, nm, ns) = self.sizes();
+        nf as f64 * self.p_fast_busy() * self.mu_fast
+            + nm as f64 * self.mu_medium
+            + ns as f64 * self.mu_slow
+    }
+
+    /// Closed-form delay estimates (fast, medium, slow) in CS steps:
+    ///   m_f ≤ λ/μ_f · P(X_f>0 correction folded in λ)
+    ///   m_m ≤ (λ/μ_m) / (μ_m/μ_s − 1)
+    ///   m_s ≤ (λ/μ_s)(3C/n − 1/(μ_m/μ_s − 1))
+    pub fn delay_estimates(&self) -> (f64, f64, f64) {
+        let lam = self.lambda_effective();
+        let sep = self.mu_medium / self.mu_slow - 1.0;
+        let m_f = lam / self.mu_fast;
+        let m_m = lam / self.mu_medium / sep;
+        let m_s = lam / self.mu_slow
+            * (3.0 * self.c as f64 / self.n as f64 - 1.0 / sep);
+        (m_f, m_m, m_s)
+    }
+
+    /// Expected queue lengths (fast, medium, slow) in the scaling limit
+    /// (Prop 12): fast → 0, medium → Γ/(γ_m −1), slow absorbs the rest.
+    pub fn queue_lengths(&self) -> (f64, f64, f64) {
+        let (nf, nm, ns) = self.sizes();
+        let gamma_m = self.mu_medium / self.mu_slow; // θ_s/θ_m under uniform p
+        let cm_beta = (gamma_m - 1.0) * (self.c as f64 + 1.0);
+        let xm = gamma_ratio(nf + nm, cm_beta) / (gamma_m - 1.0);
+        let xs = (self.c as f64 - nm as f64 * xm) / ns as f64;
+        (0.0, xm, xs)
+    }
+
+    pub fn mu_vec(&self) -> Vec<f64> {
+        (0..self.n)
+            .map(|i| {
+                if i < self.n_fast {
+                    self.mu_fast
+                } else if i < self.n_medium {
+                    self.mu_medium
+                } else {
+                    self.mu_slow
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gamma_ratio_limits() {
+        // Γ → 1 for large c
+        assert!((gamma_ratio(5, 500.0) - 1.0).abs() < 1e-6);
+        // Γ ≤ 1 always (P(k+1,c) ≤ P(k,c); equality only at fp saturation)
+        for &c in &[0.5, 2.0, 10.0, 50.0] {
+            let g = gamma_ratio(3, c);
+            assert!(g > 0.0 && g <= 1.0, "c={c} g={g}");
+        }
+        assert!(gamma_ratio(3, 2.0) < 1.0);
+        // small-c limit ~ c/(F+2)
+        let g = gamma_ratio(2, 0.01);
+        assert!((g - 0.01 / 4.0).abs() < 1e-3, "g={g}");
+        assert_eq!(gamma_ratio(2, 0.0), 0.0);
+    }
+
+    #[test]
+    fn gamma_ratio_deep_tail_does_not_nan() {
+        let g = gamma_ratio(90, 1e-8);
+        assert!(g.is_finite() && g >= 0.0);
+    }
+
+    fn paper_fig5_cluster() -> TwoCluster {
+        TwoCluster::uniform(10, 5, 1.2, 1.0, 1000)
+    }
+
+    #[test]
+    fn two_cluster_validity() {
+        assert!(paper_fig5_cluster().valid().is_ok());
+        let mut bad = paper_fig5_cluster();
+        bad.p_fast = 0.21; // q would go negative (n=10, n_f=5)
+        assert!(bad.valid().is_err());
+        bad = paper_fig5_cluster();
+        bad.n_fast = 10;
+        assert!(bad.valid().is_err());
+    }
+
+    #[test]
+    fn p_slow_complement() {
+        let tc = TwoCluster { p_fast: 0.0073, ..paper_fig5_cluster() };
+        let q = tc.p_slow();
+        assert!((5.0 * 0.0073 + 5.0 * q - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn app_f_worked_example_numbers() {
+        // Paper App F: n=10, μ_f=1.2, μ_s=1, C=1000, uniform:
+        //   m_f ≲ n/(μ_f/μ_s − 1) = 5n = 50
+        //   m_s ≲ (2C/n − 5) n ≈ 195n = 1950
+        let tc = paper_fig5_cluster();
+        let (mf, ms) = tc.delay_closed_form_uniform();
+        // closed form: fast = 10*2.2/(2*1.2*0.2) = 22/0.48 ≈ 45.8  (≈ 5n)
+        assert!((mf - 45.83).abs() < 0.1, "mf={mf}");
+        // slow = (200 − 5) * 10*2.2/2 = 195 * 11 = 2145 (≈ 195n·(1+μ_f/μ_s)/2)
+        assert!((ms - 2145.0).abs() < 1.0, "ms={ms}");
+    }
+
+    #[test]
+    fn scaling_queue_lengths_conserve_population() {
+        let tc = paper_fig5_cluster();
+        let (xf, xs) = tc.queue_lengths();
+        let total = 5.0 * xf + 5.0 * xs;
+        assert!((total - 1000.0).abs() < 1e-9);
+        // fast queues short, slow queues long
+        assert!(xf < 10.0, "xf={xf}");
+        assert!(xs > 190.0, "xs={xs}");
+    }
+
+    #[test]
+    fn two_cluster_delay_bounds_match_closed_form_regime() {
+        let tc = paper_fig5_cluster();
+        let (bf, bs) = tc.delay_bounds();
+        let (cf, cs) = tc.delay_closed_form_uniform();
+        // Γ ≈ 1 here; the closed form additionally drops the "+1" sojourn
+        // term (X_f ≈ 5 ⇒ ~20% gap on the fast side), so allow 25%.
+        assert!((bf / cf - 1.0).abs() < 0.25, "bf={bf} cf={cf}");
+        assert!((bs / cs - 1.0).abs() < 0.05, "bs={bs} cs={cs}");
+    }
+
+    #[test]
+    fn lower_p_fast_reduces_fast_delay() {
+        // the paper's core effect: sampling fast nodes LESS reduces delays
+        let uni = paper_fig5_cluster();
+        let opt = TwoCluster { p_fast: 0.0075, ..uni };
+        let (du, _) = uni.delay_bounds();
+        let (do_, _) = opt.delay_bounds();
+        assert!(
+            do_ < du / 3.0,
+            "optimal sampling should slash fast delay: {do_} vs {du}"
+        );
+    }
+
+    #[test]
+    fn three_cluster_app_g_numbers() {
+        // Paper App G: n=9, thirds, μ=(10, 1.2, 1), C=1000:
+        //   P(X_f>0) = 0.1, λ ≈ 9.6, m_f ≈ λ/μ_f ≈ 1, m_m ≈ 5λ/1.2 ≈ 40,
+        //   m_s ≈ λ(3C/n − 5) ≈ 9.6 * (333.3 − 5) ≈ 3152
+        let t3 = ThreeCluster {
+            n: 9,
+            n_fast: 3,
+            n_medium: 6,
+            mu_fast: 10.0,
+            mu_medium: 1.2,
+            mu_slow: 1.0,
+            c: 1000,
+        };
+        assert!((t3.p_fast_busy() - 0.1).abs() < 1e-12);
+        let lam = t3.lambda_effective();
+        assert!((lam - 9.6).abs() < 1e-9, "λ={lam}");
+        let (mf, mm, ms) = t3.delay_estimates();
+        assert!((mf - 0.96).abs() < 0.01, "mf={mf}");
+        assert!((mm - 40.0).abs() < 0.5, "mm={mm}");
+        assert!((ms - 3152.0).abs() < 20.0, "ms={ms}");
+    }
+
+    #[test]
+    fn three_cluster_population_conservation() {
+        let t3 = ThreeCluster {
+            n: 9,
+            n_fast: 3,
+            n_medium: 6,
+            mu_fast: 10.0,
+            mu_medium: 1.2,
+            mu_slow: 1.0,
+            c: 1000,
+        };
+        let (xf, xm, xs) = t3.queue_lengths();
+        assert_eq!(xf, 0.0);
+        assert!((3.0 * xm + 3.0 * xs - 1000.0).abs() < 1.0);
+        assert!(xm < xs);
+    }
+}

@@ -1,0 +1,208 @@
+//! Artifact manifest: metadata for the AOT-compiled HLO modules produced by
+//! `make artifacts` (python/compile/aot.py).  The Rust runtime trusts the
+//! manifest for all I/O shapes — the HLO itself is validated at compile
+//! time by XLA.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct VariantMeta {
+    pub name: String,
+    pub input_dim: usize,
+    pub hidden: Vec<usize>,
+    pub classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub n_params: usize,
+    /// (name, shape) in artifact parameter order: w0, b0, w1, b1, ...
+    pub params: Vec<(String, Vec<usize>)>,
+    pub train_file: PathBuf,
+    pub train_outputs: usize,
+    pub eval_file: PathBuf,
+    pub eval_outputs: usize,
+}
+
+impl VariantMeta {
+    pub fn param_shapes(&self) -> Vec<Vec<usize>> {
+        self.params.iter().map(|(_, s)| s.clone()).collect()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: Vec<VariantMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {}: {e} (run `make artifacts`)", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest, String> {
+        let j = Json::parse(text).map_err(|e| format!("manifest.json: {e}"))?;
+        let fmt = j.get("format").and_then(|f| f.as_str()).unwrap_or("");
+        if fmt != "hlo-text" {
+            return Err(format!("unsupported artifact format '{fmt}'"));
+        }
+        let vmap = j
+            .get("variants")
+            .and_then(|v| v.as_obj())
+            .ok_or("manifest missing 'variants'")?;
+        let mut variants = Vec::new();
+        for (name, v) in vmap {
+            let get_usize = |key: &str| -> Result<usize, String> {
+                v.get(key)
+                    .and_then(|x| x.as_usize())
+                    .ok_or_else(|| format!("variant {name}: missing {key}"))
+            };
+            let params_json = v
+                .get("params")
+                .and_then(|p| p.as_arr())
+                .ok_or_else(|| format!("variant {name}: missing params"))?;
+            let mut params = Vec::new();
+            for p in params_json {
+                let pname = p
+                    .get("name")
+                    .and_then(|x| x.as_str())
+                    .ok_or("param missing name")?
+                    .to_string();
+                let shape: Vec<usize> = p
+                    .get("shape")
+                    .and_then(|s| s.as_arr())
+                    .ok_or("param missing shape")?
+                    .iter()
+                    .filter_map(|d| d.as_usize())
+                    .collect();
+                params.push((pname, shape));
+            }
+            let section = |key: &str| -> Result<(PathBuf, usize), String> {
+                let s = v.get(key).ok_or_else(|| format!("variant {name}: missing {key}"))?;
+                let file = s
+                    .get("file")
+                    .and_then(|f| f.as_str())
+                    .ok_or_else(|| format!("{key} missing file"))?;
+                let outputs = s
+                    .get("outputs")
+                    .and_then(|o| o.as_usize())
+                    .ok_or_else(|| format!("{key} missing outputs"))?;
+                Ok((dir.join(file), outputs))
+            };
+            let (train_file, train_outputs) = section("train")?;
+            let (eval_file, eval_outputs) = section("eval")?;
+            let hidden = v
+                .get("hidden")
+                .and_then(|h| h.as_arr())
+                .map(|a| a.iter().filter_map(|d| d.as_usize()).collect())
+                .unwrap_or_default();
+            variants.push(VariantMeta {
+                name: name.clone(),
+                input_dim: get_usize("input_dim")?,
+                hidden,
+                classes: get_usize("classes")?,
+                train_batch: get_usize("train_batch")?,
+                eval_batch: get_usize("eval_batch")?,
+                n_params: get_usize("n_params")?,
+                params,
+                train_file,
+                train_outputs,
+                eval_file,
+                eval_outputs,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), variants })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantMeta, String> {
+        self.variants
+            .iter()
+            .find(|v| v.name == name)
+            .ok_or_else(|| {
+                format!(
+                    "variant '{name}' not in manifest (have: {})",
+                    self.variants
+                        .iter()
+                        .map(|v| v.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    /// Default artifact dir: $FEDQUEUE_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("FEDQUEUE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "variants": {
+        "tiny": {
+          "name": "tiny", "input_dim": 48, "hidden": [32], "classes": 10,
+          "train_batch": 16, "eval_batch": 32, "n_params": 1898,
+          "params": [
+            {"name": "w0", "shape": [48, 32]}, {"name": "b0", "shape": [32]},
+            {"name": "w1", "shape": [32, 10]}, {"name": "b1", "shape": [10]}
+          ],
+          "train": {"file": "tiny_train.hlo.txt", "outputs": 5},
+          "eval": {"file": "tiny_eval.hlo.txt", "outputs": 2}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        let v = m.variant("tiny").unwrap();
+        assert_eq!(v.input_dim, 48);
+        assert_eq!(v.params.len(), 4);
+        assert_eq!(v.params[0].1, vec![48, 32]);
+        assert_eq!(v.train_outputs, 5);
+        assert!(v.train_file.ends_with("tiny_train.hlo.txt"));
+        assert_eq!(v.param_shapes()[3], vec![10]);
+    }
+
+    #[test]
+    fn missing_variant_is_helpful() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        let err = m.variant("resnet50").unwrap_err();
+        assert!(err.contains("tiny"), "{err}");
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let err = Manifest::parse(Path::new("/tmp"), r#"{"format":"proto","variants":{}}"#)
+            .unwrap_err();
+        assert!(err.contains("format"));
+    }
+
+    #[test]
+    fn rejects_malformed_sections() {
+        let bad = r#"{"format":"hlo-text","variants":{"x":{"input_dim":3}}}"#;
+        assert!(Manifest::parse(Path::new("/tmp"), bad).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        // integration smoke vs `make artifacts` output (skip if absent)
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            let v = m.variant("tiny").unwrap();
+            assert_eq!(v.input_dim, 48);
+            assert!(v.train_file.exists());
+            assert!(v.eval_file.exists());
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! The gradient-compute backend abstraction shared by the coordinator.
+//!
+//! Two implementations:
+//! * [`crate::runtime::pjrt::PjrtBackend`] — the production path: executes
+//!   the AOT-compiled HLO (JAX L2 + Pallas L1) on the PJRT CPU client.
+//! * [`crate::runtime::native::NativeBackend`] — pure-Rust MLP fwd/bwd with
+//!   identical semantics; used for fast multi-seed sweeps and as the
+//!   numerical cross-check of the PJRT path.
+
+use crate::data::{Batch, EvalBatches};
+use crate::fl::ModelState;
+
+/// Model geometry a backend exposes (mirrors the artifact manifest).
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub input_dim: usize,
+    pub hidden: Vec<usize>,
+    pub classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+}
+
+impl ModelSpec {
+    pub fn layer_dims(&self) -> Vec<(usize, usize)> {
+        let mut dims = vec![self.input_dim];
+        dims.extend(&self.hidden);
+        dims.push(self.classes);
+        dims.windows(2).map(|w| (w[0], w[1])).collect()
+    }
+
+    /// Parameter shapes in artifact order (w0, b0, w1, b1, ...).
+    pub fn param_shapes(&self) -> Vec<Vec<usize>> {
+        let mut out = Vec::new();
+        for (din, dout) in self.layer_dims() {
+            out.push(vec![din, dout]);
+            out.push(vec![dout]);
+        }
+        out
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.param_shapes().iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+
+    pub fn init_model(&self, seed: u64) -> ModelState {
+        ModelState::init_he(&self.param_shapes(), seed)
+    }
+}
+
+/// Evaluation summary over a validation set.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalSummary {
+    pub mean_loss: f64,
+    pub accuracy: f64,
+    pub n: usize,
+}
+
+pub trait Backend {
+    fn spec(&self) -> &ModelSpec;
+
+    /// One stochastic-gradient computation: (mean loss, grads).
+    /// `batch.batch` must equal `spec().train_batch`.
+    fn train_step(&mut self, model: &ModelState, batch: &Batch) -> Result<(f64, Vec<Vec<f32>>), String>;
+
+    /// Sum of losses and number of correct predictions over the first
+    /// `valid` rows of the batch (batch must be eval_batch-sized).
+    fn eval_batch(
+        &mut self,
+        model: &ModelState,
+        batch: &Batch,
+        valid: usize,
+    ) -> Result<(f64, f64), String>;
+
+    /// Full-set evaluation.
+    fn evaluate(&mut self, model: &ModelState, ev: &EvalBatches) -> Result<EvalSummary, String> {
+        let mut loss_sum = 0.0;
+        let mut correct = 0.0;
+        let mut n = 0usize;
+        for (batch, valid) in &ev.batches {
+            let (l, c) = self.eval_batch(model, batch, *valid)?;
+            loss_sum += l;
+            correct += c;
+            n += valid;
+        }
+        Ok(EvalSummary { mean_loss: loss_sum / n as f64, accuracy: correct / n as f64, n })
+    }
+
+    /// Human-readable backend name for logs.
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_shapes() {
+        let s = ModelSpec {
+            input_dim: 3072,
+            hidden: vec![512, 256],
+            classes: 10,
+            train_batch: 128,
+            eval_batch: 250,
+        };
+        assert_eq!(s.layer_dims(), vec![(3072, 512), (512, 256), (256, 10)]);
+        assert_eq!(s.param_shapes().len(), 6);
+        assert_eq!(s.n_params(), 3072 * 512 + 512 + 512 * 256 + 256 + 256 * 10 + 10);
+        let m = s.init_model(1);
+        assert_eq!(m.n_params(), s.n_params());
+    }
+}

@@ -1,0 +1,63 @@
+//! Runtime layer: loads AOT-compiled HLO artifacts (L2 JAX model + L1
+//! Pallas kernels) and executes them via the PJRT C API (`xla` crate) —
+//! plus a pure-Rust `native` backend with identical semantics for fast
+//! sweeps and numerical cross-checks.  Python never runs here.
+
+pub mod artifact;
+pub mod backend;
+pub mod native;
+pub mod pjrt;
+
+pub use artifact::{Manifest, VariantMeta};
+pub use backend::{Backend, EvalSummary, ModelSpec};
+pub use native::NativeBackend;
+pub use pjrt::PjrtBackend;
+
+/// Backend selector used by CLI/config.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    Pjrt,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => Err(format!("unknown backend '{other}' (native|pjrt)")),
+        }
+    }
+}
+
+/// Construct a backend.  For PJRT the `variant` must exist in the artifact
+/// manifest; for native the spec is taken from the manifest when available
+/// (keeping shapes identical across backends) or from the given fallback.
+pub fn make_backend(
+    kind: BackendKind,
+    variant: &str,
+    fallback: Option<ModelSpec>,
+) -> Result<Box<dyn Backend>, String> {
+    let dir = Manifest::default_dir();
+    match kind {
+        BackendKind::Pjrt => Ok(Box::new(PjrtBackend::load(&dir, variant)?)),
+        BackendKind::Native => {
+            let spec = match Manifest::load(&dir) {
+                Ok(m) => {
+                    let v = m.variant(variant)?;
+                    ModelSpec {
+                        input_dim: v.input_dim,
+                        hidden: v.hidden.clone(),
+                        classes: v.classes,
+                        train_batch: v.train_batch,
+                        eval_batch: v.eval_batch,
+                    }
+                }
+                Err(e) => fallback.ok_or(format!("no manifest and no fallback spec: {e}"))?,
+            };
+            Ok(Box::new(NativeBackend::new(spec)))
+        }
+    }
+}

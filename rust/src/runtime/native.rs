@@ -1,0 +1,382 @@
+//! Native backend: pure-Rust MLP forward/backward with EXACTLY the L2
+//! model's semantics (dense → bias → ReLU on hidden layers, linear head,
+//! mean softmax cross-entropy; gradients of the mean loss).
+//!
+//! Used for (a) fast multi-seed experiment sweeps, (b) numerically
+//! cross-checking the PJRT path (see rust/tests/integration_runtime.rs),
+//! and (c) CI-style tests that must not depend on artifacts being built.
+//!
+//! The matmuls use i-k-j loop order (row-major streaming) — see the §Perf
+//! log in EXPERIMENTS.md for the optimization history.
+
+use super::backend::{Backend, ModelSpec};
+use crate::data::Batch;
+use crate::fl::ModelState;
+
+pub struct NativeBackend {
+    spec: ModelSpec,
+    /// scratch: activations per layer (input + hidden outputs + logits)
+    acts: Vec<Vec<f32>>,
+}
+
+impl NativeBackend {
+    pub fn new(spec: ModelSpec) -> NativeBackend {
+        NativeBackend { spec, acts: Vec::new() }
+    }
+
+    /// Convenience spec used across tests: 48 → 32 → 10, batch 16.
+    pub fn tiny() -> NativeBackend {
+        NativeBackend::new(ModelSpec {
+            input_dim: 48,
+            hidden: vec![32],
+            classes: 10,
+            train_batch: 16,
+            eval_batch: 32,
+        })
+    }
+
+    /// out[b, n] (+)= x[b, k] * w[k, n]   (accumulating matmul).
+    ///
+    /// Loop order is k-outer / b-inner so each 4·n-byte weight row is read
+    /// from DRAM exactly ONCE per call (the weight matrix is the only
+    /// operand larger than L2).  The b-inner axpy keeps `out` (b×n) hot in
+    /// L2 and auto-vectorizes.  §Perf: this order is ~2× faster than the
+    /// classic ikj order on the cifar shapes (memory-bound; see
+    /// EXPERIMENTS.md).
+    fn matmul_acc(x: &[f32], w: &[f32], out: &mut [f32], b: usize, k: usize, n: usize) {
+        debug_assert_eq!(x.len(), b * k);
+        debug_assert_eq!(w.len(), k * n);
+        debug_assert_eq!(out.len(), b * n);
+        for ki in 0..k {
+            let wrow = &w[ki * n..(ki + 1) * n];
+            for bi in 0..b {
+                let xv = x[bi * k + ki];
+                if xv == 0.0 {
+                    continue; // ReLU sparsity
+                }
+                let orow = &mut out[bi * n..(bi + 1) * n];
+                for (ov, &wv) in orow.iter_mut().zip(wrow) {
+                    *ov += xv * wv;
+                }
+            }
+        }
+    }
+
+    /// dx[b, k] = dy[b, n] * w[k, n]^T — k-outer so each w row streams once.
+    fn matmul_nt(dy: &[f32], w: &[f32], dx: &mut [f32], b: usize, k: usize, n: usize) {
+        for ki in 0..k {
+            let wrow = &w[ki * n..(ki + 1) * n];
+            for bi in 0..b {
+                let dyrow = &dy[bi * n..(bi + 1) * n];
+                let mut acc = 0.0f32;
+                for (dv, wv) in dyrow.iter().zip(wrow) {
+                    acc += dv * wv;
+                }
+                dx[bi * k + ki] = acc;
+            }
+        }
+    }
+
+    /// dw[k, n] += x[b, k]^T * dy[b, n] — k-outer: each dw row is built in
+    /// registers/L1 across the whole batch, then written once.
+    fn matmul_tn(x: &[f32], dy: &[f32], dw: &mut [f32], b: usize, k: usize, n: usize) {
+        for ki in 0..k {
+            let dwrow = &mut dw[ki * n..(ki + 1) * n];
+            for bi in 0..b {
+                let xv = x[bi * k + ki];
+                if xv == 0.0 {
+                    continue;
+                }
+                let dyrow = &dy[bi * n..(bi + 1) * n];
+                for (dwv, &dv) in dwrow.iter_mut().zip(dyrow) {
+                    *dwv += xv * dv;
+                }
+            }
+        }
+    }
+
+    /// Forward pass through all layers; fills self.acts (acts[0] = input,
+    /// acts[L] = logits).  Hidden activations are post-ReLU.
+    fn forward(&mut self, model: &ModelState, x: &[f32], b: usize) {
+        let dims = self.spec.layer_dims();
+        self.acts.clear();
+        self.acts.push(x.to_vec());
+        for (li, &(din, dout)) in dims.iter().enumerate() {
+            let w = &model.tensors[2 * li];
+            let bias = &model.tensors[2 * li + 1];
+            let mut out = vec![0.0f32; b * dout];
+            // bias init then accumulate
+            for bi in 0..b {
+                out[bi * dout..(bi + 1) * dout].copy_from_slice(bias);
+            }
+            Self::matmul_acc(&self.acts[li], w, &mut out, b, din, dout);
+            if li + 1 < dims.len() {
+                for v in out.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            self.acts.push(out);
+        }
+    }
+
+    /// (per-row losses, probs) from logits.
+    fn softmax_xent(logits: &[f32], onehot: &[f32], b: usize, c: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut loss = vec![0.0f32; b];
+        let mut probs = vec![0.0f32; b * c];
+        for bi in 0..b {
+            let z = &logits[bi * c..(bi + 1) * c];
+            let y = &onehot[bi * c..(bi + 1) * c];
+            let zmax = z.iter().cloned().fold(f32::MIN, f32::max);
+            let mut sez = 0.0f64;
+            for &v in z {
+                sez += ((v - zmax) as f64).exp();
+            }
+            let lse = (sez.ln() + zmax as f64) as f32;
+            let mut dot = 0.0f32;
+            for (zv, yv) in z.iter().zip(y) {
+                dot += zv * yv;
+            }
+            loss[bi] = lse - dot;
+            for (pi, &zv) in z.iter().enumerate() {
+                probs[bi * c + pi] = (((zv - lse) as f64).exp()) as f32;
+            }
+        }
+        (loss, probs)
+    }
+}
+
+impl Backend for NativeBackend {
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn train_step(
+        &mut self,
+        model: &ModelState,
+        batch: &Batch,
+    ) -> Result<(f64, Vec<Vec<f32>>), String> {
+        let b = batch.batch;
+        if b != self.spec.train_batch {
+            return Err(format!(
+                "batch {b} != train_batch {}",
+                self.spec.train_batch
+            ));
+        }
+        let dims = self.spec.layer_dims();
+        let c = self.spec.classes;
+        self.forward(model, &batch.x, b);
+        let logits = self.acts.last().unwrap();
+        let (loss_rows, probs) = Self::softmax_xent(logits, &batch.onehot, b, c);
+        let mean_loss =
+            loss_rows.iter().map(|&v| v as f64).sum::<f64>() / b as f64;
+        // backward
+        let mut grads: Vec<Vec<f32>> = model.tensors.iter().map(|t| vec![0.0; t.len()]).collect();
+        // dlogits = (probs − onehot)/B
+        let mut dz: Vec<f32> = probs
+            .iter()
+            .zip(&batch.onehot)
+            .map(|(p, y)| (p - y) / b as f32)
+            .collect();
+        for li in (0..dims.len()).rev() {
+            let (din, dout) = dims[li];
+            let h_in = &self.acts[li];
+            // db
+            for bi in 0..b {
+                for (dbv, dzv) in grads[2 * li + 1]
+                    .iter_mut()
+                    .zip(&dz[bi * dout..(bi + 1) * dout])
+                {
+                    *dbv += dzv;
+                }
+            }
+            // dW = h_in^T dz
+            {
+                let dw = &mut grads[2 * li];
+                Self::matmul_tn(h_in, &dz, dw, b, din, dout);
+            }
+            if li > 0 {
+                // dh = dz W^T, masked by ReLU (h_in > 0)
+                let w = &model.tensors[2 * li];
+                let mut dh = vec![0.0f32; b * din];
+                Self::matmul_nt(&dz, w, &mut dh, b, din, dout);
+                for (dhv, &hv) in dh.iter_mut().zip(h_in) {
+                    if hv <= 0.0 {
+                        *dhv = 0.0;
+                    }
+                }
+                dz = dh;
+            }
+        }
+        Ok((mean_loss, grads))
+    }
+
+    fn eval_batch(
+        &mut self,
+        model: &ModelState,
+        batch: &Batch,
+        valid: usize,
+    ) -> Result<(f64, f64), String> {
+        let b = batch.batch;
+        let c = self.spec.classes;
+        self.forward(model, &batch.x, b);
+        let logits = self.acts.last().unwrap();
+        let (loss_rows, _) = Self::softmax_xent(logits, &batch.onehot, b, c);
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        for bi in 0..valid.min(b) {
+            loss_sum += loss_rows[bi] as f64;
+            let z = &logits[bi * c..(bi + 1) * c];
+            let pred = z
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            let label = batch.onehot[bi * c..(bi + 1) * c]
+                .iter()
+                .position(|&v| v == 1.0)
+                .unwrap_or(0);
+            if pred == label {
+                correct += 1.0;
+            }
+        }
+        Ok((loss_sum, correct))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, EvalBatches, SynthSpec};
+    use crate::util::rng::Rng;
+
+    fn batch_of(spec: &ModelSpec, seed: u64) -> Batch {
+        let mut rng = Rng::new(seed);
+        let b = spec.train_batch;
+        let x: Vec<f32> = (0..b * spec.input_dim).map(|_| rng.normal() as f32).collect();
+        let mut onehot = vec![0.0f32; b * spec.classes];
+        for bi in 0..b {
+            onehot[bi * spec.classes + rng.usize_below(spec.classes)] = 1.0;
+        }
+        Batch { x, onehot, batch: b }
+    }
+
+    #[test]
+    fn loss_decreases_under_sgd() {
+        let mut be = NativeBackend::tiny();
+        let mut model = be.spec().init_model(3);
+        let batch = batch_of(&be.spec().clone(), 4);
+        let (l0, _) = be.train_step(&model, &batch).unwrap();
+        for _ in 0..30 {
+            let (_, g) = be.train_step(&model, &batch).unwrap();
+            model.apply_update(&g, 0.1);
+        }
+        let (l1, _) = be.train_step(&model, &batch).unwrap();
+        assert!(l1 < l0 * 0.7, "loss {l0} -> {l1}");
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut be = NativeBackend::new(ModelSpec {
+            input_dim: 6,
+            hidden: vec![5],
+            classes: 3,
+            train_batch: 4,
+            eval_batch: 4,
+        });
+        let model = be.spec().init_model(7);
+        let batch = batch_of(&be.spec().clone(), 8);
+        let (_, grads) = be.train_step(&model, &batch).unwrap();
+        let eps = 1e-3f32;
+        let mut checked = 0;
+        for ti in 0..model.tensors.len() {
+            for wi in (0..model.tensors[ti].len()).step_by(5) {
+                let mut mp = model.clone();
+                mp.tensors[ti][wi] += eps;
+                let (lp, _) = be.train_step(&mp, &batch).unwrap();
+                let mut mm = model.clone();
+                mm.tensors[ti][wi] -= eps;
+                let (lm, _) = be.train_step(&mm, &batch).unwrap();
+                let fd = (lp - lm) / (2.0 * eps as f64);
+                let an = grads[ti][wi] as f64;
+                assert!(
+                    (fd - an).abs() < 2e-3 * (1.0 + fd.abs().max(an.abs())),
+                    "tensor {ti} idx {wi}: fd {fd} vs analytic {an}"
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked > 10);
+    }
+
+    #[test]
+    fn batch_size_validated() {
+        let mut be = NativeBackend::tiny();
+        let model = be.spec().init_model(1);
+        let mut batch = batch_of(&be.spec().clone(), 1);
+        batch.batch = 99;
+        assert!(be.train_step(&model, &batch).is_err());
+    }
+
+    #[test]
+    fn eval_counts_valid_rows_only() {
+        let mut be = NativeBackend::tiny();
+        let model = be.spec().init_model(2);
+        let spec = be.spec().clone();
+        let mut rng = Rng::new(5);
+        let b = spec.eval_batch;
+        let x: Vec<f32> = (0..b * spec.input_dim).map(|_| rng.normal() as f32).collect();
+        let mut onehot = vec![0.0f32; b * spec.classes];
+        for bi in 0..b {
+            onehot[bi * spec.classes] = 1.0;
+        }
+        let batch = Batch { x, onehot, batch: b };
+        let (l_all, c_all) = be.eval_batch(&model, &batch, b).unwrap();
+        let (l_half, c_half) = be.eval_batch(&model, &batch, b / 2).unwrap();
+        assert!(l_half < l_all);
+        assert!(c_half <= c_all);
+    }
+
+    #[test]
+    fn training_on_synthetic_data_beats_chance() {
+        // end-to-end learnability on the synthetic task (native only)
+        let spec = SynthSpec::tiny_test();
+        let train = generate(&spec, 1500, 11);
+        let val = generate(&spec, 400, 12);
+        let mspec = ModelSpec {
+            input_dim: spec.dim(),
+            hidden: vec![32],
+            classes: spec.classes,
+            train_batch: 32,
+            eval_batch: 50,
+        };
+        let mut be = NativeBackend::new(mspec.clone());
+        let mut model = mspec.init_model(13);
+        let mut loader = crate::data::ClientLoader::new(
+            std::sync::Arc::new(train),
+            (0..1500u32).collect(),
+            32,
+            false,
+            14,
+        )
+        .unwrap();
+        for _ in 0..150 {
+            let batch = loader.next_batch();
+            let (_, g) = be.train_step(&model, &batch).unwrap();
+            model.apply_update(&g, 0.05);
+        }
+        let ev = EvalBatches::new(&val, 50);
+        let summary = be.evaluate(&model, &ev).unwrap();
+        assert!(
+            summary.accuracy > 0.5,
+            "val accuracy {} should beat 0.1 chance comfortably",
+            summary.accuracy
+        );
+    }
+}

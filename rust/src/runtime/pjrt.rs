@@ -1,0 +1,240 @@
+//! PJRT backend — the production request path.
+//!
+//! Loads the HLO-text artifacts produced by `make artifacts`, compiles them
+//! once on the PJRT CPU client (`xla` crate), and serves `train_step` /
+//! `eval_batch` executions.  HLO *text* is the interchange format (jax ≥0.5
+//! serialized protos are rejected by xla_extension 0.5.1 — see
+//! python/compile/aot.py).
+//!
+//! Outputs were lowered with `return_tuple=True`, so each execution returns
+//! a single tuple literal that is decomposed into (loss, grads...) /
+//! (loss_sum, n_correct).
+
+use super::artifact::{Manifest, VariantMeta};
+use super::backend::{Backend, ModelSpec};
+use crate::data::Batch;
+use crate::fl::ModelState;
+use std::path::Path;
+
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    train_exe: xla::PjRtLoadedExecutable,
+    eval_exe: xla::PjRtLoadedExecutable,
+    spec: ModelSpec,
+    meta: VariantMeta,
+    /// cumulative executions (diagnostics)
+    pub train_calls: u64,
+    pub eval_calls: u64,
+}
+
+fn err<E: std::fmt::Debug>(ctx: &str) -> impl FnOnce(E) -> String + '_ {
+    move |e| format!("{ctx}: {e:?}")
+}
+
+impl PjrtBackend {
+    /// Load a variant from the artifact directory.
+    pub fn load(dir: &Path, variant: &str) -> Result<PjrtBackend, String> {
+        let manifest = Manifest::load(dir)?;
+        let meta = manifest.variant(variant)?.clone();
+        let client = xla::PjRtClient::cpu().map_err(err("PjRtClient::cpu"))?;
+        let train_exe = Self::compile(&client, &meta.train_file)?;
+        let eval_exe = Self::compile(&client, &meta.eval_file)?;
+        let spec = ModelSpec {
+            input_dim: meta.input_dim,
+            hidden: meta.hidden.clone(),
+            classes: meta.classes,
+            train_batch: meta.train_batch,
+            eval_batch: meta.eval_batch,
+        };
+        Ok(PjrtBackend { client, train_exe, eval_exe, spec, meta, train_calls: 0, eval_calls: 0 })
+    }
+
+    fn compile(
+        client: &xla::PjRtClient,
+        path: &Path,
+    ) -> Result<xla::PjRtLoadedExecutable, String> {
+        if !path.exists() {
+            return Err(format!(
+                "artifact {} missing — run `make artifacts`",
+                path.display()
+            ));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or("non-utf8 artifact path")?,
+        )
+        .map_err(err("parse HLO text"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client.compile(&comp).map_err(err("XLA compile"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn variant_name(&self) -> &str {
+        &self.meta.name
+    }
+
+    /// Build the input DEVICE BUFFER list: params..., x, onehot.
+    ///
+    /// We upload host data through `buffer_from_host_buffer` and run via
+    /// `execute_b` instead of the literal-taking `execute`: the crate's C
+    /// shim for `execute` leaks every input device buffer it creates
+    /// (`BufferFromHostLiteral(...).release()` with no matching free —
+    /// ~13.6 MB/step at cifar size, found via RSS profiling; see
+    /// EXPERIMENTS.md §Perf).  Buffers created here are owned by Rust
+    /// `PjRtBuffer` values and freed on drop.  This also skips one
+    /// host-side Literal copy per tensor.
+    fn inputs(
+        &self,
+        model: &ModelState,
+        batch: &Batch,
+        batch_size: usize,
+    ) -> Result<Vec<xla::PjRtBuffer>, String> {
+        if model.tensors.len() != self.meta.params.len() {
+            return Err(format!(
+                "model has {} tensors, artifact expects {}",
+                model.tensors.len(),
+                self.meta.params.len()
+            ));
+        }
+        let mut bufs = Vec::with_capacity(model.tensors.len() + 2);
+        for (t, (name, shape)) in model.tensors.iter().zip(&self.meta.params) {
+            let numel: usize = shape.iter().product();
+            if t.len() != numel {
+                return Err(format!("tensor {name}: {} elements, want {numel}", t.len()));
+            }
+            bufs.push(
+                self.client
+                    .buffer_from_host_buffer::<f32>(t, shape, None)
+                    .map_err(err("upload param"))?,
+            );
+        }
+        let expect_x = batch_size * self.spec.input_dim;
+        if batch.x.len() != expect_x {
+            return Err(format!("x has {} elems, want {expect_x}", batch.x.len()));
+        }
+        bufs.push(
+            self.client
+                .buffer_from_host_buffer::<f32>(
+                    &batch.x,
+                    &[batch_size, self.spec.input_dim],
+                    None,
+                )
+                .map_err(err("upload x"))?,
+        );
+        bufs.push(
+            self.client
+                .buffer_from_host_buffer::<f32>(
+                    &batch.onehot,
+                    &[batch_size, self.spec.classes],
+                    None,
+                )
+                .map_err(err("upload onehot"))?,
+        );
+        Ok(bufs)
+    }
+
+    fn run(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::PjRtBuffer],
+        n_outputs: usize,
+    ) -> Result<Vec<xla::Literal>, String> {
+        let bufs = exe.execute_b::<&xla::PjRtBuffer>(
+            &inputs.iter().collect::<Vec<_>>(),
+        )
+        .map_err(err("execute"))?;
+        let lit = bufs[0][0].to_literal_sync().map_err(err("to_literal"))?;
+        let outs = lit.to_tuple().map_err(err("untuple"))?;
+        if outs.len() != n_outputs {
+            return Err(format!("expected {n_outputs} outputs, got {}", outs.len()));
+        }
+        Ok(outs)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn train_step(
+        &mut self,
+        model: &ModelState,
+        batch: &Batch,
+    ) -> Result<(f64, Vec<Vec<f32>>), String> {
+        if batch.batch != self.spec.train_batch {
+            return Err(format!(
+                "batch {} != train_batch {}",
+                batch.batch, self.spec.train_batch
+            ));
+        }
+        let inputs = self.inputs(model, batch, self.spec.train_batch)?;
+        let outs = Self::run(&self.train_exe, &inputs, self.meta.train_outputs)?;
+        self.train_calls += 1;
+        let loss = outs[0]
+            .get_first_element::<f32>()
+            .map_err(err("loss scalar"))? as f64;
+        let mut grads = Vec::with_capacity(outs.len() - 1);
+        for o in &outs[1..] {
+            grads.push(o.to_vec::<f32>().map_err(err("grad tensor"))?);
+        }
+        Ok((loss, grads))
+    }
+
+    fn eval_batch(
+        &mut self,
+        model: &ModelState,
+        batch: &Batch,
+        valid: usize,
+    ) -> Result<(f64, f64), String> {
+        if batch.batch != self.spec.eval_batch {
+            return Err(format!(
+                "batch {} != eval_batch {}",
+                batch.batch, self.spec.eval_batch
+            ));
+        }
+        // The artifact reduces over the WHOLE batch; padded rows repeat the
+        // last valid sample.  For exact per-`valid` numbers we evaluate the
+        // padded batch and correct by evaluating padding's contribution —
+        // cheaper: when valid == batch there is nothing to correct; the
+        // loaders only pad the final batch.
+        let inputs = self.inputs(model, batch, self.spec.eval_batch)?;
+        let outs = Self::run(&self.eval_exe, &inputs, self.meta.eval_outputs)?;
+        self.eval_calls += 1;
+        let loss_sum = outs[0]
+            .get_first_element::<f32>()
+            .map_err(err("loss_sum"))? as f64;
+        let correct = outs[1]
+            .get_first_element::<f32>()
+            .map_err(err("n_correct"))? as f64;
+        if valid == batch.batch {
+            return Ok((loss_sum, correct));
+        }
+        // padded tail: all padded rows are copies of the last valid row —
+        // compute its contribution once and subtract (batch.batch - valid)×.
+        let pad = (batch.batch - valid) as f64;
+        let c = self.spec.classes;
+        let d = self.spec.input_dim;
+        let last = valid - 1;
+        // rerun a batch filled with the last row to get its per-row values
+        let mut x1 = Vec::with_capacity(batch.batch * d);
+        let mut y1 = Vec::with_capacity(batch.batch * c);
+        for _ in 0..batch.batch {
+            x1.extend_from_slice(&batch.x[last * d..(last + 1) * d]);
+            y1.extend_from_slice(&batch.onehot[last * c..(last + 1) * c]);
+        }
+        let b1 = Batch { x: x1, onehot: y1, batch: batch.batch };
+        let inputs1 = self.inputs(model, &b1, self.spec.eval_batch)?;
+        let outs1 = Self::run(&self.eval_exe, &inputs1, self.meta.eval_outputs)?;
+        let row_loss = outs1[0].get_first_element::<f32>().map_err(err("pad loss"))? as f64
+            / batch.batch as f64;
+        let row_correct = outs1[1].get_first_element::<f32>().map_err(err("pad corr"))? as f64
+            / batch.batch as f64;
+        Ok((loss_sum - pad * row_loss, correct - pad * row_correct))
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

@@ -1,0 +1,10 @@
+//! Event-driven closed-network simulator — the dynamics substrate under the
+//! paper's figures (1, 5, 10–12) and the DL experiment driver.
+
+pub mod network;
+pub mod service;
+
+pub use network::{
+    run, transient_mi, InitPlacement, Network, SimConfig, SimResult, StepOutcome, TaskRecord,
+};
+pub use service::{ServiceDist, ServiceFamily};

@@ -1,0 +1,651 @@
+//! Event-driven simulation of the paper's closed queueing network.
+//!
+//! Exactly Algorithm 1's task-flow skeleton without the learning: `C` tasks
+//! circulate over `n` single-server FIFO nodes; a task completion is one
+//! **CS step** `k`; the dispatcher immediately routes a fresh task to
+//! `K_{k+1} ~ p`.  The simulator tracks, per task, the dispatch step and
+//! completion step — their difference is the paper's delay `M_{i,k}^T` in
+//! server steps — plus queue-length and activity statistics used by both
+//! the figures (1, 5, 10–12) and the AsyncSGD/FedBuff comparators
+//! (τ_max, τ_c, τ_sum of Table 1).
+//!
+//! The same engine drives the DL experiments: `coordinator::driver` replays
+//! the event stream and attaches real gradient computations to completions.
+
+use super::service::ServiceDist;
+use crate::util::rng::{AliasTable, Rng};
+use crate::util::stats::Welford;
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Initial placement of the C tasks (the paper's `S_0`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum InitPlacement {
+    /// one task on each node; requires C == n ("full concurrency")
+    OnePerNode,
+    /// route each initial task independently via p
+    Routed,
+    /// node (j mod n) gets task j — deterministic, spreads evenly
+    RoundRobin,
+}
+
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub p: Vec<f64>,
+    pub service: Vec<ServiceDist>,
+    pub concurrency: usize,
+    pub steps: u64,
+    pub seed: u64,
+    pub init: InitPlacement,
+    /// keep every (node, dispatch_step, complete_step) record
+    pub record_tasks: bool,
+    /// sample queue lengths every `queue_sample_every` steps (0 = never)
+    pub queue_sample_every: u64,
+}
+
+impl SimConfig {
+    pub fn new(p: Vec<f64>, service: Vec<ServiceDist>, concurrency: usize, steps: u64) -> Self {
+        SimConfig {
+            p,
+            service,
+            concurrency,
+            steps,
+            seed: 0,
+            init: InitPlacement::Routed,
+            record_tasks: false,
+            queue_sample_every: 0,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.p.len() != self.service.len() || self.p.is_empty() {
+            return Err("p/service length mismatch".into());
+        }
+        if self.concurrency == 0 {
+            return Err("concurrency C must be >= 1".into());
+        }
+        if self.init == InitPlacement::OnePerNode && self.concurrency != self.p.len() {
+            return Err(format!(
+                "OnePerNode needs C == n (got C={} n={})",
+                self.concurrency,
+                self.p.len()
+            ));
+        }
+        let sum: f64 = self.p.iter().sum();
+        if (sum - 1.0).abs() > 1e-9 {
+            return Err(format!("p sums to {sum}"));
+        }
+        Ok(())
+    }
+}
+
+/// One completed-task record.
+#[derive(Clone, Copy, Debug)]
+pub struct TaskRecord {
+    pub node: u32,
+    pub dispatch_step: u64,
+    pub complete_step: u64,
+    pub dispatch_time: f64,
+    pub complete_time: f64,
+}
+
+impl TaskRecord {
+    /// Delay in CS steps (the paper's M).
+    pub fn delay_steps(&self) -> u64 {
+        self.complete_step - self.dispatch_step
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Task {
+    dispatch_step: u64,
+    dispatch_time: f64,
+}
+
+/// Completion event in the virtual-time heap.
+#[derive(Clone, Copy, Debug)]
+struct Event {
+    time: f64,
+    seq: u64,
+    node: u32,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed for min-heap; ties broken by seq for determinism
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Aggregated results of one simulation run.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    /// per-node delay statistics (CS steps)
+    pub delay_steps: Vec<Welford>,
+    /// per-node delay statistics (virtual time)
+    pub delay_time: Vec<Welford>,
+    /// per-node completion counts (= J_k frequencies)
+    pub completions: Vec<u64>,
+    /// per-node dispatch counts (= K_{k+1} frequencies)
+    pub dispatches: Vec<u64>,
+    /// τ_max: maximum observed delay in steps
+    pub tau_max: u64,
+    /// τ_c: average number of busy nodes at step times
+    pub tau_c: f64,
+    /// τ_sum per node: total delay-in-steps of its completed tasks
+    pub tau_sum: Vec<f64>,
+    /// total virtual time elapsed over `steps` CS steps
+    pub total_time: f64,
+    /// optional full task records
+    pub tasks: Vec<TaskRecord>,
+    /// optional queue-length samples: (step, X_1..X_n)
+    pub queue_samples: Vec<(u64, Vec<u32>)>,
+    /// time-WEIGHTED average queue length per node (matches the stationary
+    /// product form; event-time sampling would be biased — departures do
+    /// not see time averages in a closed network)
+    pub mean_queue: Vec<f64>,
+}
+
+impl SimResult {
+    /// Average delay (steps) over a node index range — cluster summary.
+    pub fn cluster_delay(&self, range: std::ops::Range<usize>) -> f64 {
+        let mut w = Welford::new();
+        for i in range {
+            if self.delay_steps[i].count() > 0 {
+                // weight clusters by tasks, merging Welfords
+                w.merge(&self.delay_steps[i]);
+            }
+        }
+        w.mean()
+    }
+
+    /// Empirical m_i: mean delay in steps per node.
+    pub fn m_empirical(&self) -> Vec<f64> {
+        self.delay_steps.iter().map(|w| w.mean()).collect()
+    }
+
+    /// CS step *rate* (steps per unit virtual time).
+    pub fn step_rate(&self, steps: u64) -> f64 {
+        steps as f64 / self.total_time
+    }
+}
+
+/// The simulator engine.  Reusable: `run` consumes a config and returns the
+/// aggregate; `Network::new` + `step_until` give fine-grained control (used
+/// by the coordinator driver).
+pub struct Network {
+    pub cfg: SimConfig,
+    rng: Rng,
+    alias: AliasTable,
+    queues: Vec<VecDeque<Task>>,
+    heap: BinaryHeap<Event>,
+    seq: u64,
+    pub now: f64,
+    pub step: u64,
+    busy_count: usize,
+}
+
+/// What happened at one CS step (completion + routing of a fresh task).
+#[derive(Clone, Copy, Debug)]
+pub struct StepOutcome {
+    /// node J_k that completed
+    pub completed_node: u32,
+    /// completed task's dispatch step (the paper's I_k)
+    pub dispatch_step: u64,
+    /// node K_{k+1} that received the new task
+    pub next_node: u32,
+    /// virtual time of this step
+    pub time: f64,
+    /// full record for the completed task
+    pub record: TaskRecord,
+}
+
+impl Network {
+    pub fn new(cfg: SimConfig) -> Result<Network, String> {
+        cfg.validate()?;
+        let alias = AliasTable::new(&cfg.p)?;
+        let mut rng = Rng::new(cfg.seed).derive(0x51_3A_77);
+        let n = cfg.p.len();
+        let mut net = Network {
+            queues: vec![VecDeque::new(); n],
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0.0,
+            step: 0,
+            busy_count: 0,
+            alias,
+            cfg,
+            rng: Rng::new(0),
+        };
+        // initial placement S_0
+        let placements: Vec<usize> = match net.cfg.init {
+            InitPlacement::OnePerNode => (0..n).collect(),
+            InitPlacement::RoundRobin => (0..net.cfg.concurrency).map(|j| j % n).collect(),
+            InitPlacement::Routed => (0..net.cfg.concurrency)
+                .map(|_| net.alias.sample(&mut rng))
+                .collect(),
+        };
+        net.rng = rng;
+        for node in placements {
+            net.arrive(node as u32, 0, 0.0);
+        }
+        Ok(net)
+    }
+
+    fn arrive(&mut self, node: u32, dispatch_step: u64, t: f64) {
+        let q = &mut self.queues[node as usize];
+        q.push_back(Task { dispatch_step, dispatch_time: t });
+        if q.len() == 1 {
+            self.busy_count += 1;
+            self.schedule_service(node, t);
+        }
+    }
+
+    fn schedule_service(&mut self, node: u32, t: f64) {
+        let dur = self.cfg.service[node as usize].sample(&mut self.rng);
+        self.seq += 1;
+        self.heap.push(Event { time: t + dur, seq: self.seq, node });
+    }
+
+    /// Number of busy nodes right now (for τ_c).
+    pub fn busy_nodes(&self) -> usize {
+        self.busy_count
+    }
+
+    pub fn queue_len(&self, i: usize) -> usize {
+        self.queues[i].len()
+    }
+
+    /// Advance one CS step: pop the next completion, route a replacement.
+    /// Returns None when the heap is empty (cannot happen with C >= 1).
+    pub fn advance(&mut self) -> Option<StepOutcome> {
+        let ev = self.heap.pop()?;
+        self.now = ev.time;
+        let node = ev.node;
+        let task = self.queues[node as usize]
+            .pop_front()
+            .expect("completion event for empty queue");
+        if self.queues[node as usize].is_empty() {
+            self.busy_count -= 1;
+        } else {
+            self.schedule_service(node, self.now);
+        }
+        let record = TaskRecord {
+            node,
+            dispatch_step: task.dispatch_step,
+            complete_step: self.step,
+            dispatch_time: task.dispatch_time,
+            complete_time: self.now,
+        };
+        // dispatcher: select K_{k+1} and send the new model
+        let next = self.alias.sample(&mut self.rng) as u32;
+        let next_dispatch_step = self.step + 1;
+        self.arrive(next, next_dispatch_step, self.now);
+        let outcome = StepOutcome {
+            completed_node: node,
+            dispatch_step: task.dispatch_step,
+            next_node: next,
+            time: self.now,
+            record,
+        };
+        self.step += 1;
+        Some(outcome)
+    }
+
+    /// Total tasks currently in the network (must equal C always).
+    pub fn population(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+}
+
+/// Run a full simulation per the config.
+pub fn run(cfg: SimConfig) -> Result<SimResult, String> {
+    let n = cfg.p.len();
+    let steps = cfg.steps;
+    let record_tasks = cfg.record_tasks;
+    let sample_every = cfg.queue_sample_every;
+    let mut net = Network::new(cfg)?;
+    let mut res = SimResult {
+        delay_steps: vec![Welford::new(); n],
+        delay_time: vec![Welford::new(); n],
+        completions: vec![0; n],
+        dispatches: vec![0; n],
+        tau_max: 0,
+        tau_c: 0.0,
+        tau_sum: vec![0.0; n],
+        total_time: 0.0,
+        tasks: Vec::new(),
+        queue_samples: Vec::new(),
+        mean_queue: vec![0.0; n],
+    };
+    let mut busy_sum = 0u64;
+    let mut last_t = 0.0f64;
+    // queue state over [last_t, now) — updated lazily for time-weighting
+    let mut q_state: Vec<f64> = net.queues.iter().map(|q| q.len() as f64).collect();
+    for k in 0..steps {
+        let out = net.advance().ok_or("network drained")?;
+        let dt = out.time - last_t;
+        for (qi, acc) in res.mean_queue.iter_mut().enumerate() {
+            *acc += q_state[qi] * dt;
+        }
+        for (qi, q) in net.queues.iter().enumerate() {
+            q_state[qi] = q.len() as f64;
+        }
+        last_t = out.time;
+        let i = out.completed_node as usize;
+        let d = out.record.delay_steps();
+        res.delay_steps[i].push(d as f64);
+        res.delay_time[i].push(out.record.complete_time - out.record.dispatch_time);
+        res.completions[i] += 1;
+        res.dispatches[out.next_node as usize] += 1;
+        res.tau_sum[i] += d as f64;
+        res.tau_max = res.tau_max.max(d);
+        busy_sum += net.busy_nodes() as u64;
+        if record_tasks {
+            res.tasks.push(out.record);
+        }
+        if sample_every > 0 && k % sample_every == 0 {
+            res.queue_samples
+                .push((k, net.queues.iter().map(|q| q.len() as u32).collect()));
+        }
+    }
+    res.tau_c = busy_sum as f64 / steps as f64;
+    res.total_time = net.now;
+    for q in res.mean_queue.iter_mut() {
+        *q /= net.now.max(f64::MIN_POSITIVE);
+    }
+    debug_assert_eq!(net.population(), net.cfg.concurrency);
+    Ok(res)
+}
+
+/// Transient estimation of m_{i,k}^T (Fig 1): average, over `reps`
+/// replications, of the delay of the task dispatched at step k *to node i*
+/// (conditional on that routing; unconditional steps are skipped).
+/// Returns (k, mean delay, count) for k in 0..steps.
+pub fn transient_mi(
+    base: &SimConfig,
+    node: usize,
+    reps: u64,
+) -> Result<Vec<(u64, f64, u64)>, String> {
+    let steps = base.steps;
+    let mut sum = vec![0.0f64; steps as usize];
+    let mut cnt = vec![0u64; steps as usize];
+    for rep in 0..reps {
+        let mut cfg = base.clone();
+        cfg.seed = base.seed.wrapping_add(rep.wrapping_mul(0x9E3779B9));
+        cfg.record_tasks = false;
+        let mut net = Network::new(cfg)?;
+        // tasks dispatched at step k: completion records carry dispatch_step
+        for _ in 0..steps {
+            let out = net.advance().ok_or("drained")?;
+            if out.completed_node as usize == node {
+                let ds = out.record.dispatch_step;
+                if ds < steps {
+                    sum[ds as usize] += out.record.delay_steps() as f64;
+                    cnt[ds as usize] += 1;
+                }
+            }
+        }
+    }
+    Ok((0..steps)
+        .map(|k| {
+            let c = cnt[k as usize];
+            (k, if c > 0 { sum[k as usize] / c as f64 } else { f64::NAN }, c)
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::service::ServiceFamily;
+
+    fn two_cluster_cfg(
+        n: usize,
+        n_fast: usize,
+        mu_f: f64,
+        mu_s: f64,
+        c: usize,
+        steps: u64,
+    ) -> SimConfig {
+        let rates: Vec<f64> = (0..n).map(|i| if i < n_fast { mu_f } else { mu_s }).collect();
+        SimConfig::new(
+            vec![1.0 / n as f64; n],
+            ServiceDist::from_rates(&rates, ServiceFamily::Exponential),
+            c,
+            steps,
+        )
+    }
+
+    #[test]
+    fn validates_config() {
+        let mut cfg = two_cluster_cfg(4, 2, 1.0, 1.0, 4, 10);
+        assert!(cfg.validate().is_ok());
+        cfg.concurrency = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = two_cluster_cfg(4, 2, 1.0, 1.0, 5, 10);
+        cfg.init = InitPlacement::OnePerNode;
+        assert!(cfg.validate().is_err());
+        let mut cfg = two_cluster_cfg(4, 2, 1.0, 1.0, 4, 10);
+        cfg.p[0] = 0.9;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn population_is_conserved() {
+        let cfg = two_cluster_cfg(5, 2, 3.0, 1.0, 7, 0);
+        let mut net = Network::new(cfg).unwrap();
+        assert_eq!(net.population(), 7);
+        for _ in 0..500 {
+            net.advance().unwrap();
+            assert_eq!(net.population(), 7);
+        }
+    }
+
+    #[test]
+    fn determinism_same_seed() {
+        let mut cfg = two_cluster_cfg(6, 3, 2.0, 1.0, 6, 200);
+        cfg.seed = 99;
+        cfg.record_tasks = true;
+        let a = run(cfg.clone()).unwrap();
+        let b = run(cfg).unwrap();
+        assert_eq!(a.tau_max, b.tau_max);
+        assert_eq!(a.completions, b.completions);
+        assert_eq!(a.tasks.len(), b.tasks.len());
+        for (x, y) in a.tasks.iter().zip(&b.tasks) {
+            assert_eq!(x.delay_steps(), y.delay_steps());
+            assert_eq!(x.node, y.node);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut cfg = two_cluster_cfg(6, 3, 2.0, 1.0, 6, 500);
+        cfg.seed = 1;
+        let a = run(cfg.clone()).unwrap();
+        cfg.seed = 2;
+        let b = run(cfg).unwrap();
+        assert_ne!(a.total_time.to_bits(), b.total_time.to_bits());
+    }
+
+    #[test]
+    fn dispatch_frequencies_match_p() {
+        let n = 4;
+        let p = vec![0.1, 0.2, 0.3, 0.4];
+        let rates = vec![5.0; n];
+        let cfg = SimConfig {
+            seed: 3,
+            ..SimConfig::new(
+                p.clone(),
+                ServiceDist::from_rates(&rates, ServiceFamily::Exponential),
+                8,
+                100_000,
+            )
+        };
+        let res = run(cfg).unwrap();
+        let total: u64 = res.dispatches.iter().sum();
+        for i in 0..n {
+            let f = res.dispatches[i] as f64 / total as f64;
+            assert!((f - p[i]).abs() < 0.01, "node {i}: freq {f} vs p {}", p[i]);
+        }
+    }
+
+    #[test]
+    fn completion_rates_match_visit_ratios_long_run() {
+        // flow balance: completions per node ∝ p_i (each dispatched task
+        // eventually completes exactly once)
+        let p = vec![0.5, 0.5];
+        let cfg = SimConfig {
+            seed: 4,
+            ..SimConfig::new(
+                vec![0.5, 0.5],
+                ServiceDist::from_rates(&[4.0, 1.0], ServiceFamily::Exponential),
+                6,
+                200_000,
+            )
+        };
+        let res = run(cfg).unwrap();
+        let total: u64 = res.completions.iter().sum();
+        for i in 0..2 {
+            let f = res.completions[i] as f64 / total as f64;
+            assert!((f - p[i]).abs() < 0.01, "node {i} completion share {f}");
+        }
+    }
+
+    #[test]
+    fn mean_queue_matches_jackson_theory() {
+        use crate::queueing::ClosedNetwork;
+        let n = 4;
+        let p = vec![0.25; 4];
+        let rates = vec![1.5, 1.5, 0.75, 0.75];
+        let cfg = SimConfig {
+            seed: 5,
+            ..SimConfig::new(
+                p.clone(),
+                ServiceDist::from_rates(&rates, ServiceFamily::Exponential),
+                10,
+                300_000,
+            )
+        };
+        let res = run(cfg).unwrap();
+        let net = ClosedNetwork::new(p, rates).unwrap();
+        let b = net.buzen(10);
+        for i in 0..n {
+            let theory = b.mean_queue(i, 10);
+            let sim = res.mean_queue[i];
+            assert!(
+                (sim - theory).abs() < 0.15,
+                "node {i}: sim {sim} vs theory {theory}"
+            );
+        }
+    }
+
+    #[test]
+    fn delays_scale_with_cluster_speed() {
+        let cfg = SimConfig {
+            seed: 6,
+            ..two_cluster_cfg(10, 5, 1.2, 1.0, 200, 100_000)
+        };
+        let res = run(cfg).unwrap();
+        let fast = res.cluster_delay(0..5);
+        let slow = res.cluster_delay(5..10);
+        assert!(slow > 3.0 * fast, "slow {slow} vs fast {fast}");
+        // average delays well below τ_max (the paper's headline point)
+        assert!((res.tau_max as f64) > 2.0 * slow);
+    }
+
+    #[test]
+    fn deterministic_service_works() {
+        let rates = vec![2.0, 1.0];
+        let cfg = SimConfig {
+            seed: 7,
+            ..SimConfig::new(
+                vec![0.5, 0.5],
+                ServiceDist::from_rates(&rates, ServiceFamily::Deterministic),
+                4,
+                10_000,
+            )
+        };
+        let res = run(cfg).unwrap();
+        assert!(res.total_time > 0.0);
+        assert_eq!(res.completions.iter().sum::<u64>(), 10_000);
+    }
+
+    #[test]
+    fn tau_c_bounded_by_min_n_c() {
+        let cfg = SimConfig {
+            seed: 8,
+            ..two_cluster_cfg(10, 5, 1.0, 1.0, 3, 20_000)
+        };
+        let res = run(cfg).unwrap();
+        assert!(res.tau_c > 0.0 && res.tau_c <= 3.0, "tau_c={}", res.tau_c);
+    }
+
+    #[test]
+    fn single_node_single_task_delay_zero() {
+        // C=1, n=1: every task completes before the next is dispatched:
+        // delay = complete_step - dispatch_step = 0 each time
+        let cfg = SimConfig::new(
+            vec![1.0],
+            vec![ServiceDist::Exp { rate: 1.0 }],
+            1,
+            1000,
+        );
+        let res = run(cfg).unwrap();
+        assert_eq!(res.tau_max, 0);
+        assert_eq!(res.delay_steps[0].mean(), 0.0);
+    }
+
+    #[test]
+    fn transient_mi_stabilizes() {
+        // Fig 1: m_{1,k} becomes stationary after a burn-in (~k > 50 for
+        // n=10).  Check the two halves of the late window agree.
+        let mut cfg = two_cluster_cfg(10, 5, 10.0, 1.0, 10, 300);
+        cfg.init = InitPlacement::OnePerNode;
+        let series = transient_mi(&cfg, 1, 400).unwrap();
+        let window_mean = |lo: usize, hi: usize| -> f64 {
+            let vals: Vec<f64> = series[lo..hi]
+                .iter()
+                .filter(|s| s.2 > 0)
+                .map(|s| s.1)
+                .collect();
+            vals.iter().sum::<f64>() / vals.len().max(1) as f64
+        };
+        let a = window_mean(150, 215);
+        let b = window_mean(215, 280);
+        assert!(a.is_finite() && b.is_finite());
+        assert!(
+            (a - b).abs() < 0.35 * a.max(b),
+            "late windows disagree: {a} vs {b}"
+        );
+    }
+
+    #[test]
+    fn queue_sampling_records() {
+        let mut cfg = two_cluster_cfg(4, 2, 1.0, 1.0, 4, 1000);
+        cfg.queue_sample_every = 100;
+        let res = run(cfg).unwrap();
+        assert_eq!(res.queue_samples.len(), 10);
+        for (_, qs) in &res.queue_samples {
+            assert_eq!(qs.iter().map(|&x| x as usize).sum::<usize>(), 4);
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! Service-time distributions for client task processing.
+//!
+//! The paper's theory assumes exponential durations (Jackson network);
+//! its worked example (§2) also studies deterministic durations and notes
+//! the results barely change when means are preserved.  LogNormal is
+//! provided as the "almost arbitrary distribution" stress case.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ServiceDist {
+    /// Exponential with given rate μ (mean 1/μ).
+    Exp { rate: f64 },
+    /// Deterministic duration (mean preserved vs Exp{rate: 1/mean}).
+    Det { mean: f64 },
+    /// LogNormal with target mean and coefficient of variation.
+    LogNormal { mean: f64, cv: f64 },
+}
+
+impl ServiceDist {
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            ServiceDist::Exp { rate } => rng.exponential(rate),
+            ServiceDist::Det { mean } => mean,
+            ServiceDist::LogNormal { mean, cv } => rng.lognormal_mean_cv(mean, cv),
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        match *self {
+            ServiceDist::Exp { rate } => 1.0 / rate,
+            ServiceDist::Det { mean } => mean,
+            ServiceDist::LogNormal { mean, .. } => mean,
+        }
+    }
+
+    /// Service *rate* (1/mean) — the μ_i of the Jackson model.
+    pub fn rate(&self) -> f64 {
+        1.0 / self.mean()
+    }
+
+    /// Build a per-node vector from per-node rates with a common family.
+    pub fn from_rates(rates: &[f64], family: ServiceFamily) -> Vec<ServiceDist> {
+        rates
+            .iter()
+            .map(|&r| match family {
+                ServiceFamily::Exponential => ServiceDist::Exp { rate: r },
+                ServiceFamily::Deterministic => ServiceDist::Det { mean: 1.0 / r },
+                ServiceFamily::LogNormal(cv) => ServiceDist::LogNormal { mean: 1.0 / r, cv },
+            })
+            .collect()
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ServiceFamily {
+    Exponential,
+    Deterministic,
+    LogNormal(f64),
+}
+
+impl std::str::FromStr for ServiceFamily {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "exp" | "exponential" => Ok(ServiceFamily::Exponential),
+            "det" | "deterministic" => Ok(ServiceFamily::Deterministic),
+            "lognormal" => Ok(ServiceFamily::LogNormal(0.5)),
+            other => Err(format!("unknown service family '{other}' (exp|det|lognormal)")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn means_are_preserved_across_families() {
+        let mut rng = Rng::new(1);
+        let n = 200_000;
+        for fam in [
+            ServiceFamily::Exponential,
+            ServiceFamily::Deterministic,
+            ServiceFamily::LogNormal(0.5),
+        ] {
+            let d = ServiceDist::from_rates(&[2.0], fam)[0];
+            assert!((d.mean() - 0.5).abs() < 1e-12);
+            let emp: f64 = (0..n).map(|_| d.sample(&mut rng)).sum::<f64>() / n as f64;
+            assert!((emp - 0.5).abs() < 0.01, "{fam:?}: emp mean {emp}");
+        }
+    }
+
+    #[test]
+    fn det_has_zero_variance() {
+        let mut rng = Rng::new(2);
+        let d = ServiceDist::Det { mean: 1.5 };
+        for _ in 0..100 {
+            assert_eq!(d.sample(&mut rng), 1.5);
+        }
+    }
+
+    #[test]
+    fn family_parsing() {
+        assert_eq!("exp".parse::<ServiceFamily>().unwrap(), ServiceFamily::Exponential);
+        assert_eq!("det".parse::<ServiceFamily>().unwrap(), ServiceFamily::Deterministic);
+        assert!("weibull".parse::<ServiceFamily>().is_err());
+    }
+
+    #[test]
+    fn rates_roundtrip() {
+        let v = ServiceDist::from_rates(&[1.0, 4.0], ServiceFamily::Exponential);
+        assert_eq!(v[1].rate(), 4.0);
+    }
+}

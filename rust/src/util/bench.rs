@@ -1,0 +1,146 @@
+//! Micro-benchmark harness substrate (criterion is unavailable offline).
+//!
+//! Criterion-style protocol: warmup, then timed batches until both a
+//! minimum wall-time and a minimum iteration count are reached; reports
+//! mean / median / p95 per-iteration time and throughput. Used by all
+//! `rust/benches/*` targets (declared `harness = false`).
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>12}/iter  median {:>12}  p95 {:>12}  min {:>12}  ({} iters)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.min_ns),
+            self.iters
+        );
+    }
+
+    /// items/sec given the number of logical items processed per iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns * 1e-9)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            min_samples: 10,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(400),
+            min_samples: 5,
+        }
+    }
+
+    /// Run `f` repeatedly; each call is one sample. Use for workloads that
+    /// are already ≥ microseconds. For nano-scale ops, wrap a loop inside.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // warmup
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            f();
+        }
+        // measure
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure || samples.len() < self.min_samples {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+            if samples.len() >= 1_000_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: n as u64,
+            mean_ns: mean,
+            median_ns: samples[n / 2],
+            p95_ns: samples[(n as f64 * 0.95) as usize % n.max(1)],
+            min_ns: samples[0],
+        };
+        result.report();
+        result
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(20),
+            min_samples: 3,
+        };
+        let r = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.median_ns && r.median_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(10.0).contains("ns"));
+        assert!(fmt_ns(1e4).contains("µs"));
+        assert!(fmt_ns(1e7).contains("ms"));
+        assert!(fmt_ns(2e9).contains(" s"));
+    }
+}

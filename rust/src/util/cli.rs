@@ -1,0 +1,149 @@
+//! CLI argument parsing substrate (no clap offline).
+//!
+//! `Args` supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed getters and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    known_flags: Vec<&'static str>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program name). `flag_names` lists the
+    /// options that take NO value; every other `--key` consumes one.
+    pub fn parse(argv: &[String], flag_names: &[&'static str]) -> Result<Args, String> {
+        let mut out = Args { known_flags: flag_names.to_vec(), ..Default::default() };
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    out.options
+                        .insert(stripped[..eq].to_string(), stripped[eq + 1..].to_string());
+                } else if flag_names.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("option --{stripped} expects a value"))?;
+                    out.options.insert(stripped.to_string(), v.clone());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects an unsigned integer, got '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects an unsigned integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated list of f64.
+    pub fn f64_list_or(&self, key: &str, default: &[f64]) -> Result<Vec<f64>, String> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| format!("--{key}: bad number '{s}'"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn known_flags(&self) -> &[&'static str] {
+        &self.known_flags
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = Args::parse(
+            &sv(&["figure", "--out=results", "--seed", "7", "--verbose", "fig1"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["figure", "fig1"]);
+        assert_eq!(a.str_or("out", ""), "results");
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 7);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&sv(&["--seed"]), &[]).is_err());
+    }
+
+    #[test]
+    fn typed_errors_name_the_key() {
+        let a = Args::parse(&sv(&["--eta", "abc"]), &[]).unwrap();
+        let err = a.f64_or("eta", 0.0).unwrap_err();
+        assert!(err.contains("eta"));
+    }
+
+    #[test]
+    fn f64_list_parsing() {
+        let a = Args::parse(&sv(&["--mu", "1.0, 2.5,4"]), &[]).unwrap();
+        assert_eq!(a.f64_list_or("mu", &[]).unwrap(), vec![1.0, 2.5, 4.0]);
+        let b = Args::parse(&sv(&[]), &[]).unwrap();
+        assert_eq!(b.f64_list_or("mu", &[9.0]).unwrap(), vec![9.0]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&[]), &[]).unwrap();
+        assert_eq!(a.usize_or("n", 100).unwrap(), 100);
+        assert_eq!(a.str_or("algo", "gasync"), "gasync");
+        assert!(!a.has("quiet"));
+    }
+}

@@ -1,0 +1,16 @@
+//! Shared substrates: PRNG + distributions, statistics + special functions,
+//! JSON/TOML parsing, CSV/table output, CLI parsing, micro-bench harness,
+//! and a hand-rolled property-testing framework.
+//!
+//! These exist because the build environment is offline: the usual crates
+//! (rand, serde, toml, clap, criterion, proptest) are unavailable, so the
+//! repo carries its own tested equivalents (see DESIGN.md §Substitutions).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod toml;

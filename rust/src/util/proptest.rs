@@ -1,0 +1,201 @@
+//! Hand-rolled property-testing substrate (proptest is unavailable offline).
+//!
+//! `check` runs a property over `cases` seeded random inputs; on failure it
+//! performs greedy shrinking via the generator's `shrink` hook and reports
+//! the minimal counterexample with the seed needed to replay it.
+
+use super::rng::Rng;
+
+/// A generator of random values with optional shrinking.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller values, ordered by aggressiveness.
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let _ = v;
+        Vec::new()
+    }
+}
+
+/// Uniform usize in [lo, hi] with halving shrink toward lo.
+pub struct UsizeGen {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for UsizeGen {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Rng) -> usize {
+        self.lo + rng.usize_below(self.hi - self.lo + 1)
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut cur = *v;
+        while cur > self.lo {
+            cur = self.lo + (cur - self.lo) / 2;
+            out.push(cur);
+            if out.len() > 16 {
+                break;
+            }
+        }
+        out
+    }
+}
+
+/// Uniform f64 in [lo, hi] with shrink toward the midpoint-of-bounds / lo.
+pub struct F64Gen {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Gen for F64Gen {
+    type Value = f64;
+
+    fn generate(&self, rng: &mut Rng) -> f64 {
+        rng.range_f64(self.lo, self.hi)
+    }
+
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        let mut cur = *v;
+        for _ in 0..12 {
+            cur = self.lo + (cur - self.lo) / 2.0;
+            out.push(cur);
+        }
+        out
+    }
+}
+
+/// Vector of positive weights (for probability/rate vectors).
+pub struct WeightsGen {
+    pub len_lo: usize,
+    pub len_hi: usize,
+    pub w_lo: f64,
+    pub w_hi: f64,
+}
+
+impl Gen for WeightsGen {
+    type Value = Vec<f64>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<f64> {
+        let n = self.len_lo + rng.usize_below(self.len_hi - self.len_lo + 1);
+        (0..n).map(|_| rng.range_f64(self.w_lo, self.w_hi)).collect()
+    }
+
+    fn shrink(&self, v: &Vec<f64>) -> Vec<Vec<f64>> {
+        let mut out = Vec::new();
+        if v.len() > self.len_lo {
+            out.push(v[..v.len() - 1].to_vec()); // drop last
+            out.push(v[1..].to_vec()); // drop first
+        }
+        // flatten weights toward uniform
+        if v.len() >= self.len_lo {
+            let m = v.iter().sum::<f64>() / v.len() as f64;
+            let flat: Vec<f64> = v.iter().map(|w| (w + m) / 2.0).collect();
+            if flat != *v {
+                out.push(flat);
+            }
+        }
+        out
+    }
+}
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xFED_0_0, max_shrink_steps: 200 }
+    }
+}
+
+/// Run `prop` on `cfg.cases` generated inputs; panic with the minimal
+/// counterexample (after shrinking) on failure.
+pub fn check<G: Gen, P: Fn(&G::Value) -> Result<(), String>>(
+    name: &str,
+    g: &G,
+    cfg: &Config,
+    prop: P,
+) {
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let v = g.generate(&mut rng);
+        if let Err(msg) = prop(&v) {
+            // shrink
+            let mut best = v.clone();
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: loop {
+                for cand in g.shrink(&best) {
+                    steps += 1;
+                    if steps > cfg.max_shrink_steps {
+                        break 'outer;
+                    }
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {:#x}):\n  input: {:?}\n  error: {}",
+                cfg.seed, best, best_msg
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", &UsizeGen { lo: 0, hi: 1000 }, &Config::default(), |&n| {
+            if n + 1 == 1 + n { Ok(()) } else { Err("math broke".into()) }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_boundary() {
+        let g = UsizeGen { lo: 0, hi: 10_000 };
+        let result = std::panic::catch_unwind(|| {
+            check("fails-above-100", &g, &Config::default(), |&n| {
+                if n <= 100 { Ok(()) } else { Err(format!("{n} > 100")) }
+            });
+        });
+        let err = *result.unwrap_err().downcast::<String>().unwrap();
+        // shrinker should get well below the typical random value (~5000)
+        let shrunk: usize = err
+            .split("input: ")
+            .nth(1)
+            .unwrap()
+            .split_whitespace()
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(shrunk > 100 && shrunk < 500, "shrunk to {shrunk}");
+    }
+
+    #[test]
+    fn weights_gen_in_bounds() {
+        let g = WeightsGen { len_lo: 2, len_hi: 8, w_lo: 0.1, w_hi: 5.0 };
+        check("weights-bounds", &g, &Config { cases: 40, ..Default::default() }, |w| {
+            if w.len() < 2 || w.len() > 8 {
+                return Err(format!("len {}", w.len()));
+            }
+            if w.iter().any(|x| *x < 0.1 || *x > 5.0) {
+                return Err("out of range".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,406 @@
+//! Deterministic PRNG + sampling substrate.
+//!
+//! The offline environment has no `rand` crate, so the repo ships its own:
+//! SplitMix64 (seeding / stream derivation) feeding Xoshiro256++ (the main
+//! generator), plus the distributions the paper needs — exponential,
+//! normal (Box–Muller), log-normal, uniform, categorical (Walker alias
+//! method for O(1) client sampling in the hot loop), and permutation
+//! shuffles for the data pipeline.
+
+/// SplitMix64: used to expand a u64 seed into generator state and to derive
+/// independent named streams (clients, data, routing, ...).
+#[derive(Clone, Copy, Debug)]
+pub struct SplitMix64(pub u64);
+
+impl SplitMix64 {
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Xoshiro256++ — fast, high-quality, 2^256-1 period.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second normal from Box–Muller
+    cached_normal: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64(seed);
+        Rng {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+            cached_normal: None,
+        }
+    }
+
+    /// Derive an independent generator for a named sub-stream.
+    pub fn derive(&self, tag: u64) -> Rng {
+        // Mix the current state with the tag through SplitMix; streams with
+        // different tags are statistically independent.
+        let mut sm = SplitMix64(
+            self.s[0]
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add(tag.wrapping_mul(0xD1342543DE82EF95)),
+        );
+        Rng {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+            cached_normal: None,
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in (0, 1] — safe as log() argument.
+    #[inline]
+    pub fn uniform_pos(&mut self) -> f64 {
+        1.0 - self.uniform()
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    #[inline]
+    pub fn usize_below(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Exponential with rate `rate` (mean 1/rate) by inversion.
+    #[inline]
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        -self.uniform_pos().ln() / rate
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.cached_normal.take() {
+            return z;
+        }
+        let u1 = self.uniform_pos();
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let th = 2.0 * std::f64::consts::PI * u2;
+        self.cached_normal = Some(r * th.sin());
+        r * th.cos()
+    }
+
+    pub fn normal_with(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Log-normal parameterized by the *target mean* and coefficient of
+    /// variation of the resulting distribution (convenient for service
+    /// times: `lognormal_mean_cv(1/mu, 0.5)`).
+    pub fn lognormal_mean_cv(&mut self, mean: f64, cv: f64) -> f64 {
+        let sigma2 = (1.0 + cv * cv).ln();
+        let mu = mean.ln() - 0.5 * sigma2;
+        (mu + sigma2.sqrt() * self.normal()).exp()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample k distinct indices from 0..n (partial Fisher–Yates).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.usize_below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// He-normal layer init (matches the L2 model's scheme).
+    pub fn he_normal(&mut self, fan_in: usize, out: &mut [f32]) {
+        let std = (2.0 / fan_in as f64).sqrt();
+        for v in out.iter_mut() {
+            *v = (self.normal() * std) as f32;
+        }
+    }
+}
+
+/// Walker alias method: O(n) build, O(1) sample — the client sampler used
+/// in the coordinator hot loop (`Sample K_{k+1} ~ p`).
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<usize>,
+    weights: Vec<f64>,
+}
+
+impl AliasTable {
+    /// Build from non-negative weights (need not be normalized).
+    pub fn new(weights: &[f64]) -> Result<Self, String> {
+        let n = weights.len();
+        if n == 0 {
+            return Err("alias table needs at least one weight".into());
+        }
+        let total: f64 = weights.iter().sum();
+        if !(total > 0.0) || weights.iter().any(|w| *w < 0.0 || !w.is_finite()) {
+            return Err(format!("invalid weights (total={total})"));
+        }
+        let mut prob: Vec<f64> = weights.iter().map(|w| w * n as f64 / total).collect();
+        let mut alias = vec![0usize; n];
+        let mut small: Vec<usize> = Vec::with_capacity(n);
+        let mut large: Vec<usize> = Vec::with_capacity(n);
+        for (i, p) in prob.iter().enumerate() {
+            if *p < 1.0 {
+                small.push(i);
+            } else {
+                large.push(i);
+            }
+        }
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            alias[s] = l;
+            prob[l] = (prob[l] + prob[s]) - 1.0;
+            if prob[l] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // leftovers are 1.0 up to fp error
+        for &i in small.iter().chain(large.iter()) {
+            prob[i] = 1.0;
+        }
+        let norm: Vec<f64> = weights.iter().map(|w| w / total).collect();
+        Ok(AliasTable { prob, alias, weights: norm })
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let i = rng.usize_below(self.prob.len());
+        if rng.uniform() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Normalized probability of index i.
+    pub fn p(&self, i: usize) -> f64 {
+        self.weights[i]
+    }
+
+    pub fn probabilities(&self) -> &[f64] {
+        &self.weights
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut a = SplitMix64(7);
+        let mut b = SplitMix64(7);
+        for _ in 0..10 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut rng = Rng::new(1);
+        for _ in 0..10_000 {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_and_var() {
+        let mut rng = Rng::new(2);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let u = rng.uniform();
+            s += u;
+            s2 += u * u;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 5e-3, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 5e-3, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean_matches_rate() {
+        let mut rng = Rng::new(3);
+        for &rate in &[0.5, 1.0, 4.0] {
+            let n = 100_000;
+            let mean: f64 = (0..n).map(|_| rng.exponential(rate)).sum::<f64>() / n as f64;
+            assert!(
+                (mean - 1.0 / rate).abs() < 0.02 / rate,
+                "rate={rate} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(4);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.normal();
+            s += z;
+            s2 += z * z;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn lognormal_mean_cv_hits_target() {
+        let mut rng = Rng::new(5);
+        let n = 300_000;
+        let mean: f64 = (0..n)
+            .map(|_| rng.lognormal_mean_cv(2.5, 0.5))
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - 2.5).abs() < 0.03, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_small_n() {
+        let mut rng = Rng::new(6);
+        let mut counts = [0u64; 7];
+        let n = 700_000;
+        for _ in 0..n {
+            counts[rng.usize_below(7)] += 1;
+        }
+        for &c in &counts {
+            let p = c as f64 / n as f64;
+            assert!((p - 1.0 / 7.0).abs() < 4e-3, "p={p}");
+        }
+    }
+
+    #[test]
+    fn derive_streams_differ() {
+        let base = Rng::new(9);
+        let mut a = base.derive(1);
+        let mut b = base.derive(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(10);
+        let mut xs: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_distinct_unique() {
+        let mut rng = Rng::new(11);
+        let idx = rng.sample_distinct(50, 20);
+        assert_eq!(idx.len(), 20);
+        let mut s = idx.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 20);
+    }
+
+    #[test]
+    fn alias_matches_weights() {
+        let w = vec![0.1, 0.2, 0.3, 0.4];
+        let t = AliasTable::new(&w).unwrap();
+        let mut rng = Rng::new(12);
+        let n = 400_000;
+        let mut counts = [0u64; 4];
+        for _ in 0..n {
+            counts[t.sample(&mut rng)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let p = c as f64 / n as f64;
+            assert!((p - w[i]).abs() < 4e-3, "i={i} p={p}");
+        }
+    }
+
+    #[test]
+    fn alias_rejects_bad_weights() {
+        assert!(AliasTable::new(&[]).is_err());
+        assert!(AliasTable::new(&[0.0, 0.0]).is_err());
+        assert!(AliasTable::new(&[1.0, -0.5]).is_err());
+        assert!(AliasTable::new(&[f64::NAN]).is_err());
+    }
+
+    #[test]
+    fn alias_handles_degenerate_mass() {
+        let t = AliasTable::new(&[0.0, 1.0, 0.0]).unwrap();
+        let mut rng = Rng::new(13);
+        for _ in 0..1000 {
+            assert_eq!(t.sample(&mut rng), 1);
+        }
+    }
+}

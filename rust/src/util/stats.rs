@@ -1,0 +1,380 @@
+//! Statistics substrate: running moments (Welford), histograms, quantiles,
+//! and the special functions the queueing theory needs (regularized lower
+//! incomplete gamma / Erlang CDF — the `P(k, x)` of the paper's Γ-ratio).
+
+/// Welford online mean/variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let d = other.mean - self.mean;
+        let n = n1 + n2;
+        self.mean += d * n2 / n;
+        self.m2 += other.m2 + d * d * n1 * n2 / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { f64::NAN } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        self.std() / (self.n as f64).sqrt()
+    }
+}
+
+/// Fixed-width histogram over [lo, hi); out-of-range goes to under/overflow.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+    pub stats: Welford,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Histogram { lo, hi, bins: vec![0; nbins], underflow: 0, overflow: 0, stats: Welford::new() }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.stats.push(x);
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let nb = self.bins.len();
+            let b = ((x - self.lo) / (self.hi - self.lo) * nb as f64) as usize;
+            self.bins[b.min(nb - 1)] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    pub fn bin_center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        self.lo + (i as f64 + 0.5) * w
+    }
+
+    /// Render a terminal sparkline-ish bar chart (for figure previews).
+    pub fn ascii(&self, width: usize) -> String {
+        let maxc = self.bins.iter().copied().max().unwrap_or(1).max(1);
+        let mut out = String::new();
+        for (i, &c) in self.bins.iter().enumerate() {
+            let bar = "#".repeat((c as usize * width / maxc as usize).max(usize::from(c > 0)));
+            out.push_str(&format!("{:>12.1} | {:<w$} {}\n", self.bin_center(i), bar, c, w = width));
+        }
+        out
+    }
+}
+
+/// Exact quantile from a (copied + sorted) sample; linear interpolation.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty() && (0.0..=1.0).contains(&q));
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (s.len() - 1) as f64;
+    let i = pos.floor() as usize;
+    let frac = pos - i as f64;
+    if i + 1 < s.len() {
+        s[i] * (1.0 - frac) + s[i + 1] * frac
+    } else {
+        s[i]
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() { f64::NAN } else { xs.iter().sum::<f64>() / xs.len() as f64 }
+}
+
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return f64::NAN;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// ln k!
+pub fn ln_factorial(k: u64) -> f64 {
+    ln_gamma(k as f64 + 1.0)
+}
+
+/// Lanczos ln Γ(x), x > 0.
+pub fn ln_gamma(x: f64) -> f64 {
+    // Lanczos g=7, n=9 coefficients
+    const COEF: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // reflection
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Regularized lower incomplete gamma P(k, x) for *integer* k ≥ 1:
+/// P(k, x) = P(Erlang(k, 1) ≤ x) = 1 − e^{−x} Σ_{i=0}^{k−1} x^i / i!.
+///
+/// This is the paper's `P(k, x)` in the Γ-ratio of Proposition 4.
+/// Computed stably in log space for large x/k.
+pub fn erlang_cdf(k: u64, x: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if k == 0 {
+        return 1.0;
+    }
+    // Sum e^{-x} x^i / i! for i in 0..k via log-space accumulation of the
+    // complement, then P = 1 - tail. For large k relative to x the tail is
+    // near 1; for small k it's near 0 — handle both via logsumexp.
+    let lx = x.ln();
+    let mut terms: Vec<f64> = Vec::with_capacity(k as usize);
+    for i in 0..k {
+        terms.push(i as f64 * lx - x - ln_factorial(i));
+    }
+    let tail = logsumexp(&terms).exp();
+    (1.0 - tail).clamp(0.0, 1.0)
+}
+
+/// Continued-fraction / series regularized P(a, x) for real a>0 (general).
+pub fn reg_lower_gamma(a: f64, x: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if x < a + 1.0 {
+        // series
+        let mut sum = 1.0 / a;
+        let mut term = sum;
+        let mut n = a;
+        for _ in 0..500 {
+            n += 1.0;
+            term *= x / n;
+            sum += term;
+            if term.abs() < sum.abs() * 1e-15 {
+                break;
+            }
+        }
+        (sum.ln() + a * x.ln() - x - ln_gamma(a)).exp()
+    } else {
+        // continued fraction for Q(a, x)
+        let mut b = x + 1.0 - a;
+        let mut c = 1e308;
+        let mut d = 1.0 / b;
+        let mut h = d;
+        for i in 1..500 {
+            let an = -(i as f64) * (i as f64 - a);
+            b += 2.0;
+            d = an * d + b;
+            if d.abs() < 1e-300 {
+                d = 1e-300;
+            }
+            c = b + an / c;
+            if c.abs() < 1e-300 {
+                c = 1e-300;
+            }
+            d = 1.0 / d;
+            let del = d * c;
+            h *= del;
+            if (del - 1.0).abs() < 1e-15 {
+                break;
+            }
+        }
+        let q = (a * x.ln() - x - ln_gamma(a)).exp() * h;
+        (1.0 - q).clamp(0.0, 1.0)
+    }
+}
+
+pub fn logsumexp(xs: &[f64]) -> f64 {
+    let m = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    if !m.is_finite() {
+        return m;
+    }
+    m + xs.iter().map(|x| (x - m).exp()).sum::<f64>().ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.5, -3.0, 7.0, 0.5, 2.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((w.std() - std(&xs)).abs() < 1e-12);
+        assert_eq!(w.count(), 6);
+        assert_eq!(w.min(), -3.0);
+        assert_eq!(w.max(), 7.0);
+    }
+
+    #[test]
+    fn welford_merge_equals_combined() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        let mut all = Welford::new();
+        for (i, &x) in xs.iter().enumerate() {
+            if i % 2 == 0 { a.push(x) } else { b.push(x) }
+            all.push(x);
+        }
+        a.merge(&b);
+        assert!((a.mean() - all.mean()).abs() < 1e-10);
+        assert!((a.var() - all.var()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn histogram_counts_and_ranges() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.push(i as f64 + 0.5);
+        }
+        h.push(-1.0);
+        h.push(42.0);
+        assert_eq!(h.bins, vec![1; 10]);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.total(), 12);
+        assert!((h.bin_center(0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((quantile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((quantile(&xs, 1.0) - 4.0).abs() < 1e-12);
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ln_gamma_matches_factorials() {
+        for k in 1..15u64 {
+            let exact: f64 = (1..=k).map(|i| (i as f64).ln()).sum();
+            assert!((ln_factorial(k) - exact).abs() < 1e-9, "k={k}");
+        }
+        // Γ(0.5) = sqrt(pi)
+        assert!((ln_gamma(0.5) - 0.5 * std::f64::consts::PI.ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn erlang_cdf_basic_identities() {
+        // k=1: exponential CDF
+        for &x in &[0.1, 1.0, 5.0] {
+            assert!((erlang_cdf(1, x) - (1.0 - (-x as f64).exp())).abs() < 1e-12);
+        }
+        // monotone in x, decreasing in k
+        assert!(erlang_cdf(3, 2.0) < erlang_cdf(3, 4.0));
+        assert!(erlang_cdf(5, 3.0) < erlang_cdf(2, 3.0));
+        // mean k: CDF around 0.5-ish
+        let c = erlang_cdf(100, 100.0);
+        assert!((c - 0.5).abs() < 0.05, "c={c}");
+    }
+
+    #[test]
+    fn erlang_cdf_matches_reg_lower_gamma() {
+        for &k in &[1u64, 2, 5, 20, 90, 150] {
+            for &x in &[0.5, 3.0, 10.0, 80.0, 200.0] {
+                let a = erlang_cdf(k, x);
+                let b = reg_lower_gamma(k as f64, x);
+                assert!((a - b).abs() < 1e-8, "k={k} x={x} {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn erlang_cdf_extreme_args_stable() {
+        assert_eq!(erlang_cdf(10, 0.0), 0.0);
+        assert!(erlang_cdf(1000, 10.0) < 1e-10);
+        assert!((erlang_cdf(2, 1e6) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn logsumexp_stability() {
+        let v = [-1000.0, -1000.0];
+        assert!((logsumexp(&v) - (-1000.0 + (2.0f64).ln())).abs() < 1e-12);
+        assert_eq!(logsumexp(&[f64::NEG_INFINITY]), f64::NEG_INFINITY);
+    }
+}

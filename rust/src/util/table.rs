@@ -1,0 +1,195 @@
+//! CSV writing and aligned ASCII table rendering for figures/tables output.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Column-oriented series container: one figure = one `Series` = one CSV.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl Series {
+    pub fn new(columns: &[&str]) -> Self {
+        Series { columns: columns.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: Vec<f64>) {
+        assert_eq!(row.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(row);
+    }
+
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", self.columns.join(","))?;
+        for row in &self.rows {
+            let line: Vec<String> = row.iter().map(|v| format_num(*v)).collect();
+            writeln!(w, "{}", line.join(","))?;
+        }
+        Ok(())
+    }
+
+    /// Aligned preview for terminal output (first `limit` rows).
+    pub fn ascii(&self, limit: usize) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        let shown: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .take(limit)
+            .map(|r| r.iter().map(|v| format_num(*v)).collect())
+            .collect();
+        for row in &shown {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        for (i, c) in self.columns.iter().enumerate() {
+            out.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+        }
+        out.push('\n');
+        for row in &shown {
+            for (i, cell) in row.iter().enumerate() {
+                out.push_str(&format!("{:>w$}  ", cell, w = widths[i]));
+            }
+            out.push('\n');
+        }
+        if self.rows.len() > limit {
+            out.push_str(&format!("... ({} rows total)\n", self.rows.len()));
+        }
+        out
+    }
+}
+
+pub fn format_num(v: f64) -> String {
+    if v == 0.0 {
+        return "0".into();
+    }
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        return format!("{}", v as i64);
+    }
+    let a = v.abs();
+    if a >= 1e5 || a < 1e-4 {
+        format!("{v:.6e}")
+    } else {
+        let s = format!("{v:.6}");
+        s.trim_end_matches('0').trim_end_matches('.').to_string()
+    }
+}
+
+/// Minimal string-cell table (for Table 1 / Table 2 style output).
+#[derive(Clone, Debug, Default)]
+pub struct TextTable {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    pub fn new(header: &[&str]) -> Self {
+        TextTable { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.header.len());
+        self.rows.push(row);
+    }
+
+    pub fn ascii(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!(" {:<w$} ", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let mut out = fmt_row(&self.header);
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", self.header.join(","))?;
+        for row in &self.rows {
+            writeln!(w, "{}", row.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_csv_roundtrip_text() {
+        let mut s = Series::new(&["k", "m_ik"]);
+        s.push(vec![0.0, 1.25]);
+        s.push(vec![1.0, 130000.0]);
+        let dir = std::env::temp_dir().join("fedqueue_test_csv");
+        let p = dir.join("s.csv");
+        s.write_csv(&p).unwrap();
+        let txt = std::fs::read_to_string(&p).unwrap();
+        assert!(txt.starts_with("k,m_ik\n"));
+        assert!(txt.contains("0,1.25"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic]
+    fn series_arity_checked() {
+        let mut s = Series::new(&["a", "b"]);
+        s.push(vec![1.0]);
+    }
+
+    #[test]
+    fn format_num_cases() {
+        assert_eq!(format_num(0.0), "0");
+        assert_eq!(format_num(3.0), "3");
+        assert_eq!(format_num(0.5), "0.5");
+        assert!(format_num(1.0e-7).contains('e'));
+        assert!(format_num(1.23e16).contains('e'));
+        assert_eq!(format_num(12300000.0), "12300000"); // integral stays exact
+    }
+
+    #[test]
+    fn text_table_renders() {
+        let mut t = TextTable::new(&["Method", "Acc"]);
+        t.push(vec!["FedBuff".into(), "49.9 ± 0.8".into()]);
+        let a = t.ascii();
+        assert!(a.contains("FedBuff"));
+        assert!(a.contains("Method"));
+    }
+
+    #[test]
+    fn series_ascii_truncates() {
+        let mut s = Series::new(&["x"]);
+        for i in 0..20 {
+            s.push(vec![i as f64]);
+        }
+        let a = s.ascii(5);
+        assert!(a.contains("20 rows total"));
+    }
+}

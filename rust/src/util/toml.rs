@@ -1,0 +1,281 @@
+//! Minimal TOML-subset parser — the config substrate (no serde/toml crates
+//! offline).  Supports what fedqueue configs use:
+//!   * `[table]` and `[table.sub]` headers
+//!   * `key = value` with string, integer, float, bool, and homogeneous
+//!     arrays of those
+//!   * `#` comments, blank lines
+//! Unsupported TOML (dates, inline tables, multi-line strings) is rejected
+//! with a line-numbered error rather than silently misparsed.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64_vec(&self) -> Option<Vec<f64>> {
+        self.as_arr()?.iter().map(|v| v.as_f64()).collect()
+    }
+}
+
+/// Flat document: dotted table path → (key → value).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Doc {
+    pub tables: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, String> {
+        let mut doc = Doc::default();
+        let mut current = String::new();
+        doc.tables.entry(current.clone()).or_default();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated table header", ln + 1))?
+                    .trim();
+                if name.is_empty() || name.starts_with('[') {
+                    return Err(format!("line {}: bad table header", ln + 1));
+                }
+                current = name.to_string();
+                doc.tables.entry(current.clone()).or_default();
+            } else {
+                let eq = line
+                    .find('=')
+                    .ok_or_else(|| format!("line {}: expected key = value", ln + 1))?;
+                let key = line[..eq].trim();
+                if key.is_empty() {
+                    return Err(format!("line {}: empty key", ln + 1));
+                }
+                let val = parse_value(line[eq + 1..].trim())
+                    .map_err(|e| format!("line {}: {e}", ln + 1))?;
+                doc.tables
+                    .get_mut(&current)
+                    .unwrap()
+                    .insert(key.to_string(), val);
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, table: &str, key: &str) -> Option<&Value> {
+        self.tables.get(table)?.get(key)
+    }
+
+    pub fn get_or<'a>(&'a self, table: &str, key: &str, default: &'a Value) -> &'a Value {
+        self.get(table, key).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, table: &str, key: &str, default: f64) -> f64 {
+        self.get(table, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn i64_or(&self, table: &str, key: &str, default: i64) -> i64 {
+        self.get(table, key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn str_or(&self, table: &str, key: &str, default: &str) -> String {
+        self.get(table, key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn bool_or(&self, table: &str, key: &str, default: bool) -> bool {
+        self.get(table, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' outside of a string starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let end = rest.find('"').ok_or("unterminated string")?;
+        if !rest[end + 1..].trim().is_empty() {
+            return Err("trailing data after string".into());
+        }
+        return Ok(Value::Str(rest[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        // distinguish 1 from 1.0 / 1e3
+        if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value: {s}"))
+}
+
+/// Split array elements on top-level commas (no nested-array commas).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let txt = r#"
+# experiment config
+seed = 42
+algo = "gasync"
+
+[network]
+n = 100
+concurrency = 10        # tasks in flight
+rates = [1.0, 0.5]
+fast_fraction = 0.9
+exact = true
+"#;
+        let d = Doc::parse(txt).unwrap();
+        assert_eq!(d.i64_or("", "seed", 0), 42);
+        assert_eq!(d.str_or("", "algo", ""), "gasync");
+        assert_eq!(d.i64_or("network", "n", 0), 100);
+        assert_eq!(d.f64_or("network", "fast_fraction", 0.0), 0.9);
+        assert!(d.bool_or("network", "exact", false));
+        assert_eq!(
+            d.get("network", "rates").unwrap().as_f64_vec().unwrap(),
+            vec![1.0, 0.5]
+        );
+    }
+
+    #[test]
+    fn int_vs_float_distinction() {
+        let d = Doc::parse("a = 3\nb = 3.0\nc = 1e3\nd = 1_000").unwrap();
+        assert_eq!(d.get("", "a").unwrap(), &Value::Int(3));
+        assert_eq!(d.get("", "b").unwrap(), &Value::Float(3.0));
+        assert_eq!(d.get("", "c").unwrap(), &Value::Float(1000.0));
+        assert_eq!(d.get("", "d").unwrap(), &Value::Int(1000));
+    }
+
+    #[test]
+    fn nested_table_paths() {
+        let d = Doc::parse("[a.b]\nx = 1\n[a.c]\nx = 2").unwrap();
+        assert_eq!(d.i64_or("a.b", "x", 0), 1);
+        assert_eq!(d.i64_or("a.c", "x", 0), 2);
+    }
+
+    #[test]
+    fn comments_inside_strings_preserved() {
+        let d = Doc::parse(r##"k = "a # not comment""##).unwrap();
+        assert_eq!(d.str_or("", "k", ""), "a # not comment");
+    }
+
+    #[test]
+    fn line_numbered_errors() {
+        let err = Doc::parse("good = 1\nbad line").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(Doc::parse("[unclosed").is_err());
+        assert!(Doc::parse("k = [1, 2").is_err());
+        assert!(Doc::parse("k = 12x").is_err());
+    }
+
+    #[test]
+    fn empty_and_nested_arrays() {
+        let d = Doc::parse("e = []\nn = [[1, 2], [3]]").unwrap();
+        assert_eq!(d.get("", "e").unwrap().as_arr().unwrap().len(), 0);
+        let n = d.get("", "n").unwrap().as_arr().unwrap();
+        assert_eq!(n.len(), 2);
+        assert_eq!(n[0].as_f64_vec().unwrap(), vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,136 @@
+//! Integration: the bound optimizer against the simulator — the (p, η)
+//! choices Algorithm 1 makes from theory must actually improve the
+//! simulated queueing profile, and the paper's headline numbers must land
+//! in their reported ranges.
+
+use fedqueue::bound::{relative_improvement, BoundParams, MiSource, TwoClusterStudy};
+use fedqueue::simulator::{run, ServiceDist, ServiceFamily, SimConfig};
+
+fn paper_study(mu_fast: f64, c: usize) -> TwoClusterStudy {
+    TwoClusterStudy {
+        params: BoundParams::worked_example(c),
+        n_fast: 90,
+        mu_fast,
+        mu_slow: 1.0,
+        source: MiSource::default(),
+    }
+}
+
+#[test]
+fn fig2_fig3_anchor_points() {
+    // Paper: optimal p drops to ≈7.3e-3 and improvement reaches ≈55% at
+    // μ_f=16; ≈30% at μ_f=2 (C=100 full concurrency).
+    let lo = paper_study(2.0, 100);
+    let (b2, u2) = lo.optimize_p(50).unwrap();
+    let i2 = relative_improvement(b2.bound, u2.bound);
+    let hi = paper_study(16.0, 100);
+    let (b16, u16) = hi.optimize_p(50).unwrap();
+    let i16 = relative_improvement(b16.bound, u16.bound);
+    assert!(b16.p_fast < 1.0 / 100.0, "optimal p {} below uniform", b16.p_fast);
+    assert!(i16 > i2, "improvement grows with speed: {i2} vs {i16}");
+    assert!(i2 > 0.1 && i2 < 0.7, "μ_f=2 improvement {i2} (paper ≈30%)");
+    assert!(i16 > 0.3 && i16 < 0.85, "μ_f=16 improvement {i16} (paper ≈55%)");
+}
+
+#[test]
+fn optimizer_choice_improves_simulated_delays() {
+    // close the loop: take the optimizer's p, run the SIMULATOR, verify the
+    // weighted delay objective m̄ actually improved vs uniform sampling.
+    let st = paper_study(8.0, 50);
+    let (best, uniform) = st.optimize_p(40).unwrap();
+    let simulate = |p_fast: f64, seed: u64| {
+        let tc = st.cluster(p_fast);
+        let cfg = SimConfig {
+            seed,
+            ..SimConfig::new(
+                tc.p_vec(),
+                ServiceDist::from_rates(&tc.mu_vec(), ServiceFamily::Exponential),
+                50,
+                200_000,
+            )
+        };
+        let res = run(cfg).unwrap();
+        // m̄ = Σ m_i/(n² p_i²) with empirical m_i
+        let n = tc.p_vec().len() as f64;
+        res.m_empirical()
+            .iter()
+            .zip(tc.p_vec())
+            .filter(|(m, _)| m.is_finite())
+            .map(|(m, p)| m / (n * n * p * p))
+            .sum::<f64>()
+    };
+    let mbar_uni = simulate(uniform.p_fast, 0x51);
+    let mbar_opt = simulate(best.p_fast, 0x52);
+    assert!(
+        mbar_opt < mbar_uni,
+        "optimizer's p must reduce simulated m̄: {mbar_opt} vs {mbar_uni}"
+    );
+}
+
+#[test]
+fn eta_stays_within_cap_across_sweep() {
+    for &mu in &[2.0, 8.0, 16.0] {
+        for &c in &[10usize, 100] {
+            let st = paper_study(mu, c);
+            for p in st.p_grid(25) {
+                if let Ok(pt) = st.evaluate(p) {
+                    assert!(
+                        pt.eta <= pt.eta_max * (1.0 + 1e-12),
+                        "η {} exceeds cap {} at p={p}",
+                        pt.eta,
+                        pt.eta_max
+                    );
+                    assert!(pt.bound.is_finite() && pt.bound > 0.0);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fig4_baselines_lose_across_grid() {
+    for &mu in &[4.0, 8.0, 16.0] {
+        let st = paper_study(mu, 50);
+        let (best, _) = st.optimize_p(40).unwrap();
+        let (g_fedbuff, g_async) = st.baseline_bounds().unwrap();
+        assert!(
+            best.bound < g_async && best.bound < g_fedbuff,
+            "μ={mu}: gen {} vs fedbuff {g_fedbuff} async {g_async}",
+            best.bound
+        );
+        // FedBuff's τ_max² n term makes it the weakest, increasingly so
+        assert!(g_fedbuff > g_async);
+    }
+}
+
+#[test]
+fn physical_time_small_c_prefers_uniform() {
+    // App E.2: "when the concurrency is small (w.r.t. n), uniform sampling
+    // appears as the best strategy"
+    let st = paper_study(4.0, 5);
+    let (best, uniform) = st.optimize_p_physical(40, 1000.0).unwrap();
+    let imp = relative_improvement(best.bound, uniform.bound);
+    assert!(
+        imp < 0.15,
+        "small C: physical-time improvement should be small, got {imp}"
+    );
+}
+
+#[test]
+fn monte_carlo_and_theory_sources_agree_on_optimum_region() {
+    let mut st = paper_study(8.0, 20);
+    let (best_theory, _) = st.optimize_p(30).unwrap();
+    st.source = MiSource::MonteCarlo {
+        steps: 40_000,
+        family: ServiceFamily::Exponential,
+        seed: 3,
+    };
+    let (best_mc, _) = st.optimize_p(15).unwrap();
+    let ratio = best_mc.p_fast / best_theory.p_fast;
+    assert!(
+        (0.2..5.0).contains(&ratio),
+        "optima wildly disagree: theory {} vs MC {}",
+        best_theory.p_fast,
+        best_mc.p_fast
+    );
+}

@@ -1,0 +1,72 @@
+//! Integration: the two artifact flavors — Pallas-kernel lowering vs
+//! pure-jnp lowering — must be numerically interchangeable.  This is what
+//! licenses running the multi-seed experiments on the fast jnp flavor
+//! while the Pallas flavor remains the TPU-faithful path (§Perf).
+
+use fedqueue::data::Batch;
+use fedqueue::runtime::{Backend, Manifest, PjrtBackend};
+use fedqueue::util::rng::Rng;
+
+fn ready() -> bool {
+    let ok = Manifest::default_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("[skip] run `make artifacts`");
+    }
+    ok
+}
+
+fn batch(spec: &fedqueue::runtime::ModelSpec, b: usize, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let x: Vec<f32> = (0..b * spec.input_dim).map(|_| rng.normal() as f32).collect();
+    let mut onehot = vec![0.0f32; b * spec.classes];
+    for bi in 0..b {
+        onehot[bi * spec.classes + rng.usize_below(spec.classes)] = 1.0;
+    }
+    Batch { x, onehot, batch: b }
+}
+
+#[test]
+fn pallas_and_jnp_flavors_agree() {
+    if !ready() {
+        return;
+    }
+    let dir = Manifest::default_dir();
+    let mut pallas = PjrtBackend::load(&dir, "tiny").unwrap();
+    let mut jnp = PjrtBackend::load(&dir, "tiny_jnp").unwrap();
+    let spec = pallas.spec().clone();
+    let model = spec.init_model(31);
+    let b = batch(&spec, spec.train_batch, 32);
+    let (lp, gp) = pallas.train_step(&model, &b).unwrap();
+    let (lj, gj) = jnp.train_step(&model, &b).unwrap();
+    assert!((lp - lj).abs() < 1e-5 * (1.0 + lj.abs()), "loss {lp} vs {lj}");
+    for (ti, (a, c)) in gp.iter().zip(&gj).enumerate() {
+        let mut max_err = 0.0f64;
+        for (x, y) in a.iter().zip(c) {
+            max_err = max_err.max((*x as f64 - *y as f64).abs());
+        }
+        assert!(max_err < 1e-4, "tensor {ti}: flavor gradient gap {max_err}");
+    }
+    let eb = batch(&spec, spec.eval_batch, 33);
+    let (l1, c1) = pallas.eval_batch(&model, &eb, spec.eval_batch).unwrap();
+    let (l2, c2) = jnp.eval_batch(&model, &eb, spec.eval_batch).unwrap();
+    assert!((l1 - l2).abs() < 1e-4 * (1.0 + l2.abs()));
+    assert_eq!(c1, c2);
+}
+
+#[test]
+fn manifest_carries_both_flavors_for_all_variants() {
+    if !ready() {
+        return;
+    }
+    let m = Manifest::load(&Manifest::default_dir()).unwrap();
+    for base in ["tiny", "cifar", "wide", "tinyimg"] {
+        let a = m.variant(base).unwrap();
+        let b = m.variant(&format!("{base}_jnp")).unwrap();
+        assert_eq!(a.n_params, b.n_params, "{base}: flavor param mismatch");
+        assert_eq!(a.train_batch, b.train_batch);
+        // the jnp lowering must be much smaller HLO (no interpreter loop)
+        let sa = std::fs::metadata(&a.train_file).unwrap().len();
+        let sb = std::fs::metadata(&b.train_file).unwrap().len();
+        assert!(sb < sa, "{base}: jnp HLO {sb}B should be smaller than pallas {sa}B");
+    }
+}

@@ -1,0 +1,158 @@
+//! Integration: theory ⇄ simulation cross-validation of the closed Jackson
+//! network — the empirical engine and the exact product-form analysis must
+//! agree on queue lengths, utilizations, throughput, and the paper's delay
+//! quantities m_i, across service families and load regimes.
+
+use fedqueue::queueing::{ClosedNetwork, MiEstimator, TwoCluster};
+use fedqueue::simulator::{run, ServiceDist, ServiceFamily, SimConfig};
+
+fn sim(
+    p: Vec<f64>,
+    rates: Vec<f64>,
+    c: usize,
+    steps: u64,
+    seed: u64,
+) -> fedqueue::simulator::SimResult {
+    let cfg = SimConfig {
+        seed,
+        ..SimConfig::new(
+            p,
+            ServiceDist::from_rates(&rates, ServiceFamily::Exponential),
+            c,
+            steps,
+        )
+    };
+    run(cfg).unwrap()
+}
+
+#[test]
+fn queue_lengths_match_theory_at_all_loads() {
+    let p = vec![0.25, 0.25, 0.25, 0.25];
+    let rates = vec![2.0, 1.5, 1.0, 0.5];
+    let net = ClosedNetwork::new(p.clone(), rates.clone()).unwrap();
+    for &c in &[1usize, 5, 20, 100] {
+        let res = sim(p.clone(), rates.clone(), c, 400_000, 0xA1 + c as u64);
+        let b = net.buzen(c);
+        for i in 0..4 {
+            let theory = b.mean_queue(i, c);
+            let emp = res.mean_queue[i];
+            let tol = 0.03 * c as f64 + 0.05;
+            assert!(
+                (emp - theory).abs() < tol,
+                "C={c} node {i}: sim {emp} vs theory {theory}"
+            );
+        }
+    }
+}
+
+#[test]
+fn throughput_matches_theory() {
+    let p = vec![0.1, 0.2, 0.3, 0.4];
+    let rates = vec![1.0, 2.0, 1.0, 3.0];
+    let net = ClosedNetwork::new(p.clone(), rates.clone()).unwrap();
+    for &c in &[2usize, 10, 50] {
+        let res = sim(p.clone(), rates.clone(), c, 300_000, 0xB2 + c as u64);
+        let theory = net.buzen(c).throughput(c);
+        let emp = res.step_rate(300_000);
+        assert!(
+            (emp / theory - 1.0).abs() < 0.02,
+            "C={c}: sim rate {emp} vs theory {theory}"
+        );
+    }
+}
+
+#[test]
+fn delays_match_throughput_estimator() {
+    // m_i (CS-step delays) from the simulator vs the arrival-theorem
+    // Λ(C)-rate estimate: the paper's central quantity.
+    let n = 10;
+    let p = vec![0.1; 10];
+    let rates: Vec<f64> = (0..n).map(|i| if i < 5 { 3.0 } else { 1.0 }).collect();
+    let net = ClosedNetwork::new(p.clone(), rates.clone()).unwrap();
+    for &c in &[5usize, 20, 100] {
+        let res = sim(p.clone(), rates.clone(), c, 300_000, 0xC3 + c as u64);
+        let an = net.mi_analysis(c, MiEstimator::Throughput);
+        for i in [0usize, 9] {
+            let emp = res.delay_steps[i].mean();
+            let th = an.m[i];
+            assert!(
+                (emp / th - 1.0).abs() < 0.25,
+                "C={c} node {i}: sim delay {emp} vs theory {th}"
+            );
+        }
+        // and the Prop-5 upper bound really is an upper bound (within noise)
+        let ub = net.mi_analysis(c, MiEstimator::UpperBound);
+        for i in 0..n {
+            assert!(
+                res.delay_steps[i].mean() <= ub.m[i] * 1.1,
+                "C={c} node {i}: delay {} exceeds UB {}",
+                res.delay_steps[i].mean(),
+                ub.m[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn service_distribution_insensitivity() {
+    // §2: deterministic vs exponential service with equal means barely
+    // changes the delay profile (the paper's robustness claim).
+    let n = 10;
+    let p = vec![0.1; 10];
+    let rates: Vec<f64> = (0..n).map(|i| if i < 5 { 2.0 } else { 1.0 }).collect();
+    let mut means = Vec::new();
+    for family in [ServiceFamily::Exponential, ServiceFamily::Deterministic] {
+        let cfg = SimConfig {
+            seed: 0xD4,
+            ..SimConfig::new(
+                p.clone(),
+                ServiceDist::from_rates(&rates, family),
+                20,
+                200_000,
+            )
+        };
+        let res = run(cfg).unwrap();
+        means.push((res.cluster_delay(0..5), res.cluster_delay(5..10)));
+    }
+    let (ef, es) = means[0];
+    let (df, ds) = means[1];
+    assert!((ef / df - 1.0).abs() < 0.25, "fast: exp {ef} vs det {df}");
+    assert!((es / ds - 1.0).abs() < 0.25, "slow: exp {es} vs det {ds}");
+}
+
+#[test]
+fn fig5_protocol_full_cross_validation() {
+    // n=10, μ=(1.2, 1.0), C=1000: simulator vs paper's empirical anchors
+    let n = 10;
+    let p = vec![0.1; 10];
+    let rates: Vec<f64> = (0..n).map(|i| if i < 5 { 1.2 } else { 1.0 }).collect();
+    let res = sim(p.clone(), rates.clone(), 1000, 400_000, 0xE5);
+    let fast = res.cluster_delay(0..5);
+    let slow = res.cluster_delay(5..10);
+    // paper: 59 and 1938 over 1e6 steps
+    assert!((fast - 59.0).abs() < 12.0, "fast {fast}, paper 59");
+    assert!((slow - 1938.0).abs() < 120.0, "slow {slow}, paper 1938");
+    // scaling closed forms stay above the empirical means
+    let tc = TwoCluster::uniform(10, 5, 1.2, 1.0, 1000);
+    let (bf, bs) = tc.delay_bounds();
+    assert!(bf > fast * 0.8 && bs > slow * 0.95, "bounds {bf}/{bs}");
+}
+
+#[test]
+fn optimal_sampling_effect_matches_app_f2() {
+    // p_fast = 7.5e-3: fast delay ÷~10, slow ÷~2 vs uniform (paper App F.2)
+    let n = 10;
+    let rates: Vec<f64> = (0..n).map(|i| if i < 5 { 1.2 } else { 1.0 }).collect();
+    let uni = sim(vec![0.1; 10], rates.clone(), 1000, 300_000, 0xF6);
+    let pf = 7.5e-3;
+    let q = (1.0 - 5.0 * pf) / 5.0;
+    let p: Vec<f64> = (0..n).map(|i| if i < 5 { pf } else { q }).collect();
+    let opt = sim(p, rates, 1000, 300_000, 0xF7);
+    let ratio_fast = uni.cluster_delay(0..5) / opt.cluster_delay(0..5);
+    let ratio_slow = uni.cluster_delay(5..10) / opt.cluster_delay(5..10);
+    assert!(ratio_fast > 5.0, "fast delay ratio {ratio_fast}, paper ~10");
+    assert!(
+        ratio_slow > 1.5 && ratio_slow < 3.0,
+        "slow delay ratio {ratio_slow}, paper ~2"
+    );
+}

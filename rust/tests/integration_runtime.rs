@@ -1,0 +1,168 @@
+//! Integration: the PJRT path (AOT JAX+Pallas HLO executed via the xla
+//! crate) must agree numerically with the native Rust backend — this is
+//! the L1/L2 ⇄ L3 contract.  Requires `make artifacts`; tests skip with a
+//! notice when artifacts are absent (plain `cargo test` before `make`).
+
+use fedqueue::data::Batch;
+use fedqueue::runtime::{Backend, Manifest, NativeBackend, PjrtBackend};
+use fedqueue::util::rng::Rng;
+
+fn artifacts_ready() -> bool {
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        true
+    } else {
+        eprintln!("[skip] artifacts not built — run `make artifacts`");
+        false
+    }
+}
+
+fn random_batch(b: usize, d: usize, c: usize, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let x: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
+    let mut onehot = vec![0.0f32; b * c];
+    for bi in 0..b {
+        onehot[bi * c + rng.usize_below(c)] = 1.0;
+    }
+    Batch { x, onehot, batch: b }
+}
+
+#[test]
+fn pjrt_loads_and_reports_platform() {
+    if !artifacts_ready() {
+        return;
+    }
+    let be = PjrtBackend::load(&Manifest::default_dir(), "tiny").unwrap();
+    assert_eq!(be.platform(), "cpu");
+    assert_eq!(be.variant_name(), "tiny");
+    assert_eq!(be.spec().input_dim, 48);
+}
+
+#[test]
+fn pjrt_train_step_matches_native() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut pj = PjrtBackend::load(&Manifest::default_dir(), "tiny").unwrap();
+    let spec = pj.spec().clone();
+    let mut nat = NativeBackend::new(spec.clone());
+    let model = spec.init_model(42);
+    let batch = random_batch(spec.train_batch, spec.input_dim, spec.classes, 7);
+
+    let (loss_p, grads_p) = pj.train_step(&model, &batch).unwrap();
+    let (loss_n, grads_n) = nat.train_step(&model, &batch).unwrap();
+    assert!(
+        (loss_p - loss_n).abs() < 1e-4 * (1.0 + loss_n.abs()),
+        "loss: pjrt {loss_p} vs native {loss_n}"
+    );
+    assert_eq!(grads_p.len(), grads_n.len());
+    for (ti, (gp, gn)) in grads_p.iter().zip(&grads_n).enumerate() {
+        assert_eq!(gp.len(), gn.len(), "tensor {ti} length");
+        let mut max_err = 0.0f64;
+        for (a, b) in gp.iter().zip(gn) {
+            max_err = max_err.max((*a as f64 - *b as f64).abs());
+        }
+        assert!(max_err < 5e-4, "tensor {ti}: max grad err {max_err}");
+    }
+}
+
+#[test]
+fn pjrt_eval_matches_native() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut pj = PjrtBackend::load(&Manifest::default_dir(), "tiny").unwrap();
+    let spec = pj.spec().clone();
+    let mut nat = NativeBackend::new(spec.clone());
+    let model = spec.init_model(3);
+    let batch = random_batch(spec.eval_batch, spec.input_dim, spec.classes, 9);
+    let (lp, cp) = pj.eval_batch(&model, &batch, spec.eval_batch).unwrap();
+    let (ln, cn) = nat.eval_batch(&model, &batch, spec.eval_batch).unwrap();
+    assert!((lp - ln).abs() < 1e-3 * (1.0 + ln.abs()), "loss {lp} vs {ln}");
+    assert_eq!(cp, cn, "correct counts must match exactly");
+}
+
+#[test]
+fn pjrt_eval_partial_batch_correction() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut pj = PjrtBackend::load(&Manifest::default_dir(), "tiny").unwrap();
+    let spec = pj.spec().clone();
+    let mut nat = NativeBackend::new(spec.clone());
+    let model = spec.init_model(5);
+    // a batch whose tail rows duplicate the last valid row (loader padding)
+    let mut batch = random_batch(spec.eval_batch, spec.input_dim, spec.classes, 11);
+    let valid = spec.eval_batch - 7;
+    let d = spec.input_dim;
+    let c = spec.classes;
+    for bi in valid..spec.eval_batch {
+        let src_x: Vec<f32> = batch.x[(valid - 1) * d..valid * d].to_vec();
+        batch.x[bi * d..(bi + 1) * d].copy_from_slice(&src_x);
+        let src_y: Vec<f32> = batch.onehot[(valid - 1) * c..valid * c].to_vec();
+        batch.onehot[bi * c..(bi + 1) * c].copy_from_slice(&src_y);
+    }
+    let (lp, cp) = pj.eval_batch(&model, &batch, valid).unwrap();
+    let (ln, cn) = nat.eval_batch(&model, &batch, valid).unwrap();
+    assert!((lp - ln).abs() < 1e-3 * (1.0 + ln.abs()), "loss {lp} vs {ln}");
+    assert!((cp - cn).abs() < 1e-6, "correct {cp} vs {cn}");
+}
+
+#[test]
+fn pjrt_sgd_training_reduces_loss() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut pj = PjrtBackend::load(&Manifest::default_dir(), "tiny").unwrap();
+    let spec = pj.spec().clone();
+    let mut model = spec.init_model(8);
+    let batch = random_batch(spec.train_batch, spec.input_dim, spec.classes, 13);
+    let (l0, _) = pj.train_step(&model, &batch).unwrap();
+    for _ in 0..25 {
+        let (_, g) = pj.train_step(&model, &batch).unwrap();
+        model.apply_update(&g, 0.1);
+    }
+    let (l1, _) = pj.train_step(&model, &batch).unwrap();
+    assert!(l1 < l0 * 0.7, "pjrt training loss {l0} -> {l1}");
+    assert!(pj.train_calls >= 27);
+}
+
+#[test]
+fn pjrt_rejects_shape_mismatches() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut pj = PjrtBackend::load(&Manifest::default_dir(), "tiny").unwrap();
+    let spec = pj.spec().clone();
+    let model = spec.init_model(1);
+    let mut batch = random_batch(spec.train_batch, spec.input_dim, spec.classes, 1);
+    batch.batch = spec.train_batch + 1;
+    assert!(pj.train_step(&model, &batch).is_err());
+    // wrong tensor count
+    let mut bad = model.clone();
+    bad.tensors.pop();
+    let batch = random_batch(spec.train_batch, spec.input_dim, spec.classes, 1);
+    assert!(pj.train_step(&bad, &batch).is_err());
+}
+
+#[test]
+fn malformed_artifact_fails_cleanly() {
+    // failure injection: corrupt HLO text must produce an error, not UB
+    let dir = std::env::temp_dir().join("fedqueue_bad_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("tiny_train.hlo.txt"), "HloModule garbage ENTRY {").unwrap();
+    std::fs::write(dir.join("tiny_eval.hlo.txt"), "not hlo at all").unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"format":"hlo-text","variants":{"tiny":{
+            "name":"tiny","input_dim":48,"hidden":[32],"classes":10,
+            "train_batch":16,"eval_batch":32,"n_params":1898,
+            "params":[{"name":"w0","shape":[48,32]}],
+            "train":{"file":"tiny_train.hlo.txt","outputs":5},
+            "eval":{"file":"tiny_eval.hlo.txt","outputs":2}}}}"#,
+    )
+    .unwrap();
+    let err = PjrtBackend::load(&dir, "tiny");
+    assert!(err.is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,186 @@
+//! Property-based tests (hand-rolled harness, see util::proptest) on the
+//! coordinator/queueing invariants the paper's analysis rests on.
+
+use fedqueue::fl::{ModelState, ServerAlgo, UpdateRule};
+use fedqueue::queueing::ClosedNetwork;
+use fedqueue::simulator::{Network, ServiceDist, ServiceFamily, SimConfig};
+use fedqueue::util::proptest::{check, Config, Gen, UsizeGen, WeightsGen};
+use fedqueue::util::rng::{AliasTable, Rng};
+
+fn normalize(w: &[f64]) -> Vec<f64> {
+    let s: f64 = w.iter().sum();
+    w.iter().map(|x| x / s).collect()
+}
+
+/// Population conservation (Σ X_i = C at every step) and constant
+/// in-flight cardinality (Lemma 9.i) for random networks.
+#[test]
+fn prop_population_conserved() {
+    let g = WeightsGen { len_lo: 2, len_hi: 12, w_lo: 0.05, w_hi: 5.0 };
+    check("population-conserved", &g, &Config { cases: 40, ..Default::default() }, |w| {
+        let n = w.len();
+        let p = normalize(w);
+        let rates: Vec<f64> = w.iter().map(|x| 0.2 + x).collect();
+        let c = 1 + (n * 2) / 3;
+        let cfg = SimConfig {
+            seed: 0x1234,
+            ..SimConfig::new(
+                p,
+                ServiceDist::from_rates(&rates, ServiceFamily::Exponential),
+                c,
+                0,
+            )
+        };
+        let mut net = Network::new(cfg).map_err(|e| e)?;
+        for step in 0..300 {
+            if net.population() != c {
+                return Err(format!("step {step}: population {} != C={c}", net.population()));
+            }
+            net.advance().ok_or("drained")?;
+        }
+        Ok(())
+    });
+}
+
+/// FIFO within a node: completion order equals dispatch order per node.
+#[test]
+fn prop_fifo_per_node() {
+    let g = UsizeGen { lo: 2, hi: 10 };
+    check("fifo-per-node", &g, &Config { cases: 25, ..Default::default() }, |&n| {
+        let p = vec![1.0 / n as f64; n];
+        let rates: Vec<f64> = (0..n).map(|i| 0.5 + i as f64 * 0.3).collect();
+        let cfg = SimConfig {
+            seed: 42 + n as u64,
+            record_tasks: true,
+            ..SimConfig::new(
+                p,
+                ServiceDist::from_rates(&rates, ServiceFamily::Exponential),
+                n,
+                2_000,
+            )
+        };
+        let res = fedqueue::simulator::run(cfg).map_err(|e| e)?;
+        let mut last_dispatch = vec![None::<u64>; n];
+        for t in &res.tasks {
+            let node = t.node as usize;
+            if let Some(prev) = last_dispatch[node] {
+                if t.dispatch_step < prev {
+                    return Err(format!(
+                        "node {node}: completed dispatch {} after {}",
+                        t.dispatch_step, prev
+                    ));
+                }
+            }
+            last_dispatch[node] = Some(t.dispatch_step);
+        }
+        Ok(())
+    });
+}
+
+/// Routing empirical frequencies match p (χ²-style tolerance).
+#[test]
+fn prop_routing_matches_p() {
+    let g = WeightsGen { len_lo: 2, len_hi: 8, w_lo: 0.1, w_hi: 3.0 };
+    check("routing-matches-p", &g, &Config { cases: 20, ..Default::default() }, |w| {
+        let p = normalize(w);
+        let alias = AliasTable::new(&p).map_err(|e| e)?;
+        let mut rng = Rng::new(7);
+        let trials = 60_000;
+        let mut counts = vec![0u64; p.len()];
+        for _ in 0..trials {
+            counts[alias.sample(&mut rng)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let f = c as f64 / trials as f64;
+            let sd = (p[i] * (1.0 - p[i]) / trials as f64).sqrt();
+            if (f - p[i]).abs() > 5.0 * sd + 1e-4 {
+                return Err(format!("index {i}: freq {f} vs p {}", p[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Generalized AsyncSGD unbiasedness: for random p and per-client constant
+/// gradients, the expected applied step equals the uniform average.
+#[test]
+fn prop_gen_async_unbiased() {
+    let g = WeightsGen { len_lo: 2, len_hi: 6, w_lo: 0.2, w_hi: 2.0 };
+    check("gasync-unbiased", &g, &Config { cases: 12, ..Default::default() }, |w| {
+        let p = normalize(w);
+        let n = p.len();
+        let alias = AliasTable::new(&p).map_err(|e| e)?;
+        let mut rng = Rng::new(0xBEEF);
+        let trials = 120_000;
+        let mut total = 0.0f64;
+        for _ in 0..trials {
+            let i = alias.sample(&mut rng);
+            let mut m = ModelState { tensors: vec![vec![0.0]], shapes: vec![vec![1]] };
+            let mut s = ServerAlgo::new(UpdateRule::GenAsync { eta: 1.0, p: p.clone() });
+            s.on_gradient(&mut m, i, &[vec![(i + 1) as f32]]);
+            total += -m.tensors[0][0] as f64;
+        }
+        let mean = total / trials as f64;
+        // E[step] = Σ_i p_i · g_i/(n p_i) = (1/n) Σ_i g_i  — independent of p
+        let want = (1..=n).map(|v| v as f64).sum::<f64>() / n as f64;
+        if (mean - want).abs() > 0.05 * want {
+            return Err(format!("mean step {mean} vs unbiased target {want}"));
+        }
+        Ok(())
+    });
+}
+
+/// Buzen marginals are valid distributions and means sum to C, for random
+/// networks (theory-side invariant).
+#[test]
+fn prop_buzen_marginals_consistent() {
+    let g = WeightsGen { len_lo: 2, len_hi: 9, w_lo: 0.05, w_hi: 4.0 };
+    check("buzen-marginals", &g, &Config { cases: 50, ..Default::default() }, |w| {
+        let p = normalize(w);
+        let rates: Vec<f64> = w.iter().rev().map(|x| 0.1 + x).collect();
+        let net = ClosedNetwork::new(p, rates).map_err(|e| e)?;
+        let c = 3 + w.len();
+        let b = net.buzen(c);
+        let mut total_mean = 0.0;
+        for i in 0..w.len() {
+            let mut mass = 0.0;
+            for k in 0..=c {
+                let q = b.pmf(i, k, c);
+                if !(0.0..=1.0 + 1e-9).contains(&q) {
+                    return Err(format!("pmf out of range: node {i} k {k}: {q}"));
+                }
+                mass += q;
+            }
+            if (mass - 1.0).abs() > 1e-8 {
+                return Err(format!("node {i}: pmf mass {mass}"));
+            }
+            total_mean += b.mean_queue(i, c);
+        }
+        if (total_mean - c as f64).abs() > 1e-6 {
+            return Err(format!("Σ E[X_i] = {total_mean} != C={c}"));
+        }
+        Ok(())
+    });
+}
+
+/// FedBuff applies exactly every z-th gradient regardless of arrival order.
+#[test]
+fn prop_fedbuff_cadence() {
+    let g = UsizeGen { lo: 1, hi: 12 };
+    check("fedbuff-cadence", &g, &Config { cases: 30, ..Default::default() }, |&z| {
+        let mut m = ModelState { tensors: vec![vec![0.0]], shapes: vec![vec![1]] };
+        let mut s = ServerAlgo::new(UpdateRule::FedBuff { eta: 0.1, z });
+        let mut rng = Rng::new(z as u64);
+        for k in 1..=(z * 7) {
+            let node = rng.usize_below(5);
+            let stepped = s.on_gradient(&mut m, node, &[vec![1.0]]);
+            if stepped != (k % z == 0) {
+                return Err(format!("z={z}: step at gradient {k} unexpected"));
+            }
+        }
+        if s.version != 7 {
+            return Err(format!("z={z}: {} versions, want 7", s.version));
+        }
+        Ok(())
+    });
+}
