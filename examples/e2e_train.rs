@@ -7,10 +7,13 @@
 //! the paper's Fig 6 protocol.  Logs the loss/accuracy curve to
 //! results/e2e_train.csv; the run is recorded in EXPERIMENTS.md.
 //!
+//! The experiment ships as a TOML scenario; pass --scenario to swap it.
+//!
 //!     make artifacts && cargo run --release --example e2e_train
-//!     (add --steps N / --variant wide / --backend native to override)
+//!     (add --scenario scenarios/fig6.toml, --steps N, --variant wide,
+//!      --backend native, --algo favano, --policy adaptive to override)
 
-use fedqueue::coordinator::{run_experiment, ExperimentConfig};
+use fedqueue::coordinator::Experiment;
 use fedqueue::runtime::BackendKind;
 use fedqueue::util::cli::Args;
 use fedqueue::util::table::Series;
@@ -19,26 +22,56 @@ use std::path::Path;
 fn main() -> Result<(), String> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv, &[])?;
-    let mut cfg = ExperimentConfig::fig6("gasync");
-    cfg.variant = args.str_or("variant", "cifar");
-    cfg.backend = args.str_or("backend", "pjrt").parse::<BackendKind>()?;
-    cfg.steps = args.u64_or("steps", 200)?;
-    cfg.eval_every = args.u64_or("eval-every", 20)?;
-    cfg.seed = args.u64_or("seed", 7)?;
-    cfg = cfg.with_optimal_p()?;
+    let mut cfg = match args.get("scenario") {
+        Some(p) => Experiment::from_scenario(Path::new(p))?,
+        None => {
+            // the Pallas flavor (no "_jnp") — this example IS the slow,
+            // TPU-faithful path
+            let mut c = Experiment::fig6("gasync");
+            c.variant = "cifar".into();
+            c.policy = "optimal".into();
+            c.seed = 7;
+            c
+        }
+    };
+    if let Some(v) = args.get("variant") {
+        cfg.variant = v.to_string();
+    }
+    if let Some(v) = args.get("backend") {
+        cfg.backend = v.parse::<BackendKind>()?;
+    }
+    if let Some(v) = args.get("algo") {
+        cfg.algo = v.to_string();
+    }
+    if let Some(v) = args.get("policy") {
+        cfg.policy = v.to_string();
+    }
+    cfg.steps = args.u64_or("steps", cfg.steps)?;
+    cfg.eval_every = args.u64_or("eval-every", cfg.eval_every)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.validate()?;
     println!(
-        "e2e: variant={} backend={:?} n={} C={} T={} p_fast={:.3e}",
-        cfg.variant, cfg.backend, cfg.n_clients, cfg.concurrency, cfg.steps,
-        cfg.p_fast.unwrap()
+        "e2e: variant={} backend={:?} algo={} policy={} n={} C={} T={}",
+        cfg.variant, cfg.backend, cfg.algo, cfg.policy, cfg.n_clients, cfg.concurrency,
+        cfg.steps
     );
-    let (m, rate) = fedqueue::coordinator::experiment::theory_summary(&cfg)?;
+    // resolve the policy once (the optimal policy runs a full optimizer
+    // sweep per construction) and reuse it for printing, theory, and the run
+    let policy = cfg.build_policy()?;
+    if cfg.policy == "optimal" {
+        println!("optimal p_fast = {:.3e}", policy.probs()[0]);
+    }
+    let (m, rate) =
+        fedqueue::coordinator::experiment::theory_summary_with(&cfg, policy.probs())?;
     println!(
         "theory: CS step rate {rate:.2}; expected delays fast {:.1} / slow {:.1} steps",
         m[..cfg.n_fast()].iter().sum::<f64>() / cfg.n_fast() as f64,
         m[cfg.n_fast()..].iter().sum::<f64>() / (cfg.n_clients - cfg.n_fast()) as f64
     );
+    let strategy = fedqueue::fl::StrategyRegistry::builtin()
+        .build(&cfg.algo, &cfg.strategy_params(policy.probs()))?;
     let t0 = std::time::Instant::now();
-    let res = run_experiment(&cfg)?;
+    let res = cfg.run_with(strategy, policy)?;
     println!("\nstep  vtime    train_loss  val_loss  val_acc");
     let mut s = Series::new(&["step", "virtual_time", "train_loss", "val_loss", "val_acc"]);
     for c in &res.curve {

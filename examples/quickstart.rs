@@ -4,18 +4,20 @@
 //! task with heterogeneous (fast/slow) clients, using the native backend so
 //! it works even before `make artifacts`.  Shows the paper's core effect:
 //! non-uniform sampling chosen from the queueing bound improves both the
-//! delay profile and the learning curve.
+//! delay profile and the learning curve.  Experiments are assembled with
+//! the fluent builder; algorithms and sampling policies resolve by name
+//! through the strategy/policy registries.
 //!
 //!     cargo run --release --example quickstart
 
 use fedqueue::bound::{BoundParams, MiSource, TwoClusterStudy};
-use fedqueue::coordinator::{run_experiment, ExperimentConfig};
+use fedqueue::coordinator::Experiment;
 use fedqueue::runtime::BackendKind;
 
 fn main() -> Result<(), String> {
     let n = 20;
     let mu_fast = 8.0;
-    // 1) pick the bound-optimal sampling probability for the fast cluster
+    // 1) inspect the bound landscape: what does the Theorem-1 optimizer buy?
     let study = TwoClusterStudy {
         params: BoundParams { a: 100.0, b: 20.0, l: 1.0, c: 5, t: 300, n },
         n_fast: n / 2,
@@ -39,30 +41,33 @@ fn main() -> Result<(), String> {
     );
 
     // 2) train with both samplers on the same task and compare accuracy
-    let base = ExperimentConfig {
-        variant: "tiny".into(),
-        backend: BackendKind::Native,
-        algo: "async".into(),
-        n_clients: n,
-        concurrency: 5,
-        steps: 300,
-        eta: 0.05,
-        fedbuff_z: 10,
-        slow_fraction: 0.5,
-        mu_fast,
-        p_fast: None,
-        n_train: 3_000,
-        n_val: 600,
-        classes_per_client: 7,
-        eval_every: 50,
-        seed: 42,
-    };
+    let base = Experiment::builder()
+        .variant("tiny")
+        .backend(BackendKind::Native)
+        .algo("async")
+        .policy("uniform")
+        .clients(n)
+        .concurrency(5)
+        .steps(300)
+        .eta(0.05)
+        .slow_fraction(0.5)
+        .mu_fast(mu_fast)
+        .n_train(3_000)
+        .n_val(600)
+        .classes_per_client(7)
+        .eval_every(50)
+        .seed(42)
+        .build()?;
     println!("\n== training (native backend, tiny variant) ==");
-    let res_uniform = run_experiment(&base)?;
+    let res_uniform = base.run()?;
     let mut tilted = base.clone();
     tilted.algo = "gasync".into();
-    tilted.p_fast = Some(best.p_fast);
-    let res_opt = run_experiment(&tilted)?;
+    tilted.policy = "optimal".into();
+    println!(
+        "gasync uses the bound-optimal policy: p_fast = {:.4}",
+        tilted.optimal_p_fast()?
+    );
+    let res_opt = tilted.run()?;
     println!("step  uniform-acc  gasync-acc");
     for (a, b) in res_uniform.curve.iter().zip(&res_opt.curve) {
         println!("{:>4}  {:>11.3}  {:>10.3}", a.step, a.val_accuracy, b.val_accuracy);

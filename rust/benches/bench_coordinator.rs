@@ -5,7 +5,7 @@
 
 use fedqueue::coordinator::{build_loaders, Driver, DriverConfig};
 use fedqueue::data::{generate, EvalBatches, Partition, PartitionScheme, SynthSpec};
-use fedqueue::fl::UpdateRule;
+use fedqueue::fl::GenAsync;
 use fedqueue::runtime::{Backend, NativeBackend};
 use fedqueue::simulator::{ServiceDist, ServiceFamily, SimConfig};
 use fedqueue::util::bench::Bencher;
@@ -43,17 +43,10 @@ fn main() {
             };
             let mut model = backend.spec().init_model(6);
             let mut driver = Driver::new(&mut backend, loaders, val_b);
-            let res = driver
-                .run(
-                    DriverConfig {
-                        sim,
-                        rule: UpdateRule::GenAsync { eta: 0.05, p },
-                        eval_every: 0,
-                        loss_window: 10,
-                    },
-                    &mut model,
-                )
-                .unwrap();
+            let mut dc =
+                DriverConfig::with_strategy(sim, Box::new(GenAsync::new(0.05, p))).unwrap();
+            dc.loss_window = 10;
+            let res = driver.run(dc, &mut model).unwrap();
             std::hint::black_box(res.final_accuracy);
         });
         println!("    -> {:.0} CS steps/s end-to-end", r.throughput(steps as f64));
@@ -86,17 +79,10 @@ fn main() {
             };
             let mut model = backend.spec().init_model(12);
             let mut driver = Driver::new(&mut backend, loaders, val_b);
-            let res = driver
-                .run(
-                    DriverConfig {
-                        sim,
-                        rule: UpdateRule::GenAsync { eta: 0.05, p },
-                        eval_every: 0,
-                        loss_window: 10,
-                    },
-                    &mut model,
-                )
-                .unwrap();
+            let mut dc =
+                DriverConfig::with_strategy(sim, Box::new(GenAsync::new(0.05, p))).unwrap();
+            dc.loss_window = 10;
+            let res = driver.run(dc, &mut model).unwrap();
             std::hint::black_box(res.final_accuracy);
         });
         println!("    -> {:.0} CS steps/s with ~free gradients", r.throughput(steps as f64));

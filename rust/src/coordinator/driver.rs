@@ -2,11 +2,11 @@
 //!
 //! Binds together:
 //!   * the **closed-network simulator** (virtual time, FIFO client queues,
-//!     routing `K_{k+1} ~ p`),
+//!     routing `K_{k+1}` drawn from a pluggable [`SamplingPolicy`]),
 //!   * the **gradient backend** (PJRT-executed AOT JAX/Pallas model, or the
 //!     native cross-check backend),
-//!   * the **server update rule** (Generalized AsyncSGD / AsyncSGD /
-//!     FedBuff),
+//!   * the **server strategy** (any [`ServerStrategy`] from the registry:
+//!     Generalized AsyncSGD / AsyncSGD / FedBuff / FedAvg / FAVANO / ...),
 //!   * per-client **data loaders** (non-iid shards).
 //!
 //! Faithful to the paper's semantics: the gradient completed at CS step `k`
@@ -15,8 +15,9 @@
 //! per in-flight task; Lemma 9's constant-cardinality invariant is asserted
 //! in tests).
 
+use super::policy::{SamplingPolicy, StaticPolicy};
 use crate::data::{ClientLoader, EvalBatches};
-use crate::fl::{ModelState, ServerAlgo, UpdateRule};
+use crate::fl::{GradientCtx, ModelState, ServerStrategy};
 use crate::runtime::Backend;
 use crate::simulator::{Network, SimConfig};
 use std::collections::HashMap;
@@ -46,17 +47,36 @@ pub struct TrainResult {
     /// wall-clock seconds total
     pub wall_secs: f64,
     pub steps: u64,
+    /// strategy name (registry key) the run used
+    pub strategy: String,
+    /// sampling-policy name the run used
+    pub policy: String,
+    /// server model versions applied (≤ steps for buffered strategies)
+    pub versions: u64,
 }
 
 pub struct DriverConfig {
-    /// closed-network dynamics (p, service rates, C, seed)
+    /// closed-network dynamics (reference p, service rates, C, seed)
     pub sim: SimConfig,
-    /// server update rule
-    pub rule: UpdateRule,
+    /// server update strategy
+    pub strategy: Box<dyn ServerStrategy>,
+    /// routing policy consulted at every dispatch
+    pub policy: Box<dyn SamplingPolicy>,
     /// evaluate every this many CS steps (0 = only at end)
     pub eval_every: u64,
     /// moving-average window for train loss reporting
     pub loss_window: usize,
+}
+
+impl DriverConfig {
+    /// Convenience: static-p routing taken from `sim.p`.
+    pub fn with_strategy(
+        sim: SimConfig,
+        strategy: Box<dyn ServerStrategy>,
+    ) -> Result<DriverConfig, String> {
+        let policy = Box::new(StaticPolicy::new(sim.p.clone())?);
+        Ok(DriverConfig { sim, strategy, policy, eval_every: 0, loss_window: 20 })
+    }
 }
 
 pub struct Driver<'a> {
@@ -76,15 +96,24 @@ impl<'a> Driver<'a> {
 
     /// Run `cfg.sim.steps` CS steps of the asynchronous algorithm.
     pub fn run(&mut self, cfg: DriverConfig, model: &mut ModelState) -> Result<TrainResult, String> {
-        let n = cfg.sim.p.len();
+        let DriverConfig { sim, strategy, policy, eval_every, loss_window } = cfg;
+        let mut strategy = strategy;
+        let n = sim.p.len();
         if self.loaders.len() != n {
             return Err(format!("{} loaders for n={n} clients", self.loaders.len()));
         }
-        let steps = cfg.sim.steps;
+        let steps = sim.steps;
         let wall0 = std::time::Instant::now();
         let mut backend_secs = 0.0f64;
-        let mut net = Network::new(cfg.sim)?;
-        let mut algo = ServerAlgo::new(cfg.rule);
+        let policy_name = policy.name();
+        let mut net = Network::with_policy(sim, policy)?;
+        // announce the C initial placements (all dispatched at step 0) so
+        // strategies that track in-flight tasks see every dispatch
+        for i in 0..n {
+            for _ in 0..net.queue_len(i) {
+                strategy.on_dispatch(i, 0, 0.0);
+            }
+        }
         // model snapshots per dispatch step; step 0 counts all initial
         // tasks.  Rc so handing a snapshot to the backend costs a pointer
         // copy, not a full parameter copy (§Perf: halves per-step memcpy).
@@ -114,25 +143,36 @@ impl<'a> Driver<'a> {
             let t0 = std::time::Instant::now();
             let (loss, grads) = self.backend.train_step(&dispatched, &batch)?;
             backend_secs += t0.elapsed().as_secs_f64();
-            algo.on_gradient(model, node, &grads);
-            // bookkeeping
             let d = out.record.delay_steps();
+            strategy.on_gradient(
+                model,
+                &GradientCtx {
+                    node,
+                    step: k,
+                    time: out.time,
+                    delay_steps: d,
+                    dispatch_prob: out.record.dispatch_prob,
+                    grads: &grads,
+                },
+            );
+            // bookkeeping
             delay_sum[node] += d as f64;
             delay_cnt[node] += 1;
             tau_max = tau_max.max(d);
             recent_losses.push(loss);
-            if recent_losses.len() > cfg.loss_window.max(1) {
+            if recent_losses.len() > loss_window.max(1) {
                 recent_losses.remove(0);
             }
             // dispatch of the fresh task (already performed inside advance):
             // snapshot the CURRENT server model for it
             snapshots.insert(k + 1, (Rc::new(model.clone()), 1));
+            strategy.on_dispatch(out.next_node as usize, k + 1, out.time);
             debug_assert_eq!(
                 snapshots.values().map(|(_, c)| *c as usize).sum::<usize>(),
                 net.population(),
                 "in-flight snapshot count must equal C (Lemma 9)"
             );
-            let do_eval = cfg.eval_every > 0 && (k + 1) % cfg.eval_every == 0;
+            let do_eval = eval_every > 0 && (k + 1) % eval_every == 0;
             if do_eval || k + 1 == steps {
                 let t0 = std::time::Instant::now();
                 let ev = self.backend.evaluate(model, &self.val)?;
@@ -161,6 +201,9 @@ impl<'a> Driver<'a> {
             backend_secs,
             wall_secs: wall0.elapsed().as_secs_f64(),
             steps,
+            strategy: strategy.name().to_string(),
+            policy: policy_name,
+            versions: strategy.version(),
         })
     }
 }
@@ -190,20 +233,11 @@ pub fn build_loaders(
     Ok(out)
 }
 
-/// The update rule for a named algorithm + sampling distribution.
-pub fn rule_for(algo: &str, eta: f64, p: &[f64], fedbuff_z: usize) -> Result<UpdateRule, String> {
-    match algo {
-        "gasync" | "generalized" => Ok(UpdateRule::GenAsync { eta, p: p.to_vec() }),
-        "async" | "asyncsgd" => Ok(UpdateRule::AsyncSgd { eta }),
-        "fedbuff" => Ok(UpdateRule::FedBuff { eta, z: fedbuff_z }),
-        other => Err(format!("unknown async algorithm '{other}' (gasync|async|fedbuff)")),
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::{generate, Partition, PartitionScheme, SynthSpec};
+    use crate::fl::{GenAsync, StrategyParams, StrategyRegistry};
     use crate::runtime::{Backend, NativeBackend};
     use crate::simulator::{ServiceDist, ServiceFamily};
     use std::sync::Arc;
@@ -240,24 +274,25 @@ mod tests {
         (backend, loaders, val_batches, sim, model)
     }
 
+    fn gasync_cfg(sim: SimConfig, eta: f64, eval_every: u64) -> DriverConfig {
+        let p = sim.p.clone();
+        let mut cfg =
+            DriverConfig::with_strategy(sim, Box::new(GenAsync::new(eta, p))).unwrap();
+        cfg.eval_every = eval_every;
+        cfg.loss_window = 20;
+        cfg
+    }
+
     #[test]
     fn gasync_training_improves_accuracy() {
         let (mut be, loaders, val, sim, mut model) = setup(8, 150);
-        let p = sim.p.clone();
         let mut driver = Driver::new(&mut be, loaders, val);
-        let res = driver
-            .run(
-                DriverConfig {
-                    sim,
-                    rule: UpdateRule::GenAsync { eta: 0.05, p },
-                    eval_every: 50,
-                    loss_window: 20,
-                },
-                &mut model,
-            )
-            .unwrap();
+        let res = driver.run(gasync_cfg(sim, 0.05, 50), &mut model).unwrap();
         assert_eq!(res.steps, 150);
         assert_eq!(res.curve.len(), 3);
+        assert_eq!(res.strategy, "gasync");
+        assert_eq!(res.policy, "static");
+        assert_eq!(res.versions, 150);
         assert!(
             res.final_accuracy > 0.3,
             "accuracy {} should beat 0.1 chance",
@@ -270,17 +305,18 @@ mod tests {
     }
 
     #[test]
-    fn all_async_rules_run() {
-        for algo in ["gasync", "async", "fedbuff"] {
+    fn all_registered_strategies_run() {
+        let reg = StrategyRegistry::builtin();
+        for algo in reg.names() {
             let (mut be, loaders, val, sim, mut model) = setup(6, 60);
-            let p = sim.p.clone();
-            let rule = rule_for(algo, 0.05, &p, 5).unwrap();
+            let prm = StrategyParams::new(0.05, sim.p.clone());
+            let strategy = reg.build(&algo, &prm).unwrap();
+            let cfg = DriverConfig::with_strategy(sim, strategy).unwrap();
             let mut driver = Driver::new(&mut be, loaders, val);
-            let res = driver
-                .run(DriverConfig { sim, rule, eval_every: 0, loss_window: 10 }, &mut model)
-                .unwrap();
+            let res = driver.run(cfg, &mut model).unwrap();
             assert_eq!(res.curve.len(), 1, "{algo}: final eval only");
-            assert!(res.final_accuracy > 0.05, "{algo}");
+            assert_eq!(res.strategy, algo);
+            assert!(res.final_accuracy > 0.05, "{algo}: {}", res.final_accuracy);
         }
     }
 
@@ -288,19 +324,8 @@ mod tests {
     fn deterministic_given_seeds() {
         let run_once = || {
             let (mut be, loaders, val, sim, mut model) = setup(6, 40);
-            let p = sim.p.clone();
             let mut driver = Driver::new(&mut be, loaders, val);
-            driver
-                .run(
-                    DriverConfig {
-                        sim,
-                        rule: UpdateRule::GenAsync { eta: 0.05, p },
-                        eval_every: 0,
-                        loss_window: 10,
-                    },
-                    &mut model,
-                )
-                .unwrap();
+            driver.run(gasync_cfg(sim, 0.05, 0), &mut model).unwrap();
             (model.l2_norm(), model.tensors[0][0])
         };
         let a = run_once();
@@ -313,19 +338,8 @@ mod tests {
     fn stale_gradients_are_used() {
         // with C=4 tasks over 6 nodes some gradients must be delayed ≥1 step
         let (mut be, loaders, val, sim, mut model) = setup(6, 80);
-        let p = sim.p.clone();
         let mut driver = Driver::new(&mut be, loaders, val);
-        let res = driver
-            .run(
-                DriverConfig {
-                    sim,
-                    rule: UpdateRule::GenAsync { eta: 0.02, p },
-                    eval_every: 0,
-                    loss_window: 10,
-                },
-                &mut model,
-            )
-            .unwrap();
+        let res = driver.run(gasync_cfg(sim, 0.02, 0), &mut model).unwrap();
         assert!(res.tau_max >= 2, "tau_max {} suspiciously small", res.tau_max);
         let mean_delay: f64 = res.mean_delay.iter().filter(|d| d.is_finite()).sum::<f64>();
         assert!(mean_delay > 0.0);
@@ -334,21 +348,10 @@ mod tests {
     #[test]
     fn loader_count_validated() {
         let (mut be, loaders, val, sim, mut model) = setup(6, 10);
-        let p = sim.p.clone();
         let mut short = loaders;
         short.pop();
         let mut driver = Driver::new(&mut be, short, val);
-        let err = driver
-            .run(
-                DriverConfig {
-                    sim,
-                    rule: UpdateRule::GenAsync { eta: 0.05, p },
-                    eval_every: 0,
-                    loss_window: 10,
-                },
-                &mut model,
-            )
-            .unwrap_err();
+        let err = driver.run(gasync_cfg(sim, 0.05, 0), &mut model).unwrap_err();
         assert!(err.contains("loaders"));
     }
 
@@ -358,19 +361,28 @@ mod tests {
         // tilt: fast nodes (0..4) sampled less — the paper's optimal shape
         let mut p = vec![0.08; 4];
         p.extend(vec![0.17; 4]);
-        sim.p = p.clone();
+        sim.p = p;
         let mut driver = Driver::new(&mut be, loaders, val);
-        let res = driver
-            .run(
-                DriverConfig {
-                    sim,
-                    rule: UpdateRule::GenAsync { eta: 0.05, p },
-                    eval_every: 0,
-                    loss_window: 10,
-                },
-                &mut model,
-            )
-            .unwrap();
+        let res = driver.run(gasync_cfg(sim, 0.05, 0), &mut model).unwrap();
         assert!(res.final_accuracy > 0.3, "accuracy {}", res.final_accuracy);
+    }
+
+    #[test]
+    fn adaptive_policy_trains_end_to_end() {
+        use crate::coordinator::policy::AdaptiveQueuePolicy;
+        let (mut be, loaders, val, sim, mut model) = setup(8, 150);
+        let p = sim.p.clone();
+        let policy = AdaptiveQueuePolicy::new(p.clone(), 0.5).unwrap();
+        let cfg = DriverConfig {
+            sim,
+            strategy: Box::new(GenAsync::new(0.05, p)),
+            policy: Box::new(policy),
+            eval_every: 0,
+            loss_window: 20,
+        };
+        let mut driver = Driver::new(&mut be, loaders, val);
+        let res = driver.run(cfg, &mut model).unwrap();
+        assert!(res.policy.starts_with("adaptive"), "{}", res.policy);
+        assert!(res.final_accuracy > 0.25, "accuracy {}", res.final_accuracy);
     }
 }

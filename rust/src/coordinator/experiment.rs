@@ -1,24 +1,42 @@
 //! Experiment runner: the full §5 protocol — dataset, non-iid partition,
-//! two-speed clients, algorithm selection, multi-seed repetition with
-//! mean ± std reporting (Table 2), and CSV curve dumps (Figs 6/7).
+//! two-speed clients, strategy + sampling-policy selection through the
+//! registries, multi-seed repetition with mean ± std reporting (Table 2),
+//! and CSV curve dumps (Figs 6/7).
+//!
+//! An [`Experiment`] is assembled three ways, all equivalent:
+//!   * the fluent [`Experiment::builder`] (programmatic use, examples),
+//!   * a TOML scenario file via [`Experiment::from_scenario`]
+//!     (`fedqueue train --scenario scenarios/fig6.toml`),
+//!   * CLI flags layered over either (see `main.rs`).
+//!
+//! Algorithm and sampling-policy names resolve through
+//! [`StrategyRegistry`] / [`PolicyRegistry`], so third-party strategies and
+//! policies plug in without touching this file or the driver.
 
-use super::driver::{build_loaders, rule_for, Driver, DriverConfig, TrainResult};
+use super::driver::{build_loaders, Driver, DriverConfig, TrainResult};
+use super::policy::{PolicyCtx, PolicyRegistry, SamplingPolicy};
 use crate::data::{generate, EvalBatches, Partition, PartitionScheme, SynthSpec};
+use crate::fl::{ServerStrategy, StrategyParams, StrategyRegistry};
 use crate::queueing::{ClosedNetwork, MiEstimator};
 use crate::runtime::{make_backend, BackendKind};
 use crate::simulator::{InitPlacement, ServiceDist, ServiceFamily, SimConfig};
 use crate::util::rng::Rng;
 use crate::util::stats::Welford;
+use crate::util::toml::Doc;
+use std::path::Path;
 use std::sync::Arc;
 
 /// Everything needed to reproduce one DL experiment run.
 #[derive(Clone, Debug)]
-pub struct ExperimentConfig {
-    /// "cifar" | "tiny" | "wide" | "tinyimg" — must exist in the manifest
+pub struct Experiment {
+    /// "cifar" | "tiny" | "wide" | "tinyimg" (+ "_jnp" flavors) — must
+    /// exist in the manifest for non-native backends
     pub variant: String,
     pub backend: BackendKind,
-    /// "gasync" | "async" | "fedbuff"
+    /// server strategy, resolved via [`StrategyRegistry`]
     pub algo: String,
+    /// sampling policy, resolved via [`PolicyRegistry`]
+    pub policy: String,
     pub n_clients: usize,
     /// concurrency C (tasks in flight)
     pub concurrency: usize,
@@ -26,12 +44,19 @@ pub struct ExperimentConfig {
     pub steps: u64,
     pub eta: f64,
     pub fedbuff_z: usize,
+    /// FedAvg round barrier (0 = auto: max(2, n/10))
+    pub fedavg_s: usize,
+    /// FAVANO slice length Δ in virtual time
+    pub favano_interval: f64,
     /// fraction of clients that are slow (paper: half)
     pub slow_fraction: f64,
     /// fast service rate (slow is 1.0)
     pub mu_fast: f64,
-    /// per-fast-node selection probability; None = uniform
+    /// per-fast-node selection probability for the static policy;
+    /// None = uniform base
     pub p_fast: Option<f64>,
+    /// queue-pressure strength for the adaptive policy
+    pub gamma: f64,
     /// dataset sizes
     pub n_train: usize,
     pub n_val: usize,
@@ -41,31 +66,164 @@ pub struct ExperimentConfig {
     pub seed: u64,
 }
 
-impl ExperimentConfig {
+impl Experiment {
+    /// Start from sane laptop-scale defaults (tiny variant, native backend)
+    /// and override fluently.
+    pub fn builder() -> ExperimentBuilder {
+        ExperimentBuilder {
+            exp: Experiment {
+                variant: "tiny".into(),
+                backend: BackendKind::Native,
+                algo: "gasync".into(),
+                policy: "static".into(),
+                n_clients: 20,
+                concurrency: 5,
+                steps: 120,
+                eta: 0.05,
+                fedbuff_z: 10,
+                fedavg_s: 0,
+                favano_interval: 4.0,
+                slow_fraction: 0.5,
+                mu_fast: 4.0,
+                p_fast: None,
+                gamma: 0.5,
+                n_train: 2_000,
+                n_val: 400,
+                classes_per_client: 7,
+                eval_every: 20,
+                seed: 0,
+            },
+        }
+    }
+
     /// The paper's Fig 6 protocol scaled to this testbed: n=100 clients,
     /// half slow, non-iid 7-of-10, 200 CS steps, batch from the manifest.
     /// Uses the jnp artifact flavor (same numerics as the Pallas flavor —
     /// verified in tests — but 8× faster on XLA:CPU, see §Perf); the
     /// Pallas flavor is exercised by examples/e2e_train.
-    pub fn fig6(algo: &str) -> ExperimentConfig {
-        ExperimentConfig {
-            variant: "cifar_jnp".into(),
-            backend: BackendKind::Pjrt,
-            algo: algo.into(),
-            n_clients: 100,
-            concurrency: 10,
-            steps: 200,
-            eta: 0.1,
-            fedbuff_z: 10,
-            slow_fraction: 0.5,
-            mu_fast: 4.0,
-            p_fast: None,
-            n_train: 20_000,
-            n_val: 2_000,
-            classes_per_client: 7,
-            eval_every: 20,
-            seed: 0,
+    pub fn fig6(algo: &str) -> Experiment {
+        let mut exp = Experiment::builder()
+            .variant("cifar_jnp")
+            .backend(BackendKind::Pjrt)
+            .clients(100)
+            .concurrency(10)
+            .steps(200)
+            .eta(0.1)
+            .fedbuff_z(10)
+            .slow_fraction(0.5)
+            .mu_fast(4.0)
+            .n_train(20_000)
+            .n_val(2_000)
+            .classes_per_client(7)
+            .eval_every(20)
+            .seed(0)
+            .build()
+            .expect("fig6 defaults are valid");
+        // caller-supplied name: checked at run time through the registry
+        // (like every other stringly entrypoint), not panicked on here
+        exp.algo = algo.to_string();
+        exp
+    }
+
+    /// Load an experiment from a TOML scenario file (tables `[experiment]`,
+    /// `[policy]`, `[strategy]`; see `scenarios/*.toml`).
+    pub fn from_scenario(path: &Path) -> Result<Experiment, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("scenario {}: {e}", path.display()))?;
+        Experiment::from_toml(&text)
+            .map_err(|e| format!("scenario {}: {e}", path.display()))
+    }
+
+    /// Parse a scenario from TOML text.
+    pub fn from_toml(text: &str) -> Result<Experiment, String> {
+        let doc = Doc::parse(text)?;
+        // strict getters: a present key with the wrong type or a negative
+        // count is a config error, not a silent fallback to the default
+        let count = |table: &str, key: &str, default: i64| -> Result<i64, String> {
+            match doc.get(table, key) {
+                None => Ok(default),
+                Some(v) => match v.as_i64() {
+                    Some(i) if i >= 0 => Ok(i),
+                    Some(i) => Err(format!("[{table}] {key} = {i} must be >= 0")),
+                    None => Err(format!("[{table}] {key} must be a non-negative integer")),
+                },
+            }
+        };
+        let float = |table: &str, key: &str, default: f64| -> Result<f64, String> {
+            match doc.get(table, key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| format!("[{table}] {key} must be a number")),
+            }
+        };
+        let string = |table: &str, key: &str, default: &str| -> Result<String, String> {
+            match doc.get(table, key) {
+                None => Ok(default.to_string()),
+                Some(v) => v
+                    .as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| format!("[{table}] {key} must be a string")),
+            }
+        };
+        for (table, keys) in &doc.tables {
+            let known: &[&str] = match table.as_str() {
+                "" => &[],
+                "experiment" => &[
+                    "variant",
+                    "backend",
+                    "algo",
+                    "clients",
+                    "concurrency",
+                    "steps",
+                    "eta",
+                    "slow_fraction",
+                    "mu_fast",
+                    "n_train",
+                    "n_val",
+                    "classes_per_client",
+                    "eval_every",
+                    "seed",
+                ],
+                "policy" => &["kind", "p_fast", "gamma"],
+                "strategy" => &["fedbuff_z", "fedavg_s", "favano_interval"],
+                other => return Err(format!("unknown table [{other}] (experiment|policy|strategy)")),
+            };
+            for k in keys.keys() {
+                if !known.contains(&k.as_str()) {
+                    return Err(format!(
+                        "unknown key '{k}' in [{table}] (known: {})",
+                        known.join(", ")
+                    ));
+                }
+            }
         }
+        let mut b = Experiment::builder();
+        let e = "experiment";
+        b = b
+            .variant(&string(e, "variant", "tiny")?)
+            .algo(&string(e, "algo", "gasync")?)
+            .clients(count(e, "clients", 20)? as usize)
+            .concurrency(count(e, "concurrency", 5)? as usize)
+            .steps(count(e, "steps", 120)? as u64)
+            .eta(float(e, "eta", 0.05)?)
+            .slow_fraction(float(e, "slow_fraction", 0.5)?)
+            .mu_fast(float(e, "mu_fast", 4.0)?)
+            .n_train(count(e, "n_train", 2_000)? as usize)
+            .n_val(count(e, "n_val", 400)? as usize)
+            .classes_per_client(count(e, "classes_per_client", 7)? as usize)
+            .eval_every(count(e, "eval_every", 20)? as u64)
+            .seed(count(e, "seed", 0)? as u64)
+            .backend(string(e, "backend", "native")?.parse::<BackendKind>()?)
+            .policy(&string("policy", "kind", "static")?)
+            .adaptive_gamma(float("policy", "gamma", 0.5)?)
+            .fedbuff_z(count("strategy", "fedbuff_z", 10)? as usize)
+            .fedavg_s(count("strategy", "fedavg_s", 0)? as usize)
+            .favano_interval(float("strategy", "favano_interval", 4.0)?);
+        if doc.get("policy", "p_fast").is_some() {
+            b = b.p_fast(float("policy", "p_fast", 0.0)?);
+        }
+        b.build()
     }
 
     /// Service rates: fast first, then slow (rate 1).
@@ -81,7 +239,8 @@ impl ExperimentConfig {
         self.n_clients - (self.n_clients as f64 * self.slow_fraction).round() as usize
     }
 
-    /// Sampling probabilities (p_fast for fast nodes, complement for slow).
+    /// Base sampling probabilities (p_fast for fast nodes, complement for
+    /// slow) — the static policy's distribution.
     pub fn p_vec(&self) -> Vec<f64> {
         match self.p_fast {
             None => vec![1.0 / self.n_clients as f64; self.n_clients],
@@ -104,74 +263,288 @@ impl ExperimentConfig {
         }
     }
 
-    /// Pick the bound-optimal p_fast via the Theorem-1 optimizer.
-    pub fn with_optimal_p(mut self) -> Result<ExperimentConfig, String> {
-        use crate::bound::{BoundParams, MiSource, TwoClusterStudy};
-        let study = TwoClusterStudy {
-            params: BoundParams {
-                a: 100.0,
-                b: 20.0,
-                l: 1.0,
-                c: self.concurrency,
-                t: self.steps,
-                n: self.n_clients,
-            },
+    /// Shape handed to policy constructors.
+    pub fn policy_ctx(&self) -> PolicyCtx {
+        PolicyCtx {
+            n: self.n_clients,
+            base_p: self.p_vec(),
+            gamma: self.gamma,
             n_fast: self.n_fast(),
             mu_fast: self.mu_fast,
             mu_slow: 1.0,
-            source: MiSource::default(),
+            concurrency: self.concurrency,
+            steps: self.steps,
+        }
+    }
+
+    /// Knobs handed to strategy constructors, given the distribution the
+    /// resolved policy starts from.
+    pub fn strategy_params(&self, p: &[f64]) -> StrategyParams {
+        StrategyParams {
+            eta: self.eta,
+            p: p.to_vec(),
+            fedbuff_z: self.fedbuff_z,
+            fedavg_s: self.fedavg_s,
+            favano_interval: self.favano_interval,
+        }
+    }
+
+    /// The bound-optimal per-fast-node probability for this experiment's
+    /// two-cluster shape — exactly what the `optimal` policy will use.
+    pub fn optimal_p_fast(&self) -> Result<f64, String> {
+        let pol = super::policy::optimal_two_cluster(&self.policy_ctx())?;
+        Ok(pol.probs()[0])
+    }
+
+    /// Structural validation (builder `build()` calls this; call it again
+    /// after mutating fields directly).
+    pub fn validate(&self) -> Result<(), String> {
+        self.validate_shapes_only()?;
+        if !(self.eta > 0.0) || !self.eta.is_finite() {
+            return Err(format!("eta {} must be positive", self.eta));
+        }
+        if !(0.0..=1.0).contains(&self.slow_fraction) {
+            return Err(format!("slow_fraction {} must be in [0,1]", self.slow_fraction));
+        }
+        if !(self.mu_fast > 0.0) {
+            return Err(format!("mu_fast {} must be positive", self.mu_fast));
+        }
+        if let Some(pf) = self.p_fast {
+            let nf = self.n_fast();
+            if nf == 0 || nf >= self.n_clients {
+                return Err("p_fast needs a two-cluster population".into());
+            }
+            let q = (1.0 - nf as f64 * pf) / (self.n_clients - nf) as f64;
+            if !(pf > 0.0) || q <= 0.0 {
+                return Err(format!(
+                    "p_fast {pf} leaves no probability mass for slow nodes (q = {q})"
+                ));
+            }
+        }
+        let strategies = StrategyRegistry::builtin();
+        if !strategies.contains(&self.algo) {
+            return Err(format!(
+                "unknown algorithm '{}' (available: {})",
+                self.algo,
+                strategies.names().join("|")
+            ));
+        }
+        let policies = PolicyRegistry::builtin();
+        if !policies.contains(&self.policy) {
+            return Err(format!(
+                "unknown sampling policy '{}' (available: {})",
+                self.policy,
+                policies.names().join("|")
+            ));
+        }
+        Ok(())
+    }
+
+    /// Resolve the configured policy through the registry.
+    pub fn build_policy(&self) -> Result<Box<dyn SamplingPolicy>, String> {
+        PolicyRegistry::builtin().build(&self.policy, &self.policy_ctx())
+    }
+
+    /// Run end to end with registry-resolved strategy and policy.
+    pub fn run(&self) -> Result<TrainResult, String> {
+        let policy = self.build_policy()?;
+        let strategy = StrategyRegistry::builtin()
+            .build(&self.algo, &self.strategy_params(policy.probs()))?;
+        self.run_with(strategy, policy)
+    }
+
+    /// Run with explicit trait objects — the escape hatch for strategies
+    /// and policies that are not (yet) registered.
+    pub fn run_with(
+        &self,
+        strategy: Box<dyn ServerStrategy>,
+        policy: Box<dyn SamplingPolicy>,
+    ) -> Result<TrainResult, String> {
+        self.validate_shapes_only()?;
+        let sspec = self.synth_spec();
+        let mut backend = make_backend(self.backend, &self.variant, None)?;
+        let bspec = backend.spec().clone();
+        if bspec.input_dim != sspec.dim() || bspec.classes != sspec.classes {
+            return Err(format!(
+                "variant {} expects {}→{} but dataset is {}→{}",
+                self.variant,
+                bspec.input_dim,
+                bspec.classes,
+                sspec.dim(),
+                sspec.classes
+            ));
+        }
+        // the DATASET is fixed across seeds (as CIFAR-10 is in the paper);
+        // self.seed varies the partition, init, loaders and queueing
+        // dynamics.
+        let train = Arc::new(generate(&sspec, self.n_train, 0xDA7A));
+        let val = generate(&sspec, self.n_val, 0x7A11);
+        let scheme = if self.classes_per_client == 0 {
+            PartitionScheme::Iid
+        } else {
+            PartitionScheme::ClassSubset { classes_per_client: self.classes_per_client }
         };
-        let (best, _) = study.optimize_p(50)?;
-        self.p_fast = Some(best.p_fast);
-        Ok(self)
+        let partition = Partition::build(&train, self.n_clients, scheme, self.seed ^ 0x9A47)?;
+        let loaders =
+            build_loaders(train, &partition, bspec.train_batch, true, self.seed ^ 0x10AD)?;
+        let val_batches = EvalBatches::new(&val, bspec.eval_batch);
+        let sim = SimConfig {
+            seed: self.seed ^ 0x51AA,
+            init: InitPlacement::Routed,
+            ..SimConfig::new(
+                policy.probs().to_vec(),
+                ServiceDist::from_rates(&self.rates(), ServiceFamily::Exponential),
+                self.concurrency,
+                self.steps,
+            )
+        };
+        let mut model = bspec.init_model(self.seed ^ 0x1417);
+        let mut driver = Driver::new(backend.as_mut(), loaders, val_batches);
+        driver.run(
+            DriverConfig {
+                sim,
+                strategy,
+                policy,
+                eval_every: self.eval_every,
+                loss_window: 20,
+            },
+            &mut model,
+        )
+    }
+
+    /// The subset of `validate` that does not consult the registries —
+    /// `run_with` accepts unregistered trait objects.
+    fn validate_shapes_only(&self) -> Result<(), String> {
+        if self.n_clients < 2 {
+            return Err(format!("n_clients {} must be >= 2", self.n_clients));
+        }
+        if self.concurrency == 0 {
+            return Err("concurrency C must be >= 1".into());
+        }
+        if self.steps == 0 {
+            return Err("steps T must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// Fluent builder returned by [`Experiment::builder`].
+#[derive(Clone, Debug)]
+pub struct ExperimentBuilder {
+    exp: Experiment,
+}
+
+impl ExperimentBuilder {
+    pub fn variant(mut self, v: &str) -> Self {
+        self.exp.variant = v.to_string();
+        self
+    }
+
+    pub fn backend(mut self, b: BackendKind) -> Self {
+        self.exp.backend = b;
+        self
+    }
+
+    pub fn algo(mut self, a: &str) -> Self {
+        self.exp.algo = a.to_string();
+        self
+    }
+
+    pub fn policy(mut self, p: &str) -> Self {
+        self.exp.policy = p.to_string();
+        self
+    }
+
+    pub fn clients(mut self, n: usize) -> Self {
+        self.exp.n_clients = n;
+        self
+    }
+
+    pub fn concurrency(mut self, c: usize) -> Self {
+        self.exp.concurrency = c;
+        self
+    }
+
+    pub fn steps(mut self, t: u64) -> Self {
+        self.exp.steps = t;
+        self
+    }
+
+    pub fn eta(mut self, e: f64) -> Self {
+        self.exp.eta = e;
+        self
+    }
+
+    pub fn fedbuff_z(mut self, z: usize) -> Self {
+        self.exp.fedbuff_z = z;
+        self
+    }
+
+    pub fn fedavg_s(mut self, s: usize) -> Self {
+        self.exp.fedavg_s = s;
+        self
+    }
+
+    pub fn favano_interval(mut self, d: f64) -> Self {
+        self.exp.favano_interval = d;
+        self
+    }
+
+    pub fn slow_fraction(mut self, f: f64) -> Self {
+        self.exp.slow_fraction = f;
+        self
+    }
+
+    pub fn mu_fast(mut self, mu: f64) -> Self {
+        self.exp.mu_fast = mu;
+        self
+    }
+
+    pub fn p_fast(mut self, pf: f64) -> Self {
+        self.exp.p_fast = Some(pf);
+        self
+    }
+
+    pub fn adaptive_gamma(mut self, g: f64) -> Self {
+        self.exp.gamma = g;
+        self
+    }
+
+    pub fn n_train(mut self, n: usize) -> Self {
+        self.exp.n_train = n;
+        self
+    }
+
+    pub fn n_val(mut self, n: usize) -> Self {
+        self.exp.n_val = n;
+        self
+    }
+
+    pub fn classes_per_client(mut self, k: usize) -> Self {
+        self.exp.classes_per_client = k;
+        self
+    }
+
+    pub fn eval_every(mut self, e: u64) -> Self {
+        self.exp.eval_every = e;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.exp.seed = s;
+        self
+    }
+
+    /// Validate and produce the experiment.
+    pub fn build(self) -> Result<Experiment, String> {
+        self.exp.validate()?;
+        Ok(self.exp)
     }
 }
 
 /// Run one experiment end to end.  Returns the training result.
-pub fn run_experiment(cfg: &ExperimentConfig) -> Result<TrainResult, String> {
-    let sspec = cfg.synth_spec();
-    let mut backend = make_backend(cfg.backend, &cfg.variant, None)?;
-    let bspec = backend.spec().clone();
-    if bspec.input_dim != sspec.dim() || bspec.classes != sspec.classes {
-        return Err(format!(
-            "variant {} expects {}→{} but dataset is {}→{}",
-            cfg.variant,
-            bspec.input_dim,
-            bspec.classes,
-            sspec.dim(),
-            sspec.classes
-        ));
-    }
-    // the DATASET is fixed across seeds (as CIFAR-10 is in the paper);
-    // cfg.seed varies the partition, init, loaders and queueing dynamics.
-    let train = Arc::new(generate(&sspec, cfg.n_train, 0xDA7A));
-    let val = generate(&sspec, cfg.n_val, 0x7A11);
-    let scheme = if cfg.classes_per_client == 0 {
-        PartitionScheme::Iid
-    } else {
-        PartitionScheme::ClassSubset { classes_per_client: cfg.classes_per_client }
-    };
-    let partition = Partition::build(&train, cfg.n_clients, scheme, cfg.seed ^ 0x9A47)?;
-    let loaders = build_loaders(train, &partition, bspec.train_batch, true, cfg.seed ^ 0x10AD)?;
-    let val_batches = EvalBatches::new(&val, bspec.eval_batch);
-    let p = cfg.p_vec();
-    let sim = SimConfig {
-        seed: cfg.seed ^ 0x51AA,
-        init: InitPlacement::Routed,
-        ..SimConfig::new(
-            p.clone(),
-            ServiceDist::from_rates(&cfg.rates(), ServiceFamily::Exponential),
-            cfg.concurrency,
-            cfg.steps,
-        )
-    };
-    let rule = rule_for(&cfg.algo, cfg.eta, &p, cfg.fedbuff_z)?;
-    let mut model = bspec.init_model(cfg.seed ^ 0x1417);
-    let mut driver = Driver::new(backend.as_mut(), loaders, val_batches);
-    driver.run(
-        DriverConfig { sim, rule, eval_every: cfg.eval_every, loss_window: 20 },
-        &mut model,
-    )
+pub fn run_experiment(cfg: &Experiment) -> Result<TrainResult, String> {
+    cfg.run()
 }
 
 /// Table-2 style multi-seed aggregate.
@@ -182,13 +555,13 @@ pub struct SeedSweep {
     pub std: f64,
 }
 
-pub fn seed_sweep(base: &ExperimentConfig, seeds: &[u64]) -> Result<SeedSweep, String> {
+pub fn seed_sweep(base: &Experiment, seeds: &[u64]) -> Result<SeedSweep, String> {
     let mut acc = Vec::with_capacity(seeds.len());
     let mut w = Welford::new();
     for &s in seeds {
         let mut cfg = base.clone();
         cfg.seed = s;
-        let res = run_experiment(&cfg)?;
+        let res = cfg.run()?;
         acc.push(res.final_accuracy);
         w.push(res.final_accuracy);
     }
@@ -196,9 +569,19 @@ pub fn seed_sweep(base: &ExperimentConfig, seeds: &[u64]) -> Result<SeedSweep, S
 }
 
 /// Theory-side summary printed alongside experiments: expected delays and
-/// step rate for the experiment's network (sanity anchor for the curves).
-pub fn theory_summary(cfg: &ExperimentConfig) -> Result<(Vec<f64>, f64), String> {
-    let net = ClosedNetwork::new(cfg.p_vec(), cfg.rates())?;
+/// step rate for the experiment's network under its *resolved* policy
+/// (sanity anchor for the curves; the adaptive policy is summarized at its
+/// base distribution).
+pub fn theory_summary(cfg: &Experiment) -> Result<(Vec<f64>, f64), String> {
+    let policy = cfg.build_policy()?;
+    theory_summary_with(cfg, policy.probs())
+}
+
+/// Same summary for an already-resolved distribution — lets callers that
+/// hold the policy (CLI, examples) avoid rebuilding it, which matters for
+/// `optimal` (each construction is a full bound-optimizer sweep).
+pub fn theory_summary_with(cfg: &Experiment, probs: &[f64]) -> Result<(Vec<f64>, f64), String> {
+    let net = ClosedNetwork::new(probs.to_vec(), cfg.rates())?;
     let an = net.mi_analysis(cfg.concurrency, MiEstimator::Throughput);
     Ok((an.m, an.cs_rate))
 }
@@ -207,4 +590,95 @@ pub fn theory_summary(cfg: &ExperimentConfig) -> Result<(Vec<f64>, f64), String>
 pub fn table2_seeds(n: usize) -> Vec<u64> {
     let mut rng = Rng::new(0x7AB1E_2);
     (0..n).map(|_| rng.next_u64() >> 1).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_validates() {
+        assert!(Experiment::builder().build().is_ok());
+        assert!(Experiment::builder().clients(1).build().is_err());
+        assert!(Experiment::builder().steps(0).build().is_err());
+        assert!(Experiment::builder().eta(0.0).build().is_err());
+        assert!(Experiment::builder().algo("sync-sgd").build().is_err());
+        assert!(Experiment::builder().policy("zipf").build().is_err());
+        assert!(Experiment::builder().p_fast(0.9).build().is_err());
+    }
+
+    #[test]
+    fn scenario_round_trip() {
+        let text = r#"
+[experiment]
+variant = "tiny"
+backend = "native"
+algo = "fedbuff"
+clients = 12
+concurrency = 4
+steps = 50
+eta = 0.08
+slow_fraction = 0.5
+mu_fast = 6.0
+n_train = 1000
+n_val = 200
+classes_per_client = 0
+eval_every = 10
+seed = 9
+
+[policy]
+kind = "adaptive"
+gamma = 0.8
+
+[strategy]
+fedbuff_z = 5
+"#;
+        let exp = Experiment::from_toml(text).unwrap();
+        assert_eq!(exp.variant, "tiny");
+        assert_eq!(exp.backend, BackendKind::Native);
+        assert_eq!(exp.algo, "fedbuff");
+        assert_eq!(exp.policy, "adaptive");
+        assert_eq!(exp.n_clients, 12);
+        assert_eq!(exp.concurrency, 4);
+        assert_eq!(exp.steps, 50);
+        assert_eq!(exp.fedbuff_z, 5);
+        assert_eq!(exp.gamma, 0.8);
+        assert_eq!(exp.seed, 9);
+    }
+
+    #[test]
+    fn scenario_rejects_unknown_keys_and_tables() {
+        let err = Experiment::from_toml("[experiment]\nclinets = 10").unwrap_err();
+        assert!(err.contains("clinets"), "{err}");
+        let err = Experiment::from_toml("[expermient]\nclients = 10").unwrap_err();
+        assert!(err.contains("expermient"), "{err}");
+        let err = Experiment::from_toml("[policy]\nkind = \"no-such-policy\"").unwrap_err();
+        assert!(err.contains("no-such-policy"), "{err}");
+    }
+
+    #[test]
+    fn scenario_rejects_negative_and_mistyped_values() {
+        // negative counts must not wrap through `as usize`
+        let err = Experiment::from_toml("[experiment]\nclients = -1").unwrap_err();
+        assert!(err.contains("clients"), "{err}");
+        let err = Experiment::from_toml("[experiment]\nsteps = -5").unwrap_err();
+        assert!(err.contains("steps"), "{err}");
+        // wrong TOML type must error, not silently fall back to defaults
+        let err = Experiment::from_toml("[experiment]\nsteps = \"200\"").unwrap_err();
+        assert!(err.contains("steps"), "{err}");
+        let err = Experiment::from_toml("[experiment]\nvariant = 3").unwrap_err();
+        assert!(err.contains("variant"), "{err}");
+        let err = Experiment::from_toml("[policy]\ngamma = \"big\"").unwrap_err();
+        assert!(err.contains("gamma"), "{err}");
+    }
+
+    #[test]
+    fn p_vec_tilts_two_clusters() {
+        let exp = Experiment::builder().clients(10).p_fast(0.05).build().unwrap();
+        let p = exp.p_vec();
+        assert_eq!(p.len(), 10);
+        let sum: f64 = p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        assert!(p[0] < p[9]);
+    }
 }

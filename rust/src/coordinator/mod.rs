@@ -1,11 +1,19 @@
 //! L3 coordinator — the paper's system contribution: the asynchronous
-//! central server (`driver`), synchronous baselines (`sync`), and the
-//! multi-seed experiment runner (`experiment`).
+//! central server (`driver`), the open sampling-policy surface (`policy`),
+//! synchronous round engines (`sync`), and the builder/scenario-based
+//! experiment runner (`experiment`).
 
 pub mod driver;
 pub mod experiment;
+pub mod policy;
 pub mod sync;
 
-pub use driver::{build_loaders, rule_for, CurvePoint, Driver, DriverConfig, TrainResult};
-pub use experiment::{run_experiment, seed_sweep, table2_seeds, ExperimentConfig, SeedSweep};
+pub use driver::{build_loaders, CurvePoint, Driver, DriverConfig, TrainResult};
+pub use experiment::{
+    run_experiment, seed_sweep, table2_seeds, Experiment, ExperimentBuilder, SeedSweep,
+};
+pub use policy::{
+    optimal_two_cluster, AdaptiveQueuePolicy, PolicyCtx, PolicyRegistry, SamplingPolicy,
+    StaticPolicy,
+};
 pub use sync::{run_favano, run_fedavg, DataOracle, SyncResult};

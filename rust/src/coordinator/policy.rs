@@ -1,0 +1,436 @@
+//! Sampling policies — the server's choice of the routing distribution p,
+//! the paper's central design variable.
+//!
+//! A [`SamplingPolicy`] is consulted by the closed-network simulator at
+//! *every* routing step: `observe` sees the current queue lengths, `route`
+//! draws the next node K_{k+1}, and `probs` exposes the distribution in
+//! force so the dispatcher can record the selection probability on the
+//! task.  Generalized AsyncSGD reads that dispatch-time probability back
+//! for its unbiased `η/(n p_i)` scaling, which keeps the aggregate update
+//! direction unbiased even under time-varying p (see
+//! `fl::strategy::GenAsync`).
+//!
+//! Built-ins, all reachable from `fedqueue train --policy <name>` through
+//! the [`PolicyRegistry`]:
+//!
+//! * `static`  — the experiment's fixed p (two-cluster tilt or explicit
+//!   vector); exactly the pre-refactor behavior.
+//! * `uniform` — p_i = 1/n regardless of the configured tilt.
+//! * `optimal` — the Theorem-1 bound-optimal two-cluster p, wired to
+//!   [`crate::bound::optimizer`] (the old `--optimal-p` path).
+//! * `adaptive` — queue-length-aware: p_i ∝ base_i · exp(−γ·X_i),
+//!   renormalized before each dispatch.  Nodes with long queues are
+//!   sampled less, which caps staleness without starving anyone (γ = 0
+//!   degenerates to `static`); motivated by the delay-aware policies of
+//!   arXiv:2502.08206 / arXiv:2402.11198.
+
+use crate::bound::{BoundParams, MiSource, TwoClusterStudy};
+use crate::util::rng::{AliasTable, Rng};
+
+/// The routing-distribution interface consulted by the simulator.
+pub trait SamplingPolicy {
+    /// Display name (curve labels, diagnostics).
+    fn name(&self) -> String;
+
+    /// The distribution currently in force over the n nodes.
+    fn probs(&self) -> &[f64];
+
+    /// Observe the queue lengths right before a routing decision.
+    /// Static policies ignore this; adaptive ones recompute `probs`.
+    fn observe(&mut self, _queue_lens: &[u32]) {}
+
+    /// Sample the next node K_{k+1} from the distribution in force.
+    fn route(&mut self, rng: &mut Rng) -> usize;
+}
+
+// ---------------------------------------------------------------------------
+// Static (fixed p) — alias-table sampling, identical to the original engine
+// ---------------------------------------------------------------------------
+
+pub struct StaticPolicy {
+    label: String,
+    p: Vec<f64>,
+    alias: AliasTable,
+}
+
+impl StaticPolicy {
+    pub fn new(p: Vec<f64>) -> Result<StaticPolicy, String> {
+        StaticPolicy::labeled("static", p)
+    }
+
+    pub fn labeled(label: &str, p: Vec<f64>) -> Result<StaticPolicy, String> {
+        let alias = AliasTable::new(&p)?;
+        Ok(StaticPolicy { label: label.to_string(), p, alias })
+    }
+
+    pub fn uniform(n: usize) -> Result<StaticPolicy, String> {
+        if n == 0 {
+            return Err("uniform policy needs n >= 1".into());
+        }
+        StaticPolicy::labeled("uniform", vec![1.0 / n as f64; n])
+    }
+}
+
+impl SamplingPolicy for StaticPolicy {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn probs(&self) -> &[f64] {
+        &self.p
+    }
+
+    fn route(&mut self, rng: &mut Rng) -> usize {
+        self.alias.sample(rng)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Adaptive queue-length-aware policy
+// ---------------------------------------------------------------------------
+
+pub struct AdaptiveQueuePolicy {
+    base: Vec<f64>,
+    gamma: f64,
+    probs: Vec<f64>,
+}
+
+impl AdaptiveQueuePolicy {
+    pub fn new(base: Vec<f64>, gamma: f64) -> Result<AdaptiveQueuePolicy, String> {
+        if base.is_empty() {
+            return Err("adaptive policy needs a non-empty base distribution".into());
+        }
+        if !(gamma >= 0.0) || !gamma.is_finite() {
+            return Err(format!("adaptive policy: gamma {gamma} must be finite and >= 0"));
+        }
+        let sum: f64 = base.iter().sum();
+        if (sum - 1.0).abs() > 1e-6 || base.iter().any(|&b| b < 0.0 || !b.is_finite()) {
+            return Err(format!("adaptive policy: base p must be a distribution (sum {sum})"));
+        }
+        Ok(AdaptiveQueuePolicy { probs: base.clone(), base, gamma })
+    }
+}
+
+impl SamplingPolicy for AdaptiveQueuePolicy {
+    fn name(&self) -> String {
+        format!("adaptive(gamma={})", self.gamma)
+    }
+
+    fn probs(&self) -> &[f64] {
+        &self.probs
+    }
+
+    fn observe(&mut self, queue_lens: &[u32]) {
+        let mut total = 0.0f64;
+        for (pi, (&b, &q)) in self
+            .probs
+            .iter_mut()
+            .zip(self.base.iter().zip(queue_lens.iter()))
+        {
+            *pi = b * (-self.gamma * q as f64).exp();
+            total += *pi;
+        }
+        if !(total > 0.0) || !total.is_finite() {
+            // all mass underflowed (enormous γ·X): fall back to the base
+            self.probs.copy_from_slice(&self.base);
+            total = self.probs.iter().sum();
+        }
+        for pi in self.probs.iter_mut() {
+            *pi /= total;
+        }
+    }
+
+    fn route(&mut self, rng: &mut Rng) -> usize {
+        let u = rng.uniform();
+        let mut acc = 0.0f64;
+        for (i, &pi) in self.probs.iter().enumerate() {
+            acc += pi;
+            if u < acc {
+                return i;
+            }
+        }
+        self.probs.len() - 1
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Theorem-1 optimal two-cluster policy
+// ---------------------------------------------------------------------------
+
+/// Shape of the experiment a policy is built for.  Constructors read what
+/// they need and ignore the rest.
+#[derive(Clone, Debug)]
+pub struct PolicyCtx {
+    /// number of clients n
+    pub n: usize,
+    /// the experiment's base/static distribution (two-cluster tilt etc.)
+    pub base_p: Vec<f64>,
+    /// queue-pressure strength for the adaptive policy
+    pub gamma: f64,
+    /// two-cluster shape for the Theorem-1 optimizer
+    pub n_fast: usize,
+    pub mu_fast: f64,
+    pub mu_slow: f64,
+    pub concurrency: usize,
+    pub steps: u64,
+}
+
+/// Build the bound-optimal static two-cluster policy by sweeping the
+/// Theorem-1 optimizer — the exact computation behind the historical
+/// `--optimal-p` flag (worked-example constants A=100, B=20, L=1, 50-point
+/// log grid), packaged as a [`StaticPolicy`] labeled "optimal".
+pub fn optimal_two_cluster(ctx: &PolicyCtx) -> Result<StaticPolicy, String> {
+    if ctx.n_fast == 0 || ctx.n_fast >= ctx.n {
+        return Err(format!(
+            "optimal policy needs a two-cluster population (n_fast {} of n {})",
+            ctx.n_fast, ctx.n
+        ));
+    }
+    let study = TwoClusterStudy {
+        params: BoundParams {
+            a: 100.0,
+            b: 20.0,
+            l: 1.0,
+            c: ctx.concurrency,
+            t: ctx.steps,
+            n: ctx.n,
+        },
+        n_fast: ctx.n_fast,
+        mu_fast: ctx.mu_fast,
+        mu_slow: ctx.mu_slow,
+        source: MiSource::default(),
+    };
+    let (best, _) = study.optimize_p(50)?;
+    let pf = best.p_fast;
+    let q = (1.0 - ctx.n_fast as f64 * pf) / (ctx.n - ctx.n_fast) as f64;
+    let p: Vec<f64> = (0..ctx.n)
+        .map(|i| if i < ctx.n_fast { pf } else { q })
+        .collect();
+    StaticPolicy::labeled("optimal", p)
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+type PolicyCtor = Box<dyn Fn(&PolicyCtx) -> Result<Box<dyn SamplingPolicy>, String>>;
+
+pub struct PolicyEntry {
+    pub name: String,
+    pub summary: String,
+    ctor: PolicyCtor,
+}
+
+/// String → constructor mapping for sampling policies.  `builtin()`
+/// carries the four paper-relevant policies; downstream code may
+/// `register` more without touching the simulator or the CLI.
+pub struct PolicyRegistry {
+    entries: Vec<PolicyEntry>,
+}
+
+impl PolicyRegistry {
+    pub fn empty() -> PolicyRegistry {
+        PolicyRegistry { entries: Vec::new() }
+    }
+
+    pub fn builtin() -> PolicyRegistry {
+        let mut r = PolicyRegistry::empty();
+        r.register(
+            "static",
+            "fixed p from the experiment config (two-cluster tilt or explicit vector)",
+            |ctx| Ok(Box::new(StaticPolicy::new(ctx.base_p.clone())?) as Box<dyn SamplingPolicy>),
+        );
+        r.register("uniform", "p_i = 1/n", |ctx| {
+            Ok(Box::new(StaticPolicy::uniform(ctx.n)?) as Box<dyn SamplingPolicy>)
+        });
+        r.register(
+            "optimal",
+            "Theorem-1 bound-optimal two-cluster p (the old --optimal-p)",
+            |ctx| Ok(Box::new(optimal_two_cluster(ctx)?) as Box<dyn SamplingPolicy>),
+        );
+        r.register(
+            "adaptive",
+            "queue-length-aware: p_i proportional to base_i*exp(-gamma*X_i)",
+            |ctx| {
+                Ok(Box::new(AdaptiveQueuePolicy::new(ctx.base_p.clone(), ctx.gamma)?)
+                    as Box<dyn SamplingPolicy>)
+            },
+        );
+        r
+    }
+
+    /// Register (or replace) a policy constructor.
+    pub fn register<F>(&mut self, name: &str, summary: &str, ctor: F)
+    where
+        F: Fn(&PolicyCtx) -> Result<Box<dyn SamplingPolicy>, String> + 'static,
+    {
+        self.entries.retain(|e| e.name != name);
+        self.entries.push(PolicyEntry {
+            name: name.to_string(),
+            summary: summary.to_string(),
+            ctor: Box::new(ctor),
+        });
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.iter().any(|e| e.name == name)
+    }
+
+    pub fn build(&self, name: &str, ctx: &PolicyCtx) -> Result<Box<dyn SamplingPolicy>, String> {
+        for e in &self.entries {
+            if e.name == name {
+                return (e.ctor)(ctx);
+            }
+        }
+        Err(format!(
+            "unknown sampling policy '{name}' (available: {})",
+            self.names().join("|")
+        ))
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.entries.iter().map(|e| e.name.clone()).collect()
+    }
+
+    pub fn summaries(&self) -> Vec<(String, String)> {
+        self.entries
+            .iter()
+            .map(|e| (e.name.clone(), e.summary.clone()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(n: usize) -> PolicyCtx {
+        PolicyCtx {
+            n,
+            base_p: vec![1.0 / n as f64; n],
+            gamma: 0.5,
+            n_fast: n / 2,
+            mu_fast: 4.0,
+            mu_slow: 1.0,
+            concurrency: 4,
+            steps: 200,
+        }
+    }
+
+    #[test]
+    fn static_policy_samples_p() {
+        let p = vec![0.1, 0.2, 0.3, 0.4];
+        let mut pol = StaticPolicy::new(p.clone()).unwrap();
+        assert_eq!(pol.probs(), &p[..]);
+        let mut rng = Rng::new(1);
+        let mut counts = vec![0u64; 4];
+        let trials = 100_000;
+        for _ in 0..trials {
+            counts[pol.route(&mut rng)] += 1;
+        }
+        for i in 0..4 {
+            let f = counts[i] as f64 / trials as f64;
+            assert!((f - p[i]).abs() < 0.01, "node {i}: freq {f} vs p {}", p[i]);
+        }
+    }
+
+    #[test]
+    fn adaptive_tilts_away_from_long_queues() {
+        let mut pol = AdaptiveQueuePolicy::new(vec![0.25; 4], 1.0).unwrap();
+        pol.observe(&[0, 0, 5, 0]);
+        let p = pol.probs();
+        assert!(p[2] < p[0], "loaded node must be sampled less: {p:?}");
+        let sum: f64 = p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12, "probs sum {sum}");
+        // γ=0 degenerates to the base
+        let mut flat = AdaptiveQueuePolicy::new(vec![0.25; 4], 0.0).unwrap();
+        flat.observe(&[9, 0, 3, 1]);
+        for &pi in flat.probs() {
+            assert!((pi - 0.25).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn adaptive_route_matches_probs() {
+        let mut pol = AdaptiveQueuePolicy::new(vec![0.25; 4], 1.0).unwrap();
+        pol.observe(&[3, 0, 0, 3]);
+        let want = pol.probs().to_vec();
+        let mut rng = Rng::new(7);
+        let mut counts = vec![0u64; 4];
+        let trials = 100_000;
+        for _ in 0..trials {
+            counts[pol.route(&mut rng)] += 1;
+        }
+        for i in 0..4 {
+            let f = counts[i] as f64 / trials as f64;
+            assert!((f - want[i]).abs() < 0.01, "node {i}: {f} vs {}", want[i]);
+        }
+    }
+
+    #[test]
+    fn adaptive_survives_underflow() {
+        let mut pol = AdaptiveQueuePolicy::new(vec![0.5, 0.5], 1e6).unwrap();
+        pol.observe(&[1000, 1000]);
+        let sum: f64 = pol.probs().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "fallback must renormalize: {sum}");
+    }
+
+    #[test]
+    fn optimal_policy_tilts_below_uniform() {
+        // the paper's headline: fast clients sampled LESS than uniformly
+        let c = ctx(20);
+        let pol = optimal_two_cluster(&c).unwrap();
+        assert_eq!(pol.name(), "optimal");
+        let p = pol.probs();
+        assert_eq!(p.len(), 20);
+        assert!(p[0] < 1.0 / 20.0, "fast p {} should be below uniform", p[0]);
+        let sum: f64 = p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        // one-cluster population is rejected
+        let mut bad = ctx(20);
+        bad.n_fast = 0;
+        assert!(optimal_two_cluster(&bad).is_err());
+    }
+
+    #[test]
+    fn registry_builds_every_builtin() {
+        let reg = PolicyRegistry::builtin();
+        assert_eq!(reg.names(), vec!["static", "uniform", "optimal", "adaptive"]);
+        let c = ctx(10);
+        for name in reg.names() {
+            let pol = reg.build(&name, &c).unwrap();
+            let sum: f64 = pol.probs().iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "{name}: probs sum {sum}");
+        }
+        let err = reg.build("zipf", &c).unwrap_err();
+        assert!(err.contains("unknown sampling policy"), "{err}");
+        assert!(err.contains("adaptive"), "error must list names: {err}");
+    }
+
+    #[test]
+    fn registry_accepts_third_party_policies() {
+        let mut reg = PolicyRegistry::builtin();
+        reg.register("slowest-first", "always node n-1 (test double)", |c| {
+            struct SlowestFirst {
+                p: Vec<f64>,
+            }
+            impl SamplingPolicy for SlowestFirst {
+                fn name(&self) -> String {
+                    "slowest-first".into()
+                }
+                fn probs(&self) -> &[f64] {
+                    &self.p
+                }
+                fn route(&mut self, _rng: &mut Rng) -> usize {
+                    self.p.len() - 1
+                }
+            }
+            let mut p = vec![0.0; c.n];
+            p[c.n - 1] = 1.0;
+            Ok(Box::new(SlowestFirst { p }) as Box<dyn SamplingPolicy>)
+        });
+        let mut pol = reg.build("slowest-first", &ctx(6)).unwrap();
+        let mut rng = Rng::new(3);
+        assert_eq!(pol.route(&mut rng), 5);
+    }
+}

@@ -1,7 +1,13 @@
-//! Synchronous / semi-synchronous baselines driver (FedAvg, FAVANO) over
-//! real data + backends — used by the Fig 7 comparison where the x-axis is
+//! Synchronous / semi-synchronous round engines (FedAvg, FAVANO) over real
+//! data + backends — used by the Fig 7 comparison where the x-axis is
 //! *virtual time*, making the straggler penalty of synchronous rounds
 //! visible.
+//!
+//! These are the faithful round-based formulations with their own virtual
+//! clock.  For running FedAvg/FAVANO *inside* the asynchronous event loop
+//! (`fedqueue train --algo fedavg|favano`), see the event-stream
+//! adaptations behind the [`crate::fl::ServerStrategy`] registry —
+//! `fl::strategy::{FedAvgStrategy, FavanoStrategy}`.
 
 use super::driver::CurvePoint;
 use crate::data::{ClientLoader, EvalBatches};

@@ -7,8 +7,7 @@
 //! native backend so the complete figure suite stays runnable in CI.
 
 use crate::coordinator::{
-    build_loaders, run_experiment, run_favano, run_fedavg, seed_sweep, table2_seeds,
-    ExperimentConfig,
+    build_loaders, run_experiment, run_favano, run_fedavg, seed_sweep, table2_seeds, Experiment,
 };
 use crate::data::{generate, EvalBatches, Partition, PartitionScheme};
 use crate::fl::{FavanoConfig, FedAvgConfig};
@@ -17,8 +16,8 @@ use crate::simulator::{ServiceDist, ServiceFamily};
 use crate::util::table::{Series, TextTable};
 
 /// Fig 6 configuration, honoring quick mode.
-pub fn fig6_config(algo: &str, quick: bool) -> ExperimentConfig {
-    let mut cfg = ExperimentConfig::fig6(algo);
+pub fn fig6_config(algo: &str, quick: bool) -> Experiment {
+    let mut cfg = Experiment::fig6(algo);
     if quick {
         cfg.variant = "tiny".into();
         cfg.backend = BackendKind::Native;
@@ -42,7 +41,7 @@ pub fn fig6(quick: bool) -> Result<(Series, String), String> {
     for algo in algos {
         let mut cfg = fig6_config(algo, quick);
         if algo == "gasync" {
-            cfg = cfg.with_optimal_p()?;
+            cfg.policy = "optimal".into();
         }
         if algo == "fedbuff" {
             // the paper finetunes η per method; FedBuff's 1/Z-averaged,
@@ -79,24 +78,23 @@ pub fn fig7(quick: bool) -> Result<(Series, String), String> {
     } else {
         ("tinyimg_jnp", BackendKind::Pjrt, 60usize, 60.0, 8_000, 1_000)
     };
-    let mut base = ExperimentConfig {
-        variant: variant.into(),
-        backend,
-        algo: "gasync".into(),
-        n_clients: n,
-        concurrency: (n / 6).max(4),
-        steps: 0, // set below from the time budget heuristic
-        eta: 0.1,
-        fedbuff_z: 10,
-        slow_fraction: 0.5,
-        mu_fast: 4.0,
-        p_fast: None,
-        n_train,
-        n_val,
-        classes_per_client: 0, // IID as in the paper's TinyImageNet setup
-        eval_every: 0,
-        seed: 0xF7,
-    };
+    let mut base = Experiment::builder()
+        .variant(variant)
+        .backend(backend)
+        .algo("gasync")
+        .clients(n)
+        .concurrency((n / 6).max(4))
+        .steps(1) // set below from the time budget heuristic
+        .eta(0.1)
+        .fedbuff_z(10)
+        .slow_fraction(0.5)
+        .mu_fast(4.0)
+        .n_train(n_train)
+        .n_val(n_val)
+        .classes_per_client(0) // IID as in the paper's TinyImageNet setup
+        .eval_every(0)
+        .seed(0xF7)
+        .build()?;
     // step budget ≈ time budget × CS step rate (theory)
     let (_, rate) = crate::coordinator::experiment::theory_summary(&base)?;
     base.steps = (time_budget * rate) as u64;
@@ -107,7 +105,7 @@ pub fn fig7(quick: bool) -> Result<(Series, String), String> {
         let mut cfg = base.clone();
         cfg.algo = algo.into();
         if algo == "gasync" {
-            cfg = cfg.with_optimal_p()?;
+            cfg.policy = "optimal".into();
         }
         let res = run_experiment(&cfg)?;
         rows.push((
@@ -193,7 +191,7 @@ pub fn table2(quick: bool, n_seeds: usize) -> Result<(TextTable, String), String
     for algo in ["fedbuff", "async", "gasync"] {
         let mut cfg = fig6_config(algo, quick);
         if algo == "gasync" {
-            cfg = cfg.with_optimal_p()?;
+            cfg.policy = "optimal".into();
         }
         if algo == "fedbuff" {
             cfg.eta *= 4.0; // per-method η tuning, as in the paper

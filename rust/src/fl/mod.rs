@@ -1,17 +1,23 @@
 //! Federated-learning algorithm zoo: the paper's **Generalized AsyncSGD**
 //! plus the baselines it is evaluated against (AsyncSGD, FedBuff, FedAvg,
-//! FAVANO).  Algorithms are expressed as backend-agnostic update rules /
-//! round engines over a [`oracle::GradOracle`]; the coordinator binds them
-//! to queueing dynamics and the PJRT/native gradient backends.
+//! FAVANO).  Asynchronous algorithms implement the open [`ServerStrategy`]
+//! trait and are constructed through the [`StrategyRegistry`]; the
+//! round-based FedAvg/FAVANO engines additionally exist as virtual-time
+//! round engines over a [`oracle::GradOracle`] for the Fig-7 comparison.
+//! The coordinator binds strategies to queueing dynamics and the
+//! PJRT/native gradient backends.
 
 pub mod favano;
 pub mod fedavg;
 pub mod model;
 pub mod oracle;
-pub mod update;
+pub mod strategy;
 
 pub use favano::{Favano, FavanoConfig};
 pub use fedavg::{FedAvg, FedAvgConfig};
 pub use model::ModelState;
 pub use oracle::{GradOracle, QuadraticOracle};
-pub use update::{ServerAlgo, UpdateRule};
+pub use strategy::{
+    AsyncSgd, FavanoStrategy, FedAvgStrategy, FedBuff, GenAsync, GradientCtx, ServerStrategy,
+    StrategyParams, StrategyRegistry,
+};

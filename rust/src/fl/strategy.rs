@@ -1,0 +1,820 @@
+//! Server strategies — the open algorithm surface of the coordinator.
+//!
+//! A [`ServerStrategy`] is a pure state machine over gradient arrivals and
+//! task dispatches, independent of the queueing dynamics and the gradient
+//! backend (hence unit-testable on synthetic oracles).  The built-in zoo:
+//!
+//! * [`GenAsync`] — the paper's contribution: immediate update scaled by
+//!   `η/(n p_i)` to keep the aggregate direction unbiased under non-uniform
+//!   sampling (line 10 of Algorithm 1).  The scale uses the *dispatch-time*
+//!   selection probability carried in the [`GradientCtx`], so unbiasedness
+//!   survives time-varying sampling policies.
+//! * [`AsyncSgd`] — Koloskova et al.: uniform sampling, immediate update
+//!   `w ← w − η g` (the special case p_i = 1/n of the above).
+//! * [`FedBuff`] — Nguyen et al.: server buffers Z client updates, then
+//!   applies their average once.
+//! * [`FedAvgStrategy`] — the synchronous FedAvg round barrier adapted to
+//!   the asynchronous event stream: the server collects gradients until `s`
+//!   *distinct* clients have reported (repeat completions by the same
+//!   client within a round play the role of extra local steps), then
+//!   applies the averaged update once.
+//! * [`FavanoStrategy`] — FAVANO/QuAFL-style time-sliced averaging: the
+//!   model steps on a fixed virtual-time interval Δ; every gradient that
+//!   arrives within a slice joins the slice's buffer, and at each boundary
+//!   the buffer is applied with the 1/(n+1) server-averaging weight.  Fast
+//!   clients naturally contribute more gradients per slice.
+//!
+//! Strategies are constructed through a string → constructor
+//! [`StrategyRegistry`], so new algorithms plug into `fedqueue train`, the
+//! experiment builder, and scenario files without touching the driver.
+
+use super::model::ModelState;
+
+/// Everything a strategy may want to know about one arriving gradient.
+pub struct GradientCtx<'a> {
+    /// client i the gradient came from
+    pub node: usize,
+    /// central-server step k at which it arrived
+    pub step: u64,
+    /// virtual time of the arrival
+    pub time: f64,
+    /// staleness in CS steps (the paper's delay M)
+    pub delay_steps: u64,
+    /// probability with which `node` was selected when this gradient's task
+    /// was dispatched — the inverse-probability weight that keeps GenAsync
+    /// unbiased under any (possibly time-varying) sampling policy
+    pub dispatch_prob: f64,
+    /// the gradient tensors
+    pub grads: &'a [Vec<f32>],
+}
+
+impl<'a> GradientCtx<'a> {
+    /// Oracle-style context for tests and synthetic studies: `node` was
+    /// drawn i.i.d. from the fixed distribution `p` (no queueing).
+    pub fn sampled(node: usize, p: &[f64], grads: &'a [Vec<f32>]) -> GradientCtx<'a> {
+        GradientCtx {
+            node,
+            step: 0,
+            time: 0.0,
+            delay_steps: 0,
+            dispatch_prob: p[node],
+            grads,
+        }
+    }
+}
+
+/// The server-side algorithm interface consumed by the coordinator driver.
+pub trait ServerStrategy {
+    /// Registry name (curve labels, diagnostics).
+    fn name(&self) -> &'static str;
+
+    /// A fresh task was dispatched to `node` at CS step `step`.
+    fn on_dispatch(&mut self, _node: usize, _step: u64, _time: f64) {}
+
+    /// A gradient arrived at the server; apply or buffer it.
+    /// Returns true iff the global model stepped (version bumped).
+    fn on_gradient(&mut self, model: &mut ModelState, ctx: &GradientCtx) -> bool;
+
+    /// Nominal per-gradient scale for client `node` (diagnostics + tests).
+    fn scale_for(&self, node: usize) -> f64;
+
+    /// CS model version counter (k in the paper): bumps on every applied
+    /// server update.
+    fn version(&self) -> u64;
+
+    /// Total gradients received (≥ version for buffered strategies).
+    fn received(&self) -> u64;
+}
+
+// ---------------------------------------------------------------------------
+// Generalized AsyncSGD (Algorithm 1)
+// ---------------------------------------------------------------------------
+
+pub struct GenAsync {
+    pub eta: f64,
+    /// reference sampling distribution: used by `scale_for` diagnostics and
+    /// as a fallback when a context carries no usable dispatch probability
+    pub p: Vec<f64>,
+    version: u64,
+    received: u64,
+}
+
+impl GenAsync {
+    pub fn new(eta: f64, p: Vec<f64>) -> GenAsync {
+        GenAsync { eta, p, version: 0, received: 0 }
+    }
+}
+
+impl ServerStrategy for GenAsync {
+    fn name(&self) -> &'static str {
+        "gasync"
+    }
+
+    fn on_gradient(&mut self, model: &mut ModelState, ctx: &GradientCtx) -> bool {
+        self.received += 1;
+        let n = self.p.len() as f64;
+        let prob = if ctx.dispatch_prob.is_finite() && ctx.dispatch_prob > 0.0 {
+            ctx.dispatch_prob
+        } else {
+            self.p[ctx.node]
+        };
+        let scale = (self.eta / (n * prob)) as f32;
+        model.apply_update(ctx.grads, scale);
+        self.version += 1;
+        true
+    }
+
+    fn scale_for(&self, node: usize) -> f64 {
+        self.eta / (self.p.len() as f64 * self.p[node])
+    }
+
+    fn version(&self) -> u64 {
+        self.version
+    }
+
+    fn received(&self) -> u64 {
+        self.received
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AsyncSGD (Koloskova et al.)
+// ---------------------------------------------------------------------------
+
+pub struct AsyncSgd {
+    pub eta: f64,
+    version: u64,
+    received: u64,
+}
+
+impl AsyncSgd {
+    pub fn new(eta: f64) -> AsyncSgd {
+        AsyncSgd { eta, version: 0, received: 0 }
+    }
+}
+
+impl ServerStrategy for AsyncSgd {
+    fn name(&self) -> &'static str {
+        "async"
+    }
+
+    fn on_gradient(&mut self, model: &mut ModelState, ctx: &GradientCtx) -> bool {
+        self.received += 1;
+        model.apply_update(ctx.grads, self.eta as f32);
+        self.version += 1;
+        true
+    }
+
+    fn scale_for(&self, _node: usize) -> f64 {
+        self.eta
+    }
+
+    fn version(&self) -> u64 {
+        self.version
+    }
+
+    fn received(&self) -> u64 {
+        self.received
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FedBuff (Nguyen et al.)
+// ---------------------------------------------------------------------------
+
+pub struct FedBuff {
+    pub eta: f64,
+    pub z: usize,
+    buffer: Option<Vec<Vec<f64>>>,
+    buffered: usize,
+    version: u64,
+    received: u64,
+}
+
+impl FedBuff {
+    pub fn new(eta: f64, z: usize) -> Result<FedBuff, String> {
+        if z == 0 {
+            return Err("fedbuff: buffer size Z must be >= 1".into());
+        }
+        Ok(FedBuff { eta, z, buffer: None, buffered: 0, version: 0, received: 0 })
+    }
+
+    pub fn pending_in_buffer(&self) -> usize {
+        self.buffered
+    }
+}
+
+impl ServerStrategy for FedBuff {
+    fn name(&self) -> &'static str {
+        "fedbuff"
+    }
+
+    fn on_gradient(&mut self, model: &mut ModelState, ctx: &GradientCtx) -> bool {
+        self.received += 1;
+        let buf = self.buffer.get_or_insert_with(|| model.accumulator());
+        ModelState::accumulate(buf, ctx.grads, 1.0);
+        self.buffered += 1;
+        if self.buffered >= self.z {
+            let buf = self.buffer.take().unwrap();
+            model.apply_accumulator(&buf, self.eta / self.z as f64);
+            self.buffered = 0;
+            self.version += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn scale_for(&self, _node: usize) -> f64 {
+        self.eta / self.z as f64
+    }
+
+    fn version(&self) -> u64 {
+        self.version
+    }
+
+    fn received(&self) -> u64 {
+        self.received
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FedAvg round barrier over the asynchronous event stream
+// ---------------------------------------------------------------------------
+
+pub struct FedAvgStrategy {
+    pub eta: f64,
+    /// distinct clients required to close a round
+    pub s: usize,
+    buffer: Option<Vec<Vec<f64>>>,
+    in_round: Vec<bool>,
+    distinct: usize,
+    grads_in_round: usize,
+    version: u64,
+    received: u64,
+}
+
+impl FedAvgStrategy {
+    pub fn new(eta: f64, s: usize, n: usize) -> Result<FedAvgStrategy, String> {
+        if s == 0 || s > n {
+            return Err(format!("fedavg: round size s={s} must be in 1..={n}"));
+        }
+        Ok(FedAvgStrategy {
+            eta,
+            s,
+            buffer: None,
+            in_round: vec![false; n],
+            distinct: 0,
+            grads_in_round: 0,
+            version: 0,
+            received: 0,
+        })
+    }
+}
+
+impl ServerStrategy for FedAvgStrategy {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    fn on_gradient(&mut self, model: &mut ModelState, ctx: &GradientCtx) -> bool {
+        self.received += 1;
+        let buf = self.buffer.get_or_insert_with(|| model.accumulator());
+        ModelState::accumulate(buf, ctx.grads, 1.0);
+        self.grads_in_round += 1;
+        if !self.in_round[ctx.node] {
+            self.in_round[ctx.node] = true;
+            self.distinct += 1;
+        }
+        if self.distinct >= self.s {
+            let buf = self.buffer.take().unwrap();
+            model.apply_accumulator(&buf, self.eta / self.grads_in_round as f64);
+            for b in self.in_round.iter_mut() {
+                *b = false;
+            }
+            self.distinct = 0;
+            self.grads_in_round = 0;
+            self.version += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn scale_for(&self, _node: usize) -> f64 {
+        self.eta / self.s as f64
+    }
+
+    fn version(&self) -> u64 {
+        self.version
+    }
+
+    fn received(&self) -> u64 {
+        self.received
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FAVANO time-sliced averaging over the asynchronous event stream
+// ---------------------------------------------------------------------------
+
+pub struct FavanoStrategy {
+    pub eta: f64,
+    /// server update interval Δ (virtual time)
+    pub interval: f64,
+    n: usize,
+    next_boundary: f64,
+    buffer: Option<Vec<Vec<f64>>>,
+    buffered: usize,
+    version: u64,
+    received: u64,
+}
+
+impl FavanoStrategy {
+    pub fn new(eta: f64, interval: f64, n: usize) -> Result<FavanoStrategy, String> {
+        if !(interval > 0.0) || !interval.is_finite() {
+            return Err(format!("favano: interval Δ={interval} must be positive"));
+        }
+        if n == 0 {
+            return Err("favano: need at least one client".into());
+        }
+        Ok(FavanoStrategy {
+            eta,
+            interval,
+            n,
+            next_boundary: interval,
+            buffer: None,
+            buffered: 0,
+            version: 0,
+            received: 0,
+        })
+    }
+}
+
+impl ServerStrategy for FavanoStrategy {
+    fn name(&self) -> &'static str {
+        "favano"
+    }
+
+    fn on_gradient(&mut self, model: &mut ModelState, ctx: &GradientCtx) -> bool {
+        self.received += 1;
+        let mut stepped = false;
+        if ctx.time >= self.next_boundary {
+            // close the previous slice before admitting this gradient
+            if let Some(buf) = self.buffer.take() {
+                model.apply_accumulator(&buf, self.eta / (self.n as f64 + 1.0));
+                self.buffered = 0;
+                self.version += 1;
+                stepped = true;
+            }
+            while self.next_boundary <= ctx.time {
+                self.next_boundary += self.interval;
+            }
+        }
+        let buf = self.buffer.get_or_insert_with(|| model.accumulator());
+        ModelState::accumulate(buf, ctx.grads, 1.0);
+        self.buffered += 1;
+        stepped
+    }
+
+    fn scale_for(&self, _node: usize) -> f64 {
+        self.eta / (self.n as f64 + 1.0)
+    }
+
+    fn version(&self) -> u64 {
+        self.version
+    }
+
+    fn received(&self) -> u64 {
+        self.received
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// Construction-time knobs shared by all strategies.  A constructor reads
+/// what it needs and ignores the rest.
+#[derive(Clone, Debug)]
+pub struct StrategyParams {
+    pub eta: f64,
+    /// sampling distribution in force at construction (GenAsync reference)
+    pub p: Vec<f64>,
+    /// FedBuff buffer size Z
+    pub fedbuff_z: usize,
+    /// FedAvg round barrier (0 = auto: max(2, n/10))
+    pub fedavg_s: usize,
+    /// FAVANO slice length Δ in virtual time
+    pub favano_interval: f64,
+}
+
+impl StrategyParams {
+    pub fn new(eta: f64, p: Vec<f64>) -> StrategyParams {
+        StrategyParams { eta, p, fedbuff_z: 10, fedavg_s: 0, favano_interval: 4.0 }
+    }
+
+    pub fn n(&self) -> usize {
+        self.p.len()
+    }
+
+    /// Resolved FedAvg round size (0 = auto).
+    pub fn fedavg_s(&self) -> usize {
+        if self.fedavg_s == 0 {
+            (self.n() / 10).max(2).min(self.n().max(1))
+        } else {
+            self.fedavg_s
+        }
+    }
+}
+
+type StrategyCtor = Box<dyn Fn(&StrategyParams) -> Result<Box<dyn ServerStrategy>, String>>;
+
+pub struct StrategyEntry {
+    pub name: String,
+    pub aliases: Vec<String>,
+    pub summary: String,
+    ctor: StrategyCtor,
+}
+
+/// String → constructor mapping for server strategies.  `builtin()` carries
+/// the five paper algorithms; downstream code may `register` more without
+/// touching the driver or the CLI.
+pub struct StrategyRegistry {
+    entries: Vec<StrategyEntry>,
+}
+
+impl StrategyRegistry {
+    pub fn empty() -> StrategyRegistry {
+        StrategyRegistry { entries: Vec::new() }
+    }
+
+    pub fn builtin() -> StrategyRegistry {
+        let mut r = StrategyRegistry::empty();
+        r.register(
+            "gasync",
+            &["generalized"],
+            "Generalized AsyncSGD: immediate update scaled by eta/(n p_i) (Algorithm 1)",
+            |prm| Ok(Box::new(GenAsync::new(prm.eta, prm.p.clone())) as Box<dyn ServerStrategy>),
+        );
+        r.register(
+            "async",
+            &["asyncsgd"],
+            "AsyncSGD (Koloskova et al.): immediate unscaled update w <- w - eta g",
+            |prm| Ok(Box::new(AsyncSgd::new(prm.eta)) as Box<dyn ServerStrategy>),
+        );
+        r.register(
+            "fedbuff",
+            &[],
+            "FedBuff (Nguyen et al.): buffer Z updates, apply their average once",
+            |prm| {
+                Ok(Box::new(FedBuff::new(prm.eta, prm.fedbuff_z)?) as Box<dyn ServerStrategy>)
+            },
+        );
+        r.register(
+            "fedavg",
+            &[],
+            "FedAvg round barrier over the async stream: average once s distinct clients report",
+            |prm| {
+                Ok(Box::new(FedAvgStrategy::new(prm.eta, prm.fedavg_s(), prm.n())?)
+                    as Box<dyn ServerStrategy>)
+            },
+        );
+        r.register(
+            "favano",
+            &[],
+            "FAVANO time-sliced averaging: apply the slice buffer every Delta of virtual time",
+            |prm| {
+                Ok(Box::new(FavanoStrategy::new(prm.eta, prm.favano_interval, prm.n())?)
+                    as Box<dyn ServerStrategy>)
+            },
+        );
+        r
+    }
+
+    /// Register (or replace) a strategy constructor.
+    pub fn register<F>(&mut self, name: &str, aliases: &[&str], summary: &str, ctor: F)
+    where
+        F: Fn(&StrategyParams) -> Result<Box<dyn ServerStrategy>, String> + 'static,
+    {
+        self.entries.retain(|e| e.name != name);
+        self.entries.push(StrategyEntry {
+            name: name.to_string(),
+            aliases: aliases.iter().map(|a| a.to_string()).collect(),
+            summary: summary.to_string(),
+            ctor: Box::new(ctor),
+        });
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries
+            .iter()
+            .any(|e| e.name == name || e.aliases.iter().any(|a| a == name))
+    }
+
+    pub fn build(
+        &self,
+        name: &str,
+        params: &StrategyParams,
+    ) -> Result<Box<dyn ServerStrategy>, String> {
+        for e in &self.entries {
+            if e.name == name || e.aliases.iter().any(|a| a == name) {
+                return (e.ctor)(params);
+            }
+        }
+        Err(format!(
+            "unknown algorithm '{name}' (available: {})",
+            self.names().join("|")
+        ))
+    }
+
+    /// Primary names, in registration order.
+    pub fn names(&self) -> Vec<String> {
+        self.entries.iter().map(|e| e.name.clone()).collect()
+    }
+
+    /// (name, summary) pairs for usage/help text.
+    pub fn summaries(&self) -> Vec<(String, String)> {
+        self.entries
+            .iter()
+            .map(|e| (e.name.clone(), e.summary.clone()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{AliasTable, Rng};
+
+    fn model1d(v: f32) -> ModelState {
+        ModelState { tensors: vec![vec![v]], shapes: vec![vec![1]] }
+    }
+
+    #[test]
+    fn gen_async_scaling_is_unbiased() {
+        // E[update direction] = Σ p_i · (1/(n p_i)) g_i = (1/n) Σ g_i for
+        // ANY p: estimate empirically with per-client constant gradients.
+        let p = vec![0.1, 0.2, 0.3, 0.4];
+        let g_of = |i: usize| vec![vec![(i + 1) as f32]]; // g_i = i+1
+        let mut rng = Rng::new(3);
+        let alias = AliasTable::new(&p).unwrap();
+        let mut total = 0.0f64;
+        let trials = 200_000;
+        for _ in 0..trials {
+            let mut m = model1d(0.0);
+            let mut s = GenAsync::new(1.0, p.clone());
+            let i = alias.sample(&mut rng);
+            let g = g_of(i);
+            s.on_gradient(&mut m, &GradientCtx::sampled(i, &p, &g));
+            total += -m.tensors[0][0] as f64; // applied step
+        }
+        let mean_step = total / trials as f64;
+        let expected = (1.0 + 2.0 + 3.0 + 4.0) / 4.0; // (1/n)Σg_i · η
+        assert!(
+            (mean_step - expected).abs() < 0.02,
+            "mean {mean_step} vs unbiased target {expected}"
+        );
+    }
+
+    #[test]
+    fn gen_async_uses_dispatch_time_probability() {
+        // the ctx probability, not the reference p, drives the scale —
+        // this is what keeps time-varying policies unbiased
+        let p = vec![0.25; 4];
+        let mut m = model1d(0.0);
+        let mut s = GenAsync::new(1.0, p);
+        let g = vec![vec![1.0f32]];
+        let ctx = GradientCtx {
+            node: 0,
+            step: 0,
+            time: 0.0,
+            delay_steps: 0,
+            dispatch_prob: 0.5, // policy had drifted to p_0 = 0.5
+            grads: &g,
+        };
+        s.on_gradient(&mut m, &ctx);
+        // scale = 1/(4·0.5) = 0.5
+        assert!((m.tensors[0][0] + 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn async_sgd_is_gen_async_at_uniform() {
+        let n = 5;
+        let p = vec![1.0 / n as f64; n];
+        let g = vec![vec![2.0f32]];
+        let mut m1 = model1d(1.0);
+        let mut m2 = model1d(1.0);
+        let mut a = GenAsync::new(0.1, p.clone());
+        let mut b = AsyncSgd::new(0.1);
+        a.on_gradient(&mut m1, &GradientCtx::sampled(2, &p, &g));
+        b.on_gradient(&mut m2, &GradientCtx::sampled(2, &p, &g));
+        assert!((m1.tensors[0][0] - m2.tensors[0][0]).abs() < 1e-7);
+    }
+
+    #[test]
+    fn fedbuff_waits_for_z() {
+        let p = vec![0.2; 5];
+        let mut m = model1d(0.0);
+        let mut s = FedBuff::new(1.0, 3).unwrap();
+        let g1 = vec![vec![3.0f32]];
+        let g2 = vec![vec![6.0f32]];
+        let g3 = vec![vec![9.0f32]];
+        assert!(!s.on_gradient(&mut m, &GradientCtx::sampled(0, &p, &g1)));
+        assert!(!s.on_gradient(&mut m, &GradientCtx::sampled(1, &p, &g2)));
+        assert_eq!(m.tensors[0][0], 0.0); // nothing applied yet
+        assert_eq!(s.pending_in_buffer(), 2);
+        assert!(s.on_gradient(&mut m, &GradientCtx::sampled(2, &p, &g3)));
+        // averaged update: (3+6+9)/3 = 6
+        assert!((m.tensors[0][0] + 6.0).abs() < 1e-7);
+        assert_eq!(s.version(), 1);
+        assert_eq!(s.received(), 3);
+        assert_eq!(s.pending_in_buffer(), 0);
+    }
+
+    #[test]
+    fn fedbuff_multiple_rounds() {
+        let p = vec![1.0 / 3.0; 3];
+        let mut m = model1d(0.0);
+        let mut s = FedBuff::new(0.5, 2).unwrap();
+        let g = vec![vec![1.0f32]];
+        for k in 0..10 {
+            s.on_gradient(&mut m, &GradientCtx::sampled(k % 3, &p, &g));
+        }
+        assert_eq!(s.version(), 5);
+        // each round applies 0.5 * avg(1,1) = 0.5
+        assert!((m.tensors[0][0] + 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quadratic_convergence_all_immediate_rules() {
+        // f_i(w) = ½(w − c_i)², optimum of the average = mean(c); the
+        // immediate + buffered rules must converge there under uniform
+        // arrivals.
+        let c = [1.0f32, 2.0, 3.0, 6.0];
+        let opt = 3.0f32;
+        let p = vec![0.25; 4];
+        let make: Vec<Box<dyn Fn() -> Box<dyn ServerStrategy>>> = vec![
+            Box::new(|| Box::new(GenAsync::new(0.05, vec![0.25; 4])) as Box<dyn ServerStrategy>),
+            Box::new(|| Box::new(AsyncSgd::new(0.05)) as Box<dyn ServerStrategy>),
+            Box::new(|| Box::new(FedBuff::new(0.2, 4).unwrap()) as Box<dyn ServerStrategy>),
+            Box::new(|| {
+                Box::new(FedAvgStrategy::new(0.2, 4, 4).unwrap()) as Box<dyn ServerStrategy>
+            }),
+        ];
+        for mk in make {
+            let mut m = model1d(0.0);
+            let mut s = mk();
+            let mut rng = Rng::new(11);
+            for _ in 0..4000 {
+                let i = rng.usize_below(4);
+                let g = vec![vec![m.tensors[0][0] - c[i]]];
+                s.on_gradient(&mut m, &GradientCtx::sampled(i, &p, &g));
+            }
+            let w = m.tensors[0][0];
+            assert!((w - opt).abs() < 0.4, "{} converged to {w}, want ≈{opt}", s.name());
+        }
+    }
+
+    #[test]
+    fn gen_async_nonuniform_still_converges_to_global_opt() {
+        // the whole point of the 1/(np_i) scaling: heavily skewed sampling
+        // must not bias the fixed point.
+        let c = [0.0f32, 0.0, 0.0, 8.0];
+        let opt = 2.0f32;
+        let p = vec![0.4, 0.3, 0.2, 0.1]; // client 3 sampled rarely
+        let alias = AliasTable::new(&p).unwrap();
+        let mut m = model1d(0.0);
+        let mut s = GenAsync::new(0.01, p.clone());
+        let mut rng = Rng::new(13);
+        let mut avg = 0.0f64;
+        let steps = 60_000;
+        for k in 0..steps {
+            let i = alias.sample(&mut rng);
+            let g = vec![vec![m.tensors[0][0] - c[i]]];
+            s.on_gradient(&mut m, &GradientCtx::sampled(i, &p, &g));
+            if k > steps / 2 {
+                avg += m.tensors[0][0] as f64;
+            }
+        }
+        let w = avg / (steps / 2 - 1) as f64;
+        assert!((w - opt as f64).abs() < 0.25, "converged to {w}, want {opt}");
+    }
+
+    #[test]
+    fn fedavg_round_closes_on_distinct_clients() {
+        let p = vec![0.25; 4];
+        let mut m = model1d(0.0);
+        let mut s = FedAvgStrategy::new(1.0, 2, 4).unwrap();
+        let g = vec![vec![4.0f32]];
+        // two gradients from the SAME client do not close the round
+        assert!(!s.on_gradient(&mut m, &GradientCtx::sampled(1, &p, &g)));
+        assert!(!s.on_gradient(&mut m, &GradientCtx::sampled(1, &p, &g)));
+        assert_eq!(m.tensors[0][0], 0.0);
+        // a second distinct client does; the applied update averages all 3
+        assert!(s.on_gradient(&mut m, &GradientCtx::sampled(3, &p, &g)));
+        assert!((m.tensors[0][0] + 4.0).abs() < 1e-6);
+        assert_eq!(s.version(), 1);
+        assert_eq!(s.received(), 3);
+    }
+
+    #[test]
+    fn favano_flushes_on_time_boundaries() {
+        let p = vec![0.5; 2];
+        let mut m = model1d(0.0);
+        let mut s = FavanoStrategy::new(3.0, 1.0, 2).unwrap();
+        let g = vec![vec![1.0f32]];
+        let at = |t: f64, node: usize, g: &[Vec<f32>]| GradientCtx {
+            node,
+            step: 0,
+            time: t,
+            delay_steps: 0,
+            dispatch_prob: 0.5,
+            grads: g,
+        };
+        // two gradients inside the first slice: buffered, no step
+        assert!(!s.on_gradient(&mut m, &at(0.2, 0, &g)));
+        assert!(!s.on_gradient(&mut m, &at(0.9, 1, &g)));
+        assert_eq!(m.tensors[0][0], 0.0);
+        // first arrival past Δ=1 flushes the slice: 2 grads · η/(n+1) = 2·1 = 2
+        assert!(s.on_gradient(&mut m, &at(1.4, 0, &g)));
+        assert!((m.tensors[0][0] + 2.0).abs() < 1e-6);
+        assert_eq!(s.version(), 1);
+        // a long gap skips several boundaries but flushes only once
+        assert!(s.on_gradient(&mut m, &at(7.9, 1, &g)));
+        assert_eq!(s.version(), 2);
+    }
+
+    #[test]
+    fn version_counts() {
+        let p = vec![1.0];
+        let mut m = model1d(0.0);
+        let mut s = AsyncSgd::new(0.1);
+        let g = vec![vec![0.5f32]];
+        for _ in 0..7 {
+            s.on_gradient(&mut m, &GradientCtx::sampled(0, &p, &g));
+        }
+        assert_eq!(s.version(), 7);
+        assert_eq!(s.received(), 7);
+    }
+
+    #[test]
+    fn registry_builds_every_builtin_and_aliases() {
+        let reg = StrategyRegistry::builtin();
+        let prm = StrategyParams::new(0.1, vec![0.25; 4]);
+        assert_eq!(reg.names(), vec!["gasync", "async", "fedbuff", "fedavg", "favano"]);
+        for name in reg.names() {
+            let s = reg.build(&name, &prm).unwrap();
+            assert_eq!(s.version(), 0);
+        }
+        assert_eq!(reg.build("generalized", &prm).unwrap().name(), "gasync");
+        assert_eq!(reg.build("asyncsgd", &prm).unwrap().name(), "async");
+        let err = reg.build("sync-sgd", &prm).unwrap_err();
+        assert!(err.contains("unknown algorithm"), "{err}");
+        assert!(err.contains("favano"), "error must list registered names: {err}");
+    }
+
+    #[test]
+    fn registry_accepts_third_party_strategies() {
+        let mut reg = StrategyRegistry::builtin();
+        reg.register("frozen", &[], "applies nothing (test double)", |_prm| {
+            struct Frozen {
+                received: u64,
+            }
+            impl ServerStrategy for Frozen {
+                fn name(&self) -> &'static str {
+                    "frozen"
+                }
+                fn on_gradient(&mut self, _m: &mut ModelState, _c: &GradientCtx) -> bool {
+                    self.received += 1;
+                    false
+                }
+                fn scale_for(&self, _node: usize) -> f64 {
+                    0.0
+                }
+                fn version(&self) -> u64 {
+                    0
+                }
+                fn received(&self) -> u64 {
+                    self.received
+                }
+            }
+            Ok(Box::new(Frozen { received: 0 }) as Box<dyn ServerStrategy>)
+        });
+        let prm = StrategyParams::new(0.1, vec![0.5, 0.5]);
+        let mut s = reg.build("frozen", &prm).unwrap();
+        let mut m = model1d(1.0);
+        let g = vec![vec![1.0f32]];
+        assert!(!s.on_gradient(&mut m, &GradientCtx::sampled(0, &[0.5, 0.5], &g)));
+        assert_eq!(m.tensors[0][0], 1.0);
+    }
+
+    #[test]
+    fn constructors_validate() {
+        assert!(FedBuff::new(0.1, 0).is_err());
+        assert!(FedAvgStrategy::new(0.1, 0, 4).is_err());
+        assert!(FedAvgStrategy::new(0.1, 5, 4).is_err());
+        assert!(FavanoStrategy::new(0.1, 0.0, 4).is_err());
+        assert!(FavanoStrategy::new(0.1, -1.0, 4).is_err());
+    }
+}

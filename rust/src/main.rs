@@ -7,10 +7,15 @@
 //!   figure N   regenerate one paper figure/table (fig1..fig12, table1/2)
 //!   figures    regenerate everything into --out (default results/)
 //!   info       runtime/artifact diagnostics
+//!
+//! Algorithm and policy lists in the usage/error text are generated from
+//! the strategy/policy registries — registering a new strategy makes it
+//! reachable from `train` with no CLI changes.
 
 use fedqueue::bound::{BoundParams, MiSource, TwoClusterStudy};
-use fedqueue::coordinator::{run_experiment, ExperimentConfig};
+use fedqueue::coordinator::{Experiment, PolicyRegistry};
 use fedqueue::figures;
+use fedqueue::fl::StrategyRegistry;
 use fedqueue::queueing::ClosedNetwork;
 use fedqueue::runtime::{BackendKind, Manifest};
 use fedqueue::simulator::{run as sim_run, ServiceDist, ServiceFamily, SimConfig};
@@ -18,34 +23,62 @@ use fedqueue::util::cli::Args;
 use fedqueue::util::table::Series;
 use std::path::Path;
 
-const USAGE: &str = "\
+fn usage() -> String {
+    let strategies = StrategyRegistry::builtin();
+    let policies = PolicyRegistry::builtin();
+    let algo_list = strategies.names().join("|");
+    let policy_list = policies.names().join("|");
+    let bullets = |pairs: Vec<(String, String)>| -> String {
+        pairs
+            .iter()
+            .map(|(n, s)| format!("  {n:<10} {s}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    format!(
+        "\
 fedqueue — Queuing dynamics of asynchronous Federated Learning (AISTATS 2024)
 
 USAGE: fedqueue <command> [options]
 
 COMMANDS
-  train     --algo gasync|async|fedbuff --variant tiny|cifar|wide|tinyimg
-            --backend pjrt|native --steps N --clients N --concurrency C
-            --eta F --mu-fast F --optimal-p --seed S --out results/train.csv
+  train     --scenario scenarios/NAME.toml | flags:
+            --algo {algo_list}
+            --policy {policy_list}
+            --variant tiny|cifar|wide|tinyimg --backend pjrt|native
+            --steps N --clients N --concurrency C --eta F --mu-fast F
+            --p-fast F --gamma F --fedbuff-z Z --fedavg-s S
+            --favano-interval D --optimal-p (= --policy optimal)
+            --seed S --out results/train.csv
   simulate  --n N --c C --steps N --mu-fast F --n-fast N --p-fast F --seed S
   bounds    --c C --mu-fast F --n N --n-fast N [--physical-time U]
   figure    <fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|table1|table2>
             [--out DIR] [--quick]
   figures   [--out DIR] [--quick]      regenerate every table/figure
   info      print artifact + backend diagnostics
-";
+
+ALGORITHMS (server strategies, from the registry)
+{algos}
+
+POLICIES (sampling distributions, from the registry)
+{pols}
+",
+        algos = bullets(strategies.summaries()),
+        pols = bullets(policies.summaries()),
+    )
+}
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
-        eprintln!("{USAGE}");
+        eprintln!("{}", usage());
         std::process::exit(2);
     }
     let cmd = argv[0].clone();
     let args = match Args::parse(&argv[1..], &["quick", "optimal-p", "record-tasks"]) {
         Ok(a) => a,
         Err(e) => {
-            eprintln!("error: {e}\n\n{USAGE}");
+            eprintln!("error: {e}\n\n{}", usage());
             std::process::exit(2);
         }
     };
@@ -57,10 +90,10 @@ fn main() {
         "figures" => cmd_figures(&args),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
-            println!("{USAGE}");
+            println!("{}", usage());
             Ok(())
         }
-        other => Err(format!("unknown command '{other}'\n\n{USAGE}")),
+        other => Err(format!("unknown command '{other}'\n\n{}", usage())),
     };
     if let Err(e) = result {
         eprintln!("error: {e}");
@@ -69,41 +102,80 @@ fn main() {
 }
 
 fn cmd_train(args: &Args) -> Result<(), String> {
-    let algo = args.str_or("algo", "gasync");
-    let mut cfg = ExperimentConfig {
-        variant: args.str_or("variant", "cifar"),
-        backend: args.str_or("backend", "pjrt").parse::<BackendKind>()?,
-        algo: algo.clone(),
-        n_clients: args.usize_or("clients", 100)?,
-        concurrency: args.usize_or("concurrency", 10)?,
-        steps: args.u64_or("steps", 200)?,
-        eta: args.f64_or("eta", 0.05)?,
-        fedbuff_z: args.usize_or("fedbuff-z", 10)?,
-        slow_fraction: args.f64_or("slow-fraction", 0.5)?,
-        mu_fast: args.f64_or("mu-fast", 4.0)?,
-        p_fast: args.get("p-fast").map(|v| v.parse().map_err(|_| "bad --p-fast")).transpose()?,
-        n_train: args.usize_or("n-train", 20_000)?,
-        n_val: args.usize_or("n-val", 2_000)?,
-        classes_per_client: args.usize_or("classes-per-client", 7)?,
-        eval_every: args.u64_or("eval-every", 20)?,
-        seed: args.u64_or("seed", 0)?,
+    // base: scenario file if given, otherwise the historical CLI defaults
+    let mut cfg = match args.get("scenario") {
+        Some(path) => Experiment::from_scenario(Path::new(path))?,
+        None => Experiment::builder()
+            .variant("cifar")
+            .backend(BackendKind::Pjrt)
+            .clients(100)
+            .concurrency(10)
+            .steps(200)
+            .eta(0.05)
+            .n_train(20_000)
+            .n_val(2_000)
+            .classes_per_client(7)
+            .eval_every(20)
+            .build()?,
     };
+    // CLI flags override whichever base was chosen
+    if let Some(v) = args.get("variant") {
+        cfg.variant = v.to_string();
+    }
+    if let Some(v) = args.get("backend") {
+        cfg.backend = v.parse::<BackendKind>()?;
+    }
+    if let Some(v) = args.get("algo") {
+        cfg.algo = v.to_string();
+    }
+    if let Some(v) = args.get("policy") {
+        cfg.policy = v.to_string();
+    }
+    cfg.n_clients = args.usize_or("clients", cfg.n_clients)?;
+    cfg.concurrency = args.usize_or("concurrency", cfg.concurrency)?;
+    cfg.steps = args.u64_or("steps", cfg.steps)?;
+    cfg.eta = args.f64_or("eta", cfg.eta)?;
+    cfg.fedbuff_z = args.usize_or("fedbuff-z", cfg.fedbuff_z)?;
+    cfg.fedavg_s = args.usize_or("fedavg-s", cfg.fedavg_s)?;
+    cfg.favano_interval = args.f64_or("favano-interval", cfg.favano_interval)?;
+    cfg.slow_fraction = args.f64_or("slow-fraction", cfg.slow_fraction)?;
+    cfg.mu_fast = args.f64_or("mu-fast", cfg.mu_fast)?;
+    if let Some(v) = args.get("p-fast") {
+        cfg.p_fast = Some(v.parse().map_err(|_| "bad --p-fast")?);
+    }
+    cfg.gamma = args.f64_or("gamma", cfg.gamma)?;
+    cfg.n_train = args.usize_or("n-train", cfg.n_train)?;
+    cfg.n_val = args.usize_or("n-val", cfg.n_val)?;
+    cfg.classes_per_client = args.usize_or("classes-per-client", cfg.classes_per_client)?;
+    cfg.eval_every = args.u64_or("eval-every", cfg.eval_every)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
     if args.has("optimal-p") {
-        cfg = cfg.with_optimal_p()?;
+        // historical alias for --policy optimal
+        cfg.policy = "optimal".to_string();
+    }
+    cfg.validate()?;
+    println!("# algo {} | policy {}", cfg.algo, cfg.policy);
+    // resolve the policy ONCE: for `optimal` every construction is a full
+    // bound-optimizer sweep
+    let policy = cfg.build_policy()?;
+    if cfg.policy == "optimal" {
         println!(
             "# optimal p_fast = {:.4e} (uniform would be {:.4e})",
-            cfg.p_fast.unwrap(),
+            policy.probs()[0],
             1.0 / cfg.n_clients as f64
         );
     }
-    let (m_theory, rate) = fedqueue::coordinator::experiment::theory_summary(&cfg)?;
+    let (m_theory, rate) =
+        fedqueue::coordinator::experiment::theory_summary_with(&cfg, policy.probs())?;
     println!(
         "# theory: CS step rate {:.2}/unit-time; mean delay fast {:.1} / slow {:.1} steps",
         rate,
         m_theory[..cfg.n_fast()].iter().sum::<f64>() / cfg.n_fast() as f64,
         m_theory[cfg.n_fast()..].iter().sum::<f64>() / (cfg.n_clients - cfg.n_fast()) as f64
     );
-    let res = run_experiment(&cfg)?;
+    let strategy =
+        StrategyRegistry::builtin().build(&cfg.algo, &cfg.strategy_params(policy.probs()))?;
+    let res = cfg.run_with(strategy, policy)?;
     let mut s = Series::new(&["step", "virtual_time", "train_loss", "val_loss", "val_acc"]);
     for c in &res.curve {
         s.push(vec![c.step as f64, c.virtual_time, c.train_loss, c.val_loss, c.val_accuracy]);
@@ -112,8 +184,14 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     let out = args.str_or("out", "results/train.csv");
     s.write_csv(Path::new(&out)).map_err(|e| e.to_string())?;
     println!(
-        "final: acc {:.4}, val loss {:.4}, τ_max {}, backend {:.1}s / wall {:.1}s → {}",
-        res.final_accuracy, res.final_val_loss, res.tau_max, res.backend_secs, res.wall_secs, out
+        "final: acc {:.4}, val loss {:.4}, τ_max {}, versions {}, backend {:.1}s / wall {:.1}s → {}",
+        res.final_accuracy,
+        res.final_val_loss,
+        res.tau_max,
+        res.versions,
+        res.backend_secs,
+        res.wall_secs,
+        out
     );
     Ok(())
 }
@@ -254,12 +332,21 @@ fn cmd_info() -> Result<(), String> {
         }
         Err(e) => println!("  (no artifacts: {e})"),
     }
-    let client = xla::PjRtClient::cpu().map_err(|e| format!("{e:?}"))?;
-    println!(
-        "PJRT: platform {} ({}), {} device(s)",
-        client.platform_name(),
-        client.platform_version(),
-        client.device_count()
-    );
+    let strategies = StrategyRegistry::builtin();
+    let policies = PolicyRegistry::builtin();
+    println!("strategies: {}", strategies.names().join(", "));
+    println!("policies:   {}", policies.names().join(", "));
+    #[cfg(feature = "pjrt")]
+    {
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("{e:?}"))?;
+        println!(
+            "PJRT: platform {} ({}), {} device(s)",
+            client.platform_name(),
+            client.platform_version(),
+            client.device_count()
+        );
+    }
+    #[cfg(not(feature = "pjrt"))]
+    println!("PJRT: not compiled in (build with `--features pjrt`)");
     Ok(())
 }

@@ -1,16 +1,19 @@
 //! Runtime layer: loads AOT-compiled HLO artifacts (L2 JAX model + L1
-//! Pallas kernels) and executes them via the PJRT C API (`xla` crate) —
-//! plus a pure-Rust `native` backend with identical semantics for fast
-//! sweeps and numerical cross-checks.  Python never runs here.
+//! Pallas kernels) and executes them via the PJRT C API (`xla` crate,
+//! behind the `pjrt` feature) — plus a pure-Rust `native` backend with
+//! identical semantics for fast sweeps and numerical cross-checks.
+//! Python never runs here.
 
 pub mod artifact;
 pub mod backend;
 pub mod native;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 pub use artifact::{Manifest, VariantMeta};
 pub use backend::{Backend, EvalSummary, ModelSpec};
 pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 
 /// Backend selector used by CLI/config.
@@ -34,7 +37,9 @@ impl std::str::FromStr for BackendKind {
 
 /// Construct a backend.  For PJRT the `variant` must exist in the artifact
 /// manifest; for native the spec is taken from the manifest when available
-/// (keeping shapes identical across backends) or from the given fallback.
+/// (keeping shapes identical across backends), from the given fallback, or
+/// — for the `tiny` test variant — from the built-in spec so tests and CI
+/// run without artifacts.
 pub fn make_backend(
     kind: BackendKind,
     variant: &str,
@@ -42,7 +47,14 @@ pub fn make_backend(
 ) -> Result<Box<dyn Backend>, String> {
     let dir = Manifest::default_dir();
     match kind {
+        #[cfg(feature = "pjrt")]
         BackendKind::Pjrt => Ok(Box::new(PjrtBackend::load(&dir, variant)?)),
+        #[cfg(not(feature = "pjrt"))]
+        BackendKind::Pjrt => Err(
+            "pjrt backend not compiled in (rebuild with `--features pjrt`), \
+             or use --backend native"
+                .into(),
+        ),
         BackendKind::Native => {
             let spec = match Manifest::load(&dir) {
                 Ok(m) => {
@@ -55,7 +67,13 @@ pub fn make_backend(
                         eval_batch: v.eval_batch,
                     }
                 }
-                Err(e) => fallback.ok_or(format!("no manifest and no fallback spec: {e}"))?,
+                Err(e) => match fallback {
+                    Some(spec) => spec,
+                    None if variant.trim_end_matches("_jnp") == "tiny" => {
+                        NativeBackend::tiny().spec().clone()
+                    }
+                    None => return Err(format!("no manifest and no fallback spec: {e}")),
+                },
             };
             Ok(Box::new(NativeBackend::new(spec)))
         }

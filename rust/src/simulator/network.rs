@@ -11,9 +11,17 @@
 //!
 //! The same engine drives the DL experiments: `coordinator::driver` replays
 //! the event stream and attaches real gradient computations to completions.
+//!
+//! Routing is delegated to a [`SamplingPolicy`]: the policy observes the
+//! queue lengths before every dispatch and the engine records, on each
+//! task, the probability with which its node was selected — the
+//! inverse-probability weight Generalized AsyncSGD needs to stay unbiased
+//! under time-varying policies.  `Network::new` wraps the config's `p` in
+//! a static policy, reproducing the original fixed-p dynamics exactly.
 
 use super::service::ServiceDist;
-use crate::util::rng::{AliasTable, Rng};
+use crate::coordinator::policy::{SamplingPolicy, StaticPolicy};
+use crate::util::rng::Rng;
 use crate::util::stats::Welford;
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
@@ -75,6 +83,19 @@ impl SimConfig {
         if (sum - 1.0).abs() > 1e-9 {
             return Err(format!("p sums to {sum}"));
         }
+        for (i, (pi, sd)) in self.p.iter().zip(&self.service).enumerate() {
+            if !pi.is_finite() || *pi < 0.0 {
+                return Err(format!("p[{i}] = {pi} is not a probability"));
+            }
+            if *pi == 0.0 && sd.rate() > 0.0 {
+                return Err(format!(
+                    "p[{i}] = 0 on a node with positive service rate mu={}: \
+                     GenAsync's eta/(n*p_i) scaling would divide by zero; \
+                     drop the node instead of zeroing its probability",
+                    sd.rate()
+                ));
+            }
+        }
         Ok(())
     }
 }
@@ -87,6 +108,9 @@ pub struct TaskRecord {
     pub complete_step: u64,
     pub dispatch_time: f64,
     pub complete_time: f64,
+    /// probability with which `node` was selected at dispatch time (the
+    /// IPW weight for unbiased non-uniform-sampling updates)
+    pub dispatch_prob: f64,
 }
 
 impl TaskRecord {
@@ -100,6 +124,7 @@ impl TaskRecord {
 struct Task {
     dispatch_step: u64,
     dispatch_time: f64,
+    dispatch_prob: f64,
 }
 
 /// Completion event in the virtual-time heap.
@@ -194,13 +219,15 @@ impl SimResult {
 pub struct Network {
     pub cfg: SimConfig,
     rng: Rng,
-    alias: AliasTable,
+    policy: Box<dyn SamplingPolicy>,
     queues: Vec<VecDeque<Task>>,
     heap: BinaryHeap<Event>,
     seq: u64,
     pub now: f64,
     pub step: u64,
     busy_count: usize,
+    /// reusable queue-length scratch for policy observation
+    lens_buf: Vec<u32>,
 }
 
 /// What happened at one CS step (completion + routing of a fresh task).
@@ -219,11 +246,50 @@ pub struct StepOutcome {
 }
 
 impl Network {
+    /// Fixed-p engine: wraps `cfg.p` in a [`StaticPolicy`].  Byte-for-byte
+    /// the original dynamics (same alias table, same RNG stream).
     pub fn new(cfg: SimConfig) -> Result<Network, String> {
+        let policy = Box::new(StaticPolicy::new(cfg.p.clone())?);
+        Network::with_policy(cfg, policy)
+    }
+
+    /// Engine with an arbitrary (possibly adaptive) sampling policy.  The
+    /// policy is consulted at every routing step; `cfg.p` remains the
+    /// reference distribution used for validation.
+    pub fn with_policy(
+        cfg: SimConfig,
+        mut policy: Box<dyn SamplingPolicy>,
+    ) -> Result<Network, String> {
         cfg.validate()?;
-        let alias = AliasTable::new(&cfg.p)?;
-        let mut rng = Rng::new(cfg.seed).derive(0x51_3A_77);
         let n = cfg.p.len();
+        if policy.probs().len() != n {
+            return Err(format!(
+                "policy '{}' covers {} nodes but the network has {n}",
+                policy.name(),
+                policy.probs().len()
+            ));
+        }
+        let mut rng = Rng::new(cfg.seed).derive(0x51_3A_77);
+        // initial placement S_0 — (node, selection probability) pairs
+        let placements: Vec<(usize, f64)> = match cfg.init {
+            InitPlacement::OnePerNode => {
+                (0..n).map(|i| (i, policy.probs()[i])).collect()
+            }
+            InitPlacement::RoundRobin => (0..cfg.concurrency)
+                .map(|j| (j % n, policy.probs()[j % n]))
+                .collect(),
+            InitPlacement::Routed => {
+                let mut lens = vec![0u32; n];
+                (0..cfg.concurrency)
+                    .map(|_| {
+                        policy.observe(&lens);
+                        let node = policy.route(&mut rng);
+                        lens[node] += 1;
+                        (node, policy.probs()[node])
+                    })
+                    .collect()
+            }
+        };
         let mut net = Network {
             queues: vec![VecDeque::new(); n],
             heap: BinaryHeap::new(),
@@ -231,28 +297,20 @@ impl Network {
             now: 0.0,
             step: 0,
             busy_count: 0,
-            alias,
+            policy,
             cfg,
-            rng: Rng::new(0),
+            rng,
+            lens_buf: Vec::with_capacity(n),
         };
-        // initial placement S_0
-        let placements: Vec<usize> = match net.cfg.init {
-            InitPlacement::OnePerNode => (0..n).collect(),
-            InitPlacement::RoundRobin => (0..net.cfg.concurrency).map(|j| j % n).collect(),
-            InitPlacement::Routed => (0..net.cfg.concurrency)
-                .map(|_| net.alias.sample(&mut rng))
-                .collect(),
-        };
-        net.rng = rng;
-        for node in placements {
-            net.arrive(node as u32, 0, 0.0);
+        for (node, prob) in placements {
+            net.arrive(node as u32, 0, 0.0, prob);
         }
         Ok(net)
     }
 
-    fn arrive(&mut self, node: u32, dispatch_step: u64, t: f64) {
+    fn arrive(&mut self, node: u32, dispatch_step: u64, t: f64, dispatch_prob: f64) {
         let q = &mut self.queues[node as usize];
-        q.push_back(Task { dispatch_step, dispatch_time: t });
+        q.push_back(Task { dispatch_step, dispatch_time: t, dispatch_prob });
         if q.len() == 1 {
             self.busy_count += 1;
             self.schedule_service(node, t);
@@ -272,6 +330,17 @@ impl Network {
 
     pub fn queue_len(&self, i: usize) -> usize {
         self.queues[i].len()
+    }
+
+    /// Name of the routing policy in force.
+    pub fn policy_name(&self) -> String {
+        self.policy.name()
+    }
+
+    /// The routing distribution currently in force (time-varying for
+    /// adaptive policies).
+    pub fn current_probs(&self) -> &[f64] {
+        self.policy.probs()
     }
 
     /// Advance one CS step: pop the next completion, route a replacement.
@@ -294,11 +363,17 @@ impl Network {
             complete_step: self.step,
             dispatch_time: task.dispatch_time,
             complete_time: self.now,
+            dispatch_prob: task.dispatch_prob,
         };
-        // dispatcher: select K_{k+1} and send the new model
-        let next = self.alias.sample(&mut self.rng) as u32;
+        // dispatcher: consult the sampling policy, select K_{k+1}, and send
+        // the new model
+        self.lens_buf.clear();
+        self.lens_buf.extend(self.queues.iter().map(|q| q.len() as u32));
+        self.policy.observe(&self.lens_buf);
+        let next = self.policy.route(&mut self.rng) as u32;
+        let next_prob = self.policy.probs()[next as usize];
         let next_dispatch_step = self.step + 1;
-        self.arrive(next, next_dispatch_step, self.now);
+        self.arrive(next, next_dispatch_step, self.now, next_prob);
         let outcome = StepOutcome {
             completed_node: node,
             dispatch_step: task.dispatch_step,
@@ -447,6 +522,60 @@ mod tests {
         let mut cfg = two_cluster_cfg(4, 2, 1.0, 1.0, 4, 10);
         cfg.p[0] = 0.9;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn zero_p_on_active_node_rejected() {
+        // GenAsync divides by n·p_i — a zero-probability node with positive
+        // service rate must be a config error, not a NaN factory
+        let mut cfg = two_cluster_cfg(4, 2, 1.0, 1.0, 4, 10);
+        cfg.p = vec![0.0, 0.4, 0.3, 0.3];
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("p[0]"), "{err}");
+        assert!(err.contains("service rate"), "{err}");
+        // negative / non-finite entries are rejected too
+        let mut cfg = two_cluster_cfg(4, 2, 1.0, 1.0, 4, 10);
+        cfg.p = vec![-0.1, 0.5, 0.3, 0.3];
+        assert!(cfg.validate().is_err());
+        let mut cfg = two_cluster_cfg(4, 2, 1.0, 1.0, 4, 10);
+        cfg.p = vec![f64::NAN, 0.4, 0.3, 0.3];
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn adaptive_policy_conserves_population_and_records_probs() {
+        use crate::coordinator::policy::AdaptiveQueuePolicy;
+        let mut cfg = two_cluster_cfg(6, 3, 2.0, 1.0, 8, 0);
+        cfg.seed = 17;
+        let policy = AdaptiveQueuePolicy::new(cfg.p.clone(), 0.7).unwrap();
+        let mut net = Network::with_policy(cfg, Box::new(policy)).unwrap();
+        for _ in 0..2000 {
+            let out = net.advance().unwrap();
+            assert_eq!(net.population(), 8);
+            let dp = out.record.dispatch_prob;
+            assert!(dp > 0.0 && dp <= 1.0, "dispatch prob {dp}");
+        }
+        let sum: f64 = net.current_probs().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn static_policy_matches_plain_network() {
+        // Network::new and an explicit StaticPolicy must generate the
+        // identical event stream (same RNG consumption)
+        use crate::coordinator::policy::StaticPolicy;
+        let mut cfg = two_cluster_cfg(6, 3, 2.0, 1.0, 6, 300);
+        cfg.seed = 23;
+        cfg.record_tasks = true;
+        let a = run(cfg.clone()).unwrap();
+        let policy = StaticPolicy::new(cfg.p.clone()).unwrap();
+        let mut net = Network::with_policy(cfg, Box::new(policy)).unwrap();
+        for rec in &a.tasks {
+            let out = net.advance().unwrap();
+            assert_eq!(out.record.node, rec.node);
+            assert_eq!(out.record.dispatch_step, rec.dispatch_step);
+            assert_eq!(out.record.complete_time.to_bits(), rec.complete_time.to_bits());
+        }
     }
 
     #[test]

@@ -1,14 +1,12 @@
 //! Integration: the full asynchronous coordinator over the native backend —
 //! end-to-end learning, algorithm comparisons, and experiment-runner
-//! plumbing (multi-seed sweeps, theory summaries).
+//! plumbing (builder, scenarios, multi-seed sweeps, theory summaries).
 
-use fedqueue::coordinator::{
-    run_experiment, seed_sweep, table2_seeds, ExperimentConfig,
-};
+use fedqueue::coordinator::{run_experiment, seed_sweep, table2_seeds, Experiment};
 use fedqueue::figures::dl_figs::fig6_config;
 use fedqueue::runtime::BackendKind;
 
-fn quick(algo: &str, seed: u64) -> ExperimentConfig {
+fn quick(algo: &str, seed: u64) -> Experiment {
     let mut cfg = fig6_config(algo, true);
     cfg.backend = BackendKind::Native;
     cfg.seed = seed;
@@ -31,16 +29,40 @@ fn full_protocol_learns_on_all_algorithms() {
             res.final_accuracy
         );
         assert_eq!(res.steps, 120);
+        assert_eq!(res.strategy, algo);
         assert!(!res.curve.is_empty());
     }
 }
 
 #[test]
-fn gasync_with_optimal_p_cuts_fast_delays() {
+fn fedavg_and_favano_run_via_registry() {
+    // the semi-synchronous engines are reachable from the same train path
+    // as the async strategies — `--algo fedavg|favano` end to end
+    for (algo, eta) in [("fedavg", 0.3), ("favano", 0.5)] {
+        let mut cfg = quick(algo, 5);
+        cfg.eta = eta;
+        cfg.favano_interval = 2.0;
+        let res = run_experiment(&cfg).unwrap();
+        assert_eq!(res.strategy, algo);
+        assert_eq!(res.steps, 120);
+        assert!(res.versions > 0, "{algo}: no server update ever applied");
+        assert!(res.versions < 120, "{algo}: buffered engine cannot step every gradient");
+        assert!(
+            res.final_accuracy.is_finite() && res.final_accuracy > 0.05,
+            "{algo}: accuracy {}",
+            res.final_accuracy
+        );
+    }
+}
+
+#[test]
+fn gasync_with_optimal_policy_cuts_fast_delays() {
     let uni = run_experiment(&quick("async", 6)).unwrap();
-    let opt_cfg = quick("gasync", 6).with_optimal_p().unwrap();
-    assert!(opt_cfg.p_fast.unwrap() < 1.0 / opt_cfg.n_clients as f64);
+    let mut opt_cfg = quick("gasync", 6);
+    opt_cfg.policy = "optimal".into();
+    assert!(opt_cfg.optimal_p_fast().unwrap() < 1.0 / opt_cfg.n_clients as f64);
     let opt = run_experiment(&opt_cfg).unwrap();
+    assert_eq!(opt.policy, "optimal");
     let nf = opt_cfg.n_fast();
     let mean = |d: &[f64]| {
         let v: Vec<f64> = d.iter().cloned().filter(|v| v.is_finite()).collect();
@@ -101,16 +123,23 @@ fn fedbuff_insensitive_to_z_only_in_cadence() {
     // (fewer server model updates for the same gradient budget)
     assert!(ra.final_accuracy > 0.2);
     assert!(rb.curve[0].val_accuracy <= ra.curve[0].val_accuracy + 0.05);
+    assert_eq!(ra.versions, 120 / 2);
+    assert_eq!(rb.versions, 120 / 20);
 }
 
 #[test]
-fn misconfigured_variants_fail_cleanly() {
+fn misconfigured_algorithms_fail_cleanly_with_registry_listing() {
     let mut cfg = quick("gasync", 1);
-    cfg.variant = "cifar".into(); // dataset stays tiny-shaped → mismatch
-    cfg.n_train = 100;
-    // cifar variant expects 3072-dim inputs; synth_spec() follows variant,
-    // so this is consistent — instead break the algo name:
     cfg.algo = "sync-sgd".into();
     let err = run_experiment(&cfg).unwrap_err();
     assert!(err.contains("unknown"), "{err}");
+    // the error enumerates the registry, not a hard-coded string
+    for name in ["gasync", "async", "fedbuff", "fedavg", "favano"] {
+        assert!(err.contains(name), "error should list '{name}': {err}");
+    }
+    let mut cfg = quick("gasync", 1);
+    cfg.policy = "no-such-policy".into();
+    let err = run_experiment(&cfg).unwrap_err();
+    assert!(err.contains("unknown sampling policy"), "{err}");
+    assert!(err.contains("adaptive"), "{err}");
 }

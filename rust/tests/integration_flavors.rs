@@ -2,6 +2,8 @@
 //! pure-jnp lowering — must be numerically interchangeable.  This is what
 //! licenses running the multi-seed experiments on the fast jnp flavor
 //! while the Pallas flavor remains the TPU-faithful path (§Perf).
+//! Requires the PJRT backend (`--features pjrt`) and built artifacts.
+#![cfg(feature = "pjrt")]
 
 use fedqueue::data::Batch;
 use fedqueue::runtime::{Backend, Manifest, PjrtBackend};

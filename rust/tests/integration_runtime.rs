@@ -2,6 +2,8 @@
 //! crate) must agree numerically with the native Rust backend — this is
 //! the L1/L2 ⇄ L3 contract.  Requires `make artifacts`; tests skip with a
 //! notice when artifacts are absent (plain `cargo test` before `make`).
+//! Requires the PJRT backend (`--features pjrt`).
+#![cfg(feature = "pjrt")]
 
 use fedqueue::data::Batch;
 use fedqueue::runtime::{Backend, Manifest, NativeBackend, PjrtBackend};

@@ -1,0 +1,212 @@
+//! Integration: the trait-based strategy & sampling-policy API.
+//!
+//! * Registry round-trip: every registered strategy name constructs and
+//!   drives 10 real coordinator steps.
+//! * Unbiasedness property: Generalized AsyncSGD's inverse-probability
+//!   scaling keeps the mean applied update equal to the uniform-sampling
+//!   reference under `static`, `optimal`, and the time-varying `adaptive`
+//!   policy — through the actual closed-network event stream.
+//! * `--policy optimal` reproduces the historical `--optimal-p` behavior:
+//!   identical delays for identical seeds.
+
+use fedqueue::coordinator::policy::{
+    optimal_two_cluster, AdaptiveQueuePolicy, PolicyCtx, PolicyRegistry, SamplingPolicy,
+    StaticPolicy,
+};
+use fedqueue::coordinator::{build_loaders, Driver, DriverConfig, Experiment};
+use fedqueue::data::{generate, EvalBatches, Partition, PartitionScheme, SynthSpec};
+use fedqueue::fl::{GenAsync, GradientCtx, ModelState, ServerStrategy, StrategyRegistry};
+use fedqueue::fl::StrategyParams;
+use fedqueue::runtime::{Backend, NativeBackend};
+use fedqueue::simulator::{Network, ServiceDist, ServiceFamily, SimConfig};
+
+#[test]
+fn strategy_registry_round_trip_runs_ten_steps() {
+    // every registered name constructs and runs 10 steps end to end
+    let reg = StrategyRegistry::builtin();
+    assert!(reg.names().len() >= 5, "expected the 5 built-ins");
+    for name in reg.names() {
+        let n = 6;
+        let spec = SynthSpec::tiny_test();
+        let train = std::sync::Arc::new(generate(&spec, 400, 61));
+        let val = generate(&spec, 100, 62);
+        let part = Partition::build(&train, n, PartitionScheme::Iid, 63).unwrap();
+        let mut backend = NativeBackend::tiny();
+        let loaders =
+            build_loaders(train, &part, backend.spec().train_batch, false, 64).unwrap();
+        let val_b = EvalBatches::new(&val, backend.spec().eval_batch);
+        let rates = vec![1.5; n];
+        let sim = SimConfig {
+            seed: 65,
+            ..SimConfig::new(
+                vec![1.0 / n as f64; n],
+                ServiceDist::from_rates(&rates, ServiceFamily::Exponential),
+                3,
+                10,
+            )
+        };
+        let prm = StrategyParams::new(0.05, sim.p.clone());
+        let strategy = reg.build(&name, &prm).unwrap();
+        let mut model = backend.spec().init_model(66);
+        let cfg = DriverConfig::with_strategy(sim, strategy).unwrap();
+        let mut driver = Driver::new(&mut backend, loaders, val_b);
+        let res = driver.run(cfg, &mut model).unwrap();
+        assert_eq!(res.steps, 10, "{name}");
+        assert_eq!(res.strategy, name);
+        assert_eq!(res.curve.len(), 1, "{name}: final eval only");
+        assert!(res.final_accuracy.is_finite(), "{name}");
+    }
+}
+
+/// Drive GenAsync through the real event stream under `policy` with
+/// per-client constant gradients g_i = i+1 and return the mean applied
+/// step per CS step.
+fn mean_step_under_policy(policy: Box<dyn SamplingPolicy>, n: usize, steps: u64) -> f64 {
+    let rates: Vec<f64> = (0..n).map(|i| if i < n / 2 { 4.0 } else { 1.0 }).collect();
+    let cfg = SimConfig {
+        seed: 0x5EED,
+        ..SimConfig::new(
+            vec![1.0 / n as f64; n],
+            ServiceDist::from_rates(&rates, ServiceFamily::Exponential),
+            n / 2,
+            steps,
+        )
+    };
+    let mut net = Network::with_policy(cfg, policy).unwrap();
+    let mut strat = GenAsync::new(1.0, vec![1.0 / n as f64; n]);
+    let mut model = ModelState { tensors: vec![vec![0.0f32]], shapes: vec![vec![1]] };
+    let mut total = 0.0f64;
+    for k in 0..steps {
+        let out = net.advance().unwrap();
+        let node = out.completed_node as usize;
+        let g = vec![vec![(node + 1) as f32]];
+        let before = model.tensors[0][0] as f64;
+        strat.on_gradient(
+            &mut model,
+            &GradientCtx {
+                node,
+                step: k,
+                time: out.time,
+                delay_steps: out.record.delay_steps(),
+                dispatch_prob: out.record.dispatch_prob,
+                grads: &g,
+            },
+        );
+        total += before - model.tensors[0][0] as f64; // applied descent step
+        // keep the iterate bounded so f32 precision holds
+        model.tensors[0][0] = 0.0;
+    }
+    total / steps as f64
+}
+
+#[test]
+fn gasync_unbiased_under_static_optimal_and_adaptive_policies() {
+    // E[applied step] = Σ p_i·(g_i/(n p_i)) = (1/n)Σ g_i for ANY sampling
+    // distribution — including the queue-length-adaptive one, because the
+    // scale uses the dispatch-time probability.
+    let n = 4;
+    let steps = 120_000u64;
+    let uniform_reference = (1..=n).map(|v| v as f64).sum::<f64>() / n as f64; // 2.5
+    let tilted = StaticPolicy::new(vec![0.1, 0.2, 0.3, 0.4]).unwrap();
+    let optimal = optimal_two_cluster(&PolicyCtx {
+        n,
+        base_p: vec![0.25; n],
+        gamma: 0.0,
+        n_fast: 2,
+        mu_fast: 4.0,
+        mu_slow: 1.0,
+        concurrency: 2,
+        steps: 10_000,
+    })
+    .unwrap();
+    let adaptive = AdaptiveQueuePolicy::new(vec![0.25; n], 0.8).unwrap();
+    let cases: Vec<(&str, Box<dyn SamplingPolicy>)> = vec![
+        ("static", Box::new(tilted)),
+        ("optimal", Box::new(optimal)),
+        ("adaptive", Box::new(adaptive)),
+    ];
+    for (label, policy) in cases {
+        let mean = mean_step_under_policy(policy, n, steps);
+        let rel = (mean - uniform_reference).abs() / uniform_reference;
+        assert!(
+            rel < 0.05,
+            "{label}: mean applied step {mean} deviates {rel:.3} from the \
+             uniform reference {uniform_reference}"
+        );
+    }
+}
+
+#[test]
+fn policy_registry_round_trip() {
+    let reg = PolicyRegistry::builtin();
+    let ctx = PolicyCtx {
+        n: 8,
+        base_p: vec![0.125; 8],
+        gamma: 0.5,
+        n_fast: 4,
+        mu_fast: 4.0,
+        mu_slow: 1.0,
+        concurrency: 4,
+        steps: 500,
+    };
+    for name in reg.names() {
+        let policy = reg.build(&name, &ctx).unwrap();
+        let rates: Vec<f64> = (0..8).map(|i| if i < 4 { 4.0 } else { 1.0 }).collect();
+        let cfg = SimConfig {
+            seed: 71,
+            ..SimConfig::new(
+                vec![0.125; 8],
+                ServiceDist::from_rates(&rates, ServiceFamily::Exponential),
+                4,
+                0,
+            )
+        };
+        let mut net = Network::with_policy(cfg, policy).unwrap();
+        for _ in 0..500 {
+            let out = net.advance().unwrap();
+            assert_eq!(net.population(), 4, "{name}");
+            assert!(out.record.dispatch_prob > 0.0, "{name}");
+        }
+        let sum: f64 = net.current_probs().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "{name}: probs sum {sum}");
+    }
+}
+
+#[test]
+fn optimal_policy_reproduces_optimal_p_static_tilt() {
+    // acceptance: `--policy optimal` must generate the same dynamics as
+    // the historical `--optimal-p` (compute p_fast, then run static p)
+    let base = Experiment::builder()
+        .variant("tiny")
+        .algo("gasync")
+        .clients(12)
+        .concurrency(4)
+        .steps(80)
+        .eta(0.05)
+        .n_train(800)
+        .n_val(200)
+        .eval_every(0)
+        .seed(13)
+        .build()
+        .unwrap();
+    let mut via_policy = base.clone();
+    via_policy.policy = "optimal".into();
+    let res_policy = via_policy.run().unwrap();
+    // the old flag's code path: resolve p_fast first, then run static
+    let mut via_pfast = base.clone();
+    via_pfast.p_fast = Some(base.optimal_p_fast().unwrap());
+    via_pfast.policy = "static".into();
+    let res_static = via_pfast.run().unwrap();
+    assert_eq!(res_policy.tau_max, res_static.tau_max);
+    for (a, b) in res_policy.mean_delay.iter().zip(&res_static.mean_delay) {
+        assert_eq!(a.to_bits(), b.to_bits(), "delays must match exactly");
+    }
+    assert_eq!(
+        res_policy.total_virtual_time.to_bits(),
+        res_static.total_virtual_time.to_bits()
+    );
+    assert_eq!(
+        res_policy.final_accuracy.to_bits(),
+        res_static.final_accuracy.to_bits()
+    );
+}

@@ -1,7 +1,7 @@
 //! Property-based tests (hand-rolled harness, see util::proptest) on the
 //! coordinator/queueing invariants the paper's analysis rests on.
 
-use fedqueue::fl::{ModelState, ServerAlgo, UpdateRule};
+use fedqueue::fl::{FedBuff, GenAsync, GradientCtx, ModelState, ServerStrategy};
 use fedqueue::queueing::ClosedNetwork;
 use fedqueue::simulator::{Network, ServiceDist, ServiceFamily, SimConfig};
 use fedqueue::util::proptest::{check, Config, Gen, UsizeGen, WeightsGen};
@@ -116,8 +116,9 @@ fn prop_gen_async_unbiased() {
         for _ in 0..trials {
             let i = alias.sample(&mut rng);
             let mut m = ModelState { tensors: vec![vec![0.0]], shapes: vec![vec![1]] };
-            let mut s = ServerAlgo::new(UpdateRule::GenAsync { eta: 1.0, p: p.clone() });
-            s.on_gradient(&mut m, i, &[vec![(i + 1) as f32]]);
+            let mut s = GenAsync::new(1.0, p.clone());
+            let g = vec![vec![(i + 1) as f32]];
+            s.on_gradient(&mut m, &GradientCtx::sampled(i, &p, &g));
             total += -m.tensors[0][0] as f64;
         }
         let mean = total / trials as f64;
@@ -169,17 +170,19 @@ fn prop_fedbuff_cadence() {
     let g = UsizeGen { lo: 1, hi: 12 };
     check("fedbuff-cadence", &g, &Config { cases: 30, ..Default::default() }, |&z| {
         let mut m = ModelState { tensors: vec![vec![0.0]], shapes: vec![vec![1]] };
-        let mut s = ServerAlgo::new(UpdateRule::FedBuff { eta: 0.1, z });
+        let mut s = FedBuff::new(0.1, z).map_err(|e| e)?;
+        let p = vec![0.2; 5];
         let mut rng = Rng::new(z as u64);
         for k in 1..=(z * 7) {
             let node = rng.usize_below(5);
-            let stepped = s.on_gradient(&mut m, node, &[vec![1.0]]);
+            let g = vec![vec![1.0f32]];
+            let stepped = s.on_gradient(&mut m, &GradientCtx::sampled(node, &p, &g));
             if stepped != (k % z == 0) {
                 return Err(format!("z={z}: step at gradient {k} unexpected"));
             }
         }
-        if s.version != 7 {
-            return Err(format!("z={z}: {} versions, want 7", s.version));
+        if s.version() != 7 {
+            return Err(format!("z={z}: {} versions, want 7", s.version()));
         }
         Ok(())
     });
