@@ -62,14 +62,14 @@ fn main() -> Result<(), String> {
         println!("optimal p_fast = {:.3e}", policy.probs()[0]);
     }
     let (m, rate) =
-        fedqueue::coordinator::experiment::theory_summary_with(&cfg, policy.probs())?;
+        fedqueue::coordinator::experiment::theory_summary_with(&cfg, &policy.probs())?;
     println!(
         "theory: CS step rate {rate:.2}; expected delays fast {:.1} / slow {:.1} steps",
         m[..cfg.n_fast()].iter().sum::<f64>() / cfg.n_fast() as f64,
         m[cfg.n_fast()..].iter().sum::<f64>() / (cfg.n_clients - cfg.n_fast()) as f64
     );
     let strategy = fedqueue::fl::StrategyRegistry::builtin()
-        .build(&cfg.algo, &cfg.strategy_params(policy.probs()))?;
+        .build(&cfg.algo, &cfg.strategy_params(&policy.probs()))?;
     let t0 = std::time::Instant::now();
     let res = cfg.run_with(strategy, policy)?;
     println!("\nstep  vtime    train_loss  val_loss  val_acc");

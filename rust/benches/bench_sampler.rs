@@ -1,0 +1,115 @@
+//! Routing-sampler bench: dispatch throughput of the O(n) linear CDF scan
+//! vs the O(1) alias table vs the O(log n) Fenwick tree, plus the full
+//! adaptive-policy step (observe + route) exact vs Fenwick-backed.
+//!
+//! Doubles as the CI regression gate: `--assert-speedup X` exits nonzero
+//! unless the alias sampler beats the linear scan by at least X× at
+//! n = 10_000 (the ISSUE-2 acceptance floor is 10×).
+//!
+//!     cargo bench --bench bench_sampler -- --quick --assert-speedup 10
+
+use fedqueue::coordinator::policy::{AdaptiveQueuePolicy, FenwickAdaptivePolicy, SamplingPolicy};
+use fedqueue::util::bench::{black_box, Bencher};
+use fedqueue::util::cli::Args;
+use fedqueue::util::rng::{AliasTable, Rng};
+use fedqueue::util::sampler::{linear_route, FenwickSampler};
+
+/// Two-cluster distribution with mild skew (the paper's shape).
+fn two_cluster_p(n: usize) -> Vec<f64> {
+    let pf = 0.5 / n as f64;
+    let q = (1.0 - (n / 2) as f64 * pf) / (n - n / 2) as f64;
+    (0..n).map(|i| if i < n / 2 { pf } else { q }).collect()
+}
+
+const DRAWS_PER_ITER: u64 = 1_000;
+
+fn bench_draws(b: &Bencher, name: &str, mut draw: impl FnMut(&mut Rng) -> usize) -> f64 {
+    let mut rng = Rng::new(7);
+    let r = b.run(name, || {
+        let mut acc = 0usize;
+        for _ in 0..DRAWS_PER_ITER {
+            acc = acc.wrapping_add(draw(&mut rng));
+        }
+        black_box(acc);
+    });
+    let per_sec = r.throughput(DRAWS_PER_ITER as f64);
+    println!("    -> {:.2} M draws/s", per_sec / 1e6);
+    per_sec
+}
+
+fn main() {
+    // `cargo bench` hands harness=false binaries an extra `--bench` flag;
+    // accept it as a no-value flag so it can't eat the next option.  A
+    // parse failure is fatal — silently dropping args here would disable
+    // the CI regression gate while staying green.
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv, &["quick", "bench"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("bench_sampler: {e}");
+            std::process::exit(2);
+        }
+    };
+    let b = if args.has("quick") { Bencher::quick() } else { Bencher::default() };
+    println!("# bench_sampler — routing dispatch throughput");
+
+    let mut gate: Option<(f64, f64)> = None; // (linear, alias) at n = 10_000
+    for n in [1_000usize, 10_000, 100_000] {
+        let p = two_cluster_p(n);
+        let linear = bench_draws(&b, &format!("route/linear-scan/n={n}"), |rng| {
+            linear_route(&p, rng.uniform())
+        });
+        let alias_t = AliasTable::new(&p).unwrap();
+        let alias = bench_draws(&b, &format!("route/alias/n={n}"), |rng| alias_t.sample(rng));
+        let fen = FenwickSampler::new(&p).unwrap();
+        let fenwick = bench_draws(&b, &format!("route/fenwick/n={n}"), |rng| fen.sample(rng));
+        println!(
+            "    == n={n}: alias {:.0}x, fenwick {:.0}x over linear",
+            alias / linear,
+            fenwick / linear
+        );
+        if n == 10_000 {
+            gate = Some((linear, alias));
+        }
+    }
+
+    // full adaptive step: one queue-length observation + one route
+    let n = 10_000;
+    let base = vec![1.0 / n as f64; n];
+    let mut lens = vec![0u32; n];
+    let mut exact = AdaptiveQueuePolicy::new(base.clone(), 0.5).unwrap();
+    let mut i = 0usize;
+    let exact_rate = bench_draws(&b, "adaptive-step/exact-O(n)/n=10000", |rng| {
+        i = (i + 1) % n;
+        lens[i] = (lens[i] + 1) % 8;
+        exact.observe(&lens);
+        exact.route(rng)
+    });
+    let mut fast = FenwickAdaptivePolicy::new(base, 0.5).unwrap();
+    let mut lens2 = vec![0u32; n];
+    let mut j = 0usize;
+    let fast_rate = bench_draws(&b, "adaptive-step/fenwick-O(log n)/n=10000", |rng| {
+        j = (j + 1) % n;
+        lens2[j] = (lens2[j] + 1) % 8;
+        fast.observe_node(j, lens2[j]);
+        fast.route(rng)
+    });
+    println!(
+        "    == adaptive step: fenwick {:.0}x over exact renormalization",
+        fast_rate / exact_rate
+    );
+
+    if let Some(min) = args.get("assert-speedup") {
+        let min: f64 = min.parse().expect("--assert-speedup expects a number");
+        let (linear, alias) = gate.expect("n = 10_000 case always runs");
+        let speedup = alias / linear;
+        if speedup < min {
+            eprintln!(
+                "FAIL: alias sampler only {speedup:.1}x over linear scan at n=10_000 \
+                 (required {min}x)"
+            );
+            std::process::exit(1);
+        }
+        println!("OK: alias sampler {speedup:.1}x over linear scan at n=10_000 (>= {min}x)");
+    }
+}

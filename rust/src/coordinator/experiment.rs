@@ -228,30 +228,17 @@ impl Experiment {
 
     /// Service rates: fast first, then slow (rate 1).
     pub fn rates(&self) -> Vec<f64> {
-        let n_slow = (self.n_clients as f64 * self.slow_fraction).round() as usize;
-        let n_fast = self.n_clients - n_slow;
-        (0..self.n_clients)
-            .map(|i| if i < n_fast { self.mu_fast } else { 1.0 })
-            .collect()
+        two_cluster_rates(self.n_clients, self.slow_fraction, self.mu_fast)
     }
 
     pub fn n_fast(&self) -> usize {
-        self.n_clients - (self.n_clients as f64 * self.slow_fraction).round() as usize
+        two_cluster_n_fast(self.n_clients, self.slow_fraction)
     }
 
     /// Base sampling probabilities (p_fast for fast nodes, complement for
     /// slow) — the static policy's distribution.
     pub fn p_vec(&self) -> Vec<f64> {
-        match self.p_fast {
-            None => vec![1.0 / self.n_clients as f64; self.n_clients],
-            Some(pf) => {
-                let nf = self.n_fast();
-                let q = (1.0 - nf as f64 * pf) / (self.n_clients - nf) as f64;
-                (0..self.n_clients)
-                    .map(|i| if i < nf { pf } else { q })
-                    .collect()
-            }
-        }
+        two_cluster_p(self.n_clients, self.slow_fraction, self.p_fast)
     }
 
     pub fn synth_spec(&self) -> SynthSpec {
@@ -349,7 +336,7 @@ impl Experiment {
     pub fn run(&self) -> Result<TrainResult, String> {
         let policy = self.build_policy()?;
         let strategy = StrategyRegistry::builtin()
-            .build(&self.algo, &self.strategy_params(policy.probs()))?;
+            .build(&self.algo, &self.strategy_params(&policy.probs()))?;
         self.run_with(strategy, policy)
     }
 
@@ -392,7 +379,7 @@ impl Experiment {
             seed: self.seed ^ 0x51AA,
             init: InitPlacement::Routed,
             ..SimConfig::new(
-                policy.probs().to_vec(),
+                policy.probs(),
                 ServiceDist::from_rates(&self.rates(), ServiceFamily::Exponential),
                 self.concurrency,
                 self.steps,
@@ -542,6 +529,39 @@ impl ExperimentBuilder {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Two-cluster shape helpers — the single source of the fast/slow split,
+// shared by the experiment runner and the sweep grid (fast nodes come
+// first; the slow service rate is 1).
+// ---------------------------------------------------------------------------
+
+pub fn two_cluster_n_fast(clients: usize, slow_fraction: f64) -> usize {
+    clients - (clients as f64 * slow_fraction).round() as usize
+}
+
+pub fn two_cluster_rates(clients: usize, slow_fraction: f64, mu_fast: f64) -> Vec<f64> {
+    let nf = two_cluster_n_fast(clients, slow_fraction);
+    (0..clients)
+        .map(|i| if i < nf { mu_fast } else { 1.0 })
+        .collect()
+}
+
+/// Routing distribution: uniform, or the `p_fast` tilt with the leftover
+/// mass spread evenly over the slow cluster.  Callers validate the shape
+/// (two clusters, positive leftover mass) before relying on the result.
+pub fn two_cluster_p(clients: usize, slow_fraction: f64, p_fast: Option<f64>) -> Vec<f64> {
+    match p_fast {
+        None => vec![1.0 / clients as f64; clients],
+        Some(pf) => {
+            let nf = two_cluster_n_fast(clients, slow_fraction);
+            let q = (1.0 - nf as f64 * pf) / (clients - nf) as f64;
+            (0..clients)
+                .map(|i| if i < nf { pf } else { q })
+                .collect()
+        }
+    }
+}
+
 /// Run one experiment end to end.  Returns the training result.
 pub fn run_experiment(cfg: &Experiment) -> Result<TrainResult, String> {
     cfg.run()
@@ -574,7 +594,7 @@ pub fn seed_sweep(base: &Experiment, seeds: &[u64]) -> Result<SeedSweep, String>
 /// base distribution).
 pub fn theory_summary(cfg: &Experiment) -> Result<(Vec<f64>, f64), String> {
     let policy = cfg.build_policy()?;
-    theory_summary_with(cfg, policy.probs())
+    theory_summary_with(cfg, &policy.probs())
 }
 
 /// Same summary for an already-resolved distribution — lets callers that

@@ -1,11 +1,13 @@
 //! L3 coordinator — the paper's system contribution: the asynchronous
 //! central server (`driver`), the open sampling-policy surface (`policy`),
-//! synchronous round engines (`sync`), and the builder/scenario-based
-//! experiment runner (`experiment`).
+//! synchronous round engines (`sync`), the builder/scenario-based
+//! experiment runner (`experiment`), and the parallel multi-seed sweep
+//! engine (`sweep`).
 
 pub mod driver;
 pub mod experiment;
 pub mod policy;
+pub mod sweep;
 pub mod sync;
 
 pub use driver::{build_loaders, CurvePoint, Driver, DriverConfig, TrainResult};
@@ -13,7 +15,8 @@ pub use experiment::{
     run_experiment, seed_sweep, table2_seeds, Experiment, ExperimentBuilder, SeedSweep,
 };
 pub use policy::{
-    optimal_two_cluster, AdaptiveQueuePolicy, PolicyCtx, PolicyRegistry, SamplingPolicy,
-    StaticPolicy,
+    optimal_two_cluster, AdaptiveQueuePolicy, FenwickAdaptivePolicy, PolicyCtx, PolicyRegistry,
+    SamplingPolicy, StaticPolicy,
 };
+pub use sweep::{run_sweep, SweepMode, SweepReport, SweepSpec};
 pub use sync::{run_favano, run_fedavg, DataOracle, SyncResult};

@@ -2,42 +2,81 @@
 //! the paper's central design variable.
 //!
 //! A [`SamplingPolicy`] is consulted by the closed-network simulator at
-//! *every* routing step: `observe` sees the current queue lengths, `route`
-//! draws the next node K_{k+1}, and `probs` exposes the distribution in
-//! force so the dispatcher can record the selection probability on the
-//! task.  Generalized AsyncSGD reads that dispatch-time probability back
-//! for its unbiased `η/(n p_i)` scaling, which keeps the aggregate update
-//! direction unbiased even under time-varying p (see
+//! *every* routing step, so its per-step surface is deliberately cheap:
+//! `observe_node` ingests one queue-length change (only two queues change
+//! per CS step), `route` draws the next node K_{k+1}, and `prob_of`
+//! exposes the selection probability in force so the dispatcher can record
+//! it on the task.  Generalized AsyncSGD reads that dispatch-time
+//! probability back for its unbiased `η/(n p_i)` scaling, which keeps the
+//! aggregate update direction unbiased even under time-varying p (see
 //! `fl::strategy::GenAsync`).
 //!
-//! Built-ins, all reachable from `fedqueue train --policy <name>` through
-//! the [`PolicyRegistry`]:
+//! Sampler complexity per dispatch:
+//!
+//! * static policies — Walker alias table: O(1) draw
+//! * `adaptive` — Fenwick-tree sampler: O(log n) observe + O(log n) draw
+//! * `adaptive-exact` — O(n) renormalize + CDF scan; the exact reference
+//!   the fast samplers are validated against (`tests/statistical_samplers`)
+//!
+//! Built-ins, all reachable from `fedqueue train --policy <name>` and the
+//! sweep grids through the [`PolicyRegistry`]:
 //!
 //! * `static`  — the experiment's fixed p (two-cluster tilt or explicit
 //!   vector); exactly the pre-refactor behavior.
 //! * `uniform` — p_i = 1/n regardless of the configured tilt.
 //! * `optimal` — the Theorem-1 bound-optimal two-cluster p, wired to
 //!   [`crate::bound::optimizer`] (the old `--optimal-p` path).
-//! * `adaptive` — queue-length-aware: p_i ∝ base_i · exp(−γ·X_i),
-//!   renormalized before each dispatch.  Nodes with long queues are
-//!   sampled less, which caps staleness without starving anyone (γ = 0
-//!   degenerates to `static`); motivated by the delay-aware policies of
-//!   arXiv:2502.08206 / arXiv:2402.11198.
+//! * `adaptive` — queue-length-aware: p_i ∝ base_i · exp(−γ·X_i), kept in
+//!   a Fenwick tree so each routing step costs O(log n) instead of O(n).
+//!   Nodes with long queues are sampled less, which caps staleness without
+//!   starving anyone (γ = 0 degenerates to `static`); motivated by the
+//!   delay-aware policies of arXiv:2502.08206 / arXiv:2402.11198.
+//! * `adaptive-exact` — same distribution via full renormalization, O(n)
+//!   per step; the oracle for tests and small-n debugging.
 
 use crate::bound::{BoundParams, MiSource, TwoClusterStudy};
 use crate::util::rng::{AliasTable, Rng};
+use crate::util::sampler::{linear_route, FenwickSampler};
 
 /// The routing-distribution interface consulted by the simulator.
+///
+/// Implementors keep `prob_of`/`observe_node`/`route` sublinear in n —
+/// they sit on the per-dispatch hot path.  `probs` materializes the full
+/// distribution and is for setup and diagnostics only.
 pub trait SamplingPolicy {
     /// Display name (curve labels, diagnostics).
     fn name(&self) -> String;
 
-    /// The distribution currently in force over the n nodes.
-    fn probs(&self) -> &[f64];
+    /// Number of nodes the distribution covers.
+    fn n(&self) -> usize;
 
-    /// Observe the queue lengths right before a routing decision.
-    /// Static policies ignore this; adaptive ones recompute `probs`.
+    /// Normalized selection probability of node i under the distribution
+    /// currently in force.  Hot path: O(1) or O(log n).
+    fn prob_of(&self, i: usize) -> f64;
+
+    /// Materialize the full distribution in force — O(n), setup and
+    /// diagnostics only, never called per dispatch.
+    fn probs(&self) -> Vec<f64> {
+        (0..self.n()).map(|i| self.prob_of(i)).collect()
+    }
+
+    /// Observe all queue lengths right before a routing decision (bulk
+    /// path).  Static policies ignore this; adaptive ones recompute their
+    /// weights.
     fn observe(&mut self, _queue_lens: &[u32]) {}
+
+    /// Observe that node i's queue length changed to `len` (incremental
+    /// path).  Policies that return `true` from [`Self::incremental`]
+    /// receive only these point updates — exactly the two queues that
+    /// change per CS step — instead of the O(n) bulk `observe`.
+    fn observe_node(&mut self, _node: usize, _len: u32) {}
+
+    /// Whether `observe_node` fully covers `observe` for this policy.
+    /// When true the simulator skips building the O(n) queue-length
+    /// vector on every dispatch.
+    fn incremental(&self) -> bool {
+        false
+    }
 
     /// Sample the next node K_{k+1} from the distribution in force.
     fn route(&mut self, rng: &mut Rng) -> usize;
@@ -76,8 +115,21 @@ impl SamplingPolicy for StaticPolicy {
         self.label.clone()
     }
 
-    fn probs(&self) -> &[f64] {
-        &self.p
+    fn n(&self) -> usize {
+        self.p.len()
+    }
+
+    fn prob_of(&self, i: usize) -> f64 {
+        self.p[i]
+    }
+
+    fn probs(&self) -> Vec<f64> {
+        self.p.clone()
+    }
+
+    fn incremental(&self) -> bool {
+        // queue lengths never move a static distribution
+        true
     }
 
     fn route(&mut self, rng: &mut Rng) -> usize {
@@ -86,9 +138,113 @@ impl SamplingPolicy for StaticPolicy {
 }
 
 // ---------------------------------------------------------------------------
-// Adaptive queue-length-aware policy
+// Adaptive queue-length-aware policies: Fenwick-backed (hot path) and the
+// exact renormalizing reference
 // ---------------------------------------------------------------------------
 
+fn validate_adaptive(base: &[f64], gamma: f64) -> Result<(), String> {
+    if base.is_empty() {
+        return Err("adaptive policy needs a non-empty base distribution".into());
+    }
+    if !(gamma >= 0.0) || !gamma.is_finite() {
+        return Err(format!("adaptive policy: gamma {gamma} must be finite and >= 0"));
+    }
+    let sum: f64 = base.iter().sum();
+    if (sum - 1.0).abs() > 1e-6 || base.iter().any(|&b| b < 0.0 || !b.is_finite()) {
+        return Err(format!("adaptive policy: base p must be a distribution (sum {sum})"));
+    }
+    Ok(())
+}
+
+/// Queue-length-aware sampling with O(log n) per-dispatch cost: the raw
+/// weights w_i = base_i · exp(−γ·X_i) live in a [`FenwickSampler`], so a
+/// single queue change updates one leaf and a draw is one tree descent —
+/// no renormalization ever happens (probabilities are w_i / Σw on read).
+///
+/// Underflow semantics mirror [`AdaptiveQueuePolicy`] exactly: while
+/// *every* tilted weight has underflowed to zero (enormous γ·X on every
+/// node), the distribution in force is the base distribution; the moment
+/// any node's weight turns positive again the tilted law resumes.  A
+/// `positive`-leaf counter makes the check O(1) without mutating the tree.
+pub struct FenwickAdaptivePolicy {
+    base: Vec<f64>,
+    gamma: f64,
+    sampler: FenwickSampler,
+    /// alias table over the base distribution — the all-underflowed
+    /// escape hatch, sampled without touching the tilted weights
+    base_alias: AliasTable,
+    /// number of leaves with a strictly positive tilted weight
+    positive: usize,
+}
+
+impl FenwickAdaptivePolicy {
+    pub fn new(base: Vec<f64>, gamma: f64) -> Result<FenwickAdaptivePolicy, String> {
+        validate_adaptive(&base, gamma)?;
+        let sampler = FenwickSampler::new(&base)?;
+        let base_alias = AliasTable::new(&base)?;
+        let positive = base.iter().filter(|&&b| b > 0.0).count();
+        Ok(FenwickAdaptivePolicy { base, gamma, sampler, base_alias, positive })
+    }
+
+    fn tilt(&self, node: usize, len: u32) -> f64 {
+        let w = self.base[node] * (-self.gamma * len as f64).exp();
+        if w.is_finite() {
+            w
+        } else {
+            0.0
+        }
+    }
+}
+
+impl SamplingPolicy for FenwickAdaptivePolicy {
+    fn name(&self) -> String {
+        format!("adaptive(gamma={})", self.gamma)
+    }
+
+    fn n(&self) -> usize {
+        self.base.len()
+    }
+
+    fn prob_of(&self, i: usize) -> f64 {
+        if self.positive == 0 {
+            return self.base[i];
+        }
+        self.sampler.weight(i) / self.sampler.total()
+    }
+
+    fn observe(&mut self, queue_lens: &[u32]) {
+        for (i, &q) in queue_lens.iter().enumerate() {
+            self.observe_node(i, q);
+        }
+    }
+
+    fn observe_node(&mut self, node: usize, len: u32) {
+        let w = self.tilt(node, len);
+        let was = self.sampler.weight(node) > 0.0;
+        self.sampler.set(node, w);
+        match (was, w > 0.0) {
+            (true, false) => self.positive -= 1,
+            (false, true) => self.positive += 1,
+            _ => {}
+        }
+    }
+
+    fn incremental(&self) -> bool {
+        true
+    }
+
+    fn route(&mut self, rng: &mut Rng) -> usize {
+        if self.positive == 0 {
+            return self.base_alias.sample(rng);
+        }
+        self.sampler.sample(rng)
+    }
+}
+
+/// The exact adaptive policy: recomputes and renormalizes all n
+/// probabilities on every observation and routes by CDF scan — O(n) per
+/// dispatch.  Kept as the oracle `adaptive` is validated against and for
+/// debugging at small n; registered as `adaptive-exact`.
 pub struct AdaptiveQueuePolicy {
     base: Vec<f64>,
     gamma: f64,
@@ -97,27 +253,26 @@ pub struct AdaptiveQueuePolicy {
 
 impl AdaptiveQueuePolicy {
     pub fn new(base: Vec<f64>, gamma: f64) -> Result<AdaptiveQueuePolicy, String> {
-        if base.is_empty() {
-            return Err("adaptive policy needs a non-empty base distribution".into());
-        }
-        if !(gamma >= 0.0) || !gamma.is_finite() {
-            return Err(format!("adaptive policy: gamma {gamma} must be finite and >= 0"));
-        }
-        let sum: f64 = base.iter().sum();
-        if (sum - 1.0).abs() > 1e-6 || base.iter().any(|&b| b < 0.0 || !b.is_finite()) {
-            return Err(format!("adaptive policy: base p must be a distribution (sum {sum})"));
-        }
+        validate_adaptive(&base, gamma)?;
         Ok(AdaptiveQueuePolicy { probs: base.clone(), base, gamma })
     }
 }
 
 impl SamplingPolicy for AdaptiveQueuePolicy {
     fn name(&self) -> String {
-        format!("adaptive(gamma={})", self.gamma)
+        format!("adaptive-exact(gamma={})", self.gamma)
     }
 
-    fn probs(&self) -> &[f64] {
-        &self.probs
+    fn n(&self) -> usize {
+        self.probs.len()
+    }
+
+    fn prob_of(&self, i: usize) -> f64 {
+        self.probs[i]
+    }
+
+    fn probs(&self) -> Vec<f64> {
+        self.probs.clone()
     }
 
     fn observe(&mut self, queue_lens: &[u32]) {
@@ -141,15 +296,9 @@ impl SamplingPolicy for AdaptiveQueuePolicy {
     }
 
     fn route(&mut self, rng: &mut Rng) -> usize {
-        let u = rng.uniform();
-        let mut acc = 0.0f64;
-        for (i, &pi) in self.probs.iter().enumerate() {
-            acc += pi;
-            if u < acc {
-                return i;
-            }
-        }
-        self.probs.len() - 1
+        // reference CDF scan (fixed fall-through: never lands on a
+        // trailing zero-mass node, see util::sampler::linear_route)
+        linear_route(&self.probs, rng.uniform())
     }
 }
 
@@ -222,8 +371,8 @@ pub struct PolicyEntry {
 }
 
 /// String → constructor mapping for sampling policies.  `builtin()`
-/// carries the four paper-relevant policies; downstream code may
-/// `register` more without touching the simulator or the CLI.
+/// carries the paper-relevant policies; downstream code may `register`
+/// more without touching the simulator or the CLI.
 pub struct PolicyRegistry {
     entries: Vec<PolicyEntry>,
 }
@@ -250,7 +399,15 @@ impl PolicyRegistry {
         );
         r.register(
             "adaptive",
-            "queue-length-aware: p_i proportional to base_i*exp(-gamma*X_i)",
+            "queue-length-aware p_i ~ base_i*exp(-gamma*X_i), Fenwick-backed O(log n)",
+            |ctx| {
+                Ok(Box::new(FenwickAdaptivePolicy::new(ctx.base_p.clone(), ctx.gamma)?)
+                    as Box<dyn SamplingPolicy>)
+            },
+        );
+        r.register(
+            "adaptive-exact",
+            "same distribution as adaptive via O(n) renormalization (test oracle)",
             |ctx| {
                 Ok(Box::new(AdaptiveQueuePolicy::new(ctx.base_p.clone(), ctx.gamma)?)
                     as Box<dyn SamplingPolicy>)
@@ -321,7 +478,10 @@ mod tests {
     fn static_policy_samples_p() {
         let p = vec![0.1, 0.2, 0.3, 0.4];
         let mut pol = StaticPolicy::new(p.clone()).unwrap();
-        assert_eq!(pol.probs(), &p[..]);
+        assert_eq!(pol.probs(), p);
+        assert_eq!(pol.n(), 4);
+        assert_eq!(pol.prob_of(2), 0.3);
+        assert!(pol.incremental());
         let mut rng = Rng::new(1);
         let mut counts = vec![0u64; 4];
         let trials = 100_000;
@@ -345,8 +505,50 @@ mod tests {
         // γ=0 degenerates to the base
         let mut flat = AdaptiveQueuePolicy::new(vec![0.25; 4], 0.0).unwrap();
         flat.observe(&[9, 0, 3, 1]);
-        for &pi in flat.probs() {
+        for pi in flat.probs() {
             assert!((pi - 0.25).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fenwick_adaptive_matches_exact_distribution() {
+        // both implementations realize p_i ∝ base_i·exp(−γX_i); their
+        // normalized probabilities must agree to fp precision
+        let base = vec![0.1, 0.4, 0.2, 0.3];
+        let lens = [3u32, 0, 7, 2];
+        let mut exact = AdaptiveQueuePolicy::new(base.clone(), 0.9).unwrap();
+        let mut fast = FenwickAdaptivePolicy::new(base, 0.9).unwrap();
+        exact.observe(&lens);
+        for (i, &l) in lens.iter().enumerate() {
+            fast.observe_node(i, l);
+        }
+        assert!(fast.incremental());
+        for i in 0..4 {
+            assert!(
+                (fast.prob_of(i) - exact.prob_of(i)).abs() < 1e-12,
+                "node {i}: {} vs {}",
+                fast.prob_of(i),
+                exact.prob_of(i)
+            );
+        }
+        let sum: f64 = fast.probs().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fenwick_adaptive_route_matches_probs() {
+        let mut pol = FenwickAdaptivePolicy::new(vec![0.25; 4], 1.0).unwrap();
+        pol.observe(&[3, 0, 0, 3]);
+        let want = pol.probs();
+        let mut rng = Rng::new(7);
+        let mut counts = vec![0u64; 4];
+        let trials = 100_000;
+        for _ in 0..trials {
+            counts[pol.route(&mut rng)] += 1;
+        }
+        for i in 0..4 {
+            let f = counts[i] as f64 / trials as f64;
+            assert!((f - want[i]).abs() < 0.01, "node {i}: {f} vs {}", want[i]);
         }
     }
 
@@ -354,7 +556,7 @@ mod tests {
     fn adaptive_route_matches_probs() {
         let mut pol = AdaptiveQueuePolicy::new(vec![0.25; 4], 1.0).unwrap();
         pol.observe(&[3, 0, 0, 3]);
-        let want = pol.probs().to_vec();
+        let want = pol.probs();
         let mut rng = Rng::new(7);
         let mut counts = vec![0u64; 4];
         let trials = 100_000;
@@ -373,6 +575,23 @@ mod tests {
         pol.observe(&[1000, 1000]);
         let sum: f64 = pol.probs().iter().sum();
         assert!((sum - 1.0).abs() < 1e-9, "fallback must renormalize: {sum}");
+        // Fenwick variant mirrors the exact fallback: while EVERY tilted
+        // weight is underflowed the base distribution is in force...
+        let mut fast = FenwickAdaptivePolicy::new(vec![0.5, 0.5], 1e6).unwrap();
+        fast.observe(&[1000, 1000]);
+        let mut rng = Rng::new(3);
+        let i = fast.route(&mut rng);
+        assert!(i < 2);
+        assert!((fast.prob_of(0) - 0.5).abs() < 1e-12, "base in force");
+        let sum: f64 = fast.probs().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "fallback must renormalize: {sum}");
+        // ...and the tilted law resumes the moment any weight recovers
+        fast.observe_node(1, 0);
+        assert!((fast.prob_of(1) - 1.0).abs() < 1e-12, "node 1 holds all mass");
+        assert_eq!(fast.route(&mut rng), 1);
+        // the exact oracle agrees on the recovered state
+        pol.observe(&[1000, 0]);
+        assert!((pol.prob_of(1) - 1.0).abs() < 1e-12);
     }
 
     #[test]
@@ -395,12 +614,16 @@ mod tests {
     #[test]
     fn registry_builds_every_builtin() {
         let reg = PolicyRegistry::builtin();
-        assert_eq!(reg.names(), vec!["static", "uniform", "optimal", "adaptive"]);
+        assert_eq!(
+            reg.names(),
+            vec!["static", "uniform", "optimal", "adaptive", "adaptive-exact"]
+        );
         let c = ctx(10);
         for name in reg.names() {
             let pol = reg.build(&name, &c).unwrap();
             let sum: f64 = pol.probs().iter().sum();
             assert!((sum - 1.0).abs() < 1e-9, "{name}: probs sum {sum}");
+            assert_eq!(pol.n(), 10, "{name}");
         }
         let err = reg.build("zipf", &c).unwrap_err();
         assert!(err.contains("unknown sampling policy"), "{err}");
@@ -418,8 +641,11 @@ mod tests {
                 fn name(&self) -> String {
                     "slowest-first".into()
                 }
-                fn probs(&self) -> &[f64] {
-                    &self.p
+                fn n(&self) -> usize {
+                    self.p.len()
+                }
+                fn prob_of(&self, i: usize) -> f64 {
+                    self.p[i]
                 }
                 fn route(&mut self, _rng: &mut Rng) -> usize {
                     self.p.len() - 1

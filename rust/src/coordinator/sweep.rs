@@ -1,0 +1,988 @@
+//! Parallel multi-seed sweep engine — the ensemble layer over the
+//! simulator and the experiment runner.
+//!
+//! The paper's claims are distributional: the closed Jackson network's
+//! stationary queue lengths and the delay/complexity trade-off of
+//! Theorem 1's non-uniform sampling only show up across many
+//! replications.  A [`SweepSpec`] declares a grid of scenarios × policies
+//! (× algorithms in train mode) × seeds in TOML
+//! (`scenarios/sweep_fig6.toml` is the worked example); [`run_sweep`]
+//! executes every replication across OS worker threads and reduces them
+//! into per-cell Welford aggregates with 95% confidence intervals,
+//! rendered as JSON for the figures layer
+//! ([`crate::figures::sweep_figs`]).
+//!
+//! Determinism contract (tested in `tests/sweep_determinism.rs`): every
+//! replication runs on its own RNG stream derived from
+//! `stream_seed(base_seed, [cell_id, seed_index])`, workers write results
+//! into a slot indexed by replication id, and the reduction walks slots
+//! in (cell, seed) order — so the aggregated JSON is bit-identical
+//! regardless of thread count or scheduling order.
+//!
+//! Grid TOML schema:
+//!
+//! ```toml
+//! [sweep]
+//! name = "fig6_sweep"        # report id
+//! mode = "simulate"          # simulate | train
+//! seeds = 8                  # replications per cell
+//! base_seed = 42             # root of every replication stream
+//! threads = 4                # worker threads (0 = one per core)
+//! out = "results/sweep.json" # default output (CLI --out overrides)
+//!
+//! [grid]                     # every axis is a list; cells = cartesian
+//! clients = [100, 1000]      # product x policies (x algos in train mode)
+//! concurrency = [10]
+//! steps = [20000]
+//! mu_fast = [4.0]
+//! slow_fraction = [0.5]
+//! gamma = [0.5]              # adaptive-policy pressure
+//! service = ["exp"]          # exp | det | lognormal
+//! policies = ["uniform", "optimal", "adaptive"]
+//! # p_fast = [0.004]         # optional static-tilt axis
+//! # algos = ["gasync"]       # train mode only
+//!
+//! [train]                    # train-mode knobs (ignored in simulate)
+//! variant = "tiny"
+//! eta = 0.05
+//! n_train = 2000
+//! n_val = 400
+//! classes_per_client = 7
+//! eval_every = 20
+//! ```
+
+use super::experiment::{two_cluster_n_fast, two_cluster_p, two_cluster_rates};
+use super::policy::{optimal_two_cluster, PolicyCtx, PolicyRegistry, SamplingPolicy, StaticPolicy};
+use crate::coordinator::Experiment;
+use crate::runtime::BackendKind;
+use crate::simulator::{run_with_policy, ServiceDist, ServiceFamily, SimConfig};
+use crate::util::json::Json;
+use crate::util::rng::stream_seed;
+use crate::util::stats::Welford;
+use crate::util::toml::Doc;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SweepMode {
+    /// Pure queueing replications (`simulator::run_with_policy`) — scales
+    /// to 10^5–10^6 nodes per replication.
+    Simulate,
+    /// Full DL experiments through [`Experiment::run`] on the native
+    /// backend — scales in seeds, not nodes.
+    Train,
+}
+
+impl std::str::FromStr for SweepMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<SweepMode, String> {
+        match s {
+            "simulate" => Ok(SweepMode::Simulate),
+            "train" => Ok(SweepMode::Train),
+            other => Err(format!("unknown sweep mode '{other}' (simulate|train)")),
+        }
+    }
+}
+
+/// One point of the structural grid (everything except policy/algo/seed).
+#[derive(Clone, Debug)]
+pub struct ScenarioPoint {
+    pub clients: usize,
+    pub concurrency: usize,
+    pub steps: u64,
+    pub mu_fast: f64,
+    pub slow_fraction: f64,
+    pub gamma: f64,
+    pub p_fast: Option<f64>,
+    pub service: ServiceFamily,
+}
+
+impl ScenarioPoint {
+    pub fn n_fast(&self) -> usize {
+        two_cluster_n_fast(self.clients, self.slow_fraction)
+    }
+
+    /// Base/static routing distribution (uniform unless p_fast tilts it).
+    pub fn base_p(&self) -> Result<Vec<f64>, String> {
+        if let Some(pf) = self.p_fast {
+            let nf = self.n_fast();
+            if nf == 0 || nf >= self.clients {
+                return Err("p_fast needs a two-cluster population".into());
+            }
+            let q = (1.0 - nf as f64 * pf) / (self.clients - nf) as f64;
+            if !(pf > 0.0) || q <= 0.0 {
+                return Err(format!(
+                    "p_fast {pf} leaves no probability mass for slow nodes (q = {q})"
+                ));
+            }
+        }
+        Ok(two_cluster_p(self.clients, self.slow_fraction, self.p_fast))
+    }
+
+    pub fn rates(&self) -> Vec<f64> {
+        two_cluster_rates(self.clients, self.slow_fraction, self.mu_fast)
+    }
+
+    pub fn policy_ctx(&self) -> Result<PolicyCtx, String> {
+        Ok(PolicyCtx {
+            n: self.clients,
+            base_p: self.base_p()?,
+            gamma: self.gamma,
+            n_fast: self.n_fast(),
+            mu_fast: self.mu_fast,
+            mu_slow: 1.0,
+            concurrency: self.concurrency,
+            steps: self.steps,
+        })
+    }
+
+    fn service_name(&self) -> &'static str {
+        match self.service {
+            ServiceFamily::Exponential => "exp",
+            ServiceFamily::Deterministic => "det",
+            ServiceFamily::LogNormal(_) => "lognormal",
+        }
+    }
+
+    pub fn label(&self) -> String {
+        let mut s = format!(
+            "n{}_C{}_T{}_mu{}_sf{}_g{}_{}",
+            self.clients,
+            self.concurrency,
+            self.steps,
+            self.mu_fast,
+            self.slow_fraction,
+            self.gamma,
+            self.service_name()
+        );
+        if let Some(pf) = self.p_fast {
+            s.push_str(&format!("_pf{pf}"));
+        }
+        s
+    }
+}
+
+/// Train-mode knobs shared by every cell.
+#[derive(Clone, Debug)]
+pub struct TrainKnobs {
+    pub variant: String,
+    pub eta: f64,
+    pub n_train: usize,
+    pub n_val: usize,
+    pub classes_per_client: usize,
+    pub eval_every: u64,
+}
+
+impl Default for TrainKnobs {
+    fn default() -> TrainKnobs {
+        TrainKnobs {
+            variant: "tiny".into(),
+            eta: 0.05,
+            n_train: 2_000,
+            n_val: 400,
+            classes_per_client: 7,
+            eval_every: 20,
+        }
+    }
+}
+
+/// One aggregation cell: a scenario × policy (× algo) combination whose
+/// seeds are reduced together.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    pub id: usize,
+    pub scenario: ScenarioPoint,
+    pub policy: String,
+    /// registry algorithm name in train mode, "-" in simulate mode
+    pub algo: String,
+}
+
+impl SweepCell {
+    pub fn label(&self) -> String {
+        if self.algo == "-" {
+            format!("{}/{}", self.scenario.label(), self.policy)
+        } else {
+            format!("{}/{}/{}", self.scenario.label(), self.policy, self.algo)
+        }
+    }
+}
+
+/// The parsed, validated sweep declaration.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub name: String,
+    pub mode: SweepMode,
+    pub seeds: u64,
+    pub base_seed: u64,
+    pub threads: usize,
+    pub out: String,
+    pub cells: Vec<SweepCell>,
+    pub train: TrainKnobs,
+}
+
+impl SweepSpec {
+    pub fn from_path(path: &Path) -> Result<SweepSpec, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("sweep grid {}: {e}", path.display()))?;
+        SweepSpec::from_toml(&text).map_err(|e| format!("sweep grid {}: {e}", path.display()))
+    }
+
+    pub fn from_toml(text: &str) -> Result<SweepSpec, String> {
+        let doc = Doc::parse(text)?;
+        for (table, keys) in &doc.tables {
+            let known: &[&str] = match table.as_str() {
+                "" => &[],
+                "sweep" => &["name", "mode", "seeds", "base_seed", "threads", "out"],
+                "grid" => &[
+                    "clients",
+                    "concurrency",
+                    "steps",
+                    "mu_fast",
+                    "slow_fraction",
+                    "gamma",
+                    "p_fast",
+                    "service",
+                    "policies",
+                    "algos",
+                ],
+                "train" => &[
+                    "variant",
+                    "eta",
+                    "n_train",
+                    "n_val",
+                    "classes_per_client",
+                    "eval_every",
+                ],
+                other => return Err(format!("unknown table [{other}] (sweep|grid|train)")),
+            };
+            for k in keys.keys() {
+                if !known.contains(&k.as_str()) {
+                    return Err(format!(
+                        "unknown key '{k}' in [{table}] (known: {})",
+                        known.join(", ")
+                    ));
+                }
+            }
+        }
+        let mode: SweepMode = doc.str_or("sweep", "mode", "simulate").parse()?;
+        let seeds = doc.i64_or("sweep", "seeds", 8);
+        if seeds < 1 {
+            return Err(format!("[sweep] seeds = {seeds} must be >= 1"));
+        }
+        let threads = doc.i64_or("sweep", "threads", 0);
+        if threads < 0 {
+            return Err(format!("[sweep] threads = {threads} must be >= 0"));
+        }
+
+        // grid axes: every key is a homogeneous list; absent = one default
+        let ints = |key: &str, default: i64| -> Result<Vec<i64>, String> {
+            match doc.get("grid", key) {
+                None => Ok(vec![default]),
+                Some(v) => {
+                    let arr = v
+                        .as_arr()
+                        .ok_or_else(|| format!("[grid] {key} must be an array"))?;
+                    if arr.is_empty() {
+                        return Err(format!("[grid] {key} must not be empty"));
+                    }
+                    arr.iter()
+                        .map(|x| {
+                            x.as_i64().filter(|i| *i >= 0).ok_or_else(|| {
+                                format!("[grid] {key} must hold non-negative integers")
+                            })
+                        })
+                        .collect()
+                }
+            }
+        };
+        let floats = |key: &str, default: f64| -> Result<Vec<f64>, String> {
+            match doc.get("grid", key) {
+                None => Ok(vec![default]),
+                Some(v) => {
+                    let arr = v
+                        .as_arr()
+                        .ok_or_else(|| format!("[grid] {key} must be an array"))?;
+                    if arr.is_empty() {
+                        return Err(format!("[grid] {key} must not be empty"));
+                    }
+                    arr.iter()
+                        .map(|x| {
+                            x.as_f64()
+                                .ok_or_else(|| format!("[grid] {key} must hold numbers"))
+                        })
+                        .collect()
+                }
+            }
+        };
+        let strings = |key: &str, default: &str| -> Result<Vec<String>, String> {
+            match doc.get("grid", key) {
+                None => Ok(vec![default.to_string()]),
+                Some(v) => {
+                    let arr = v
+                        .as_arr()
+                        .ok_or_else(|| format!("[grid] {key} must be an array"))?;
+                    if arr.is_empty() {
+                        return Err(format!("[grid] {key} must not be empty"));
+                    }
+                    arr.iter()
+                        .map(|x| {
+                            x.as_str()
+                                .map(str::to_string)
+                                .ok_or_else(|| format!("[grid] {key} must hold strings"))
+                        })
+                        .collect()
+                }
+            }
+        };
+
+        let clients = ints("clients", 100)?;
+        let concurrency = ints("concurrency", 10)?;
+        let steps = ints("steps", 20_000)?;
+        let mu_fast = floats("mu_fast", 4.0)?;
+        let slow_fraction = floats("slow_fraction", 0.5)?;
+        let gamma = floats("gamma", 0.5)?;
+        let p_fast: Vec<Option<f64>> = match doc.get("grid", "p_fast") {
+            None => vec![None],
+            Some(_) => floats("p_fast", 0.0)?.into_iter().map(Some).collect(),
+        };
+        let services: Vec<ServiceFamily> = strings("service", "exp")?
+            .iter()
+            .map(|s| s.parse())
+            .collect::<Result<_, _>>()?;
+        let policies = strings("policies", "uniform")?;
+        let algos = match mode {
+            SweepMode::Simulate => vec!["-".to_string()],
+            SweepMode::Train => strings("algos", "gasync")?,
+        };
+        let registry = PolicyRegistry::builtin();
+        for p in &policies {
+            if !registry.contains(p) {
+                return Err(format!(
+                    "[grid] unknown policy '{p}' (available: {})",
+                    registry.names().join("|")
+                ));
+            }
+        }
+        if mode == SweepMode::Train {
+            let strategies = crate::fl::StrategyRegistry::builtin();
+            for a in &algos {
+                if !strategies.contains(a) {
+                    return Err(format!(
+                        "[grid] unknown algorithm '{a}' (available: {})",
+                        strategies.names().join("|")
+                    ));
+                }
+            }
+        }
+
+        // cells: scenario-major cartesian product, fixed axis order, so
+        // cell ids (and thus RNG streams) depend only on the grid itself
+        let mut cells = Vec::new();
+        for &n in &clients {
+            for &c in &concurrency {
+                for &t in &steps {
+                    for &mu in &mu_fast {
+                        for &sf in &slow_fraction {
+                            for &g in &gamma {
+                                for &pf in &p_fast {
+                                    for &svc in &services {
+                                        for pol in &policies {
+                                            for algo in &algos {
+                                                let scenario = ScenarioPoint {
+                                                    clients: n as usize,
+                                                    concurrency: c as usize,
+                                                    steps: t as u64,
+                                                    mu_fast: mu,
+                                                    slow_fraction: sf,
+                                                    gamma: g,
+                                                    p_fast: pf,
+                                                    service: svc,
+                                                };
+                                                scenario.validate()?;
+                                                // fail at parse time, not
+                                                // after hours of other
+                                                // cells have already run
+                                                if pol == "optimal" {
+                                                    let nf = scenario.n_fast();
+                                                    if nf == 0 || nf >= scenario.clients {
+                                                        return Err(format!(
+                                                            "grid: policy 'optimal' needs a \
+                                                             two-cluster population \
+                                                             (n_fast {nf} of {})",
+                                                            scenario.clients
+                                                        ));
+                                                    }
+                                                }
+                                                cells.push(SweepCell {
+                                                    id: cells.len(),
+                                                    scenario,
+                                                    policy: pol.clone(),
+                                                    algo: algo.clone(),
+                                                });
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if cells.is_empty() {
+            return Err("sweep grid resolves to zero cells".into());
+        }
+
+        let train = TrainKnobs {
+            variant: doc.str_or("train", "variant", "tiny"),
+            eta: doc.f64_or("train", "eta", 0.05),
+            n_train: doc.i64_or("train", "n_train", 2_000).max(0) as usize,
+            n_val: doc.i64_or("train", "n_val", 400).max(0) as usize,
+            classes_per_client: doc.i64_or("train", "classes_per_client", 7).max(0) as usize,
+            eval_every: doc.i64_or("train", "eval_every", 20).max(0) as u64,
+        };
+
+        Ok(SweepSpec {
+            name: doc.str_or("sweep", "name", "sweep"),
+            mode,
+            seeds: seeds as u64,
+            base_seed: doc.i64_or("sweep", "base_seed", 0) as u64,
+            threads: threads as usize,
+            out: doc.str_or("sweep", "out", "results/sweep.json"),
+            cells,
+            train,
+        })
+    }
+}
+
+impl ScenarioPoint {
+    fn validate(&self) -> Result<(), String> {
+        if self.clients < 2 {
+            return Err(format!("grid: clients {} must be >= 2", self.clients));
+        }
+        if self.concurrency == 0 {
+            return Err("grid: concurrency must be >= 1".into());
+        }
+        if self.steps == 0 {
+            return Err("grid: steps must be >= 1".into());
+        }
+        if !(self.mu_fast > 0.0) {
+            return Err(format!("grid: mu_fast {} must be positive", self.mu_fast));
+        }
+        if !(0.0..=1.0).contains(&self.slow_fraction) {
+            return Err(format!(
+                "grid: slow_fraction {} must be in [0,1]",
+                self.slow_fraction
+            ));
+        }
+        if !(self.gamma >= 0.0) || !self.gamma.is_finite() {
+            return Err(format!("grid: gamma {} must be finite and >= 0", self.gamma));
+        }
+        self.base_p().map(|_| ())
+    }
+}
+
+/// One replication's scalar metrics (+ training curve in train mode).
+#[derive(Clone, Debug, Default)]
+pub struct RepResult {
+    pub metrics: BTreeMap<String, f64>,
+    /// (step, virtual_time, train_loss, val_loss, val_acc)
+    pub curve: Vec<(u64, f64, f64, f64, f64)>,
+}
+
+/// A cell's seeds reduced into Welford accumulators.
+#[derive(Clone, Debug)]
+pub struct CellReport {
+    pub cell: SweepCell,
+    pub metrics: BTreeMap<String, Welford>,
+    /// per eval point: (step, metric name -> accumulator)
+    pub curve: Vec<(u64, BTreeMap<String, Welford>)>,
+}
+
+/// The full aggregated sweep.
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    pub name: String,
+    pub mode: SweepMode,
+    pub seeds: u64,
+    pub base_seed: u64,
+    pub cells: Vec<CellReport>,
+}
+
+fn simulate_replication(
+    cell: &SweepCell,
+    cached_p: Option<&[f64]>,
+    seed: u64,
+) -> Result<RepResult, String> {
+    let s = &cell.scenario;
+    let policy: Box<dyn SamplingPolicy> = match cached_p {
+        // per-cell precomputed distribution (the Theorem-1 optimizer runs
+        // once per cell, not once per seed)
+        Some(p) => Box::new(StaticPolicy::labeled(&cell.policy, p.to_vec())?),
+        None => PolicyRegistry::builtin().build(&cell.policy, &s.policy_ctx()?)?,
+    };
+    let cfg = SimConfig {
+        seed,
+        ..SimConfig::new(
+            policy.probs(),
+            ServiceDist::from_rates(&s.rates(), s.service),
+            s.concurrency,
+            s.steps,
+        )
+    };
+    let res = run_with_policy(cfg, policy)?;
+    let nf = s.n_fast();
+    let n = s.clients;
+    let cluster_queue = |range: std::ops::Range<usize>| -> f64 {
+        if range.is_empty() {
+            f64::NAN
+        } else {
+            let len = range.len();
+            res.mean_queue[range].iter().sum::<f64>() / len as f64
+        }
+    };
+    let mut m = BTreeMap::new();
+    m.insert("delay_all".into(), res.cluster_delay(0..n));
+    m.insert("delay_fast".into(), res.cluster_delay(0..nf));
+    m.insert("delay_slow".into(), res.cluster_delay(nf..n));
+    m.insert("queue_fast".into(), cluster_queue(0..nf));
+    m.insert("queue_slow".into(), cluster_queue(nf..n));
+    m.insert("step_rate".into(), res.step_rate(s.steps));
+    m.insert("tau_c".into(), res.tau_c);
+    m.insert("tau_max".into(), res.tau_max as f64);
+    m.insert("total_time".into(), res.total_time);
+    Ok(RepResult { metrics: m, curve: Vec::new() })
+}
+
+fn train_replication(cell: &SweepCell, knobs: &TrainKnobs, seed: u64) -> Result<RepResult, String> {
+    let s = &cell.scenario;
+    let mut b = Experiment::builder()
+        .variant(&knobs.variant)
+        .backend(BackendKind::Native)
+        .algo(&cell.algo)
+        .policy(&cell.policy)
+        .clients(s.clients)
+        .concurrency(s.concurrency)
+        .steps(s.steps)
+        .eta(knobs.eta)
+        .slow_fraction(s.slow_fraction)
+        .mu_fast(s.mu_fast)
+        .adaptive_gamma(s.gamma)
+        .n_train(knobs.n_train)
+        .n_val(knobs.n_val)
+        .classes_per_client(knobs.classes_per_client)
+        .eval_every(knobs.eval_every)
+        .seed(seed);
+    if let Some(pf) = s.p_fast {
+        b = b.p_fast(pf);
+    }
+    let exp = b.build()?;
+    let res = exp.run()?;
+    let mut m = BTreeMap::new();
+    m.insert("final_accuracy".into(), res.final_accuracy);
+    m.insert("final_val_loss".into(), res.final_val_loss);
+    m.insert("tau_max".into(), res.tau_max as f64);
+    m.insert("virtual_time".into(), res.total_virtual_time);
+    let curve = res
+        .curve
+        .iter()
+        .map(|c| (c.step, c.virtual_time, c.train_loss, c.val_loss, c.val_accuracy))
+        .collect();
+    Ok(RepResult { metrics: m, curve })
+}
+
+fn run_replication(
+    spec: &SweepSpec,
+    cell: &SweepCell,
+    cached_p: Option<&[f64]>,
+    seed_idx: u64,
+) -> Result<RepResult, String> {
+    // one independent stream per (cell, seed index): deterministic and
+    // scheduling-free by construction
+    let seed = stream_seed(spec.base_seed, &[cell.id as u64, seed_idx]);
+    match spec.mode {
+        SweepMode::Simulate => simulate_replication(cell, cached_p, seed),
+        SweepMode::Train => train_replication(cell, &spec.train, seed),
+    }
+}
+
+/// Distributions that are expensive to construct but depend only on the
+/// cell, not the seed — today the Theorem-1 `optimal` sweep.  Computing
+/// them up front also fails fast, before any replication has run.
+fn precompute_cell_distributions(spec: &SweepSpec) -> Result<Vec<Option<Vec<f64>>>, String> {
+    let mut out = vec![None; spec.cells.len()];
+    if spec.mode == SweepMode::Simulate {
+        for cell in &spec.cells {
+            if cell.policy == "optimal" {
+                let pol = optimal_two_cluster(&cell.scenario.policy_ctx()?)
+                    .map_err(|e| format!("cell {}: {e}", cell.label()))?;
+                out[cell.id] = Some(pol.probs());
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Execute every replication of the grid across `spec.threads` OS worker
+/// threads (0 = one per available core) and reduce in (cell, seed) order.
+pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
+    let threads = if spec.threads == 0 {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+    } else {
+        spec.threads
+    };
+    let total = spec.cells.len() * spec.seeds as usize;
+    let cell_p = precompute_cell_distributions(spec)?;
+    let next = AtomicUsize::new(0);
+    let failed = AtomicBool::new(false);
+    let slots: Mutex<Vec<Option<Result<RepResult, String>>>> =
+        Mutex::new(vec![None; total]);
+    std::thread::scope(|scope| {
+        for _ in 0..threads.max(1) {
+            scope.spawn(|| loop {
+                // early abort: once any replication has failed the sweep
+                // is doomed, so don't burn hours on the remaining cells
+                if failed.load(Ordering::Relaxed) {
+                    break;
+                }
+                let r = next.fetch_add(1, Ordering::Relaxed);
+                if r >= total {
+                    break;
+                }
+                let cell = &spec.cells[r / spec.seeds as usize];
+                let seed_idx = (r % spec.seeds as usize) as u64;
+                let out = run_replication(spec, cell, cell_p[cell.id].as_deref(), seed_idx);
+                if out.is_err() {
+                    failed.store(true, Ordering::Relaxed);
+                }
+                slots.lock().unwrap()[r] = Some(out);
+            });
+        }
+    });
+    let slots = slots.into_inner().map_err(|e| e.to_string())?;
+    // surface the earliest recorded failure first — after an early abort
+    // the later slots are legitimately empty
+    for (r, slot) in slots.iter().enumerate() {
+        if let Some(Err(e)) = slot {
+            let cell = &spec.cells[r / spec.seeds as usize];
+            return Err(format!(
+                "cell {} seed {}: {e}",
+                cell.label(),
+                r % spec.seeds as usize
+            ));
+        }
+    }
+    // ordered reduction: walk replications in (cell, seed) order so the
+    // aggregate is independent of which worker ran what when
+    let mut cells = Vec::with_capacity(spec.cells.len());
+    for cell in &spec.cells {
+        let mut metrics: BTreeMap<String, Welford> = BTreeMap::new();
+        let mut curve: Vec<(u64, BTreeMap<String, Welford>)> = Vec::new();
+        let mut curve_len = usize::MAX;
+        let mut reps: Vec<&RepResult> = Vec::with_capacity(spec.seeds as usize);
+        for s in 0..spec.seeds as usize {
+            let r = cell.id * spec.seeds as usize + s;
+            let rep = slots[r]
+                .as_ref()
+                .ok_or_else(|| format!("replication {r} never ran"))?
+                .as_ref()
+                .map_err(|e| format!("cell {} seed {s}: {e}", cell.label()))?;
+            curve_len = curve_len.min(rep.curve.len());
+            reps.push(rep);
+        }
+        for rep in &reps {
+            for (k, &v) in &rep.metrics {
+                let w = metrics.entry(k.clone()).or_default();
+                if v.is_finite() {
+                    w.push(v);
+                }
+            }
+        }
+        if curve_len != usize::MAX && curve_len > 0 {
+            for i in 0..curve_len {
+                let step = reps[0].curve[i].0;
+                // aggregate only while every seed is at the SAME eval
+                // step: round-based strategies emit seed-dependent final
+                // points, and averaging mismatched steps would plot mixed
+                // values at a wrong x-coordinate
+                if reps.iter().any(|rep| rep.curve[i].0 != step) {
+                    break;
+                }
+                let mut point: BTreeMap<String, Welford> = BTreeMap::new();
+                for rep in &reps {
+                    let (_, vt, tl, vl, va) = rep.curve[i];
+                    point.entry("virtual_time".into()).or_default().push(vt);
+                    point.entry("train_loss".into()).or_default().push(tl);
+                    point.entry("val_loss".into()).or_default().push(vl);
+                    point.entry("val_acc".into()).or_default().push(va);
+                }
+                curve.push((step, point));
+            }
+        }
+        cells.push(CellReport { cell: cell.clone(), metrics, curve });
+    }
+    Ok(SweepReport {
+        name: spec.name.clone(),
+        mode: spec.mode,
+        seeds: spec.seeds,
+        base_seed: spec.base_seed,
+        cells,
+    })
+}
+
+fn num(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+fn welford_json(w: &Welford) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("count".to_string(), Json::Num(w.count() as f64));
+    m.insert("mean".to_string(), num(w.mean()));
+    m.insert("std".to_string(), num(w.std()));
+    m.insert("sem".to_string(), num(w.sem()));
+    m.insert("ci95".to_string(), num(w.ci95()));
+    m.insert("min".to_string(), num(w.min()));
+    m.insert("max".to_string(), num(w.max()));
+    Json::Obj(m)
+}
+
+impl SweepReport {
+    /// Render the aggregate as JSON.  Key order (BTreeMap) and f64
+    /// formatting are both deterministic, and nothing scheduling- or
+    /// host-dependent (thread count, timestamps) is included — the
+    /// serialized report is the determinism test's comparison unit.
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("name".to_string(), Json::Str(self.name.clone()));
+        root.insert(
+            "mode".to_string(),
+            Json::Str(
+                match self.mode {
+                    SweepMode::Simulate => "simulate",
+                    SweepMode::Train => "train",
+                }
+                .to_string(),
+            ),
+        );
+        root.insert("seeds".to_string(), Json::Num(self.seeds as f64));
+        root.insert("base_seed".to_string(), Json::Num(self.base_seed as f64));
+        let cells: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|c| {
+                let s = &c.cell.scenario;
+                let mut sc = BTreeMap::new();
+                sc.insert("clients".to_string(), Json::Num(s.clients as f64));
+                sc.insert("concurrency".to_string(), Json::Num(s.concurrency as f64));
+                sc.insert("steps".to_string(), Json::Num(s.steps as f64));
+                sc.insert("mu_fast".to_string(), Json::Num(s.mu_fast));
+                sc.insert("slow_fraction".to_string(), Json::Num(s.slow_fraction));
+                sc.insert("gamma".to_string(), Json::Num(s.gamma));
+                sc.insert("n_fast".to_string(), Json::Num(s.n_fast() as f64));
+                sc.insert(
+                    "p_fast".to_string(),
+                    s.p_fast.map(Json::Num).unwrap_or(Json::Null),
+                );
+                sc.insert(
+                    "service".to_string(),
+                    Json::Str(s.service_name().to_string()),
+                );
+                let mut obj = BTreeMap::new();
+                obj.insert("id".to_string(), Json::Num(c.cell.id as f64));
+                obj.insert("label".to_string(), Json::Str(c.cell.label()));
+                obj.insert("policy".to_string(), Json::Str(c.cell.policy.clone()));
+                obj.insert("algo".to_string(), Json::Str(c.cell.algo.clone()));
+                obj.insert("scenario".to_string(), Json::Obj(sc));
+                obj.insert(
+                    "metrics".to_string(),
+                    Json::Obj(
+                        c.metrics
+                            .iter()
+                            .map(|(k, w)| (k.clone(), welford_json(w)))
+                            .collect(),
+                    ),
+                );
+                if !c.curve.is_empty() {
+                    obj.insert(
+                        "curve".to_string(),
+                        Json::Arr(
+                            c.curve
+                                .iter()
+                                .map(|(step, point)| {
+                                    let mut p = BTreeMap::new();
+                                    p.insert("step".to_string(), Json::Num(*step as f64));
+                                    for (k, w) in point {
+                                        p.insert(k.clone(), welford_json(w));
+                                    }
+                                    Json::Obj(p)
+                                })
+                                .collect(),
+                        ),
+                    );
+                }
+                Json::Obj(obj)
+            })
+            .collect();
+        root.insert("cells".to_string(), Json::Arr(cells));
+        Json::Obj(root)
+    }
+
+    /// One-line terminal summary per cell (mean ± 95% CI of the headline
+    /// metrics).
+    pub fn summary(&self) -> String {
+        let fmt = |w: Option<&Welford>| -> String {
+            match w {
+                Some(w) if w.count() > 0 => {
+                    let ci = w.ci95();
+                    if ci.is_finite() {
+                        format!("{:.3} ±{:.3}", w.mean(), ci)
+                    } else {
+                        format!("{:.3}", w.mean())
+                    }
+                }
+                _ => "-".to_string(),
+            }
+        };
+        let mut out = String::new();
+        for c in &self.cells {
+            let line = match self.mode {
+                SweepMode::Simulate => format!(
+                    "{:<48} delay fast {} / slow {} | step rate {} | tau_c {}",
+                    c.cell.label(),
+                    fmt(c.metrics.get("delay_fast")),
+                    fmt(c.metrics.get("delay_slow")),
+                    fmt(c.metrics.get("step_rate")),
+                    fmt(c.metrics.get("tau_c")),
+                ),
+                SweepMode::Train => format!(
+                    "{:<48} acc {} | val loss {} | tau_max {}",
+                    c.cell.label(),
+                    fmt(c.metrics.get("final_accuracy")),
+                    fmt(c.metrics.get("final_val_loss")),
+                    fmt(c.metrics.get("tau_max")),
+                ),
+            };
+            out.push_str(&line);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GRID: &str = r#"
+[sweep]
+name = "smoke"
+mode = "simulate"
+seeds = 3
+base_seed = 7
+threads = 2
+
+[grid]
+clients = [8, 12]
+concurrency = [4]
+steps = [400]
+mu_fast = [4.0]
+slow_fraction = [0.5]
+policies = ["uniform", "adaptive"]
+"#;
+
+    #[test]
+    fn parses_grid_and_builds_cells() {
+        let spec = SweepSpec::from_toml(GRID).unwrap();
+        assert_eq!(spec.name, "smoke");
+        assert_eq!(spec.mode, SweepMode::Simulate);
+        assert_eq!(spec.seeds, 3);
+        assert_eq!(spec.threads, 2);
+        // 2 clients x 2 policies = 4 cells, scenario-major order
+        assert_eq!(spec.cells.len(), 4);
+        assert_eq!(spec.cells[0].scenario.clients, 8);
+        assert_eq!(spec.cells[0].policy, "uniform");
+        assert_eq!(spec.cells[1].policy, "adaptive");
+        assert_eq!(spec.cells[2].scenario.clients, 12);
+        for (i, c) in spec.cells.iter().enumerate() {
+            assert_eq!(c.id, i);
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_tables_keys_policies_and_modes() {
+        let err = SweepSpec::from_toml("[sweeep]\nseeds = 2").unwrap_err();
+        assert!(err.contains("sweeep"), "{err}");
+        let err = SweepSpec::from_toml("[grid]\nclinets = [10]").unwrap_err();
+        assert!(err.contains("clinets"), "{err}");
+        let err = SweepSpec::from_toml("[grid]\npolicies = [\"zipf\"]").unwrap_err();
+        assert!(err.contains("zipf"), "{err}");
+        let err = SweepSpec::from_toml("[sweep]\nmode = \"quantum\"").unwrap_err();
+        assert!(err.contains("quantum"), "{err}");
+        let err = SweepSpec::from_toml("[sweep]\nseeds = 0").unwrap_err();
+        assert!(err.contains("seeds"), "{err}");
+        let err = SweepSpec::from_toml("[grid]\nclients = []").unwrap_err();
+        assert!(err.contains("clients"), "{err}");
+        let err = SweepSpec::from_toml("[grid]\nclients = 10").unwrap_err();
+        assert!(err.contains("array"), "{err}");
+        // misconfigurations that would otherwise fail mid-sweep are
+        // rejected at parse time
+        let err = SweepSpec::from_toml("[grid]\ngamma = [-0.5]").unwrap_err();
+        assert!(err.contains("gamma"), "{err}");
+        let err = SweepSpec::from_toml("[sweep]\nmode = \"train\"\n[grid]\nalgos = [\"fedavgg\"]")
+            .unwrap_err();
+        assert!(err.contains("fedavgg"), "{err}");
+        let err =
+            SweepSpec::from_toml("[grid]\nslow_fraction = [1.0]\npolicies = [\"optimal\"]")
+                .unwrap_err();
+        assert!(err.contains("optimal"), "{err}");
+    }
+
+    #[test]
+    fn sweep_aggregates_all_cells_and_seeds() {
+        let spec = SweepSpec::from_toml(GRID).unwrap();
+        let report = run_sweep(&spec).unwrap();
+        assert_eq!(report.cells.len(), 4);
+        for c in &report.cells {
+            let d = &c.metrics["delay_all"];
+            assert_eq!(d.count(), 3, "{}", c.cell.label());
+            assert!(d.mean().is_finite());
+            assert!(d.ci95().is_finite(), "3 seeds give a CI");
+            assert!(c.metrics["step_rate"].mean() > 0.0);
+        }
+        // JSON renders and parses back
+        let rendered = report.to_json().render();
+        let parsed = Json::parse(&rendered).unwrap();
+        assert_eq!(
+            parsed.get("cells").unwrap().as_arr().unwrap().len(),
+            4
+        );
+        assert!(!report.summary().is_empty());
+    }
+
+    #[test]
+    fn replication_streams_are_independent() {
+        let spec = SweepSpec::from_toml(GRID).unwrap();
+        let a = run_replication(&spec, &spec.cells[0], None, 0).unwrap();
+        let b = run_replication(&spec, &spec.cells[0], None, 1).unwrap();
+        let c = run_replication(&spec, &spec.cells[0], None, 0).unwrap();
+        assert_ne!(
+            a.metrics["total_time"].to_bits(),
+            b.metrics["total_time"].to_bits(),
+            "different seed indices must differ"
+        );
+        assert_eq!(
+            a.metrics["total_time"].to_bits(),
+            c.metrics["total_time"].to_bits(),
+            "same replication must be reproducible"
+        );
+    }
+}

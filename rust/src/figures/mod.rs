@@ -6,6 +6,7 @@
 pub mod bound_figs;
 pub mod dl_figs;
 pub mod queueing_figs;
+pub mod sweep_figs;
 
 use crate::util::table::Series;
 use std::path::Path;

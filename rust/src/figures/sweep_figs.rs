@@ -1,0 +1,121 @@
+//! Error-band output for sweep aggregates: converts a
+//! [`SweepReport`](crate::coordinator::SweepReport) into `Series` CSVs
+//! whose `<metric>_mean` / `<metric>_lo` / `<metric>_hi` column triples
+//! plot directly as mean ± 95% CI bands (the multi-seed analogue of the
+//! single-run figure CSVs).
+
+use crate::coordinator::sweep::{CellReport, SweepReport};
+use crate::util::stats::Welford;
+use crate::util::table::Series;
+
+fn band(w: Option<&Welford>) -> (f64, f64, f64) {
+    match w {
+        Some(w) if w.count() > 0 => {
+            let m = w.mean();
+            let ci = w.ci95();
+            if ci.is_finite() {
+                (m, m - ci, m + ci)
+            } else {
+                (m, m, m)
+            }
+        }
+        _ => (f64::NAN, f64::NAN, f64::NAN),
+    }
+}
+
+/// Per-cell summary bands: one row per cell, three columns (mean, lo, hi)
+/// per metric.  Cell identity travels as the numeric `cell` id — labels
+/// live in the JSON report next to the CSV.
+pub fn metric_bands(report: &SweepReport, metrics: &[&str]) -> Series {
+    let mut columns: Vec<String> = vec!["cell".to_string()];
+    for m in metrics {
+        columns.push(format!("{m}_mean"));
+        columns.push(format!("{m}_lo"));
+        columns.push(format!("{m}_hi"));
+    }
+    let cols: Vec<&str> = columns.iter().map(|s| s.as_str()).collect();
+    let mut series = Series::new(&cols);
+    for c in &report.cells {
+        let mut row = vec![c.cell.id as f64];
+        for m in metrics {
+            let (mean, lo, hi) = band(c.metrics.get(*m));
+            row.extend([mean, lo, hi]);
+        }
+        series.push(row);
+    }
+    series
+}
+
+/// The headline metric set for each sweep mode, in CSV column order.
+pub fn default_metrics(report: &SweepReport) -> Vec<&'static str> {
+    use crate::coordinator::SweepMode;
+    match report.mode {
+        SweepMode::Simulate => vec![
+            "delay_fast",
+            "delay_slow",
+            "delay_all",
+            "queue_fast",
+            "queue_slow",
+            "step_rate",
+            "tau_c",
+            "tau_max",
+        ],
+        SweepMode::Train => vec!["final_accuracy", "final_val_loss", "tau_max", "virtual_time"],
+    }
+}
+
+/// Training-curve bands for one cell: step + (mean, lo, hi) per curve
+/// metric.  Empty for simulate-mode cells (no curves).
+pub fn curve_bands(cell: &CellReport) -> Series {
+    let metrics = ["train_loss", "val_loss", "val_acc", "virtual_time"];
+    let mut columns: Vec<String> = vec!["step".to_string()];
+    for m in metrics {
+        columns.push(format!("{m}_mean"));
+        columns.push(format!("{m}_lo"));
+        columns.push(format!("{m}_hi"));
+    }
+    let cols: Vec<&str> = columns.iter().map(|s| s.as_str()).collect();
+    let mut series = Series::new(&cols);
+    for (step, point) in &cell.curve {
+        let mut row = vec![*step as f64];
+        for m in metrics {
+            let (mean, lo, hi) = band(point.get(m));
+            row.extend([mean, lo, hi]);
+        }
+        series.push(row);
+    }
+    series
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sweep::{run_sweep, SweepSpec};
+
+    #[test]
+    fn bands_cover_every_cell_with_ci_triples() {
+        let spec = SweepSpec::from_toml(
+            r#"
+[sweep]
+seeds = 3
+threads = 2
+[grid]
+clients = [6]
+concurrency = [3]
+steps = [300]
+policies = ["uniform", "adaptive"]
+"#,
+        )
+        .unwrap();
+        let report = run_sweep(&spec).unwrap();
+        let metrics = default_metrics(&report);
+        let s = metric_bands(&report, &metrics);
+        assert_eq!(s.rows.len(), report.cells.len());
+        assert_eq!(s.columns.len(), 1 + 3 * metrics.len());
+        for row in &s.rows {
+            // delay_all triple: lo <= mean <= hi
+            let i = 1 + 3 * metrics.iter().position(|m| *m == "delay_all").unwrap();
+            assert!(row[i + 1] <= row[i] && row[i] <= row[i + 2], "{row:?}");
+        }
+    }
+}

@@ -51,6 +51,9 @@ COMMANDS
             --favano-interval D --optimal-p (= --policy optimal)
             --seed S --out results/train.csv
   simulate  --n N --c C --steps N --mu-fast F --n-fast N --p-fast F --seed S
+  sweep     --grid scenarios/sweep_fig6.toml [--threads N] [--seeds S]
+            [--out results/sweep.json]   multi-seed grid -> mean ± CI JSON
+            + error-band CSV (see README for the grid TOML schema)
   bounds    --c C --mu-fast F --n N --n-fast N [--physical-time U]
   figure    <fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|table1|table2>
             [--out DIR] [--quick]
@@ -85,6 +88,7 @@ fn main() {
     let result = match cmd.as_str() {
         "train" => cmd_train(&args),
         "simulate" => cmd_simulate(&args),
+        "sweep" => cmd_sweep(&args),
         "bounds" => cmd_bounds(&args),
         "figure" => cmd_figure(&args),
         "figures" => cmd_figures(&args),
@@ -166,7 +170,7 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         );
     }
     let (m_theory, rate) =
-        fedqueue::coordinator::experiment::theory_summary_with(&cfg, policy.probs())?;
+        fedqueue::coordinator::experiment::theory_summary_with(&cfg, &policy.probs())?;
     println!(
         "# theory: CS step rate {:.2}/unit-time; mean delay fast {:.1} / slow {:.1} steps",
         rate,
@@ -174,7 +178,7 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         m_theory[cfg.n_fast()..].iter().sum::<f64>() / (cfg.n_clients - cfg.n_fast()) as f64
     );
     let strategy =
-        StrategyRegistry::builtin().build(&cfg.algo, &cfg.strategy_params(policy.probs()))?;
+        StrategyRegistry::builtin().build(&cfg.algo, &cfg.strategy_params(&policy.probs()))?;
     let res = cfg.run_with(strategy, policy)?;
     let mut s = Series::new(&["step", "virtual_time", "train_loss", "val_loss", "val_acc"]);
     for c in &res.curve {
@@ -235,6 +239,55 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         res.step_rate(steps),
         an.cs_rate,
         res.total_time
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<(), String> {
+    let grid = args
+        .get("grid")
+        .ok_or("sweep: --grid scenarios/NAME.toml is required")?;
+    let mut spec = fedqueue::coordinator::SweepSpec::from_path(Path::new(grid))?;
+    spec.threads = args.usize_or("threads", spec.threads)?;
+    let seeds = args.u64_or("seeds", spec.seeds)?;
+    if seeds == 0 {
+        return Err("--seeds must be >= 1".into());
+    }
+    spec.seeds = seeds;
+    let out = args.str_or("out", &spec.out);
+    println!(
+        "# sweep '{}': {} cells x {} seeds = {} replications on {} threads",
+        spec.name,
+        spec.cells.len(),
+        spec.seeds,
+        spec.cells.len() * spec.seeds as usize,
+        if spec.threads == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            spec.threads
+        }
+    );
+    let t0 = std::time::Instant::now();
+    let report = fedqueue::coordinator::run_sweep(&spec)?;
+    print!("{}", report.summary());
+    let out_path = Path::new(&out);
+    if let Some(dir) = out_path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        }
+    }
+    std::fs::write(out_path, report.to_json().render()).map_err(|e| e.to_string())?;
+    let bands = figures::sweep_figs::metric_bands(
+        &report,
+        &figures::sweep_figs::default_metrics(&report),
+    );
+    let bands_path = out_path.with_extension("bands.csv");
+    bands.write_csv(&bands_path).map_err(|e| e.to_string())?;
+    println!(
+        "wrote {} + {}  [{:.1}s]",
+        out_path.display(),
+        bands_path.display(),
+        t0.elapsed().as_secs_f64()
     );
     Ok(())
 }

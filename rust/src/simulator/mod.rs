@@ -5,6 +5,7 @@ pub mod network;
 pub mod service;
 
 pub use network::{
-    run, transient_mi, InitPlacement, Network, SimConfig, SimResult, StepOutcome, TaskRecord,
+    run, run_with_policy, transient_mi, InitPlacement, Network, SimConfig, SimResult,
+    StepOutcome, TaskRecord,
 };
 pub use service::{ServiceDist, ServiceFamily};

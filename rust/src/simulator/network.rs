@@ -262,30 +262,37 @@ impl Network {
     ) -> Result<Network, String> {
         cfg.validate()?;
         let n = cfg.p.len();
-        if policy.probs().len() != n {
+        if policy.n() != n {
             return Err(format!(
                 "policy '{}' covers {} nodes but the network has {n}",
                 policy.name(),
-                policy.probs().len()
+                policy.n()
             ));
         }
         let mut rng = Rng::new(cfg.seed).derive(0x51_3A_77);
         // initial placement S_0 — (node, selection probability) pairs
         let placements: Vec<(usize, f64)> = match cfg.init {
             InitPlacement::OnePerNode => {
-                (0..n).map(|i| (i, policy.probs()[i])).collect()
+                (0..n).map(|i| (i, policy.prob_of(i))).collect()
             }
             InitPlacement::RoundRobin => (0..cfg.concurrency)
-                .map(|j| (j % n, policy.probs()[j % n]))
+                .map(|j| (j % n, policy.prob_of(j % n)))
                 .collect(),
             InitPlacement::Routed => {
                 let mut lens = vec![0u32; n];
+                let incremental = policy.incremental();
                 (0..cfg.concurrency)
                     .map(|_| {
-                        policy.observe(&lens);
+                        if !incremental {
+                            policy.observe(&lens);
+                        }
                         let node = policy.route(&mut rng);
+                        let prob = policy.prob_of(node);
                         lens[node] += 1;
-                        (node, policy.probs()[node])
+                        if incremental {
+                            policy.observe_node(node, lens[node]);
+                        }
+                        (node, prob)
                     })
                     .collect()
             }
@@ -304,6 +311,14 @@ impl Network {
         };
         for (node, prob) in placements {
             net.arrive(node as u32, 0, 0.0, prob);
+        }
+        // incremental policies only ever hear about queues that change, so
+        // sync them once with the realized initial state S_0 (idempotent
+        // for the Routed path, which already observed each placement)
+        if net.policy.incremental() {
+            for i in 0..n {
+                net.policy.observe_node(i, net.queues[i].len() as u32);
+            }
         }
         Ok(net)
     }
@@ -338,8 +353,8 @@ impl Network {
     }
 
     /// The routing distribution currently in force (time-varying for
-    /// adaptive policies).
-    pub fn current_probs(&self) -> &[f64] {
+    /// adaptive policies).  O(n) — diagnostics only.
+    pub fn current_probs(&self) -> Vec<f64> {
         self.policy.probs()
     }
 
@@ -366,14 +381,26 @@ impl Network {
             dispatch_prob: task.dispatch_prob,
         };
         // dispatcher: consult the sampling policy, select K_{k+1}, and send
-        // the new model
-        self.lens_buf.clear();
-        self.lens_buf.extend(self.queues.iter().map(|q| q.len() as u32));
-        self.policy.observe(&self.lens_buf);
+        // the new model.  Incremental policies get only the two queue
+        // lengths that changed (the pop above and the arrival below), so a
+        // dispatch costs O(log n) instead of O(n).
+        let incremental = self.policy.incremental();
+        if incremental {
+            self.policy
+                .observe_node(node as usize, self.queues[node as usize].len() as u32);
+        } else {
+            self.lens_buf.clear();
+            self.lens_buf.extend(self.queues.iter().map(|q| q.len() as u32));
+            self.policy.observe(&self.lens_buf);
+        }
         let next = self.policy.route(&mut self.rng) as u32;
-        let next_prob = self.policy.probs()[next as usize];
+        let next_prob = self.policy.prob_of(next as usize);
         let next_dispatch_step = self.step + 1;
         self.arrive(next, next_dispatch_step, self.now, next_prob);
+        if incremental {
+            self.policy
+                .observe_node(next as usize, self.queues[next as usize].len() as u32);
+        }
         let outcome = StepOutcome {
             completed_node: node,
             dispatch_step: task.dispatch_step,
@@ -391,13 +418,30 @@ impl Network {
     }
 }
 
-/// Run a full simulation per the config.
+/// Run a full simulation per the config (fixed-p static routing).
 pub fn run(cfg: SimConfig) -> Result<SimResult, String> {
+    let policy = Box::new(StaticPolicy::new(cfg.p.clone())?);
+    run_with_policy(cfg, policy)
+}
+
+/// Run a full simulation under an arbitrary sampling policy — the sweep
+/// engine's replication kernel.
+///
+/// Per-step cost is O(log C) (event heap) plus the policy's per-dispatch
+/// cost — O(1) for alias-backed static policies, O(log n) for the Fenwick
+/// adaptive policy.  Queue-occupancy time-averages are accumulated lazily
+/// per node (only the two queues that change per step are touched), so a
+/// replication with n = 10^5–10^6 nodes never pays an O(n) scan per CS
+/// step.
+pub fn run_with_policy(
+    cfg: SimConfig,
+    policy: Box<dyn SamplingPolicy>,
+) -> Result<SimResult, String> {
     let n = cfg.p.len();
     let steps = cfg.steps;
     let record_tasks = cfg.record_tasks;
     let sample_every = cfg.queue_sample_every;
-    let mut net = Network::new(cfg)?;
+    let mut net = Network::with_policy(cfg, policy)?;
     let mut res = SimResult {
         delay_steps: vec![Welford::new(); n],
         delay_time: vec![Welford::new(); n],
@@ -412,25 +456,28 @@ pub fn run(cfg: SimConfig) -> Result<SimResult, String> {
         mean_queue: vec![0.0; n],
     };
     let mut busy_sum = 0u64;
-    let mut last_t = 0.0f64;
-    // queue state over [last_t, now) — updated lazily for time-weighting
-    let mut q_state: Vec<f64> = net.queues.iter().map(|q| q.len() as f64).collect();
+    // lazy time-weighted queue integrals: each node's occupancy is
+    // piecewise constant, so ∫X_i dt only needs flushing when X_i changes
+    // (the completed node and the dispatch target) and once at the end
+    let mut area: Vec<f64> = vec![0.0; n];
+    let mut last_change: Vec<f64> = vec![0.0; n];
+    let mut q_len: Vec<u32> = (0..n).map(|i| net.queue_len(i) as u32).collect();
+    let flush = |i: usize, t: f64, new_len: u32, area: &mut [f64], lc: &mut [f64], ql: &mut [u32]| {
+        area[i] += ql[i] as f64 * (t - lc[i]);
+        lc[i] = t;
+        ql[i] = new_len;
+    };
     for k in 0..steps {
         let out = net.advance().ok_or("network drained")?;
-        let dt = out.time - last_t;
-        for (qi, acc) in res.mean_queue.iter_mut().enumerate() {
-            *acc += q_state[qi] * dt;
-        }
-        for (qi, q) in net.queues.iter().enumerate() {
-            q_state[qi] = q.len() as f64;
-        }
-        last_t = out.time;
         let i = out.completed_node as usize;
+        let j = out.next_node as usize;
+        flush(i, out.time, net.queue_len(i) as u32, &mut area, &mut last_change, &mut q_len);
+        flush(j, out.time, net.queue_len(j) as u32, &mut area, &mut last_change, &mut q_len);
         let d = out.record.delay_steps();
         res.delay_steps[i].push(d as f64);
         res.delay_time[i].push(out.record.complete_time - out.record.dispatch_time);
         res.completions[i] += 1;
-        res.dispatches[out.next_node as usize] += 1;
+        res.dispatches[j] += 1;
         res.tau_sum[i] += d as f64;
         res.tau_max = res.tau_max.max(d);
         busy_sum += net.busy_nodes() as u64;
@@ -438,14 +485,15 @@ pub fn run(cfg: SimConfig) -> Result<SimResult, String> {
             res.tasks.push(out.record);
         }
         if sample_every > 0 && k % sample_every == 0 {
-            res.queue_samples
-                .push((k, net.queues.iter().map(|q| q.len() as u32).collect()));
+            res.queue_samples.push((k, q_len.clone()));
         }
     }
-    res.tau_c = busy_sum as f64 / steps as f64;
+    res.tau_c = busy_sum as f64 / steps.max(1) as f64;
     res.total_time = net.now;
-    for q in res.mean_queue.iter_mut() {
-        *q /= net.now.max(f64::MIN_POSITIVE);
+    let denom = net.now.max(f64::MIN_POSITIVE);
+    for i in 0..n {
+        area[i] += q_len[i] as f64 * (net.now - last_change[i]);
+        res.mean_queue[i] = area[i] / denom;
     }
     debug_assert_eq!(net.population(), net.cfg.concurrency);
     Ok(res)

@@ -11,6 +11,7 @@ pub mod cli;
 pub mod json;
 pub mod proptest;
 pub mod rng;
+pub mod sampler;
 pub mod stats;
 pub mod table;
 pub mod toml;

@@ -1,0 +1,321 @@
+//! Weighted-sampling backends for the routing hot path.
+//!
+//! Three samplers with different update/draw complexity trade-offs:
+//!
+//! * [`crate::util::rng::AliasTable`] — O(n) build, O(1) draw, immutable.
+//!   The backend for *static* policies (fixed p for the whole run).
+//! * [`FenwickSampler`] — O(n) build, O(log n) point update, O(log n)
+//!   draw.  The backend for *adaptive* policies whose weights change a
+//!   few entries per routing step (queue-length tilts): the previous
+//!   implementation renormalized and scanned all n entries per dispatch,
+//!   which capped single-replication scale at ~10^4 nodes.
+//! * [`linear_route`] — the original O(n) CDF scan, kept as the exact
+//!   oracle the fast samplers are validated against in
+//!   `tests/statistical_samplers.rs`.  Its historical fall-through bug
+//!   (returning a zero-mass trailing index when `u` lands in the
+//!   floating-point gap at the top of the CDF) is fixed here.
+
+use crate::util::rng::Rng;
+
+/// Draw an index from the distribution `p` given a uniform variate
+/// `u ∈ [0, 1)` by scanning the cumulative sum — the reference sampler.
+///
+/// Exact semantics: index `i` is selected iff `u` falls in
+/// `[Σ_{j<i} p_j, Σ_{j<=i} p_j)`, so zero-mass entries are never chosen.
+/// When accumulated floating-point error leaves `u` above the final
+/// cumulative sum (possible when `u ≈ 1`), the scan falls through; the
+/// historical implementation then returned `p.len() - 1` even if that
+/// entry had zero probability.  The fall-through now returns the last
+/// *positive-mass* index instead.
+pub fn linear_route(p: &[f64], u: f64) -> usize {
+    debug_assert!(!p.is_empty());
+    let mut acc = 0.0f64;
+    let mut last_pos = p.len() - 1;
+    let mut seen_pos = false;
+    for (i, &pi) in p.iter().enumerate() {
+        if pi > 0.0 {
+            last_pos = i;
+            seen_pos = true;
+        }
+        acc += pi;
+        if u < acc {
+            return i;
+        }
+    }
+    debug_assert!(seen_pos, "linear_route on an all-zero distribution");
+    last_pos
+}
+
+/// Fenwick (binary indexed) tree over non-negative f64 weights, supporting
+/// O(log n) point update, O(log n) prefix sum, and O(log n) inverse-CDF
+/// sampling — the adaptive-policy backend.
+///
+/// Floating-point hygiene: point updates are applied as deltas, so error
+/// accumulates over millions of `set` calls.  The tree therefore counts
+/// updates and rebuilds itself exactly from the stored leaf weights every
+/// [`FenwickSampler::REBUILD_EVERY`] updates (amortized O(1) per update),
+/// and the sampling descent never returns a zero-weight leaf.
+#[derive(Clone, Debug)]
+pub struct FenwickSampler {
+    /// 1-based Fenwick array; tree[i] covers `i - lowbit(i) .. i`.
+    tree: Vec<f64>,
+    /// raw leaf weights (0-based) — the exact current distribution
+    leaf: Vec<f64>,
+    /// largest power of two <= n (descent start mask)
+    mask: usize,
+    updates: u64,
+}
+
+impl FenwickSampler {
+    /// Updates between exact rebuilds (power of two, tuned so a rebuild
+    /// costs well under 0.1% of the updates it amortizes over).
+    pub const REBUILD_EVERY: u64 = 1 << 20;
+
+    /// Build from non-negative weights (need not be normalized; total may
+    /// be zero only transiently — `sample` requires a positive total).
+    pub fn new(weights: &[f64]) -> Result<FenwickSampler, String> {
+        if weights.is_empty() {
+            return Err("fenwick sampler needs at least one weight".into());
+        }
+        if weights.iter().any(|w| *w < 0.0 || !w.is_finite()) {
+            return Err("fenwick sampler: weights must be finite and >= 0".into());
+        }
+        let n = weights.len();
+        let mut mask = 1usize;
+        while mask * 2 <= n {
+            mask *= 2;
+        }
+        let mut s = FenwickSampler {
+            tree: vec![0.0; n + 1],
+            leaf: weights.to_vec(),
+            mask,
+            updates: 0,
+        };
+        s.rebuild();
+        Ok(s)
+    }
+
+    pub fn len(&self) -> usize {
+        self.leaf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.leaf.is_empty()
+    }
+
+    /// Current raw weight of index i.
+    pub fn weight(&self, i: usize) -> f64 {
+        self.leaf[i]
+    }
+
+    /// All raw leaf weights.
+    pub fn weights(&self) -> &[f64] {
+        &self.leaf
+    }
+
+    /// Total weight (root-path sum, O(log n)).
+    pub fn total(&self) -> f64 {
+        self.prefix(self.leaf.len())
+    }
+
+    /// Σ_{j < i} w_j  (sum of the first `i` leaves), O(log n).
+    pub fn prefix(&self, i: usize) -> f64 {
+        let mut acc = 0.0;
+        let mut k = i;
+        while k > 0 {
+            acc += self.tree[k];
+            k &= k - 1;
+        }
+        acc
+    }
+
+    /// Set leaf i to `w` (O(log n) amortized; periodically rebuilds the
+    /// internal nodes exactly from the leaves to cancel delta drift).
+    pub fn set(&mut self, i: usize, w: f64) {
+        debug_assert!(w >= 0.0 && w.is_finite(), "weight {w}");
+        let delta = w - self.leaf[i];
+        self.leaf[i] = w;
+        let mut k = i + 1;
+        while k <= self.leaf.len() {
+            self.tree[k] += delta;
+            k += k & k.wrapping_neg();
+        }
+        self.updates += 1;
+        if self.updates % Self::REBUILD_EVERY == 0 {
+            self.rebuild();
+        }
+    }
+
+    /// Recompute every internal node exactly from the leaves (O(n)).
+    pub fn rebuild(&mut self) {
+        let n = self.leaf.len();
+        for k in 1..=n {
+            self.tree[k] = self.leaf[k - 1];
+        }
+        for k in 1..=n {
+            let parent = k + (k & k.wrapping_neg());
+            if parent <= n {
+                self.tree[parent] += self.tree[k];
+            }
+        }
+    }
+
+    /// Draw an index with probability w_i / total using one uniform
+    /// variate.  Requires a positive, finite total.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let total = self.total();
+        debug_assert!(total > 0.0 && total.is_finite(), "total {total}");
+        self.sample_at(rng.uniform() * total)
+    }
+
+    /// Inverse CDF at `target ∈ [0, total)`: the smallest index i with
+    /// Σ_{j<=i} w_j > target among positive-mass leaves.  Zero-weight
+    /// leaves are never returned (boundary targets resolve to the next
+    /// positive leaf; a floating-point overshoot resolves to the nearest
+    /// positive leaf below).
+    pub fn sample_at(&self, target: f64) -> usize {
+        let n = self.leaf.len();
+        // descent: find the largest idx (0-based count of leaves passed)
+        // whose prefix sum is <= target
+        let mut idx = 0usize;
+        let mut rem = target;
+        let mut step = self.mask;
+        while step > 0 {
+            let next = idx + step;
+            if next <= n && self.tree[next] <= rem {
+                rem -= self.tree[next];
+                idx = next;
+            }
+            step >>= 1;
+        }
+        let mut i = idx.min(n - 1);
+        // fp-gap guard: never return a zero-mass leaf
+        if self.leaf[i] == 0.0 {
+            let down = (0..i).rev().find(|&j| self.leaf[j] > 0.0);
+            i = down
+                .or_else(|| (i + 1..n).find(|&j| self.leaf[j] > 0.0))
+                .unwrap_or(i);
+        }
+        i
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prefix_naive(w: &[f64], i: usize) -> f64 {
+        w[..i].iter().sum()
+    }
+
+    #[test]
+    fn fenwick_prefix_matches_naive() {
+        let w: Vec<f64> = (0..37).map(|i| ((i * 7 + 3) % 11) as f64 / 10.0).collect();
+        let f = FenwickSampler::new(&w).unwrap();
+        for i in 0..=w.len() {
+            assert!(
+                (f.prefix(i) - prefix_naive(&w, i)).abs() < 1e-12,
+                "prefix({i})"
+            );
+        }
+        assert!((f.total() - w.iter().sum::<f64>()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fenwick_set_updates_sums() {
+        let mut f = FenwickSampler::new(&[1.0; 10]).unwrap();
+        f.set(3, 5.0);
+        f.set(9, 0.0);
+        assert_eq!(f.weight(3), 5.0);
+        assert!((f.total() - 13.0).abs() < 1e-12);
+        assert!((f.prefix(4) - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fenwick_sample_matches_weights() {
+        let w = vec![0.1, 0.0, 0.4, 0.2, 0.3];
+        let f = FenwickSampler::new(&w).unwrap();
+        let mut rng = Rng::new(21);
+        let trials = 200_000u64;
+        let mut counts = vec![0u64; w.len()];
+        for _ in 0..trials {
+            counts[f.sample(&mut rng)] += 1;
+        }
+        assert_eq!(counts[1], 0, "zero-mass leaf must never be drawn");
+        for (i, &c) in counts.iter().enumerate() {
+            let p = c as f64 / trials as f64;
+            assert!((p - w[i]).abs() < 5e-3, "i={i} p={p}");
+        }
+    }
+
+    #[test]
+    fn fenwick_sample_at_boundaries() {
+        let f = FenwickSampler::new(&[0.5, 0.0, 0.5]).unwrap();
+        assert_eq!(f.sample_at(0.0), 0);
+        assert_eq!(f.sample_at(0.25), 0);
+        // boundary target lands on the next positive leaf, skipping zeros
+        assert_eq!(f.sample_at(0.5), 2);
+        assert_eq!(f.sample_at(0.999), 2);
+    }
+
+    #[test]
+    fn fenwick_trailing_zero_mass_never_selected() {
+        let f = FenwickSampler::new(&[0.7, 0.3, 0.0, 0.0]).unwrap();
+        let mut rng = Rng::new(22);
+        for _ in 0..50_000 {
+            assert!(f.sample(&mut rng) < 2);
+        }
+        // an overshooting target (fp gap at the top of the CDF) resolves
+        // to the last positive-mass leaf, not a trailing zero
+        assert_eq!(f.sample_at(1.0 - 1e-16), 1);
+    }
+
+    #[test]
+    fn fenwick_rebuild_cancels_drift() {
+        let mut f = FenwickSampler::new(&[1.0; 64]).unwrap();
+        let mut rng = Rng::new(23);
+        for _ in 0..100_000 {
+            let i = rng.usize_below(64);
+            f.set(i, rng.uniform() * 3.0);
+        }
+        f.rebuild();
+        let naive: f64 = f.weights().iter().sum();
+        assert!((f.total() - naive).abs() < 1e-9, "{} vs {naive}", f.total());
+        for i in 0..=64 {
+            assert!((f.prefix(i) - prefix_naive(f.weights(), i)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fenwick_rejects_bad_weights() {
+        assert!(FenwickSampler::new(&[]).is_err());
+        assert!(FenwickSampler::new(&[1.0, -0.1]).is_err());
+        assert!(FenwickSampler::new(&[f64::NAN]).is_err());
+        // an all-zero build is allowed (weights arrive via set)
+        assert!(FenwickSampler::new(&[0.0, 0.0]).is_ok());
+    }
+
+    #[test]
+    fn linear_route_matches_cdf_intervals() {
+        let p = [0.1, 0.2, 0.3, 0.4];
+        assert_eq!(linear_route(&p, 0.0), 0);
+        assert_eq!(linear_route(&p, 0.09), 0);
+        assert_eq!(linear_route(&p, 0.1), 1);
+        assert_eq!(linear_route(&p, 0.299), 1);
+        assert_eq!(linear_route(&p, 0.3), 2);
+        assert_eq!(linear_route(&p, 0.6), 3);
+        assert_eq!(linear_route(&p, 0.9999999), 3);
+    }
+
+    #[test]
+    fn linear_route_fallthrough_skips_trailing_zeros() {
+        // the historical bug: u in the fp gap above the final cumulative
+        // sum returned index 3 even though p[3] = 0
+        let p = [0.6, 0.4 - 1e-17, 0.0, 0.0];
+        assert_eq!(linear_route(&p, 1.0 - 1e-17), 1);
+        // zero-mass entries inside the support are skipped too
+        let p = [0.0, 1.0, 0.0];
+        assert_eq!(linear_route(&p, 0.0), 1);
+        assert_eq!(linear_route(&p, 1.0 - 1e-17), 1);
+    }
+}

@@ -3,13 +3,21 @@
 //! incomplete gamma / Erlang CDF — the `P(k, x)` of the paper's Γ-ratio).
 
 /// Welford online mean/variance accumulator.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct Welford {
     n: u64,
     mean: f64,
     m2: f64,
     min: f64,
     max: f64,
+}
+
+impl Default for Welford {
+    /// Same as [`Welford::new`] — in particular min/max start at the
+    /// infinities, so the first `push` records them correctly.
+    fn default() -> Self {
+        Welford::new()
+    }
 }
 
 impl Welford {
@@ -78,6 +86,12 @@ impl Welford {
     /// Standard error of the mean.
     pub fn sem(&self) -> f64 {
         self.std() / (self.n as f64).sqrt()
+    }
+
+    /// Half-width of the normal-approximation 95% confidence interval on
+    /// the mean (1.96·sem) — the sweep engine's error bands.
+    pub fn ci95(&self) -> f64 {
+        1.96 * self.sem()
     }
 }
 
@@ -265,6 +279,35 @@ pub fn reg_lower_gamma(a: f64, x: f64) -> f64 {
     }
 }
 
+/// CDF of the chi-square distribution with `df` degrees of freedom:
+/// P(χ²_df ≤ x) = P(df/2, x/2).
+pub fn chi_square_cdf(df: f64, x: f64) -> f64 {
+    reg_lower_gamma(df / 2.0, x / 2.0)
+}
+
+/// Pearson chi-square goodness-of-fit statistic for observed `counts`
+/// against the model distribution `p`.  Zero-probability categories
+/// contribute no degrees of freedom but any observation in one is an
+/// immediate model violation, reported as an infinite statistic.
+/// Returns (statistic, degrees of freedom).
+pub fn chi_square_stat(counts: &[u64], p: &[f64]) -> (f64, usize) {
+    assert_eq!(counts.len(), p.len());
+    let total: u64 = counts.iter().sum();
+    let mut stat = 0.0f64;
+    let mut support = 0usize;
+    for (&c, &pi) in counts.iter().zip(p.iter()) {
+        if pi > 0.0 {
+            support += 1;
+            let expect = pi * total as f64;
+            let d = c as f64 - expect;
+            stat += d * d / expect;
+        } else if c > 0 {
+            return (f64::INFINITY, counts.len());
+        }
+    }
+    (stat, support.saturating_sub(1))
+}
+
 pub fn logsumexp(xs: &[f64]) -> f64 {
     let m = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
     if !m.is_finite() {
@@ -369,6 +412,47 @@ mod tests {
         assert_eq!(erlang_cdf(10, 0.0), 0.0);
         assert!(erlang_cdf(1000, 10.0) < 1e-10);
         assert!((erlang_cdf(2, 1e6) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chi_square_cdf_known_values() {
+        // χ²_1 median ≈ 0.4549, χ²_10 at x=10 ≈ 0.5595
+        assert!((chi_square_cdf(1.0, 0.4549) - 0.5).abs() < 1e-3);
+        assert!((chi_square_cdf(10.0, 10.0) - 0.5595).abs() < 1e-3);
+        assert_eq!(chi_square_cdf(5.0, 0.0), 0.0);
+        assert!(chi_square_cdf(3.0, 1e4) > 1.0 - 1e-12);
+    }
+
+    #[test]
+    fn chi_square_stat_exact_fit_is_zero() {
+        let (s, df) = chi_square_stat(&[25, 25, 25, 25], &[0.25; 4]);
+        assert_eq!(s, 0.0);
+        assert_eq!(df, 3);
+        // zero-mass category drops a degree of freedom...
+        let (s, df) = chi_square_stat(&[50, 50, 0], &[0.5, 0.5, 0.0]);
+        assert_eq!(s, 0.0);
+        assert_eq!(df, 1);
+        // ...but observing it is an infinite-statistic violation
+        let (s, _) = chi_square_stat(&[50, 49, 1], &[0.5, 0.5, 0.0]);
+        assert!(s.is_infinite());
+    }
+
+    #[test]
+    fn welford_ci95_shrinks_with_n() {
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        for i in 0..100 {
+            let x = (i % 10) as f64;
+            a.push(x);
+            b.push(x);
+            b.push(x);
+        }
+        for _ in 0..100 {
+            // b has 3x the samples of the same spread
+            b.push(4.5);
+        }
+        assert!(b.ci95() < a.ci95());
+        assert!((a.ci95() - 1.96 * a.sem()).abs() < 1e-15);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! agree on queue lengths, utilizations, throughput, and the paper's delay
 //! quantities m_i, across service families and load regimes.
 
+use fedqueue::coordinator::{optimal_two_cluster, PolicyCtx, SamplingPolicy};
 use fedqueue::queueing::{ClosedNetwork, MiEstimator, TwoCluster};
 use fedqueue::simulator::{run, ServiceDist, ServiceFamily, SimConfig};
 
@@ -136,6 +137,60 @@ fn fig5_protocol_full_cross_validation() {
     let tc = TwoCluster::uniform(10, 5, 1.2, 1.0, 1000);
     let (bf, bs) = tc.delay_bounds();
     assert!(bf > fast * 0.8 && bs > slow * 0.95, "bounds {bf}/{bs}");
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "release-only: 1.2M-step runs (CI stat-tests job)")]
+fn product_form_regression_uniform_and_theorem1_optimal_p() {
+    // Empirical stationary queue lengths from a long run must match the
+    // closed Jackson product form (Buzen) node by node — under the uniform
+    // distribution AND under the Theorem-1 bound-optimal p that the
+    // `optimal` policy actually routes with.  This pins the simulator and
+    // `queueing::jackson` to each other through the exact distribution the
+    // paper's headline experiments use.
+    let n = 10;
+    let n_fast = 5;
+    let c = 50;
+    let rates: Vec<f64> = (0..n).map(|i| if i < n_fast { 1.2 } else { 1.0 }).collect();
+    let optimal = optimal_two_cluster(&PolicyCtx {
+        n,
+        base_p: vec![0.1; n],
+        gamma: 0.0,
+        n_fast,
+        mu_fast: 1.2,
+        mu_slow: 1.0,
+        concurrency: c,
+        steps: 10_000,
+    })
+    .unwrap();
+    let p_opt = optimal.probs();
+    assert!(p_opt[0] < 0.1, "optimal must tilt away from fast nodes");
+    for (label, p) in [("uniform", vec![0.1; n]), ("optimal", p_opt)] {
+        let res = sim(p.clone(), rates.clone(), c, 600_000, 0xF8);
+        let net = ClosedNetwork::new(p, rates.clone()).unwrap();
+        let b = net.buzen(c);
+        let mut total_theory = 0.0;
+        for i in 0..n {
+            let theory = b.mean_queue(i, c);
+            let emp = res.mean_queue[i];
+            total_theory += theory;
+            let tol = 0.1 * theory + 0.15;
+            assert!(
+                (emp - theory).abs() < tol,
+                "{label} node {i}: sim E[X] {emp} vs product form {theory}"
+            );
+        }
+        // the marginals must account for the whole population C
+        assert!(
+            (total_theory - c as f64).abs() < 1e-6,
+            "{label}: product-form marginals sum to {total_theory}, C = {c}"
+        );
+        assert_eq!(
+            res.mean_queue.iter().sum::<f64>().round() as usize,
+            c,
+            "{label}: simulated time-average population must be C"
+        );
+    }
 }
 
 #[test]

@@ -1,0 +1,242 @@
+//! Statistical test harness for the routing samplers.
+//!
+//! Chi-square goodness-of-fit tests pin the O(1) alias sampler and the
+//! O(log n) Fenwick sampler to their target distributions — including the
+//! skewed two-cluster p of Theorem 1 and near-degenerate distributions —
+//! and pin the Fenwick-backed adaptive policy's re-weighting to the exact
+//! softmax-tilted distribution computed from first principles.  The fixed
+//! linear CDF scan (`util::sampler::linear_route`) serves as the exact
+//! oracle: the fast samplers must agree with it draw for draw on shared
+//! uniform variates, and its own fall-through semantics are tested here.
+//!
+//! All tests use fixed seeds: the chi-square acceptances are exact
+//! reproducible computations, not flaky thresholds.
+
+use fedqueue::coordinator::policy::{AdaptiveQueuePolicy, FenwickAdaptivePolicy, SamplingPolicy};
+use fedqueue::util::rng::{AliasTable, Rng};
+use fedqueue::util::sampler::{linear_route, FenwickSampler};
+use fedqueue::util::stats::{chi_square_cdf, chi_square_stat};
+
+/// Assert the sampled `counts` are consistent with the model `p`: the
+/// chi-square statistic's CDF quantile under H0 must stay below 1 − 10⁻⁵.
+/// With fixed seeds this is a deterministic regression check (a genuinely
+/// wrong sampler drives the quantile to 1 − 10⁻³⁰-ish), not a flaky
+/// threshold.
+fn assert_gof(label: &str, counts: &[u64], p: &[f64]) {
+    let (stat, df) = chi_square_stat(counts, p);
+    assert!(df > 0, "{label}: degenerate support");
+    let q = chi_square_cdf(df as f64, stat);
+    assert!(
+        q < 0.99999,
+        "{label}: chi2 = {stat:.2} at {df} df (CDF {q:.6}) — sampler does not match p"
+    );
+}
+
+fn counts_from<F: FnMut(&mut Rng) -> usize>(n: usize, trials: u64, seed: u64, mut f: F) -> Vec<u64> {
+    let mut rng = Rng::new(seed);
+    let mut counts = vec![0u64; n];
+    for _ in 0..trials {
+        counts[f(&mut rng)] += 1;
+    }
+    counts
+}
+
+/// The three distribution shapes every sampler must reproduce.
+fn target_distributions() -> Vec<(&'static str, Vec<f64>)> {
+    // uniform over many nodes
+    let uniform = vec![1.0 / 200.0; 200];
+    // skewed two-cluster (Theorem-1 shape): 25 fast nodes carry p = 0.002,
+    // 25 slow nodes carry the rest
+    let pf = 0.002;
+    let q = (1.0 - 25.0 * pf) / 25.0;
+    let two_cluster: Vec<f64> = (0..50).map(|i| if i < 25 { pf } else { q }).collect();
+    // near-degenerate: one node holds 99.9% of the mass
+    let n = 20;
+    let rest = 0.001 / (n - 1) as f64;
+    let mut degenerate = vec![rest; n];
+    degenerate[7] = 0.999;
+    let sum: f64 = degenerate.iter().sum();
+    for d in degenerate.iter_mut() {
+        *d /= sum;
+    }
+    vec![
+        ("uniform-200", uniform),
+        ("two-cluster-skew", two_cluster),
+        ("near-degenerate", degenerate),
+    ]
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "release-only: large sample counts (CI stat-tests job)")]
+fn alias_sampler_reproduces_target_distributions() {
+    for (label, p) in target_distributions() {
+        let alias = AliasTable::new(&p).unwrap();
+        let trials = 400_000;
+        let counts = counts_from(p.len(), trials, 0xA11A5, |rng| alias.sample(rng));
+        assert_gof(&format!("alias/{label}"), &counts, &p);
+    }
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "release-only: large sample counts (CI stat-tests job)")]
+fn fenwick_sampler_reproduces_target_distributions() {
+    for (label, p) in target_distributions() {
+        let fen = FenwickSampler::new(&p).unwrap();
+        let trials = 400_000;
+        let counts = counts_from(p.len(), trials, 0xFE9C, |rng| fen.sample(rng));
+        assert_gof(&format!("fenwick/{label}"), &counts, &p);
+    }
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "release-only: large sample counts (CI stat-tests job)")]
+fn fenwick_sampler_tracks_point_updates() {
+    // after incremental re-weighting the tree must sample the *updated*
+    // distribution, not the build-time one
+    let n = 64;
+    let mut fen = FenwickSampler::new(&vec![1.0; n]).unwrap();
+    let mut rng = Rng::new(0x0BEEF);
+    for _ in 0..5_000 {
+        let i = rng.usize_below(n);
+        fen.set(i, rng.uniform() * 4.0);
+    }
+    let total: f64 = fen.weights().iter().sum();
+    let p: Vec<f64> = fen.weights().iter().map(|w| w / total).collect();
+    let counts = counts_from(n, 400_000, 0xF00D, |rng| fen.sample(rng));
+    assert_gof("fenwick/after-updates", &counts, &p);
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "release-only: large sample counts (CI stat-tests job)")]
+fn fenwick_agrees_with_linear_oracle_on_shared_variates() {
+    // draw-for-draw agreement: on the same uniform variate the Fenwick
+    // descent and the exact CDF scan pick the same index (up to fp ties
+    // on interval boundaries, which must be vanishingly rare and adjacent
+    // in CDF order)
+    for (label, p) in target_distributions() {
+        let fen = FenwickSampler::new(&p).unwrap();
+        let total = fen.total();
+        let mut rng = Rng::new(0x0DD5);
+        let trials = 200_000;
+        let mut mismatches = 0u64;
+        for _ in 0..trials {
+            let u = rng.uniform();
+            let a = linear_route(&p, u);
+            let b = fen.sample_at(u * total);
+            if a != b {
+                mismatches += 1;
+                // any fp disagreement must sit on an interval boundary:
+                // the cumulative masses up to the two answers bracket u
+                let lo = a.min(b);
+                let hi = a.max(b);
+                let gap: f64 = p[lo + 1..=hi].iter().sum::<f64>() - p[hi];
+                assert!(
+                    gap.abs() < 1e-9,
+                    "{label}: non-adjacent disagreement {a} vs {b} at u={u}"
+                );
+            }
+        }
+        assert!(
+            (mismatches as f64) < trials as f64 * 1e-3,
+            "{label}: {mismatches} oracle disagreements in {trials} draws"
+        );
+    }
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "release-only: large sample counts (CI stat-tests job)")]
+fn adaptive_reweighting_matches_exact_softmax_tilt() {
+    // p_i ∝ base_i · exp(−γ·X_i): the Fenwick policy's probabilities after
+    // incremental observations must equal the closed form to fp precision,
+    // and its routed samples must pass goodness of fit against it
+    let base = vec![
+        0.05, 0.15, 0.02, 0.08, 0.20, 0.10, 0.05, 0.05, 0.25, 0.05,
+    ];
+    let gamma = 0.7;
+    let lens: [u32; 10] = [0, 3, 1, 0, 8, 2, 0, 5, 1, 4];
+    let mut policy = FenwickAdaptivePolicy::new(base.clone(), gamma).unwrap();
+    for (i, &l) in lens.iter().enumerate() {
+        policy.observe_node(i, l);
+    }
+    // exact softmax-tilted distribution
+    let w: Vec<f64> = base
+        .iter()
+        .zip(lens.iter())
+        .map(|(&b, &x)| b * (-gamma * x as f64).exp())
+        .collect();
+    let z: f64 = w.iter().sum();
+    let exact: Vec<f64> = w.iter().map(|wi| wi / z).collect();
+    for i in 0..base.len() {
+        assert!(
+            (policy.prob_of(i) - exact[i]).abs() < 1e-12,
+            "node {i}: {} vs exact {}",
+            policy.prob_of(i),
+            exact[i]
+        );
+    }
+    let counts = counts_from(base.len(), 400_000, 0xADA7, |rng| policy.route(rng));
+    assert_gof("fenwick-adaptive/softmax-tilt", &counts, &exact);
+}
+
+#[test]
+fn adaptive_fenwick_and_exact_policies_realize_the_same_distribution() {
+    // the O(log n) policy and the O(n) oracle must stay in lockstep
+    // through a churn of queue-length observations
+    let n = 40;
+    let base = vec![1.0 / n as f64; n];
+    let mut fast = FenwickAdaptivePolicy::new(base.clone(), 0.4).unwrap();
+    let mut exact = AdaptiveQueuePolicy::new(base, 0.4).unwrap();
+    let mut lens = vec![0u32; n];
+    let mut rng = Rng::new(0xC0FFEE);
+    for _ in 0..2_000 {
+        let i = rng.usize_below(n);
+        lens[i] = rng.usize_below(12) as u32;
+        fast.observe_node(i, lens[i]);
+        exact.observe(&lens);
+        let j = rng.usize_below(n);
+        assert!(
+            (fast.prob_of(j) - exact.prob_of(j)).abs() < 1e-10,
+            "node {j} after churn: {} vs {}",
+            fast.prob_of(j),
+            exact.prob_of(j)
+        );
+    }
+    // full-distribution agreement at the end of the churn
+    let pf = fast.probs();
+    let pe = exact.probs();
+    for i in 0..n {
+        assert!((pf[i] - pe[i]).abs() < 1e-10, "node {i}: {} vs {}", pf[i], pe[i]);
+    }
+}
+
+#[test]
+fn linear_route_oracle_fallthrough_returns_last_positive_mass_node() {
+    // the historical bug: trailing zero-probability nodes and u near 1
+    // made the scan fall through to the last index even with p[last] = 0
+    let p = [0.3, 0.7 - 1e-17, 0.0, 0.0, 0.0];
+    for u in [1.0 - 1e-17, 0.9999999999999999] {
+        let i = linear_route(&p, u);
+        assert_eq!(i, 1, "u={u} must land on the last positive-mass node");
+        assert!(p[i] > 0.0);
+    }
+    // interior zeros are skipped in normal operation too
+    let p = [0.5, 0.0, 0.5];
+    let mut rng = Rng::new(0x10E);
+    for _ in 0..10_000 {
+        let i = linear_route(&p, rng.uniform());
+        assert_ne!(i, 1, "zero-mass node selected");
+    }
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "release-only: large sample counts (CI stat-tests job)")]
+fn linear_route_oracle_reproduces_target_distributions() {
+    // the oracle itself must pass its own harness — otherwise it can't
+    // anchor the fast samplers
+    for (label, p) in target_distributions() {
+        let counts = counts_from(p.len(), 400_000, 0x11EA8, |rng| {
+            linear_route(&p, rng.uniform())
+        });
+        assert_gof(&format!("linear/{label}"), &counts, &p);
+    }
+}
