@@ -1,0 +1,108 @@
+//! Engine throughput: the monolithic heap oracle vs the sharded SoA
+//! engine, full replications (construction + run, exactly what a sweep
+//! cell pays per seed).
+//!
+//! Doubles as the CI regression gate: `--assert-speedup X` exits nonzero
+//! unless the sequential sharded engine beats the heap engine by at least
+//! X× at n = 10^5, S = 8 (the ISSUE-3 acceptance floor is 2×).  At that
+//! scale the heap engine allocates ~n `VecDeque`s and walks a single
+//! ~megabyte event heap, while the sharded engine runs on five flat
+//! arrays and eight L2-resident calendars.
+//!
+//!     cargo bench --bench bench_engine -- --quick --assert-speedup 2
+
+use fedqueue::coordinator::StaticPolicy;
+use fedqueue::simulator::{
+    run_with_policy, EngineConfig, ServiceDist, ServiceFamily, SimConfig,
+};
+use fedqueue::util::bench::{black_box, Bencher};
+use fedqueue::util::cli::Args;
+
+fn cfg(n: usize, c: usize, steps: u64, engine: EngineConfig) -> SimConfig {
+    let rates: Vec<f64> = (0..n).map(|i| if i < n / 2 { 4.0 } else { 1.0 }).collect();
+    SimConfig {
+        seed: 1,
+        engine,
+        ..SimConfig::new(
+            vec![1.0 / n as f64; n],
+            ServiceDist::from_rates(&rates, ServiceFamily::Exponential),
+            c,
+            steps,
+        )
+    }
+}
+
+/// One full replication (policy + engine construction + run), per-second
+/// step throughput.
+fn bench_replication(b: &Bencher, name: &str, base: &SimConfig) -> f64 {
+    let steps = base.steps;
+    let r = b.run(name, || {
+        let policy = Box::new(StaticPolicy::new(base.p.clone()).unwrap());
+        let res = run_with_policy(base.clone(), policy).unwrap();
+        black_box(res.tau_max);
+    });
+    let per_sec = r.throughput(steps as f64);
+    println!("    -> {:.2} M steps/s", per_sec / 1e6);
+    per_sec
+}
+
+fn main() {
+    // `cargo bench` hands harness=false binaries an extra `--bench` flag;
+    // accept it as a no-value flag so it can't eat the next option.  A
+    // parse failure is fatal — silently dropping args here would disable
+    // the CI regression gate while staying green.
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv, &["quick", "bench"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("bench_engine: {e}");
+            std::process::exit(2);
+        }
+    };
+    let b = if args.has("quick") { Bencher::quick() } else { Bencher::default() };
+    println!("# bench_engine — heap vs sharded replication throughput");
+
+    let mut gate: Option<(f64, f64)> = None; // (heap, sharded S=8) at n = 1e5
+    for (n, c, steps) in [
+        (10_000usize, 10_000usize, 20_000u64),
+        (100_000, 100_000, 25_000),
+    ] {
+        let heap = bench_replication(
+            &b,
+            &format!("engine/heap/n={n}"),
+            &cfg(n, c, steps, EngineConfig::heap()),
+        );
+        let s1 = bench_replication(
+            &b,
+            &format!("engine/sharded-S1/n={n}"),
+            &cfg(n, c, steps, EngineConfig::sharded(1, 1)),
+        );
+        let s8 = bench_replication(
+            &b,
+            &format!("engine/sharded-S8/n={n}"),
+            &cfg(n, c, steps, EngineConfig::sharded(8, 1)),
+        );
+        println!(
+            "    == n={n}: sharded S=1 {:.2}x, S=8 {:.2}x over heap",
+            s1 / heap,
+            s8 / heap
+        );
+        if n == 100_000 {
+            gate = Some((heap, s8));
+        }
+    }
+
+    if let Some(min) = args.get("assert-speedup") {
+        let min: f64 = min.parse().expect("--assert-speedup expects a number");
+        let (heap, sharded) = gate.expect("n = 100_000 case always runs");
+        let speedup = sharded / heap;
+        if speedup < min {
+            eprintln!(
+                "FAIL: sharded engine only {speedup:.2}x over heap at n=100_000, S=8 \
+                 (required {min}x)"
+            );
+            std::process::exit(1);
+        }
+        println!("OK: sharded engine {speedup:.2}x over heap at n=100_000, S=8 (>= {min}x)");
+    }
+}

@@ -15,7 +15,7 @@ fn main() {
     for (n, c) in [(10usize, 1000usize), (100, 10), (100, 100), (100, 1000), (1000, 1000)] {
         let network = net(n);
         b.run(&format!("buzen/n={n}/C={c}"), || {
-            black_box(network.buzen(c).g[c]);
+            black_box(network.buzen(c).log_g[c]);
         });
         b.run(&format!("mi_analysis/n={n}/C={c}"), || {
             black_box(network.mi_analysis(c, MiEstimator::Throughput).m[0]);

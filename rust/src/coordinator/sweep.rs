@@ -16,8 +16,24 @@
 //! replication runs on its own RNG stream derived from
 //! `stream_seed(base_seed, [cell_id, seed_index])`, workers write results
 //! into a slot indexed by replication id, and the reduction walks slots
-//! in (cell, seed) order — so the aggregated JSON is bit-identical
-//! regardless of thread count or scheduling order.
+//! in (cell, seed) order — so the aggregated JSON (its deterministic
+//! core; see [`SweepReport::to_json_deterministic`]) is bit-identical
+//! regardless of thread count or scheduling order.  Engine choice never
+//! perturbs results either: the heap and sharded simulator engines are
+//! bit-identical on a shared seed, so the per-cell scheduler is free to
+//! pick whichever runs fastest.
+//!
+//! Per-cell scheduling: the scheduler splits the worker budget between
+//! *replication-level* and *shard-level* parallelism.  Cells with
+//! `clients >= big_n` (default 100 000) are memory-bound — they run one
+//! replication at a time on the sharded engine with the whole thread
+//! budget inside the replication; smaller cells are heap-bound — their
+//! seeds fan out across the worker pool as before.  `engine = "heap"` or
+//! `"sharded"` overrides the auto split.
+//!
+//! Each simulate replication also reports **perf metrics** (events/sec,
+//! peak RSS) so BENCH trajectories capture scale, not just wall time.
+//! They are timing-derived and live outside the deterministic JSON core.
 //!
 //! Grid TOML schema:
 //!
@@ -29,6 +45,9 @@
 //! base_seed = 42             # root of every replication stream
 //! threads = 4                # worker threads (0 = one per core)
 //! out = "results/sweep.json" # default output (CLI --out overrides)
+//! engine = "auto"            # auto | heap | sharded (per-cell scheduler)
+//! shards = 0                 # sharded-engine shard count (0 = auto)
+//! big_n = 100000             # clients >= big_n -> shard-level threads
 //!
 //! [grid]                     # every axis is a list; cells = cartesian
 //! clients = [100, 1000]      # product x policies (x algos in train mode)
@@ -55,8 +74,11 @@ use super::experiment::{two_cluster_n_fast, two_cluster_p, two_cluster_rates};
 use super::policy::{optimal_two_cluster, PolicyCtx, PolicyRegistry, SamplingPolicy, StaticPolicy};
 use crate::coordinator::Experiment;
 use crate::runtime::BackendKind;
-use crate::simulator::{run_with_policy, ServiceDist, ServiceFamily, SimConfig};
+use crate::simulator::{
+    run_with_policy, EngineConfig, EngineKind, ServiceDist, ServiceFamily, SimConfig,
+};
 use crate::util::json::Json;
+use crate::util::mem::peak_rss_mib;
 use crate::util::rng::stream_seed;
 use crate::util::stats::Welford;
 use crate::util::toml::Doc;
@@ -84,6 +106,18 @@ impl std::str::FromStr for SweepMode {
             "train" => Ok(SweepMode::Train),
             other => Err(format!("unknown sweep mode '{other}' (simulate|train)")),
         }
+    }
+}
+
+/// Validate a sweep-level engine selector: "auto" (per-cell scheduler
+/// decides) or any concrete [`EngineKind`] name.  The single authority
+/// shared by the TOML parser and the `--engine` CLI override, so the two
+/// surfaces cannot drift.
+pub fn validate_engine_choice(name: &str) -> Result<(), String> {
+    if name == "auto" || name.parse::<EngineKind>().is_ok() {
+        Ok(())
+    } else {
+        Err(format!("engine = '{name}' must be auto, heap, or sharded"))
     }
 }
 
@@ -219,6 +253,14 @@ pub struct SweepSpec {
     pub base_seed: u64,
     pub threads: usize,
     pub out: String,
+    /// engine selection: "auto" (scheduler decides per cell by `big_n`),
+    /// "heap", or "sharded"
+    pub engine: String,
+    /// sharded-engine shard count (0 = auto)
+    pub shards: usize,
+    /// cells with `clients >= big_n` get shard-level threads instead of
+    /// seed-level fan-out
+    pub big_n: u64,
     pub cells: Vec<SweepCell>,
     pub train: TrainKnobs,
 }
@@ -235,7 +277,10 @@ impl SweepSpec {
         for (table, keys) in &doc.tables {
             let known: &[&str] = match table.as_str() {
                 "" => &[],
-                "sweep" => &["name", "mode", "seeds", "base_seed", "threads", "out"],
+                "sweep" => &[
+                    "name", "mode", "seeds", "base_seed", "threads", "out", "engine", "shards",
+                    "big_n",
+                ],
                 "grid" => &[
                     "clients",
                     "concurrency",
@@ -275,6 +320,16 @@ impl SweepSpec {
         let threads = doc.i64_or("sweep", "threads", 0);
         if threads < 0 {
             return Err(format!("[sweep] threads = {threads} must be >= 0"));
+        }
+        let engine = doc.str_or("sweep", "engine", "auto");
+        validate_engine_choice(&engine).map_err(|e| format!("[sweep] {e}"))?;
+        let shards = doc.i64_or("sweep", "shards", 0);
+        if shards < 0 {
+            return Err(format!("[sweep] shards = {shards} must be >= 0"));
+        }
+        let big_n = doc.i64_or("sweep", "big_n", 100_000);
+        if big_n < 0 {
+            return Err(format!("[sweep] big_n = {big_n} must be >= 0"));
         }
 
         // grid axes: every key is a homogeneous list; absent = one default
@@ -452,9 +507,55 @@ impl SweepSpec {
             base_seed: doc.i64_or("sweep", "base_seed", 0) as u64,
             threads: threads as usize,
             out: doc.str_or("sweep", "out", "results/sweep.json"),
+            engine,
+            shards: shards as usize,
+            big_n: big_n as u64,
             cells,
             train,
         })
+    }
+
+    /// The engine a cell's replications run on — a pure function of the
+    /// spec and the cell (NOT of the worker-thread count), so the choice
+    /// never perturbs the deterministic report.  `worker_threads` only
+    /// sizes the shard-level pool of big-n cells.
+    pub fn engine_for_cell(&self, cell: &SweepCell, worker_threads: usize) -> EngineConfig {
+        if self.mode == SweepMode::Train {
+            // the DL driver holds the heap engine directly
+            return EngineConfig::heap();
+        }
+        let n = cell.scenario.clients as u64;
+        let kind = match self.engine.as_str() {
+            "heap" => EngineKind::Heap,
+            "sharded" => EngineKind::Sharded,
+            // auto: big-n cells are memory-bound -> sharded SoA engine
+            _ => {
+                if n >= self.big_n {
+                    EngineKind::Sharded
+                } else {
+                    EngineKind::Heap
+                }
+            }
+        };
+        match kind {
+            EngineKind::Heap => EngineConfig::heap(),
+            EngineKind::Sharded => {
+                // big-n cells get the whole worker budget as shard threads
+                // (their replications run one at a time); small sharded
+                // cells stay sequential and parallelize over seeds.  Cap
+                // at the RESOLVED shard count up front: the engine clamps
+                // threads to shards anyway, and classifying a shards=1
+                // cell as "wide" would serialize its seeds for nothing.
+                let shard_cap =
+                    EngineConfig::sharded(self.shards, 1).resolve_shards(cell.scenario.clients);
+                let threads = if n >= self.big_n {
+                    worker_threads.max(1).min(shard_cap)
+                } else {
+                    1
+                };
+                EngineConfig::sharded(self.shards, threads)
+            }
+        }
     }
 }
 
@@ -489,6 +590,10 @@ impl ScenarioPoint {
 #[derive(Clone, Debug, Default)]
 pub struct RepResult {
     pub metrics: BTreeMap<String, f64>,
+    /// timing/host-dependent scale metrics (events/sec, peak RSS) — kept
+    /// apart from `metrics` so the deterministic JSON core stays
+    /// bit-identical across thread counts and hosts
+    pub perf: BTreeMap<String, f64>,
     /// (step, virtual_time, train_loss, val_loss, val_acc)
     pub curve: Vec<(u64, f64, f64, f64, f64)>,
 }
@@ -497,7 +602,12 @@ pub struct RepResult {
 #[derive(Clone, Debug)]
 pub struct CellReport {
     pub cell: SweepCell,
+    /// engine label the scheduler picked ("heap" / "sharded(S=8)")
+    pub engine: String,
     pub metrics: BTreeMap<String, Welford>,
+    /// perf aggregates (events/sec, peak RSS MiB) — excluded from the
+    /// deterministic JSON core
+    pub perf: BTreeMap<String, Welford>,
     /// per eval point: (step, metric name -> accumulator)
     pub curve: Vec<(u64, BTreeMap<String, Welford>)>,
 }
@@ -515,6 +625,7 @@ pub struct SweepReport {
 fn simulate_replication(
     cell: &SweepCell,
     cached_p: Option<&[f64]>,
+    engine: EngineConfig,
     seed: u64,
 ) -> Result<RepResult, String> {
     let s = &cell.scenario;
@@ -526,6 +637,7 @@ fn simulate_replication(
     };
     let cfg = SimConfig {
         seed,
+        engine,
         ..SimConfig::new(
             policy.probs(),
             ServiceDist::from_rates(&s.rates(), s.service),
@@ -533,7 +645,9 @@ fn simulate_replication(
             s.steps,
         )
     };
+    let t0 = std::time::Instant::now();
     let res = run_with_policy(cfg, policy)?;
+    let wall = t0.elapsed().as_secs_f64();
     let nf = s.n_fast();
     let n = s.clients;
     let cluster_queue = |range: std::ops::Range<usize>| -> f64 {
@@ -554,7 +668,18 @@ fn simulate_replication(
     m.insert("tau_c".into(), res.tau_c);
     m.insert("tau_max".into(), res.tau_max as f64);
     m.insert("total_time".into(), res.total_time);
-    Ok(RepResult { metrics: m, curve: Vec::new() })
+    // scale trajectory: wall-clock throughput + memory high-water mark
+    // (timing-derived -> perf, never the deterministic metrics map).
+    // peak_rss_mib is the PROCESS-wide monotone watermark — an upper
+    // bound that absorbs earlier/concurrent cells; see util::mem.
+    let mut perf = BTreeMap::new();
+    perf.insert("wall_secs".into(), wall);
+    perf.insert(
+        "events_per_sec".into(),
+        s.steps as f64 / wall.max(f64::MIN_POSITIVE),
+    );
+    perf.insert("peak_rss_mib".into(), peak_rss_mib());
+    Ok(RepResult { metrics: m, perf, curve: Vec::new() })
 }
 
 fn train_replication(cell: &SweepCell, knobs: &TrainKnobs, seed: u64) -> Result<RepResult, String> {
@@ -591,20 +716,21 @@ fn train_replication(cell: &SweepCell, knobs: &TrainKnobs, seed: u64) -> Result<
         .iter()
         .map(|c| (c.step, c.virtual_time, c.train_loss, c.val_loss, c.val_accuracy))
         .collect();
-    Ok(RepResult { metrics: m, curve })
+    Ok(RepResult { metrics: m, perf: BTreeMap::new(), curve })
 }
 
 fn run_replication(
     spec: &SweepSpec,
     cell: &SweepCell,
     cached_p: Option<&[f64]>,
+    engine: EngineConfig,
     seed_idx: u64,
 ) -> Result<RepResult, String> {
     // one independent stream per (cell, seed index): deterministic and
     // scheduling-free by construction
     let seed = stream_seed(spec.base_seed, &[cell.id as u64, seed_idx]);
     match spec.mode {
-        SweepMode::Simulate => simulate_replication(cell, cached_p, seed),
+        SweepMode::Simulate => simulate_replication(cell, cached_p, engine, seed),
         SweepMode::Train => train_replication(cell, &spec.train, seed),
     }
 }
@@ -626,8 +752,15 @@ fn precompute_cell_distributions(spec: &SweepSpec) -> Result<Vec<Option<Vec<f64>
     Ok(out)
 }
 
-/// Execute every replication of the grid across `spec.threads` OS worker
-/// threads (0 = one per available core) and reduce in (cell, seed) order.
+/// Execute every replication of the grid and reduce in (cell, seed) order.
+///
+/// The per-cell scheduler splits the `spec.threads` worker budget (0 = one
+/// per available core): replications whose engine runs sequentially
+/// ("narrow" cells) fan out across the worker pool; replications whose
+/// sharded engine owns its own thread pool ("wide" big-n cells) run one at
+/// a time so the machine is never oversubscribed.  Results land in slots
+/// indexed by replication id either way, so the reduction — and the
+/// deterministic report — is identical under every split.
 pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
     let threads = if spec.threads == 0 {
         std::thread::available_parallelism()
@@ -638,10 +771,19 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
     };
     let total = spec.cells.len() * spec.seeds as usize;
     let cell_p = precompute_cell_distributions(spec)?;
-    let next = AtomicUsize::new(0);
+    let engines: Vec<EngineConfig> = spec
+        .cells
+        .iter()
+        .map(|c| spec.engine_for_cell(c, threads))
+        .collect();
     let failed = AtomicBool::new(false);
     let slots: Mutex<Vec<Option<Result<RepResult, String>>>> =
         Mutex::new(vec![None; total]);
+    // phase 1: narrow replications across the worker pool
+    let narrow: Vec<usize> = (0..total)
+        .filter(|r| engines[r / spec.seeds as usize].threads <= 1)
+        .collect();
+    let next = AtomicUsize::new(0);
     std::thread::scope(|scope| {
         for _ in 0..threads.max(1) {
             scope.spawn(|| loop {
@@ -650,13 +792,20 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
                 if failed.load(Ordering::Relaxed) {
                     break;
                 }
-                let r = next.fetch_add(1, Ordering::Relaxed);
-                if r >= total {
+                let k = next.fetch_add(1, Ordering::Relaxed);
+                if k >= narrow.len() {
                     break;
                 }
+                let r = narrow[k];
                 let cell = &spec.cells[r / spec.seeds as usize];
                 let seed_idx = (r % spec.seeds as usize) as u64;
-                let out = run_replication(spec, cell, cell_p[cell.id].as_deref(), seed_idx);
+                let out = run_replication(
+                    spec,
+                    cell,
+                    cell_p[cell.id].as_deref(),
+                    engines[cell.id],
+                    seed_idx,
+                );
                 if out.is_err() {
                     failed.store(true, Ordering::Relaxed);
                 }
@@ -664,6 +813,26 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
             });
         }
     });
+    // phase 2: wide (big-n sharded) replications sequentially — each one
+    // spends the whole thread budget inside its engine
+    for r in (0..total).filter(|r| engines[r / spec.seeds as usize].threads > 1) {
+        if failed.load(Ordering::Relaxed) {
+            break;
+        }
+        let cell = &spec.cells[r / spec.seeds as usize];
+        let seed_idx = (r % spec.seeds as usize) as u64;
+        let out = run_replication(
+            spec,
+            cell,
+            cell_p[cell.id].as_deref(),
+            engines[cell.id],
+            seed_idx,
+        );
+        if out.is_err() {
+            failed.store(true, Ordering::Relaxed);
+        }
+        slots.lock().unwrap()[r] = Some(out);
+    }
     let slots = slots.into_inner().map_err(|e| e.to_string())?;
     // surface the earliest recorded failure first — after an early abort
     // the later slots are legitimately empty
@@ -682,6 +851,7 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
     let mut cells = Vec::with_capacity(spec.cells.len());
     for cell in &spec.cells {
         let mut metrics: BTreeMap<String, Welford> = BTreeMap::new();
+        let mut perf: BTreeMap<String, Welford> = BTreeMap::new();
         let mut curve: Vec<(u64, BTreeMap<String, Welford>)> = Vec::new();
         let mut curve_len = usize::MAX;
         let mut reps: Vec<&RepResult> = Vec::with_capacity(spec.seeds as usize);
@@ -698,6 +868,12 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
         for rep in &reps {
             for (k, &v) in &rep.metrics {
                 let w = metrics.entry(k.clone()).or_default();
+                if v.is_finite() {
+                    w.push(v);
+                }
+            }
+            for (k, &v) in &rep.perf {
+                let w = perf.entry(k.clone()).or_default();
                 if v.is_finite() {
                     w.push(v);
                 }
@@ -724,7 +900,14 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
                 curve.push((step, point));
             }
         }
-        cells.push(CellReport { cell: cell.clone(), metrics, curve });
+        let e = engines[cell.id];
+        let engine = match e.kind {
+            EngineKind::Heap => "heap".to_string(),
+            EngineKind::Sharded => {
+                format!("sharded(S={})", e.resolve_shards(cell.scenario.clients))
+            }
+        };
+        cells.push(CellReport { cell: cell.clone(), engine, metrics, perf, curve });
     }
     Ok(SweepReport {
         name: spec.name.clone(),
@@ -756,11 +939,23 @@ fn welford_json(w: &Welford) -> Json {
 }
 
 impl SweepReport {
-    /// Render the aggregate as JSON.  Key order (BTreeMap) and f64
-    /// formatting are both deterministic, and nothing scheduling- or
-    /// host-dependent (thread count, timestamps) is included — the
-    /// serialized report is the determinism test's comparison unit.
+    /// Render the full aggregate as JSON, including the per-cell `perf`
+    /// block (events/sec, peak RSS) for BENCH trajectories.  Perf values
+    /// are timing-derived and host-dependent; use
+    /// [`Self::to_json_deterministic`] for bit-stable comparisons.
     pub fn to_json(&self) -> Json {
+        self.render_json(true)
+    }
+
+    /// Render the deterministic core only.  Key order (BTreeMap) and f64
+    /// formatting are both deterministic, and nothing scheduling- or
+    /// host-dependent (thread count, timestamps, perf) is included — this
+    /// is the determinism test's comparison unit.
+    pub fn to_json_deterministic(&self) -> Json {
+        self.render_json(false)
+    }
+
+    fn render_json(&self, include_perf: bool) -> Json {
         let mut root = BTreeMap::new();
         root.insert("name".to_string(), Json::Str(self.name.clone()));
         root.insert(
@@ -801,6 +996,11 @@ impl SweepReport {
                 obj.insert("label".to_string(), Json::Str(c.cell.label()));
                 obj.insert("policy".to_string(), Json::Str(c.cell.policy.clone()));
                 obj.insert("algo".to_string(), Json::Str(c.cell.algo.clone()));
+                if include_perf {
+                    // provenance, not result: the engines are bit-identical,
+                    // so the label lives outside the deterministic core
+                    obj.insert("engine".to_string(), Json::Str(c.engine.clone()));
+                }
                 obj.insert("scenario".to_string(), Json::Obj(sc));
                 obj.insert(
                     "metrics".to_string(),
@@ -811,6 +1011,17 @@ impl SweepReport {
                             .collect(),
                     ),
                 );
+                if include_perf && !c.perf.is_empty() {
+                    obj.insert(
+                        "perf".to_string(),
+                        Json::Obj(
+                            c.perf
+                                .iter()
+                                .map(|(k, w)| (k.clone(), welford_json(w)))
+                                .collect(),
+                        ),
+                    );
+                }
                 if !c.curve.is_empty() {
                     obj.insert(
                         "curve".to_string(),
@@ -971,9 +1182,10 @@ policies = ["uniform", "adaptive"]
     #[test]
     fn replication_streams_are_independent() {
         let spec = SweepSpec::from_toml(GRID).unwrap();
-        let a = run_replication(&spec, &spec.cells[0], None, 0).unwrap();
-        let b = run_replication(&spec, &spec.cells[0], None, 1).unwrap();
-        let c = run_replication(&spec, &spec.cells[0], None, 0).unwrap();
+        let eng = EngineConfig::heap();
+        let a = run_replication(&spec, &spec.cells[0], None, eng, 0).unwrap();
+        let b = run_replication(&spec, &spec.cells[0], None, eng, 1).unwrap();
+        let c = run_replication(&spec, &spec.cells[0], None, eng, 0).unwrap();
         assert_ne!(
             a.metrics["total_time"].to_bits(),
             b.metrics["total_time"].to_bits(),
@@ -983,6 +1195,82 @@ policies = ["uniform", "adaptive"]
             a.metrics["total_time"].to_bits(),
             c.metrics["total_time"].to_bits(),
             "same replication must be reproducible"
+        );
+    }
+
+    #[test]
+    fn scheduler_splits_threads_between_seeds_and_shards() {
+        let mut spec = SweepSpec::from_toml(GRID).unwrap();
+        assert_eq!(spec.engine, "auto");
+        assert_eq!(spec.big_n, 100_000);
+        // auto: small cells stay on the heap engine
+        let e = spec.engine_for_cell(&spec.cells[0], 4);
+        assert_eq!(e.kind, EngineKind::Heap);
+        // lowering big_n flips them to wide sharded cells owning the
+        // budget (capped by the resolved shard count)
+        spec.big_n = 1;
+        spec.shards = 8;
+        let e = spec.engine_for_cell(&spec.cells[0], 4);
+        assert_eq!(e.kind, EngineKind::Sharded);
+        assert_eq!(e.threads, 4);
+        // a single-shard cell can't use shard threads — it must stay
+        // narrow so its seeds fan out across the worker pool instead
+        spec.shards = 1;
+        let e = spec.engine_for_cell(&spec.cells[0], 4);
+        assert_eq!(e.kind, EngineKind::Sharded);
+        assert_eq!(e.threads, 1, "shard clamp must keep shards=1 cells narrow");
+        spec.shards = 0;
+        // explicit heap/sharded overrides win over auto
+        spec.engine = "heap".into();
+        assert_eq!(spec.engine_for_cell(&spec.cells[0], 4).kind, EngineKind::Heap);
+        spec.engine = "sharded".into();
+        spec.big_n = 100_000;
+        let e = spec.engine_for_cell(&spec.cells[0], 4);
+        assert_eq!(e.kind, EngineKind::Sharded);
+        assert_eq!(e.threads, 1, "small sharded cells parallelize over seeds");
+        // engine strings are validated at parse time
+        let err = SweepSpec::from_toml("[sweep]\nengine = \"gpu\"").unwrap_err();
+        assert!(err.contains("engine"), "{err}");
+    }
+
+    #[test]
+    fn engine_choice_never_changes_the_deterministic_report() {
+        // the same grid on heap, sequential sharded, and wide (threaded)
+        // sharded engines must aggregate to the identical deterministic
+        // JSON — the sweep-level face of the engine equivalence contract
+        let render = |engine: &str, big_n: u64| -> String {
+            let mut spec = SweepSpec::from_toml(GRID).unwrap();
+            spec.engine = engine.to_string();
+            spec.big_n = big_n;
+            spec.shards = 3;
+            run_sweep(&spec).unwrap().to_json_deterministic().render()
+        };
+        let heap = render("heap", 100_000);
+        assert_eq!(heap, render("sharded", 100_000), "sequential sharded");
+        assert_eq!(heap, render("sharded", 1), "wide sharded (shard threads)");
+    }
+
+    #[test]
+    fn perf_metrics_reported_but_not_in_deterministic_core() {
+        let spec = SweepSpec::from_toml(GRID).unwrap();
+        let report = run_sweep(&spec).unwrap();
+        for c in &report.cells {
+            assert_eq!(c.engine, "heap");
+            let eps = &c.perf["events_per_sec"];
+            assert_eq!(eps.count(), 3, "{}", c.cell.label());
+            assert!(eps.mean() > 0.0);
+            assert!(c.perf.contains_key("wall_secs"));
+        }
+        let full = report.to_json().render();
+        assert!(full.contains("events_per_sec"));
+        let core = report.to_json_deterministic().render();
+        assert!(!core.contains("events_per_sec"));
+        assert!(!core.contains("wall_secs"));
+        assert!(full.contains("\"engine\""), "full JSON carries provenance");
+        assert!(
+            !core.contains("\"engine\""),
+            "engine label is provenance, not a result — the core must be \
+             invariant across engine choices"
         );
     }
 }

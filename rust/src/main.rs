@@ -18,7 +18,7 @@ use fedqueue::figures;
 use fedqueue::fl::StrategyRegistry;
 use fedqueue::queueing::ClosedNetwork;
 use fedqueue::runtime::{BackendKind, Manifest};
-use fedqueue::simulator::{run as sim_run, ServiceDist, ServiceFamily, SimConfig};
+use fedqueue::simulator::{run as sim_run, EngineConfig, ServiceDist, ServiceFamily, SimConfig};
 use fedqueue::util::cli::Args;
 use fedqueue::util::table::Series;
 use std::path::Path;
@@ -51,9 +51,12 @@ COMMANDS
             --favano-interval D --optimal-p (= --policy optimal)
             --seed S --out results/train.csv
   simulate  --n N --c C --steps N --mu-fast F --n-fast N --p-fast F --seed S
+            --engine heap|sharded --shards S --shard-threads T
+            (engines are bit-identical; sharded scales to n = 10^6 nodes)
   sweep     --grid scenarios/sweep_fig6.toml [--threads N] [--seeds S]
-            [--out results/sweep.json]   multi-seed grid -> mean ± CI JSON
-            + error-band CSV (see README for the grid TOML schema)
+            [--engine auto|heap|sharded] [--out results/sweep.json]
+            multi-seed grid -> mean ± CI JSON (+ per-cell events/sec and
+            peak-RSS perf block) + error-band CSV (see README schema)
   bounds    --c C --mu-fast F --n N --n-fast N [--physical-time U]
   figure    <fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|table1|table2>
             [--out DIR] [--quick]
@@ -214,8 +217,14 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
     }
     let p: Vec<f64> = (0..n).map(|i| if i < n_fast { p_fast } else { q }).collect();
     let rates: Vec<f64> = (0..n).map(|i| if i < n_fast { mu_fast } else { 1.0 }).collect();
+    let engine = EngineConfig {
+        kind: args.str_or("engine", "heap").parse()?,
+        shards: args.usize_or("shards", 0)?,
+        threads: args.usize_or("shard-threads", 1)?,
+    };
     let cfg = SimConfig {
         seed: args.u64_or("seed", 0)?,
+        engine,
         ..SimConfig::new(p.clone(), ServiceDist::from_rates(&rates, family), c, steps)
     };
     let res = sim_run(cfg)?;
@@ -249,6 +258,11 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         .ok_or("sweep: --grid scenarios/NAME.toml is required")?;
     let mut spec = fedqueue::coordinator::SweepSpec::from_path(Path::new(grid))?;
     spec.threads = args.usize_or("threads", spec.threads)?;
+    if let Some(engine) = args.get("engine") {
+        fedqueue::coordinator::sweep::validate_engine_choice(engine)
+            .map_err(|e| format!("--engine: {e}"))?;
+        spec.engine = engine.to_string();
+    }
     let seeds = args.u64_or("seeds", spec.seeds)?;
     if seeds == 0 {
         return Err("--seeds must be >= 1".into());

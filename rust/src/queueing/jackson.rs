@@ -15,11 +15,29 @@
 //! at (at most) the total departure rate.
 //!
 //! Numerical care: θ is rescaled by its maximum before convolution (the
-//! paper does the same — it only changes the normalization constant), so
-//! `g[c]` stays in f64 range even at C = 1000 with extreme speed ratios;
-//! the scale factor re-enters only in the (rate-valued) throughput.
+//! paper does the same — it only changes the normalization constant), and
+//! the normalization table is **held in log space** (`log_g[c]`): even
+//! after rescaling, `g[c] ≈ binom(n+c-1, c)` grows past f64 range once
+//! n ≥ ~10^5 with c in the hundreds — exactly the regime the sharded
+//! engine's million-node regression tests compare against.  Small/medium
+//! networks still pay only the cheap linear recurrence (see
+//! [`ClosedNetwork::buzen`]); the logaddexp path is the overflow fallback.
+//! The scale factor re-enters only in the (rate-valued) throughput.
 
 use crate::util::stats::Welford;
+
+/// log(e^a + e^b) without leaving log space.
+#[inline]
+fn logaddexp(a: f64, b: f64) -> f64 {
+    if a == f64::NEG_INFINITY {
+        return b;
+    }
+    if b == f64::NEG_INFINITY {
+        return a;
+    }
+    let (hi, lo) = if a >= b { (a, b) } else { (b, a) };
+    hi + (lo - hi).exp().ln_1p()
+}
 
 #[derive(Clone, Debug)]
 pub struct ClosedNetwork {
@@ -30,15 +48,17 @@ pub struct ClosedNetwork {
 }
 
 /// Precomputed Buzen table for one (network, C): g[c] = Σ_{|x|=c} Π θ'^x
-/// with θ' = θ / max θ.
+/// with θ' = θ / max θ, held as `log_g[c] = ln g[c]` so the table stays
+/// representable at n ≥ 10^5 with skewed rates.
 #[derive(Clone, Debug)]
 pub struct Buzen {
-    /// scaled loads θ'_i = θ_i / θ_max  (max = 1)
-    pub theta: Vec<f64>,
+    /// ln θ'_i of the scaled loads θ'_i = θ_i / θ_max  (−inf for
+    /// zero-probability nodes; the single source of truth for marginals)
+    pub log_theta: Vec<f64>,
     /// scale factor s = max_i θ_i
     pub scale: f64,
-    /// g[c] for populations 0..=C (over ALL nodes)
-    pub g: Vec<f64>,
+    /// ln g[c] for populations 0..=C (over ALL nodes)
+    pub log_g: Vec<f64>,
 }
 
 impl ClosedNetwork {
@@ -70,25 +90,51 @@ impl ClosedNetwork {
         self.mu.iter().sum()
     }
 
-    /// Buzen convolution up to population C.
+    /// Buzen convolution up to population C.  The table is *held* in log
+    /// space, but computed by the cheap linear recurrence whenever that
+    /// stays in f64 range (all small/medium networks — fused mul-adds, no
+    /// transcendentals); only when the linear pass overflows (n ≥ ~10^5
+    /// with c in the hundreds) does it rerun as a logaddexp recurrence.
     pub fn buzen(&self, c: usize) -> Buzen {
         let theta = self.theta();
         let scale = theta.iter().cloned().fold(f64::MIN, f64::max);
         let th: Vec<f64> = theta.iter().map(|t| t / scale).collect();
-        let mut g = vec![0.0; c + 1];
+        let log_theta: Vec<f64> = th.iter().map(|t| t.ln()).collect();
+        // fast path: the historical linear convolution.  With θ'_max = 1
+        // the final g[pop] ≥ 1 (the max-load node alone contributes 1 per
+        // population), so the table can only fail by OVERflow, which is
+        // sticky in a sum of positives — one finiteness check at the end
+        // suffices.  (Transient underflow of tiny-θ' contributions loses
+        // only ≤ ~1e-300 relative mass, exactly as the pre-log code did.)
+        let mut g = vec![0.0f64; c + 1];
         g[0] = 1.0;
         for &t in &th {
             for pop in 1..=c {
                 g[pop] += t * g[pop - 1];
             }
         }
-        Buzen { theta: th, scale, g }
+        if g.iter().all(|x| x.is_finite()) {
+            let log_g = g.iter().map(|x| x.ln()).collect();
+            return Buzen { log_theta, scale, log_g };
+        }
+        // slow path: the normalization constant exceeds f64 range
+        let mut log_g = vec![f64::NEG_INFINITY; c + 1];
+        log_g[0] = 0.0;
+        for &lt in &log_theta {
+            if lt == f64::NEG_INFINITY {
+                continue; // zero-load node contributes nothing
+            }
+            for pop in 1..=c {
+                log_g[pop] = logaddexp(log_g[pop], lt + log_g[pop - 1]);
+            }
+        }
+        Buzen { log_theta, scale, log_g }
     }
 }
 
 impl Buzen {
     pub fn population(&self) -> usize {
-        self.g.len() - 1
+        self.log_g.len() - 1
     }
 
     /// P(X_i >= k) at population c:  θ'^k g(c-k)/g(c)   (scale-free).
@@ -96,19 +142,18 @@ impl Buzen {
         if k > c {
             return 0.0;
         }
-        self.theta[i].powi(k as i32) * self.g[c - k] / self.g[c]
+        // k = 0 must short-circuit: 0·(−inf) is NaN for zero-load nodes
+        let lt = if k == 0 { 0.0 } else { k as f64 * self.log_theta[i] };
+        (lt + self.log_g[c - k] - self.log_g[c]).exp()
     }
 
-    /// P(X_i = k) at population c.
+    /// P(X_i = k) at population c, as the stable tail difference
+    /// P(X_i >= k) − P(X_i >= k+1).
     pub fn pmf(&self, i: usize, k: usize, c: usize) -> f64 {
         if k > c {
             return 0.0;
         }
-        if k == c {
-            return self.theta[i].powi(c as i32) / self.g[c];
-        }
-        let t = self.theta[i];
-        t.powi(k as i32) * (self.g[c - k] - t * self.g[c - k - 1]) / self.g[c]
+        (self.tail(i, k, c) - self.tail(i, k + 1, c)).max(0.0)
     }
 
     /// E[X_i] at population c: Σ_{k=1..c} P(X_i >= k).
@@ -125,7 +170,7 @@ impl Buzen {
     /// units (this is the CS step rate; visit ratios sum to 1).
     pub fn throughput(&self, c: usize) -> f64 {
         assert!(c >= 1);
-        (1.0 / self.scale) * self.g[c - 1] / self.g[c]
+        (1.0 / self.scale) * (self.log_g[c - 1] - self.log_g[c]).exp()
     }
 
     /// Node-i throughput p_i Λ(c).
@@ -413,9 +458,45 @@ mod tests {
         let ba = a.buzen(15);
         let bb = b.buzen(15);
         for c in 0..=15 {
-            assert!((ba.g[c] - bb.g[c]).abs() < 1e-9 * ba.g[c].max(1.0));
+            assert!((ba.log_g[c] - bb.log_g[c]).abs() < 1e-9);
         }
         assert!((ba.throughput(15) - bb.throughput(15)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn log_space_survives_hundred_thousand_node_loads() {
+        // n = 50_000 heterogeneous nodes at C = 120: the (rescaled) linear
+        // normalization constant is ≳ binom(n/2+C-1, C) ≈ e^760 — past f64
+        // range, so the pre-log-space table returned inf and every marginal
+        // was NaN.  The log-space table keeps every downstream quantity
+        // finite and consistent.
+        let n = 50_000usize;
+        let c = 120usize;
+        let mu: Vec<f64> = (0..n).map(|i| if i < n / 2 { 4.0 } else { 1.0 }).collect();
+        let net = uniform_net(n, mu);
+        let b = net.buzen(c);
+        assert!(
+            b.log_g[c] > 709.0,
+            "log_g[C] = {} must exceed ln(f64::MAX) ≈ 709.8 for this test \
+             to witness the old overflow",
+            b.log_g[c]
+        );
+        let q_fast = b.mean_queue(0, c);
+        let q_slow = b.mean_queue(n - 1, c);
+        assert!(q_fast.is_finite() && q_slow.is_finite());
+        assert!(q_slow > q_fast, "slow nodes hold longer queues");
+        let lam = b.throughput(c);
+        assert!(lam.is_finite() && lam > 0.0, "throughput {lam}");
+        // spot-check normalization on a marginal: Σ_k P(X_i = k) = 1
+        let total: f64 = (0..=c).map(|k| b.pmf(n - 1, k, c)).sum();
+        assert!((total - 1.0).abs() < 1e-8, "pmf total {total}");
+        // population conservation: Σ_i E[X_i] = C, sampled per cluster by
+        // symmetry (all fast nodes are exchangeable, likewise slow)
+        let total_q = q_fast * (n / 2) as f64 + q_slow * (n - n / 2) as f64;
+        assert!(
+            (total_q - c as f64).abs() < 1e-6 * c as f64,
+            "ΣE[X_i] = {total_q}, want {c}"
+        );
     }
 
     #[test]

@@ -1,0 +1,131 @@
+//! Completion-event calendars.
+//!
+//! [`Event`] is the (virtual time, global sequence, node) triple both
+//! engines order on: min time first, ties broken by the globally unique
+//! sequence number the dispatcher assigned at schedule time.  Because the
+//! order is total, a `BinaryHeap` pops the same event regardless of
+//! insertion order — which is what lets shard workers apply their schedule
+//! operations concurrently without perturbing the trace.
+//!
+//! [`ShardCalendar`] is one shard's local min-heap.  The central server
+//! never walks a calendar; it only merges the S shard *fronts* per CS
+//! step, so every heap operation runs on ~busy/S entries.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Raw IEEE-754 bits of +inf — the "empty front" time sentinel shared with
+/// the parallel driver's atomic front cells.
+pub(crate) const INF_BITS: u64 = 0x7FF0_0000_0000_0000;
+
+/// A shard front: (completion time, schedule sequence, node).  An empty
+/// calendar reports `(inf, u64::MAX, u32::MAX)`.
+pub(crate) type Front = (f64, u64, u32);
+
+pub(crate) const EMPTY_FRONT: Front = (f64::INFINITY, u64::MAX, u32::MAX);
+
+/// Completion event in the virtual-time calendar.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub time: f64,
+    pub seq: u64,
+    pub node: u32,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed for min-heap; ties broken by seq for determinism
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// One shard's event calendar.
+#[derive(Debug, Default)]
+pub(crate) struct ShardCalendar {
+    heap: BinaryHeap<Event>,
+}
+
+impl ShardCalendar {
+    pub fn new() -> ShardCalendar {
+        ShardCalendar { heap: BinaryHeap::new() }
+    }
+
+    #[inline]
+    pub fn push(&mut self, ev: Event) {
+        self.heap.push(ev);
+    }
+
+    /// Remove and return the shard's earliest event.
+    #[inline]
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+
+    /// The shard's earliest event as a [`Front`] triple.
+    #[inline]
+    pub fn front(&self) -> Front {
+        match self.heap.peek() {
+            Some(e) => (e.time, e.seq, e.node),
+            None => EMPTY_FRONT,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pop_order_is_time_then_seq_regardless_of_insertion() {
+        let evs = [
+            Event { time: 2.0, seq: 5, node: 0 },
+            Event { time: 1.0, seq: 9, node: 1 },
+            Event { time: 1.0, seq: 3, node: 2 },
+            Event { time: 0.5, seq: 7, node: 3 },
+        ];
+        // every insertion order yields the same pop order (total order)
+        let orders: [[usize; 4]; 3] = [[0, 1, 2, 3], [3, 2, 1, 0], [1, 3, 0, 2]];
+        for ord in orders {
+            let mut cal = ShardCalendar::new();
+            for &i in &ord {
+                cal.push(evs[i]);
+            }
+            let popped: Vec<u32> = (0..4).map(|_| cal.pop().unwrap().node).collect();
+            assert_eq!(popped, vec![3, 2, 1, 0]);
+        }
+    }
+
+    #[test]
+    fn front_reports_min_and_empty_sentinel() {
+        let mut cal = ShardCalendar::new();
+        assert_eq!(cal.front(), EMPTY_FRONT);
+        cal.push(Event { time: 3.0, seq: 1, node: 4 });
+        cal.push(Event { time: 2.0, seq: 2, node: 5 });
+        assert_eq!(cal.front(), (2.0, 2, 5));
+        cal.pop();
+        assert_eq!(cal.front(), (3.0, 1, 4));
+    }
+
+    #[test]
+    fn inf_bits_matches_ieee() {
+        assert_eq!(f64::INFINITY.to_bits(), INF_BITS);
+    }
+}

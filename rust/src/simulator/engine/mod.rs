@@ -1,0 +1,393 @@
+//! Pluggable event engines for the closed-network simulator.
+//!
+//! Two engines realize the exact same dynamics:
+//!
+//! * [`EngineKind::Heap`] — the original monolithic [`Network`]: one global
+//!   `BinaryHeap` of completion events and one `VecDeque<Task>` per node.
+//!   Kept alive as the trace-equivalence **oracle** (the role
+//!   `adaptive-exact` plays for the Fenwick sampler).
+//! * [`EngineKind::Sharded`] — struct-of-arrays node state (flat queue
+//!   lengths, an intrusive task pool instead of n separate `VecDeque`
+//!   allocations) with nodes partitioned into S shards, each owning a local
+//!   calendar of its completion events.  The central dispatcher merges only
+//!   the S shard fronts per CS step, so calendar operations work on heaps
+//!   of ~busy/S entries that stay cache-resident at n = 10^5–10^6.
+//!
+//! # Determinism contract
+//!
+//! Both engines draw from the **same decomposed RNG streams**, so they are
+//! bit-identical on a shared seed — for any shard count and any thread
+//! count (`tests/engine_equivalence.rs`):
+//!
+//! * **Routing** consumes a dedicated sequential stream
+//!   (`Rng::new(seed).derive(ROUTE_STREAM)`); routing decisions happen in
+//!   CS-step order in every engine, so the stream decomposes identically.
+//! * **Service durations** are *keyed*, not sequential: the duration of the
+//!   c-th service started at node i is drawn from a fresh generator seeded
+//!   with `stream_seed(service_seed(seed), [i, c])`.  A (node, count) pair
+//!   fully determines the draw, so shard workers can sample their nodes'
+//!   events with no cross-shard coordination and no dependence on shard
+//!   membership or scheduling order.
+//!
+//! Policy observation (`observe`/`observe_node`) stays on the central
+//! dispatcher in every engine: its call order is part of the contract.
+//! Incremental policies still receive exactly the two queue-length changes
+//! per step; bulk policies get the flat SoA `qlen` slice (a memcpy, not a
+//! per-node `VecDeque::len` walk).
+
+pub mod calendar;
+pub mod sharded;
+pub mod soa;
+
+use super::network::{InitPlacement, Network, SimConfig, SimResult, StepOutcome};
+use super::service::ServiceDist;
+use crate::coordinator::policy::{SamplingPolicy, StaticPolicy};
+use crate::util::rng::{stream_seed, Rng};
+use crate::util::stats::Welford;
+
+/// Tag of the routing stream (the historical `Network` derivation, kept so
+/// initial Routed placements reproduce the pre-engine RNG draws).
+pub(crate) const ROUTE_STREAM: u64 = 0x51_3A_77;
+/// Tag folding the config seed into the keyed service-duration stream.
+const SERVICE_STREAM: u64 = 0x5EED_CA1E;
+
+/// Root of the keyed service-duration stream for a config seed.
+#[inline]
+pub(crate) fn service_seed(seed: u64) -> u64 {
+    stream_seed(seed, &[SERVICE_STREAM])
+}
+
+/// Duration of the `count`-th service started at `node` — a pure function
+/// of (service stream root, node, count), independent of which engine,
+/// shard, or thread asks.
+#[inline]
+pub(crate) fn service_duration(svc_seed: u64, dist: &ServiceDist, node: u32, count: u64) -> f64 {
+    let mut rng = Rng::new(stream_seed(svc_seed, &[node as u64, count]));
+    dist.sample(&mut rng)
+}
+
+/// Which event engine executes a replication.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// single global event heap + per-node `VecDeque`s (the oracle)
+    Heap,
+    /// SoA node state + per-shard calendars (+ optional worker threads)
+    Sharded,
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<EngineKind, String> {
+        match s {
+            "heap" => Ok(EngineKind::Heap),
+            "sharded" => Ok(EngineKind::Sharded),
+            other => Err(format!("unknown engine '{other}' (heap|sharded)")),
+        }
+    }
+}
+
+/// Engine selection carried by [`SimConfig`].  Changing it never changes
+/// results — only where the per-step work happens.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EngineConfig {
+    pub kind: EngineKind,
+    /// shard count for the sharded engine; 0 = auto (8 at n >= 10_000,
+    /// else 1)
+    pub shards: usize,
+    /// worker threads for shard event generation; <= 1 = sequential (the
+    /// dispatcher applies shard operations inline)
+    pub threads: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> EngineConfig {
+        EngineConfig { kind: EngineKind::Heap, shards: 0, threads: 1 }
+    }
+}
+
+impl EngineConfig {
+    pub fn heap() -> EngineConfig {
+        EngineConfig::default()
+    }
+
+    pub fn sharded(shards: usize, threads: usize) -> EngineConfig {
+        EngineConfig { kind: EngineKind::Sharded, shards, threads }
+    }
+
+    /// Concrete shard count for a network of n nodes.
+    pub fn resolve_shards(&self, n: usize) -> usize {
+        let s = if self.shards == 0 {
+            if n >= 10_000 {
+                8
+            } else {
+                1
+            }
+        } else {
+            self.shards
+        };
+        s.clamp(1, n.max(1))
+    }
+}
+
+/// The engine interface the aggregation layers (`run_with_policy`,
+/// `transient_mi`, the DL driver) consume.  One CS step per `advance`.
+pub trait EventEngine {
+    /// Advance one CS step: pop the next completion, route a replacement.
+    fn advance(&mut self) -> Option<StepOutcome>;
+
+    /// Current queue length of node i.
+    fn queue_len(&self, i: usize) -> usize;
+
+    /// Number of busy nodes right now (for τ_c).
+    fn busy_nodes(&self) -> usize;
+
+    /// Current virtual time.
+    fn now(&self) -> f64;
+
+    /// Total tasks in the network (must equal C always).
+    fn population(&self) -> usize;
+
+    /// Name of the routing policy in force.
+    fn policy_name(&self) -> String;
+}
+
+/// Initial placement S_0 as (node, selection probability) pairs — shared
+/// verbatim by every engine so the routing stream decomposes identically.
+pub(crate) fn initial_placements(
+    cfg: &SimConfig,
+    policy: &mut dyn SamplingPolicy,
+    rng: &mut Rng,
+) -> Vec<(usize, f64)> {
+    let n = cfg.p.len();
+    match cfg.init {
+        InitPlacement::OnePerNode => (0..n).map(|i| (i, policy.prob_of(i))).collect(),
+        InitPlacement::RoundRobin => (0..cfg.concurrency)
+            .map(|j| (j % n, policy.prob_of(j % n)))
+            .collect(),
+        InitPlacement::Routed => {
+            let mut lens = vec![0u32; n];
+            let incremental = policy.incremental();
+            (0..cfg.concurrency)
+                .map(|_| {
+                    if !incremental {
+                        policy.observe(&lens);
+                    }
+                    let node = policy.route(rng);
+                    let prob = policy.prob_of(node);
+                    lens[node] += 1;
+                    if incremental {
+                        policy.observe_node(node, lens[node]);
+                    }
+                    (node, prob)
+                })
+                .collect()
+        }
+    }
+}
+
+/// Build the engine selected by `cfg.engine` and hand it to `f`.
+///
+/// The parallel sharded engine owns a scoped worker pool, so it cannot
+/// escape this function — every consumer (full runs, transient estimation)
+/// threads its loop through here instead of holding an engine value.
+pub fn with_engine<R>(
+    cfg: SimConfig,
+    policy: Box<dyn SamplingPolicy>,
+    f: impl FnOnce(&mut dyn EventEngine) -> Result<R, String>,
+) -> Result<R, String> {
+    let eng = cfg.engine;
+    match eng.kind {
+        EngineKind::Heap => {
+            let mut net = Network::with_policy(cfg, policy)?;
+            f(&mut net)
+        }
+        EngineKind::Sharded => {
+            let shards = eng.resolve_shards(cfg.p.len());
+            let threads = eng.threads.max(1).min(shards);
+            if threads <= 1 {
+                let mut engine = sharded::ShardedEngine::sequential(cfg, policy, shards)?;
+                f(&mut engine)
+            } else {
+                sharded::run_parallel(cfg, policy, shards, threads, f)
+            }
+        }
+    }
+}
+
+/// Run a full simulation per the config (fixed-p static routing).
+pub fn run(cfg: SimConfig) -> Result<SimResult, String> {
+    let policy = Box::new(StaticPolicy::new(cfg.p.clone())?);
+    run_with_policy(cfg, policy)
+}
+
+/// Run a full simulation under an arbitrary sampling policy — the sweep
+/// engine's replication kernel, on whichever engine `cfg.engine` selects.
+///
+/// Per-step cost is O(log busy) calendar work (global heap or shard-local
+/// calendars) plus the policy's per-dispatch cost — O(1) for alias-backed
+/// static policies, O(log n) for the Fenwick adaptive policy.  Occupancy
+/// time-averages are accumulated lazily per node, so replications with
+/// n = 10^5–10^6 nodes never pay an O(n) scan per CS step.
+pub fn run_with_policy(
+    cfg: SimConfig,
+    policy: Box<dyn SamplingPolicy>,
+) -> Result<SimResult, String> {
+    let n = cfg.p.len();
+    let steps = cfg.steps;
+    let record_tasks = cfg.record_tasks;
+    let sample_every = cfg.queue_sample_every;
+    let concurrency = cfg.concurrency;
+    with_engine(cfg, policy, move |net| {
+        collect(net, n, steps, record_tasks, sample_every, concurrency)
+    })
+}
+
+/// The engine-agnostic aggregation loop.  Floating-point accumulation
+/// order is fixed here, so engines producing identical `StepOutcome`
+/// streams produce bit-identical `SimResult`s.
+fn collect(
+    net: &mut dyn EventEngine,
+    n: usize,
+    steps: u64,
+    record_tasks: bool,
+    sample_every: u64,
+    concurrency: usize,
+) -> Result<SimResult, String> {
+    let mut res = SimResult {
+        delay_steps: vec![Welford::new(); n],
+        delay_time: vec![Welford::new(); n],
+        completions: vec![0; n],
+        dispatches: vec![0; n],
+        tau_max: 0,
+        tau_c: 0.0,
+        tau_sum: vec![0.0; n],
+        total_time: 0.0,
+        tasks: Vec::new(),
+        queue_samples: Vec::new(),
+        mean_queue: vec![0.0; n],
+    };
+    let mut busy_sum = 0u64;
+    // lazy time-weighted queue integrals: each node's occupancy is
+    // piecewise constant, so ∫X_i dt only needs flushing when X_i changes
+    // (the completed node and the dispatch target) and once at the end
+    let mut area: Vec<f64> = vec![0.0; n];
+    let mut last_change: Vec<f64> = vec![0.0; n];
+    let mut q_len: Vec<u32> = (0..n).map(|i| net.queue_len(i) as u32).collect();
+    let flush = |i: usize, t: f64, new_len: u32, area: &mut [f64], lc: &mut [f64], ql: &mut [u32]| {
+        area[i] += ql[i] as f64 * (t - lc[i]);
+        lc[i] = t;
+        ql[i] = new_len;
+    };
+    for k in 0..steps {
+        let out = net.advance().ok_or("network drained")?;
+        let i = out.completed_node as usize;
+        let j = out.next_node as usize;
+        flush(i, out.time, net.queue_len(i) as u32, &mut area, &mut last_change, &mut q_len);
+        flush(j, out.time, net.queue_len(j) as u32, &mut area, &mut last_change, &mut q_len);
+        let d = out.record.delay_steps();
+        res.delay_steps[i].push(d as f64);
+        res.delay_time[i].push(out.record.complete_time - out.record.dispatch_time);
+        res.completions[i] += 1;
+        res.dispatches[j] += 1;
+        res.tau_sum[i] += d as f64;
+        res.tau_max = res.tau_max.max(d);
+        busy_sum += net.busy_nodes() as u64;
+        if record_tasks {
+            res.tasks.push(out.record);
+        }
+        if sample_every > 0 && k % sample_every == 0 {
+            res.queue_samples.push((k, q_len.clone()));
+        }
+    }
+    res.tau_c = busy_sum as f64 / steps.max(1) as f64;
+    res.total_time = net.now();
+    let denom = net.now().max(f64::MIN_POSITIVE);
+    for i in 0..n {
+        area[i] += q_len[i] as f64 * (net.now() - last_change[i]);
+        res.mean_queue[i] = area[i] / denom;
+    }
+    debug_assert_eq!(net.population(), concurrency);
+    Ok(res)
+}
+
+/// Transient estimation of m_{i,k}^T (Fig 1): average, over `reps`
+/// replications, of the delay of the task dispatched at step k *to node i*
+/// (conditional on that routing; unconditional steps are skipped).
+/// Returns (k, mean delay, count) for k in 0..steps.
+pub fn transient_mi(
+    base: &SimConfig,
+    node: usize,
+    reps: u64,
+) -> Result<Vec<(u64, f64, u64)>, String> {
+    let steps = base.steps;
+    let mut sum = vec![0.0f64; steps as usize];
+    let mut cnt = vec![0u64; steps as usize];
+    for rep in 0..reps {
+        let mut cfg = base.clone();
+        cfg.seed = base.seed.wrapping_add(rep.wrapping_mul(0x9E3779B9));
+        cfg.record_tasks = false;
+        let policy = Box::new(StaticPolicy::new(cfg.p.clone())?);
+        // tasks dispatched at step k: completion records carry dispatch_step
+        with_engine(cfg, policy, |net| {
+            for _ in 0..steps {
+                let out = net.advance().ok_or("drained")?;
+                if out.completed_node as usize == node {
+                    let ds = out.record.dispatch_step;
+                    if ds < steps {
+                        sum[ds as usize] += out.record.delay_steps() as f64;
+                        cnt[ds as usize] += 1;
+                    }
+                }
+            }
+            Ok(())
+        })?;
+    }
+    Ok((0..steps)
+        .map(|k| {
+            let c = cnt[k as usize];
+            (k, if c > 0 { sum[k as usize] / c as f64 } else { f64::NAN }, c)
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_kind_parses() {
+        assert_eq!("heap".parse::<EngineKind>().unwrap(), EngineKind::Heap);
+        assert_eq!("sharded".parse::<EngineKind>().unwrap(), EngineKind::Sharded);
+        assert!("quantum".parse::<EngineKind>().is_err());
+    }
+
+    #[test]
+    fn shard_count_resolution() {
+        let auto = EngineConfig::sharded(0, 1);
+        assert_eq!(auto.resolve_shards(100), 1, "small n stays single-shard");
+        assert_eq!(auto.resolve_shards(10_000), 8);
+        assert_eq!(auto.resolve_shards(1_000_000), 8);
+        let fixed = EngineConfig::sharded(16, 1);
+        assert_eq!(fixed.resolve_shards(1_000_000), 16);
+        assert_eq!(fixed.resolve_shards(3), 3, "never more shards than nodes");
+    }
+
+    #[test]
+    fn service_durations_are_keyed_not_sequential() {
+        let root = service_seed(42);
+        let d = ServiceDist::Exp { rate: 2.0 };
+        let a = service_duration(root, &d, 7, 3);
+        // same key -> same draw, independent of anything sampled in between
+        let _ = service_duration(root, &d, 1, 0);
+        let _ = service_duration(root, &d, 7, 4);
+        assert_eq!(a.to_bits(), service_duration(root, &d, 7, 3).to_bits());
+        // neighboring keys decorrelate
+        assert_ne!(a.to_bits(), service_duration(root, &d, 7, 4).to_bits());
+        assert_ne!(a.to_bits(), service_duration(root, &d, 8, 3).to_bits());
+        assert_ne!(
+            a.to_bits(),
+            service_duration(service_seed(43), &d, 7, 3).to_bits()
+        );
+    }
+}

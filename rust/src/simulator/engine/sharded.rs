@@ -1,0 +1,633 @@
+//! The sharded event engine: SoA node state + per-shard calendars +
+//! optional deterministic worker threads.
+//!
+//! Nodes are partitioned round-robin across S shards (`shard = node % S`,
+//! balancing the fast/slow clusters, which are laid out contiguously).
+//! Each shard owns the calendar of its nodes' completion events plus the
+//! per-node service counters that key the duration stream.  The central
+//! dispatcher runs the CS-step loop:
+//!
+//! 1. merge the S shard fronts → the next completion (min time, then seq),
+//! 2. apply the pool/queue bookkeeping and consult the sampling policy
+//!    (observation order and the routing stream are central, sequential —
+//!    they are part of the determinism contract),
+//! 3. emit at most three shard commands (`PopFront`, up to two
+//!    `Schedule`s) tagged with pre-assigned global sequence numbers.
+//!
+//! A [`ShardDriver`] decides *where* commands execute: [`LocalDriver`]
+//! applies them inline (sequential mode); the threaded driver hands them
+//! to persistent workers and barriers on completion at each dispatch
+//! epoch.  Because durations are keyed by (node, service count) and
+//! sequence numbers are assigned centrally, the resulting event trace is
+//! bit-identical for every shard count and thread count — and to the heap
+//! engine (`tests/engine_equivalence.rs`).
+//!
+//! Parallelism economics: the per-epoch barrier costs a few hundred ns, so
+//! threads pay off only when shard work per epoch is substantial — the C
+//! initial placements (one batched epoch), and large-C regimes where
+//! calendar pushes dominate.  For small replications prefer `threads = 1`
+//! and spend cores on seed-level parallelism (the sweep scheduler does
+//! exactly this split).
+
+use super::calendar::{Event, Front, ShardCalendar, EMPTY_FRONT, INF_BITS};
+use super::soa::TaskPool;
+use super::{initial_placements, service_duration, service_seed, EventEngine, ROUTE_STREAM};
+use crate::coordinator::policy::SamplingPolicy;
+use crate::simulator::network::{SimConfig, StepOutcome, TaskRecord};
+use crate::simulator::service::ServiceDist;
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// A shard-local operation, tagged with everything it needs so workers
+/// never read central state.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum Cmd {
+    /// remove the shard's front event (the dispatcher consumed it)
+    PopFront,
+    /// start a service at `node` at virtual time `time`; the event carries
+    /// the centrally assigned sequence number `seq`
+    Schedule { node: u32, time: f64, seq: u64 },
+}
+
+/// One shard: calendar + keyed-duration state for its nodes.
+pub(crate) struct Shard {
+    /// total shard count (node -> local index is `node / stride`)
+    stride: u32,
+    svc_seed: u64,
+    calendar: ShardCalendar,
+    /// services started per owned node, by local index
+    svc_count: Vec<u64>,
+    /// owned nodes' service distributions, by local index
+    service: Vec<ServiceDist>,
+}
+
+impl Shard {
+    fn new(id: u32, stride: u32, svc_seed: u64, service_all: &[ServiceDist]) -> Shard {
+        let service: Vec<ServiceDist> = service_all
+            .iter()
+            .skip(id as usize)
+            .step_by(stride as usize)
+            .copied()
+            .collect();
+        Shard {
+            stride,
+            svc_seed,
+            calendar: ShardCalendar::new(),
+            svc_count: vec![0; service.len()],
+            service,
+        }
+    }
+
+    #[inline]
+    fn apply(&mut self, cmd: Cmd) {
+        match cmd {
+            Cmd::PopFront => {
+                self.calendar.pop();
+            }
+            Cmd::Schedule { node, time, seq } => {
+                let li = (node / self.stride) as usize;
+                let count = self.svc_count[li];
+                self.svc_count[li] = count + 1;
+                let dur = service_duration(self.svc_seed, &self.service[li], node, count);
+                self.calendar.push(Event { time: time + dur, seq, node });
+            }
+        }
+    }
+
+    #[inline]
+    fn front(&self) -> Front {
+        self.calendar.front()
+    }
+}
+
+/// Where shard commands execute.  `exec` applies a batch (each command
+/// tagged with its shard id) and guarantees the affected shards' fronts
+/// are observable through `front` afterwards.
+pub(crate) trait ShardDriver {
+    fn exec(&mut self, cmds: &[(u32, Cmd)]);
+    fn front(&self, shard: u32) -> Front;
+}
+
+/// Sequential driver: the dispatcher applies shard operations inline.
+pub(crate) struct LocalDriver {
+    shards: Vec<Shard>,
+}
+
+impl ShardDriver for LocalDriver {
+    fn exec(&mut self, cmds: &[(u32, Cmd)]) {
+        for &(s, cmd) in cmds {
+            self.shards[s as usize].apply(cmd);
+        }
+    }
+
+    fn front(&self, shard: u32) -> Front {
+        self.shards[shard as usize].front()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Central dispatcher
+// ---------------------------------------------------------------------------
+
+/// The sharded engine: central SoA state + a [`ShardDriver`].  The config
+/// is consumed at build time (placements, pool sizing, shard service
+/// tables); only live dispatch state is retained.
+pub(crate) struct ShardedCore<D: ShardDriver> {
+    policy: Box<dyn SamplingPolicy>,
+    route_rng: Rng,
+    pool: TaskPool,
+    busy: usize,
+    n_shards: u32,
+    driver: D,
+    seq: u64,
+    now: f64,
+    step: u64,
+    /// reusable queue-length scratch for bulk policy observation
+    lens_buf: Vec<u32>,
+    /// reusable per-step command batch (≤ 3 entries after init)
+    cmd_buf: Vec<(u32, Cmd)>,
+}
+
+/// The sequential sharded engine.
+pub(crate) type ShardedEngine = ShardedCore<LocalDriver>;
+
+impl ShardedCore<LocalDriver> {
+    pub fn sequential(
+        cfg: SimConfig,
+        policy: Box<dyn SamplingPolicy>,
+        n_shards: usize,
+    ) -> Result<ShardedEngine, String> {
+        let svc_seed = service_seed(cfg.seed);
+        let shards = (0..n_shards)
+            .map(|s| Shard::new(s as u32, n_shards as u32, svc_seed, &cfg.service))
+            .collect();
+        ShardedCore::build(cfg, policy, n_shards, LocalDriver { shards })
+    }
+}
+
+impl<D: ShardDriver> ShardedCore<D> {
+    fn build(
+        cfg: SimConfig,
+        mut policy: Box<dyn SamplingPolicy>,
+        n_shards: usize,
+        driver: D,
+    ) -> Result<ShardedCore<D>, String> {
+        cfg.validate()?;
+        let n = cfg.p.len();
+        if policy.n() != n {
+            return Err(format!(
+                "policy '{}' covers {} nodes but the network has {n}",
+                policy.name(),
+                policy.n()
+            ));
+        }
+        let mut route_rng = Rng::new(cfg.seed).derive(ROUTE_STREAM);
+        let placements = initial_placements(&cfg, policy.as_mut(), &mut route_rng);
+        let mut core = ShardedCore {
+            pool: TaskPool::new(n, cfg.concurrency),
+            busy: 0,
+            n_shards: n_shards as u32,
+            driver,
+            seq: 0,
+            now: 0.0,
+            step: 0,
+            lens_buf: Vec::with_capacity(n),
+            cmd_buf: Vec::with_capacity(cfg.concurrency),
+            policy,
+            route_rng,
+        };
+        // initial placement: pool pushes are central; the C initial service
+        // starts go to the shards as ONE batched epoch (the only epoch with
+        // more than three commands — workers absorb it in parallel)
+        for (node, prob) in placements {
+            let len = core.pool.push(node, 0, 0.0, prob);
+            if len == 1 {
+                core.busy += 1;
+                core.seq += 1;
+                core.cmd_buf.push((
+                    node as u32 % core.n_shards,
+                    Cmd::Schedule { node: node as u32, time: 0.0, seq: core.seq },
+                ));
+            }
+        }
+        let init = std::mem::take(&mut core.cmd_buf);
+        core.driver.exec(&init);
+        core.cmd_buf = init;
+        core.cmd_buf.clear();
+        // incremental policies only ever hear about queues that change, so
+        // sync them once with the realized initial state S_0 (idempotent
+        // for the Routed path, which already observed each placement)
+        if core.policy.incremental() {
+            for i in 0..n {
+                core.policy.observe_node(i, core.pool.qlen(i));
+            }
+        }
+        Ok(core)
+    }
+
+    /// Merge the shard fronts: the globally earliest event.
+    #[inline]
+    fn merge_front(&self) -> Option<Front> {
+        let mut best = EMPTY_FRONT;
+        for s in 0..self.n_shards {
+            let fr = self.driver.front(s);
+            if (fr.0, fr.1) < (best.0, best.1) {
+                best = fr;
+            }
+        }
+        if best.1 == u64::MAX {
+            None
+        } else {
+            Some(best)
+        }
+    }
+}
+
+impl<D: ShardDriver> EventEngine for ShardedCore<D> {
+    fn advance(&mut self) -> Option<StepOutcome> {
+        let (time, _seq, node32) = self.merge_front()?;
+        self.now = time;
+        let node = node32 as usize;
+        let shard = node32 % self.n_shards;
+        self.cmd_buf.clear();
+        self.cmd_buf.push((shard, Cmd::PopFront));
+        let (d_step, d_time, d_prob, new_len) = self.pool.pop(node);
+        if new_len > 0 {
+            self.seq += 1;
+            self.cmd_buf
+                .push((shard, Cmd::Schedule { node: node32, time, seq: self.seq }));
+        } else {
+            self.busy -= 1;
+        }
+        let record = TaskRecord {
+            node: node32,
+            dispatch_step: d_step,
+            complete_step: self.step,
+            dispatch_time: d_time,
+            complete_time: time,
+            dispatch_prob: d_prob,
+        };
+        // dispatcher: consult the sampling policy, select K_{k+1}, and send
+        // the new model.  Same observation protocol as the heap engine —
+        // incremental policies get only the two queue lengths that change.
+        let incremental = self.policy.incremental();
+        if incremental {
+            self.policy.observe_node(node, new_len);
+        } else {
+            self.lens_buf.clear();
+            self.lens_buf.extend_from_slice(self.pool.qlens());
+            self.policy.observe(&self.lens_buf);
+        }
+        let next = self.policy.route(&mut self.route_rng) as u32;
+        let next_prob = self.policy.prob_of(next as usize);
+        let next_len = self.pool.push(next as usize, self.step + 1, time, next_prob);
+        if next_len == 1 {
+            self.busy += 1;
+            self.seq += 1;
+            self.cmd_buf.push((
+                next % self.n_shards,
+                Cmd::Schedule { node: next, time, seq: self.seq },
+            ));
+        }
+        if incremental {
+            self.policy.observe_node(next as usize, next_len);
+        }
+        self.driver.exec(&self.cmd_buf);
+        let outcome = StepOutcome {
+            completed_node: node32,
+            dispatch_step: d_step,
+            next_node: next,
+            time,
+            record,
+        };
+        self.step += 1;
+        Some(outcome)
+    }
+
+    fn queue_len(&self, i: usize) -> usize {
+        self.pool.qlen(i) as usize
+    }
+
+    fn busy_nodes(&self) -> usize {
+        self.busy
+    }
+
+    fn now(&self) -> f64 {
+        self.now
+    }
+
+    fn population(&self) -> usize {
+        self.pool.population()
+    }
+
+    fn policy_name(&self) -> String {
+        self.policy.name()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic parallel mode
+// ---------------------------------------------------------------------------
+
+/// One shard's published front: three atomics written by its worker before
+/// the Release store on `done`, read by the dispatcher after the Acquire
+/// load — release/acquire on `done` orders them without tearing.
+struct FrontCell {
+    time_bits: AtomicU64,
+    seq: AtomicU64,
+    node: AtomicU64,
+}
+
+impl FrontCell {
+    fn new() -> FrontCell {
+        FrontCell {
+            time_bits: AtomicU64::new(INF_BITS),
+            seq: AtomicU64::new(u64::MAX),
+            node: AtomicU64::new(u64::MAX),
+        }
+    }
+
+    fn publish(&self, fr: Front) {
+        self.time_bits.store(fr.0.to_bits(), Ordering::Relaxed);
+        self.seq.store(fr.1, Ordering::Relaxed);
+        self.node.store(fr.2 as u64, Ordering::Relaxed);
+    }
+
+    fn load(&self) -> Front {
+        (
+            f64::from_bits(self.time_bits.load(Ordering::Relaxed)),
+            self.seq.load(Ordering::Relaxed),
+            self.node.load(Ordering::Relaxed) as u32,
+        )
+    }
+}
+
+/// Mailbox between the dispatcher and one worker: the dispatcher fills
+/// `cmds` under the mutex, then bumps `epoch` (Release); the worker drains,
+/// applies, publishes fronts, and acknowledges via `done` (Release).
+struct WorkerSlot {
+    epoch: AtomicU64,
+    done: AtomicU64,
+    cmds: Mutex<Vec<(u32, Cmd)>>,
+}
+
+struct ParallelShared {
+    slots: Vec<WorkerSlot>,
+    fronts: Vec<FrontCell>,
+    shutdown: AtomicBool,
+}
+
+/// Driver that ships commands to persistent shard workers and barriers at
+/// each dispatch epoch.  The dispatcher keeps a local front cache so only
+/// shards it commanded this epoch are re-read.
+pub(crate) struct ThreadedDriver<'a> {
+    shared: &'a ParallelShared,
+    n_workers: usize,
+    fronts: Vec<Front>,
+    /// per-worker staging buffers (reused across epochs)
+    staged: Vec<Vec<(u32, Cmd)>>,
+}
+
+impl ShardDriver for ThreadedDriver<'_> {
+    fn exec(&mut self, cmds: &[(u32, Cmd)]) {
+        if cmds.is_empty() {
+            return;
+        }
+        for &(s, cmd) in cmds {
+            self.staged[s as usize % self.n_workers].push((s, cmd));
+        }
+        let mut waits: [(usize, u64); 8] = [(usize::MAX, 0); 8];
+        let mut n_waits = 0usize;
+        for w in 0..self.n_workers {
+            if self.staged[w].is_empty() {
+                continue;
+            }
+            let slot = &self.shared.slots[w];
+            {
+                let mut q = slot.cmds.lock().unwrap();
+                q.append(&mut self.staged[w]);
+            }
+            let e = slot.epoch.load(Ordering::Relaxed) + 1;
+            slot.epoch.store(e, Ordering::Release);
+            if n_waits < waits.len() {
+                waits[n_waits] = (w, e);
+                n_waits += 1;
+            } else {
+                // > 8 workers involved only in the batched init epoch;
+                // wait for the overflow immediately (still one barrier)
+                while slot.done.load(Ordering::Acquire) < e {
+                    std::hint::spin_loop();
+                }
+            }
+        }
+        for &(w, e) in &waits[..n_waits] {
+            let slot = &self.shared.slots[w];
+            let mut spins = 0u32;
+            while slot.done.load(Ordering::Acquire) < e {
+                spins += 1;
+                if spins > 10_000 {
+                    std::thread::yield_now();
+                } else {
+                    std::hint::spin_loop();
+                }
+            }
+        }
+        for &(s, _) in cmds {
+            self.fronts[s as usize] = self.shared.fronts[s as usize].load();
+        }
+    }
+
+    fn front(&self, shard: u32) -> Front {
+        self.fronts[shard as usize]
+    }
+}
+
+fn worker_loop(mut shards: Vec<(u32, Shard)>, w: usize, shared: &ParallelShared) {
+    let slot = &shared.slots[w];
+    let n_workers = shared.slots.len();
+    let mut last = 0u64;
+    let mut spins = 0u32;
+    // swap buffer for draining the mailbox: the worker and the dispatcher
+    // alternate two Vecs, so the per-epoch hot path never allocates
+    let mut work: Vec<(u32, Cmd)> = Vec::new();
+    loop {
+        let e = slot.epoch.load(Ordering::Acquire);
+        if e == last {
+            if shared.shutdown.load(Ordering::Acquire) {
+                break;
+            }
+            spins += 1;
+            if spins > 10_000 {
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+            continue;
+        }
+        spins = 0;
+        {
+            let mut q = slot.cmds.lock().unwrap();
+            std::mem::swap(&mut *q, &mut work);
+        }
+        for &(s, cmd) in &work {
+            // worker w owns shards {s : s % n_workers == w}, densely packed
+            let (id, shard) = &mut shards[(s as usize) / n_workers];
+            debug_assert_eq!(*id, s);
+            shard.apply(cmd);
+            shared.fronts[s as usize].publish(shard.front());
+        }
+        work.clear();
+        last = e;
+        slot.done.store(e, Ordering::Release);
+    }
+}
+
+/// Run `f` over a sharded engine whose shard operations execute on
+/// `threads` persistent workers.  Bit-identical to the sequential engine:
+/// the workers only ever apply centrally ordered, keyed operations.
+pub(crate) fn run_parallel<R>(
+    cfg: SimConfig,
+    policy: Box<dyn SamplingPolicy>,
+    n_shards: usize,
+    threads: usize,
+    f: impl FnOnce(&mut dyn EventEngine) -> Result<R, String>,
+) -> Result<R, String> {
+    let n_workers = threads.min(n_shards).max(1);
+    let svc_seed = service_seed(cfg.seed);
+    let mut per_worker: Vec<Vec<(u32, Shard)>> = (0..n_workers)
+        .map(|w| {
+            (0..n_shards)
+                .filter(|s| s % n_workers == w)
+                .map(|s| {
+                    (s as u32, Shard::new(s as u32, n_shards as u32, svc_seed, &cfg.service))
+                })
+                .collect()
+        })
+        .collect();
+    let shared = ParallelShared {
+        slots: (0..n_workers)
+            .map(|_| WorkerSlot {
+                epoch: AtomicU64::new(0),
+                done: AtomicU64::new(0),
+                cmds: Mutex::new(Vec::new()),
+            })
+            .collect(),
+        fronts: (0..n_shards).map(|_| FrontCell::new()).collect(),
+        shutdown: AtomicBool::new(false),
+    };
+    // workers spin until `shutdown`; raise it on every exit path —
+    // including a dispatcher panic — or the scope's implicit join would
+    // deadlock on the spinning workers
+    struct Shutdown<'a>(&'a AtomicBool);
+    impl Drop for Shutdown<'_> {
+        fn drop(&mut self) {
+            self.0.store(true, Ordering::Release);
+        }
+    }
+    std::thread::scope(|scope| {
+        let _guard = Shutdown(&shared.shutdown);
+        for (w, shards) in per_worker.drain(..).enumerate() {
+            let shared = &shared;
+            scope.spawn(move || worker_loop(shards, w, shared));
+        }
+        let driver = ThreadedDriver {
+            shared: &shared,
+            n_workers,
+            fronts: vec![EMPTY_FRONT; n_shards],
+            staged: vec![Vec::new(); n_workers],
+        };
+        let result = ShardedCore::build(cfg, policy, n_shards, driver)
+            .and_then(|mut core| f(&mut core));
+        drop(_guard);
+        result
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::StaticPolicy;
+    use crate::simulator::service::{ServiceDist, ServiceFamily};
+
+    fn cfg(n: usize, c: usize, seed: u64) -> SimConfig {
+        let rates: Vec<f64> = (0..n).map(|i| if i < n / 2 { 3.0 } else { 1.0 }).collect();
+        SimConfig {
+            seed,
+            ..SimConfig::new(
+                vec![1.0 / n as f64; n],
+                ServiceDist::from_rates(&rates, ServiceFamily::Exponential),
+                c,
+                0,
+            )
+        }
+    }
+
+    fn policy(n: usize) -> Box<dyn SamplingPolicy> {
+        Box::new(StaticPolicy::new(vec![1.0 / n as f64; n]).unwrap())
+    }
+
+    #[test]
+    fn population_is_conserved_across_shard_counts() {
+        for shards in [1usize, 3, 5] {
+            let mut eng = ShardedEngine::sequential(cfg(10, 7, 3), policy(10), shards).unwrap();
+            assert_eq!(eng.population(), 7);
+            for _ in 0..400 {
+                eng.advance().unwrap();
+                assert_eq!(eng.population(), 7);
+            }
+            assert!(eng.busy_nodes() >= 1 && eng.busy_nodes() <= 7);
+        }
+    }
+
+    #[test]
+    fn shard_count_does_not_change_the_trace() {
+        let trace = |shards: usize| -> Vec<(u32, u64, u64)> {
+            let mut eng =
+                ShardedEngine::sequential(cfg(9, 5, 11), policy(9), shards).unwrap();
+            (0..600)
+                .map(|_| {
+                    let o = eng.advance().unwrap();
+                    (o.completed_node, o.record.dispatch_step, o.time.to_bits())
+                })
+                .collect()
+        };
+        let one = trace(1);
+        assert_eq!(one, trace(4));
+        assert_eq!(one, trace(9));
+    }
+
+    #[test]
+    fn parallel_workers_match_sequential() {
+        let seq_trace = {
+            let mut eng = ShardedEngine::sequential(cfg(12, 8, 5), policy(12), 4).unwrap();
+            (0..500)
+                .map(|_| {
+                    let o = eng.advance().unwrap();
+                    (o.completed_node, o.next_node, o.time.to_bits())
+                })
+                .collect::<Vec<_>>()
+        };
+        for threads in [2usize, 4] {
+            let par_trace = run_parallel(cfg(12, 8, 5), policy(12), 4, threads, |eng| {
+                Ok((0..500)
+                    .map(|_| {
+                        let o = eng.advance().unwrap();
+                        (o.completed_node, o.next_node, o.time.to_bits())
+                    })
+                    .collect::<Vec<_>>())
+            })
+            .unwrap();
+            assert_eq!(seq_trace, par_trace, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn build_errors_shut_workers_down() {
+        // invalid config: the scoped pool must still wind down cleanly
+        let mut bad = cfg(4, 0, 1);
+        bad.concurrency = 0;
+        let err = run_parallel(bad, policy(4), 2, 2, |_| Ok(())).unwrap_err();
+        assert!(err.contains("concurrency"), "{err}");
+    }
+}

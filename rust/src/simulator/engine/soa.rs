@@ -1,0 +1,168 @@
+//! Struct-of-arrays node/task state for the sharded engine.
+//!
+//! The heap engine keeps one `VecDeque<Task>` per node — at n = 10^6 that
+//! is a million separately allocated ring buffers walked through a layer
+//! of pointers.  Tasks are homogeneous (dispatch step, dispatch time,
+//! dispatch probability), and a closed network holds **exactly C of them
+//! at all times**, so the sharded engine stores them in one flat pool of
+//! capacity C with intrusive per-node FIFO lists:
+//!
+//! * task fields live in parallel `Vec`s indexed by pool slot,
+//! * each node carries `head`/`tail` slot indices plus a flat `qlen`
+//!   array (the busy flag is `qlen > 0`), and
+//! * freed slots go to a free list; a CS step frees one slot (completion)
+//!   and reuses it (the routed replacement), so the pool never grows.
+//!
+//! Total footprint is ~28 B per task + ~12 B per node, in five
+//! allocations, regardless of n.
+
+/// Null slot / null node sentinel for the intrusive lists.
+pub(crate) const NIL: u32 = u32::MAX;
+
+/// Flat task pool + per-node FIFO queues.
+#[derive(Debug)]
+pub(crate) struct TaskPool {
+    // per-slot task fields (parallel arrays, capacity = C)
+    dispatch_step: Vec<u64>,
+    dispatch_time: Vec<f64>,
+    dispatch_prob: Vec<f64>,
+    /// next slot in the owning node's FIFO (or the free list)
+    next: Vec<u32>,
+    free_head: u32,
+    // per-node FIFO state
+    head: Vec<u32>,
+    tail: Vec<u32>,
+    qlen: Vec<u32>,
+}
+
+impl TaskPool {
+    pub fn new(nodes: usize, capacity: usize) -> TaskPool {
+        let cap = capacity as u32;
+        TaskPool {
+            dispatch_step: vec![0; capacity],
+            dispatch_time: vec![0.0; capacity],
+            dispatch_prob: vec![0.0; capacity],
+            // free list threads every slot: 0 -> 1 -> ... -> NIL
+            next: (1..=cap).map(|i| if i == cap { NIL } else { i }).collect(),
+            free_head: if capacity == 0 { NIL } else { 0 },
+            head: vec![NIL; nodes],
+            tail: vec![NIL; nodes],
+            qlen: vec![0; nodes],
+        }
+    }
+
+    #[inline]
+    pub fn qlen(&self, node: usize) -> u32 {
+        self.qlen[node]
+    }
+
+    /// The flat queue-length array (for bulk policy observation).
+    #[inline]
+    pub fn qlens(&self) -> &[u32] {
+        &self.qlen
+    }
+
+    /// Append a task to `node`'s FIFO; returns the new queue length.
+    pub fn push(&mut self, node: usize, step: u64, time: f64, prob: f64) -> u32 {
+        let slot = self.free_head;
+        assert_ne!(slot, NIL, "task pool exhausted (population exceeded C)");
+        let s = slot as usize;
+        self.free_head = self.next[s];
+        self.dispatch_step[s] = step;
+        self.dispatch_time[s] = time;
+        self.dispatch_prob[s] = prob;
+        self.next[s] = NIL;
+        if self.tail[node] == NIL {
+            self.head[node] = slot;
+        } else {
+            self.next[self.tail[node] as usize] = slot;
+        }
+        self.tail[node] = slot;
+        self.qlen[node] += 1;
+        self.qlen[node]
+    }
+
+    /// Pop the head of `node`'s FIFO; returns the task's
+    /// (dispatch_step, dispatch_time, dispatch_prob) and the new length.
+    pub fn pop(&mut self, node: usize) -> (u64, f64, f64, u32) {
+        let slot = self.head[node];
+        assert_ne!(slot, NIL, "completion event for empty queue");
+        let s = slot as usize;
+        self.head[node] = self.next[s];
+        if self.head[node] == NIL {
+            self.tail[node] = NIL;
+        }
+        self.qlen[node] -= 1;
+        let out = (
+            self.dispatch_step[s],
+            self.dispatch_time[s],
+            self.dispatch_prob[s],
+            self.qlen[node],
+        );
+        self.next[s] = self.free_head;
+        self.free_head = slot;
+        out
+    }
+
+    /// Total tasks currently queued (must equal C once initialized).
+    pub fn population(&self) -> usize {
+        self.qlen.iter().map(|&q| q as usize).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_per_node() {
+        let mut pool = TaskPool::new(3, 4);
+        assert_eq!(pool.push(1, 10, 0.5, 0.25), 1);
+        assert_eq!(pool.push(1, 11, 0.6, 0.30), 2);
+        assert_eq!(pool.push(2, 12, 0.7, 0.45), 1);
+        assert_eq!(pool.qlen(1), 2);
+        assert_eq!(pool.population(), 3);
+        let (step, time, prob, len) = pool.pop(1);
+        assert_eq!((step, len), (10, 1));
+        assert_eq!(time, 0.5);
+        assert_eq!(prob, 0.25);
+        let (step, _, _, len) = pool.pop(1);
+        assert_eq!((step, len), (11, 0));
+        assert_eq!(pool.qlen(1), 0);
+        let (step, _, _, _) = pool.pop(2);
+        assert_eq!(step, 12);
+        assert_eq!(pool.population(), 0);
+    }
+
+    #[test]
+    fn slots_are_recycled() {
+        let mut pool = TaskPool::new(2, 2);
+        pool.push(0, 1, 0.0, 0.5);
+        pool.push(0, 2, 0.0, 0.5);
+        // pool full: a pop frees exactly one slot for the next push
+        pool.pop(0);
+        pool.push(1, 3, 1.0, 0.5);
+        pool.pop(0);
+        pool.push(1, 4, 2.0, 0.5);
+        assert_eq!(pool.qlen(0), 0);
+        assert_eq!(pool.qlen(1), 2);
+        let (a, _, _, _) = pool.pop(1);
+        let (b, _, _, _) = pool.pop(1);
+        assert_eq!((a, b), (3, 4), "FIFO survives slot reuse");
+    }
+
+    #[test]
+    #[should_panic(expected = "task pool exhausted")]
+    fn overfull_pool_panics() {
+        let mut pool = TaskPool::new(1, 1);
+        pool.push(0, 0, 0.0, 1.0);
+        pool.push(0, 1, 0.0, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty queue")]
+    fn popping_empty_queue_panics() {
+        let mut pool = TaskPool::new(1, 1);
+        pool.pop(0);
+    }
+}

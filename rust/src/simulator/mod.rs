@@ -1,11 +1,18 @@
 //! Event-driven closed-network simulator — the dynamics substrate under the
 //! paper's figures (1, 5, 10–12) and the DL experiment driver.
+//!
+//! Two interchangeable engines (`engine`): the monolithic heap oracle
+//! (`Network`) and the sharded SoA engine that scales replications to
+//! n = 10^6 nodes.  They are bit-identical on a shared seed.
 
+pub mod engine;
 pub mod network;
 pub mod service;
 
+pub use engine::{
+    run, run_with_policy, transient_mi, with_engine, EngineConfig, EngineKind, EventEngine,
+};
 pub use network::{
-    run, run_with_policy, transient_mi, InitPlacement, Network, SimConfig, SimResult,
-    StepOutcome, TaskRecord,
+    InitPlacement, Network, SimConfig, SimResult, StepOutcome, TaskRecord,
 };
 pub use service::{ServiceDist, ServiceFamily};

@@ -18,12 +18,22 @@
 //! inverse-probability weight Generalized AsyncSGD needs to stay unbiased
 //! under time-varying policies.  `Network::new` wraps the config's `p` in
 //! a static policy, reproducing the original fixed-p dynamics exactly.
+//!
+//! `Network` is the **heap engine** (`engine = "heap"`): one global event
+//! heap, one `VecDeque` per node.  It doubles as the trace-equivalence
+//! oracle for the sharded engine (`simulator::engine`): both draw routing
+//! from the same sequential stream and service durations from the same
+//! keyed (node, service count) stream, so their event traces are
+//! bit-identical on a shared seed.
 
+use super::engine::calendar::Event;
+use super::engine::{
+    initial_placements, service_duration, service_seed, EngineConfig, EventEngine, ROUTE_STREAM,
+};
 use super::service::ServiceDist;
 use crate::coordinator::policy::{SamplingPolicy, StaticPolicy};
 use crate::util::rng::Rng;
 use crate::util::stats::Welford;
-use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
 
 /// Initial placement of the C tasks (the paper's `S_0`).
@@ -49,6 +59,9 @@ pub struct SimConfig {
     pub record_tasks: bool,
     /// sample queue lengths every `queue_sample_every` steps (0 = never)
     pub queue_sample_every: u64,
+    /// which event engine executes the run (never changes results — the
+    /// engines are bit-identical on a shared seed; see `simulator::engine`)
+    pub engine: EngineConfig,
 }
 
 impl SimConfig {
@@ -62,6 +75,7 @@ impl SimConfig {
             init: InitPlacement::Routed,
             record_tasks: false,
             queue_sample_every: 0,
+            engine: EngineConfig::default(),
         }
     }
 
@@ -127,39 +141,6 @@ struct Task {
     dispatch_prob: f64,
 }
 
-/// Completion event in the virtual-time heap.
-#[derive(Clone, Copy, Debug)]
-struct Event {
-    time: f64,
-    seq: u64,
-    node: u32,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
-    }
-}
-
-impl Eq for Event {}
-
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // reversed for min-heap; ties broken by seq for determinism
-        other
-            .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
-            .then(other.seq.cmp(&self.seq))
-    }
-}
-
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
 /// Aggregated results of one simulation run.
 #[derive(Clone, Debug)]
 pub struct SimResult {
@@ -218,7 +199,12 @@ impl SimResult {
 /// by the coordinator driver).
 pub struct Network {
     pub cfg: SimConfig,
-    rng: Rng,
+    /// sequential routing stream (dedicated — service draws never touch it)
+    route_rng: Rng,
+    /// root of the keyed (node, service count) duration stream
+    svc_seed: u64,
+    /// services started per node — the key of the duration stream
+    svc_count: Vec<u64>,
     policy: Box<dyn SamplingPolicy>,
     queues: Vec<VecDeque<Task>>,
     heap: BinaryHeap<Event>,
@@ -246,8 +232,12 @@ pub struct StepOutcome {
 }
 
 impl Network {
-    /// Fixed-p engine: wraps `cfg.p` in a [`StaticPolicy`].  Byte-for-byte
-    /// the original dynamics (same alias table, same RNG stream).
+    /// Fixed-p engine: wraps `cfg.p` in a [`StaticPolicy`] — the same
+    /// dynamics as an explicit static policy (same alias table, same
+    /// streams).  Note: the engine refactor re-keyed service durations by
+    /// (node, service count), so same-seed traces differ from pre-engine
+    /// releases; what is guaranteed is bit-identity across engines, shard
+    /// counts, and thread counts on a shared seed.
     pub fn new(cfg: SimConfig) -> Result<Network, String> {
         let policy = Box::new(StaticPolicy::new(cfg.p.clone())?);
         Network::with_policy(cfg, policy)
@@ -269,34 +259,12 @@ impl Network {
                 policy.n()
             ));
         }
-        let mut rng = Rng::new(cfg.seed).derive(0x51_3A_77);
-        // initial placement S_0 — (node, selection probability) pairs
-        let placements: Vec<(usize, f64)> = match cfg.init {
-            InitPlacement::OnePerNode => {
-                (0..n).map(|i| (i, policy.prob_of(i))).collect()
-            }
-            InitPlacement::RoundRobin => (0..cfg.concurrency)
-                .map(|j| (j % n, policy.prob_of(j % n)))
-                .collect(),
-            InitPlacement::Routed => {
-                let mut lens = vec![0u32; n];
-                let incremental = policy.incremental();
-                (0..cfg.concurrency)
-                    .map(|_| {
-                        if !incremental {
-                            policy.observe(&lens);
-                        }
-                        let node = policy.route(&mut rng);
-                        let prob = policy.prob_of(node);
-                        lens[node] += 1;
-                        if incremental {
-                            policy.observe_node(node, lens[node]);
-                        }
-                        (node, prob)
-                    })
-                    .collect()
-            }
-        };
+        let mut route_rng = Rng::new(cfg.seed).derive(ROUTE_STREAM);
+        // initial placement S_0 — (node, selection probability) pairs,
+        // shared with the sharded engine so routing streams decompose
+        // identically
+        let placements = initial_placements(&cfg, policy.as_mut(), &mut route_rng);
+        let svc_seed = service_seed(cfg.seed);
         let mut net = Network {
             queues: vec![VecDeque::new(); n],
             heap: BinaryHeap::new(),
@@ -304,9 +272,11 @@ impl Network {
             now: 0.0,
             step: 0,
             busy_count: 0,
+            svc_seed,
+            svc_count: vec![0; n],
             policy,
             cfg,
-            rng,
+            route_rng,
             lens_buf: Vec::with_capacity(n),
         };
         for (node, prob) in placements {
@@ -333,7 +303,9 @@ impl Network {
     }
 
     fn schedule_service(&mut self, node: u32, t: f64) {
-        let dur = self.cfg.service[node as usize].sample(&mut self.rng);
+        let count = self.svc_count[node as usize];
+        self.svc_count[node as usize] = count + 1;
+        let dur = service_duration(self.svc_seed, &self.cfg.service[node as usize], node, count);
         self.seq += 1;
         self.heap.push(Event { time: t + dur, seq: self.seq, node });
     }
@@ -393,7 +365,7 @@ impl Network {
             self.lens_buf.extend(self.queues.iter().map(|q| q.len() as u32));
             self.policy.observe(&self.lens_buf);
         }
-        let next = self.policy.route(&mut self.rng) as u32;
+        let next = self.policy.route(&mut self.route_rng) as u32;
         let next_prob = self.policy.prob_of(next as usize);
         let next_dispatch_step = self.step + 1;
         self.arrive(next, next_dispatch_step, self.now, next_prob);
@@ -418,127 +390,36 @@ impl Network {
     }
 }
 
-/// Run a full simulation per the config (fixed-p static routing).
-pub fn run(cfg: SimConfig) -> Result<SimResult, String> {
-    let policy = Box::new(StaticPolicy::new(cfg.p.clone())?);
-    run_with_policy(cfg, policy)
-}
+impl EventEngine for Network {
+    fn advance(&mut self) -> Option<StepOutcome> {
+        Network::advance(self)
+    }
 
-/// Run a full simulation under an arbitrary sampling policy — the sweep
-/// engine's replication kernel.
-///
-/// Per-step cost is O(log C) (event heap) plus the policy's per-dispatch
-/// cost — O(1) for alias-backed static policies, O(log n) for the Fenwick
-/// adaptive policy.  Queue-occupancy time-averages are accumulated lazily
-/// per node (only the two queues that change per step are touched), so a
-/// replication with n = 10^5–10^6 nodes never pays an O(n) scan per CS
-/// step.
-pub fn run_with_policy(
-    cfg: SimConfig,
-    policy: Box<dyn SamplingPolicy>,
-) -> Result<SimResult, String> {
-    let n = cfg.p.len();
-    let steps = cfg.steps;
-    let record_tasks = cfg.record_tasks;
-    let sample_every = cfg.queue_sample_every;
-    let mut net = Network::with_policy(cfg, policy)?;
-    let mut res = SimResult {
-        delay_steps: vec![Welford::new(); n],
-        delay_time: vec![Welford::new(); n],
-        completions: vec![0; n],
-        dispatches: vec![0; n],
-        tau_max: 0,
-        tau_c: 0.0,
-        tau_sum: vec![0.0; n],
-        total_time: 0.0,
-        tasks: Vec::new(),
-        queue_samples: Vec::new(),
-        mean_queue: vec![0.0; n],
-    };
-    let mut busy_sum = 0u64;
-    // lazy time-weighted queue integrals: each node's occupancy is
-    // piecewise constant, so ∫X_i dt only needs flushing when X_i changes
-    // (the completed node and the dispatch target) and once at the end
-    let mut area: Vec<f64> = vec![0.0; n];
-    let mut last_change: Vec<f64> = vec![0.0; n];
-    let mut q_len: Vec<u32> = (0..n).map(|i| net.queue_len(i) as u32).collect();
-    let flush = |i: usize, t: f64, new_len: u32, area: &mut [f64], lc: &mut [f64], ql: &mut [u32]| {
-        area[i] += ql[i] as f64 * (t - lc[i]);
-        lc[i] = t;
-        ql[i] = new_len;
-    };
-    for k in 0..steps {
-        let out = net.advance().ok_or("network drained")?;
-        let i = out.completed_node as usize;
-        let j = out.next_node as usize;
-        flush(i, out.time, net.queue_len(i) as u32, &mut area, &mut last_change, &mut q_len);
-        flush(j, out.time, net.queue_len(j) as u32, &mut area, &mut last_change, &mut q_len);
-        let d = out.record.delay_steps();
-        res.delay_steps[i].push(d as f64);
-        res.delay_time[i].push(out.record.complete_time - out.record.dispatch_time);
-        res.completions[i] += 1;
-        res.dispatches[j] += 1;
-        res.tau_sum[i] += d as f64;
-        res.tau_max = res.tau_max.max(d);
-        busy_sum += net.busy_nodes() as u64;
-        if record_tasks {
-            res.tasks.push(out.record);
-        }
-        if sample_every > 0 && k % sample_every == 0 {
-            res.queue_samples.push((k, q_len.clone()));
-        }
+    fn queue_len(&self, i: usize) -> usize {
+        Network::queue_len(self, i)
     }
-    res.tau_c = busy_sum as f64 / steps.max(1) as f64;
-    res.total_time = net.now;
-    let denom = net.now.max(f64::MIN_POSITIVE);
-    for i in 0..n {
-        area[i] += q_len[i] as f64 * (net.now - last_change[i]);
-        res.mean_queue[i] = area[i] / denom;
-    }
-    debug_assert_eq!(net.population(), net.cfg.concurrency);
-    Ok(res)
-}
 
-/// Transient estimation of m_{i,k}^T (Fig 1): average, over `reps`
-/// replications, of the delay of the task dispatched at step k *to node i*
-/// (conditional on that routing; unconditional steps are skipped).
-/// Returns (k, mean delay, count) for k in 0..steps.
-pub fn transient_mi(
-    base: &SimConfig,
-    node: usize,
-    reps: u64,
-) -> Result<Vec<(u64, f64, u64)>, String> {
-    let steps = base.steps;
-    let mut sum = vec![0.0f64; steps as usize];
-    let mut cnt = vec![0u64; steps as usize];
-    for rep in 0..reps {
-        let mut cfg = base.clone();
-        cfg.seed = base.seed.wrapping_add(rep.wrapping_mul(0x9E3779B9));
-        cfg.record_tasks = false;
-        let mut net = Network::new(cfg)?;
-        // tasks dispatched at step k: completion records carry dispatch_step
-        for _ in 0..steps {
-            let out = net.advance().ok_or("drained")?;
-            if out.completed_node as usize == node {
-                let ds = out.record.dispatch_step;
-                if ds < steps {
-                    sum[ds as usize] += out.record.delay_steps() as f64;
-                    cnt[ds as usize] += 1;
-                }
-            }
-        }
+    fn busy_nodes(&self) -> usize {
+        Network::busy_nodes(self)
     }
-    Ok((0..steps)
-        .map(|k| {
-            let c = cnt[k as usize];
-            (k, if c > 0 { sum[k as usize] / c as f64 } else { f64::NAN }, c)
-        })
-        .collect())
+
+    fn now(&self) -> f64 {
+        self.now
+    }
+
+    fn population(&self) -> usize {
+        Network::population(self)
+    }
+
+    fn policy_name(&self) -> String {
+        Network::policy_name(self)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::simulator::engine::{run, transient_mi};
     use crate::simulator::service::ServiceFamily;
 
     fn two_cluster_cfg(

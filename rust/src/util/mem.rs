@@ -1,0 +1,56 @@
+//! Process-memory introspection for the sweep's BENCH trajectories.
+//!
+//! Linux-only (reads `/proc/self/status`); other platforms report `None`
+//! and the sweep simply omits the metric.  Note the high-water mark is
+//! **process-wide and monotone**: a replication's value is the peak of
+//! everything the process has run up to and including it, so in a
+//! mixed-size sweep a small cell that runs after (or concurrently with) a
+//! big one inherits the big cell's peak.  Read it as an upper bound on
+//! "memory needed to run the sweep up to here" — for a per-cell footprint,
+//! run the cell in its own sweep/process.
+
+/// Peak resident set size (VmHWM) in bytes, if the platform exposes it.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// Peak resident set size in MiB as f64 (NaN when unavailable), shaped for
+/// direct insertion into a metrics map.
+pub fn peak_rss_mib() -> f64 {
+    match peak_rss_bytes() {
+        Some(b) => b as f64 / (1024.0 * 1024.0),
+        None => f64::NAN,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_rss_is_positive_when_available() {
+        if let Some(b) = peak_rss_bytes() {
+            assert!(b > 0);
+            // a running test binary resides in at least a megabyte
+            assert!(b > 1 << 20, "VmHWM {b} bytes is implausibly small");
+        }
+    }
+
+    #[test]
+    fn peak_rss_is_monotone() {
+        let before = peak_rss_bytes();
+        let v: Vec<u8> = vec![1; 8 << 20];
+        std::hint::black_box(&v);
+        let after = peak_rss_bytes();
+        if let (Some(a), Some(b)) = (before, after) {
+            assert!(b >= a, "high-water mark went backwards: {a} -> {b}");
+        }
+    }
+}

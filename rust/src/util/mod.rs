@@ -9,6 +9,7 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod mem;
 pub mod proptest;
 pub mod rng;
 pub mod sampler;

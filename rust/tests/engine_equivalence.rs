@@ -1,0 +1,316 @@
+//! Trace-equivalence contract of the event engines.
+//!
+//! `engine = "heap"` (the original monolithic `Network`) is the oracle;
+//! `engine = "sharded"` must produce a bit-identical `SimResult` for
+//! every shard count and every thread count on a shared seed, across
+//! policies (static / uniform / optimal / adaptive / adaptive-exact),
+//! service families, and initial placements.  The equivalence holds
+//! because routing draws come from one sequential stream consumed in
+//! CS-step order and service durations are keyed by (node, service
+//! count) — see `simulator::engine`.
+//!
+//! Also carries the million-node acceptance check: a sweep cell with
+//! n = 10^6 clients completes through the sharded engine, and a 10^5-node
+//! replication matches the log-space Buzen product form.
+
+use fedqueue::coordinator::policy::{
+    AdaptiveQueuePolicy, FenwickAdaptivePolicy, PolicyCtx, PolicyRegistry, SamplingPolicy,
+};
+use fedqueue::coordinator::sweep::{run_sweep, SweepSpec};
+use fedqueue::queueing::ClosedNetwork;
+use fedqueue::simulator::{
+    run_with_policy, EngineConfig, EngineKind, InitPlacement, ServiceDist, ServiceFamily,
+    SimConfig, SimResult,
+};
+use fedqueue::util::proptest::{check, Config as PropConfig, Gen};
+use fedqueue::util::rng::Rng;
+
+/// Every field of a `SimResult`, flattened to bits — the comparison unit.
+fn digest(r: &SimResult) -> Vec<u64> {
+    let mut d = Vec::new();
+    let f = |x: f64| x.to_bits();
+    for w in r.delay_steps.iter().chain(r.delay_time.iter()) {
+        d.push(w.count());
+        d.push(f(w.mean()));
+        d.push(f(w.min()));
+        d.push(f(w.max()));
+    }
+    d.extend(r.completions.iter().copied());
+    d.extend(r.dispatches.iter().copied());
+    d.push(r.tau_max);
+    d.push(f(r.tau_c));
+    d.extend(r.tau_sum.iter().map(|&x| f(x)));
+    d.push(f(r.total_time));
+    d.extend(r.mean_queue.iter().map(|&x| f(x)));
+    for t in &r.tasks {
+        d.push(t.node as u64);
+        d.push(t.dispatch_step);
+        d.push(t.complete_step);
+        d.push(f(t.dispatch_time));
+        d.push(f(t.complete_time));
+        d.push(f(t.dispatch_prob));
+    }
+    for (step, qs) in &r.queue_samples {
+        d.push(*step);
+        d.extend(qs.iter().map(|&q| q as u64));
+    }
+    d
+}
+
+const SHARD_GRID: [usize; 3] = [1, 4, 7];
+const THREAD_GRID: [usize; 2] = [1, 4];
+
+/// Assert heap ≡ sharded for every (S, threads) combination.
+fn assert_equivalent(
+    mut cfg: SimConfig,
+    mk_policy: impl Fn() -> Box<dyn SamplingPolicy>,
+) -> Result<(), String> {
+    cfg.record_tasks = true;
+    cfg.queue_sample_every = 97;
+    cfg.engine = EngineConfig::heap();
+    let oracle = digest(&run_with_policy(cfg.clone(), mk_policy())?);
+    for s in SHARD_GRID {
+        for t in THREAD_GRID {
+            let mut c = cfg.clone();
+            c.engine = EngineConfig { kind: EngineKind::Sharded, shards: s, threads: t };
+            let got = digest(&run_with_policy(c, mk_policy())?);
+            if got != oracle {
+                return Err(format!("sharded(S={s}, threads={t}) diverged from heap"));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn two_cluster(n: usize, c: usize, steps: u64, seed: u64, family: ServiceFamily) -> SimConfig {
+    let rates: Vec<f64> = (0..n).map(|i| if i < n / 2 { 4.0 } else { 1.0 }).collect();
+    SimConfig {
+        seed,
+        ..SimConfig::new(
+            vec![1.0 / n as f64; n],
+            ServiceDist::from_rates(&rates, family),
+            c,
+            steps,
+        )
+    }
+}
+
+fn ctx(n: usize, c: usize, steps: u64, gamma: f64) -> PolicyCtx {
+    PolicyCtx {
+        n,
+        base_p: vec![1.0 / n as f64; n],
+        gamma,
+        n_fast: n / 2,
+        mu_fast: 4.0,
+        mu_slow: 1.0,
+        concurrency: c,
+        steps,
+    }
+}
+
+#[test]
+fn sharded_matches_heap_for_every_builtin_policy() {
+    let (n, c, steps) = (14, 9, 2_000);
+    for policy in PolicyRegistry::builtin().names() {
+        let cfg = two_cluster(n, c, steps, 31, ServiceFamily::Exponential);
+        let pc = ctx(n, c, steps, 0.6);
+        assert_equivalent(cfg, || PolicyRegistry::builtin().build(&policy, &pc).unwrap())
+            .unwrap_or_else(|e| panic!("policy {policy}: {e}"));
+    }
+}
+
+#[test]
+fn sharded_matches_heap_across_service_families() {
+    for family in [
+        ServiceFamily::Exponential,
+        ServiceFamily::Deterministic,
+        ServiceFamily::LogNormal(0.5),
+    ] {
+        let cfg = two_cluster(10, 6, 1_500, 7, family);
+        let p = cfg.p.clone();
+        assert_equivalent(cfg, || {
+            Box::new(fedqueue::coordinator::StaticPolicy::new(p.clone()).unwrap())
+        })
+        .unwrap_or_else(|e| panic!("{family:?}: {e}"));
+    }
+}
+
+#[test]
+fn sharded_matches_heap_across_initial_placements() {
+    for init in [InitPlacement::OnePerNode, InitPlacement::RoundRobin, InitPlacement::Routed] {
+        let c = if init == InitPlacement::OnePerNode { 12 } else { 5 };
+        let mut cfg = two_cluster(12, c, 1_200, 13, ServiceFamily::Exponential);
+        cfg.init = init;
+        let p = cfg.p.clone();
+        assert_equivalent(cfg, || {
+            Box::new(fedqueue::coordinator::StaticPolicy::new(p.clone()).unwrap())
+        })
+        .unwrap_or_else(|e| panic!("{init:?}: {e}"));
+    }
+}
+
+/// Randomized configuration for the property harness.
+#[derive(Clone, Debug)]
+struct SimCase {
+    n: usize,
+    c: usize,
+    steps: u64,
+    seed: u64,
+    gamma: f64,
+    family: usize,
+    policy: usize,
+}
+
+struct SimCaseGen;
+
+impl Gen for SimCaseGen {
+    type Value = SimCase;
+
+    fn generate(&self, rng: &mut Rng) -> SimCase {
+        SimCase {
+            n: 2 + rng.usize_below(19),
+            c: 1 + rng.usize_below(24),
+            steps: 200 + rng.below(1_000),
+            seed: rng.next_u64(),
+            gamma: rng.range_f64(0.0, 1.5),
+            family: rng.usize_below(3),
+            policy: rng.usize_below(3),
+        }
+    }
+
+    fn shrink(&self, v: &SimCase) -> Vec<SimCase> {
+        let mut out = Vec::new();
+        if v.n > 2 {
+            out.push(SimCase { n: 2 + (v.n - 2) / 2, ..v.clone() });
+        }
+        if v.c > 1 {
+            out.push(SimCase { c: 1 + (v.c - 1) / 2, ..v.clone() });
+        }
+        if v.steps > 200 {
+            out.push(SimCase { steps: 200 + (v.steps - 200) / 2, ..v.clone() });
+        }
+        out
+    }
+}
+
+#[test]
+fn proptest_sharded_equals_heap_on_random_configs() {
+    check(
+        "sharded-equals-heap",
+        &SimCaseGen,
+        &PropConfig { cases: 32, ..Default::default() },
+        |case| {
+            let family = [
+                ServiceFamily::Exponential,
+                ServiceFamily::Deterministic,
+                ServiceFamily::LogNormal(0.5),
+            ][case.family];
+            let cfg = two_cluster(case.n, case.c, case.steps, case.seed, family);
+            let base = cfg.p.clone();
+            let gamma = case.gamma;
+            match case.policy {
+                0 => assert_equivalent(cfg, || {
+                    Box::new(fedqueue::coordinator::StaticPolicy::new(base.clone()).unwrap())
+                }),
+                1 => assert_equivalent(cfg, || {
+                    Box::new(FenwickAdaptivePolicy::new(base.clone(), gamma).unwrap())
+                }),
+                _ => assert_equivalent(cfg, || {
+                    Box::new(AdaptiveQueuePolicy::new(base.clone(), gamma).unwrap())
+                }),
+            }
+        },
+    );
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "release-only: n = 100_000 nodes (CI stat-tests job)")]
+fn sharded_engine_matches_product_form_at_scale() {
+    // n = 10^5 heterogeneous nodes through the sharded engine with shard
+    // workers; the time-weighted mean queues must match the log-space
+    // Buzen reference (which the old linear-space table could not even
+    // represent at this n).
+    let n = 100_000usize;
+    let c = 512usize;
+    let steps = 2_000_000u64;
+    let p = vec![1.0 / n as f64; n];
+    let rates: Vec<f64> = (0..n).map(|i| if i < n / 2 { 4.0 } else { 1.0 }).collect();
+    let cfg = SimConfig {
+        seed: 23,
+        engine: EngineConfig::sharded(8, 4),
+        ..SimConfig::new(
+            p.clone(),
+            ServiceDist::from_rates(&rates, ServiceFamily::Exponential),
+            c,
+            steps,
+        )
+    };
+    let policy = PolicyRegistry::builtin()
+        .build("uniform", &ctx(n, c, steps, 0.0))
+        .unwrap();
+    let res = run_with_policy(cfg, policy).unwrap();
+    assert_eq!(res.completions.iter().sum::<u64>(), steps);
+    // exact invariant: the time-weighted queue lengths always sum to C
+    let total_q: f64 = res.mean_queue.iter().sum();
+    assert!(
+        (total_q - c as f64).abs() < 1e-6 * c as f64,
+        "Σ mean_queue = {total_q}, want {c}"
+    );
+    let b = ClosedNetwork::new(p, rates).unwrap().buzen(c);
+    let sim_fast: f64 = res.mean_queue[..n / 2].iter().sum::<f64>() / (n / 2) as f64;
+    let sim_slow: f64 = res.mean_queue[n / 2..].iter().sum::<f64>() / (n - n / 2) as f64;
+    let th_fast = b.mean_queue(0, c);
+    let th_slow = b.mean_queue(n - 1, c);
+    assert!(sim_slow > sim_fast, "slow queues dominate: {sim_fast} vs {sim_slow}");
+    assert!(
+        (sim_fast - th_fast).abs() < 0.25 * th_fast,
+        "fast cluster: sim {sim_fast} vs product form {th_fast}"
+    );
+    assert!(
+        (sim_slow - th_slow).abs() < 0.25 * th_slow,
+        "slow cluster: sim {sim_slow} vs product form {th_slow}"
+    );
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "release-only: n = 10^6 nodes (CI stat-tests job)")]
+fn million_node_sweep_cell_completes_on_sharded_engine() {
+    // the ISSUE-3 acceptance criterion: `fedqueue sweep` completes an
+    // n = 10^6 replication cell via the sharded engine (alias routing +
+    // Fenwick adaptive both covered), with perf telemetry attached
+    let grid = r#"
+[sweep]
+name = "million"
+mode = "simulate"
+seeds = 1
+base_seed = 99
+threads = 4
+engine = "sharded"
+shards = 8
+big_n = 500000
+
+[grid]
+clients = [1000000]
+concurrency = [50000]
+steps = [200000]
+mu_fast = [4.0]
+slow_fraction = [0.5]
+gamma = [0.3]
+policies = ["uniform", "adaptive"]
+"#;
+    let spec = SweepSpec::from_toml(grid).unwrap();
+    // wide cells: the scheduler hands each replication the thread budget
+    for cell in &spec.cells {
+        let e = spec.engine_for_cell(cell, 4);
+        assert_eq!(e.kind, EngineKind::Sharded);
+        assert_eq!(e.threads, 4);
+    }
+    let report = run_sweep(&spec).unwrap();
+    assert_eq!(report.cells.len(), 2);
+    for c in &report.cells {
+        assert_eq!(c.engine, "sharded(S=8)");
+        assert_eq!(c.metrics["total_time"].count(), 1, "{}", c.cell.label());
+        assert!(c.metrics["delay_slow"].mean() > c.metrics["delay_fast"].mean());
+        assert!(c.perf["events_per_sec"].mean() > 0.0);
+    }
+}
