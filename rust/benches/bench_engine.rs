@@ -1,22 +1,30 @@
 //! Engine throughput: the monolithic heap oracle vs the sharded SoA
-//! engine, full replications (construction + run, exactly what a sweep
-//! cell pays per seed).
+//! engine vs the batch replication arena, full replications (construction
+//! + run, exactly what a sweep cell pays per seed).
 //!
 //! Doubles as the CI regression gate: `--assert-speedup X` exits nonzero
-//! unless the sequential sharded engine beats the heap engine by at least
-//! X× at n = 10^5, S = 8 (the ISSUE-3 acceptance floor is 2×).  At that
-//! scale the heap engine allocates ~n `VecDeque`s and walks a single
-//! ~megabyte event heap, while the sharded engine runs on five flat
-//! arrays and eight L2-resident calendars.
+//! unless BOTH
 //!
-//!     cargo bench --bench bench_engine -- --quick --assert-speedup 2
+//! * the sequential sharded engine beats the heap engine by at least X×
+//!   at n = 10^5, S = 8 (the ISSUE-3 acceptance floor is 2×), and
+//! * the batch arena beats the one-arena-per-replication loop by at least
+//!   X× at n = 10^4, R = 32 (the ISSUE-4 acceptance floor is 2×) — the
+//!   loop baseline is R separate heap replications, i.e. exactly what the
+//!   sweep scheduler ran per small-n cell before the batch engine.
+//!
+//! `--json <path>` additionally writes every measured throughput and the
+//! gate ratios as a JSON artifact (the CI perf-trajectory upload).
+//!
+//!     cargo bench --bench bench_engine -- --quick --assert-speedup 2 \
+//!         --json BENCH_engine.json
 
 use fedqueue::coordinator::StaticPolicy;
 use fedqueue::simulator::{
-    run_with_policy, EngineConfig, ServiceDist, ServiceFamily, SimConfig,
+    run_batch, run_with_policy, EngineConfig, ServiceDist, ServiceFamily, SimConfig,
 };
-use fedqueue::util::bench::{black_box, Bencher};
+use fedqueue::util::bench::{black_box, Bencher, JsonReport};
 use fedqueue::util::cli::Args;
+use fedqueue::util::rng::stream_seed;
 
 fn cfg(n: usize, c: usize, steps: u64, engine: EngineConfig) -> SimConfig {
     let rates: Vec<f64> = (0..n).map(|i| if i < n / 2 { 4.0 } else { 1.0 }).collect();
@@ -34,7 +42,7 @@ fn cfg(n: usize, c: usize, steps: u64, engine: EngineConfig) -> SimConfig {
 
 /// One full replication (policy + engine construction + run), per-second
 /// step throughput.
-fn bench_replication(b: &Bencher, name: &str, base: &SimConfig) -> f64 {
+fn bench_replication(b: &Bencher, report: &mut JsonReport, name: &str, base: &SimConfig) -> f64 {
     let steps = base.steps;
     let r = b.run(name, || {
         let policy = Box::new(StaticPolicy::new(base.p.clone()).unwrap());
@@ -43,6 +51,47 @@ fn bench_replication(b: &Bencher, name: &str, base: &SimConfig) -> f64 {
     });
     let per_sec = r.throughput(steps as f64);
     println!("    -> {:.2} M steps/s", per_sec / 1e6);
+    report.throughput(name, per_sec);
+    per_sec
+}
+
+/// The sweep cell's ensemble unit: R replications on independent streams.
+/// `engine = None` runs the batch arena; `Some(e)` runs the
+/// one-arena-per-replication loop on engine `e`.  Throughput counts ALL
+/// R·steps events, so the ratio is a true wall-clock speedup.
+fn bench_ensemble(
+    b: &Bencher,
+    report: &mut JsonReport,
+    name: &str,
+    base: &SimConfig,
+    reps: usize,
+    engine: Option<EngineConfig>,
+) -> f64 {
+    let seeds: Vec<u64> = (0..reps as u64).map(|s| stream_seed(7, &[0, s])).collect();
+    let r = b.run(name, || match engine {
+        None => {
+            let out = run_batch(base, &seeds, |_| {
+                Ok(Box::new(StaticPolicy::new(base.p.clone()).unwrap()))
+            })
+            .unwrap();
+            black_box(out.len());
+        }
+        Some(e) => {
+            for &seed in &seeds {
+                let mut c = base.clone();
+                c.seed = seed;
+                c.engine = e;
+                // same routing distribution as the batch arm — the gate
+                // must compare identical systems
+                let policy = Box::new(StaticPolicy::new(base.p.clone()).unwrap());
+                let res = run_with_policy(c, policy).unwrap();
+                black_box(res.tau_max);
+            }
+        }
+    });
+    let per_sec = r.throughput((reps as u64 * base.steps) as f64);
+    println!("    -> {:.2} M steps/s across R={reps}", per_sec / 1e6);
+    report.throughput(name, per_sec);
     per_sec
 }
 
@@ -60,25 +109,29 @@ fn main() {
         }
     };
     let b = if args.has("quick") { Bencher::quick() } else { Bencher::default() };
-    println!("# bench_engine — heap vs sharded replication throughput");
+    let mut report = JsonReport::new("bench_engine");
+    println!("# bench_engine — heap vs sharded vs batch replication throughput");
 
-    let mut gate: Option<(f64, f64)> = None; // (heap, sharded S=8) at n = 1e5
+    let mut shard_gate: Option<(f64, f64)> = None; // (heap, sharded S=8) at n = 1e5
     for (n, c, steps) in [
         (10_000usize, 10_000usize, 20_000u64),
         (100_000, 100_000, 25_000),
     ] {
         let heap = bench_replication(
             &b,
+            &mut report,
             &format!("engine/heap/n={n}"),
             &cfg(n, c, steps, EngineConfig::heap()),
         );
         let s1 = bench_replication(
             &b,
+            &mut report,
             &format!("engine/sharded-S1/n={n}"),
             &cfg(n, c, steps, EngineConfig::sharded(1, 1)),
         );
         let s8 = bench_replication(
             &b,
+            &mut report,
             &format!("engine/sharded-S8/n={n}"),
             &cfg(n, c, steps, EngineConfig::sharded(8, 1)),
         );
@@ -88,21 +141,90 @@ fn main() {
             s8 / heap
         );
         if n == 100_000 {
-            gate = Some((heap, s8));
+            shard_gate = Some((heap, s8));
         }
+    }
+
+    // the batch gate: a 32-seed ensemble at n = 10^4, arena vs loop —
+    // amortized construction + vectorized exponential sampling vs 32
+    // arenas built and torn down in sequence
+    let (n, c, steps, reps) = (10_000usize, 10_000usize, 5_000u64, 32usize);
+    let base = cfg(n, c, steps, EngineConfig::batch());
+    let loop_heap = bench_ensemble(
+        &b,
+        &mut report,
+        &format!("ensemble/loop-heap/n={n}/R={reps}"),
+        &base,
+        reps,
+        Some(EngineConfig::heap()),
+    );
+    let loop_soa = bench_ensemble(
+        &b,
+        &mut report,
+        &format!("ensemble/loop-sharded-S1/n={n}/R={reps}"),
+        &base,
+        reps,
+        Some(EngineConfig::sharded(1, 1)),
+    );
+    let batched = bench_ensemble(
+        &b,
+        &mut report,
+        &format!("ensemble/batch-arena/n={n}/R={reps}"),
+        &base,
+        reps,
+        None,
+    );
+    println!(
+        "    == ensemble n={n} R={reps}: batch {:.2}x over heap loop, {:.2}x over SoA loop",
+        batched / loop_heap,
+        batched / loop_soa
+    );
+
+    let (heap, sharded) = shard_gate.expect("n = 100_000 case always runs");
+    let shard_speedup = sharded / heap;
+    let batch_speedup = batched / loop_heap;
+    report.speedup("sharded_S8_vs_heap_n=100000", shard_speedup);
+    report.speedup("batch_R32_vs_heap_loop_n=10000", batch_speedup);
+    report.speedup("batch_R32_vs_soa_loop_n=10000", batched / loop_soa);
+
+    // write the artifact BEFORE gating so a regression still leaves its
+    // measurements behind for the perf-trajectory diff
+    if let Some(path) = args.get("json") {
+        if let Err(e) = report.write(path) {
+            eprintln!("bench_engine: --json {e}");
+            std::process::exit(2);
+        }
+        println!("wrote {path}");
     }
 
     if let Some(min) = args.get("assert-speedup") {
         let min: f64 = min.parse().expect("--assert-speedup expects a number");
-        let (heap, sharded) = gate.expect("n = 100_000 case always runs");
-        let speedup = sharded / heap;
-        if speedup < min {
+        let mut failed = false;
+        if shard_speedup < min {
             eprintln!(
-                "FAIL: sharded engine only {speedup:.2}x over heap at n=100_000, S=8 \
+                "FAIL: sharded engine only {shard_speedup:.2}x over heap at n=100_000, S=8 \
                  (required {min}x)"
             );
+            failed = true;
+        } else {
+            println!(
+                "OK: sharded engine {shard_speedup:.2}x over heap at n=100_000, S=8 (>= {min}x)"
+            );
+        }
+        if batch_speedup < min {
+            eprintln!(
+                "FAIL: batch arena only {batch_speedup:.2}x over the per-replication loop at \
+                 n=10_000, R=32 (required {min}x)"
+            );
+            failed = true;
+        } else {
+            println!(
+                "OK: batch arena {batch_speedup:.2}x over the per-replication loop at n=10_000, \
+                 R=32 (>= {min}x)"
+            );
+        }
+        if failed {
             std::process::exit(1);
         }
-        println!("OK: sharded engine {speedup:.2}x over heap at n=100_000, S=8 (>= {min}x)");
     }
 }

@@ -1,18 +1,23 @@
 //! Routing-sampler bench: dispatch throughput of the O(n) linear CDF scan
-//! vs the O(1) alias table vs the O(log n) Fenwick tree, plus the full
-//! adaptive-policy step (observe + route) exact vs Fenwick-backed.
+//! vs the O(1) alias table vs the O(log n) Fenwick tree, the full
+//! adaptive-policy step (observe + route) exact vs Fenwick-backed, and
+//! the batched keyed-exponential service path vs per-draw generator
+//! construction.
 //!
 //! Doubles as the CI regression gate: `--assert-speedup X` exits nonzero
 //! unless the alias sampler beats the linear scan by at least X× at
-//! n = 10_000 (the ISSUE-2 acceptance floor is 10×).
+//! n = 10_000 (the ISSUE-2 acceptance floor is 10×).  `--json <path>`
+//! writes every throughput + the gate ratio as a JSON artifact (the CI
+//! perf-trajectory upload).
 //!
-//!     cargo bench --bench bench_sampler -- --quick --assert-speedup 10
+//!     cargo bench --bench bench_sampler -- --quick --assert-speedup 10 \
+//!         --json BENCH_sampler.json
 
 use fedqueue::coordinator::policy::{AdaptiveQueuePolicy, FenwickAdaptivePolicy, SamplingPolicy};
-use fedqueue::util::bench::{black_box, Bencher};
+use fedqueue::util::bench::{black_box, Bencher, JsonReport};
 use fedqueue::util::cli::Args;
-use fedqueue::util::rng::{AliasTable, Rng};
-use fedqueue::util::sampler::{linear_route, FenwickSampler};
+use fedqueue::util::rng::{stream_seed, AliasTable, Rng};
+use fedqueue::util::sampler::{batch_exponential, linear_route, FenwickSampler};
 
 /// Two-cluster distribution with mild skew (the paper's shape).
 fn two_cluster_p(n: usize) -> Vec<f64> {
@@ -23,7 +28,12 @@ fn two_cluster_p(n: usize) -> Vec<f64> {
 
 const DRAWS_PER_ITER: u64 = 1_000;
 
-fn bench_draws(b: &Bencher, name: &str, mut draw: impl FnMut(&mut Rng) -> usize) -> f64 {
+fn bench_draws(
+    b: &Bencher,
+    report: &mut JsonReport,
+    name: &str,
+    mut draw: impl FnMut(&mut Rng) -> usize,
+) -> f64 {
     let mut rng = Rng::new(7);
     let r = b.run(name, || {
         let mut acc = 0usize;
@@ -34,6 +44,7 @@ fn bench_draws(b: &Bencher, name: &str, mut draw: impl FnMut(&mut Rng) -> usize)
     });
     let per_sec = r.throughput(DRAWS_PER_ITER as f64);
     println!("    -> {:.2} M draws/s", per_sec / 1e6);
+    report.throughput(name, per_sec);
     per_sec
 }
 
@@ -51,18 +62,23 @@ fn main() {
         }
     };
     let b = if args.has("quick") { Bencher::quick() } else { Bencher::default() };
+    let mut report = JsonReport::new("bench_sampler");
     println!("# bench_sampler — routing dispatch throughput");
 
     let mut gate: Option<(f64, f64)> = None; // (linear, alias) at n = 10_000
     for n in [1_000usize, 10_000, 100_000] {
         let p = two_cluster_p(n);
-        let linear = bench_draws(&b, &format!("route/linear-scan/n={n}"), |rng| {
+        let linear = bench_draws(&b, &mut report, &format!("route/linear-scan/n={n}"), |rng| {
             linear_route(&p, rng.uniform())
         });
         let alias_t = AliasTable::new(&p).unwrap();
-        let alias = bench_draws(&b, &format!("route/alias/n={n}"), |rng| alias_t.sample(rng));
+        let alias = bench_draws(&b, &mut report, &format!("route/alias/n={n}"), |rng| {
+            alias_t.sample(rng)
+        });
         let fen = FenwickSampler::new(&p).unwrap();
-        let fenwick = bench_draws(&b, &format!("route/fenwick/n={n}"), |rng| fen.sample(rng));
+        let fenwick = bench_draws(&b, &mut report, &format!("route/fenwick/n={n}"), |rng| {
+            fen.sample(rng)
+        });
         println!(
             "    == n={n}: alias {:.0}x, fenwick {:.0}x over linear",
             alias / linear,
@@ -79,7 +95,7 @@ fn main() {
     let mut lens = vec![0u32; n];
     let mut exact = AdaptiveQueuePolicy::new(base.clone(), 0.5).unwrap();
     let mut i = 0usize;
-    let exact_rate = bench_draws(&b, "adaptive-step/exact-O(n)/n=10000", |rng| {
+    let exact_rate = bench_draws(&b, &mut report, "adaptive-step/exact-O(n)/n=10000", |rng| {
         i = (i + 1) % n;
         lens[i] = (lens[i] + 1) % 8;
         exact.observe(&lens);
@@ -88,21 +104,69 @@ fn main() {
     let mut fast = FenwickAdaptivePolicy::new(base, 0.5).unwrap();
     let mut lens2 = vec![0u32; n];
     let mut j = 0usize;
-    let fast_rate = bench_draws(&b, "adaptive-step/fenwick-O(log n)/n=10000", |rng| {
-        j = (j + 1) % n;
-        lens2[j] = (lens2[j] + 1) % 8;
-        fast.observe_node(j, lens2[j]);
-        fast.route(rng)
-    });
+    let fast_rate =
+        bench_draws(&b, &mut report, "adaptive-step/fenwick-O(log n)/n=10000", |rng| {
+            j = (j + 1) % n;
+            lens2[j] = (lens2[j] + 1) % 8;
+            fast.observe_node(j, lens2[j]);
+            fast.route(rng)
+        });
     println!(
         "    == adaptive step: fenwick {:.0}x over exact renormalization",
         fast_rate / exact_rate
     );
 
+    // keyed service durations: per-draw generator construction (the
+    // scalar engine path) vs the chunked block sampler the batch arena
+    // feeds — both produce bit-identical values
+    let block = 4_096usize;
+    let seeds: Vec<u64> = (0..block as u64).map(|k| stream_seed(9, &[k, 7])).collect();
+    let rates: Vec<f64> = (0..block).map(|k| if k < block / 2 { 4.0 } else { 1.0 }).collect();
+    let mut out = vec![0.0f64; block];
+    let scalar = {
+        let r = b.run(&format!("service/scalar-keyed/block={block}"), || {
+            for k in 0..block {
+                out[k] = Rng::new(seeds[k]).exponential(rates[k]);
+            }
+            black_box(out[block - 1]);
+        });
+        let per_sec = r.throughput(block as f64);
+        println!("    -> {:.2} M draws/s", per_sec / 1e6);
+        report.throughput(&format!("service/scalar-keyed/block={block}"), per_sec);
+        per_sec
+    };
+    let batched = {
+        let r = b.run(&format!("service/batched-exp/block={block}"), || {
+            batch_exponential(&seeds, &rates, &mut out);
+            black_box(out[block - 1]);
+        });
+        let per_sec = r.throughput(block as f64);
+        println!("    -> {:.2} M draws/s", per_sec / 1e6);
+        report.throughput(&format!("service/batched-exp/block={block}"), per_sec);
+        per_sec
+    };
+    println!(
+        "    == keyed exponential: batched {:.1}x over per-draw construction",
+        batched / scalar
+    );
+    report.speedup("batched_exp_vs_scalar_block=4096", batched / scalar);
+
+    let (linear, alias) = gate.expect("n = 10_000 case always runs");
+    let speedup = alias / linear;
+    report.speedup("alias_vs_linear_n=10000", speedup);
+
+    // write the artifact BEFORE gating so a regression still leaves its
+    // measurements behind for the perf-trajectory diff
+    if let Some(path) = args.get("json") {
+        if let Err(e) = report.write(path) {
+            eprintln!("bench_sampler: --json {e}");
+            std::process::exit(2);
+        }
+        println!("wrote {path}");
+    }
+
     if let Some(min) = args.get("assert-speedup") {
         let min: f64 = min.parse().expect("--assert-speedup expects a number");
-        let (linear, alias) = gate.expect("n = 10_000 case always runs");
-        let speedup = alias / linear;
         if speedup < min {
             eprintln!(
                 "FAIL: alias sampler only {speedup:.1}x over linear scan at n=10_000 \

@@ -27,9 +27,15 @@
 //! *replication-level* and *shard-level* parallelism.  Cells with
 //! `clients >= big_n` (default 100 000) are memory-bound — they run one
 //! replication at a time on the sharded engine with the whole thread
-//! budget inside the replication; smaller cells are heap-bound — their
-//! seeds fan out across the worker pool as before.  `engine = "heap"` or
-//! `"sharded"` overrides the auto split.
+//! budget inside the replication.  Smaller cells are construction-bound —
+//! their seeds are packed into **batch arenas**
+//! (`simulator::engine::batch`): chunks of R replications share one SoA
+//! allocation and draw service durations in vectorized blocks, and the
+//! chunks fan out across the worker pool.  `batch_width` fixes R; 0 (the
+//! default) sizes chunks so every worker gets one while amortizing as much
+//! construction as possible.  `engine = "heap"`, `"sharded"`, or
+//! `"batch"` overrides the auto split.  None of this can move a number:
+//! all three engines are bit-identical per replication on a shared seed.
 //!
 //! Each simulate replication also reports **perf metrics** (events/sec,
 //! peak RSS) so BENCH trajectories capture scale, not just wall time.
@@ -45,9 +51,10 @@
 //! base_seed = 42             # root of every replication stream
 //! threads = 4                # worker threads (0 = one per core)
 //! out = "results/sweep.json" # default output (CLI --out overrides)
-//! engine = "auto"            # auto | heap | sharded (per-cell scheduler)
+//! engine = "auto"            # auto | heap | sharded | batch (per-cell scheduler)
 //! shards = 0                 # sharded-engine shard count (0 = auto)
 //! big_n = 100000             # clients >= big_n -> shard-level threads
+//! batch_width = 0            # replications per batch arena (0 = auto)
 //!
 //! [grid]                     # every axis is a list; cells = cartesian
 //! clients = [100, 1000]      # product x policies (x algos in train mode)
@@ -75,7 +82,8 @@ use super::policy::{optimal_two_cluster, PolicyCtx, PolicyRegistry, SamplingPoli
 use crate::coordinator::Experiment;
 use crate::runtime::BackendKind;
 use crate::simulator::{
-    run_with_policy, EngineConfig, EngineKind, ServiceDist, ServiceFamily, SimConfig,
+    run_batch, run_with_policy, EngineConfig, EngineKind, ServiceDist, ServiceFamily, SimConfig,
+    SimResult,
 };
 use crate::util::json::Json;
 use crate::util::mem::peak_rss_mib;
@@ -117,7 +125,7 @@ pub fn validate_engine_choice(name: &str) -> Result<(), String> {
     if name == "auto" || name.parse::<EngineKind>().is_ok() {
         Ok(())
     } else {
-        Err(format!("engine = '{name}' must be auto, heap, or sharded"))
+        Err(format!("engine = '{name}' must be auto, heap, sharded, or batch"))
     }
 }
 
@@ -261,6 +269,9 @@ pub struct SweepSpec {
     /// cells with `clients >= big_n` get shard-level threads instead of
     /// seed-level fan-out
     pub big_n: u64,
+    /// replications packed per batch arena on batch cells; 0 = auto (see
+    /// [`SweepSpec::resolve_batch_width`])
+    pub batch_width: usize,
     pub cells: Vec<SweepCell>,
     pub train: TrainKnobs,
 }
@@ -279,7 +290,7 @@ impl SweepSpec {
                 "" => &[],
                 "sweep" => &[
                     "name", "mode", "seeds", "base_seed", "threads", "out", "engine", "shards",
-                    "big_n",
+                    "big_n", "batch_width",
                 ],
                 "grid" => &[
                     "clients",
@@ -330,6 +341,10 @@ impl SweepSpec {
         let big_n = doc.i64_or("sweep", "big_n", 100_000);
         if big_n < 0 {
             return Err(format!("[sweep] big_n = {big_n} must be >= 0"));
+        }
+        let batch_width = doc.i64_or("sweep", "batch_width", 0);
+        if batch_width < 0 {
+            return Err(format!("[sweep] batch_width = {batch_width} must be >= 0"));
         }
 
         // grid axes: every key is a homogeneous list; absent = one default
@@ -510,6 +525,7 @@ impl SweepSpec {
             engine,
             shards: shards as usize,
             big_n: big_n as u64,
+            batch_width: batch_width as usize,
             cells,
             train,
         })
@@ -528,17 +544,21 @@ impl SweepSpec {
         let kind = match self.engine.as_str() {
             "heap" => EngineKind::Heap,
             "sharded" => EngineKind::Sharded,
+            "batch" => EngineKind::Batch,
             // auto: big-n cells are memory-bound -> sharded SoA engine
+            // with shard-level threads; everything else is construction-
+            // bound -> batch arenas amortize it across the cell's seeds
             _ => {
                 if n >= self.big_n {
                     EngineKind::Sharded
                 } else {
-                    EngineKind::Heap
+                    EngineKind::Batch
                 }
             }
         };
         match kind {
             EngineKind::Heap => EngineConfig::heap(),
+            EngineKind::Batch => EngineConfig::batch(),
             EngineKind::Sharded => {
                 // big-n cells get the whole worker budget as shard threads
                 // (their replications run one at a time); small sharded
@@ -556,6 +576,32 @@ impl SweepSpec {
                 EngineConfig::sharded(self.shards, threads)
             }
         }
+    }
+
+    /// Replications per batch arena for this sweep's batch cells.
+    ///
+    /// `batch_width > 0` pins R (clamped to the per-cell seed count — a
+    /// batch never spans cells, since replications of different cells
+    /// share neither layout nor policy).  Auto (0) balances two pulls:
+    /// wider arenas amortize more construction and feed the vectorized
+    /// sampler longer blocks, but chunks are the unit the worker pool
+    /// schedules, so R is sized to leave at least one chunk per worker —
+    /// `ceil(total batch replications / workers)` — and capped at 32,
+    /// past which the arena's working set outgrows the amortization win
+    /// (and holds R·C tasks in memory for nothing).
+    pub fn resolve_batch_width(&self, worker_threads: usize) -> u64 {
+        let seeds = self.seeds.max(1);
+        if self.batch_width > 0 {
+            return (self.batch_width as u64).min(seeds);
+        }
+        let batch_cells = self
+            .cells
+            .iter()
+            .filter(|c| self.engine_for_cell(c, worker_threads).kind == EngineKind::Batch)
+            .count() as u64;
+        let total = batch_cells * seeds;
+        let per_worker = total.div_ceil(worker_threads.max(1) as u64);
+        per_worker.clamp(1, 32).min(seeds)
     }
 }
 
@@ -622,32 +668,21 @@ pub struct SweepReport {
     pub cells: Vec<CellReport>,
 }
 
-fn simulate_replication(
+/// Build one replication's sampling policy: the per-cell precomputed
+/// distribution when available (the Theorem-1 optimizer runs once per
+/// cell, not once per seed), otherwise a fresh registry build.
+fn cell_policy(
     cell: &SweepCell,
     cached_p: Option<&[f64]>,
-    engine: EngineConfig,
-    seed: u64,
-) -> Result<RepResult, String> {
-    let s = &cell.scenario;
-    let policy: Box<dyn SamplingPolicy> = match cached_p {
-        // per-cell precomputed distribution (the Theorem-1 optimizer runs
-        // once per cell, not once per seed)
-        Some(p) => Box::new(StaticPolicy::labeled(&cell.policy, p.to_vec())?),
-        None => PolicyRegistry::builtin().build(&cell.policy, &s.policy_ctx()?)?,
-    };
-    let cfg = SimConfig {
-        seed,
-        engine,
-        ..SimConfig::new(
-            policy.probs(),
-            ServiceDist::from_rates(&s.rates(), s.service),
-            s.concurrency,
-            s.steps,
-        )
-    };
-    let t0 = std::time::Instant::now();
-    let res = run_with_policy(cfg, policy)?;
-    let wall = t0.elapsed().as_secs_f64();
+) -> Result<Box<dyn SamplingPolicy>, String> {
+    match cached_p {
+        Some(p) => Ok(Box::new(StaticPolicy::labeled(&cell.policy, p.to_vec())?)),
+        None => PolicyRegistry::builtin().build(&cell.policy, &cell.scenario.policy_ctx()?),
+    }
+}
+
+/// The deterministic scalar metrics of one simulate replication.
+fn sim_metrics(s: &ScenarioPoint, res: &SimResult) -> BTreeMap<String, f64> {
     let nf = s.n_fast();
     let n = s.clients;
     let cluster_queue = |range: std::ops::Range<usize>| -> f64 {
@@ -668,18 +703,106 @@ fn simulate_replication(
     m.insert("tau_c".into(), res.tau_c);
     m.insert("tau_max".into(), res.tau_max as f64);
     m.insert("total_time".into(), res.total_time);
-    // scale trajectory: wall-clock throughput + memory high-water mark
-    // (timing-derived -> perf, never the deterministic metrics map).
-    // peak_rss_mib is the PROCESS-wide monotone watermark — an upper
-    // bound that absorbs earlier/concurrent cells; see util::mem.
+    m
+}
+
+/// Scale trajectory: wall-clock throughput + memory high-water mark
+/// (timing-derived -> perf, never the deterministic metrics map).
+/// peak_rss_mib is the PROCESS-wide monotone watermark — an upper bound
+/// that absorbs earlier/concurrent cells — and is omitted entirely on
+/// platforms without a probe (see util::mem).  Batched replications
+/// report their arena's per-replication share of the wall clock plus the
+/// arena width.
+fn sim_perf(steps: u64, wall: f64, batch_width: Option<u64>) -> BTreeMap<String, f64> {
     let mut perf = BTreeMap::new();
     perf.insert("wall_secs".into(), wall);
     perf.insert(
         "events_per_sec".into(),
-        s.steps as f64 / wall.max(f64::MIN_POSITIVE),
+        steps as f64 / wall.max(f64::MIN_POSITIVE),
     );
-    perf.insert("peak_rss_mib".into(), peak_rss_mib());
-    Ok(RepResult { metrics: m, perf, curve: Vec::new() })
+    if let Some(rss) = peak_rss_mib() {
+        perf.insert("peak_rss_mib".into(), rss);
+    }
+    if let Some(r) = batch_width {
+        perf.insert("batch_width".into(), r as f64);
+    }
+    perf
+}
+
+fn simulate_replication(
+    cell: &SweepCell,
+    cached_p: Option<&[f64]>,
+    engine: EngineConfig,
+    seed: u64,
+) -> Result<RepResult, String> {
+    let s = &cell.scenario;
+    let policy = cell_policy(cell, cached_p)?;
+    let cfg = SimConfig {
+        seed,
+        engine,
+        ..SimConfig::new(
+            policy.probs(),
+            ServiceDist::from_rates(&s.rates(), s.service),
+            s.concurrency,
+            s.steps,
+        )
+    };
+    let t0 = std::time::Instant::now();
+    let res = run_with_policy(cfg, policy)?;
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(RepResult {
+        metrics: sim_metrics(s, &res),
+        perf: sim_perf(s.steps, wall, None),
+        curve: Vec::new(),
+    })
+}
+
+/// Run seed indices `seed_lo..seed_hi` of a batch cell through ONE batch
+/// arena (`simulator::engine::batch::run_batch`), returning their
+/// RepResults in seed order.  Each replication keeps its own
+/// `stream_seed(base_seed, [cell, seed])` stream and is bit-identical to
+/// the heap oracle, so chunking is invisible in the deterministic report.
+fn simulate_cell_batch(
+    cell: &SweepCell,
+    cached_p: Option<&[f64]>,
+    base_seed: u64,
+    seed_lo: u64,
+    seed_hi: u64,
+) -> Result<Vec<RepResult>, String> {
+    let s = &cell.scenario;
+    let first = cell_policy(cell, cached_p)?;
+    let base = SimConfig {
+        engine: EngineConfig::batch(),
+        ..SimConfig::new(
+            first.probs(),
+            ServiceDist::from_rates(&s.rates(), s.service),
+            s.concurrency,
+            s.steps,
+        )
+    };
+    let seeds: Vec<u64> = (seed_lo..seed_hi)
+        .map(|idx| stream_seed(base_seed, &[cell.id as u64, idx]))
+        .collect();
+    let width = seeds.len() as u64;
+    let t0 = std::time::Instant::now();
+    // `first` (read above for the shared cfg.p) serves as replication 0's
+    // policy; later replications build fresh instances as usual
+    let mut first = Some(first);
+    let results = run_batch(&base, &seeds, |_| match first.take() {
+        Some(p) => Ok(p),
+        None => cell_policy(cell, cached_p),
+    })?;
+    // the arena interleaves its replications, so each one's share of the
+    // wall clock is the chunk total over the width
+    let wall = t0.elapsed().as_secs_f64() / width.max(1) as f64;
+    Ok(results
+        .iter()
+        .map(|res| RepResult {
+            metrics: sim_metrics(s, res),
+            perf: sim_perf(s.steps, wall, Some(width)),
+            curve: Vec::new(),
+        })
+        .collect())
 }
 
 fn train_replication(cell: &SweepCell, knobs: &TrainKnobs, seed: u64) -> Result<RepResult, String> {
@@ -752,15 +875,27 @@ fn precompute_cell_distributions(spec: &SweepSpec) -> Result<Vec<Option<Vec<f64>
     Ok(out)
 }
 
+/// One unit of worker-pool work: a single replication, or a contiguous
+/// chunk of one batch cell's seeds sharing a batch arena.
+#[derive(Clone, Copy, Debug)]
+enum WorkItem {
+    /// replication id (cell · seeds + seed index)
+    Rep(usize),
+    /// seed indices `lo..hi` of `cell`, one arena
+    Chunk { cell: usize, lo: u64, hi: u64 },
+}
+
 /// Execute every replication of the grid and reduce in (cell, seed) order.
 ///
 /// The per-cell scheduler splits the `spec.threads` worker budget (0 = one
 /// per available core): replications whose engine runs sequentially
-/// ("narrow" cells) fan out across the worker pool; replications whose
-/// sharded engine owns its own thread pool ("wide" big-n cells) run one at
-/// a time so the machine is never oversubscribed.  Results land in slots
-/// indexed by replication id either way, so the reduction — and the
-/// deterministic report — is identical under every split.
+/// ("narrow" cells) fan out across the worker pool — batch cells as
+/// arena-sized seed chunks, heap/sequential-sharded cells one replication
+/// per item; replications whose sharded engine owns its own thread pool
+/// ("wide" big-n cells) run one at a time so the machine is never
+/// oversubscribed.  Results land in slots indexed by replication id either
+/// way, so the reduction — and the deterministic report — is identical
+/// under every split.
 pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
     let threads = if spec.threads == 0 {
         std::thread::available_parallelism()
@@ -776,13 +911,30 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
         .iter()
         .map(|c| spec.engine_for_cell(c, threads))
         .collect();
+    let batch_width = spec.resolve_batch_width(threads);
     let failed = AtomicBool::new(false);
     let slots: Mutex<Vec<Option<Result<RepResult, String>>>> =
         Mutex::new(vec![None; total]);
-    // phase 1: narrow replications across the worker pool
-    let narrow: Vec<usize> = (0..total)
-        .filter(|r| engines[r / spec.seeds as usize].threads <= 1)
-        .collect();
+    // phase 1: narrow work across the worker pool
+    let mut narrow: Vec<WorkItem> = Vec::new();
+    for (c, eng) in engines.iter().enumerate() {
+        match eng.kind {
+            EngineKind::Batch => {
+                let mut lo = 0;
+                while lo < spec.seeds {
+                    let hi = (lo + batch_width).min(spec.seeds);
+                    narrow.push(WorkItem::Chunk { cell: c, lo, hi });
+                    lo = hi;
+                }
+            }
+            _ if eng.threads <= 1 => {
+                for s in 0..spec.seeds as usize {
+                    narrow.push(WorkItem::Rep(c * spec.seeds as usize + s));
+                }
+            }
+            _ => {} // wide sharded cells run in phase 2
+        }
+    }
     let next = AtomicUsize::new(0);
     std::thread::scope(|scope| {
         for _ in 0..threads.max(1) {
@@ -796,20 +948,47 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
                 if k >= narrow.len() {
                     break;
                 }
-                let r = narrow[k];
-                let cell = &spec.cells[r / spec.seeds as usize];
-                let seed_idx = (r % spec.seeds as usize) as u64;
-                let out = run_replication(
-                    spec,
-                    cell,
-                    cell_p[cell.id].as_deref(),
-                    engines[cell.id],
-                    seed_idx,
-                );
-                if out.is_err() {
-                    failed.store(true, Ordering::Relaxed);
+                match narrow[k] {
+                    WorkItem::Rep(r) => {
+                        let cell = &spec.cells[r / spec.seeds as usize];
+                        let seed_idx = (r % spec.seeds as usize) as u64;
+                        let out = run_replication(
+                            spec,
+                            cell,
+                            cell_p[cell.id].as_deref(),
+                            engines[cell.id],
+                            seed_idx,
+                        );
+                        if out.is_err() {
+                            failed.store(true, Ordering::Relaxed);
+                        }
+                        slots.lock().unwrap()[r] = Some(out);
+                    }
+                    WorkItem::Chunk { cell, lo, hi } => {
+                        let c = &spec.cells[cell];
+                        let out =
+                            simulate_cell_batch(c, cell_p[cell].as_deref(), spec.base_seed, lo, hi);
+                        let mut slots = slots.lock().unwrap();
+                        match out {
+                            Ok(reps) => {
+                                for (j, rep) in reps.into_iter().enumerate() {
+                                    slots[cell * spec.seeds as usize + lo as usize + j] =
+                                        Some(Ok(rep));
+                                }
+                            }
+                            Err(e) => {
+                                // an arena failure takes its whole chunk
+                                // down; every member must report it so the
+                                // reduction never sees a silent hole
+                                failed.store(true, Ordering::Relaxed);
+                                for s in lo..hi {
+                                    slots[cell * spec.seeds as usize + s as usize] =
+                                        Some(Err(e.clone()));
+                                }
+                            }
+                        }
+                    }
                 }
-                slots.lock().unwrap()[r] = Some(out);
             });
         }
     });
@@ -906,6 +1085,8 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
             EngineKind::Sharded => {
                 format!("sharded(S={})", e.resolve_shards(cell.scenario.clients))
             }
+            // the chunk target width; a cell's tail chunk may be narrower
+            EngineKind::Batch => format!("batch(R={})", batch_width.min(spec.seeds)),
         };
         cells.push(CellReport { cell: cell.clone(), engine, metrics, perf, curve });
     }
@@ -1203,9 +1384,10 @@ policies = ["uniform", "adaptive"]
         let mut spec = SweepSpec::from_toml(GRID).unwrap();
         assert_eq!(spec.engine, "auto");
         assert_eq!(spec.big_n, 100_000);
-        // auto: small cells stay on the heap engine
+        assert_eq!(spec.batch_width, 0, "batch width defaults to auto");
+        // auto: small cells go to the batch arena
         let e = spec.engine_for_cell(&spec.cells[0], 4);
-        assert_eq!(e.kind, EngineKind::Heap);
+        assert_eq!(e.kind, EngineKind::Batch);
         // lowering big_n flips them to wide sharded cells owning the
         // budget (capped by the resolved shard count)
         spec.big_n = 1;
@@ -1231,23 +1413,75 @@ policies = ["uniform", "adaptive"]
         // engine strings are validated at parse time
         let err = SweepSpec::from_toml("[sweep]\nengine = \"gpu\"").unwrap_err();
         assert!(err.contains("engine"), "{err}");
+        let err = SweepSpec::from_toml("[sweep]\nbatch_width = -2").unwrap_err();
+        assert!(err.contains("batch_width"), "{err}");
+    }
+
+    #[test]
+    fn batch_width_resolution_balances_pool_and_amortization() {
+        let mut spec = SweepSpec::from_toml(GRID).unwrap();
+        spec.engine = "batch".into();
+        // explicit width wins, clamped to the per-cell seed count
+        spec.batch_width = 2;
+        assert_eq!(spec.resolve_batch_width(4), 2);
+        spec.batch_width = 100;
+        assert_eq!(spec.resolve_batch_width(4), 3, "never wider than seeds");
+        // auto: 4 batch cells x 3 seeds = 12 replications
+        spec.batch_width = 0;
+        assert_eq!(spec.resolve_batch_width(4), 3, "12 reps / 4 workers");
+        assert_eq!(spec.resolve_batch_width(12), 1, "plenty of workers -> R=1");
+        spec.seeds = 64;
+        assert_eq!(
+            spec.resolve_batch_width(4),
+            32,
+            "auto width caps at 32 even when fewer, wider chunks would fit"
+        );
+        // heap-only sweeps have no batch cells; the width is moot but sane
+        spec.engine = "heap".into();
+        spec.seeds = 3;
+        assert_eq!(spec.resolve_batch_width(4), 1);
+    }
+
+    #[test]
+    fn batch_chunks_fill_every_slot_once() {
+        // seeds = 3 with batch_width = 2 -> chunks [0,2) and [2,3): every
+        // replication must land exactly one result, including tail chunks
+        let mut spec = SweepSpec::from_toml(GRID).unwrap();
+        spec.engine = "batch".into();
+        spec.batch_width = 2;
+        let report = run_sweep(&spec).unwrap();
+        assert_eq!(report.cells.len(), 4);
+        for c in &report.cells {
+            assert_eq!(c.metrics["delay_all"].count(), 3, "{}", c.cell.label());
+            assert!(c.engine.starts_with("batch(R="), "{}", c.engine);
+            // every replication reports the arena width it actually ran in
+            let bw = &c.perf["batch_width"];
+            assert_eq!(bw.count(), 3);
+            assert_eq!(bw.min(), 1.0, "tail chunk is width 1");
+            assert_eq!(bw.max(), 2.0);
+        }
     }
 
     #[test]
     fn engine_choice_never_changes_the_deterministic_report() {
-        // the same grid on heap, sequential sharded, and wide (threaded)
-        // sharded engines must aggregate to the identical deterministic
-        // JSON — the sweep-level face of the engine equivalence contract
-        let render = |engine: &str, big_n: u64| -> String {
+        // the same grid on heap, sequential sharded, wide (threaded)
+        // sharded, and batch arenas of several widths must aggregate to
+        // the identical deterministic JSON — the sweep-level face of the
+        // engine equivalence contract
+        let render = |engine: &str, big_n: u64, batch_width: usize| -> String {
             let mut spec = SweepSpec::from_toml(GRID).unwrap();
             spec.engine = engine.to_string();
             spec.big_n = big_n;
             spec.shards = 3;
+            spec.batch_width = batch_width;
             run_sweep(&spec).unwrap().to_json_deterministic().render()
         };
-        let heap = render("heap", 100_000);
-        assert_eq!(heap, render("sharded", 100_000), "sequential sharded");
-        assert_eq!(heap, render("sharded", 1), "wide sharded (shard threads)");
+        let heap = render("heap", 100_000, 0);
+        assert_eq!(heap, render("sharded", 100_000, 0), "sequential sharded");
+        assert_eq!(heap, render("sharded", 1, 0), "wide sharded (shard threads)");
+        assert_eq!(heap, render("batch", 100_000, 1), "width-1 batch arenas");
+        assert_eq!(heap, render("batch", 100_000, 2), "chunked batch arenas");
+        assert_eq!(heap, render("batch", 100_000, 0), "auto-width batch arenas");
     }
 
     #[test]
@@ -1255,11 +1489,20 @@ policies = ["uniform", "adaptive"]
         let spec = SweepSpec::from_toml(GRID).unwrap();
         let report = run_sweep(&spec).unwrap();
         for c in &report.cells {
-            assert_eq!(c.engine, "heap");
+            // auto scheduling: small cells run in batch arenas
+            assert!(c.engine.starts_with("batch(R="), "{}", c.engine);
             let eps = &c.perf["events_per_sec"];
             assert_eq!(eps.count(), 3, "{}", c.cell.label());
             assert!(eps.mean() > 0.0);
             assert!(c.perf.contains_key("wall_secs"));
+            // peak RSS is present iff the platform probe is (never a fake
+            // 0: the key is omitted, not zeroed, on macOS runners)
+            match crate::util::mem::peak_rss_mib() {
+                Some(_) => {
+                    assert!(c.perf["peak_rss_mib"].mean() > 0.0, "{}", c.cell.label())
+                }
+                None => assert!(!c.perf.contains_key("peak_rss_mib")),
+            }
         }
         let full = report.to_json().render();
         assert!(full.contains("events_per_sec"));

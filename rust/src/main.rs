@@ -51,12 +51,14 @@ COMMANDS
             --favano-interval D --optimal-p (= --policy optimal)
             --seed S --out results/train.csv
   simulate  --n N --c C --steps N --mu-fast F --n-fast N --p-fast F --seed S
-            --engine heap|sharded --shards S --shard-threads T
+            --engine heap|sharded|batch --shards S --shard-threads T
             (engines are bit-identical; sharded scales to n = 10^6 nodes)
   sweep     --grid scenarios/sweep_fig6.toml [--threads N] [--seeds S]
-            [--engine auto|heap|sharded] [--out results/sweep.json]
+            [--engine auto|heap|sharded|batch] [--batch-width R]
+            [--out results/sweep.json]
             multi-seed grid -> mean ± CI JSON (+ per-cell events/sec and
-            peak-RSS perf block) + error-band CSV (see README schema)
+            peak-RSS perf block) + error-band CSV (see README schema);
+            small-n cells batch R seeds through one SoA arena
   bounds    --c C --mu-fast F --n N --n-fast N [--physical-time U]
   figure    <fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|table1|table2>
             [--out DIR] [--quick]
@@ -268,6 +270,7 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         return Err("--seeds must be >= 1".into());
     }
     spec.seeds = seeds;
+    spec.batch_width = args.usize_or("batch-width", spec.batch_width)?;
     let out = args.str_or("out", &spec.out);
     println!(
         "# sweep '{}': {} cells x {} seeds = {} replications on {} threads",

@@ -1,0 +1,534 @@
+//! The batch replication engine: R independent replications of the same
+//! cell in one replication-major SoA arena, with vectorized service
+//! sampling.
+//!
+//! The sweep layer's unit of work is an *ensemble*: every reported number
+//! is a mean ± CI over many replications of one cell.  Before this engine,
+//! each replication built its own arena (its own task pool, queue arrays,
+//! calendar) and drew service durations one at a time — at small n the
+//! per-replication constant costs rival the stepping itself.  The batch
+//! arena amortizes them:
+//!
+//! * **One allocation for all R task pools.**  Replications share the node
+//!   count and layout, so the [`TaskPool`] is built once with R·n virtual
+//!   nodes (`global index = rep·n + node`, replication-major) and capacity
+//!   R·C.  Queue lengths for all replications live in one flat `u32`
+//!   array; replication r's slice is `qlens[r·n .. (r+1)·n]`.
+//! * **Interleaved stepping.**  A *round* advances every replication by
+//!   one CS step.  All replications run the same `steps` budget, so rounds
+//!   keep them in lockstep with no liveness tracking, and the pool/queue
+//!   touches of consecutive replications stay within one working set
+//!   instead of R cold ones built and torn down in sequence.
+//! * **Vectorized service sampling.**  A step *defers* its (up to two)
+//!   service draws into a pending block; the end of each round resolves
+//!   the whole block at once.  Durations are keyed by (replication's
+//!   service root, node, service count) — pure functions of the key — so
+//!   deferral and batch order cannot change any value.  For exponential
+//!   cells the block goes through `util::sampler::batch_exponential`
+//!   (chunked integer RNG expansion + inversion, bit-identical to the
+//!   scalar draw); other families fall back to the scalar keyed path.
+//!
+//! # Determinism contract
+//!
+//! Each replication r keeps exactly the per-replication streams of the
+//! heap oracle: routing from `Rng::new(seed_r).derive(ROUTE_STREAM)`
+//! consumed in that replication's CS-step order, service durations keyed
+//! via `stream_seed(service_seed(seed_r), [node, count])`.  Replications
+//! never share RNG state, policies, or calendars — only storage — so every
+//! replication in a batch is bit-identical to the same seed run alone on
+//! the heap engine, for any batch width (`tests/engine_equivalence.rs`
+//! checks R ∈ {1, 4, 32} across all builtin policies).
+
+use super::calendar::{Event, ShardCalendar};
+use super::soa::TaskPool;
+use super::{
+    initial_placements, service_duration, service_seed, EventEngine, StepAggregator, ROUTE_STREAM,
+};
+use crate::coordinator::policy::SamplingPolicy;
+use crate::simulator::network::{SimConfig, SimResult, StepOutcome, TaskRecord};
+use crate::simulator::service::ServiceDist;
+use crate::util::rng::Rng;
+use crate::util::sampler::batch_exponential;
+
+/// A deferred service draw: everything needed to materialize the
+/// completion event once the round's block is sampled.
+#[derive(Clone, Copy, Debug)]
+struct PendingDraw {
+    rep: u32,
+    node: u32,
+    /// the node's service count at schedule time (the duration key)
+    count: u64,
+    /// virtual start time of the service in its replication
+    start: f64,
+    /// the replication-local sequence number assigned at schedule time
+    seq: u64,
+}
+
+/// R same-cell replications sharing one SoA arena.
+pub(crate) struct BatchArena {
+    /// nodes per replication
+    n: usize,
+    /// shared per-node service distributions (identical across reps)
+    service: Vec<ServiceDist>,
+    /// per-node rates when EVERY distribution is exponential — enables the
+    /// vectorized sampling path; `None` falls back to scalar keyed draws
+    exp_rates: Option<Vec<f64>>,
+    /// one pool for all replications: R·n virtual nodes, capacity R·C
+    pool: TaskPool,
+    /// per-(rep, node) services started, replication-major like the pool
+    svc_count: Vec<u64>,
+    // per-replication state
+    calendars: Vec<ShardCalendar>,
+    policies: Vec<Box<dyn SamplingPolicy>>,
+    route_rng: Vec<Rng>,
+    /// per-replication keyed service-stream roots
+    svc_base: Vec<u64>,
+    seq: Vec<u64>,
+    now: Vec<f64>,
+    step: Vec<u64>,
+    busy: Vec<usize>,
+    /// deferred draws of the current round
+    pending: Vec<PendingDraw>,
+    // reusable scratch for the vectorized sampler and bulk observation
+    seed_buf: Vec<u64>,
+    rate_buf: Vec<f64>,
+    dur_buf: Vec<f64>,
+    lens_buf: Vec<u32>,
+}
+
+impl BatchArena {
+    /// Build the arena: `base` supplies the shared cell shape (p, service,
+    /// C, steps, init); `seeds[r]` and `policies[r]` are replication r's
+    /// RNG root and fresh policy instance.
+    pub fn new(
+        base: &SimConfig,
+        seeds: &[u64],
+        mut policies: Vec<Box<dyn SamplingPolicy>>,
+    ) -> Result<BatchArena, String> {
+        base.validate()?;
+        if seeds.is_empty() {
+            return Err("batch arena needs at least one replication".into());
+        }
+        if policies.len() != seeds.len() {
+            return Err(format!(
+                "batch arena: {} seeds but {} policies",
+                seeds.len(),
+                policies.len()
+            ));
+        }
+        let n = base.p.len();
+        for p in &policies {
+            if p.n() != n {
+                return Err(format!(
+                    "policy '{}' covers {} nodes but the network has {n}",
+                    p.name(),
+                    p.n()
+                ));
+            }
+        }
+        let reps = seeds.len();
+        let exp_rates = base
+            .service
+            .iter()
+            .map(|d| match d {
+                ServiceDist::Exp { rate } => Some(*rate),
+                _ => None,
+            })
+            .collect::<Option<Vec<f64>>>();
+        let mut arena = BatchArena {
+            n,
+            service: base.service.clone(),
+            exp_rates,
+            pool: TaskPool::new(reps * n, reps * base.concurrency),
+            svc_count: vec![0; reps * n],
+            calendars: (0..reps).map(|_| ShardCalendar::new()).collect(),
+            policies: Vec::new(),
+            route_rng: seeds
+                .iter()
+                .map(|&s| Rng::new(s).derive(ROUTE_STREAM))
+                .collect(),
+            svc_base: seeds.iter().map(|&s| service_seed(s)).collect(),
+            seq: vec![0; reps],
+            now: vec![0.0; reps],
+            step: vec![0; reps],
+            busy: vec![0; reps],
+            pending: Vec::with_capacity(2 * reps),
+            seed_buf: Vec::new(),
+            rate_buf: Vec::new(),
+            dur_buf: Vec::new(),
+            lens_buf: Vec::with_capacity(n),
+        };
+        // initial placement S_0, one replication at a time: placements
+        // consume replication r's routing stream exactly as the heap
+        // engine's constructor would
+        for (r, policy) in policies.iter_mut().enumerate() {
+            let placements = initial_placements(base, policy.as_mut(), &mut arena.route_rng[r]);
+            for (node, prob) in placements {
+                let len = arena.pool.push(r * n + node, 0, 0.0, prob);
+                if len == 1 {
+                    arena.busy[r] += 1;
+                    arena.schedule(r, node, 0.0);
+                }
+            }
+            // incremental policies only ever hear about queues that
+            // change, so sync them once with the realized initial state
+            // (idempotent for the Routed path)
+            if policy.incremental() {
+                for i in 0..n {
+                    policy.observe_node(i, arena.pool.qlen(r * n + i));
+                }
+            }
+        }
+        arena.policies = policies;
+        // the C·R initial services are the first (and largest) sampled block
+        arena.flush_pending();
+        Ok(arena)
+    }
+
+    /// Record a deferred service start for replication `r` at `node`.
+    #[inline]
+    fn schedule(&mut self, r: usize, node: usize, start: f64) {
+        let gi = r * self.n + node;
+        let count = self.svc_count[gi];
+        self.svc_count[gi] = count + 1;
+        self.seq[r] += 1;
+        self.pending.push(PendingDraw {
+            rep: r as u32,
+            node: node as u32,
+            count,
+            start,
+            seq: self.seq[r],
+        });
+    }
+
+    /// Resolve every deferred draw of the round and push the completion
+    /// events.  Vectorized for exponential cells, scalar keyed otherwise —
+    /// identical values either way (the key fully determines the draw).
+    pub(crate) fn flush_pending(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        if let Some(rates) = &self.exp_rates {
+            self.seed_buf.clear();
+            self.rate_buf.clear();
+            for p in &self.pending {
+                self.seed_buf.push(crate::util::rng::stream_seed(
+                    self.svc_base[p.rep as usize],
+                    &[p.node as u64, p.count],
+                ));
+                self.rate_buf.push(rates[p.node as usize]);
+            }
+            self.dur_buf.clear();
+            self.dur_buf.resize(self.pending.len(), 0.0);
+            batch_exponential(&self.seed_buf, &self.rate_buf, &mut self.dur_buf);
+            for (p, &dur) in self.pending.iter().zip(&self.dur_buf) {
+                self.calendars[p.rep as usize].push(Event {
+                    time: p.start + dur,
+                    seq: p.seq,
+                    node: p.node,
+                });
+            }
+        } else {
+            for p in &self.pending {
+                let dur = service_duration(
+                    self.svc_base[p.rep as usize],
+                    &self.service[p.node as usize],
+                    p.node,
+                    p.count,
+                );
+                self.calendars[p.rep as usize].push(Event {
+                    time: p.start + dur,
+                    seq: p.seq,
+                    node: p.node,
+                });
+            }
+        }
+        self.pending.clear();
+    }
+
+    /// Advance replication `r` one CS step.  Scheduled services are only
+    /// *deferred*, not yet in the calendar — callers must `flush_pending`
+    /// before stepping any replication again.
+    pub(crate) fn step_rep(&mut self, r: usize) -> Option<StepOutcome> {
+        let ev = self.calendars[r].pop()?;
+        self.now[r] = ev.time;
+        let node = ev.node as usize;
+        let (d_step, d_time, d_prob, new_len) = self.pool.pop(r * self.n + node);
+        if new_len > 0 {
+            self.schedule(r, node, ev.time);
+        } else {
+            self.busy[r] -= 1;
+        }
+        let record = TaskRecord {
+            node: ev.node,
+            dispatch_step: d_step,
+            complete_step: self.step[r],
+            dispatch_time: d_time,
+            complete_time: ev.time,
+            dispatch_prob: d_prob,
+        };
+        // dispatcher: same observation protocol as the heap and sharded
+        // engines — incremental policies get only the two changed queues
+        let incremental = self.policies[r].incremental();
+        if incremental {
+            self.policies[r].observe_node(node, new_len);
+        } else {
+            self.lens_buf.clear();
+            self.lens_buf
+                .extend_from_slice(self.pool.qlens_of(r * self.n, self.n));
+            self.policies[r].observe(&self.lens_buf);
+        }
+        let next = self.policies[r].route(&mut self.route_rng[r]);
+        let next_prob = self.policies[r].prob_of(next);
+        let next_len = self
+            .pool
+            .push(r * self.n + next, self.step[r] + 1, ev.time, next_prob);
+        if next_len == 1 {
+            self.busy[r] += 1;
+            self.schedule(r, next, ev.time);
+        }
+        if incremental {
+            self.policies[r].observe_node(next, next_len);
+        }
+        let outcome = StepOutcome {
+            completed_node: ev.node,
+            dispatch_step: d_step,
+            next_node: next as u32,
+            time: ev.time,
+            record,
+        };
+        self.step[r] += 1;
+        Some(outcome)
+    }
+
+    /// Tasks currently held by replication `r` (must equal C always).
+    pub(crate) fn population_of(&self, r: usize) -> usize {
+        self.pool.population_of(r * self.n, self.n)
+    }
+}
+
+/// Run R replications of the same cell to completion through one batch
+/// arena, returning one `SimResult` per seed, in seed order.  Every result
+/// is bit-identical to running that seed alone on the heap oracle.
+///
+/// `mk_policy(r)` must build a FRESH policy instance for replication r —
+/// adaptive policies carry per-replication state.  All replications share
+/// `base`'s shape (p, service, concurrency, steps, init, record flags);
+/// `base.seed` is ignored in favor of `seeds[r]`.
+pub fn run_batch(
+    base: &SimConfig,
+    seeds: &[u64],
+    mut mk_policy: impl FnMut(usize) -> Result<Box<dyn SamplingPolicy>, String>,
+) -> Result<Vec<SimResult>, String> {
+    let policies = (0..seeds.len())
+        .map(&mut mk_policy)
+        .collect::<Result<Vec<_>, String>>()?;
+    let mut arena = BatchArena::new(base, seeds, policies)?;
+    let n = base.p.len();
+    let reps = seeds.len();
+    let mut aggs: Vec<StepAggregator> = (0..reps)
+        .map(|r| {
+            StepAggregator::new(n, base.steps, base.record_tasks, base.queue_sample_every, |i| {
+                arena.pool.qlen(r * n + i)
+            })
+        })
+        .collect();
+    for _ in 0..base.steps {
+        // one interleaved round: every replication advances one CS step,
+        // then the round's service draws resolve as one sampled block
+        for (r, agg) in aggs.iter_mut().enumerate() {
+            let out = arena.step_rep(r).ok_or("network drained")?;
+            let i = out.completed_node as usize;
+            let j = out.next_node as usize;
+            agg.push_step(
+                &out,
+                arena.pool.qlen(r * n + i),
+                arena.pool.qlen(r * n + j),
+                arena.busy[r],
+            );
+        }
+        arena.flush_pending();
+    }
+    Ok(aggs
+        .into_iter()
+        .enumerate()
+        .map(|(r, agg)| {
+            debug_assert_eq!(arena.population_of(r), base.concurrency);
+            agg.finish(arena.now[r])
+        })
+        .collect())
+}
+
+/// A width-1 batch arena behind the [`EventEngine`] interface — what
+/// `engine = "batch"` resolves to for a standalone `SimConfig` (CLI
+/// `--engine batch`, equivalence tests, `transient_mi`).
+pub(crate) struct SingleBatch {
+    arena: BatchArena,
+}
+
+impl SingleBatch {
+    pub fn new(cfg: SimConfig, policy: Box<dyn SamplingPolicy>) -> Result<SingleBatch, String> {
+        let seeds = [cfg.seed];
+        Ok(SingleBatch { arena: BatchArena::new(&cfg, &seeds, vec![policy])? })
+    }
+}
+
+impl EventEngine for SingleBatch {
+    fn advance(&mut self) -> Option<StepOutcome> {
+        let out = self.arena.step_rep(0);
+        self.arena.flush_pending();
+        out
+    }
+
+    fn queue_len(&self, i: usize) -> usize {
+        self.arena.pool.qlen(i) as usize
+    }
+
+    fn busy_nodes(&self) -> usize {
+        self.arena.busy[0]
+    }
+
+    fn now(&self) -> f64 {
+        self.arena.now[0]
+    }
+
+    fn population(&self) -> usize {
+        self.arena.population_of(0)
+    }
+
+    fn policy_name(&self) -> String {
+        self.arena.policies[0].name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::{FenwickAdaptivePolicy, StaticPolicy};
+    use crate::simulator::engine::run_with_policy;
+    use crate::simulator::network::SimConfig;
+    use crate::simulator::service::{ServiceDist, ServiceFamily};
+    use crate::simulator::EngineConfig;
+    use crate::util::rng::stream_seed;
+
+    fn cfg(n: usize, c: usize, steps: u64, family: ServiceFamily) -> SimConfig {
+        let rates: Vec<f64> = (0..n).map(|i| if i < n / 2 { 4.0 } else { 1.0 }).collect();
+        SimConfig::new(
+            vec![1.0 / n as f64; n],
+            ServiceDist::from_rates(&rates, family),
+            c,
+            steps,
+        )
+    }
+
+    fn static_policy(n: usize) -> Box<dyn SamplingPolicy> {
+        Box::new(StaticPolicy::new(vec![1.0 / n as f64; n]).unwrap())
+    }
+
+    fn heap_oracle(base: &SimConfig, seed: u64) -> SimResult {
+        let mut c = base.clone();
+        c.seed = seed;
+        c.engine = EngineConfig::heap();
+        run_with_policy(c, static_policy(base.p.len())).unwrap()
+    }
+
+    #[test]
+    fn every_batched_replication_matches_its_heap_oracle() {
+        let base = cfg(8, 5, 600, ServiceFamily::Exponential);
+        let seeds: Vec<u64> = (0..6).map(|i| stream_seed(3, &[0, i])).collect();
+        let results = run_batch(&base, &seeds, |_| Ok(static_policy(8))).unwrap();
+        assert_eq!(results.len(), 6);
+        for (r, got) in results.iter().enumerate() {
+            let want = heap_oracle(&base, seeds[r]);
+            assert_eq!(got.total_time.to_bits(), want.total_time.to_bits(), "rep {r}");
+            assert_eq!(got.completions, want.completions, "rep {r}");
+            assert_eq!(got.tau_max, want.tau_max, "rep {r}");
+            for i in 0..8 {
+                assert_eq!(
+                    got.mean_queue[i].to_bits(),
+                    want.mean_queue[i].to_bits(),
+                    "rep {r} node {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_fallback_families_match_heap_too() {
+        // deterministic + lognormal cells take the non-vectorized branch
+        for family in [ServiceFamily::Deterministic, ServiceFamily::LogNormal(0.5)] {
+            let base = cfg(6, 4, 400, family);
+            let seeds = [11u64, 12, 13];
+            let results = run_batch(&base, &seeds, |_| Ok(static_policy(6))).unwrap();
+            for (r, got) in results.iter().enumerate() {
+                let want = heap_oracle(&base, seeds[r]);
+                assert_eq!(
+                    got.total_time.to_bits(),
+                    want.total_time.to_bits(),
+                    "{family:?} rep {r}"
+                );
+                assert_eq!(got.dispatches, want.dispatches, "{family:?} rep {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_adaptive_policies_stay_per_replication() {
+        // adaptive state must not leak between replications: each batched
+        // replication equals the same seed run alone
+        let base = cfg(10, 7, 500, ServiceFamily::Exponential);
+        let mk = || -> Box<dyn SamplingPolicy> {
+            Box::new(FenwickAdaptivePolicy::new(vec![0.1; 10], 0.8).unwrap())
+        };
+        let seeds = [5u64, 6, 7, 8];
+        let batched = run_batch(&base, &seeds, |_| Ok(mk())).unwrap();
+        for (r, got) in batched.iter().enumerate() {
+            let mut c = base.clone();
+            c.seed = seeds[r];
+            let want = run_with_policy(c, mk()).unwrap();
+            assert_eq!(got.total_time.to_bits(), want.total_time.to_bits(), "rep {r}");
+            assert_eq!(got.completions, want.completions, "rep {r}");
+        }
+    }
+
+    #[test]
+    fn population_is_conserved_per_replication() {
+        let base = cfg(7, 4, 0, ServiceFamily::Exponential);
+        let seeds = [1u64, 2, 3];
+        let mut arena =
+            BatchArena::new(&base, &seeds, seeds.iter().map(|_| static_policy(7)).collect())
+                .unwrap();
+        for _ in 0..200 {
+            for r in 0..3 {
+                arena.step_rep(r).unwrap();
+                assert_eq!(arena.population_of(r), 4);
+            }
+            arena.flush_pending();
+        }
+        for r in 0..3 {
+            assert!(arena.busy[r] >= 1 && arena.busy[r] <= 4);
+        }
+    }
+
+    #[test]
+    fn single_batch_engine_is_selectable_via_config() {
+        let mut a = cfg(9, 5, 300, ServiceFamily::Exponential);
+        a.seed = 21;
+        let mut b = a.clone();
+        b.engine = EngineConfig::batch();
+        let heap = run_with_policy(a, static_policy(9)).unwrap();
+        let batch = run_with_policy(b, static_policy(9)).unwrap();
+        assert_eq!(heap.total_time.to_bits(), batch.total_time.to_bits());
+        assert_eq!(heap.completions, batch.completions);
+    }
+
+    #[test]
+    fn arena_rejects_mismatched_inputs() {
+        let base = cfg(4, 2, 10, ServiceFamily::Exponential);
+        assert!(BatchArena::new(&base, &[], Vec::new()).is_err());
+        let err = BatchArena::new(&base, &[1, 2], vec![static_policy(4)]).unwrap_err();
+        assert!(err.contains("2 seeds"), "{err}");
+        let err = BatchArena::new(&base, &[1], vec![static_policy(5)]).unwrap_err();
+        assert!(err.contains("covers 5 nodes"), "{err}");
+    }
+}

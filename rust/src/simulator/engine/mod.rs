@@ -1,6 +1,6 @@
 //! Pluggable event engines for the closed-network simulator.
 //!
-//! Two engines realize the exact same dynamics:
+//! Three engines realize the exact same dynamics:
 //!
 //! * [`EngineKind::Heap`] — the original monolithic [`Network`]: one global
 //!   `BinaryHeap` of completion events and one `VecDeque<Task>` per node.
@@ -12,6 +12,13 @@
 //!   calendar of its completion events.  The central dispatcher merges only
 //!   the S shard fronts per CS step, so calendar operations work on heaps
 //!   of ~busy/S entries that stay cache-resident at n = 10^5–10^6.
+//! * [`EngineKind::Batch`] — R **independent replications of the same
+//!   cell** packed into one replication-major SoA arena (one task pool of
+//!   capacity R·C, one flat queue-length array of R·n entries), stepped in
+//!   an interleaved round loop with service durations drawn in vectorized
+//!   blocks (`util::sampler::batch_exponential`).  The sweep scheduler's
+//!   amortization engine for small-n × many-seed grids; see
+//!   [`batch::run_batch`].
 //!
 //! # Determinism contract
 //!
@@ -35,6 +42,7 @@
 //! per step; bulk policies get the flat SoA `qlen` slice (a memcpy, not a
 //! per-node `VecDeque::len` walk).
 
+pub mod batch;
 pub mod calendar;
 pub mod sharded;
 pub mod soa;
@@ -73,6 +81,10 @@ pub enum EngineKind {
     Heap,
     /// SoA node state + per-shard calendars (+ optional worker threads)
     Sharded,
+    /// replication-batched SoA arena with vectorized service sampling; a
+    /// single `SimConfig` runs as a width-1 batch, the sweep scheduler
+    /// packs R seeds of a cell through [`batch::run_batch`]
+    Batch,
 }
 
 impl std::str::FromStr for EngineKind {
@@ -82,7 +94,8 @@ impl std::str::FromStr for EngineKind {
         match s {
             "heap" => Ok(EngineKind::Heap),
             "sharded" => Ok(EngineKind::Sharded),
-            other => Err(format!("unknown engine '{other}' (heap|sharded)")),
+            "batch" => Ok(EngineKind::Batch),
+            other => Err(format!("unknown engine '{other}' (heap|sharded|batch)")),
         }
     }
 }
@@ -113,6 +126,14 @@ impl EngineConfig {
 
     pub fn sharded(shards: usize, threads: usize) -> EngineConfig {
         EngineConfig { kind: EngineKind::Sharded, shards, threads }
+    }
+
+    /// The batch arena.  Width is not carried here: a `SimConfig` describes
+    /// ONE replication, so a standalone run is a width-1 batch; the sweep
+    /// scheduler chooses R per cell (`[sweep] batch_width`) and calls
+    /// [`batch::run_batch`] directly.
+    pub fn batch() -> EngineConfig {
+        EngineConfig { kind: EngineKind::Batch, shards: 0, threads: 1 }
     }
 
     /// Concrete shard count for a network of n nodes.
@@ -212,6 +233,10 @@ pub fn with_engine<R>(
                 sharded::run_parallel(cfg, policy, shards, threads, f)
             }
         }
+        EngineKind::Batch => {
+            let mut engine = batch::SingleBatch::new(cfg, policy)?;
+            f(&mut engine)
+        }
     }
 }
 
@@ -243,9 +268,113 @@ pub fn run_with_policy(
     })
 }
 
-/// The engine-agnostic aggregation loop.  Floating-point accumulation
-/// order is fixed here, so engines producing identical `StepOutcome`
-/// streams produce bit-identical `SimResult`s.
+/// Per-replication statistics accumulator — the engine-agnostic half of
+/// the aggregation loop.  Floating-point accumulation order is fixed here,
+/// so engines producing identical `StepOutcome` streams produce
+/// bit-identical `SimResult`s; the batch arena drives one aggregator per
+/// replication through the exact code path [`collect`] uses, which is what
+/// keeps batched replications comparable to the heap oracle bit for bit.
+pub(crate) struct StepAggregator {
+    res: SimResult,
+    busy_sum: u64,
+    // lazy time-weighted queue integrals: each node's occupancy is
+    // piecewise constant, so ∫X_i dt only needs flushing when X_i changes
+    // (the completed node and the dispatch target) and once at the end
+    area: Vec<f64>,
+    last_change: Vec<f64>,
+    q_len: Vec<u32>,
+    steps: u64,
+    record_tasks: bool,
+    sample_every: u64,
+    k: u64,
+}
+
+impl StepAggregator {
+    pub fn new(
+        n: usize,
+        steps: u64,
+        record_tasks: bool,
+        sample_every: u64,
+        mut init_qlen: impl FnMut(usize) -> u32,
+    ) -> StepAggregator {
+        StepAggregator {
+            res: SimResult {
+                delay_steps: vec![Welford::new(); n],
+                delay_time: vec![Welford::new(); n],
+                completions: vec![0; n],
+                dispatches: vec![0; n],
+                tau_max: 0,
+                tau_c: 0.0,
+                tau_sum: vec![0.0; n],
+                total_time: 0.0,
+                tasks: Vec::new(),
+                queue_samples: Vec::new(),
+                mean_queue: vec![0.0; n],
+            },
+            busy_sum: 0,
+            area: vec![0.0; n],
+            last_change: vec![0.0; n],
+            q_len: (0..n).map(&mut init_qlen).collect(),
+            steps,
+            record_tasks,
+            sample_every,
+            k: 0,
+        }
+    }
+
+    #[inline]
+    fn flush(&mut self, i: usize, t: f64, new_len: u32) {
+        self.area[i] += self.q_len[i] as f64 * (t - self.last_change[i]);
+        self.last_change[i] = t;
+        self.q_len[i] = new_len;
+    }
+
+    /// Fold one CS step: `qlen_completed`/`qlen_next` are the POST-step
+    /// queue lengths of the completed node and the dispatch target, `busy`
+    /// the post-step busy-node count.
+    pub fn push_step(
+        &mut self,
+        out: &StepOutcome,
+        qlen_completed: u32,
+        qlen_next: u32,
+        busy: usize,
+    ) {
+        let i = out.completed_node as usize;
+        let j = out.next_node as usize;
+        self.flush(i, out.time, qlen_completed);
+        self.flush(j, out.time, qlen_next);
+        let d = out.record.delay_steps();
+        self.res.delay_steps[i].push(d as f64);
+        self.res.delay_time[i].push(out.record.complete_time - out.record.dispatch_time);
+        self.res.completions[i] += 1;
+        self.res.dispatches[j] += 1;
+        self.res.tau_sum[i] += d as f64;
+        self.res.tau_max = self.res.tau_max.max(d);
+        self.busy_sum += busy as u64;
+        if self.record_tasks {
+            self.res.tasks.push(out.record);
+        }
+        if self.sample_every > 0 && self.k % self.sample_every == 0 {
+            self.res.queue_samples.push((self.k, self.q_len.clone()));
+        }
+        self.k += 1;
+    }
+
+    /// Close the integrals at final virtual time `now` and emit the result.
+    pub fn finish(mut self, now: f64) -> SimResult {
+        self.res.tau_c = self.busy_sum as f64 / self.steps.max(1) as f64;
+        self.res.total_time = now;
+        let denom = now.max(f64::MIN_POSITIVE);
+        for i in 0..self.res.mean_queue.len() {
+            self.area[i] += self.q_len[i] as f64 * (now - self.last_change[i]);
+            self.res.mean_queue[i] = self.area[i] / denom;
+        }
+        self.res
+    }
+}
+
+/// The engine-agnostic aggregation loop: drive `net` for `steps` CS steps
+/// through a [`StepAggregator`].
 fn collect(
     net: &mut dyn EventEngine,
     n: usize,
@@ -254,61 +383,21 @@ fn collect(
     sample_every: u64,
     concurrency: usize,
 ) -> Result<SimResult, String> {
-    let mut res = SimResult {
-        delay_steps: vec![Welford::new(); n],
-        delay_time: vec![Welford::new(); n],
-        completions: vec![0; n],
-        dispatches: vec![0; n],
-        tau_max: 0,
-        tau_c: 0.0,
-        tau_sum: vec![0.0; n],
-        total_time: 0.0,
-        tasks: Vec::new(),
-        queue_samples: Vec::new(),
-        mean_queue: vec![0.0; n],
-    };
-    let mut busy_sum = 0u64;
-    // lazy time-weighted queue integrals: each node's occupancy is
-    // piecewise constant, so ∫X_i dt only needs flushing when X_i changes
-    // (the completed node and the dispatch target) and once at the end
-    let mut area: Vec<f64> = vec![0.0; n];
-    let mut last_change: Vec<f64> = vec![0.0; n];
-    let mut q_len: Vec<u32> = (0..n).map(|i| net.queue_len(i) as u32).collect();
-    let flush = |i: usize, t: f64, new_len: u32, area: &mut [f64], lc: &mut [f64], ql: &mut [u32]| {
-        area[i] += ql[i] as f64 * (t - lc[i]);
-        lc[i] = t;
-        ql[i] = new_len;
-    };
-    for k in 0..steps {
+    let mut agg =
+        StepAggregator::new(n, steps, record_tasks, sample_every, |i| net.queue_len(i) as u32);
+    for _ in 0..steps {
         let out = net.advance().ok_or("network drained")?;
         let i = out.completed_node as usize;
         let j = out.next_node as usize;
-        flush(i, out.time, net.queue_len(i) as u32, &mut area, &mut last_change, &mut q_len);
-        flush(j, out.time, net.queue_len(j) as u32, &mut area, &mut last_change, &mut q_len);
-        let d = out.record.delay_steps();
-        res.delay_steps[i].push(d as f64);
-        res.delay_time[i].push(out.record.complete_time - out.record.dispatch_time);
-        res.completions[i] += 1;
-        res.dispatches[j] += 1;
-        res.tau_sum[i] += d as f64;
-        res.tau_max = res.tau_max.max(d);
-        busy_sum += net.busy_nodes() as u64;
-        if record_tasks {
-            res.tasks.push(out.record);
-        }
-        if sample_every > 0 && k % sample_every == 0 {
-            res.queue_samples.push((k, q_len.clone()));
-        }
-    }
-    res.tau_c = busy_sum as f64 / steps.max(1) as f64;
-    res.total_time = net.now();
-    let denom = net.now().max(f64::MIN_POSITIVE);
-    for i in 0..n {
-        area[i] += q_len[i] as f64 * (net.now() - last_change[i]);
-        res.mean_queue[i] = area[i] / denom;
+        agg.push_step(
+            &out,
+            net.queue_len(i) as u32,
+            net.queue_len(j) as u32,
+            net.busy_nodes(),
+        );
     }
     debug_assert_eq!(net.population(), concurrency);
-    Ok(res)
+    Ok(agg.finish(net.now()))
 }
 
 /// Transient estimation of m_{i,k}^T (Fig 1): average, over `reps`
@@ -359,6 +448,7 @@ mod tests {
     fn engine_kind_parses() {
         assert_eq!("heap".parse::<EngineKind>().unwrap(), EngineKind::Heap);
         assert_eq!("sharded".parse::<EngineKind>().unwrap(), EngineKind::Sharded);
+        assert_eq!("batch".parse::<EngineKind>().unwrap(), EngineKind::Batch);
         assert!("quantum".parse::<EngineKind>().is_err());
     }
 

@@ -15,6 +15,13 @@
 //!
 //! Total footprint is ~28 B per task + ~12 B per node, in five
 //! allocations, regardless of n.
+//!
+//! The batch replication engine (`engine::batch`) reuses the pool
+//! *replication-major*: R same-shape replications share one pool of R·n
+//! virtual nodes (global index `rep·n + node`) and capacity R·C — one
+//! allocation for all R task pools.  [`TaskPool::qlens_of`] /
+//! [`TaskPool::population_of`] expose a single replication's contiguous
+//! window of that layout.
 
 /// Null slot / null node sentinel for the intrusive lists.
 pub(crate) const NIL: u32 = u32::MAX;
@@ -104,9 +111,22 @@ impl TaskPool {
         out
     }
 
+    /// Queue lengths of the `len` nodes starting at `lo` — one
+    /// replication's window of a replication-major pool.
+    #[inline]
+    pub fn qlens_of(&self, lo: usize, len: usize) -> &[u32] {
+        &self.qlen[lo..lo + len]
+    }
+
     /// Total tasks currently queued (must equal C once initialized).
     pub fn population(&self) -> usize {
         self.qlen.iter().map(|&q| q as usize).sum()
+    }
+
+    /// Tasks queued in the `len`-node window starting at `lo` — a
+    /// replication's population in a replication-major pool.
+    pub fn population_of(&self, lo: usize, len: usize) -> usize {
+        self.qlens_of(lo, len).iter().map(|&q| q as usize).sum()
     }
 }
 
@@ -149,6 +169,23 @@ mod tests {
         let (a, _, _, _) = pool.pop(1);
         let (b, _, _, _) = pool.pop(1);
         assert_eq!((a, b), (3, 4), "FIFO survives slot reuse");
+    }
+
+    #[test]
+    fn replication_major_windows_are_independent() {
+        // two "replications" of 3 nodes sharing one 6-virtual-node pool
+        let mut pool = TaskPool::new(6, 4);
+        pool.push(0, 1, 0.0, 0.5); // rep 0, node 0
+        pool.push(3, 2, 0.0, 0.5); // rep 1, node 0
+        pool.push(4, 3, 0.0, 0.5); // rep 1, node 1
+        assert_eq!(pool.qlens_of(0, 3), &[1, 0, 0]);
+        assert_eq!(pool.qlens_of(3, 3), &[1, 1, 0]);
+        assert_eq!(pool.population_of(0, 3), 1);
+        assert_eq!(pool.population_of(3, 3), 2);
+        assert_eq!(pool.population(), 3);
+        let (step, _, _, _) = pool.pop(3);
+        assert_eq!(step, 2, "rep 1's FIFO untouched by rep 0");
+        assert_eq!(pool.population_of(0, 3), 1);
     }
 
     #[test]

@@ -1,14 +1,17 @@
 //! Event-driven closed-network simulator — the dynamics substrate under the
 //! paper's figures (1, 5, 10–12) and the DL experiment driver.
 //!
-//! Two interchangeable engines (`engine`): the monolithic heap oracle
-//! (`Network`) and the sharded SoA engine that scales replications to
-//! n = 10^6 nodes.  They are bit-identical on a shared seed.
+//! Three interchangeable engines (`engine`): the monolithic heap oracle
+//! (`Network`), the sharded SoA engine that scales replications to
+//! n = 10^6 nodes, and the batch arena that packs R replications of one
+//! cell into a single SoA allocation with vectorized service sampling.
+//! All are bit-identical on a shared seed.
 
 pub mod engine;
 pub mod network;
 pub mod service;
 
+pub use engine::batch::run_batch;
 pub use engine::{
     run, run_with_policy, transient_mi, with_engine, EngineConfig, EngineKind, EventEngine,
 };

@@ -4,7 +4,15 @@
 //! minimum wall-time and a minimum iteration count are reached; reports
 //! mean / median / p95 per-iteration time and throughput. Used by all
 //! `rust/benches/*` targets (declared `harness = false`).
+//!
+//! [`JsonReport`] serializes a bench run's throughputs and speedup gates
+//! as JSON — the `--json <path>` flag of `bench_sampler`/`bench_engine`,
+//! whose output CI uploads as the `BENCH_pr<N>.json` perf-trajectory
+//! artifact.  Writing happens BEFORE any `--assert-speedup` gate exits, so
+//! a failing run still leaves its measurements behind for diagnosis.
 
+use crate::util::json::Json;
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 pub struct BenchResult {
@@ -113,6 +121,61 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Machine-readable bench artifact: named throughputs (items/sec) plus
+/// named speedup ratios (the values the CI gates assert on), rendered
+/// with the offline JSON substrate.  Keys are emitted sorted, so two runs
+/// of the same bench diff cleanly.
+#[derive(Debug, Default)]
+pub struct JsonReport {
+    bench: String,
+    throughputs: BTreeMap<String, f64>,
+    speedups: BTreeMap<String, f64>,
+}
+
+impl JsonReport {
+    pub fn new(bench: &str) -> JsonReport {
+        JsonReport { bench: bench.to_string(), ..JsonReport::default() }
+    }
+
+    /// Record a measured throughput (items/sec) under `name`.
+    pub fn throughput(&mut self, name: &str, per_sec: f64) {
+        self.throughputs.insert(name.to_string(), per_sec);
+    }
+
+    /// Record a derived speedup ratio under `name`.
+    pub fn speedup(&mut self, name: &str, ratio: f64) {
+        self.speedups.insert(name.to_string(), ratio);
+    }
+
+    pub fn to_json(&self) -> Json {
+        let nums = |m: &BTreeMap<String, f64>| -> Json {
+            Json::Obj(
+                m.iter()
+                    .map(|(k, &v)| {
+                        (k.clone(), if v.is_finite() { Json::Num(v) } else { Json::Null })
+                    })
+                    .collect(),
+            )
+        };
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str(self.bench.clone()));
+        root.insert("throughputs_per_sec".to_string(), nums(&self.throughputs));
+        root.insert("speedups".to_string(), nums(&self.speedups));
+        Json::Obj(root)
+    }
+
+    /// Write the artifact, creating parent directories as needed.
+    pub fn write(&self, path: &str) -> Result<(), String> {
+        let p = std::path::Path::new(path);
+        if let Some(dir) = p.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+            }
+        }
+        std::fs::write(p, self.to_json().render()).map_err(|e| format!("{path}: {e}"))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,6 +197,25 @@ mod tests {
         assert!(r.iters >= 3);
         assert!(r.mean_ns > 0.0);
         assert!(r.min_ns <= r.median_ns && r.median_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        let mut r = JsonReport::new("bench_engine");
+        r.throughput("engine/heap/n=10000", 1.5e6);
+        r.throughput("engine/batch-R32/n=10000", 4.5e6);
+        r.speedup("batch_vs_heap_loop", 3.0);
+        r.speedup("bad", f64::NAN);
+        let parsed = Json::parse(&r.to_json().render()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str().unwrap(), "bench_engine");
+        let t = parsed.get("throughputs_per_sec").unwrap();
+        assert_eq!(
+            t.get("engine/batch-R32/n=10000").unwrap().as_f64().unwrap(),
+            4.5e6
+        );
+        let s = parsed.get("speedups").unwrap();
+        assert_eq!(s.get("batch_vs_heap_loop").unwrap().as_f64().unwrap(), 3.0);
+        assert!(s.get("bad").unwrap().as_f64().is_none(), "NaN renders as null");
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Process-memory introspection for the sweep's BENCH trajectories.
 //!
 //! Linux-only (reads `/proc/self/status`); other platforms report `None`
-//! and the sweep simply omits the metric.  Note the high-water mark is
+//! and the sweep **omits the `peak_rss_mib` field** from its `perf` block
+//! — a macOS/Windows runner must never see a fake 0 (or a poisoned NaN)
+//! where a measurement belongs.  Note the high-water mark is
 //! **process-wide and monotone**: a replication's value is the peak of
 //! everything the process has run up to and including it, so in a
 //! mixed-size sweep a small cell that runs after (or concurrently with) a
@@ -21,13 +23,11 @@ pub fn peak_rss_bytes() -> Option<u64> {
     None
 }
 
-/// Peak resident set size in MiB as f64 (NaN when unavailable), shaped for
-/// direct insertion into a metrics map.
-pub fn peak_rss_mib() -> f64 {
-    match peak_rss_bytes() {
-        Some(b) => b as f64 / (1024.0 * 1024.0),
-        None => f64::NAN,
-    }
+/// Peak resident set size in MiB, `None` off-Linux (or when `/proc` is
+/// unreadable).  Callers skip the metric entirely when absent rather than
+/// recording a placeholder value.
+pub fn peak_rss_mib() -> Option<f64> {
+    peak_rss_bytes().map(|b| b as f64 / (1024.0 * 1024.0))
 }
 
 #[cfg(test)]
@@ -40,6 +40,18 @@ mod tests {
             assert!(b > 0);
             // a running test binary resides in at least a megabyte
             assert!(b > 1 << 20, "VmHWM {b} bytes is implausibly small");
+        }
+    }
+
+    #[test]
+    fn mib_mirrors_bytes_exactly_including_absence() {
+        match (peak_rss_bytes(), peak_rss_mib()) {
+            (Some(b), Some(mib)) => {
+                assert!(mib > 0.0 && mib.is_finite());
+                assert_eq!(mib.to_bits(), (b as f64 / (1024.0 * 1024.0)).to_bits());
+            }
+            (None, None) => {} // off-Linux: no value, never a fake 0/NaN
+            (b, m) => panic!("probe disagreement: bytes {b:?} vs mib {m:?}"),
         }
     }
 

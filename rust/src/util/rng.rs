@@ -15,12 +15,36 @@ pub struct SplitMix64(pub u64);
 impl SplitMix64 {
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
-        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
-        let mut z = self.0;
-        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-        z ^ (z >> 31)
+        self.0 = self.0.wrapping_add(SPLITMIX_GAMMA);
+        splitmix_mix(self.0)
     }
+}
+
+/// The SplitMix64 state increment (Weyl constant).
+pub(crate) const SPLITMIX_GAMMA: u64 = 0x9E3779B97F4A7C15;
+
+/// The SplitMix64 output finalizer at a given state — the pure mixing
+/// function [`SplitMix64::next_u64`] applies after advancing its state.
+#[inline(always)]
+pub(crate) fn splitmix_mix(state: u64) -> u64 {
+    let mut z = state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// First raw output of `Rng::new(seed)` without materializing the
+/// generator.  Keyed service streams consume exactly one draw per key, so
+/// the four-word state expansion collapses to the two SplitMix finalizer
+/// evaluations the first Xoshiro output actually reads (`s[0]` and
+/// `s[3]`).  Straight-line integer math — the scalar kernel the batched
+/// service sampler ([`crate::util::sampler::batch_exponential`]) chunks
+/// across lanes.  Pinned against the full generator in tests.
+#[inline(always)]
+pub fn first_u64_of(seed: u64) -> u64 {
+    let s0 = splitmix_mix(seed.wrapping_add(SPLITMIX_GAMMA));
+    let s3 = splitmix_mix(seed.wrapping_add(SPLITMIX_GAMMA.wrapping_mul(4)));
+    s0.wrapping_add(s3).rotate_left(23).wrapping_add(s0)
 }
 
 /// Derive a well-separated u64 seed for a tagged replication stream.
@@ -275,6 +299,19 @@ mod tests {
         let mut b = SplitMix64(7);
         for _ in 0..10 {
             assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn first_u64_of_matches_full_generator() {
+        // the batched service sampler relies on this collapse being exact
+        let mut seeds = SplitMix64(0xFEED);
+        for _ in 0..256 {
+            let s = seeds.next_u64();
+            assert_eq!(first_u64_of(s), Rng::new(s).next_u64(), "seed {s:#x}");
+        }
+        for s in [0u64, 1, u64::MAX, stream_seed(7, &[3, 9])] {
+            assert_eq!(first_u64_of(s), Rng::new(s).next_u64());
         }
     }
 

@@ -14,8 +14,18 @@
 //!   `tests/statistical_samplers.rs`.  Its historical fall-through bug
 //!   (returning a zero-mass trailing index when `u` lands in the
 //!   floating-point gap at the top of the CDF) is fixed here.
+//!
+//! Plus the **batched keyed-duration path** ([`batch_exponential`] /
+//! [`first_uniform_pos`]) used by the batch replication engine
+//! (`simulator::engine::batch`): keyed service draws consume exactly one
+//! uniform from a fresh generator, so a block of draws reduces to
+//! straight-line integer mixing per lane — chunked into fixed-width
+//! `[u64; EXP_LANES]` / `[f64; EXP_LANES]` arrays the autovectorizer turns
+//! into SIMD, with a scalar tail.  Every lane performs the exact scalar
+//! operation sequence, so the batch is bit-identical to the one-draw-at-a-
+//! time oracle by construction.
 
-use crate::util::rng::Rng;
+use crate::util::rng::{first_u64_of, Rng};
 
 /// Draw an index from the distribution `p` given a uniform variate
 /// `u ∈ [0, 1)` by scanning the cumulative sum — the reference sampler.
@@ -44,6 +54,56 @@ pub fn linear_route(p: &[f64], u: f64) -> usize {
     }
     debug_assert!(seen_pos, "linear_route on an all-zero distribution");
     last_pos
+}
+
+/// Chunk width of the batched keyed-duration path.  Eight u64/f64 lanes
+/// fill two AVX2 registers (or one AVX-512 register); the integer mixing
+/// pipeline and the `1 - u` / division arithmetic vectorize, while `ln`
+/// stays a per-lane libm call (there is no stable vector `ln`, and a
+/// polynomial approximation would break bit-identity with the scalar
+/// oracle).
+pub const EXP_LANES: usize = 8;
+
+const U53_INV: f64 = 1.0 / (1u64 << 53) as f64;
+
+/// The first uniform-in-(0, 1] variate of `Rng::new(seed)` — bit-identical
+/// to `Rng::new(seed).uniform_pos()`.  The log-uniform building block of
+/// the keyed service stream: an exponential draw is `-ln(u)/rate` of this
+/// value, and a future batched log-normal path would feed pairs of them
+/// through Box–Muller.
+#[inline(always)]
+pub fn first_uniform_pos(seed: u64) -> f64 {
+    1.0 - (first_u64_of(seed) >> 11) as f64 * U53_INV
+}
+
+/// Batched keyed-exponential sampling: `out[i]` is bit-identical to
+/// `Rng::new(seeds[i]).exponential(rates[i])` — the scalar keyed
+/// service-duration draw of `simulator::engine::service_duration` — for
+/// every `i`.  Bodies run in fixed-width chunks of [`EXP_LANES`] so the
+/// seed-expansion integer pipeline and the inversion arithmetic
+/// autovectorize; the remainder falls back to the same scalar sequence.
+///
+/// All three slices must have equal length.  Rates must be positive (the
+/// same precondition as `Rng::exponential`).
+pub fn batch_exponential(seeds: &[u64], rates: &[f64], out: &mut [f64]) {
+    assert_eq!(seeds.len(), rates.len(), "seeds/rates length mismatch");
+    assert_eq!(seeds.len(), out.len(), "seeds/out length mismatch");
+    let chunks = seeds.len() / EXP_LANES;
+    for c in 0..chunks {
+        let at = c * EXP_LANES;
+        // lane-wise integer expansion: u64 mixing only, SIMD-friendly
+        let mut u = [0.0f64; EXP_LANES];
+        for l in 0..EXP_LANES {
+            u[l] = first_uniform_pos(seeds[at + l]);
+        }
+        // inversion: ln per lane (scalar libm), then vectorizable divide
+        for l in 0..EXP_LANES {
+            out[at + l] = -u[l].ln() / rates[at + l];
+        }
+    }
+    for i in chunks * EXP_LANES..seeds.len() {
+        out[i] = -first_uniform_pos(seeds[i]).ln() / rates[i];
+    }
 }
 
 /// Fenwick (binary indexed) tree over non-negative f64 weights, supporting
@@ -293,6 +353,47 @@ mod tests {
         assert!(FenwickSampler::new(&[f64::NAN]).is_err());
         // an all-zero build is allowed (weights arrive via set)
         assert!(FenwickSampler::new(&[0.0, 0.0]).is_ok());
+    }
+
+    #[test]
+    fn batch_exponential_is_bit_identical_to_scalar() {
+        use crate::util::rng::stream_seed;
+        // lengths straddling the chunk width exercise both the vector body
+        // and the scalar tail
+        for len in [0usize, 1, 7, 8, 9, 16, 37, 64] {
+            let seeds: Vec<u64> = (0..len as u64).map(|i| stream_seed(5, &[i, 11])).collect();
+            let rates: Vec<f64> = (0..len).map(|i| 0.5 + (i % 7) as f64).collect();
+            let mut out = vec![0.0; len];
+            batch_exponential(&seeds, &rates, &mut out);
+            for i in 0..len {
+                let want = Rng::new(seeds[i]).exponential(rates[i]);
+                assert_eq!(
+                    out[i].to_bits(),
+                    want.to_bits(),
+                    "lane {i} of {len}: {} vs {want}",
+                    out[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn first_uniform_pos_matches_generator_and_stays_positive() {
+        let mut rng = Rng::new(77);
+        for _ in 0..200 {
+            let seed = rng.next_u64();
+            let want = Rng::new(seed).uniform_pos();
+            let got = first_uniform_pos(seed);
+            assert_eq!(got.to_bits(), want.to_bits());
+            assert!(got > 0.0 && got <= 1.0, "u = {got}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn batch_exponential_rejects_ragged_inputs() {
+        let mut out = vec![0.0; 2];
+        batch_exponential(&[1, 2, 3], &[1.0, 1.0], &mut out);
     }
 
     #[test]

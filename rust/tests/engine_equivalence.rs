@@ -2,12 +2,14 @@
 //!
 //! `engine = "heap"` (the original monolithic `Network`) is the oracle;
 //! `engine = "sharded"` must produce a bit-identical `SimResult` for
-//! every shard count and every thread count on a shared seed, across
-//! policies (static / uniform / optimal / adaptive / adaptive-exact),
-//! service families, and initial placements.  The equivalence holds
-//! because routing draws come from one sequential stream consumed in
-//! CS-step order and service durations are keyed by (node, service
-//! count) — see `simulator::engine`.
+//! every shard count and every thread count on a shared seed, and
+//! `engine = "batch"` for every batch width R — each batched replication
+//! equals its seed run alone on the heap — across policies (static /
+//! uniform / optimal / adaptive / adaptive-exact), service families, and
+//! initial placements.  The equivalence holds because routing draws come
+//! from one per-replication sequential stream consumed in CS-step order
+//! and service durations are keyed by (node, service count) — see
+//! `simulator::engine`.
 //!
 //! Also carries the million-node acceptance check: a sweep cell with
 //! n = 10^6 clients completes through the sharded engine, and a 10^5-node
@@ -19,11 +21,11 @@ use fedqueue::coordinator::policy::{
 use fedqueue::coordinator::sweep::{run_sweep, SweepSpec};
 use fedqueue::queueing::ClosedNetwork;
 use fedqueue::simulator::{
-    run_with_policy, EngineConfig, EngineKind, InitPlacement, ServiceDist, ServiceFamily,
-    SimConfig, SimResult,
+    run_batch, run_with_policy, EngineConfig, EngineKind, InitPlacement, ServiceDist,
+    ServiceFamily, SimConfig, SimResult,
 };
 use fedqueue::util::proptest::{check, Config as PropConfig, Gen};
-use fedqueue::util::rng::Rng;
+use fedqueue::util::rng::{stream_seed, Rng};
 
 /// Every field of a `SimResult`, flattened to bits — the comparison unit.
 fn digest(r: &SimResult) -> Vec<u64> {
@@ -60,7 +62,8 @@ fn digest(r: &SimResult) -> Vec<u64> {
 const SHARD_GRID: [usize; 3] = [1, 4, 7];
 const THREAD_GRID: [usize; 2] = [1, 4];
 
-/// Assert heap ≡ sharded for every (S, threads) combination.
+/// Assert heap ≡ sharded for every (S, threads) combination, and ≡ the
+/// width-1 batch arena behind the same `run_with_policy` surface.
 fn assert_equivalent(
     mut cfg: SimConfig,
     mk_policy: impl Fn() -> Box<dyn SamplingPolicy>,
@@ -78,6 +81,11 @@ fn assert_equivalent(
                 return Err(format!("sharded(S={s}, threads={t}) diverged from heap"));
             }
         }
+    }
+    let mut c = cfg.clone();
+    c.engine = EngineConfig::batch();
+    if digest(&run_with_policy(c, mk_policy())?) != oracle {
+        return Err("batch(R=1) diverged from heap".into());
     }
     Ok(())
 }
@@ -116,6 +124,72 @@ fn sharded_matches_heap_for_every_builtin_policy() {
         let pc = ctx(n, c, steps, 0.6);
         assert_equivalent(cfg, || PolicyRegistry::builtin().build(&policy, &pc).unwrap())
             .unwrap_or_else(|e| panic!("policy {policy}: {e}"));
+    }
+}
+
+/// Batch widths of the ISSUE-4 acceptance criterion.
+const BATCH_WIDTHS: [usize; 3] = [1, 4, 32];
+
+#[test]
+fn batch_arena_matches_heap_for_every_builtin_policy_and_width() {
+    // R ∈ {1, 4, 32}: every replication of a batch arena must be
+    // bit-identical to its seed run ALONE on the heap oracle, whatever
+    // else shares the arena — for all builtin policies, with task records
+    // and queue samples included in the digest
+    let (n, c, steps) = (14usize, 9usize, 1_500u64);
+    let pc = ctx(n, c, steps, 0.6);
+    for policy in PolicyRegistry::builtin().names() {
+        let mut base = two_cluster(n, c, steps, 0, ServiceFamily::Exponential);
+        base.record_tasks = true;
+        base.queue_sample_every = 97;
+        let mk = || PolicyRegistry::builtin().build(&policy, &pc).unwrap();
+        // the sweep's seed layout: stream_seed(base, [cell, seed_idx])
+        let seeds: Vec<u64> = (0..32u64).map(|s| stream_seed(42, &[0, s])).collect();
+        let oracles: Vec<Vec<u64>> = seeds
+            .iter()
+            .map(|&seed| {
+                let mut cfg = base.clone();
+                cfg.seed = seed;
+                digest(&run_with_policy(cfg, mk()).unwrap())
+            })
+            .collect();
+        for r in BATCH_WIDTHS {
+            let results = run_batch(&base, &seeds[..r], |_| Ok(mk())).unwrap();
+            assert_eq!(results.len(), r, "{policy}: R={r}");
+            for (i, res) in results.iter().enumerate() {
+                assert_eq!(
+                    digest(res),
+                    oracles[i],
+                    "{policy}: batch R={r} rep {i} diverged from its heap oracle"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_arena_matches_heap_across_service_families() {
+    // deterministic and lognormal cells exercise the scalar fallback of
+    // the block sampler; exponential the vectorized path
+    for family in [
+        ServiceFamily::Exponential,
+        ServiceFamily::Deterministic,
+        ServiceFamily::LogNormal(0.5),
+    ] {
+        let mut base = two_cluster(10, 6, 1_000, 0, family);
+        base.record_tasks = true;
+        let p = base.p.clone();
+        let mk = || -> Box<dyn SamplingPolicy> {
+            Box::new(fedqueue::coordinator::StaticPolicy::new(p.clone()).unwrap())
+        };
+        let seeds = [3u64, 5, 8, 13];
+        let results = run_batch(&base, &seeds, |_| Ok(mk())).unwrap();
+        for (i, res) in results.iter().enumerate() {
+            let mut cfg = base.clone();
+            cfg.seed = seeds[i];
+            let oracle = digest(&run_with_policy(cfg, mk()).unwrap());
+            assert_eq!(digest(res), oracle, "{family:?} rep {i}");
+        }
     }
 }
 

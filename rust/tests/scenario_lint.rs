@@ -1,0 +1,76 @@
+//! Scenario lint: every TOML under `scenarios/` must parse through the
+//! validator that owns its format, so a stale file fails `cargo test`
+//! instead of a user's sweep (or a CI smoke job) hours later.
+//!
+//! Format detection mirrors the CLI surfaces: files with a `[sweep]` or
+//! `[grid]` table are sweep grids (`fedqueue sweep --grid`), everything
+//! else is a train scenario (`fedqueue train --scenario`).  Both parsers
+//! run their full structural validation at parse time (axis types, policy
+//! and algorithm registry membership, two-cluster shape for `optimal`,
+//! engine names), which is exactly what this lint wants to pin.
+
+use fedqueue::coordinator::{Experiment, SweepSpec};
+use fedqueue::util::toml::Doc;
+use std::path::PathBuf;
+
+fn scenarios_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../scenarios")
+}
+
+fn scenario_files() -> Vec<PathBuf> {
+    let dir = scenarios_dir();
+    let mut files: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("scenario dir {}: {e}", dir.display()))
+        .map(|entry| entry.expect("readable dir entry").path())
+        .filter(|p| p.extension().map(|x| x == "toml").unwrap_or(false))
+        .collect();
+    files.sort();
+    files
+}
+
+#[test]
+fn every_scenario_file_parses_through_its_validator() {
+    let files = scenario_files();
+    assert!(
+        files.len() >= 6,
+        "only {} scenario files found — wrong directory?",
+        files.len()
+    );
+    let mut grids = 0usize;
+    let mut trains = 0usize;
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        let doc =
+            Doc::parse(&text).unwrap_or_else(|e| panic!("{}: TOML: {e}", path.display()));
+        if doc.tables.contains_key("sweep") || doc.tables.contains_key("grid") {
+            let spec = SweepSpec::from_toml(&text)
+                .unwrap_or_else(|e| panic!("{}: sweep grid: {e}", path.display()));
+            assert!(!spec.cells.is_empty(), "{}: zero cells", path.display());
+            grids += 1;
+        } else {
+            let exp = Experiment::from_toml(&text)
+                .unwrap_or_else(|e| panic!("{}: train scenario: {e}", path.display()));
+            exp.validate()
+                .unwrap_or_else(|e| panic!("{}: train scenario: {e}", path.display()));
+            trains += 1;
+        }
+    }
+    assert!(grids >= 2, "expected sweep grids among scenarios/, found {grids}");
+    assert!(trains >= 3, "expected train scenarios among scenarios/, found {trains}");
+}
+
+#[test]
+fn stale_scenario_keys_fail_the_lint_not_the_user() {
+    // the detection rule routes each format to the validator that rejects
+    // its mistakes: a typoed grid key and a typoed experiment key both
+    // die at parse time
+    let bad_grid = "[sweep]\nseeds = 2\n[grid]\nclinets = [10]\n";
+    let doc = Doc::parse(bad_grid).unwrap();
+    assert!(doc.tables.contains_key("sweep"));
+    assert!(SweepSpec::from_toml(bad_grid).unwrap_err().contains("clinets"));
+    let bad_train = "[experiment]\nvariannt = \"tiny\"\n";
+    let doc = Doc::parse(bad_train).unwrap();
+    assert!(!doc.tables.contains_key("sweep") && !doc.tables.contains_key("grid"));
+    assert!(Experiment::from_toml(bad_train).unwrap_err().contains("variannt"));
+}
