@@ -55,8 +55,13 @@ pub struct Experiment {
     /// per-fast-node selection probability for the static policy;
     /// None = uniform base
     pub p_fast: Option<f64>,
-    /// queue-pressure strength for the adaptive policy
+    /// queue-pressure / delay-pressure strength for the adaptive and
+    /// delay-adaptive policies
     pub gamma: f64,
+    /// EWMA momentum β for the delay-adaptive policy's delay estimates
+    pub beta: f64,
+    /// staleness-damping strength κ for the genasync-damped strategy
+    pub kappa: f64,
     /// dataset sizes
     pub n_train: usize,
     pub n_val: usize,
@@ -87,6 +92,8 @@ impl Experiment {
                 mu_fast: 4.0,
                 p_fast: None,
                 gamma: 0.5,
+                beta: 0.9,
+                kappa: 0.5,
                 n_train: 2_000,
                 n_val: 400,
                 classes_per_client: 7,
@@ -185,8 +192,8 @@ impl Experiment {
                     "eval_every",
                     "seed",
                 ],
-                "policy" => &["kind", "p_fast", "gamma"],
-                "strategy" => &["fedbuff_z", "fedavg_s", "favano_interval"],
+                "policy" => &["kind", "p_fast", "gamma", "beta"],
+                "strategy" => &["fedbuff_z", "fedavg_s", "favano_interval", "kappa"],
                 other => return Err(format!("unknown table [{other}] (experiment|policy|strategy)")),
             };
             for k in keys.keys() {
@@ -217,9 +224,11 @@ impl Experiment {
             .backend(string(e, "backend", "native")?.parse::<BackendKind>()?)
             .policy(&string("policy", "kind", "static")?)
             .adaptive_gamma(float("policy", "gamma", 0.5)?)
+            .delay_beta(float("policy", "beta", 0.9)?)
             .fedbuff_z(count("strategy", "fedbuff_z", 10)? as usize)
             .fedavg_s(count("strategy", "fedavg_s", 0)? as usize)
-            .favano_interval(float("strategy", "favano_interval", 4.0)?);
+            .favano_interval(float("strategy", "favano_interval", 4.0)?)
+            .damping_kappa(float("strategy", "kappa", 0.5)?);
         if doc.get("policy", "p_fast").is_some() {
             b = b.p_fast(float("policy", "p_fast", 0.0)?);
         }
@@ -256,6 +265,7 @@ impl Experiment {
             n: self.n_clients,
             base_p: self.p_vec(),
             gamma: self.gamma,
+            beta: self.beta,
             n_fast: self.n_fast(),
             mu_fast: self.mu_fast,
             mu_slow: 1.0,
@@ -273,6 +283,7 @@ impl Experiment {
             fedbuff_z: self.fedbuff_z,
             fedavg_s: self.fedavg_s,
             favano_interval: self.favano_interval,
+            kappa: self.kappa,
         }
     }
 
@@ -295,6 +306,12 @@ impl Experiment {
         }
         if !(self.mu_fast > 0.0) {
             return Err(format!("mu_fast {} must be positive", self.mu_fast));
+        }
+        if !(0.0..1.0).contains(&self.beta) {
+            return Err(format!("beta {} must be in [0, 1)", self.beta));
+        }
+        if !(self.kappa >= 0.0) || !self.kappa.is_finite() {
+            return Err(format!("kappa {} must be finite and >= 0", self.kappa));
         }
         if let Some(pf) = self.p_fast {
             let nf = self.n_fast();
@@ -497,6 +514,18 @@ impl ExperimentBuilder {
         self
     }
 
+    /// EWMA momentum β for the delay-adaptive policy.
+    pub fn delay_beta(mut self, b: f64) -> Self {
+        self.exp.beta = b;
+        self
+    }
+
+    /// Staleness-damping strength κ for the genasync-damped strategy.
+    pub fn damping_kappa(mut self, k: f64) -> Self {
+        self.exp.kappa = k;
+        self
+    }
+
     pub fn n_train(mut self, n: usize) -> Self {
         self.exp.n_train = n;
         self
@@ -625,6 +654,16 @@ mod tests {
         assert!(Experiment::builder().algo("sync-sgd").build().is_err());
         assert!(Experiment::builder().policy("zipf").build().is_err());
         assert!(Experiment::builder().p_fast(0.9).build().is_err());
+        assert!(Experiment::builder().delay_beta(1.0).build().is_err());
+        assert!(Experiment::builder().delay_beta(-0.1).build().is_err());
+        assert!(Experiment::builder().damping_kappa(-1.0).build().is_err());
+        assert!(Experiment::builder()
+            .policy("delay-adaptive")
+            .algo("genasync-damped")
+            .delay_beta(0.0)
+            .damping_kappa(0.0)
+            .build()
+            .is_ok());
     }
 
     #[test]
@@ -649,9 +688,11 @@ seed = 9
 [policy]
 kind = "adaptive"
 gamma = 0.8
+beta = 0.7
 
 [strategy]
 fedbuff_z = 5
+kappa = 0.25
 "#;
         let exp = Experiment::from_toml(text).unwrap();
         assert_eq!(exp.variant, "tiny");
@@ -663,6 +704,8 @@ fedbuff_z = 5
         assert_eq!(exp.steps, 50);
         assert_eq!(exp.fedbuff_z, 5);
         assert_eq!(exp.gamma, 0.8);
+        assert_eq!(exp.beta, 0.7);
+        assert_eq!(exp.kappa, 0.25);
         assert_eq!(exp.seed, 9);
     }
 

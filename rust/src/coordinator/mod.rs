@@ -15,8 +15,9 @@ pub use experiment::{
     run_experiment, seed_sweep, table2_seeds, Experiment, ExperimentBuilder, SeedSweep,
 };
 pub use policy::{
-    optimal_two_cluster, AdaptiveQueuePolicy, FenwickAdaptivePolicy, PolicyCtx, PolicyRegistry,
-    SamplingPolicy, StaticPolicy,
+    optimal_two_cluster, two_cluster_static, AdaptiveQueuePolicy, DelayAdaptivePolicy,
+    FenwickAdaptivePolicy, FenwickDelayAdaptivePolicy, PolicyCtx, PolicyRegistry, SamplingPolicy,
+    StaticPolicy,
 };
 pub use sweep::{run_sweep, SweepMode, SweepReport, SweepSpec};
 pub use sync::{run_favano, run_fedavg, DataOracle, SyncResult};

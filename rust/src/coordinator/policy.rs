@@ -33,6 +33,16 @@
 //!   delay-aware policies of arXiv:2502.08206 / arXiv:2402.11198.
 //! * `adaptive-exact` — same distribution via full renormalization, O(n)
 //!   per step; the oracle for tests and small-n debugging.
+//! * `delay-adaptive` — delay-feedback (arXiv:2402.11198-style):
+//!   p_i ∝ base_i · exp(−γ·D̂_i), where D̂_i is a per-node EWMA of the
+//!   *observed* completion delay in CS steps (the paper's M) with momentum
+//!   β, fed through the [`SamplingPolicy::observe_completion`] channel.
+//!   Unlike `adaptive`, which tilts on the queue-length *proxy*, this
+//!   closes the loop on the quantity the paper's bound actually controls.
+//!   Fenwick-backed: O(log n) per completion, O(log n) per draw.
+//! * `delay-adaptive-exact` — same distribution via full renormalization,
+//!   O(n) per completion; the oracle `delay-adaptive` is validated
+//!   against (`tests/statistical_samplers.rs`).
 
 use crate::bound::{BoundParams, MiSource, TwoClusterStudy};
 use crate::util::rng::{AliasTable, Rng};
@@ -77,6 +87,19 @@ pub trait SamplingPolicy {
     fn incremental(&self) -> bool {
         false
     }
+
+    /// Observe one completed task: node `i` finished a task whose delay
+    /// was `delay_steps` CS steps (the paper's M) / `delay_time` units of
+    /// virtual time.  The delay-feedback channel for delay-adaptive
+    /// policies; default no-op.
+    ///
+    /// Every engine calls this on the central dispatcher path, right
+    /// after the completion and before the routing decision it may
+    /// influence.  Implementations MUST NOT consume RNG: the hook sits
+    /// inside the heap/sharded/batch step loops, whose bit-identity
+    /// contract relies on the routing stream decomposing identically
+    /// (see `simulator::engine`).
+    fn observe_completion(&mut self, _node: usize, _delay_steps: u64, _delay_time: f64) {}
 
     /// Sample the next node K_{k+1} from the distribution in force.
     fn route(&mut self, rng: &mut Rng) -> usize;
@@ -303,6 +326,201 @@ impl SamplingPolicy for AdaptiveQueuePolicy {
 }
 
 // ---------------------------------------------------------------------------
+// Delay-feedback adaptive policies: Fenwick-backed (hot path) and the exact
+// renormalizing reference.  Tilt on the OBSERVED completion delay (EWMA)
+// instead of the instantaneous queue length.
+// ---------------------------------------------------------------------------
+
+fn validate_delay_adaptive(base: &[f64], gamma: f64, beta: f64) -> Result<(), String> {
+    validate_adaptive(base, gamma)?;
+    if !(0.0..1.0).contains(&beta) {
+        return Err(format!(
+            "delay-adaptive policy: EWMA momentum beta {beta} must be in [0, 1)"
+        ));
+    }
+    Ok(())
+}
+
+/// Delay-feedback sampling with O(log n) per-event cost
+/// (arXiv:2402.11198-style): each completion updates the completed node's
+/// delay estimate D̂_i ← β·D̂_i + (1−β)·M and its tilted weight
+/// w_i = base_i · exp(−γ·D̂_i) in a [`FenwickSampler`]; a draw is one tree
+/// descent.  Queue-length observations are no-ops (`incremental` is true
+/// so the engines skip the O(n) bulk vector entirely).
+///
+/// Underflow semantics mirror the `adaptive` pair: while *every* tilted
+/// weight has underflowed to zero, the base distribution is in force via
+/// a pre-built alias table; the tilted law resumes the moment any node's
+/// weight turns positive again.
+pub struct FenwickDelayAdaptivePolicy {
+    base: Vec<f64>,
+    gamma: f64,
+    beta: f64,
+    /// per-node EWMA of observed completion delay in CS steps
+    ewma: Vec<f64>,
+    sampler: FenwickSampler,
+    base_alias: AliasTable,
+    /// number of leaves with a strictly positive tilted weight
+    positive: usize,
+}
+
+impl FenwickDelayAdaptivePolicy {
+    pub fn new(
+        base: Vec<f64>,
+        gamma: f64,
+        beta: f64,
+    ) -> Result<FenwickDelayAdaptivePolicy, String> {
+        validate_delay_adaptive(&base, gamma, beta)?;
+        let sampler = FenwickSampler::new(&base)?;
+        let base_alias = AliasTable::new(&base)?;
+        let positive = base.iter().filter(|&&b| b > 0.0).count();
+        let n = base.len();
+        Ok(FenwickDelayAdaptivePolicy {
+            base,
+            gamma,
+            beta,
+            ewma: vec![0.0; n],
+            sampler,
+            base_alias,
+            positive,
+        })
+    }
+
+    /// Current per-node delay estimates D̂ (diagnostics and tests).
+    pub fn delay_estimates(&self) -> &[f64] {
+        &self.ewma
+    }
+
+    fn tilt(&self, node: usize) -> f64 {
+        let w = self.base[node] * (-self.gamma * self.ewma[node]).exp();
+        if w.is_finite() {
+            w
+        } else {
+            0.0
+        }
+    }
+}
+
+impl SamplingPolicy for FenwickDelayAdaptivePolicy {
+    fn name(&self) -> String {
+        format!("delay-adaptive(gamma={},beta={})", self.gamma, self.beta)
+    }
+
+    fn n(&self) -> usize {
+        self.base.len()
+    }
+
+    fn prob_of(&self, i: usize) -> f64 {
+        if self.positive == 0 {
+            return self.base[i];
+        }
+        self.sampler.weight(i) / self.sampler.total()
+    }
+
+    fn incremental(&self) -> bool {
+        // queue lengths never move this distribution — only completions do
+        true
+    }
+
+    fn observe_completion(&mut self, node: usize, delay_steps: u64, _delay_time: f64) {
+        self.ewma[node] = self.beta * self.ewma[node] + (1.0 - self.beta) * delay_steps as f64;
+        let w = self.tilt(node);
+        let was = self.sampler.weight(node) > 0.0;
+        self.sampler.set(node, w);
+        match (was, w > 0.0) {
+            (true, false) => self.positive -= 1,
+            (false, true) => self.positive += 1,
+            _ => {}
+        }
+    }
+
+    fn route(&mut self, rng: &mut Rng) -> usize {
+        if self.positive == 0 {
+            return self.base_alias.sample(rng);
+        }
+        self.sampler.sample(rng)
+    }
+}
+
+/// The exact delay-feedback policy: updates the completed node's delay
+/// EWMA, then recomputes and renormalizes all n probabilities — O(n) per
+/// completion, CDF-scan routing.  The oracle `delay-adaptive` is
+/// validated against; registered as `delay-adaptive-exact`.
+pub struct DelayAdaptivePolicy {
+    base: Vec<f64>,
+    gamma: f64,
+    beta: f64,
+    ewma: Vec<f64>,
+    probs: Vec<f64>,
+}
+
+impl DelayAdaptivePolicy {
+    pub fn new(base: Vec<f64>, gamma: f64, beta: f64) -> Result<DelayAdaptivePolicy, String> {
+        validate_delay_adaptive(&base, gamma, beta)?;
+        let n = base.len();
+        Ok(DelayAdaptivePolicy {
+            probs: base.clone(),
+            ewma: vec![0.0; n],
+            base,
+            gamma,
+            beta,
+        })
+    }
+
+    /// Current per-node delay estimates D̂ (diagnostics and tests).
+    pub fn delay_estimates(&self) -> &[f64] {
+        &self.ewma
+    }
+}
+
+impl SamplingPolicy for DelayAdaptivePolicy {
+    fn name(&self) -> String {
+        format!("delay-adaptive-exact(gamma={},beta={})", self.gamma, self.beta)
+    }
+
+    fn n(&self) -> usize {
+        self.probs.len()
+    }
+
+    fn prob_of(&self, i: usize) -> f64 {
+        self.probs[i]
+    }
+
+    fn probs(&self) -> Vec<f64> {
+        self.probs.clone()
+    }
+
+    fn incremental(&self) -> bool {
+        true
+    }
+
+    fn observe_completion(&mut self, node: usize, delay_steps: u64, _delay_time: f64) {
+        self.ewma[node] = self.beta * self.ewma[node] + (1.0 - self.beta) * delay_steps as f64;
+        let mut total = 0.0f64;
+        for (pi, (&b, &d)) in self
+            .probs
+            .iter_mut()
+            .zip(self.base.iter().zip(self.ewma.iter()))
+        {
+            *pi = b * (-self.gamma * d).exp();
+            total += *pi;
+        }
+        if !(total > 0.0) || !total.is_finite() {
+            // all mass underflowed (enormous γ·D̂): fall back to the base
+            self.probs.copy_from_slice(&self.base);
+            total = self.probs.iter().sum();
+        }
+        for pi in self.probs.iter_mut() {
+            *pi /= total;
+        }
+    }
+
+    fn route(&mut self, rng: &mut Rng) -> usize {
+        linear_route(&self.probs, rng.uniform())
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Theorem-1 optimal two-cluster policy
 // ---------------------------------------------------------------------------
 
@@ -314,14 +532,54 @@ pub struct PolicyCtx {
     pub n: usize,
     /// the experiment's base/static distribution (two-cluster tilt etc.)
     pub base_p: Vec<f64>,
-    /// queue-pressure strength for the adaptive policy
+    /// queue-pressure / delay-pressure strength for the adaptive and
+    /// delay-adaptive policies
     pub gamma: f64,
+    /// EWMA momentum for the delay-adaptive policy's delay estimates
+    pub beta: f64,
     /// two-cluster shape for the Theorem-1 optimizer
     pub n_fast: usize,
     pub mu_fast: f64,
     pub mu_slow: f64,
     pub concurrency: usize,
     pub steps: u64,
+}
+
+/// Package a two-cluster tilt — `p_fast` on each of the first `n_fast`
+/// nodes, the leftover mass spread evenly over the slow cluster — as a
+/// labeled [`StaticPolicy`], validating the tilt actually leaves a
+/// distribution.  `n_fast · p_fast > 1` drives the slow-node mass q
+/// negative, which previously surfaced as an opaque `AliasTable`
+/// construction error (or, worse, a silently invalid distribution); now
+/// it is a clear error naming `p_fast` and `n_fast`.
+pub fn two_cluster_static(
+    label: &str,
+    n: usize,
+    n_fast: usize,
+    p_fast: f64,
+) -> Result<StaticPolicy, String> {
+    if n_fast == 0 || n_fast >= n {
+        return Err(format!(
+            "{label} policy needs a two-cluster population (n_fast {n_fast} of n {n})"
+        ));
+    }
+    if !p_fast.is_finite() || p_fast <= 0.0 {
+        return Err(format!(
+            "{label} policy: p_fast = {p_fast} must be a positive, finite probability"
+        ));
+    }
+    let q = (1.0 - n_fast as f64 * p_fast) / (n - n_fast) as f64;
+    if !(q > 0.0) {
+        return Err(format!(
+            "{label} policy: p_fast = {p_fast} with n_fast = {n_fast} puts mass \
+             n_fast·p_fast = {} on the fast cluster, leaving none for the {} slow \
+             nodes (q = {q}); a valid tilt needs n_fast·p_fast < 1",
+            n_fast as f64 * p_fast,
+            n - n_fast
+        ));
+    }
+    let p: Vec<f64> = (0..n).map(|i| if i < n_fast { p_fast } else { q }).collect();
+    StaticPolicy::labeled(label, p)
 }
 
 /// Build the bound-optimal static two-cluster policy by sweeping the
@@ -350,12 +608,9 @@ pub fn optimal_two_cluster(ctx: &PolicyCtx) -> Result<StaticPolicy, String> {
         source: MiSource::default(),
     };
     let (best, _) = study.optimize_p(50)?;
-    let pf = best.p_fast;
-    let q = (1.0 - ctx.n_fast as f64 * pf) / (ctx.n - ctx.n_fast) as f64;
-    let p: Vec<f64> = (0..ctx.n)
-        .map(|i| if i < ctx.n_fast { pf } else { q })
-        .collect();
-    StaticPolicy::labeled("optimal", p)
+    // validate the optimizer's result instead of trusting it: a p_fast
+    // with n_fast·p_fast >= 1 must fail loudly, naming the culprits
+    two_cluster_static("optimal", ctx.n, ctx.n_fast, best.p_fast)
 }
 
 // ---------------------------------------------------------------------------
@@ -413,6 +668,25 @@ impl PolicyRegistry {
                     as Box<dyn SamplingPolicy>)
             },
         );
+        r.register(
+            "delay-adaptive",
+            "delay-feedback p_i ~ base_i*exp(-gamma*D_i), EWMA(beta) of observed delay, O(log n)",
+            |ctx| {
+                Ok(Box::new(FenwickDelayAdaptivePolicy::new(
+                    ctx.base_p.clone(),
+                    ctx.gamma,
+                    ctx.beta,
+                )?) as Box<dyn SamplingPolicy>)
+            },
+        );
+        r.register(
+            "delay-adaptive-exact",
+            "same distribution as delay-adaptive via O(n) renormalization (test oracle)",
+            |ctx| {
+                Ok(Box::new(DelayAdaptivePolicy::new(ctx.base_p.clone(), ctx.gamma, ctx.beta)?)
+                    as Box<dyn SamplingPolicy>)
+            },
+        );
         r
     }
 
@@ -466,6 +740,7 @@ mod tests {
             n,
             base_p: vec![1.0 / n as f64; n],
             gamma: 0.5,
+            beta: 0.9,
             n_fast: n / 2,
             mu_fast: 4.0,
             mu_slow: 1.0,
@@ -595,6 +870,123 @@ mod tests {
     }
 
     #[test]
+    fn delay_adaptive_tilts_away_from_slow_completions() {
+        // feed node 2 a stream of large observed delays: its EWMA grows
+        // and its sampling mass shrinks, on BOTH implementations alike
+        let base = vec![0.25; 4];
+        let mut fast = FenwickDelayAdaptivePolicy::new(base.clone(), 0.5, 0.5).unwrap();
+        let mut exact = DelayAdaptivePolicy::new(base, 0.5, 0.5).unwrap();
+        assert!(fast.incremental() && exact.incremental());
+        for _ in 0..5 {
+            fast.observe_completion(2, 8, 8.0);
+            exact.observe_completion(2, 8, 8.0);
+            fast.observe_completion(0, 1, 1.0);
+            exact.observe_completion(0, 1, 1.0);
+        }
+        // closed-form EWMA after five (8, then 1) rounds with beta = 0.5
+        let mut d2 = 0.0;
+        let mut d0 = 0.0;
+        for _ in 0..5 {
+            d2 = 0.5 * d2 + 0.5 * 8.0;
+            d0 = 0.5 * d0 + 0.5 * 1.0;
+        }
+        assert!((fast.delay_estimates()[2] - d2).abs() < 1e-12);
+        assert!((exact.delay_estimates()[0] - d0).abs() < 1e-12);
+        for i in 0..4 {
+            assert!(
+                (fast.prob_of(i) - exact.prob_of(i)).abs() < 1e-12,
+                "node {i}: {} vs {}",
+                fast.prob_of(i),
+                exact.prob_of(i)
+            );
+        }
+        let p = fast.probs();
+        assert!(p[2] < p[1], "delayed node must be sampled less: {p:?}");
+        assert!(p[0] < p[1], "mildly delayed node tilts below untouched ones");
+        let sum: f64 = p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12, "probs sum {sum}");
+        // queue-length observations are no-ops for delay policies
+        fast.observe_node(1, 50);
+        exact.observe(&[9, 9, 9, 9]);
+        for i in 0..4 {
+            assert!((fast.prob_of(i) - p[i]).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn delay_adaptive_routes_match_probs() {
+        let mut pol = FenwickDelayAdaptivePolicy::new(vec![0.25; 4], 0.3, 0.8).unwrap();
+        for _ in 0..10 {
+            pol.observe_completion(3, 12, 12.0);
+            pol.observe_completion(1, 2, 2.0);
+        }
+        let want = pol.probs();
+        let mut rng = Rng::new(19);
+        let mut counts = vec![0u64; 4];
+        let trials = 100_000;
+        for _ in 0..trials {
+            counts[pol.route(&mut rng)] += 1;
+        }
+        for i in 0..4 {
+            let f = counts[i] as f64 / trials as f64;
+            assert!((f - want[i]).abs() < 0.01, "node {i}: {f} vs {}", want[i]);
+        }
+    }
+
+    #[test]
+    fn delay_adaptive_survives_underflow() {
+        // enormous γ·D̂ on every node underflows every tilted weight: the
+        // base distribution must take over, and the tilted law must resume
+        // the moment one node's estimate recovers (beta = 0 tracks the
+        // last observation exactly, which makes recovery immediate)
+        let mut fast = FenwickDelayAdaptivePolicy::new(vec![0.5, 0.5], 1e6, 0.0).unwrap();
+        let mut exact = DelayAdaptivePolicy::new(vec![0.5, 0.5], 1e6, 0.0).unwrap();
+        for pol in [&mut fast as &mut dyn SamplingPolicy, &mut exact] {
+            pol.observe_completion(0, 1000, 1000.0);
+            pol.observe_completion(1, 1000, 1000.0);
+            let sum: f64 = pol.probs().iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "fallback must renormalize: {sum}");
+            assert!((pol.prob_of(0) - 0.5).abs() < 1e-12, "base in force");
+            pol.observe_completion(1, 0, 0.0);
+            assert!((pol.prob_of(1) - 1.0).abs() < 1e-12, "node 1 holds all mass");
+        }
+        let mut rng = Rng::new(3);
+        assert_eq!(fast.route(&mut rng), 1);
+        assert_eq!(exact.route(&mut rng), 1);
+    }
+
+    #[test]
+    fn delay_adaptive_validates() {
+        assert!(FenwickDelayAdaptivePolicy::new(vec![0.5, 0.5], 0.5, 1.0).is_err());
+        assert!(FenwickDelayAdaptivePolicy::new(vec![0.5, 0.5], 0.5, -0.1).is_err());
+        assert!(FenwickDelayAdaptivePolicy::new(vec![0.5, 0.5], -1.0, 0.5).is_err());
+        assert!(DelayAdaptivePolicy::new(vec![0.5, 0.5], 0.5, f64::NAN).is_err());
+        assert!(DelayAdaptivePolicy::new(vec![0.9, 0.4], 0.5, 0.5).is_err());
+        assert!(FenwickDelayAdaptivePolicy::new(vec![0.5, 0.5], 0.0, 0.0).is_ok());
+    }
+
+    #[test]
+    fn two_cluster_static_rejects_overweight_fast_cluster() {
+        // the historical failure: n_fast·p_fast > 1 drove the slow-node
+        // mass negative and died inside AliasTable with an opaque message
+        let err = two_cluster_static("optimal", 10, 4, 0.3).unwrap_err();
+        assert!(err.contains("p_fast = 0.3"), "{err}");
+        assert!(err.contains("n_fast = 4"), "{err}");
+        assert!(err.contains("slow"), "{err}");
+        // boundary: n_fast·p_fast == 1 leaves exactly zero slow mass
+        assert!(two_cluster_static("optimal", 10, 4, 0.25).is_err());
+        // malformed optimizer outputs are named, not propagated as NaN
+        assert!(two_cluster_static("optimal", 10, 4, f64::NAN).is_err());
+        assert!(two_cluster_static("optimal", 10, 4, -0.1).is_err());
+        assert!(two_cluster_static("optimal", 10, 0, 0.1).is_err());
+        // a valid tilt still builds
+        let pol = two_cluster_static("optimal", 10, 4, 0.05).unwrap();
+        let p = pol.probs();
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((p[9] - (1.0 - 4.0 * 0.05) / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
     fn optimal_policy_tilts_below_uniform() {
         // the paper's headline: fast clients sampled LESS than uniformly
         let c = ctx(20);
@@ -616,7 +1008,15 @@ mod tests {
         let reg = PolicyRegistry::builtin();
         assert_eq!(
             reg.names(),
-            vec!["static", "uniform", "optimal", "adaptive", "adaptive-exact"]
+            vec![
+                "static",
+                "uniform",
+                "optimal",
+                "adaptive",
+                "adaptive-exact",
+                "delay-adaptive",
+                "delay-adaptive-exact"
+            ]
         );
         let c = ctx(10);
         for name in reg.names() {

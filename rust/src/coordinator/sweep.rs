@@ -62,7 +62,8 @@
 //! steps = [20000]
 //! mu_fast = [4.0]
 //! slow_fraction = [0.5]
-//! gamma = [0.5]              # adaptive-policy pressure
+//! gamma = [0.5]              # adaptive / delay-adaptive pressure
+//! beta = [0.9]               # delay-adaptive EWMA momentum
 //! service = ["exp"]          # exp | det | lognormal
 //! policies = ["uniform", "optimal", "adaptive"]
 //! # p_fast = [0.004]         # optional static-tilt axis
@@ -75,6 +76,7 @@
 //! n_val = 400
 //! classes_per_client = 7
 //! eval_every = 20
+//! kappa = 0.5                # genasync-damped staleness damping
 //! ```
 
 use super::experiment::{two_cluster_n_fast, two_cluster_p, two_cluster_rates};
@@ -138,6 +140,8 @@ pub struct ScenarioPoint {
     pub mu_fast: f64,
     pub slow_fraction: f64,
     pub gamma: f64,
+    /// delay-adaptive EWMA momentum
+    pub beta: f64,
     pub p_fast: Option<f64>,
     pub service: ServiceFamily,
 }
@@ -173,6 +177,7 @@ impl ScenarioPoint {
             n: self.clients,
             base_p: self.base_p()?,
             gamma: self.gamma,
+            beta: self.beta,
             n_fast: self.n_fast(),
             mu_fast: self.mu_fast,
             mu_slow: 1.0,
@@ -191,13 +196,14 @@ impl ScenarioPoint {
 
     pub fn label(&self) -> String {
         let mut s = format!(
-            "n{}_C{}_T{}_mu{}_sf{}_g{}_{}",
+            "n{}_C{}_T{}_mu{}_sf{}_g{}_b{}_{}",
             self.clients,
             self.concurrency,
             self.steps,
             self.mu_fast,
             self.slow_fraction,
             self.gamma,
+            self.beta,
             self.service_name()
         );
         if let Some(pf) = self.p_fast {
@@ -216,6 +222,8 @@ pub struct TrainKnobs {
     pub n_val: usize,
     pub classes_per_client: usize,
     pub eval_every: u64,
+    /// genasync-damped staleness-damping strength κ
+    pub kappa: f64,
 }
 
 impl Default for TrainKnobs {
@@ -227,6 +235,7 @@ impl Default for TrainKnobs {
             n_val: 400,
             classes_per_client: 7,
             eval_every: 20,
+            kappa: 0.5,
         }
     }
 }
@@ -299,6 +308,7 @@ impl SweepSpec {
                     "mu_fast",
                     "slow_fraction",
                     "gamma",
+                    "beta",
                     "p_fast",
                     "service",
                     "policies",
@@ -311,6 +321,7 @@ impl SweepSpec {
                     "n_val",
                     "classes_per_client",
                     "eval_every",
+                    "kappa",
                 ],
                 other => return Err(format!("unknown table [{other}] (sweep|grid|train)")),
             };
@@ -414,6 +425,7 @@ impl SweepSpec {
         let mu_fast = floats("mu_fast", 4.0)?;
         let slow_fraction = floats("slow_fraction", 0.5)?;
         let gamma = floats("gamma", 0.5)?;
+        let beta = floats("beta", 0.9)?;
         let p_fast: Vec<Option<f64>> = match doc.get("grid", "p_fast") {
             None => vec![None],
             Some(_) => floats("p_fast", 0.0)?.into_iter().map(Some).collect(),
@@ -457,41 +469,44 @@ impl SweepSpec {
                     for &mu in &mu_fast {
                         for &sf in &slow_fraction {
                             for &g in &gamma {
-                                for &pf in &p_fast {
-                                    for &svc in &services {
-                                        for pol in &policies {
-                                            for algo in &algos {
-                                                let scenario = ScenarioPoint {
-                                                    clients: n as usize,
-                                                    concurrency: c as usize,
-                                                    steps: t as u64,
-                                                    mu_fast: mu,
-                                                    slow_fraction: sf,
-                                                    gamma: g,
-                                                    p_fast: pf,
-                                                    service: svc,
-                                                };
-                                                scenario.validate()?;
-                                                // fail at parse time, not
-                                                // after hours of other
-                                                // cells have already run
-                                                if pol == "optimal" {
-                                                    let nf = scenario.n_fast();
-                                                    if nf == 0 || nf >= scenario.clients {
-                                                        return Err(format!(
-                                                            "grid: policy 'optimal' needs a \
-                                                             two-cluster population \
-                                                             (n_fast {nf} of {})",
-                                                            scenario.clients
-                                                        ));
+                                for &b in &beta {
+                                    for &pf in &p_fast {
+                                        for &svc in &services {
+                                            for pol in &policies {
+                                                for algo in &algos {
+                                                    let scenario = ScenarioPoint {
+                                                        clients: n as usize,
+                                                        concurrency: c as usize,
+                                                        steps: t as u64,
+                                                        mu_fast: mu,
+                                                        slow_fraction: sf,
+                                                        gamma: g,
+                                                        beta: b,
+                                                        p_fast: pf,
+                                                        service: svc,
+                                                    };
+                                                    scenario.validate()?;
+                                                    // fail at parse time,
+                                                    // not after hours of
+                                                    // other cells ran
+                                                    if pol == "optimal" {
+                                                        let nf = scenario.n_fast();
+                                                        if nf == 0 || nf >= scenario.clients {
+                                                            return Err(format!(
+                                                                "grid: policy 'optimal' needs a \
+                                                                 two-cluster population \
+                                                                 (n_fast {nf} of {})",
+                                                                scenario.clients
+                                                            ));
+                                                        }
                                                     }
+                                                    cells.push(SweepCell {
+                                                        id: cells.len(),
+                                                        scenario,
+                                                        policy: pol.clone(),
+                                                        algo: algo.clone(),
+                                                    });
                                                 }
-                                                cells.push(SweepCell {
-                                                    id: cells.len(),
-                                                    scenario,
-                                                    policy: pol.clone(),
-                                                    algo: algo.clone(),
-                                                });
                                             }
                                         }
                                     }
@@ -513,7 +528,14 @@ impl SweepSpec {
             n_val: doc.i64_or("train", "n_val", 400).max(0) as usize,
             classes_per_client: doc.i64_or("train", "classes_per_client", 7).max(0) as usize,
             eval_every: doc.i64_or("train", "eval_every", 20).max(0) as u64,
+            kappa: doc.f64_or("train", "kappa", 0.5),
         };
+        if !(train.kappa >= 0.0) || !train.kappa.is_finite() {
+            return Err(format!(
+                "[train] kappa = {} must be finite and >= 0",
+                train.kappa
+            ));
+        }
 
         Ok(SweepSpec {
             name: doc.str_or("sweep", "name", "sweep"),
@@ -627,6 +649,9 @@ impl ScenarioPoint {
         }
         if !(self.gamma >= 0.0) || !self.gamma.is_finite() {
             return Err(format!("grid: gamma {} must be finite and >= 0", self.gamma));
+        }
+        if !(0.0..1.0).contains(&self.beta) {
+            return Err(format!("grid: beta {} must be in [0, 1)", self.beta));
         }
         self.base_p().map(|_| ())
     }
@@ -819,6 +844,8 @@ fn train_replication(cell: &SweepCell, knobs: &TrainKnobs, seed: u64) -> Result<
         .slow_fraction(s.slow_fraction)
         .mu_fast(s.mu_fast)
         .adaptive_gamma(s.gamma)
+        .delay_beta(s.beta)
+        .damping_kappa(knobs.kappa)
         .n_train(knobs.n_train)
         .n_val(knobs.n_val)
         .classes_per_client(knobs.classes_per_client)
@@ -1163,6 +1190,7 @@ impl SweepReport {
                 sc.insert("mu_fast".to_string(), Json::Num(s.mu_fast));
                 sc.insert("slow_fraction".to_string(), Json::Num(s.slow_fraction));
                 sc.insert("gamma".to_string(), Json::Num(s.gamma));
+                sc.insert("beta".to_string(), Json::Num(s.beta));
                 sc.insert("n_fast".to_string(), Json::Num(s.n_fast() as f64));
                 sc.insert(
                     "p_fast".to_string(),
@@ -1329,6 +1357,10 @@ policies = ["uniform", "adaptive"]
         // rejected at parse time
         let err = SweepSpec::from_toml("[grid]\ngamma = [-0.5]").unwrap_err();
         assert!(err.contains("gamma"), "{err}");
+        let err = SweepSpec::from_toml("[grid]\nbeta = [1.5]").unwrap_err();
+        assert!(err.contains("beta"), "{err}");
+        let err = SweepSpec::from_toml("[train]\nkappa = -0.5").unwrap_err();
+        assert!(err.contains("kappa"), "{err}");
         let err = SweepSpec::from_toml("[sweep]\nmode = \"train\"\n[grid]\nalgos = [\"fedavgg\"]")
             .unwrap_err();
         assert!(err.contains("fedavgg"), "{err}");

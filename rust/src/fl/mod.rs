@@ -18,6 +18,6 @@ pub use fedavg::{FedAvg, FedAvgConfig};
 pub use model::ModelState;
 pub use oracle::{GradOracle, QuadraticOracle};
 pub use strategy::{
-    AsyncSgd, FavanoStrategy, FedAvgStrategy, FedBuff, GenAsync, GradientCtx, ServerStrategy,
-    StrategyParams, StrategyRegistry,
+    AsyncSgd, FavanoStrategy, FedAvgStrategy, FedBuff, GenAsync, GenAsyncDamped, GradientCtx,
+    ServerStrategy, StrategyParams, StrategyRegistry,
 };

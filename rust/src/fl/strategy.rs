@@ -9,6 +9,12 @@
 //!   sampling (line 10 of Algorithm 1).  The scale uses the *dispatch-time*
 //!   selection probability carried in the [`GradientCtx`], so unbiasedness
 //!   survives time-varying sampling policies.
+//! * [`GenAsyncDamped`] — staleness-damped Generalized AsyncSGD
+//!   (arXiv:2502.08206-style): the per-gradient step size is damped by the
+//!   observed staleness M, `η_M = η/(1 + κ·M)`, while the dispatch-time
+//!   `1/(n p_i)` inverse-probability weight is kept — stale gradients are
+//!   trusted less without biasing the sampling correction (κ = 0
+//!   degenerates to [`GenAsync`] exactly).
 //! * [`AsyncSgd`] — Koloskova et al.: uniform sampling, immediate update
 //!   `w ← w − η g` (the special case p_i = 1/n of the above).
 //! * [`FedBuff`] — Nguyen et al.: server buffers Z client updates, then
@@ -90,6 +96,37 @@ pub trait ServerStrategy {
 // Generalized AsyncSGD (Algorithm 1)
 // ---------------------------------------------------------------------------
 
+/// Dispatch-time inverse-probability scale `η/(n·p)`: prefers the
+/// context's recorded dispatch probability, falls back to the reference
+/// distribution, and yields 0.0 (drop the gradient) when neither is a
+/// usable probability — an inf/NaN scale must never reach the model.
+fn ipw_scale(eta: f64, p: &[f64], ctx: &GradientCtx) -> f64 {
+    let prob = if ctx.dispatch_prob.is_finite() && ctx.dispatch_prob > 0.0 {
+        ctx.dispatch_prob
+    } else {
+        p[ctx.node]
+    };
+    if prob.is_finite() && prob > 0.0 {
+        eta / (p.len() as f64 * prob)
+    } else {
+        0.0
+    }
+}
+
+/// Nominal `η/(n·p_i)` from a reference distribution, guarded: a zero-mass
+/// (or malformed) entry reports 0.0 — such a node is never sampled, so an
+/// inf scale in diagnostics would be noise, not signal.  The guard matters
+/// because `SimConfig::validate` only rejects p_i = 0 on *active* nodes; a
+/// reference vector may legitimately carry zero-mass entries.
+fn reference_scale(eta: f64, p: &[f64], node: usize) -> f64 {
+    let pi = p[node];
+    if pi.is_finite() && pi > 0.0 {
+        eta / (p.len() as f64 * pi)
+    } else {
+        0.0
+    }
+}
+
 pub struct GenAsync {
     pub eta: f64,
     /// reference sampling distribution: used by `scale_for` diagnostics and
@@ -112,20 +149,74 @@ impl ServerStrategy for GenAsync {
 
     fn on_gradient(&mut self, model: &mut ModelState, ctx: &GradientCtx) -> bool {
         self.received += 1;
-        let n = self.p.len() as f64;
-        let prob = if ctx.dispatch_prob.is_finite() && ctx.dispatch_prob > 0.0 {
-            ctx.dispatch_prob
-        } else {
-            self.p[ctx.node]
-        };
-        let scale = (self.eta / (n * prob)) as f32;
+        let scale = ipw_scale(self.eta, &self.p, ctx) as f32;
         model.apply_update(ctx.grads, scale);
         self.version += 1;
         true
     }
 
     fn scale_for(&self, node: usize) -> f64 {
-        self.eta / (self.p.len() as f64 * self.p[node])
+        reference_scale(self.eta, &self.p, node)
+    }
+
+    fn version(&self) -> u64 {
+        self.version
+    }
+
+    fn received(&self) -> u64 {
+        self.received
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Staleness-damped Generalized AsyncSGD (arXiv:2502.08206-style)
+// ---------------------------------------------------------------------------
+
+/// Generalized AsyncSGD with a staleness-damped step size: a gradient that
+/// arrives M CS steps after its dispatch (the paper's delay M) is applied
+/// with `η/(1 + κ·M)` instead of η, while the dispatch-time `1/(n·p_i)`
+/// inverse-probability weight is kept unchanged.  Damping only the step
+/// size — never the IPW correction — trades staleness-induced drift for
+/// update magnitude without re-biasing the sampling distribution; κ = 0 is
+/// bit-identical to [`GenAsync`].
+pub struct GenAsyncDamped {
+    pub eta: f64,
+    /// staleness-damping strength κ ≥ 0
+    pub kappa: f64,
+    /// reference sampling distribution (diagnostics + fallback)
+    pub p: Vec<f64>,
+    version: u64,
+    received: u64,
+}
+
+impl GenAsyncDamped {
+    pub fn new(eta: f64, kappa: f64, p: Vec<f64>) -> Result<GenAsyncDamped, String> {
+        if !(kappa >= 0.0) || !kappa.is_finite() {
+            return Err(format!(
+                "genasync-damped: kappa {kappa} must be finite and >= 0"
+            ));
+        }
+        Ok(GenAsyncDamped { eta, kappa, p, version: 0, received: 0 })
+    }
+}
+
+impl ServerStrategy for GenAsyncDamped {
+    fn name(&self) -> &'static str {
+        "genasync-damped"
+    }
+
+    fn on_gradient(&mut self, model: &mut ModelState, ctx: &GradientCtx) -> bool {
+        self.received += 1;
+        let damp = 1.0 + self.kappa * ctx.delay_steps as f64;
+        let scale = (ipw_scale(self.eta, &self.p, ctx) / damp) as f32;
+        model.apply_update(ctx.grads, scale);
+        self.version += 1;
+        true
+    }
+
+    fn scale_for(&self, node: usize) -> f64 {
+        // nominal (fresh-gradient, M = 0) scale
+        reference_scale(self.eta, &self.p, node)
     }
 
     fn version(&self) -> u64 {
@@ -407,11 +498,20 @@ pub struct StrategyParams {
     pub fedavg_s: usize,
     /// FAVANO slice length Δ in virtual time
     pub favano_interval: f64,
+    /// genasync-damped staleness-damping strength κ (η/(1+κ·M))
+    pub kappa: f64,
 }
 
 impl StrategyParams {
     pub fn new(eta: f64, p: Vec<f64>) -> StrategyParams {
-        StrategyParams { eta, p, fedbuff_z: 10, fedavg_s: 0, favano_interval: 4.0 }
+        StrategyParams {
+            eta,
+            p,
+            fedbuff_z: 10,
+            fedavg_s: 0,
+            favano_interval: 4.0,
+            kappa: 0.5,
+        }
     }
 
     pub fn n(&self) -> usize {
@@ -456,6 +556,15 @@ impl StrategyRegistry {
             &["generalized"],
             "Generalized AsyncSGD: immediate update scaled by eta/(n p_i) (Algorithm 1)",
             |prm| Ok(Box::new(GenAsync::new(prm.eta, prm.p.clone())) as Box<dyn ServerStrategy>),
+        );
+        r.register(
+            "genasync-damped",
+            &["gasync-damped"],
+            "staleness-damped GenAsync: eta/(1+kappa*M) step size, keeps the eta/(n p_i) IPW",
+            |prm| {
+                Ok(Box::new(GenAsyncDamped::new(prm.eta, prm.kappa, prm.p.clone())?)
+                    as Box<dyn ServerStrategy>)
+            },
         );
         r.register(
             "async",
@@ -596,6 +705,115 @@ mod tests {
         s.on_gradient(&mut m, &ctx);
         // scale = 1/(4·0.5) = 0.5
         assert!((m.tensors[0][0] + 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn gen_async_damped_scales_by_inverse_staleness() {
+        // a gradient with delay M = 3 under kappa = 0.5 is applied at
+        // (η/(n·p))/(1 + 0.5·3) = (1/(4·0.25))/2.5 = 0.4
+        let p = vec![0.25; 4];
+        let mut m = model1d(0.0);
+        let mut s = GenAsyncDamped::new(1.0, 0.5, p.clone()).unwrap();
+        let g = vec![vec![1.0f32]];
+        let ctx = GradientCtx {
+            node: 1,
+            step: 0,
+            time: 0.0,
+            delay_steps: 3,
+            dispatch_prob: 0.25,
+            grads: &g,
+        };
+        assert!(s.on_gradient(&mut m, &ctx));
+        assert!((m.tensors[0][0] + 0.4).abs() < 1e-7, "got {}", m.tensors[0][0]);
+        // a fresh gradient (M = 0) is not damped at all
+        let mut m2 = model1d(0.0);
+        let fresh = GradientCtx { delay_steps: 0, ..ctx };
+        s.on_gradient(&mut m2, &fresh);
+        assert!((m2.tensors[0][0] + 1.0).abs() < 1e-7);
+        assert_eq!(s.version(), 2);
+        assert_eq!(s.received(), 2);
+    }
+
+    #[test]
+    fn gen_async_damped_with_zero_kappa_matches_gasync_bitwise() {
+        // κ = 0 must reproduce GenAsync exactly — same fp operations
+        let p = vec![0.1, 0.2, 0.3, 0.4];
+        let mut rng = Rng::new(29);
+        let mut ma = model1d(0.0);
+        let mut mb = model1d(0.0);
+        let mut a = GenAsync::new(0.07, p.clone());
+        let mut b = GenAsyncDamped::new(0.07, 0.0, p.clone()).unwrap();
+        for k in 0..500 {
+            let i = rng.usize_below(4);
+            let g = vec![vec![(i as f32 + 0.5) * if k % 2 == 0 { 1.0 } else { -1.0 }]];
+            let ctx = GradientCtx {
+                node: i,
+                step: k as u64,
+                time: k as f64,
+                delay_steps: (k % 7) as u64,
+                dispatch_prob: p[i],
+                grads: &g,
+            };
+            a.on_gradient(&mut ma, &ctx);
+            b.on_gradient(&mut mb, &ctx);
+        }
+        assert_eq!(ma.tensors[0][0].to_bits(), mb.tensors[0][0].to_bits());
+    }
+
+    #[test]
+    fn gen_async_damped_converges_on_stale_quadratics() {
+        // ½(w − c_i)² oracle with artificial staleness: damping shrinks
+        // steps but must not move the fixed point under uniform sampling
+        let c = [1.0f32, 2.0, 3.0, 6.0];
+        let opt = 3.0f32;
+        let p = vec![0.25; 4];
+        let mut m = model1d(0.0);
+        let mut s = GenAsyncDamped::new(0.1, 0.3, p.clone()).unwrap();
+        let mut rng = Rng::new(17);
+        for _ in 0..8000 {
+            let i = rng.usize_below(4);
+            let g = vec![vec![m.tensors[0][0] - c[i]]];
+            let mut ctx = GradientCtx::sampled(i, &p, &g);
+            ctx.delay_steps = rng.usize_below(5) as u64;
+            s.on_gradient(&mut m, &ctx);
+        }
+        let w = m.tensors[0][0];
+        assert!((w - opt).abs() < 0.4, "converged to {w}, want ≈{opt}");
+    }
+
+    #[test]
+    fn scale_for_guards_zero_mass_reference_entries() {
+        // SimConfig only rejects p_i = 0 on ACTIVE nodes, so a reference
+        // vector may carry zero-mass entries; the diagnostic scale must
+        // report 0.0 for them, never inf/NaN
+        let p = vec![0.0, 0.5, 0.5, 0.0];
+        let a = GenAsync::new(1.0, p.clone());
+        let b = GenAsyncDamped::new(1.0, 0.5, p.clone()).unwrap();
+        for s in [&a as &dyn ServerStrategy, &b] {
+            assert_eq!(s.scale_for(0), 0.0, "{}", s.name());
+            assert_eq!(s.scale_for(3), 0.0, "{}", s.name());
+            let mid = s.scale_for(1);
+            assert!(mid.is_finite() && mid > 0.0, "{}: {mid}", s.name());
+        }
+        // malformed entries are guarded too
+        let c = GenAsync::new(1.0, vec![f64::NAN, 1.0]);
+        assert_eq!(c.scale_for(0), 0.0);
+        // and an unusable dispatch probability WITH an unusable reference
+        // entry drops the gradient instead of poisoning the model
+        let mut m = model1d(1.0);
+        let mut s = GenAsync::new(1.0, vec![0.0, 1.0]);
+        let g = vec![vec![5.0f32]];
+        let ctx = GradientCtx {
+            node: 0,
+            step: 0,
+            time: 0.0,
+            delay_steps: 0,
+            dispatch_prob: 0.0,
+            grads: &g,
+        };
+        s.on_gradient(&mut m, &ctx);
+        assert_eq!(m.tensors[0][0], 1.0, "zero-scale update must be a no-op");
+        assert!(m.tensors[0][0].is_finite());
     }
 
     #[test]
@@ -762,13 +980,20 @@ mod tests {
     fn registry_builds_every_builtin_and_aliases() {
         let reg = StrategyRegistry::builtin();
         let prm = StrategyParams::new(0.1, vec![0.25; 4]);
-        assert_eq!(reg.names(), vec!["gasync", "async", "fedbuff", "fedavg", "favano"]);
+        assert_eq!(
+            reg.names(),
+            vec!["gasync", "genasync-damped", "async", "fedbuff", "fedavg", "favano"]
+        );
         for name in reg.names() {
             let s = reg.build(&name, &prm).unwrap();
             assert_eq!(s.version(), 0);
         }
         assert_eq!(reg.build("generalized", &prm).unwrap().name(), "gasync");
         assert_eq!(reg.build("asyncsgd", &prm).unwrap().name(), "async");
+        assert_eq!(
+            reg.build("gasync-damped", &prm).unwrap().name(),
+            "genasync-damped"
+        );
         let err = reg.build("sync-sgd", &prm).unwrap_err();
         assert!(err.contains("unknown algorithm"), "{err}");
         assert!(err.contains("favano"), "error must list registered names: {err}");
@@ -811,6 +1036,9 @@ mod tests {
 
     #[test]
     fn constructors_validate() {
+        assert!(GenAsyncDamped::new(0.1, -0.5, vec![0.5, 0.5]).is_err());
+        assert!(GenAsyncDamped::new(0.1, f64::NAN, vec![0.5, 0.5]).is_err());
+        assert!(GenAsyncDamped::new(0.1, 0.0, vec![0.5, 0.5]).is_ok());
         assert!(FedBuff::new(0.1, 0).is_err());
         assert!(FedAvgStrategy::new(0.1, 0, 4).is_err());
         assert!(FedAvgStrategy::new(0.1, 5, 4).is_err());

@@ -47,7 +47,9 @@ COMMANDS
             --policy {policy_list}
             --variant tiny|cifar|wide|tinyimg --backend pjrt|native
             --steps N --clients N --concurrency C --eta F --mu-fast F
-            --p-fast F --gamma F --fedbuff-z Z --fedavg-s S
+            --p-fast F --gamma F --beta F (delay-adaptive EWMA momentum)
+            --kappa F (genasync-damped staleness damping)
+            --fedbuff-z Z --fedavg-s S
             --favano-interval D --optimal-p (= --policy optimal)
             --seed S --out results/train.csv
   simulate  --n N --c C --steps N --mu-fast F --n-fast N --p-fast F --seed S
@@ -153,6 +155,8 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         cfg.p_fast = Some(v.parse().map_err(|_| "bad --p-fast")?);
     }
     cfg.gamma = args.f64_or("gamma", cfg.gamma)?;
+    cfg.beta = args.f64_or("beta", cfg.beta)?;
+    cfg.kappa = args.f64_or("kappa", cfg.kappa)?;
     cfg.n_train = args.usize_or("n-train", cfg.n_train)?;
     cfg.n_val = args.usize_or("n-val", cfg.n_val)?;
     cfg.classes_per_client = args.usize_or("classes-per-client", cfg.classes_per_client)?;

@@ -267,6 +267,13 @@ impl BatchArena {
             complete_time: ev.time,
             dispatch_prob: d_prob,
         };
+        // delay-feedback channel — per-replication policy, RNG-free, same
+        // call point as the heap engine (part of the bit-identity contract)
+        self.policies[r].observe_completion(
+            node,
+            record.delay_steps(),
+            record.complete_time - record.dispatch_time,
+        );
         // dispatcher: same observation protocol as the heap and sharded
         // engines — incremental policies get only the two changed queues
         let incremental = self.policies[r].incremental();

@@ -36,11 +36,14 @@
 //!   events with no cross-shard coordination and no dependence on shard
 //!   membership or scheduling order.
 //!
-//! Policy observation (`observe`/`observe_node`) stays on the central
-//! dispatcher in every engine: its call order is part of the contract.
-//! Incremental policies still receive exactly the two queue-length changes
-//! per step; bulk policies get the flat SoA `qlen` slice (a memcpy, not a
-//! per-node `VecDeque::len` walk).
+//! Policy observation (`observe`/`observe_node`/`observe_completion`)
+//! stays on the central dispatcher in every engine: its call order is
+//! part of the contract.  Incremental policies still receive exactly the
+//! two queue-length changes per step; bulk policies get the flat SoA
+//! `qlen` slice (a memcpy, not a per-node `VecDeque::len` walk); the
+//! delay-feedback hook `observe_completion` fires once per CS step, right
+//! after the completion and before the routing draw it may influence —
+//! it consumes no RNG, so it cannot perturb the stream decomposition.
 
 pub mod batch;
 pub mod calendar;
@@ -297,7 +300,7 @@ impl StepAggregator {
         sample_every: u64,
         mut init_qlen: impl FnMut(usize) -> u32,
     ) -> StepAggregator {
-        StepAggregator {
+        let mut agg = StepAggregator {
             res: SimResult {
                 delay_steps: vec![Welford::new(); n],
                 delay_time: vec![Welford::new(); n],
@@ -319,7 +322,14 @@ impl StepAggregator {
             record_tasks,
             sample_every,
             k: 0,
+        };
+        // the k = 0 sample is the PRE-step initial state S_0.  Sampling
+        // only inside push_step used to label the first POST-step state
+        // k = 0, so occupancy plots silently missed t = 0.
+        if agg.sample_every > 0 {
+            agg.res.queue_samples.push((0, agg.q_len.clone()));
         }
+        agg
     }
 
     #[inline]
@@ -332,6 +342,12 @@ impl StepAggregator {
     /// Fold one CS step: `qlen_completed`/`qlen_next` are the POST-step
     /// queue lengths of the completed node and the dispatch target, `busy`
     /// the post-step busy-node count.
+    ///
+    /// Self-routes (completed node == dispatch target) flush the same
+    /// node twice at the same timestamp: the first flush sets
+    /// `last_change[i] = t`, so the second accumulates `q·(t−t) = 0` area
+    /// and merely refreshes the stored length — the time integrals stay
+    /// exact (regression-tested in `simulator::network`).
     pub fn push_step(
         &mut self,
         out: &StepOutcome,
@@ -354,10 +370,12 @@ impl StepAggregator {
         if self.record_tasks {
             self.res.tasks.push(out.record);
         }
+        self.k += 1;
+        // sample k is the state after k CS steps (k = 0, the initial
+        // state, was emitted by the constructor)
         if self.sample_every > 0 && self.k % self.sample_every == 0 {
             self.res.queue_samples.push((self.k, self.q_len.clone()));
         }
-        self.k += 1;
     }
 
     /// Close the integrals at final virtual time `now` and emit the result.

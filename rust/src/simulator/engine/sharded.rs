@@ -268,6 +268,13 @@ impl<D: ShardDriver> EventEngine for ShardedCore<D> {
             complete_time: time,
             dispatch_prob: d_prob,
         };
+        // delay-feedback channel — central, RNG-free, same call point as
+        // the heap engine (part of the bit-identity contract)
+        self.policy.observe_completion(
+            node,
+            record.delay_steps(),
+            record.complete_time - record.dispatch_time,
+        );
         // dispatcher: consult the sampling policy, select K_{k+1}, and send
         // the new model.  Same observation protocol as the heap engine —
         // incremental policies get only the two queue lengths that change.

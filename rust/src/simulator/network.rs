@@ -162,7 +162,9 @@ pub struct SimResult {
     pub total_time: f64,
     /// optional full task records
     pub tasks: Vec<TaskRecord>,
-    /// optional queue-length samples: (step, X_1..X_n)
+    /// optional queue-length samples: (steps completed, X_1..X_n).  The
+    /// first entry is the PRE-step initial state (k = 0, the realized
+    /// S_0); entry k is the state after k CS steps.
     pub queue_samples: Vec<(u64, Vec<u32>)>,
     /// time-WEIGHTED average queue length per node (matches the stationary
     /// product form; event-time sampling would be biased — departures do
@@ -352,6 +354,16 @@ impl Network {
             complete_time: self.now,
             dispatch_prob: task.dispatch_prob,
         };
+        // delay-feedback channel: report the completed task's observed
+        // delay BEFORE the routing decision it may influence.  The hook
+        // consumes no RNG, so the engines' bit-identity contract is
+        // untouched; call order is part of that contract (every engine
+        // observes the identical completion right here).
+        self.policy.observe_completion(
+            node as usize,
+            record.delay_steps(),
+            record.complete_time - record.dispatch_time,
+        );
         // dispatcher: consult the sampling policy, select K_{k+1}, and send
         // the new model.  Incremental policies get only the two queue
         // lengths that changed (the pop above and the arrival below), so a
@@ -701,9 +713,37 @@ mod tests {
         let mut cfg = two_cluster_cfg(4, 2, 1.0, 1.0, 4, 1000);
         cfg.queue_sample_every = 100;
         let res = run(cfg).unwrap();
-        assert_eq!(res.queue_samples.len(), 10);
-        for (_, qs) in &res.queue_samples {
+        // k = 0 (the pre-step initial state) plus one sample per 100 steps
+        assert_eq!(res.queue_samples.len(), 11);
+        assert_eq!(res.queue_samples[0].0, 0, "first sample is the t = 0 state");
+        assert_eq!(res.queue_samples.last().unwrap().0, 1000);
+        for (k, (step, qs)) in res.queue_samples.iter().enumerate() {
+            assert_eq!(*step, 100 * k as u64);
             assert_eq!(qs.iter().map(|&x| x as usize).sum::<usize>(), 4);
         }
+    }
+
+    #[test]
+    fn self_route_double_flush_keeps_time_averages_exact() {
+        // n = 1 forces completed == dispatch target on EVERY step, so the
+        // aggregator flushes the same node twice per step at the same
+        // timestamp.  The second flush must contribute zero area: the
+        // time-weighted mean queue stays exactly C, and every sample —
+        // including the pre-step k = 0 snapshot — shows all C tasks.
+        let mut cfg = SimConfig::new(vec![1.0], vec![ServiceDist::Exp { rate: 2.0 }], 3, 500);
+        cfg.queue_sample_every = 50;
+        let res = run(cfg).unwrap();
+        assert!(
+            (res.mean_queue[0] - 3.0).abs() < 1e-9,
+            "mean queue {} must equal C = 3",
+            res.mean_queue[0]
+        );
+        assert_eq!(res.queue_samples.len(), 11);
+        assert_eq!(res.queue_samples[0], (0, vec![3u32]));
+        for (_, qs) in &res.queue_samples {
+            assert_eq!(qs[0], 3);
+        }
+        assert_eq!(res.completions[0], 500);
+        assert_eq!(res.dispatches[0], 500);
     }
 }

@@ -16,7 +16,8 @@
 //! replication matches the log-space Buzen product form.
 
 use fedqueue::coordinator::policy::{
-    AdaptiveQueuePolicy, FenwickAdaptivePolicy, PolicyCtx, PolicyRegistry, SamplingPolicy,
+    AdaptiveQueuePolicy, DelayAdaptivePolicy, FenwickAdaptivePolicy, FenwickDelayAdaptivePolicy,
+    PolicyCtx, PolicyRegistry, SamplingPolicy,
 };
 use fedqueue::coordinator::sweep::{run_sweep, SweepSpec};
 use fedqueue::queueing::ClosedNetwork;
@@ -108,6 +109,7 @@ fn ctx(n: usize, c: usize, steps: u64, gamma: f64) -> PolicyCtx {
         n,
         base_p: vec![1.0 / n as f64; n],
         gamma,
+        beta: 0.9,
         n_fast: n / 2,
         mu_fast: 4.0,
         mu_slow: 1.0,
@@ -118,12 +120,38 @@ fn ctx(n: usize, c: usize, steps: u64, gamma: f64) -> PolicyCtx {
 
 #[test]
 fn sharded_matches_heap_for_every_builtin_policy() {
+    // the registry list includes the delay-feedback pair, so this loop
+    // also pins the observe_completion channel across engines
     let (n, c, steps) = (14, 9, 2_000);
     for policy in PolicyRegistry::builtin().names() {
         let cfg = two_cluster(n, c, steps, 31, ServiceFamily::Exponential);
         let pc = ctx(n, c, steps, 0.6);
         assert_equivalent(cfg, || PolicyRegistry::builtin().build(&policy, &pc).unwrap())
             .unwrap_or_else(|e| panic!("policy {policy}: {e}"));
+    }
+}
+
+#[test]
+fn delay_feedback_keeps_engines_bit_identical_under_aggressive_tilt() {
+    // the delay-feedback channel makes the distribution genuinely
+    // time-varying (every completion moves it), which is exactly the
+    // regime where a mis-ordered observe_completion call in one engine
+    // would break the trace — stress it with strong tilts and both the
+    // Fenwick policy and its exact oracle
+    let (n, c, steps) = (12, 8, 2_500u64);
+    for (gamma, beta) in [(0.2, 0.5), (1.0, 0.9), (0.05, 0.0)] {
+        let cfg = two_cluster(n, c, steps, 17, ServiceFamily::Exponential);
+        let base = cfg.p.clone();
+        assert_equivalent(cfg, || {
+            Box::new(FenwickDelayAdaptivePolicy::new(base.clone(), gamma, beta).unwrap())
+        })
+        .unwrap_or_else(|e| panic!("fenwick gamma={gamma} beta={beta}: {e}"));
+        let cfg = two_cluster(n, c, steps, 17, ServiceFamily::Exponential);
+        let base = cfg.p.clone();
+        assert_equivalent(cfg, || {
+            Box::new(DelayAdaptivePolicy::new(base.clone(), gamma, beta).unwrap())
+        })
+        .unwrap_or_else(|e| panic!("exact gamma={gamma} beta={beta}: {e}"));
     }
 }
 
@@ -231,6 +259,7 @@ struct SimCase {
     steps: u64,
     seed: u64,
     gamma: f64,
+    beta: f64,
     family: usize,
     policy: usize,
 }
@@ -247,8 +276,9 @@ impl Gen for SimCaseGen {
             steps: 200 + rng.below(1_000),
             seed: rng.next_u64(),
             gamma: rng.range_f64(0.0, 1.5),
+            beta: rng.range_f64(0.0, 0.95),
             family: rng.usize_below(3),
-            policy: rng.usize_below(3),
+            policy: rng.usize_below(5),
         }
     }
 
@@ -282,6 +312,7 @@ fn proptest_sharded_equals_heap_on_random_configs() {
             let cfg = two_cluster(case.n, case.c, case.steps, case.seed, family);
             let base = cfg.p.clone();
             let gamma = case.gamma;
+            let beta = case.beta;
             match case.policy {
                 0 => assert_equivalent(cfg, || {
                     Box::new(fedqueue::coordinator::StaticPolicy::new(base.clone()).unwrap())
@@ -289,8 +320,14 @@ fn proptest_sharded_equals_heap_on_random_configs() {
                 1 => assert_equivalent(cfg, || {
                     Box::new(FenwickAdaptivePolicy::new(base.clone(), gamma).unwrap())
                 }),
-                _ => assert_equivalent(cfg, || {
+                2 => assert_equivalent(cfg, || {
                     Box::new(AdaptiveQueuePolicy::new(base.clone(), gamma).unwrap())
+                }),
+                3 => assert_equivalent(cfg, || {
+                    Box::new(FenwickDelayAdaptivePolicy::new(base.clone(), gamma, beta).unwrap())
+                }),
+                _ => assert_equivalent(cfg, || {
+                    Box::new(DelayAdaptivePolicy::new(base.clone(), gamma, beta).unwrap())
                 }),
             }
         },

@@ -156,6 +156,7 @@ fn product_form_regression_uniform_and_theorem1_optimal_p() {
         n,
         base_p: vec![0.1; n],
         gamma: 0.0,
+        beta: 0.9,
         n_fast,
         mu_fast: 1.2,
         mu_slow: 1.0,

@@ -10,8 +10,8 @@
 //!   identical delays for identical seeds.
 
 use fedqueue::coordinator::policy::{
-    optimal_two_cluster, AdaptiveQueuePolicy, PolicyCtx, PolicyRegistry, SamplingPolicy,
-    StaticPolicy,
+    optimal_two_cluster, AdaptiveQueuePolicy, FenwickDelayAdaptivePolicy, PolicyCtx,
+    PolicyRegistry, SamplingPolicy, StaticPolicy,
 };
 use fedqueue::coordinator::{build_loaders, Driver, DriverConfig, Experiment};
 use fedqueue::data::{generate, EvalBatches, Partition, PartitionScheme, SynthSpec};
@@ -112,6 +112,7 @@ fn gasync_unbiased_under_static_optimal_and_adaptive_policies() {
         n,
         base_p: vec![0.25; n],
         gamma: 0.0,
+        beta: 0.9,
         n_fast: 2,
         mu_fast: 4.0,
         mu_slow: 1.0,
@@ -120,10 +121,15 @@ fn gasync_unbiased_under_static_optimal_and_adaptive_policies() {
     })
     .unwrap();
     let adaptive = AdaptiveQueuePolicy::new(vec![0.25; n], 0.8).unwrap();
+    // mild delay tilt: the IPW correction must absorb the delay-feedback
+    // drift exactly like the queue-length one (a strong tilt would only
+    // inflate the estimator's variance, not its mean)
+    let delay_adaptive = FenwickDelayAdaptivePolicy::new(vec![0.25; n], 0.02, 0.9).unwrap();
     let cases: Vec<(&str, Box<dyn SamplingPolicy>)> = vec![
         ("static", Box::new(tilted)),
         ("optimal", Box::new(optimal)),
         ("adaptive", Box::new(adaptive)),
+        ("delay-adaptive", Box::new(delay_adaptive)),
     ];
     for (label, policy) in cases {
         let mean = mean_step_under_policy(policy, n, steps);
@@ -143,6 +149,7 @@ fn policy_registry_round_trip() {
         n: 8,
         base_p: vec![0.125; 8],
         gamma: 0.5,
+        beta: 0.9,
         n_fast: 4,
         mu_fast: 4.0,
         mu_slow: 1.0,
@@ -170,6 +177,59 @@ fn policy_registry_round_trip() {
         let sum: f64 = net.current_probs().iter().sum();
         assert!((sum - 1.0).abs() < 1e-9, "{name}: probs sum {sum}");
     }
+}
+
+#[test]
+fn damped_strategy_with_delay_policy_trains_deterministically() {
+    // the full delay-feedback stack end to end: genasync-damped consuming
+    // delay-damped steps while delay-adaptive reshapes the routing
+    // distribution from observed completions.  The run must be
+    // reproducible bit for bit (the feedback channel is RNG-free) and
+    // carry the right provenance labels.
+    let base = Experiment::builder()
+        .variant("tiny")
+        .algo("genasync-damped")
+        .policy("delay-adaptive")
+        .clients(8)
+        .concurrency(4)
+        .steps(60)
+        .eta(0.05)
+        .adaptive_gamma(0.1)
+        .delay_beta(0.8)
+        .damping_kappa(0.4)
+        .n_train(600)
+        .n_val(150)
+        .eval_every(0)
+        .seed(5)
+        .build()
+        .unwrap();
+    let a = base.run().unwrap();
+    let b = base.run().unwrap();
+    assert_eq!(a.strategy, "genasync-damped");
+    assert!(a.policy.starts_with("delay-adaptive"), "{}", a.policy);
+    assert_eq!(a.versions, 60, "damped GenAsync applies every gradient");
+    assert!(a.final_accuracy.is_finite());
+    assert_eq!(a.final_accuracy.to_bits(), b.final_accuracy.to_bits());
+    assert_eq!(a.final_val_loss.to_bits(), b.final_val_loss.to_bits());
+    assert_eq!(
+        a.total_virtual_time.to_bits(),
+        b.total_virtual_time.to_bits()
+    );
+    assert_eq!(a.tau_max, b.tau_max);
+    // kappa = 0 with the same policy degrades to plain gasync exactly:
+    // identical event stream, identical model trajectory
+    let mut plain = base.clone();
+    plain.algo = "gasync".into();
+    let mut undamped = base.clone();
+    undamped.kappa = 0.0;
+    let p = plain.run().unwrap();
+    let u = undamped.run().unwrap();
+    assert_eq!(p.final_accuracy.to_bits(), u.final_accuracy.to_bits());
+    assert_eq!(p.final_val_loss.to_bits(), u.final_val_loss.to_bits());
+    assert_eq!(
+        p.total_virtual_time.to_bits(),
+        u.total_virtual_time.to_bits()
+    );
 }
 
 #[test]

@@ -12,7 +12,10 @@
 //! All tests use fixed seeds: the chi-square acceptances are exact
 //! reproducible computations, not flaky thresholds.
 
-use fedqueue::coordinator::policy::{AdaptiveQueuePolicy, FenwickAdaptivePolicy, SamplingPolicy};
+use fedqueue::coordinator::policy::{
+    AdaptiveQueuePolicy, DelayAdaptivePolicy, FenwickAdaptivePolicy, FenwickDelayAdaptivePolicy,
+    SamplingPolicy,
+};
 use fedqueue::util::rng::{AliasTable, Rng};
 use fedqueue::util::sampler::{linear_route, FenwickSampler};
 use fedqueue::util::stats::{chi_square_cdf, chi_square_stat};
@@ -202,6 +205,158 @@ fn adaptive_fenwick_and_exact_policies_realize_the_same_distribution() {
         );
     }
     // full-distribution agreement at the end of the churn
+    let pf = fast.probs();
+    let pe = exact.probs();
+    for i in 0..n {
+        assert!((pf[i] - pe[i]).abs() < 1e-10, "node {i}: {} vs {}", pf[i], pe[i]);
+    }
+}
+
+/// Completion histories that drive the delay EWMA into the three shapes
+/// every sampler must survive: uniform estimates, a two-cluster skew, and
+/// a near-degenerate state where one node keeps nearly all the mass.
+/// Returns (label, n, gamma, beta, completions as (node, delay) events).
+fn delay_histories() -> Vec<(&'static str, usize, f64, f64, Vec<(usize, u64)>)> {
+    // uniform: every node observes the same delay — tilt cancels in the
+    // normalization and the distribution must stay the base
+    let n_u = 40;
+    let uniform: Vec<(usize, u64)> = (0..n_u).flat_map(|i| [(i, 6u64), (i, 6u64)]).collect();
+    // two-cluster skew: the slow half reports delays 20, the fast half 2
+    let n_s = 30;
+    let skew: Vec<(usize, u64)> = (0..n_s)
+        .flat_map(|i| {
+            let d = if i < n_s / 2 { 2u64 } else { 20 };
+            [(i, d), (i, d), (i, d)]
+        })
+        .collect();
+    // near-degenerate: every node but node 3 drowns in delay
+    let n_d = 12;
+    let degen: Vec<(usize, u64)> = (0..n_d)
+        .flat_map(|i| {
+            let d = if i == 3 { 0u64 } else { 35 };
+            [(i, d), (i, d)]
+        })
+        .collect();
+    vec![
+        ("uniform-ewma", n_u, 0.4, 0.5, uniform),
+        ("two-cluster-ewma", n_s, 0.25, 0.6, skew),
+        ("near-degenerate-ewma", n_d, 0.3, 0.4, degen),
+    ]
+}
+
+/// Closed-form EWMA trace of a completion history.
+fn ewma_of(n: usize, beta: f64, events: &[(usize, u64)]) -> Vec<f64> {
+    let mut d = vec![0.0f64; n];
+    for &(i, delay) in events {
+        d[i] = beta * d[i] + (1.0 - beta) * delay as f64;
+    }
+    d
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "release-only: large sample counts (CI stat-tests job)")]
+fn delay_adaptive_reweighting_matches_exact_ewma_tilt() {
+    // p_i ∝ base_i · exp(−γ·D̂_i): after a completion history, the Fenwick
+    // policy's probabilities must equal the closed form to fp precision,
+    // its exact oracle must agree, and its routed samples must pass
+    // goodness of fit against the closed-form distribution
+    for (label, n, gamma, beta, events) in delay_histories() {
+        let base = vec![1.0 / n as f64; n];
+        let mut fast = FenwickDelayAdaptivePolicy::new(base.clone(), gamma, beta).unwrap();
+        let mut exact = DelayAdaptivePolicy::new(base.clone(), gamma, beta).unwrap();
+        for &(i, d) in &events {
+            fast.observe_completion(i, d, d as f64);
+            exact.observe_completion(i, d, d as f64);
+        }
+        let w: Vec<f64> = ewma_of(n, beta, &events)
+            .iter()
+            .zip(base.iter())
+            .map(|(&d, &b)| b * (-gamma * d).exp())
+            .collect();
+        let z: f64 = w.iter().sum();
+        let closed: Vec<f64> = w.iter().map(|wi| wi / z).collect();
+        for i in 0..n {
+            assert!(
+                (fast.prob_of(i) - closed[i]).abs() < 1e-12,
+                "{label} node {i}: fenwick {} vs closed form {}",
+                fast.prob_of(i),
+                closed[i]
+            );
+            assert!(
+                (exact.prob_of(i) - closed[i]).abs() < 1e-12,
+                "{label} node {i}: exact {} vs closed form {}",
+                exact.prob_of(i),
+                closed[i]
+            );
+        }
+        let counts = counts_from(n, 400_000, 0xDE1A7, |rng| fast.route(rng));
+        assert_gof(&format!("delay-adaptive/{label}"), &counts, &closed);
+    }
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "release-only: large sample counts (CI stat-tests job)")]
+fn delay_adaptive_agrees_with_exact_oracle_draw_for_draw() {
+    // identical completion histories + identical RNG streams: both
+    // implementations consume exactly one uniform per route, so they must
+    // pick the same node draw for draw — any fp disagreement must sit on
+    // an interval boundary (adjacent in CDF order, vanishing mass between)
+    for (label, n, gamma, beta, events) in delay_histories() {
+        let base = vec![1.0 / n as f64; n];
+        let mut fast = FenwickDelayAdaptivePolicy::new(base.clone(), gamma, beta).unwrap();
+        let mut exact = DelayAdaptivePolicy::new(base, gamma, beta).unwrap();
+        for &(i, d) in &events {
+            fast.observe_completion(i, d, d as f64);
+            exact.observe_completion(i, d, d as f64);
+        }
+        let mut rng_a = Rng::new(0x0DD5E);
+        let mut rng_b = Rng::new(0x0DD5E);
+        let trials = 200_000u64;
+        let mut mismatches = 0u64;
+        for _ in 0..trials {
+            let a = fast.route(&mut rng_a);
+            let b = exact.route(&mut rng_b);
+            if a != b {
+                mismatches += 1;
+                let probs = exact.probs();
+                let lo = a.min(b);
+                let hi = a.max(b);
+                let gap: f64 = probs[lo + 1..=hi].iter().sum::<f64>() - probs[hi];
+                assert!(
+                    gap.abs() < 1e-9,
+                    "{label}: non-adjacent disagreement {a} vs {b}"
+                );
+            }
+        }
+        assert!(
+            (mismatches as f64) < trials as f64 * 1e-3,
+            "{label}: {mismatches} oracle disagreements in {trials} draws"
+        );
+    }
+}
+
+#[test]
+fn delay_fenwick_and_exact_policies_stay_in_lockstep_through_churn() {
+    // the O(log n) policy and the O(n) oracle must realize the same
+    // distribution through a long stream of completion observations
+    let n = 40;
+    let base = vec![1.0 / n as f64; n];
+    let mut fast = FenwickDelayAdaptivePolicy::new(base.clone(), 0.3, 0.8).unwrap();
+    let mut exact = DelayAdaptivePolicy::new(base, 0.3, 0.8).unwrap();
+    let mut rng = Rng::new(0xC0FFE);
+    for _ in 0..2_000 {
+        let i = rng.usize_below(n);
+        let d = rng.below(25);
+        fast.observe_completion(i, d, d as f64);
+        exact.observe_completion(i, d, d as f64);
+        let j = rng.usize_below(n);
+        assert!(
+            (fast.prob_of(j) - exact.prob_of(j)).abs() < 1e-10,
+            "node {j} after churn: {} vs {}",
+            fast.prob_of(j),
+            exact.prob_of(j)
+        );
+    }
     let pf = fast.probs();
     let pe = exact.probs();
     for i in 0..n {

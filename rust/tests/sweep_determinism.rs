@@ -85,6 +85,59 @@ fn acceptance_grid_runs_end_to_end_with_cis() {
 }
 
 #[test]
+#[cfg_attr(debug_assertions, ignore = "release-only: long replications (CI stat-tests job)")]
+fn delay_adaptive_beats_static_mean_delay_on_two_cluster_cell() {
+    // the ISSUE-5 acceptance criterion: at EQUAL step count on the
+    // two-cluster cell, closing the loop on observed delay must lower the
+    // mean delay τ below the static baseline — the delay-feedback policy
+    // shifts dispatches away from nodes whose completions keep reporting
+    // large M, so slow-node queues (the dominant delay contributor) drain.
+    // Both cells share the grid, seeds, and step budget; only p differs.
+    let grid = r#"
+[sweep]
+name = "delay_acceptance"
+mode = "simulate"
+seeds = 8
+base_seed = 77
+threads = 4
+
+[grid]
+clients = [20]
+concurrency = [10]
+steps = [20000]
+mu_fast = [4.0]
+slow_fraction = [0.5]
+gamma = [0.1]
+beta = [0.9]
+policies = ["static", "delay-adaptive"]
+"#;
+    let spec = SweepSpec::from_toml(grid).unwrap();
+    let report = run_sweep(&spec).unwrap();
+    assert_eq!(report.cells.len(), 2);
+    let delay_of = |policy: &str| -> (f64, f64) {
+        let c = report
+            .cells
+            .iter()
+            .find(|c| c.cell.policy == policy)
+            .unwrap_or_else(|| panic!("missing {policy} cell"));
+        let w = &c.metrics["delay_all"];
+        assert_eq!(w.count(), 8, "{policy}: all seeds must report");
+        (w.mean(), w.ci95())
+    };
+    let (d_static, ci_static) = delay_of("static");
+    let (d_delay, ci_delay) = delay_of("delay-adaptive");
+    assert!(
+        d_delay < d_static,
+        "delay-adaptive mean delay {d_delay} must undercut static {d_static}"
+    );
+    // not a fluke of seed noise: the gap must clear both 95% intervals
+    assert!(
+        d_delay + ci_delay < d_static - ci_static,
+        "separation must exceed the CIs: {d_delay}±{ci_delay} vs {d_static}±{ci_static}"
+    );
+}
+
+#[test]
 #[cfg_attr(debug_assertions, ignore = "release-only: n = 100_000 nodes (CI stat-tests job)")]
 fn hundred_thousand_node_replication_completes() {
     // n = 100_000, C = 256: a replication is feasible because the static
@@ -113,6 +166,7 @@ fn hundred_thousand_node_replication_completes() {
                     n,
                     base_p: p.clone(),
                     gamma: 0.0,
+                    beta: 0.9,
                     n_fast: n / 2,
                     mu_fast: 4.0,
                     mu_slow: 1.0,
