@@ -20,7 +20,7 @@ use crate::data::{ClientLoader, EvalBatches};
 use crate::fl::{GradientCtx, ModelState, ServerStrategy};
 use crate::runtime::Backend;
 use crate::simulator::{Network, SimConfig};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::rc::Rc;
 
 /// One point of the training curve.
@@ -117,7 +117,10 @@ impl<'a> Driver<'a> {
         // model snapshots per dispatch step; step 0 counts all initial
         // tasks.  Rc so handing a snapshot to the backend costs a pointer
         // copy, not a full parameter copy (§Perf: halves per-step memcpy).
-        let mut snapshots: HashMap<u64, (Rc<ModelState>, u32)> = HashMap::new();
+        // BTreeMap, not HashMap: the map stays tiny (≤ C+1 live entries,
+        // key-addressed), and an ordered map keeps any future traversal —
+        // like the Lemma-9 audit below — deterministic by construction.
+        let mut snapshots: BTreeMap<u64, (Rc<ModelState>, u32)> = BTreeMap::new();
         snapshots.insert(0, (Rc::new(model.clone()), net.population() as u32));
         let mut curve = Vec::new();
         let mut delay_sum = vec![0.0f64; n];

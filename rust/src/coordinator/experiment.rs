@@ -637,6 +637,8 @@ pub fn theory_summary_with(cfg: &Experiment, probs: &[f64]) -> Result<(Vec<f64>,
 
 /// Deterministic seed list for Table 2.
 pub fn table2_seeds(n: usize) -> Vec<u64> {
+    // lint-allow(R4): intentional fixed stream — the paper's Table 2 seed
+    // list must be identical across machines and releases
     let mut rng = Rng::new(0x7AB1E_2);
     (0..n).map(|_| rng.next_u64() >> 1).collect()
 }

@@ -772,6 +772,8 @@ fn simulate_replication(
             s.steps,
         )
     };
+    // lint-allow(R3): wall-clock feeds only the `perf` JSON block, which
+    // to_json_deterministic() excludes from the comparison payload
     let t0 = std::time::Instant::now();
     let res = run_with_policy(cfg, policy)?;
     let wall = t0.elapsed().as_secs_f64();
@@ -809,6 +811,8 @@ fn simulate_cell_batch(
         .map(|idx| stream_seed(base_seed, &[cell.id as u64, idx]))
         .collect();
     let width = seeds.len() as u64;
+    // lint-allow(R3): wall-clock feeds only the `perf` JSON block, which
+    // to_json_deterministic() excludes from the comparison payload
     let t0 = std::time::Instant::now();
     // `first` (read above for the shared cfg.p) serves as replication 0's
     // policy; later replications build fresh instances as usual

@@ -268,11 +268,22 @@ impl BatchArena {
             dispatch_prob: d_prob,
         };
         // delay-feedback channel — per-replication policy, RNG-free, same
-        // call point as the heap engine (part of the bit-identity contract)
+        // call point as the heap engine (part of the bit-identity
+        // contract); debug builds assert the no-RNG half at runtime
+        // (complement of lint rule R1)
+        #[cfg(debug_assertions)]
+        let route_fp = self.route_rng[r].state_fingerprint();
         self.policies[r].observe_completion(
             node,
             record.delay_steps(),
             record.complete_time - record.dispatch_time,
+        );
+        #[cfg(debug_assertions)]
+        debug_assert_eq!(
+            route_fp,
+            self.route_rng[r].state_fingerprint(),
+            "observe_completion moved the routing stream (policy '{}')",
+            self.policies[r].name()
         );
         // dispatcher: same observation protocol as the heap and sharded
         // engines — incremental policies get only the two changed queues

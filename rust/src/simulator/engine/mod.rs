@@ -233,7 +233,7 @@ pub fn with_engine<R>(
                 let mut engine = sharded::ShardedEngine::sequential(cfg, policy, shards)?;
                 f(&mut engine)
             } else {
-                sharded::run_parallel(cfg, policy, shards, threads, f)
+                run_threaded(cfg, policy, shards, threads, f)
             }
         }
         EngineKind::Batch => {
@@ -241,6 +241,33 @@ pub fn with_engine<R>(
             f(&mut engine)
         }
     }
+}
+
+/// Threaded sharded dispatch (threads > 1).
+#[cfg(not(loom))]
+fn run_threaded<R>(
+    cfg: SimConfig,
+    policy: Box<dyn SamplingPolicy>,
+    shards: usize,
+    threads: usize,
+    f: impl FnOnce(&mut dyn EventEngine) -> Result<R, String>,
+) -> Result<R, String> {
+    sharded::run_parallel(cfg, policy, shards, threads, f)
+}
+
+/// Under loom the worker pool is compiled out (loom models the mailbox
+/// protocol directly in `sharded::loom_model`); fall back to the
+/// bit-identical sequential sharded engine.
+#[cfg(loom)]
+fn run_threaded<R>(
+    cfg: SimConfig,
+    policy: Box<dyn SamplingPolicy>,
+    shards: usize,
+    _threads: usize,
+    f: impl FnOnce(&mut dyn EventEngine) -> Result<R, String>,
+) -> Result<R, String> {
+    let mut engine = sharded::ShardedEngine::sequential(cfg, policy, shards)?;
+    f(&mut engine)
 }
 
 /// Run a full simulation per the config (fixed-p static routing).
@@ -442,6 +469,8 @@ pub fn transient_mi(
                 if out.completed_node as usize == node {
                     let ds = out.record.dispatch_step;
                     if ds < steps {
+                        // lint-allow(R5): figures-only per-step mean over one
+                        // replication; never enters the cross-engine digest
                         sum[ds as usize] += out.record.delay_steps() as f64;
                         cnt[ds as usize] += 1;
                     }

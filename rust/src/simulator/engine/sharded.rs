@@ -36,8 +36,10 @@ use crate::coordinator::policy::SamplingPolicy;
 use crate::simulator::network::{SimConfig, StepOutcome, TaskRecord};
 use crate::simulator::service::ServiceDist;
 use crate::util::rng::Rng;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
+// Atomics/mutexes come through the loom seam: std in normal builds,
+// loom's model-checked doubles under `--cfg loom` (see util/sync.rs and
+// the `loom_model` test module below).
+use crate::util::sync::{AtomicBool, AtomicU64, Mutex, Ordering};
 
 /// A shard-local operation, tagged with everything it needs so workers
 /// never read central state.
@@ -269,11 +271,21 @@ impl<D: ShardDriver> EventEngine for ShardedCore<D> {
             dispatch_prob: d_prob,
         };
         // delay-feedback channel — central, RNG-free, same call point as
-        // the heap engine (part of the bit-identity contract)
+        // the heap engine (part of the bit-identity contract); the debug
+        // fingerprint is the runtime complement of lint rule R1
+        #[cfg(debug_assertions)]
+        let route_fp = self.route_rng.state_fingerprint();
         self.policy.observe_completion(
             node,
             record.delay_steps(),
             record.complete_time - record.dispatch_time,
+        );
+        #[cfg(debug_assertions)]
+        debug_assert_eq!(
+            route_fp,
+            self.route_rng.state_fingerprint(),
+            "observe_completion moved the routing stream (policy '{}')",
+            self.policy.name()
         );
         // dispatcher: consult the sampling policy, select K_{k+1}, and send
         // the new model.  Same observation protocol as the heap engine —
@@ -388,6 +400,10 @@ struct ParallelShared {
 /// Driver that ships commands to persistent shard workers and barriers at
 /// each dispatch epoch.  The dispatcher keeps a local front cache so only
 /// shards it commanded this epoch are re-read.
+///
+/// Not compiled under loom: loom models the mailbox protocol directly in
+/// `loom_model` below, and provides neither scoped threads nor spin hints.
+#[cfg(not(loom))]
 pub(crate) struct ThreadedDriver<'a> {
     shared: &'a ParallelShared,
     n_workers: usize,
@@ -396,6 +412,7 @@ pub(crate) struct ThreadedDriver<'a> {
     staged: Vec<Vec<(u32, Cmd)>>,
 }
 
+#[cfg(not(loom))]
 impl ShardDriver for ThreadedDriver<'_> {
     fn exec(&mut self, cmds: &[(u32, Cmd)]) {
         if cmds.is_empty() {
@@ -450,6 +467,7 @@ impl ShardDriver for ThreadedDriver<'_> {
     }
 }
 
+#[cfg(not(loom))]
 fn worker_loop(mut shards: Vec<(u32, Shard)>, w: usize, shared: &ParallelShared) {
     let slot = &shared.slots[w];
     let n_workers = shared.slots.len();
@@ -493,6 +511,7 @@ fn worker_loop(mut shards: Vec<(u32, Shard)>, w: usize, shared: &ParallelShared)
 /// Run `f` over a sharded engine whose shard operations execute on
 /// `threads` persistent workers.  Bit-identical to the sequential engine:
 /// the workers only ever apply centrally ordered, keyed operations.
+#[cfg(not(loom))]
 pub(crate) fn run_parallel<R>(
     cfg: SimConfig,
     policy: Box<dyn SamplingPolicy>,
@@ -549,6 +568,146 @@ pub(crate) fn run_parallel<R>(
         drop(_guard);
         result
     })
+}
+
+/// Loom model checks for the two lock-free seams of the parallel driver:
+/// the `WorkerSlot` epoch/`done` mailbox handshake and the `FrontCell`
+/// publication protocol.  Run with
+/// `RUSTFLAGS="--cfg loom" cargo test --release --lib loom_`.
+///
+/// The real `worker_loop`/`ThreadedDriver` pair cannot run under loom
+/// (scoped threads, bounded spin hints), so these tests drive the same
+/// shared types through the same ordering discipline: stage under the
+/// mutex → `epoch` Release bump → worker Acquire drain → Relaxed front
+/// stores → `done` Release ack → dispatcher Acquire read.  Loom explores
+/// every interleaving, so a weakened ordering anywhere in the chain fails
+/// here instead of as a digest mismatch.
+#[cfg(all(loom, test))]
+mod loom_model {
+    use super::*;
+    use loom::sync::Arc;
+    use loom::thread;
+
+    fn one_slot_shared() -> ParallelShared {
+        ParallelShared {
+            slots: vec![WorkerSlot {
+                epoch: AtomicU64::new(0),
+                done: AtomicU64::new(0),
+                cmds: Mutex::new(Vec::new()),
+            }],
+            fronts: vec![FrontCell::new()],
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    /// Two full epochs of the mailbox protocol: every command staged
+    /// before the epoch bump is drained exactly once, and the front
+    /// published for epoch e is visible after the dispatcher's Acquire
+    /// load of `done >= e`.
+    #[test]
+    fn loom_mailbox_epoch_done_handshake() {
+        loom::model(|| {
+            let shared = Arc::new(one_slot_shared());
+            let worker = {
+                let shared = Arc::clone(&shared);
+                thread::spawn(move || {
+                    let slot = &shared.slots[0];
+                    let mut last = 0u64;
+                    let mut applied = 0u64;
+                    while last < 2 {
+                        let e = slot.epoch.load(Ordering::Acquire);
+                        if e == last {
+                            thread::yield_now();
+                            continue;
+                        }
+                        let drained: Vec<(u32, Cmd)> = {
+                            let mut q = slot.cmds.lock().unwrap();
+                            std::mem::take(&mut *q)
+                        };
+                        assert!(
+                            !drained.is_empty(),
+                            "epoch bump must make the staged batch visible"
+                        );
+                        for &(s, cmd) in &drained {
+                            if let Cmd::Schedule { node, time, seq } = cmd {
+                                shared.fronts[s as usize].publish((time, seq, node));
+                            }
+                            applied += 1;
+                        }
+                        last = e;
+                        slot.done.store(e, Ordering::Release);
+                    }
+                    applied
+                })
+            };
+            let slot = &shared.slots[0];
+            for e in 1..=2u64 {
+                {
+                    let mut q = slot.cmds.lock().unwrap();
+                    q.push((0, Cmd::Schedule { node: 9, time: e as f64, seq: e }));
+                }
+                slot.epoch.store(e, Ordering::Release);
+                while slot.done.load(Ordering::Acquire) < e {
+                    thread::yield_now();
+                }
+                // Acquire on `done` orders the worker's Relaxed front
+                // stores: the read must see exactly this epoch's front.
+                assert_eq!(shared.fronts[0].load(), (e as f64, e, 9));
+            }
+            assert_eq!(worker.join().unwrap(), 2);
+        });
+    }
+
+    /// FrontCell's three Relaxed atomics are a consistent snapshot once
+    /// the Release store on `done` has been Acquire-observed.
+    #[test]
+    fn loom_front_publication_ordered_by_done() {
+        loom::model(|| {
+            let shared = Arc::new((FrontCell::new(), AtomicU64::new(0)));
+            let publisher = {
+                let shared = Arc::clone(&shared);
+                thread::spawn(move || {
+                    shared.0.publish((0.5, 7, 3));
+                    shared.1.store(1, Ordering::Release);
+                })
+            };
+            let (cell, done) = &*shared;
+            if done.load(Ordering::Acquire) == 1 {
+                assert_eq!(cell.load(), (0.5, 7, 3));
+            }
+            publisher.join().unwrap();
+            assert_eq!(cell.load(), (0.5, 7, 3));
+        });
+    }
+
+    /// An idle worker parked on an unchanged epoch observes `shutdown`
+    /// and exits — the wind-down path `run_parallel` relies on for its
+    /// panic-safe Drop guard.
+    #[test]
+    fn loom_shutdown_reaches_idle_worker() {
+        loom::model(|| {
+            let shared = Arc::new(one_slot_shared());
+            let worker = {
+                let shared = Arc::clone(&shared);
+                thread::spawn(move || {
+                    let slot = &shared.slots[0];
+                    let last = 0u64;
+                    loop {
+                        let e = slot.epoch.load(Ordering::Acquire);
+                        if e == last {
+                            if shared.shutdown.load(Ordering::Acquire) {
+                                break;
+                            }
+                            thread::yield_now();
+                            continue;
+                        }
+                    }
+                })
+            };
+            shared.shutdown.store(true, Ordering::Release);
+            worker.join().unwrap();
+        });
+    }
 }
 
 #[cfg(test)]

@@ -358,11 +358,21 @@ impl Network {
         // delay BEFORE the routing decision it may influence.  The hook
         // consumes no RNG, so the engines' bit-identity contract is
         // untouched; call order is part of that contract (every engine
-        // observes the identical completion right here).
+        // observes the identical completion right here).  Debug builds
+        // assert the no-RNG half at runtime (complement of lint rule R1).
+        #[cfg(debug_assertions)]
+        let route_fp = self.route_rng.state_fingerprint();
         self.policy.observe_completion(
             node as usize,
             record.delay_steps(),
             record.complete_time - record.dispatch_time,
+        );
+        #[cfg(debug_assertions)]
+        debug_assert_eq!(
+            route_fp,
+            self.route_rng.state_fingerprint(),
+            "observe_completion moved the routing stream (policy '{}')",
+            self.policy.name()
         );
         // dispatcher: consult the sampling policy, select K_{k+1}, and send
         // the new model.  Incremental policies get only the two queue

@@ -14,5 +14,6 @@ pub mod proptest;
 pub mod rng;
 pub mod sampler;
 pub mod stats;
+pub mod sync;
 pub mod table;
 pub mod toml;

@@ -95,6 +95,20 @@ impl Rng {
         }
     }
 
+    /// Order-sensitive fingerprint of the generator position: equal
+    /// fingerprints before and after a call mean the call consumed no
+    /// draws (and left no Box–Muller cache behind).  The engines use this
+    /// in debug builds to assert that policy observation never moves the
+    /// routing stream (the runtime complement of lint rule R1).
+    #[inline]
+    pub fn state_fingerprint(&self) -> u64 {
+        let mut acc = SPLITMIX_GAMMA ^ self.cached_normal.is_some() as u64;
+        for &w in &self.s {
+            acc = splitmix_mix(acc ^ w);
+        }
+        acc
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -392,6 +406,20 @@ mod tests {
             let p = c as f64 / n as f64;
             assert!((p - 1.0 / 7.0).abs() < 4e-3, "p={p}");
         }
+    }
+
+    #[test]
+    fn state_fingerprint_tracks_consumption() {
+        let mut rng = Rng::new(42);
+        let fp0 = rng.state_fingerprint();
+        assert_eq!(fp0, rng.state_fingerprint(), "fingerprint is read-only");
+        let _ = rng.next_u64();
+        let fp1 = rng.state_fingerprint();
+        assert_ne!(fp0, fp1, "one draw must move the fingerprint");
+        // the Box–Muller cache is part of the position: a single normal()
+        // draw leaves a cached second variate behind
+        let _ = rng.normal();
+        assert_ne!(fp1, rng.state_fingerprint());
     }
 
     #[test]

@@ -1,0 +1,18 @@
+//! Sync-primitive seam for loom model checking.
+//!
+//! The sharded engine's worker protocol (`engine/sharded.rs`) imports its
+//! atomics and mutexes from here.  A normal build re-exports `std::sync`;
+//! under `RUSTFLAGS="--cfg loom"` (the CI loom leg) the same names resolve
+//! to loom's model-checked doubles, letting `loom::model` exhaustively
+//! explore every interleaving of the epoch/`done` handshake and the front
+//! publication instead of trusting two Release/Acquire comments.
+
+#[cfg(loom)]
+pub use loom::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+#[cfg(loom)]
+pub use loom::sync::Mutex;
+
+#[cfg(not(loom))]
+pub use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+#[cfg(not(loom))]
+pub use std::sync::Mutex;

@@ -1,0 +1,81 @@
+//! ThreadSanitizer target for the threaded sharded driver.
+//!
+//! The CI `tsan` job compiles this suite with `-Zsanitizer=thread` and
+//! runs it at the ISSUE grid S ∈ {4, 8} × threads ∈ {2, 4}: every epoch
+//! of the dispatcher/worker mailbox protocol executes under the race
+//! detector while the digests are simultaneously pinned to the sequential
+//! engine (so a data race AND a determinism break both fail here).  The
+//! suite also runs in the plain test tier, where it doubles as coverage
+//! of the thread grid the loom models abstract.
+
+use fedqueue::coordinator::policy::{FenwickAdaptivePolicy, SamplingPolicy, StaticPolicy};
+use fedqueue::simulator::{
+    run_with_policy, EngineConfig, ServiceDist, ServiceFamily, SimConfig, SimResult,
+};
+
+const SHARD_GRID: [usize; 2] = [4, 8];
+const THREAD_GRID: [usize; 2] = [2, 4];
+
+fn two_cluster(n: usize, c: usize, steps: u64, seed: u64) -> SimConfig {
+    let rates: Vec<f64> = (0..n).map(|i| if i < n / 2 { 4.0 } else { 1.0 }).collect();
+    SimConfig {
+        seed,
+        ..SimConfig::new(
+            vec![1.0 / n as f64; n],
+            ServiceDist::from_rates(&rates, ServiceFamily::Exponential),
+            c,
+            steps,
+        )
+    }
+}
+
+fn digest(r: &SimResult) -> Vec<u64> {
+    let mut d = vec![r.tau_max, r.total_time.to_bits()];
+    d.extend(r.completions.iter().copied());
+    d.extend(r.dispatches.iter().copied());
+    d.extend(r.tau_sum.iter().map(|&x| x.to_bits()));
+    d.extend(r.mean_queue.iter().map(|&x| x.to_bits()));
+    d
+}
+
+fn grid_matches_sequential(mk_policy: impl Fn() -> Box<dyn SamplingPolicy>) {
+    let (n, c, steps) = (16, 10, 1_500);
+    for s in SHARD_GRID {
+        let mut cfg = two_cluster(n, c, steps, 23);
+        cfg.engine = EngineConfig::sharded(s, 1);
+        let oracle = digest(&run_with_policy(cfg, mk_policy()).unwrap());
+        for t in THREAD_GRID {
+            let mut cfg = two_cluster(n, c, steps, 23);
+            cfg.engine = EngineConfig::sharded(s, t);
+            let got = digest(&run_with_policy(cfg, mk_policy()).unwrap());
+            assert_eq!(got, oracle, "S={s} threads={t} diverged from sequential");
+        }
+    }
+}
+
+#[test]
+fn threaded_static_policy_grid() {
+    let n = 16;
+    grid_matches_sequential(|| Box::new(StaticPolicy::new(vec![1.0 / n as f64; n]).unwrap()));
+}
+
+#[test]
+fn threaded_adaptive_policy_grid() {
+    let n = 16;
+    grid_matches_sequential(|| {
+        Box::new(FenwickAdaptivePolicy::new(vec![1.0 / n as f64; n], 0.5).unwrap())
+    });
+}
+
+#[test]
+fn threaded_run_survives_repeated_pools() {
+    // churn the worker pool itself: many short runs spin up and wind down
+    // scoped workers; under TSan this exercises startup/shutdown ordering
+    let n = 8;
+    for seed in 0..6u64 {
+        let mut cfg = two_cluster(n, 5, 200, 100 + seed);
+        cfg.engine = EngineConfig::sharded(4, 2);
+        let res = run_with_policy(cfg, Box::new(StaticPolicy::new(vec![1.0 / n as f64; n]).unwrap()));
+        assert!(res.is_ok());
+    }
+}

@@ -1,0 +1,385 @@
+//! Minimal Rust lexer for the determinism lint.
+//!
+//! The container this repo builds in is offline and the crate is
+//! dependency-free by design, so the lint cannot pull in `syn`.  The rules
+//! in `rules.rs` only need token streams with line numbers, comment text
+//! (for `lint-allow` suppressions), and brace structure — a hand-rolled
+//! lexer covers that.  It understands line/block comments (nested), string
+//! and raw-string literals, byte strings, char literals vs. lifetimes, and
+//! numeric literals with suffixes; everything else is an ident or punct.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Token class.  Puncts are single chars except the compound operators the
+/// rules care about (`::`, `+=`, `->`, `=>`), which are fused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    IntLit,
+    FloatLit,
+    StrLit,
+    CharLit,
+    Lifetime,
+    Punct,
+}
+
+/// One token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is(&self, kind: TokKind, text: &str) -> bool {
+        self.kind == kind && self.text == text
+    }
+
+    pub fn is_punct(&self, text: &str) -> bool {
+        self.is(TokKind::Punct, text)
+    }
+
+    pub fn is_ident(&self, text: &str) -> bool {
+        self.is(TokKind::Ident, text)
+    }
+}
+
+/// Lexed file: token stream plus the side tables the suppression logic
+/// needs (comment text per line, and which lines hold actual code).
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    /// Concatenated comment text (line and block) per 1-based line.
+    pub comments: BTreeMap<u32, String>,
+    /// Lines that contain at least one token (i.e. are not comment/blank).
+    pub code_lines: BTreeSet<u32>,
+}
+
+pub fn lex(src: &str) -> Lexed {
+    let bytes: Vec<char> = src.chars().collect();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let n = bytes.len();
+
+    let push = |out: &mut Lexed, kind: TokKind, text: String, line: u32| {
+        out.code_lines.insert(line);
+        out.toks.push(Tok { kind, text, line });
+    };
+    let note_comment = |out: &mut Lexed, line: u32, text: &str| {
+        let slot = out.comments.entry(line).or_default();
+        if !slot.is_empty() {
+            slot.push(' ');
+        }
+        slot.push_str(text);
+    };
+
+    while i < n {
+        let c = bytes[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == '/' && i + 1 < n && bytes[i + 1] == '/' {
+            let start = i;
+            while i < n && bytes[i] != '\n' {
+                i += 1;
+            }
+            let text: String = bytes[start..i].iter().collect();
+            note_comment(&mut out, line, text.trim());
+            continue;
+        }
+        // Block comment (nested).
+        if c == '/' && i + 1 < n && bytes[i + 1] == '*' {
+            let start_line = line;
+            let start = i;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if bytes[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if bytes[i] == '/' && i + 1 < n && bytes[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if bytes[i] == '*' && i + 1 < n && bytes[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            let text: String = bytes[start..i].iter().collect();
+            note_comment(&mut out, start_line, text.trim());
+            continue;
+        }
+        // String-ish literals, including raw and byte prefixes.
+        if c == '"' || starts_string_prefix(&bytes, i) {
+            let start_line = line;
+            let (end, newlines) = scan_string(&bytes, i);
+            line += newlines;
+            push(&mut out, TokKind::StrLit, String::from("\"...\""), start_line);
+            i = end;
+            continue;
+        }
+        // Char literal vs. lifetime.
+        if c == '\'' {
+            if is_lifetime(&bytes, i) {
+                let mut j = i + 1;
+                while j < n && (bytes[j].is_alphanumeric() || bytes[j] == '_') {
+                    j += 1;
+                }
+                let text: String = bytes[i..j].iter().collect();
+                push(&mut out, TokKind::Lifetime, text, line);
+                i = j;
+            } else {
+                let mut j = i + 1;
+                if j < n && bytes[j] == '\\' {
+                    j += 2;
+                }
+                while j < n && bytes[j] != '\'' {
+                    j += 1;
+                }
+                push(&mut out, TokKind::CharLit, String::from("'.'"), line);
+                i = (j + 1).min(n);
+            }
+            continue;
+        }
+        // Numeric literal.
+        if c.is_ascii_digit() {
+            let (end, kind, text) = scan_number(&bytes, i);
+            push(&mut out, kind, text, line);
+            i = end;
+            continue;
+        }
+        // Ident / keyword (incl. raw idents).
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i;
+            if c == 'r' && i + 1 < n && bytes[i + 1] == '#' && i + 2 < n && is_ident_start(bytes[i + 2]) {
+                j = i + 2; // raw ident r#type -> lex as `type`
+            }
+            let start = j;
+            while j < n && (bytes[j].is_alphanumeric() || bytes[j] == '_') {
+                j += 1;
+            }
+            let text: String = bytes[start..j].iter().collect();
+            push(&mut out, TokKind::Ident, text, line);
+            i = j;
+            continue;
+        }
+        // Punct, fusing the compounds the rules look for.
+        let two: Option<&str> = if i + 1 < n {
+            match (c, bytes[i + 1]) {
+                (':', ':') => Some("::"),
+                ('+', '=') => Some("+="),
+                ('-', '>') => Some("->"),
+                ('=', '>') => Some("=>"),
+                _ => None,
+            }
+        } else {
+            None
+        };
+        if let Some(t) = two {
+            push(&mut out, TokKind::Punct, t.to_string(), line);
+            i += 2;
+        } else {
+            push(&mut out, TokKind::Punct, c.to_string(), line);
+            i += 1;
+        }
+    }
+    out
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+/// True when position `i` starts a string literal via a prefix:
+/// `r"`, `r#`, `b"`, `br"`, `br#`.
+fn starts_string_prefix(bytes: &[char], i: usize) -> bool {
+    let n = bytes.len();
+    let at = |k: usize| if i + k < n { bytes[i + k] } else { '\0' };
+    match at(0) {
+        'r' => at(1) == '"' || (at(1) == '#' && !is_ident_start(at(2))),
+        'b' => {
+            at(1) == '"'
+                || (at(1) == 'r' && (at(2) == '"' || at(2) == '#'))
+        }
+        _ => false,
+    }
+}
+
+/// Scan a (possibly raw, possibly byte) string starting at `i`; return the
+/// index just past the closing quote and the number of newlines inside.
+fn scan_string(bytes: &[char], i: usize) -> (usize, u32) {
+    let n = bytes.len();
+    let mut j = i;
+    // Skip prefix chars (r, b, br).
+    while j < n && (bytes[j] == 'r' || bytes[j] == 'b') {
+        j += 1;
+    }
+    let mut hashes = 0usize;
+    while j < n && bytes[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    let raw = hashes > 0 || (j > i && bytes[i..j].contains(&'r'));
+    debug_assert!(j < n && bytes[j] == '"');
+    j += 1; // opening quote
+    let mut newlines = 0u32;
+    while j < n {
+        let c = bytes[j];
+        if c == '\n' {
+            newlines += 1;
+            j += 1;
+            continue;
+        }
+        if !raw && c == '\\' {
+            j += 2;
+            continue;
+        }
+        if c == '"' {
+            if raw {
+                // need `hashes` trailing #'s
+                let mut k = 0usize;
+                while k < hashes && j + 1 + k < n && bytes[j + 1 + k] == '#' {
+                    k += 1;
+                }
+                if k == hashes {
+                    return (j + 1 + hashes, newlines);
+                }
+                j += 1;
+                continue;
+            }
+            return (j + 1, newlines);
+        }
+        j += 1;
+    }
+    (n, newlines)
+}
+
+/// `'a` (lifetime/label) vs `'a'` (char literal).
+fn is_lifetime(bytes: &[char], i: usize) -> bool {
+    let n = bytes.len();
+    if i + 1 >= n || !is_ident_start(bytes[i + 1]) {
+        return false;
+    }
+    let mut j = i + 1;
+    while j < n && (bytes[j].is_alphanumeric() || bytes[j] == '_') {
+        j += 1;
+    }
+    !(j < n && bytes[j] == '\'')
+}
+
+/// Scan a numeric literal; classify int vs float (exponent, decimal point,
+/// or f32/f64 suffix).
+fn scan_number(bytes: &[char], i: usize) -> (usize, TokKind, String) {
+    let n = bytes.len();
+    let mut j = i;
+    let mut float = false;
+    let hex = bytes[i] == '0' && i + 1 < n && (bytes[i + 1] == 'x' || bytes[i + 1] == 'X');
+    if hex || (bytes[i] == '0' && i + 1 < n && matches!(bytes[i + 1], 'b' | 'o')) {
+        j = i + 2;
+        while j < n && (bytes[j].is_ascii_alphanumeric() || bytes[j] == '_') {
+            j += 1;
+        }
+        let text: String = bytes[i..j].iter().collect();
+        return (j, TokKind::IntLit, text);
+    }
+    while j < n {
+        let c = bytes[j];
+        if c.is_ascii_digit() || c == '_' {
+            j += 1;
+        } else if c == '.' {
+            // `1..x` is a range, `1.method()` is a call — only a digit (or
+            // end-of-number position) after the dot makes this a float.
+            if j + 1 < n && (bytes[j + 1] == '.' || is_ident_start(bytes[j + 1])) {
+                break;
+            }
+            float = true;
+            j += 1;
+        } else if c == 'e' || c == 'E' {
+            if j + 1 < n && (bytes[j + 1].is_ascii_digit() || bytes[j + 1] == '+' || bytes[j + 1] == '-') {
+                float = true;
+                j += 1;
+                if bytes[j] == '+' || bytes[j] == '-' {
+                    j += 1;
+                }
+            } else {
+                break;
+            }
+        } else if c.is_alphanumeric() {
+            // suffix: u64, i32, f64, usize, ...
+            let start = j;
+            let mut k = j;
+            while k < n && (bytes[k].is_alphanumeric() || bytes[k] == '_') {
+                k += 1;
+            }
+            let suffix: String = bytes[start..k].iter().collect();
+            if suffix.starts_with('f') {
+                float = true;
+            }
+            j = k;
+            break;
+        } else {
+            break;
+        }
+    }
+    let text: String = bytes[i..j].iter().collect();
+    let kind = if float { TokKind::FloatLit } else { TokKind::IntLit };
+    (j, kind, text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fuses_compound_puncts() {
+        let l = lex("a += b::c;");
+        let texts: Vec<&str> = l.toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, vec!["a", "+=", "b", "::", "c", ";"]);
+    }
+
+    #[test]
+    fn comments_and_code_lines() {
+        let l = lex("// lint-allow(R2): demo\nlet x = 1; // trailing\n");
+        assert!(l.comments.get(&1).unwrap().contains("lint-allow(R2)"));
+        assert!(l.comments.get(&2).unwrap().contains("trailing"));
+        assert!(!l.code_lines.contains(&1));
+        assert!(l.code_lines.contains(&2));
+    }
+
+    #[test]
+    fn float_vs_int_vs_range() {
+        let l = lex("1.5 0x7AB 2e-3 1..4 7.max(2) 3f64");
+        let kinds: Vec<TokKind> = l.toks.iter().map(|t| t.kind).collect();
+        assert_eq!(kinds[0], TokKind::FloatLit);
+        assert_eq!(kinds[1], TokKind::IntLit);
+        assert_eq!(kinds[2], TokKind::FloatLit);
+        assert_eq!(kinds[3], TokKind::IntLit); // 1 (then ..)
+        assert!(l.toks.iter().any(|t| t.is_ident("max")));
+        assert_eq!(kinds.last().copied(), Some(TokKind::FloatLit));
+    }
+
+    #[test]
+    fn lifetimes_and_chars() {
+        let l = lex("fn f<'a>(x: &'a str) { let c = 'x'; }");
+        assert!(l.toks.iter().any(|t| t.kind == TokKind::Lifetime));
+        assert!(l.toks.iter().any(|t| t.kind == TokKind::CharLit));
+    }
+
+    #[test]
+    fn raw_strings_do_not_leak() {
+        let l = lex("let s = r#\"HashMap \" inside\"#; let t = 1;");
+        assert!(!l.toks.iter().any(|t| t.is_ident("HashMap")));
+        assert!(l.toks.iter().any(|t| t.is_ident("t")));
+    }
+}

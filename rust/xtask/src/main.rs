@@ -1,0 +1,50 @@
+//! `cargo xtask <command>` — repo-local tooling.
+//!
+//! Commands:
+//!   lint [PATH]   run the determinism lint (R1–R5) over PATH, defaulting
+//!                 to the fedqueue crate's src/ directory.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    match args.next().as_deref() {
+        Some("lint") => {
+            let root = args.next().map(PathBuf::from).unwrap_or_else(default_src);
+            if !root.is_dir() {
+                eprintln!("xtask lint: no such directory: {}", root.display());
+                return ExitCode::FAILURE;
+            }
+            let violations = xtask::lint_root(&root);
+            for v in &violations {
+                println!("{v}");
+            }
+            if violations.is_empty() {
+                eprintln!("xtask lint: clean ({})", root.display());
+                ExitCode::SUCCESS
+            } else {
+                eprintln!(
+                    "xtask lint: {} violation(s); suppress a justified site with \
+                     `// lint-allow(<rule>): <reason>`",
+                    violations.len()
+                );
+                ExitCode::FAILURE
+            }
+        }
+        Some(other) => {
+            eprintln!("xtask: unknown command `{other}` (try: lint)");
+            ExitCode::FAILURE
+        }
+        None => {
+            eprintln!("usage: cargo xtask lint [PATH]");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// The fedqueue `src/` directory, located relative to this crate so the
+/// command works from any working directory.
+fn default_src() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../src")
+}

@@ -1,0 +1,434 @@
+//! Token-level structural model of one Rust file.
+//!
+//! Built on top of [`crate::lexer`], this extracts just enough structure
+//! for the determinism rules: which line ranges are `#[cfg(test)]` (and
+//! `#[test]`) code, which line ranges belong to which `impl` target, and a
+//! table of function definitions with the names they call (the module-level
+//! call graph R1 walks).  It is deliberately conservative: names are
+//! matched without path resolution, so an edge `a -> b` exists whenever
+//! some function named `b` is called from `a`'s body.  That over-
+//! approximates reachability, which is the correct direction for a
+//! determinism lint — false negatives corrupt digests, false positives
+//! cost a `lint-allow` with a written reason.
+
+use crate::lexer::{lex, Lexed, Tok, TokKind};
+
+/// Inclusive line range.
+#[derive(Clone, Copy, Debug)]
+pub struct LineRange {
+    pub start: u32,
+    pub end: u32,
+}
+
+impl LineRange {
+    pub fn contains(&self, line: u32) -> bool {
+        self.start <= line && line <= self.end
+    }
+}
+
+/// An `impl` block and the (unqualified) name of its self type.
+#[derive(Clone, Debug)]
+pub struct ImplBlock {
+    pub target: String,
+    pub range: LineRange,
+}
+
+/// One `fn` definition: name, where it lives, whether its signature
+/// mentions `Rng`, and every name it calls (with call-site lines).
+#[derive(Clone, Debug)]
+pub struct FnDef {
+    pub name: String,
+    pub line: u32,
+    pub range: LineRange,
+    pub sig_has_rng: bool,
+    pub calls: Vec<(String, u32)>,
+}
+
+/// Parsed file model.
+#[derive(Debug, Default)]
+pub struct FileModel {
+    pub lexed: Lexed,
+    /// Line ranges under `#[cfg(test)] mod`, `#[cfg(all(loom, test))]
+    /// mod`, or `#[test] fn` — excluded from every rule.
+    pub test_ranges: Vec<LineRange>,
+    pub impls: Vec<ImplBlock>,
+    pub fns: Vec<FnDef>,
+}
+
+impl FileModel {
+    pub fn parse(src: &str) -> Self {
+        let lexed = lex(src);
+        let mut model = FileModel {
+            test_ranges: Vec::new(),
+            impls: Vec::new(),
+            fns: Vec::new(),
+            lexed,
+        };
+        model.scan();
+        model
+    }
+
+    pub fn in_test(&self, line: u32) -> bool {
+        self.test_ranges.iter().any(|r| r.contains(line))
+    }
+
+    /// Name of the innermost `impl` target covering `line`, if any.
+    pub fn impl_target_at(&self, line: u32) -> Option<&str> {
+        self.impls
+            .iter()
+            .filter(|b| b.range.contains(line))
+            .min_by_key(|b| b.range.end - b.range.start)
+            .map(|b| b.target.as_str())
+    }
+
+    fn scan(&mut self) {
+        let toks = &self.lexed.toks;
+        let n = toks.len();
+        let mut i = 0usize;
+        // `true` after an attribute list mentioning `test` or `loom`, until
+        // the next item keyword consumes it.
+        let mut pending_test_attr = false;
+        while i < n {
+            let t = &toks[i];
+            if t.is_punct("#") && i + 1 < n && toks[i + 1].is_punct("[") {
+                let close = match_bracket(toks, i + 1, "[", "]");
+                // `#[test]`, `#[cfg(test)]`, `#[cfg(all(loom, test))]` all
+                // contain the bare ident `test`; `#[cfg(not(loom))]` does
+                // not, so non-loom production code stays linted.
+                let has_test = toks[i + 1..close].iter().any(|t| t.is_ident("test"));
+                pending_test_attr = pending_test_attr || has_test;
+                i = close + 1;
+                continue;
+            }
+            if t.kind == TokKind::Ident {
+                match t.text.as_str() {
+                    "mod" => {
+                        if let Some(body) = item_body(toks, i) {
+                            if pending_test_attr {
+                                self.test_ranges.push(body.lines);
+                            }
+                            // Recurse into the module body by just
+                            // continuing the linear scan: nested items are
+                            // picked up naturally.
+                        }
+                        pending_test_attr = false;
+                        i += 1;
+                        continue;
+                    }
+                    "impl" => {
+                        // `-> impl Trait` / `: impl Trait` is a type
+                        // position, not an item; only item-position `impl`
+                        // opens a block.
+                        let type_position = i > 0
+                            && matches!(
+                                toks[i - 1].text.as_str(),
+                                "->" | ":" | "(" | "," | "=" | "<" | "+" | "&"
+                            );
+                        if !type_position {
+                            if let Some((target, body)) = impl_header(toks, i) {
+                                self.impls.push(ImplBlock {
+                                    target,
+                                    range: body.lines,
+                                });
+                            }
+                        }
+                        pending_test_attr = false;
+                        i += 1;
+                        continue;
+                    }
+                    "fn" => {
+                        if let Some(def) = fn_def(toks, i) {
+                            if pending_test_attr {
+                                self.test_ranges.push(def.range);
+                            }
+                            self.fns.push(def);
+                        }
+                        pending_test_attr = false;
+                        i += 1;
+                        continue;
+                    }
+                    "struct" | "enum" | "trait" | "use" | "static" | "const" | "type" => {
+                        pending_test_attr = false;
+                    }
+                    _ => {}
+                }
+            }
+            i += 1;
+        }
+    }
+}
+
+struct Body {
+    lines: LineRange,
+}
+
+/// Index of the punct matching the opener at `open_idx` (which must hold
+/// `open`).  Returns the last token index on unbalanced input.
+fn match_bracket(toks: &[Tok], open_idx: usize, open: &str, close: &str) -> usize {
+    let mut depth = 0usize;
+    let mut i = open_idx;
+    while i < toks.len() {
+        if toks[i].is_punct(open) {
+            depth += 1;
+        } else if toks[i].is_punct(close) {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+        i += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// For an item keyword at `kw` (`mod`), find the `{ ... }` body if the item
+/// has one (`mod x;` has none).
+fn item_body(toks: &[Tok], kw: usize) -> Option<Body> {
+    let mut i = kw + 1;
+    while i < toks.len() {
+        if toks[i].is_punct(";") {
+            return None;
+        }
+        if toks[i].is_punct("{") {
+            let close = match_bracket(toks, i, "{", "}");
+            return Some(Body {
+                lines: LineRange {
+                    start: toks[i].line,
+                    end: toks[close].line,
+                },
+            });
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Parse an `impl` header starting at the `impl` keyword: returns the
+/// unqualified self-type name and the body range.  Handles
+/// `impl<G> Type<G>`, `impl Trait for Type`, and `impl<G> Trait for
+/// Type<G>`.
+fn impl_header(toks: &[Tok], kw: usize) -> Option<(String, Body)> {
+    let n = toks.len();
+    let mut i = kw + 1;
+    // Skip generic parameter list.
+    if i < n && toks[i].is_punct("<") {
+        let mut depth = 0i32;
+        while i < n {
+            if toks[i].is_punct("<") {
+                depth += 1;
+            } else if toks[i].is_punct(">") {
+                depth -= 1;
+                if depth == 0 {
+                    i += 1;
+                    break;
+                }
+            }
+            i += 1;
+        }
+    }
+    // First path; if followed by `for`, the self type is the next path.
+    let mut target = first_path_ident(toks, &mut i)?;
+    skip_generic_args(toks, &mut i);
+    if i < n && toks[i].is_ident("for") {
+        i += 1;
+        // Skip `&`, lifetimes, `mut`, `dyn`.
+        while i < n
+            && (toks[i].is_punct("&")
+                || toks[i].kind == TokKind::Lifetime
+                || toks[i].is_ident("mut")
+                || toks[i].is_ident("dyn"))
+        {
+            i += 1;
+        }
+        target = first_path_ident(toks, &mut i)?;
+        skip_generic_args(toks, &mut i);
+    }
+    // Find the body `{`.
+    while i < n && !toks[i].is_punct("{") {
+        if toks[i].is_punct(";") {
+            return None;
+        }
+        i += 1;
+    }
+    if i >= n {
+        return None;
+    }
+    let close = match_bracket(toks, i, "{", "}");
+    Some((
+        target,
+        Body {
+            lines: LineRange {
+                start: toks[i].line,
+                end: toks[close].line,
+            },
+        },
+    ))
+}
+
+/// Read `seg(::seg)*` at `*i`; return the LAST segment (the type name for
+/// a qualified path like `util::stats::Welford`) and advance past it.
+fn first_path_ident(toks: &[Tok], i: &mut usize) -> Option<String> {
+    let n = toks.len();
+    let mut last: Option<String> = None;
+    loop {
+        if *i < n && toks[*i].kind == TokKind::Ident {
+            last = Some(toks[*i].text.clone());
+            *i += 1;
+            if *i < n && toks[*i].is_punct("::") {
+                *i += 1;
+                continue;
+            }
+        }
+        break;
+    }
+    last
+}
+
+/// Skip a `<...>` generic-argument list at `*i`, if present.
+fn skip_generic_args(toks: &[Tok], i: &mut usize) {
+    let n = toks.len();
+    if *i < n && toks[*i].is_punct("<") {
+        let mut depth = 0i32;
+        while *i < n {
+            if toks[*i].is_punct("<") {
+                depth += 1;
+            } else if toks[*i].is_punct(">") {
+                depth -= 1;
+                if depth == 0 {
+                    *i += 1;
+                    return;
+                }
+            }
+            *i += 1;
+        }
+    }
+}
+
+const KEYWORDS: &[&str] = &[
+    "if", "else", "while", "for", "loop", "match", "return", "let", "fn", "in", "as", "move",
+    "mut", "ref", "break", "continue", "unsafe", "where", "impl", "dyn", "Self", "self", "super",
+    "crate", "pub", "use", "mod", "struct", "enum", "trait", "type", "const", "static",
+];
+
+/// Parse a `fn` definition starting at the `fn` keyword.
+fn fn_def(toks: &[Tok], kw: usize) -> Option<FnDef> {
+    let n = toks.len();
+    let name_idx = kw + 1;
+    if name_idx >= n || toks[name_idx].kind != TokKind::Ident {
+        return None;
+    }
+    let name = toks[name_idx].text.clone();
+    let line = toks[name_idx].line;
+    // Parameter list.
+    let mut i = name_idx + 1;
+    if i < n && toks[i].is_punct("<") {
+        skip_generic_args(toks, &mut i);
+    }
+    if i >= n || !toks[i].is_punct("(") {
+        return None;
+    }
+    let params_close = match_bracket(toks, i, "(", ")");
+    let sig_has_rng = toks[i..params_close].iter().any(|t| t.is_ident("Rng"));
+    // Find body `{` or trait-decl `;`.
+    let mut j = params_close + 1;
+    let mut brace = None;
+    while j < n {
+        if toks[j].is_punct(";") {
+            break;
+        }
+        if toks[j].is_punct("{") {
+            brace = Some(j);
+            break;
+        }
+        j += 1;
+    }
+    let (range, calls) = match brace {
+        Some(open) => {
+            let close = match_bracket(toks, open, "{", "}");
+            (
+                LineRange {
+                    start: line,
+                    end: toks[close].line,
+                },
+                collect_calls(&toks[open..=close.min(n - 1)]),
+            )
+        }
+        None => (LineRange { start: line, end: line }, Vec::new()),
+    };
+    Some(FnDef {
+        name,
+        line,
+        range,
+        sig_has_rng,
+        calls,
+    })
+}
+
+/// Every `name(` or `.name(` in a body slice, excluding macro invocations
+/// (`name!(...)`) and keywords.
+fn collect_calls(body: &[Tok]) -> Vec<(String, u32)> {
+    let mut out = Vec::new();
+    let n = body.len();
+    for i in 0..n {
+        if body[i].kind != TokKind::Ident {
+            continue;
+        }
+        let name = body[i].text.as_str();
+        if KEYWORDS.contains(&name) {
+            continue;
+        }
+        // `fn name(` is a nested definition, not a call.
+        if i > 0 && body[i - 1].is_ident("fn") {
+            continue;
+        }
+        if i + 1 < n && body[i + 1].is_punct("(") {
+            out.push((name.to_string(), body[i].line));
+        } else if i + 1 < n && body[i + 1].is_punct("!") {
+            // macro — skip
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_test_mod_range() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn helper() { rng.uniform(); }\n}\n";
+        let m = FileModel::parse(src);
+        assert!(!m.in_test(1));
+        assert!(m.in_test(4));
+    }
+
+    #[test]
+    fn impl_targets() {
+        let src = "impl StepAggregator {\n    fn push(&mut self) { self.area += 1.0; }\n}\nimpl<D: Drv> Core<D> {\n    fn go(&self) {}\n}\nimpl Policy for Fixed {\n    fn observe(&mut self) {}\n}\n";
+        let m = FileModel::parse(src);
+        assert_eq!(m.impl_target_at(2), Some("StepAggregator"));
+        assert_eq!(m.impl_target_at(5), Some("Core"));
+        assert_eq!(m.impl_target_at(8), Some("Fixed"));
+    }
+
+    #[test]
+    fn fn_calls_and_rng_sig() {
+        let src = "fn draw(rng: &mut Rng) -> f64 { rng.uniform() }\nfn outer() { let v = draw(&mut r); helper_macro!(x); }\n";
+        let m = FileModel::parse(src);
+        let draw = m.fns.iter().find(|f| f.name == "draw").unwrap();
+        assert!(draw.sig_has_rng);
+        assert!(draw.calls.iter().any(|(c, _)| c == "uniform"));
+        let outer = m.fns.iter().find(|f| f.name == "outer").unwrap();
+        assert!(outer.calls.iter().any(|(c, _)| c == "draw"));
+        assert!(!outer.calls.iter().any(|(c, _)| c == "helper_macro"));
+    }
+
+    #[test]
+    fn trait_decl_without_body() {
+        let src = "trait P {\n    fn observe(&mut self, lens: &[u32]) {}\n    fn route(&self, rng: &mut Rng) -> usize;\n}\n";
+        let m = FileModel::parse(src);
+        let route = m.fns.iter().find(|f| f.name == "route").unwrap();
+        assert!(route.sig_has_rng);
+        assert!(route.calls.is_empty());
+    }
+}

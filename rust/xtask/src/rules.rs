@@ -1,0 +1,493 @@
+//! The determinism contract, as named machine-checked rules.
+//!
+//! Every guarantee the crate reproduces (Theorem-1 optimal sampling, the
+//! delay-adaptive policies, η/(n·p_i) weighting) rests on bit-identity
+//! between the heap oracle, the sharded engine, and the batch arena.  The
+//! conventions that keep them in lockstep used to live in doc comments
+//! ("MUST consume no RNG"); this module enforces them at lint time:
+//!
+//! * **R1** — no RNG consumption reachable from any
+//!   `SamplingPolicy::observe_*` implementation.  Policies are observed at
+//!   different moments in each engine; a single stray draw in an observe
+//!   path desynchronizes the routing stream and shows up only as a digest
+//!   mismatch hours later.
+//! * **R2** — no `HashMap`/`HashSet` in deterministic modules
+//!   (`simulator/**`, `coordinator/policy.rs`, `coordinator/sweep.rs`,
+//!   `util/stats.rs`).  Iteration order is randomized per process; one
+//!   `for (k, v) in map` in a result path breaks run-to-run identity.
+//! * **R3** — no `Instant`/`SystemTime`/`thread_rng` in those same
+//!   modules, where results flow into `to_json_deterministic()`.
+//! * **R4** — RNG construction from a bare integer-literal seed
+//!   (`Rng::new(0x...)`, `stream_seed(12345, ..)`) only inside
+//!   `util/rng.rs`; everywhere else seeds must arrive via keyed streams or
+//!   named config so replications stay counter-addressable.
+//! * **R5** — float accumulation (`+=` with an f32/f64 operand) in engine
+//!   step paths must route through `StepAggregator`/`Welford`, whose
+//!   summation order is part of the cross-engine contract.
+//!
+//! Each rule is individually suppressible at the violation site with
+//! `// lint-allow(<rule>): <reason>` — the reason string is mandatory and
+//! its absence is itself a diagnostic.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::lexer::TokKind;
+use crate::model::{FileModel, FnDef};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    R1,
+    R2,
+    R3,
+    R4,
+    R5,
+    /// Malformed `lint-allow` (missing rule or reason).
+    AllowSyntax,
+}
+
+impl Rule {
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::R1 => "R1",
+            Rule::R2 => "R2",
+            Rule::R3 => "R3",
+            Rule::R4 => "R4",
+            Rule::R5 => "R5",
+            Rule::AllowSyntax => "lint-allow-syntax",
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One diagnostic: `file:line: RULE: msg`.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub file: String,
+    pub line: u32,
+    pub rule: Rule,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Deterministic modules (R2/R3): the engines, the policies, the sweep
+/// serializer, and the stats substrate.
+fn is_deterministic(rel: &str) -> bool {
+    rel.starts_with("simulator/")
+        || rel == "coordinator/policy.rs"
+        || rel == "coordinator/sweep.rs"
+        || rel == "util/stats.rs"
+}
+
+/// Engine step paths (R5): everything that feeds the cross-engine digest.
+fn is_engine_step(rel: &str) -> bool {
+    rel.starts_with("simulator/engine/") || rel == "simulator/network.rs"
+}
+
+/// The one module allowed to mint RNG state from raw literals (R4).
+fn is_rng_home(rel: &str) -> bool {
+    rel == "util/rng.rs"
+}
+
+/// Names whose call consumes routing/service RNG state (R1 markers), plus
+/// the usual suspects from external RNG crates so future code can't sneak
+/// them in under a dependency.
+const RNG_CONSUMERS: &[&str] = &[
+    "next_u64",
+    "uniform",
+    "uniform_pos",
+    "below",
+    "usize_below",
+    "range_f64",
+    "exponential",
+    "normal",
+    "normal_with",
+    "lognormal_mean_cv",
+    "shuffle",
+    "sample_distinct",
+    "he_normal",
+    "sample",
+    "gen",
+    "gen_range",
+    "thread_rng",
+];
+
+/// Roots of the R1 reachability walk.
+const OBSERVE_ROOTS: &[&str] = &["observe", "observe_node", "observe_completion"];
+
+/// Impl targets whose float accumulation IS the contract (R5 contexts).
+const FLOAT_SINKS: &[&str] = &["StepAggregator", "Welford"];
+
+struct LintedFile {
+    rel: String,
+    model: FileModel,
+}
+
+/// Lint every `.rs` file under `src_root` (the crate's `src/` directory,
+/// or a fixture tree mirroring its layout).  Returns the surviving
+/// diagnostics, deterministically ordered.
+pub fn lint_root(src_root: &Path) -> Vec<Violation> {
+    let mut files = Vec::new();
+    let mut paths = Vec::new();
+    walk(src_root, &mut paths);
+    paths.sort();
+    for path in &paths {
+        let rel = path
+            .strip_prefix(src_root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let Ok(src) = fs::read_to_string(path) else {
+            continue;
+        };
+        files.push(LintedFile {
+            rel,
+            model: FileModel::parse(&src),
+        });
+    }
+
+    let mut violations = Vec::new();
+    for f in &files {
+        check_tokens(f, &mut violations);
+    }
+    check_observe_reachability(&files, &mut violations);
+
+    // Allow-comment pass: drop suppressed violations, add syntax
+    // diagnostics for malformed allows.
+    let mut out = Vec::new();
+    for f in &files {
+        let allows = parse_allows(f, &mut out);
+        for v in violations.iter().filter(|v| v.file == f.rel) {
+            if !is_suppressed(f, &allows, v) {
+                out.push(v.clone());
+            }
+        }
+    }
+    out.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    out.dedup_by(|a, b| a.file == b.file && a.line == b.line && a.rule == b.rule);
+    out
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            walk(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// Token-local rules: R2, R3, R4, R5.
+fn check_tokens(f: &LintedFile, out: &mut Vec<Violation>) {
+    let rel = f.rel.as_str();
+    let model = &f.model;
+    let toks = &model.lexed.toks;
+    let deterministic = is_deterministic(rel);
+    let engine_step = is_engine_step(rel);
+    let rng_home = is_rng_home(rel);
+
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident && !t.is_punct("+=") {
+            continue;
+        }
+        if model.in_test(t.line) {
+            continue;
+        }
+        // R2: unordered collections in deterministic modules.
+        if deterministic && (t.is_ident("HashMap") || t.is_ident("HashSet")) {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: t.line,
+                rule: Rule::R2,
+                msg: format!(
+                    "`{}` in deterministic module — iteration order is \
+                     process-random; use BTreeMap/Vec or suppress with a reason",
+                    t.text
+                ),
+            });
+        }
+        // R3: wall-clock / OS entropy in deterministic modules.
+        if deterministic
+            && (t.is_ident("Instant") || t.is_ident("SystemTime") || t.is_ident("thread_rng"))
+        {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: t.line,
+                rule: Rule::R3,
+                msg: format!(
+                    "`{}` in a module whose results flow through \
+                     to_json_deterministic() — timing belongs in the perf block only",
+                    t.text
+                ),
+            });
+        }
+        // R4: ad-hoc RNG seeds outside util/rng.rs.
+        if !rng_home {
+            let seed_call = (t.is_ident("Rng")
+                && toks.get(i + 1).is_some_and(|t| t.is_punct("::"))
+                && toks.get(i + 2).is_some_and(|t| t.is_ident("new"))
+                && toks.get(i + 3).is_some_and(|t| t.is_punct("(")))
+            .then_some(i + 3)
+            .or_else(|| {
+                ((t.is_ident("stream_seed") || t.is_ident("first_u64_of"))
+                    && toks.get(i + 1).is_some_and(|t| t.is_punct("(")))
+                .then_some(i + 1)
+            });
+            if let Some(open) = seed_call {
+                if first_arg_is_bare_int(toks, open) {
+                    out.push(Violation {
+                        file: rel.to_string(),
+                        line: t.line,
+                        rule: Rule::R4,
+                        msg: "RNG constructed from a bare literal seed — derive via \
+                              stream_seed(seed, [..]) keyed streams or a named config seed"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+        // R5: float accumulation outside StepAggregator/Welford in engine
+        // step paths.
+        if engine_step && t.is_punct("+=") {
+            let in_sink = model
+                .impl_target_at(t.line)
+                .is_some_and(|target| FLOAT_SINKS.contains(&target));
+            if !in_sink && rhs_is_floaty(toks, i) {
+                out.push(Violation {
+                    file: rel.to_string(),
+                    line: t.line,
+                    rule: Rule::R5,
+                    msg: "bare float `+=` in an engine step path — route the \
+                          accumulation through StepAggregator/Welford so summation \
+                          order stays part of the contract"
+                        .to_string(),
+                });
+            }
+        }
+    }
+}
+
+/// First argument of the call whose `(` sits at `open`: bare integer
+/// literal iff the tokens up to the first top-level `,` or the closing `)`
+/// are exactly one `IntLit`.
+fn first_arg_is_bare_int(toks: &[crate::lexer::Tok], open: usize) -> bool {
+    let mut depth = 0i32;
+    let mut arg_toks = 0usize;
+    let mut bare = false;
+    for t in &toks[open..] {
+        if t.is_punct("(") || t.is_punct("[") {
+            depth += 1;
+            if depth == 1 {
+                continue;
+            }
+        } else if t.is_punct(")") || t.is_punct("]") {
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+        } else if depth == 1 && t.is_punct(",") {
+            break;
+        }
+        if depth >= 1 {
+            arg_toks += 1;
+            bare = arg_toks == 1 && t.kind == TokKind::IntLit;
+        }
+    }
+    bare
+}
+
+/// Tokens from the `+=` to the statement's `;` mention f32/f64 (cast,
+/// typed temporary, or float literal).
+fn rhs_is_floaty(toks: &[crate::lexer::Tok], op: usize) -> bool {
+    let mut depth = 0i32;
+    for t in &toks[op + 1..] {
+        match t.text.as_str() {
+            "(" | "[" | "{" => depth += 1,
+            ")" | "]" | "}" => {
+                if depth == 0 {
+                    break;
+                }
+                depth -= 1;
+            }
+            ";" if depth == 0 => break,
+            _ => {}
+        }
+        if t.kind == TokKind::FloatLit || t.is_ident("f64") || t.is_ident("f32") {
+            return true;
+        }
+    }
+    false
+}
+
+/// R1: walk the name-based call graph from every `observe_*` definition;
+/// any path to an RNG-consuming name (or to a function taking `Rng` in its
+/// signature) is a violation at the offending call site.
+fn check_observe_reachability(files: &[LintedFile], out: &mut Vec<Violation>) {
+    // Global fn table: name -> [(file index, fn index)].
+    let mut by_name: BTreeMap<&str, Vec<(usize, usize)>> = BTreeMap::new();
+    for (fi, f) in files.iter().enumerate() {
+        for (di, d) in f.model.fns.iter().enumerate() {
+            if !f.model.in_test(d.line) {
+                by_name.entry(d.name.as_str()).or_default().push((fi, di));
+            }
+        }
+    }
+    let def = |fi: usize, di: usize| -> &FnDef { &files[fi].model.fns[di] };
+
+    for (&root_name, roots) in &by_name {
+        if !OBSERVE_ROOTS.contains(&root_name) {
+            continue;
+        }
+        for &(rfi, rdi) in roots {
+            let mut visited: Vec<(usize, usize)> = Vec::new();
+            let mut stack: Vec<((usize, usize), Vec<String>)> =
+                vec![((rfi, rdi), vec![root_name.to_string()])];
+            while let Some(((fi, di), chain)) = stack.pop() {
+                if visited.contains(&(fi, di)) {
+                    continue;
+                }
+                visited.push((fi, di));
+                for (callee, line) in &def(fi, di).calls {
+                    if RNG_CONSUMERS.contains(&callee.as_str()) {
+                        out.push(Violation {
+                            file: files[fi].rel.clone(),
+                            line: *line,
+                            rule: Rule::R1,
+                            msg: format!(
+                                "RNG consumption reachable from `{}` \
+                                 (chain: {} -> {callee}) — observe paths must not \
+                                 move the routing stream",
+                                root_name,
+                                chain.join(" -> "),
+                            ),
+                        });
+                        continue;
+                    }
+                    if let Some(callees) = by_name.get(callee.as_str()) {
+                        for &(cfi, cdi) in callees {
+                            if def(cfi, cdi).sig_has_rng {
+                                out.push(Violation {
+                                    file: files[fi].rel.clone(),
+                                    line: *line,
+                                    rule: Rule::R1,
+                                    msg: format!(
+                                        "`{callee}` takes an Rng and is reachable \
+                                         from `{}` (chain: {}) — observe paths must \
+                                         not move the routing stream",
+                                        root_name,
+                                        chain.join(" -> "),
+                                    ),
+                                });
+                            } else {
+                                let mut next = chain.clone();
+                                next.push(callee.clone());
+                                stack.push(((cfi, cdi), next));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// A parsed `// lint-allow(<rule>): <reason>` comment.
+struct Allow {
+    line: u32,
+    rule: String,
+}
+
+/// Extract allows from a file's comments; malformed ones (no rule, or no
+/// non-empty reason after `:`) become `lint-allow-syntax` diagnostics.
+fn parse_allows(f: &LintedFile, out: &mut Vec<Violation>) -> Vec<Allow> {
+    let mut allows = Vec::new();
+    for (&line, text) in &f.model.lexed.comments {
+        let mut rest = text.as_str();
+        while let Some(pos) = rest.find("lint-allow") {
+            rest = &rest[pos + "lint-allow".len()..];
+            let Some(stripped) = rest.strip_prefix('(') else {
+                out.push(syntax_err(f, line, "expected `lint-allow(<rule>): <reason>`"));
+                continue;
+            };
+            let Some(close) = stripped.find(')') else {
+                out.push(syntax_err(f, line, "unclosed rule name in lint-allow"));
+                break;
+            };
+            let rule = stripped[..close].trim().to_string();
+            let after = &stripped[close + 1..];
+            let reason_ok = after
+                .strip_prefix(':')
+                .map(|r| {
+                    let r = r.trim();
+                    let end = r.find("lint-allow").unwrap_or(r.len());
+                    !r[..end].trim().is_empty()
+                })
+                .unwrap_or(false);
+            if rule.is_empty() {
+                out.push(syntax_err(f, line, "empty rule name in lint-allow"));
+            } else if !reason_ok {
+                out.push(syntax_err(
+                    f,
+                    line,
+                    &format!("lint-allow({rule}) requires a reason: `lint-allow({rule}): <why>`"),
+                ));
+            } else {
+                allows.push(Allow { line, rule });
+            }
+            rest = after;
+        }
+    }
+    allows
+}
+
+fn syntax_err(f: &LintedFile, line: u32, msg: &str) -> Violation {
+    Violation {
+        file: f.rel.clone(),
+        line,
+        rule: Rule::AllowSyntax,
+        msg: msg.to_string(),
+    }
+}
+
+/// A violation is suppressed by a matching allow on the same line, or on
+/// the contiguous run of comment-only lines directly above it.
+fn is_suppressed(f: &LintedFile, allows: &[Allow], v: &Violation) -> bool {
+    let matches_at = |line: u32| {
+        allows
+            .iter()
+            .any(|a| a.line == line && a.rule == v.rule.name())
+    };
+    if matches_at(v.line) {
+        return true;
+    }
+    let mut line = v.line;
+    while line > 1 {
+        line -= 1;
+        let comment_only = f.model.lexed.comments.contains_key(&line)
+            && !f.model.lexed.code_lines.contains(&line);
+        if !comment_only {
+            return false;
+        }
+        if matches_at(line) {
+            return true;
+        }
+    }
+    false
+}

@@ -1,0 +1,28 @@
+// Fixture: a justified `lint-allow` suppression keeps the file clean.
+
+pub fn scratch(n: usize) -> usize {
+    // lint-allow(R2): scratch map is drained and len() is order-independent
+    let mut m = std::collections::HashMap::new();
+    for i in 0..n {
+        m.insert(i, ());
+    }
+    m.len()
+}
+
+pub fn inline_allowed() -> usize {
+    let s = std::collections::HashSet::<u32>::new(); // lint-allow(R2): empty set, never iterated
+    s.len()
+}
+
+#[cfg(test)]
+mod tests {
+    // Test modules are exempt from every rule.
+    use std::collections::HashMap;
+    use std::time::Instant;
+
+    #[test]
+    fn scratch_counts() {
+        let _ = (HashMap::<u32, u32>::new(), Instant::now());
+        assert_eq!(super::scratch(3), 3);
+    }
+}

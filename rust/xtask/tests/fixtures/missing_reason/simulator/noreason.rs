@@ -1,0 +1,9 @@
+// Fixture: a `lint-allow` without a reason is itself a diagnostic and does
+// NOT suppress the underlying violation.
+
+pub fn bad(n: usize) -> usize {
+    // lint-allow(R2)
+    let mut m = std::collections::HashMap::new();
+    m.insert(n, ());
+    m.len()
+}

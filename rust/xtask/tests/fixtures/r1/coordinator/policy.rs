@@ -1,0 +1,13 @@
+// Fixture: R1 — an observe implementation that consumes RNG.
+// Not compiled; parsed by the lint only.
+
+pub struct JitteryPolicy {
+    rng: Rng,
+    last: f64,
+}
+
+impl SamplingPolicy for JitteryPolicy {
+    fn observe_completion(&mut self, _node: usize, _delay_steps: u64, _delay_time: f64) {
+        self.last = self.rng.uniform(); // deliberate violation: draws in an observe path
+    }
+}

@@ -1,0 +1,9 @@
+// Fixture: R2 — unordered collection in a deterministic module.
+
+pub fn tally(xs: &[u32]) -> usize {
+    let mut seen = std::collections::HashMap::new(); // deliberate violation
+    for &x in xs {
+        seen.insert(x, ());
+    }
+    seen.len()
+}

@@ -1,0 +1,6 @@
+// Fixture: R3 — wall-clock time in a deterministic module.
+
+pub fn stamp_secs() -> f64 {
+    let t0 = std::time::Instant::now(); // deliberate violation
+    t0.elapsed().as_secs_f64()
+}

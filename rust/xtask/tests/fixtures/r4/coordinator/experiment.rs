@@ -1,0 +1,13 @@
+// Fixture: R4 — RNG constructed from a bare literal seed outside
+// util/rng.rs.
+
+pub fn adhoc_stream() -> u64 {
+    let mut rng = Rng::new(0xDEAD_BEEF); // deliberate violation
+    rng.next_u64()
+}
+
+pub fn keyed_is_fine(seed: u64, node: u32) -> u64 {
+    // Keyed streams and named seeds must NOT trip the rule.
+    let mut rng = Rng::new(stream_seed(seed, &[node as u64]));
+    rng.next_u64()
+}

@@ -1,0 +1,21 @@
+// Fixture: R5 — bare float accumulation in an engine step path, outside
+// StepAggregator/Welford.
+
+pub struct Arena {
+    total_delay: f64,
+    last: u64,
+    steps: u64,
+}
+
+impl Arena {
+    pub fn step_rep(&mut self) {
+        self.total_delay += self.last as f64; // deliberate violation
+        self.steps += 1; // integer accumulation is fine
+    }
+}
+
+impl StepAggregator {
+    pub fn push_step(&mut self, d: u64) {
+        self.area += d as f64; // allowed context: StepAggregator owns fp order
+    }
+}

@@ -1,0 +1,79 @@
+//! One deliberate violation per rule R1–R5, plus suppression behavior,
+//! each asserting the exact rule-name diagnostic.
+
+use std::path::PathBuf;
+
+use xtask::{lint_root, Violation};
+
+fn fixture(name: &str) -> Vec<Violation> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name);
+    lint_root(&root)
+}
+
+#[test]
+fn r1_observe_path_rng_draw() {
+    let v = fixture("r1");
+    assert_eq!(v.len(), 1, "diagnostics: {v:?}");
+    assert_eq!(v[0].rule.name(), "R1");
+    assert_eq!(v[0].file, "coordinator/policy.rs");
+    assert_eq!(v[0].line, 11);
+    assert!(v[0].msg.contains("observe_completion"), "{}", v[0].msg);
+}
+
+#[test]
+fn r2_hashmap_in_deterministic_module() {
+    let v = fixture("r2");
+    assert_eq!(v.len(), 1, "diagnostics: {v:?}");
+    assert_eq!(v[0].rule.name(), "R2");
+    assert_eq!(v[0].file, "simulator/state.rs");
+    assert_eq!(v[0].line, 4);
+}
+
+#[test]
+fn r3_instant_in_deterministic_module() {
+    let v = fixture("r3");
+    assert_eq!(v.len(), 1, "diagnostics: {v:?}");
+    assert_eq!(v[0].rule.name(), "R3");
+    assert_eq!(v[0].file, "simulator/clock.rs");
+    assert_eq!(v[0].line, 4);
+}
+
+#[test]
+fn r4_bare_literal_seed() {
+    let v = fixture("r4");
+    assert_eq!(v.len(), 1, "diagnostics: {v:?}");
+    assert_eq!(v[0].rule.name(), "R4");
+    assert_eq!(v[0].file, "coordinator/experiment.rs");
+    assert_eq!(v[0].line, 5, "keyed construction below must not fire");
+}
+
+#[test]
+fn r5_bare_float_accumulation() {
+    let v = fixture("r5");
+    assert_eq!(v.len(), 1, "diagnostics: {v:?}");
+    assert_eq!(v[0].rule.name(), "R5");
+    assert_eq!(v[0].file, "simulator/engine/accum.rs");
+    assert_eq!(v[0].line, 12, "StepAggregator impl below must not fire");
+}
+
+#[test]
+fn valid_lint_allow_suppresses() {
+    let v = fixture("allowed");
+    assert!(v.is_empty(), "expected clean, got: {v:?}");
+}
+
+#[test]
+fn lint_allow_without_reason_is_rejected() {
+    let v = fixture("missing_reason");
+    let rules: Vec<&str> = v.iter().map(|v| v.rule.name()).collect();
+    assert!(
+        rules.contains(&"lint-allow-syntax"),
+        "missing reason must be diagnosed: {v:?}"
+    );
+    assert!(
+        rules.contains(&"R2"),
+        "malformed allow must not suppress: {v:?}"
+    );
+}

@@ -1,0 +1,19 @@
+//! The determinism lint must pass clean on the real crate — the same
+//! invariant the CI `static-analysis` job gates merges on.
+
+use std::path::PathBuf;
+
+#[test]
+fn fedqueue_src_is_lint_clean() {
+    let src = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../src");
+    let violations = xtask::lint_root(&src);
+    assert!(
+        violations.is_empty(),
+        "determinism lint violations in src/:\n{}",
+        violations
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
