@@ -20,7 +20,7 @@
 
 use fedqueue::coordinator::StaticPolicy;
 use fedqueue::simulator::{
-    run_batch, run_with_policy, EngineConfig, ServiceDist, ServiceFamily, SimConfig,
+    run_batch, run_with_policy, ChurnConfig, EngineConfig, ServiceDist, ServiceFamily, SimConfig,
 };
 use fedqueue::util::bench::{black_box, Bencher, JsonReport};
 use fedqueue::util::cli::Args;
@@ -179,6 +179,33 @@ fn main() {
         batched / loop_heap,
         batched / loop_soa
     );
+
+    // churn overhead: the same heap replication with the open-network
+    // lifecycle stream off and on.  The churn-off number is the cross-PR
+    // anchor — the CI perf-trajectory diff over the BENCH artifacts holds
+    // it within 5% of the pre-churn baseline's engine/heap/n=10000 entry;
+    // that gate lives in the artifact diff, not in this binary.
+    let (n, c, steps) = (10_000usize, 10_000usize, 20_000u64);
+    let off = cfg(n, c, steps, EngineConfig::heap());
+    let mut on = off.clone();
+    on.churn = Some(ChurnConfig {
+        arrival_rate: 0.8,
+        mean_lifetime: 40.0,
+        stall_rate: 0.3,
+        mean_stall: 2.0,
+        rate_change_rate: 0.5,
+        rate_factor_min: 0.5,
+        rate_factor_max: 2.0,
+        initial_active: 0,
+        max_events: 10_000,
+    });
+    let churn_off = bench_replication(&b, &mut report, &format!("churn/off/heap/n={n}"), &off);
+    let churn_on = bench_replication(&b, &mut report, &format!("churn/on/heap/n={n}"), &on);
+    println!(
+        "    == n={n}: churn-on runs at {:.2}x of churn-off throughput",
+        churn_on / churn_off
+    );
+    report.speedup("churn_on_vs_off_heap_n=10000", churn_on / churn_off);
 
     let (heap, sharded) = shard_gate.expect("n = 100_000 case always runs");
     let shard_speedup = sharded / heap;

@@ -19,7 +19,7 @@ use crate::data::{generate, EvalBatches, Partition, PartitionScheme, SynthSpec};
 use crate::fl::{ServerStrategy, StrategyParams, StrategyRegistry};
 use crate::queueing::{ClosedNetwork, MiEstimator};
 use crate::runtime::{make_backend, BackendKind};
-use crate::simulator::{InitPlacement, ServiceDist, ServiceFamily, SimConfig};
+use crate::simulator::{ChurnConfig, InitPlacement, ServiceDist, ServiceFamily, SimConfig};
 use crate::util::rng::Rng;
 use crate::util::stats::Welford;
 use crate::util::toml::Doc;
@@ -69,6 +69,8 @@ pub struct Experiment {
     pub classes_per_client: usize,
     pub eval_every: u64,
     pub seed: u64,
+    /// optional open-network node lifecycle (None = closed network)
+    pub churn: Option<ChurnConfig>,
 }
 
 impl Experiment {
@@ -99,6 +101,7 @@ impl Experiment {
                 classes_per_client: 7,
                 eval_every: 20,
                 seed: 0,
+                churn: None,
             },
         }
     }
@@ -194,7 +197,14 @@ impl Experiment {
                 ],
                 "policy" => &["kind", "p_fast", "gamma", "beta"],
                 "strategy" => &["fedbuff_z", "fedavg_s", "favano_interval", "kappa"],
-                other => return Err(format!("unknown table [{other}] (experiment|policy|strategy)")),
+                // [churn] keys are validated (strictly) by
+                // ChurnConfig::from_toml_table — one authority, no drift
+                "churn" => continue,
+                other => {
+                    return Err(format!(
+                        "unknown table [{other}] (experiment|policy|strategy|churn)"
+                    ))
+                }
             };
             for k in keys.keys() {
                 if !known.contains(&k.as_str()) {
@@ -231,6 +241,9 @@ impl Experiment {
             .damping_kappa(float("strategy", "kappa", 0.5)?);
         if doc.get("policy", "p_fast").is_some() {
             b = b.p_fast(float("policy", "p_fast", 0.0)?);
+        }
+        if let Some(tbl) = doc.tables.get("churn") {
+            b = b.churn(ChurnConfig::from_toml_table(tbl)?);
         }
         b.build()
     }
@@ -341,6 +354,9 @@ impl Experiment {
                 policies.names().join("|")
             ));
         }
+        if let Some(churn) = &self.churn {
+            churn.validate(self.n_clients)?;
+        }
         Ok(())
     }
 
@@ -395,6 +411,7 @@ impl Experiment {
         let sim = SimConfig {
             seed: self.seed ^ 0x51AA,
             init: InitPlacement::Routed,
+            churn: self.churn.clone(),
             ..SimConfig::new(
                 policy.probs(),
                 ServiceDist::from_rates(&self.rates(), ServiceFamily::Exponential),
@@ -548,6 +565,12 @@ impl ExperimentBuilder {
 
     pub fn seed(mut self, s: u64) -> Self {
         self.exp.seed = s;
+        self
+    }
+
+    /// Open-network node lifecycle for the queueing substrate.
+    pub fn churn(mut self, c: ChurnConfig) -> Self {
+        self.exp.churn = Some(c);
         self
     }
 
@@ -709,6 +732,31 @@ kappa = 0.25
         assert_eq!(exp.beta, 0.7);
         assert_eq!(exp.kappa, 0.25);
         assert_eq!(exp.seed, 9);
+    }
+
+    #[test]
+    fn scenario_churn_block_round_trips_and_validates() {
+        let text = r#"
+[experiment]
+clients = 12
+
+[churn]
+arrival_rate = 0.5
+mean_lifetime = 2.0
+initial_active = 10
+"#;
+        let exp = Experiment::from_toml(text).unwrap();
+        let churn = exp.churn.as_ref().expect("[churn] table parsed");
+        assert_eq!(churn.arrival_rate, 0.5);
+        assert_eq!(churn.mean_lifetime, 2.0);
+        assert_eq!(churn.initial_active, 10);
+        // no [churn] table -> closed network (the historical default)
+        assert!(Experiment::builder().build().unwrap().churn.is_none());
+        // strict keys inside the table, validation against the client count
+        let err = Experiment::from_toml("[churn]\nbogus = 1.0").unwrap_err();
+        assert!(err.contains("bogus"), "{err}");
+        let err = Experiment::from_toml("[churn]\ninitial_active = 25").unwrap_err();
+        assert!(err.contains("initial_active"), "{err}");
     }
 
     #[test]

@@ -46,7 +46,7 @@
 
 use crate::bound::{BoundParams, MiSource, TwoClusterStudy};
 use crate::util::rng::{AliasTable, Rng};
-use crate::util::sampler::{linear_route, FenwickSampler};
+use crate::util::sampler::{linear_route, masked_linear_route, FenwickSampler};
 
 /// The routing-distribution interface consulted by the simulator.
 ///
@@ -101,6 +101,23 @@ pub trait SamplingPolicy {
     /// (see `simulator::engine`).
     fn observe_completion(&mut self, _node: usize, _delay_steps: u64, _delay_time: f64) {}
 
+    /// Membership channel, join side: node `node` (re)entered the network
+    /// and must return to the routing support, with any per-node adaptive
+    /// state (delay EWMA, queue tilt) reset to its fresh-node value.
+    ///
+    /// Like [`Self::observe_completion`], this fires on the central
+    /// dispatcher path of every engine — implementations MUST NOT consume
+    /// RNG (enforced statically by `cargo xtask lint` rule R1 and by
+    /// debug-build routing-stream fingerprint guards in all three
+    /// engines); default no-op for membership-oblivious policies.
+    fn observe_join(&mut self, _node: usize) {}
+
+    /// Membership channel, leave side: node `node` departed and must be
+    /// removed from the routing support — `route` may never select it and
+    /// `prob_of` must report 0 until a matching `observe_join`. Same
+    /// RNG-free contract as [`Self::observe_join`].
+    fn observe_leave(&mut self, _node: usize) {}
+
     /// Sample the next node K_{k+1} from the distribution in force.
     fn route(&mut self, rng: &mut Rng) -> usize;
 }
@@ -113,6 +130,13 @@ pub struct StaticPolicy {
     label: String,
     p: Vec<f64>,
     alias: AliasTable,
+    /// membership mask under churn: `route` restricts to active nodes
+    active: Vec<bool>,
+    inactive: usize,
+    /// Σ p_i over active nodes, maintained incrementally on join/leave —
+    /// every engine applies the identical +=/-= sequence, so the drift is
+    /// bit-identical and the masked draws stay in lockstep.
+    active_mass: f64,
 }
 
 impl StaticPolicy {
@@ -122,7 +146,16 @@ impl StaticPolicy {
 
     pub fn labeled(label: &str, p: Vec<f64>) -> Result<StaticPolicy, String> {
         let alias = AliasTable::new(&p)?;
-        Ok(StaticPolicy { label: label.to_string(), p, alias })
+        let n = p.len();
+        let active_mass = p.iter().sum();
+        Ok(StaticPolicy {
+            label: label.to_string(),
+            p,
+            alias,
+            active: vec![true; n],
+            inactive: 0,
+            active_mass,
+        })
     }
 
     pub fn uniform(n: usize) -> Result<StaticPolicy, String> {
@@ -143,11 +176,21 @@ impl SamplingPolicy for StaticPolicy {
     }
 
     fn prob_of(&self, i: usize) -> f64 {
-        self.p[i]
+        if self.inactive == 0 {
+            self.p[i]
+        } else if self.active[i] {
+            self.p[i] / self.active_mass
+        } else {
+            0.0
+        }
     }
 
     fn probs(&self) -> Vec<f64> {
-        self.p.clone()
+        if self.inactive == 0 {
+            self.p.clone()
+        } else {
+            (0..self.p.len()).map(|i| self.prob_of(i)).collect()
+        }
     }
 
     fn incremental(&self) -> bool {
@@ -155,8 +198,34 @@ impl SamplingPolicy for StaticPolicy {
         true
     }
 
+    fn observe_join(&mut self, node: usize) {
+        if self.active[node] {
+            return;
+        }
+        self.active[node] = true;
+        self.inactive -= 1;
+        self.active_mass += self.p[node];
+    }
+
+    fn observe_leave(&mut self, node: usize) {
+        if !self.active[node] {
+            return;
+        }
+        self.active[node] = false;
+        self.inactive += 1;
+        self.active_mass -= self.p[node];
+    }
+
     fn route(&mut self, rng: &mut Rng) -> usize {
-        self.alias.sample(rng)
+        if self.inactive == 0 {
+            // full membership: the historical O(1) alias path, untouched
+            // draw-for-draw (two uniforms per sample)
+            self.alias.sample(rng)
+        } else {
+            // membership-restricted: one-uniform masked CDF scan over the
+            // conditioned distribution p_i / active_mass
+            masked_linear_route(&self.p, &self.active, self.active_mass, rng.uniform())
+        }
     }
 }
 
@@ -198,6 +267,13 @@ pub struct FenwickAdaptivePolicy {
     base_alias: AliasTable,
     /// number of leaves with a strictly positive tilted weight
     positive: usize,
+    /// membership mask under churn; departed leaves hold weight 0
+    active: Vec<bool>,
+    inactive: usize,
+    /// Σ base_i over active nodes — the mass behind the masked
+    /// all-underflowed fallback (the base alias covers departed nodes,
+    /// so it is only safe at full membership)
+    active_base_mass: f64,
 }
 
 impl FenwickAdaptivePolicy {
@@ -206,7 +282,18 @@ impl FenwickAdaptivePolicy {
         let sampler = FenwickSampler::new(&base)?;
         let base_alias = AliasTable::new(&base)?;
         let positive = base.iter().filter(|&&b| b > 0.0).count();
-        Ok(FenwickAdaptivePolicy { base, gamma, sampler, base_alias, positive })
+        let n = base.len();
+        let active_base_mass = base.iter().sum();
+        Ok(FenwickAdaptivePolicy {
+            base,
+            gamma,
+            sampler,
+            base_alias,
+            positive,
+            active: vec![true; n],
+            inactive: 0,
+            active_base_mass,
+        })
     }
 
     fn tilt(&self, node: usize, len: u32) -> f64 {
@@ -215,6 +302,17 @@ impl FenwickAdaptivePolicy {
             w
         } else {
             0.0
+        }
+    }
+
+    /// Write `w` into the node's leaf, maintaining the positive-leaf count.
+    fn set_weight(&mut self, node: usize, w: f64) {
+        let was = self.sampler.weight(node) > 0.0;
+        self.sampler.set(node, w);
+        match (was, w > 0.0) {
+            (true, false) => self.positive -= 1,
+            (false, true) => self.positive += 1,
+            _ => {}
         }
     }
 }
@@ -230,7 +328,15 @@ impl SamplingPolicy for FenwickAdaptivePolicy {
 
     fn prob_of(&self, i: usize) -> f64 {
         if self.positive == 0 {
-            return self.base[i];
+            // all-underflowed fallback: the (membership-conditioned) base
+            if self.inactive == 0 {
+                return self.base[i];
+            }
+            return if self.active[i] {
+                self.base[i] / self.active_base_mass
+            } else {
+                0.0
+            };
         }
         self.sampler.weight(i) / self.sampler.total()
     }
@@ -242,23 +348,56 @@ impl SamplingPolicy for FenwickAdaptivePolicy {
     }
 
     fn observe_node(&mut self, node: usize, len: u32) {
-        let w = self.tilt(node, len);
-        let was = self.sampler.weight(node) > 0.0;
-        self.sampler.set(node, w);
-        match (was, w > 0.0) {
-            (true, false) => self.positive -= 1,
-            (false, true) => self.positive += 1,
-            _ => {}
+        if !self.active[node] {
+            // departed leaves stay pinned at weight 0
+            return;
         }
+        let w = self.tilt(node, len);
+        self.set_weight(node, w);
     }
 
     fn incremental(&self) -> bool {
         true
     }
 
+    fn observe_join(&mut self, node: usize) {
+        if self.active[node] {
+            return;
+        }
+        self.active[node] = true;
+        self.inactive -= 1;
+        self.active_base_mass += self.base[node];
+        // a (re)joined node starts with an empty queue: fresh tilt at X=0
+        let w = self.tilt(node, 0);
+        self.set_weight(node, w);
+    }
+
+    fn observe_leave(&mut self, node: usize) {
+        if !self.active[node] {
+            return;
+        }
+        self.active[node] = false;
+        self.inactive += 1;
+        self.active_base_mass -= self.base[node];
+        self.set_weight(node, 0.0);
+    }
+
     fn route(&mut self, rng: &mut Rng) -> usize {
         if self.positive == 0 {
-            return self.base_alias.sample(rng);
+            // All-underflowed fallback. At full membership the pre-built
+            // base alias is exact; under churn it would put mass on
+            // departed nodes (stale support — the mass-collapse bug), so
+            // the masked one-uniform scan conditions the base on the
+            // active set instead.
+            if self.inactive == 0 {
+                return self.base_alias.sample(rng);
+            }
+            return masked_linear_route(
+                &self.base,
+                &self.active,
+                self.active_base_mass,
+                rng.uniform(),
+            );
         }
         self.sampler.sample(rng)
     }
@@ -272,12 +411,43 @@ pub struct AdaptiveQueuePolicy {
     base: Vec<f64>,
     gamma: f64,
     probs: Vec<f64>,
+    /// membership mask under churn; departed nodes carry zero probability
+    active: Vec<bool>,
 }
 
 impl AdaptiveQueuePolicy {
     pub fn new(base: Vec<f64>, gamma: f64) -> Result<AdaptiveQueuePolicy, String> {
         validate_adaptive(&base, gamma)?;
-        Ok(AdaptiveQueuePolicy { probs: base.clone(), base, gamma })
+        let n = base.len();
+        Ok(AdaptiveQueuePolicy {
+            probs: base.clone(),
+            active: vec![true; n],
+            base,
+            gamma,
+        })
+    }
+
+    /// Zero masked entries and renormalize — keeps `prob_of` coherent
+    /// between bulk observations when membership changes.
+    fn renormalize_masked(&mut self) {
+        let mut total = 0.0f64;
+        for (pi, &a) in self.probs.iter_mut().zip(self.active.iter()) {
+            if !a {
+                *pi = 0.0;
+            }
+            total += *pi;
+        }
+        if !(total > 0.0) || !total.is_finite() {
+            // masked-base fallback: the active slice of the base
+            total = 0.0;
+            for (i, pi) in self.probs.iter_mut().enumerate() {
+                *pi = if self.active[i] { self.base[i] } else { 0.0 };
+                total += *pi;
+            }
+        }
+        for pi in self.probs.iter_mut() {
+            *pi /= total;
+        }
     }
 }
 
@@ -300,22 +470,49 @@ impl SamplingPolicy for AdaptiveQueuePolicy {
 
     fn observe(&mut self, queue_lens: &[u32]) {
         let mut total = 0.0f64;
-        for (pi, (&b, &q)) in self
+        for (i, (pi, (&b, &q))) in self
             .probs
             .iter_mut()
             .zip(self.base.iter().zip(queue_lens.iter()))
+            .enumerate()
         {
-            *pi = b * (-self.gamma * q as f64).exp();
+            *pi = if self.active[i] {
+                b * (-self.gamma * q as f64).exp()
+            } else {
+                0.0
+            };
             total += *pi;
         }
         if !(total > 0.0) || !total.is_finite() {
-            // all mass underflowed (enormous γ·X): fall back to the base
-            self.probs.copy_from_slice(&self.base);
-            total = self.probs.iter().sum();
+            // all active mass underflowed (enormous γ·X): fall back to
+            // the membership-masked base
+            total = 0.0;
+            for (i, pi) in self.probs.iter_mut().enumerate() {
+                *pi = if self.active[i] { self.base[i] } else { 0.0 };
+                total += *pi;
+            }
         }
         for pi in self.probs.iter_mut() {
             *pi /= total;
         }
+    }
+
+    fn observe_join(&mut self, node: usize) {
+        if self.active[node] {
+            return;
+        }
+        self.active[node] = true;
+        // fresh member, empty queue: tilt at X = 0 is the raw base mass
+        self.probs[node] = self.base[node];
+        self.renormalize_masked();
+    }
+
+    fn observe_leave(&mut self, node: usize) {
+        if !self.active[node] {
+            return;
+        }
+        self.active[node] = false;
+        self.renormalize_masked();
     }
 
     fn route(&mut self, rng: &mut Rng) -> usize {
@@ -362,6 +559,11 @@ pub struct FenwickDelayAdaptivePolicy {
     base_alias: AliasTable,
     /// number of leaves with a strictly positive tilted weight
     positive: usize,
+    /// membership mask under churn; departed leaves hold weight 0
+    active: Vec<bool>,
+    inactive: usize,
+    /// Σ base_i over active nodes — backs the masked underflow fallback
+    active_base_mass: f64,
 }
 
 impl FenwickDelayAdaptivePolicy {
@@ -375,6 +577,7 @@ impl FenwickDelayAdaptivePolicy {
         let base_alias = AliasTable::new(&base)?;
         let positive = base.iter().filter(|&&b| b > 0.0).count();
         let n = base.len();
+        let active_base_mass = base.iter().sum();
         Ok(FenwickDelayAdaptivePolicy {
             base,
             gamma,
@@ -383,6 +586,9 @@ impl FenwickDelayAdaptivePolicy {
             sampler,
             base_alias,
             positive,
+            active: vec![true; n],
+            inactive: 0,
+            active_base_mass,
         })
     }
 
@@ -399,6 +605,17 @@ impl FenwickDelayAdaptivePolicy {
             0.0
         }
     }
+
+    /// Write `w` into the node's leaf, maintaining the positive-leaf count.
+    fn set_weight(&mut self, node: usize, w: f64) {
+        let was = self.sampler.weight(node) > 0.0;
+        self.sampler.set(node, w);
+        match (was, w > 0.0) {
+            (true, false) => self.positive -= 1,
+            (false, true) => self.positive += 1,
+            _ => {}
+        }
+    }
 }
 
 impl SamplingPolicy for FenwickDelayAdaptivePolicy {
@@ -412,7 +629,15 @@ impl SamplingPolicy for FenwickDelayAdaptivePolicy {
 
     fn prob_of(&self, i: usize) -> f64 {
         if self.positive == 0 {
-            return self.base[i];
+            // all-underflowed fallback: the (membership-conditioned) base
+            if self.inactive == 0 {
+                return self.base[i];
+            }
+            return if self.active[i] {
+                self.base[i] / self.active_base_mass
+            } else {
+                0.0
+            };
         }
         self.sampler.weight(i) / self.sampler.total()
     }
@@ -423,20 +648,53 @@ impl SamplingPolicy for FenwickDelayAdaptivePolicy {
     }
 
     fn observe_completion(&mut self, node: usize, delay_steps: u64, _delay_time: f64) {
+        if !self.active[node] {
+            // departed leaves stay pinned at weight 0
+            return;
+        }
         self.ewma[node] = self.beta * self.ewma[node] + (1.0 - self.beta) * delay_steps as f64;
         let w = self.tilt(node);
-        let was = self.sampler.weight(node) > 0.0;
-        self.sampler.set(node, w);
-        match (was, w > 0.0) {
-            (true, false) => self.positive -= 1,
-            (false, true) => self.positive += 1,
-            _ => {}
+        self.set_weight(node, w);
+    }
+
+    fn observe_join(&mut self, node: usize) {
+        if self.active[node] {
+            return;
         }
+        self.active[node] = true;
+        self.inactive -= 1;
+        self.active_base_mass += self.base[node];
+        // a (re)joined node starts with a fresh delay estimate
+        self.ewma[node] = 0.0;
+        let w = self.tilt(node);
+        self.set_weight(node, w);
+    }
+
+    fn observe_leave(&mut self, node: usize) {
+        if !self.active[node] {
+            return;
+        }
+        self.active[node] = false;
+        self.inactive += 1;
+        self.active_base_mass -= self.base[node];
+        self.set_weight(node, 0.0);
     }
 
     fn route(&mut self, rng: &mut Rng) -> usize {
         if self.positive == 0 {
-            return self.base_alias.sample(rng);
+            // All-underflowed fallback (the delay-adaptive mass-collapse
+            // path): exact at full membership via the base alias, but the
+            // alias covers departed nodes, so under churn the masked
+            // one-uniform scan conditions the base on the active set.
+            if self.inactive == 0 {
+                return self.base_alias.sample(rng);
+            }
+            return masked_linear_route(
+                &self.base,
+                &self.active,
+                self.active_base_mass,
+                rng.uniform(),
+            );
         }
         self.sampler.sample(rng)
     }
@@ -452,6 +710,8 @@ pub struct DelayAdaptivePolicy {
     beta: f64,
     ewma: Vec<f64>,
     probs: Vec<f64>,
+    /// membership mask under churn; departed nodes carry zero probability
+    active: Vec<bool>,
 }
 
 impl DelayAdaptivePolicy {
@@ -461,6 +721,7 @@ impl DelayAdaptivePolicy {
         Ok(DelayAdaptivePolicy {
             probs: base.clone(),
             ewma: vec![0.0; n],
+            active: vec![true; n],
             base,
             gamma,
             beta,
@@ -470,6 +731,37 @@ impl DelayAdaptivePolicy {
     /// Current per-node delay estimates D̂ (diagnostics and tests).
     pub fn delay_estimates(&self) -> &[f64] {
         &self.ewma
+    }
+
+    /// Recompute the full distribution from (base, EWMA, membership) —
+    /// shared by the completion and membership channels, RNG-free.
+    fn recompute(&mut self) {
+        let mut total = 0.0f64;
+        for (i, (pi, (&b, &d))) in self
+            .probs
+            .iter_mut()
+            .zip(self.base.iter().zip(self.ewma.iter()))
+            .enumerate()
+        {
+            *pi = if self.active[i] {
+                b * (-self.gamma * d).exp()
+            } else {
+                0.0
+            };
+            total += *pi;
+        }
+        if !(total > 0.0) || !total.is_finite() {
+            // all active mass underflowed (enormous γ·D̂): fall back to
+            // the membership-masked base
+            total = 0.0;
+            for (i, pi) in self.probs.iter_mut().enumerate() {
+                *pi = if self.active[i] { self.base[i] } else { 0.0 };
+                total += *pi;
+            }
+        }
+        for pi in self.probs.iter_mut() {
+            *pi /= total;
+        }
     }
 }
 
@@ -495,24 +787,29 @@ impl SamplingPolicy for DelayAdaptivePolicy {
     }
 
     fn observe_completion(&mut self, node: usize, delay_steps: u64, _delay_time: f64) {
+        if !self.active[node] {
+            return;
+        }
         self.ewma[node] = self.beta * self.ewma[node] + (1.0 - self.beta) * delay_steps as f64;
-        let mut total = 0.0f64;
-        for (pi, (&b, &d)) in self
-            .probs
-            .iter_mut()
-            .zip(self.base.iter().zip(self.ewma.iter()))
-        {
-            *pi = b * (-self.gamma * d).exp();
-            total += *pi;
+        self.recompute();
+    }
+
+    fn observe_join(&mut self, node: usize) {
+        if self.active[node] {
+            return;
         }
-        if !(total > 0.0) || !total.is_finite() {
-            // all mass underflowed (enormous γ·D̂): fall back to the base
-            self.probs.copy_from_slice(&self.base);
-            total = self.probs.iter().sum();
+        self.active[node] = true;
+        // a (re)joined node starts with a fresh delay estimate
+        self.ewma[node] = 0.0;
+        self.recompute();
+    }
+
+    fn observe_leave(&mut self, node: usize) {
+        if !self.active[node] {
+            return;
         }
-        for pi in self.probs.iter_mut() {
-            *pi /= total;
-        }
+        self.active[node] = false;
+        self.recompute();
     }
 
     fn route(&mut self, rng: &mut Rng) -> usize {
@@ -1028,6 +1325,97 @@ mod tests {
         let err = reg.build("zipf", &c).unwrap_err();
         assert!(err.contains("unknown sampling policy"), "{err}");
         assert!(err.contains("adaptive"), "error must list names: {err}");
+    }
+
+    #[test]
+    fn static_policy_masks_departed_nodes() {
+        let p = vec![0.1, 0.2, 0.3, 0.4];
+        let mut pol = StaticPolicy::new(p.clone()).unwrap();
+        pol.observe_leave(3);
+        assert_eq!(pol.prob_of(3), 0.0);
+        let mass: f64 = 0.1 + 0.2 + 0.3;
+        assert!((pol.prob_of(1) - 0.2 / mass).abs() < 1e-12);
+        assert!((pol.probs().iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        let mut rng = Rng::new(5);
+        for _ in 0..20_000 {
+            assert_ne!(pol.route(&mut rng), 3, "departed node routed");
+        }
+        // idempotent double-leave, then a join restores the exact p
+        pol.observe_leave(3);
+        pol.observe_join(3);
+        pol.observe_join(3);
+        assert_eq!(pol.probs(), p);
+    }
+
+    #[test]
+    fn adaptive_policies_mask_departed_nodes() {
+        let base = vec![0.25; 4];
+        let mut fast = FenwickAdaptivePolicy::new(base.clone(), 0.5).unwrap();
+        let mut exact = AdaptiveQueuePolicy::new(base, 0.5).unwrap();
+        fast.observe_leave(1);
+        exact.observe_leave(1);
+        exact.observe(&[2, 0, 1, 0]);
+        fast.observe(&[2, 0, 1, 0]);
+        assert_eq!(fast.prob_of(1), 0.0);
+        assert_eq!(exact.prob_of(1), 0.0);
+        // observing the departed node's queue must not resurrect it
+        fast.observe_node(1, 0);
+        assert_eq!(fast.prob_of(1), 0.0);
+        let mut rng = Rng::new(9);
+        for _ in 0..20_000 {
+            assert_ne!(fast.route(&mut rng), 1);
+            assert_ne!(exact.route(&mut rng), 1);
+        }
+        // a join brings the node back with a fresh (empty-queue) tilt
+        fast.observe_join(1);
+        assert!(fast.prob_of(1) > 0.0);
+    }
+
+    #[test]
+    fn underflow_fallback_respects_membership() {
+        // the satellite bug: with every tilted weight underflowed AND a
+        // departed node, the fallback used to sample the FULL base alias,
+        // routing to the departed node
+        let base = vec![0.25; 4];
+        for leave_first in [true, false] {
+            let mut pol = FenwickAdaptivePolicy::new(base.clone(), 1e6).unwrap();
+            if leave_first {
+                pol.observe_leave(2);
+                pol.observe(&[1000, 1000, 0, 1000]);
+            } else {
+                pol.observe(&[1000, 1000, 1000, 1000]);
+                pol.observe_leave(2);
+            }
+            assert_eq!(pol.prob_of(2), 0.0);
+            assert!((pol.prob_of(0) - 1.0 / 3.0).abs() < 1e-12, "masked base");
+            let mut rng = Rng::new(11);
+            for _ in 0..20_000 {
+                let dest = pol.route(&mut rng);
+                assert_ne!(dest, 2, "mass-collapse fallback routed to a departed node");
+            }
+        }
+        // same collapse on the delay-feedback pair
+        let mut fast = FenwickDelayAdaptivePolicy::new(base.clone(), 1e6, 0.0).unwrap();
+        let mut exact = DelayAdaptivePolicy::new(base, 1e6, 0.0).unwrap();
+        for pol in [&mut fast as &mut dyn SamplingPolicy, &mut exact] {
+            pol.observe_leave(0);
+            for i in 1..4 {
+                pol.observe_completion(i, 1000, 1000.0);
+            }
+            assert_eq!(pol.prob_of(0), 0.0);
+            let mut rng = Rng::new(13);
+            for _ in 0..20_000 {
+                assert_ne!(pol.route(&mut rng), 0);
+            }
+            // completions reported for a departed node are ignored
+            pol.observe_completion(0, 1, 1.0);
+            assert_eq!(pol.prob_of(0), 0.0);
+            // rejoining resets the delay estimate: fresh node, full tilt
+            pol.observe_join(0);
+            assert!((pol.prob_of(0) - 1.0).abs() < 1e-12, "rejoined node holds the only live mass");
+        }
+        assert_eq!(fast.delay_estimates()[0], 0.0);
+        assert_eq!(exact.delay_estimates()[0], 0.0);
     }
 
     #[test]

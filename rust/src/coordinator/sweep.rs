@@ -55,6 +55,18 @@
 //! shards = 0                 # sharded-engine shard count (0 = auto)
 //! big_n = 100000             # clients >= big_n -> shard-level threads
 //! batch_width = 0            # replications per batch arena (0 = auto)
+//! pool_capacity = 0          # task-pool slots per replication (0 = concurrency)
+//!
+//! [churn]                    # optional open-network lifecycle (omit = closed)
+//! arrival_rate = 0.6         # join hazard while any node is departed
+//! mean_lifetime = 3.0        # mean membership duration before a leave
+//! stall_rate = 0.4           # stall hazard per running node
+//! mean_stall = 0.5           # mean stall duration
+//! rate_change_rate = 0.5     # markov-modulated service-rate switch hazard
+//! rate_factor_min = 0.5      # service-duration scale ~ U[min, max]
+//! rate_factor_max = 2.0
+//! initial_active = 0         # nodes live at t = 0 (0 = all)
+//! max_events = 10000         # schedule truncation cap
 //!
 //! [grid]                     # every axis is a list; cells = cartesian
 //! clients = [100, 1000]      # product x policies (x algos in train mode)
@@ -84,8 +96,8 @@ use super::policy::{optimal_two_cluster, PolicyCtx, PolicyRegistry, SamplingPoli
 use crate::coordinator::Experiment;
 use crate::runtime::BackendKind;
 use crate::simulator::{
-    run_batch, run_with_policy, EngineConfig, EngineKind, ServiceDist, ServiceFamily, SimConfig,
-    SimResult,
+    run_batch, run_with_policy, ChurnConfig, EngineConfig, EngineKind, ServiceDist, ServiceFamily,
+    SimConfig, SimResult,
 };
 use crate::util::json::Json;
 use crate::util::mem::peak_rss_mib;
@@ -281,6 +293,11 @@ pub struct SweepSpec {
     /// replications packed per batch arena on batch cells; 0 = auto (see
     /// [`SweepSpec::resolve_batch_width`])
     pub batch_width: usize,
+    /// task-pool slots per replication (0 = exactly `concurrency`); an
+    /// undersized pool surfaces as a typed cell error, never a panic
+    pub pool_capacity: usize,
+    /// optional open-network node lifecycle applied to every cell
+    pub churn: Option<ChurnConfig>,
     pub cells: Vec<SweepCell>,
     pub train: TrainKnobs,
 }
@@ -299,8 +316,11 @@ impl SweepSpec {
                 "" => &[],
                 "sweep" => &[
                     "name", "mode", "seeds", "base_seed", "threads", "out", "engine", "shards",
-                    "big_n", "batch_width",
+                    "big_n", "batch_width", "pool_capacity",
                 ],
+                // [churn] keys are validated (strictly) by
+                // ChurnConfig::from_toml_table — one authority, no drift
+                "churn" => continue,
                 "grid" => &[
                     "clients",
                     "concurrency",
@@ -323,7 +343,7 @@ impl SweepSpec {
                     "eval_every",
                     "kappa",
                 ],
-                other => return Err(format!("unknown table [{other}] (sweep|grid|train)")),
+                other => return Err(format!("unknown table [{other}] (sweep|grid|churn|train)")),
             };
             for k in keys.keys() {
                 if !known.contains(&k.as_str()) {
@@ -357,6 +377,16 @@ impl SweepSpec {
         if batch_width < 0 {
             return Err(format!("[sweep] batch_width = {batch_width} must be >= 0"));
         }
+        let pool_capacity = doc.i64_or("sweep", "pool_capacity", 0);
+        if pool_capacity < 0 {
+            return Err(format!("[sweep] pool_capacity = {pool_capacity} must be >= 0"));
+        }
+        // errors out of the churn parser/validator already carry their
+        // own "[churn]" context
+        let churn = match doc.tables.get("churn") {
+            Some(tbl) => Some(ChurnConfig::from_toml_table(tbl)?),
+            None => None,
+        };
 
         // grid axes: every key is a homogeneous list; absent = one default
         let ints = |key: &str, default: i64| -> Result<Vec<i64>, String> {
@@ -489,6 +519,9 @@ impl SweepSpec {
                                                     // fail at parse time,
                                                     // not after hours of
                                                     // other cells ran
+                                                    if let Some(c) = &churn {
+                                                        c.validate(scenario.clients)?;
+                                                    }
                                                     if pol == "optimal" {
                                                         let nf = scenario.n_fast();
                                                         if nf == 0 || nf >= scenario.clients {
@@ -548,6 +581,8 @@ impl SweepSpec {
             shards: shards as usize,
             big_n: big_n as u64,
             batch_width: batch_width as usize,
+            pool_capacity: pool_capacity as usize,
+            churn,
             cells,
             train,
         })
@@ -725,6 +760,9 @@ fn sim_metrics(s: &ScenarioPoint, res: &SimResult) -> BTreeMap<String, f64> {
     m.insert("queue_fast".into(), cluster_queue(0..nf));
     m.insert("queue_slow".into(), cluster_queue(nf..n));
     m.insert("step_rate".into(), res.step_rate(s.steps));
+    // completed-steps marker: tiny horizons can finish 0 steps, and 0 here
+    // is the defined signal that the delay/rate metrics averaged nothing
+    m.insert("steps".into(), res.completions.iter().sum::<u64>() as f64);
     m.insert("tau_c".into(), res.tau_c);
     m.insert("tau_max".into(), res.tau_max as f64);
     m.insert("total_time".into(), res.total_time);
@@ -755,6 +793,7 @@ fn sim_perf(steps: u64, wall: f64, batch_width: Option<u64>) -> BTreeMap<String,
 }
 
 fn simulate_replication(
+    spec: &SweepSpec,
     cell: &SweepCell,
     cached_p: Option<&[f64]>,
     engine: EngineConfig,
@@ -765,6 +804,8 @@ fn simulate_replication(
     let cfg = SimConfig {
         seed,
         engine,
+        churn: spec.churn.clone(),
+        pool_capacity: spec.pool_capacity,
         ..SimConfig::new(
             policy.probs(),
             ServiceDist::from_rates(&s.rates(), s.service),
@@ -790,9 +831,9 @@ fn simulate_replication(
 /// `stream_seed(base_seed, [cell, seed])` stream and is bit-identical to
 /// the heap oracle, so chunking is invisible in the deterministic report.
 fn simulate_cell_batch(
+    spec: &SweepSpec,
     cell: &SweepCell,
     cached_p: Option<&[f64]>,
-    base_seed: u64,
     seed_lo: u64,
     seed_hi: u64,
 ) -> Result<Vec<RepResult>, String> {
@@ -800,6 +841,8 @@ fn simulate_cell_batch(
     let first = cell_policy(cell, cached_p)?;
     let base = SimConfig {
         engine: EngineConfig::batch(),
+        churn: spec.churn.clone(),
+        pool_capacity: spec.pool_capacity,
         ..SimConfig::new(
             first.probs(),
             ServiceDist::from_rates(&s.rates(), s.service),
@@ -808,7 +851,7 @@ fn simulate_cell_batch(
         )
     };
     let seeds: Vec<u64> = (seed_lo..seed_hi)
-        .map(|idx| stream_seed(base_seed, &[cell.id as u64, idx]))
+        .map(|idx| stream_seed(spec.base_seed, &[cell.id as u64, idx]))
         .collect();
     let width = seeds.len() as u64;
     // lint-allow(R3): wall-clock feeds only the `perf` JSON block, which
@@ -884,7 +927,7 @@ fn run_replication(
     // scheduling-free by construction
     let seed = stream_seed(spec.base_seed, &[cell.id as u64, seed_idx]);
     match spec.mode {
-        SweepMode::Simulate => simulate_replication(cell, cached_p, engine, seed),
+        SweepMode::Simulate => simulate_replication(spec, cell, cached_p, engine, seed),
         SweepMode::Train => train_replication(cell, &spec.train, seed),
     }
 }
@@ -997,8 +1040,7 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
                     }
                     WorkItem::Chunk { cell, lo, hi } => {
                         let c = &spec.cells[cell];
-                        let out =
-                            simulate_cell_batch(c, cell_p[cell].as_deref(), spec.base_seed, lo, hi);
+                        let out = simulate_cell_batch(spec, c, cell_p[cell].as_deref(), lo, hi);
                         let mut slots = slots.lock().unwrap();
                         match out {
                             Ok(reps) => {
@@ -1323,6 +1365,34 @@ slow_fraction = [0.5]
 policies = ["uniform", "adaptive"]
 "#;
 
+    const CHURN_GRID: &str = r#"
+[sweep]
+name = "churn_smoke"
+mode = "simulate"
+seeds = 2
+base_seed = 11
+threads = 2
+
+[churn]
+arrival_rate = 0.6
+mean_lifetime = 3.0
+stall_rate = 0.4
+mean_stall = 0.5
+rate_change_rate = 0.5
+rate_factor_min = 0.5
+rate_factor_max = 2.0
+initial_active = 6
+max_events = 200
+
+[grid]
+clients = [8]
+concurrency = [4]
+steps = [300]
+mu_fast = [4.0]
+slow_fraction = [0.5]
+policies = ["uniform", "adaptive"]
+"#;
+
     #[test]
     fn parses_grid_and_builds_cells() {
         let spec = SweepSpec::from_toml(GRID).unwrap();
@@ -1372,6 +1442,63 @@ policies = ["uniform", "adaptive"]
             SweepSpec::from_toml("[grid]\nslow_fraction = [1.0]\npolicies = [\"optimal\"]")
                 .unwrap_err();
         assert!(err.contains("optimal"), "{err}");
+    }
+
+    #[test]
+    fn parses_churn_block_and_rejects_bad_knobs() {
+        let spec = SweepSpec::from_toml(CHURN_GRID).unwrap();
+        let churn = spec.churn.as_ref().expect("[churn] table parsed");
+        assert_eq!(churn.arrival_rate, 0.6);
+        assert_eq!(churn.initial_active, 6);
+        assert_eq!(spec.pool_capacity, 0, "defaults to concurrency");
+        // no [churn] table -> closed network
+        assert!(SweepSpec::from_toml(GRID).unwrap().churn.is_none());
+        // strict keys inside [churn], strict tables outside
+        let err = SweepSpec::from_toml("[churn]\nbogus = 1.0").unwrap_err();
+        assert!(err.contains("bogus"), "{err}");
+        let err = SweepSpec::from_toml("[chrun]\narrival_rate = 1.0").unwrap_err();
+        assert!(err.contains("chrun"), "{err}");
+        let err = SweepSpec::from_toml("[sweep]\npool_capacity = -1").unwrap_err();
+        assert!(err.contains("pool_capacity"), "{err}");
+        // churn knobs that can't serve the grid fail at parse time: 9
+        // initially-active nodes do not fit an 8-client scenario
+        let bad = CHURN_GRID.replace("initial_active = 6", "initial_active = 9");
+        let err = SweepSpec::from_toml(&bad).unwrap_err();
+        assert!(err.contains("initial_active"), "{err}");
+    }
+
+    #[test]
+    fn churn_sweep_is_engine_invariant() {
+        // the engine-equivalence contract must survive an open network:
+        // heap, sharded, and batch arenas aggregate to the identical
+        // deterministic JSON under nonzero churn
+        let render = |engine: &str, batch_width: usize| -> String {
+            let mut spec = SweepSpec::from_toml(CHURN_GRID).unwrap();
+            spec.engine = engine.to_string();
+            spec.shards = 3;
+            spec.batch_width = batch_width;
+            run_sweep(&spec).unwrap().to_json_deterministic().render()
+        };
+        let heap = render("heap", 0);
+        assert_eq!(heap, render("sharded", 0), "sharded vs heap under churn");
+        assert_eq!(heap, render("batch", 1), "width-1 batch arenas under churn");
+        assert_eq!(heap, render("batch", 2), "width-2 batch arenas under churn");
+    }
+
+    #[test]
+    fn pool_exhaustion_is_a_typed_sweep_error_not_a_panic() {
+        // a pool sized below the task population must abort the sweep with
+        // the typed EngineError surfaced through the cell-error path — on
+        // every engine the scheduler can pick
+        for engine in ["heap", "sharded", "batch"] {
+            let mut spec = SweepSpec::from_toml(GRID).unwrap();
+            spec.engine = engine.to_string();
+            spec.pool_capacity = 1; // < concurrency = 4
+            let err = run_sweep(&spec).unwrap_err();
+            assert!(err.contains("task pool exhausted"), "{engine}: {err}");
+            assert!(err.contains("capacity 1"), "{engine}: {err}");
+            assert!(err.contains("cell"), "{engine}: {err}");
+        }
     }
 
     #[test]

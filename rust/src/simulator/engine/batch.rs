@@ -40,9 +40,11 @@
 //! checks R ∈ {1, 4, 32} across all builtin policies).
 
 use super::calendar::{Event, ShardCalendar};
+use super::churn::{ChurnEvent, ChurnEventKind, ChurnRuntime};
 use super::soa::TaskPool;
 use super::{
-    initial_placements, service_duration, service_seed, EventEngine, StepAggregator, ROUTE_STREAM,
+    initial_placements, service_duration, service_seed, EngineError, EventEngine, StepAggregator,
+    ROUTE_STREAM,
 };
 use crate::coordinator::policy::SamplingPolicy;
 use crate::simulator::network::{SimConfig, SimResult, StepOutcome, TaskRecord};
@@ -62,6 +64,9 @@ struct PendingDraw {
     start: f64,
     /// the replication-local sequence number assigned at schedule time
     seq: u64,
+    /// the node's churn rate scale captured at schedule time (1.0 when
+    /// churn is off — `dur * 1.0` is IEEE-exact)
+    scale: f64,
 }
 
 /// R same-cell replications sharing one SoA arena.
@@ -89,6 +94,8 @@ pub(crate) struct BatchArena {
     busy: Vec<usize>,
     /// deferred draws of the current round
     pending: Vec<PendingDraw>,
+    /// per-replication open-network lifecycle state (None = closed)
+    churn: Option<Vec<ChurnRuntime>>,
     // reusable scratch for the vectorized sampler and bulk observation
     seed_buf: Vec<u64>,
     rate_buf: Vec<f64>,
@@ -127,6 +134,7 @@ impl BatchArena {
             }
         }
         let reps = seeds.len();
+        let cap = base.effective_pool_capacity();
         let exp_rates = base
             .service
             .iter()
@@ -139,7 +147,7 @@ impl BatchArena {
             n,
             service: base.service.clone(),
             exp_rates,
-            pool: TaskPool::new(reps * n, reps * base.concurrency),
+            pool: TaskPool::new(reps * n, reps * cap),
             svc_count: vec![0; reps * n],
             calendars: (0..reps).map(|_| ShardCalendar::new()).collect(),
             policies: Vec::new(),
@@ -153,6 +161,10 @@ impl BatchArena {
             step: vec![0; reps],
             busy: vec![0; reps],
             pending: Vec::with_capacity(2 * reps),
+            churn: base
+                .churn
+                .as_ref()
+                .map(|c| seeds.iter().map(|&s| ChurnRuntime::new(c, s, n)).collect()),
             seed_buf: Vec::new(),
             rate_buf: Vec::new(),
             dur_buf: Vec::new(),
@@ -162,9 +174,35 @@ impl BatchArena {
         // consume replication r's routing stream exactly as the heap
         // engine's constructor would
         for (r, policy) in policies.iter_mut().enumerate() {
+            // initially-departed nodes are masked out of replication r's
+            // policy BEFORE its placements are drawn — identical call
+            // sequence to the heap oracle on seed_r
+            if let Some(ch) = &arena.churn {
+                #[cfg(debug_assertions)]
+                let route_fp = arena.route_rng[r].state_fingerprint();
+                for i in 0..n {
+                    if ch[r].departed[i] {
+                        policy.observe_leave(i);
+                    }
+                }
+                #[cfg(debug_assertions)]
+                debug_assert_eq!(
+                    route_fp,
+                    arena.route_rng[r].state_fingerprint(),
+                    "observe_leave moved the routing stream (policy '{}')",
+                    policy.name()
+                );
+            }
             let placements = initial_placements(base, policy.as_mut(), &mut arena.route_rng[r]);
-            for (node, prob) in placements {
-                let len = arena.pool.push(r * n + node, 0, 0.0, prob);
+            for (placed, (node, prob)) in placements.into_iter().enumerate() {
+                // mirror the heap oracle's per-replication capacity check
+                if placed >= cap {
+                    return Err(EngineError::PoolExhausted { node, capacity: cap }.to_string());
+                }
+                let len = arena
+                    .pool
+                    .try_push(r * n + node, 0, 0.0, prob)
+                    .map_err(|e| e.to_string())?;
                 if len == 1 {
                     arena.busy[r] += 1;
                     arena.schedule(r, node, 0.0);
@@ -192,13 +230,41 @@ impl BatchArena {
         let count = self.svc_count[gi];
         self.svc_count[gi] = count + 1;
         self.seq[r] += 1;
+        let mut scale = 1.0;
+        if let Some(ch) = &mut self.churn {
+            let rt = &mut ch[r];
+            rt.pending_seq[node] = self.seq[r];
+            scale = rt.rate_scale[node];
+        }
         self.pending.push(PendingDraw {
             rep: r as u32,
             node: node as u32,
             count,
             start,
             seq: self.seq[r],
+            scale,
         });
+    }
+
+    /// Schedule a churn-triggered service start *immediately* (scalar
+    /// keyed draw straight into the calendar).  Lifecycle events need the
+    /// completion in place before the prelude's next front comparison, so
+    /// they bypass the round's deferred block; the key fully determines
+    /// the duration, so the value is bit-identical either way.
+    fn schedule_now(&mut self, r: usize, node: usize, start: f64) {
+        let gi = r * self.n + node;
+        let count = self.svc_count[gi];
+        self.svc_count[gi] = count + 1;
+        self.seq[r] += 1;
+        let seq = self.seq[r];
+        let mut scale = 1.0;
+        if let Some(ch) = &mut self.churn {
+            let rt = &mut ch[r];
+            rt.pending_seq[node] = seq;
+            scale = rt.rate_scale[node];
+        }
+        let dur = service_duration(self.svc_base[r], &self.service[node], node as u32, count);
+        self.calendars[r].push(Event { time: start + dur * scale, seq, node: node as u32 });
     }
 
     /// Resolve every deferred draw of the round and push the completion
@@ -223,7 +289,7 @@ impl BatchArena {
             batch_exponential(&self.seed_buf, &self.rate_buf, &mut self.dur_buf);
             for (p, &dur) in self.pending.iter().zip(&self.dur_buf) {
                 self.calendars[p.rep as usize].push(Event {
-                    time: p.start + dur,
+                    time: p.start + dur * p.scale,
                     seq: p.seq,
                     node: p.node,
                 });
@@ -237,7 +303,7 @@ impl BatchArena {
                     p.count,
                 );
                 self.calendars[p.rep as usize].push(Event {
-                    time: p.start + dur,
+                    time: p.start + dur * p.scale,
                     seq: p.seq,
                     node: p.node,
                 });
@@ -246,11 +312,151 @@ impl BatchArena {
         self.pending.clear();
     }
 
+    /// Merge to replication `r`'s next *valid* completion, applying every
+    /// lifecycle event that precedes it (churn-first at timestamp ties,
+    /// schedule order at equal times).  Shared prelude contract of all
+    /// engines.
+    fn next_completion(&mut self, r: usize) -> Option<Event> {
+        if self.churn.is_none() {
+            return self.calendars[r].pop();
+        }
+        self.churn.as_mut().unwrap()[r].log.clear();
+        loop {
+            // lazy cancellation: drop calendar fronts whose seq a stall /
+            // leave invalidated
+            loop {
+                let (_, seq, node) = self.calendars[r].front();
+                if seq == u64::MAX || self.churn.as_ref().unwrap()[r].is_live(node, seq) {
+                    break;
+                }
+                self.calendars[r].pop();
+            }
+            let front = self.calendars[r].front();
+            let tcomp = if front.1 == u64::MAX { f64::INFINITY } else { front.0 };
+            let tchurn = self.churn.as_ref().unwrap()[r].next_time();
+            if tchurn <= tcomp && tchurn.is_finite() {
+                let ev = self.churn.as_mut().unwrap()[r].pop().unwrap();
+                self.now[r] = ev.time;
+                self.apply_churn(r, ev);
+                continue;
+            }
+            let ev = self.calendars[r].pop()?;
+            self.churn.as_mut().unwrap()[r].pending_seq[ev.node as usize] = 0;
+            return Some(ev);
+        }
+    }
+
+    /// Apply one lifecycle event to replication `r` (same semantics and
+    /// policy call order as the heap oracle's `apply_churn`).
+    fn apply_churn(&mut self, r: usize, ev: ChurnEvent) {
+        let t = ev.time;
+        match ev.kind {
+            ChurnEventKind::Join { node } => {
+                {
+                    let rt = &mut self.churn.as_mut().unwrap()[r];
+                    rt.departed[node as usize] = false;
+                    rt.stalled[node as usize] = false;
+                    rt.rate_scale[node as usize] = 1.0;
+                    // svc_count is NOT reset: duration keys stay unique
+                }
+                #[cfg(debug_assertions)]
+                let route_fp = self.route_rng[r].state_fingerprint();
+                self.policies[r].observe_join(node as usize);
+                #[cfg(debug_assertions)]
+                debug_assert_eq!(
+                    route_fp,
+                    self.route_rng[r].state_fingerprint(),
+                    "observe_join moved the routing stream (policy '{}')",
+                    self.policies[r].name()
+                );
+            }
+            ChurnEventKind::Leave { node } => self.apply_leave(r, node, t),
+            ChurnEventKind::Stall { node } => {
+                let gi = r * self.n + node as usize;
+                let rt = &mut self.churn.as_mut().unwrap()[r];
+                rt.stalled[node as usize] = true;
+                // cancel the in-flight completion; the queue freezes
+                rt.pending_seq[node as usize] = 0;
+                if self.pool.qlen(gi) > 0 {
+                    self.busy[r] -= 1;
+                }
+            }
+            ChurnEventKind::Rejoin { node } => {
+                self.churn.as_mut().unwrap()[r].stalled[node as usize] = false;
+                if self.pool.qlen(r * self.n + node as usize) > 0 {
+                    self.busy[r] += 1;
+                    self.schedule_now(r, node as usize, t);
+                }
+            }
+            ChurnEventKind::SetRate { node, scale } => {
+                self.churn.as_mut().unwrap()[r].rate_scale[node as usize] = scale;
+            }
+        }
+    }
+
+    /// A member departs from replication `r`: mask it from the policy,
+    /// then re-route its queued tasks one at a time, each keeping its
+    /// original dispatch identity (a hand-off, not a new dispatch).
+    fn apply_leave(&mut self, r: usize, node: u32, t: f64) {
+        let ni = node as usize;
+        let gi = r * self.n + ni;
+        {
+            let qlen = self.pool.qlen(gi);
+            let rt = &mut self.churn.as_mut().unwrap()[r];
+            rt.pending_seq[ni] = 0;
+            if qlen > 0 && !rt.stalled[ni] {
+                self.busy[r] -= 1;
+            }
+            rt.departed[ni] = true;
+            rt.stalled[ni] = false;
+        }
+        #[cfg(debug_assertions)]
+        let route_fp = self.route_rng[r].state_fingerprint();
+        self.policies[r].observe_leave(ni);
+        #[cfg(debug_assertions)]
+        debug_assert_eq!(
+            route_fp,
+            self.route_rng[r].state_fingerprint(),
+            "observe_leave moved the routing stream (policy '{}')",
+            self.policies[r].name()
+        );
+        let incremental = self.policies[r].incremental();
+        while self.pool.qlen(gi) > 0 {
+            let (d_step, d_time, d_prob, _rem) = self.pool.pop(gi);
+            if !incremental {
+                self.lens_buf.clear();
+                self.lens_buf
+                    .extend_from_slice(self.pool.qlens_of(r * self.n, self.n));
+                self.policies[r].observe(&self.lens_buf);
+            }
+            let dest = self.policies[r].route(&mut self.route_rng[r]);
+            let dlen = self.pool.push(r * self.n + dest, d_step, d_time, d_prob);
+            let dest_stalled = self.churn.as_ref().unwrap()[r].stalled[dest];
+            if dlen == 1 && !dest_stalled {
+                self.busy[r] += 1;
+                self.schedule_now(r, dest, t);
+            }
+            if incremental {
+                self.policies[r].observe_node(dest, dlen);
+            }
+            self.churn.as_mut().unwrap()[r].log.push((t, dest as u32, dlen));
+        }
+        self.churn.as_mut().unwrap()[r].log.push((t, node, 0));
+    }
+
+    /// Replication `r`'s queue-delta log from its latest `step_rep`.
+    pub(crate) fn churn_deltas_of(&self, r: usize) -> &[(f64, u32, u32)] {
+        match &self.churn {
+            Some(ch) => &ch[r].log,
+            None => &[],
+        }
+    }
+
     /// Advance replication `r` one CS step.  Scheduled services are only
     /// *deferred*, not yet in the calendar — callers must `flush_pending`
     /// before stepping any replication again.
     pub(crate) fn step_rep(&mut self, r: usize) -> Option<StepOutcome> {
-        let ev = self.calendars[r].pop()?;
+        let ev = self.next_completion(r)?;
         self.now[r] = ev.time;
         let node = ev.node as usize;
         let (d_step, d_time, d_prob, new_len) = self.pool.pop(r * self.n + node);
@@ -301,7 +507,11 @@ impl BatchArena {
         let next_len = self
             .pool
             .push(r * self.n + next, self.step[r] + 1, ev.time, next_prob);
-        if next_len == 1 {
+        let next_stalled = self
+            .churn
+            .as_ref()
+            .is_some_and(|ch| ch[r].stalled[next]);
+        if next_len == 1 && !next_stalled {
             self.busy[r] += 1;
             self.schedule(r, next, ev.time);
         }
@@ -356,6 +566,9 @@ pub fn run_batch(
         // then the round's service draws resolve as one sampled block
         for (r, agg) in aggs.iter_mut().enumerate() {
             let out = arena.step_rep(r).ok_or("network drained")?;
+            // lifecycle queue deltas (leave drains) precede the step's own
+            // flushes — same feed order as the single-run collect loop
+            agg.apply_churn_deltas(arena.churn_deltas_of(r));
             let i = out.completed_node as usize;
             let j = out.next_node as usize;
             agg.push_step(
@@ -416,6 +629,10 @@ impl EventEngine for SingleBatch {
 
     fn policy_name(&self) -> String {
         self.arena.policies[0].name()
+    }
+
+    fn churn_deltas(&self) -> &[(f64, u32, u32)] {
+        self.arena.churn_deltas_of(0)
     }
 }
 
@@ -507,6 +724,48 @@ mod tests {
             assert_eq!(got.total_time.to_bits(), want.total_time.to_bits(), "rep {r}");
             assert_eq!(got.completions, want.completions, "rep {r}");
         }
+    }
+
+    #[test]
+    fn churny_batched_replications_match_the_heap_oracle() {
+        use crate::simulator::engine::churn::ChurnConfig;
+        let mut base = cfg(8, 5, 500, ServiceFamily::Exponential);
+        base.churn = Some(ChurnConfig {
+            arrival_rate: 0.7,
+            mean_lifetime: 2.0,
+            stall_rate: 0.5,
+            mean_stall: 0.4,
+            rate_change_rate: 0.5,
+            rate_factor_min: 0.5,
+            rate_factor_max: 2.0,
+            initial_active: 6,
+            max_events: 200,
+        });
+        let seeds = [31u64, 32, 33, 34];
+        let results = run_batch(&base, &seeds, |_| Ok(static_policy(8))).unwrap();
+        for (r, got) in results.iter().enumerate() {
+            let want = heap_oracle(&base, seeds[r]);
+            assert_eq!(got.total_time.to_bits(), want.total_time.to_bits(), "rep {r}");
+            assert_eq!(got.completions, want.completions, "rep {r}");
+            for i in 0..8 {
+                // bit-equal time-weighted queue averages also pin the
+                // aggregator's churn-delta feed on both engines
+                assert_eq!(
+                    got.mean_queue[i].to_bits(),
+                    want.mean_queue[i].to_bits(),
+                    "rep {r} node {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn undersized_pool_is_a_typed_error_not_a_panic() {
+        let mut base = cfg(4, 3, 10, ServiceFamily::Exponential);
+        base.pool_capacity = 2;
+        let err = run_batch(&base, &[1, 2], |_| Ok(static_policy(4))).unwrap_err();
+        assert!(err.contains("task pool exhausted"), "{err}");
+        assert!(err.contains("capacity 2"), "{err}");
     }
 
     #[test]

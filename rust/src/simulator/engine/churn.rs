@@ -1,0 +1,603 @@
+//! Open-network churn: node join / leave / stall / rejoin / rate-change
+//! lifecycle events layered on top of the closed Jackson network.
+//!
+//! The paper's analysis assumes a fixed node set with stationary service
+//! rates; production asynchronous FL is an *open* system (arXiv:2603.26231)
+//! where devices drop mid-training, stragglers stall, and speeds drift.
+//! This module supplies the shared pieces every engine uses to model that:
+//!
+//! * [`ChurnConfig`] — the `[churn]` scenario knobs (arrival rate, Exp
+//!   lifetime, stall/rejoin process, markov-modulated rate factors).
+//! * [`generate_schedule`] — a *precomputed* event stream that is a pure
+//!   function of `(seed, config, n)`. Every engine derives the identical
+//!   schedule from `churn_seed(cfg.seed)`, so the heap oracle, the sharded
+//!   engine (any shard/thread count), and the batch arena (any width)
+//!   apply byte-identical membership deltas in the same total order.
+//! * [`ChurnRuntime`] — the per-engine (per-replication, for the batch
+//!   arena) runtime state: membership masks, per-node service-rate scale,
+//!   the pending-completion sequence numbers that implement lazy
+//!   cancellation in the `(time, seq)` calendars, and the queue-delta log
+//!   consumed by `StepAggregator` so time-averaged metrics stay exact
+//!   under churn.
+//!
+//! Determinism notes: the schedule generator owns its own RNG stream
+//! (`CHURN_STREAM`), fully separate from the routing and service streams,
+//! so enabling churn never perturbs those draws. The generator models
+//! membership only (never queue contents) and maintains two liveness
+//! invariants by construction: at least one *member* (routable node)
+//! always remains, and at least one *running* (non-stalled member) node
+//! always remains. When the event budget runs out, any still-stalled
+//! nodes get a final `Rejoin` so no task is stranded forever.
+
+use std::collections::BTreeMap;
+
+use crate::util::rng::{stream_seed, Rng};
+use crate::util::toml::Value;
+
+/// Dedicated RNG stream tag for the churn schedule (cf. `ROUTE_STREAM`).
+pub(crate) const CHURN_STREAM: u64 = 0xC4_FE_11;
+
+/// Derive the churn-schedule seed from the experiment seed.
+pub(crate) fn churn_seed(seed: u64) -> u64 {
+    stream_seed(seed, &[CHURN_STREAM])
+}
+
+/// `[churn]` scenario block: an open-network lifecycle process.
+///
+/// All hazards are exponential, which makes the node lifecycle a
+/// continuous-time Markov chain; `SetRate` events with Exp holding times
+/// give a markov-modulated (piecewise-constant, time-varying) service
+/// rate per node.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChurnConfig {
+    /// Join hazard while at least one node is departed (0 = no joins).
+    /// Joins reclaim the lowest-index departed slot — free-list order.
+    pub arrival_rate: f64,
+    /// Mean Exp membership lifetime; 0 = nodes never leave.
+    pub mean_lifetime: f64,
+    /// Per-running-node stall hazard (0 = no stalls).
+    pub stall_rate: f64,
+    /// Mean Exp stall duration (rejoin hazard is `1 / mean_stall`).
+    pub mean_stall: f64,
+    /// Per-member service-rate modulation hazard (0 = stationary rates).
+    pub rate_change_rate: f64,
+    /// `SetRate` duration scale drawn uniformly in `[min, max]`.
+    /// Scales the *duration*, so a factor > 1 means a slower node.
+    pub rate_factor_min: f64,
+    pub rate_factor_max: f64,
+    /// Number of nodes active at t = 0 (0 = all `n`); the remainder
+    /// start departed and join through `arrival_rate`.
+    pub initial_active: usize,
+    /// Cap on generated lifecycle events (wind-down rejoins excluded).
+    pub max_events: usize,
+}
+
+impl Default for ChurnConfig {
+    fn default() -> Self {
+        ChurnConfig {
+            arrival_rate: 0.0,
+            mean_lifetime: 0.0,
+            stall_rate: 0.0,
+            mean_stall: 1.0,
+            rate_change_rate: 0.0,
+            rate_factor_min: 1.0,
+            rate_factor_max: 1.0,
+            initial_active: 0,
+            max_events: 10_000,
+        }
+    }
+}
+
+impl ChurnConfig {
+    /// Number of nodes active at t = 0 (`0` means "all of them").
+    pub fn initial_active_count(&self, n: usize) -> usize {
+        if self.initial_active == 0 {
+            n
+        } else {
+            self.initial_active
+        }
+    }
+
+    pub fn validate(&self, n: usize) -> Result<(), String> {
+        let rates = [
+            ("arrival_rate", self.arrival_rate),
+            ("mean_lifetime", self.mean_lifetime),
+            ("stall_rate", self.stall_rate),
+            ("mean_stall", self.mean_stall),
+            ("rate_change_rate", self.rate_change_rate),
+        ];
+        for (name, v) in rates {
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("[churn] {name} must be finite and >= 0, got {v}"));
+            }
+        }
+        if self.stall_rate > 0.0 && self.mean_stall <= 0.0 {
+            return Err("[churn] stall_rate > 0 requires mean_stall > 0".into());
+        }
+        if !(self.rate_factor_min > 0.0)
+            || !self.rate_factor_max.is_finite()
+            || self.rate_factor_max < self.rate_factor_min
+        {
+            return Err(format!(
+                "[churn] rate factors must satisfy 0 < min <= max < inf, got [{}, {}]",
+                self.rate_factor_min, self.rate_factor_max
+            ));
+        }
+        if self.initial_active > n {
+            return Err(format!(
+                "[churn] initial_active = {} exceeds node count n = {n}",
+                self.initial_active
+            ));
+        }
+        if self.initial_active == 0 && n == 0 {
+            return Err("[churn] requires at least one node".into());
+        }
+        Ok(())
+    }
+
+    /// Parse a `[churn]` TOML table with the strict known-key contract
+    /// used by the sweep and experiment loaders.
+    pub fn from_toml_table(tbl: &BTreeMap<String, Value>) -> Result<ChurnConfig, String> {
+        let mut cfg = ChurnConfig::default();
+        let num = |k: &str, v: &Value| {
+            v.as_f64()
+                .ok_or_else(|| format!("[churn] {k} must be a number"))
+        };
+        let count = |k: &str, v: &Value| -> Result<usize, String> {
+            match v.as_i64() {
+                Some(i) if i >= 0 => Ok(i as usize),
+                _ => Err(format!("[churn] {k} must be a non-negative integer")),
+            }
+        };
+        for (k, v) in tbl {
+            match k.as_str() {
+                "arrival_rate" => cfg.arrival_rate = num(k, v)?,
+                "mean_lifetime" => cfg.mean_lifetime = num(k, v)?,
+                "stall_rate" => cfg.stall_rate = num(k, v)?,
+                "mean_stall" => cfg.mean_stall = num(k, v)?,
+                "rate_change_rate" => cfg.rate_change_rate = num(k, v)?,
+                "rate_factor_min" => cfg.rate_factor_min = num(k, v)?,
+                "rate_factor_max" => cfg.rate_factor_max = num(k, v)?,
+                "initial_active" => cfg.initial_active = count(k, v)?,
+                "max_events" => cfg.max_events = count(k, v)?,
+                other => {
+                    return Err(format!(
+                        "unknown key '{other}' in [churn] \
+                         (arrival_rate|mean_lifetime|stall_rate|mean_stall|\
+                         rate_change_rate|rate_factor_min|rate_factor_max|\
+                         initial_active|max_events)"
+                    ))
+                }
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+/// One lifecycle transition at [`ChurnEvent::time`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ChurnEventKind {
+    /// A departed slot rejoins the network (lowest-index slot first).
+    Join { node: u32 },
+    /// A member leaves; its queued tasks are re-routed by the policy.
+    Leave { node: u32 },
+    /// A running member stops serving; its queue freezes in place.
+    Stall { node: u32 },
+    /// A stalled member resumes serving with a fresh keyed service draw.
+    Rejoin { node: u32 },
+    /// Markov-modulated rate change: subsequent service *durations* on
+    /// this node are multiplied by `scale`.
+    SetRate { node: u32, scale: f64 },
+}
+
+impl ChurnEventKind {
+    pub fn node(&self) -> u32 {
+        match *self {
+            ChurnEventKind::Join { node }
+            | ChurnEventKind::Leave { node }
+            | ChurnEventKind::Stall { node }
+            | ChurnEventKind::Rejoin { node }
+            | ChurnEventKind::SetRate { node, .. } => node,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChurnEvent {
+    pub time: f64,
+    pub kind: ChurnEventKind,
+}
+
+/// O(1) insert/remove set over node ids with stable deterministic
+/// iteration order (insertion order with swap-remove holes).
+struct SwapSet {
+    items: Vec<u32>,
+    /// Position of each node in `items`, `u32::MAX` if absent.
+    pos: Vec<u32>,
+}
+
+impl SwapSet {
+    fn new(n: usize) -> SwapSet {
+        SwapSet {
+            items: Vec::with_capacity(n),
+            pos: vec![u32::MAX; n],
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    fn insert(&mut self, node: u32) {
+        debug_assert_eq!(self.pos[node as usize], u32::MAX);
+        self.pos[node as usize] = self.items.len() as u32;
+        self.items.push(node);
+    }
+
+    fn remove(&mut self, node: u32) {
+        let at = self.pos[node as usize] as usize;
+        debug_assert_ne!(at as u32, u32::MAX);
+        let last = self.items.pop().expect("remove from empty SwapSet");
+        if at < self.items.len() {
+            self.items[at] = last;
+            self.pos[last as usize] = at as u32;
+        }
+        self.pos[node as usize] = u32::MAX;
+    }
+
+    fn get(&self, i: usize) -> u32 {
+        self.items[i]
+    }
+}
+
+/// Generate the churn schedule as a pure function of `(cfg, seed, n)`.
+///
+/// `seed` is the *experiment* seed; the generator derives its own stream
+/// via [`churn_seed`]. Event times are strictly increasing except for the
+/// wind-down `Rejoin` block, which shares the final timestamp (applied in
+/// vector order, which is all the engines need).
+pub fn generate_schedule(cfg: &ChurnConfig, seed: u64, n: usize) -> Vec<ChurnEvent> {
+    let mut rng = Rng::new(churn_seed(seed));
+    let k0 = cfg.initial_active_count(n);
+    let mut running = SwapSet::new(n);
+    let mut stalled = SwapSet::new(n);
+    // Sorted ascending: joins always reclaim the lowest-index slot, the
+    // same order the engines' free-lists hand slots back.
+    let mut departed: Vec<u32> = (k0 as u32..n as u32).collect();
+    for i in 0..k0 as u32 {
+        running.insert(i);
+    }
+    let leave_rate = if cfg.mean_lifetime > 0.0 {
+        1.0 / cfg.mean_lifetime
+    } else {
+        0.0
+    };
+    let rejoin_rate = if cfg.mean_stall > 0.0 {
+        1.0 / cfg.mean_stall
+    } else {
+        0.0
+    };
+
+    let mut events = Vec::new();
+    let mut t = 0.0f64;
+    while events.len() < cfg.max_events {
+        let members = running.len() + stalled.len();
+        // A member may leave unless it is the sole running node (liveness)
+        // or the sole member (routability).
+        let eligible_leave = if running.len() <= 1 {
+            stalled.len()
+        } else {
+            members
+        };
+        let lam_join = if departed.is_empty() {
+            0.0
+        } else {
+            cfg.arrival_rate
+        };
+        let lam_leave = leave_rate * eligible_leave as f64;
+        let lam_stall = if running.len() > 1 {
+            cfg.stall_rate * running.len() as f64
+        } else {
+            0.0
+        };
+        let lam_rejoin = rejoin_rate * stalled.len() as f64;
+        let lam_rate = cfg.rate_change_rate * members as f64;
+        let total = lam_join + lam_leave + lam_stall + lam_rejoin + lam_rate;
+        if !(total > 0.0) {
+            break;
+        }
+        t += rng.exponential(total);
+        let u = rng.uniform() * total;
+        let kind = if u < lam_join {
+            let node = departed.remove(0);
+            running.insert(node);
+            ChurnEventKind::Join { node }
+        } else if u < lam_join + lam_leave {
+            let k = rng.usize_below(eligible_leave);
+            // Eligible set = stalled (always) + running when > 1, indexed
+            // running-first so both branches scan the same way.
+            let node = if running.len() <= 1 {
+                stalled.get(k)
+            } else if k < running.len() {
+                running.get(k)
+            } else {
+                stalled.get(k - running.len())
+            };
+            if running.pos[node as usize] != u32::MAX {
+                running.remove(node);
+            } else {
+                stalled.remove(node);
+            }
+            let at = departed.partition_point(|&d| d < node);
+            departed.insert(at, node);
+            ChurnEventKind::Leave { node }
+        } else if u < lam_join + lam_leave + lam_stall {
+            let node = running.get(rng.usize_below(running.len()));
+            running.remove(node);
+            stalled.insert(node);
+            ChurnEventKind::Stall { node }
+        } else if u < lam_join + lam_leave + lam_stall + lam_rejoin {
+            let node = stalled.get(rng.usize_below(stalled.len()));
+            stalled.remove(node);
+            running.insert(node);
+            ChurnEventKind::Rejoin { node }
+        } else {
+            let k = rng.usize_below(members);
+            let node = if k < running.len() {
+                running.get(k)
+            } else {
+                stalled.get(k - running.len())
+            };
+            let scale = rng.range_f64(cfg.rate_factor_min, cfg.rate_factor_max);
+            ChurnEventKind::SetRate { node, scale }
+        };
+        events.push(ChurnEvent { time: t, kind });
+    }
+    // Wind-down: once the budget is spent no further rejoins would fire,
+    // so tasks queued on still-stalled nodes would be stranded and the
+    // calendars could drain. Rejoin every straggler at the final time.
+    let mut stragglers = stalled.items.clone();
+    stragglers.sort_unstable();
+    for node in stragglers {
+        events.push(ChurnEvent {
+            time: t,
+            kind: ChurnEventKind::Rejoin { node },
+        });
+    }
+    events
+}
+
+/// Per-engine (per-replication in the batch arena) churn runtime state.
+pub(crate) struct ChurnRuntime {
+    events: Vec<ChurnEvent>,
+    cursor: usize,
+    /// Member but not serving; queued tasks freeze in place.
+    pub(crate) stalled: Vec<bool>,
+    /// Not a member; never routed to, queue always empty.
+    pub(crate) departed: Vec<bool>,
+    /// Service-*duration* multiplier (1.0 = nominal) applied at schedule
+    /// time; `x * 1.0` is IEEE-exact so the no-churn trace is unchanged.
+    pub(crate) rate_scale: Vec<f64>,
+    /// Seq of the node's valid in-calendar completion (0 = none). Stall,
+    /// leave, and reschedule cancel lazily: calendar fronts whose seq no
+    /// longer matches are discarded unprocessed.
+    pub(crate) pending_seq: Vec<u64>,
+    /// Queue-length deltas `(time, node, new_len)` applied outside the CS
+    /// step path (leave drains / re-routes), in application order. The
+    /// aggregator flushes these so time-averaged queue metrics stay exact.
+    pub(crate) log: Vec<(f64, u32, u32)>,
+}
+
+impl ChurnRuntime {
+    pub(crate) fn new(cfg: &ChurnConfig, seed: u64, n: usize) -> ChurnRuntime {
+        let k0 = cfg.initial_active_count(n);
+        ChurnRuntime {
+            events: generate_schedule(cfg, seed, n),
+            cursor: 0,
+            stalled: vec![false; n],
+            departed: (0..n).map(|i| i >= k0).collect(),
+            rate_scale: vec![1.0; n],
+            pending_seq: vec![0; n],
+            log: Vec::new(),
+        }
+    }
+
+    /// Time of the next unapplied lifecycle event (`inf` when exhausted).
+    pub(crate) fn next_time(&self) -> f64 {
+        self.events
+            .get(self.cursor)
+            .map_or(f64::INFINITY, |e| e.time)
+    }
+
+    pub(crate) fn pop(&mut self) -> Option<ChurnEvent> {
+        let ev = self.events.get(self.cursor).copied();
+        if ev.is_some() {
+            self.cursor += 1;
+        }
+        ev
+    }
+
+    /// True when `seq` identifies the node's still-valid completion.
+    pub(crate) fn is_live(&self, node: u32, seq: u64) -> bool {
+        self.pending_seq[node as usize] == seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn busy_cfg() -> ChurnConfig {
+        ChurnConfig {
+            arrival_rate: 0.8,
+            mean_lifetime: 4.0,
+            stall_rate: 0.3,
+            mean_stall: 0.5,
+            rate_change_rate: 0.6,
+            rate_factor_min: 0.5,
+            rate_factor_max: 2.0,
+            initial_active: 0,
+            max_events: 400,
+        }
+    }
+
+    #[test]
+    fn schedule_is_a_pure_function_of_seed_cfg_n() {
+        let cfg = busy_cfg();
+        let a = generate_schedule(&cfg, 42, 9);
+        let b = generate_schedule(&cfg, 42, 9);
+        assert_eq!(a, b);
+        let c = generate_schedule(&cfg, 43, 9);
+        assert_ne!(a, c, "different seeds must give different schedules");
+        assert!(a.len() >= cfg.max_events, "busy config should hit the cap");
+    }
+
+    #[test]
+    fn schedule_preserves_liveness_invariants() {
+        let cfg = busy_cfg();
+        let n = 7usize;
+        let events = generate_schedule(&cfg, 1234, n);
+        let mut departed = vec![false; n];
+        let mut stalled = vec![false; n];
+        let mut last_t = 0.0f64;
+        for ev in &events {
+            assert!(ev.time >= last_t, "event times must be non-decreasing");
+            last_t = ev.time;
+            let node = ev.kind.node() as usize;
+            match ev.kind {
+                ChurnEventKind::Join { .. } => {
+                    assert!(departed[node], "join of a non-departed node");
+                    // Free-list order: the lowest departed index joins first.
+                    let min = (0..n).find(|&i| departed[i]).unwrap();
+                    assert_eq!(node, min, "join must reclaim the lowest slot");
+                    departed[node] = false;
+                    stalled[node] = false;
+                }
+                ChurnEventKind::Leave { .. } => {
+                    assert!(!departed[node], "leave of a departed node");
+                    departed[node] = true;
+                    stalled[node] = false;
+                }
+                ChurnEventKind::Stall { .. } => {
+                    assert!(!departed[node] && !stalled[node]);
+                    stalled[node] = true;
+                }
+                ChurnEventKind::Rejoin { .. } => {
+                    assert!(!departed[node] && stalled[node]);
+                    stalled[node] = false;
+                }
+                ChurnEventKind::SetRate { scale, .. } => {
+                    assert!(!departed[node]);
+                    assert!(
+                        scale >= cfg.rate_factor_min && scale <= cfg.rate_factor_max,
+                        "scale {scale} outside configured band"
+                    );
+                }
+            }
+            let members = departed.iter().filter(|&&d| !d).count();
+            let running = (0..n).filter(|&i| !departed[i] && !stalled[i]).count();
+            assert!(members >= 1, "membership must never empty");
+            assert!(running >= 1, "at least one running node must remain");
+        }
+        // Wind-down: nobody may end the schedule stalled.
+        assert!(
+            (0..n).all(|i| !stalled[i]),
+            "schedule must rejoin stragglers at wind-down"
+        );
+    }
+
+    #[test]
+    fn initial_active_nodes_join_from_the_departed_pool() {
+        let cfg = ChurnConfig {
+            arrival_rate: 2.0,
+            initial_active: 2,
+            max_events: 10,
+            ..ChurnConfig::default()
+        };
+        let events = generate_schedule(&cfg, 7, 5);
+        // Only joins are possible, and the departed pool is {2, 3, 4}.
+        assert_eq!(events.len(), 3);
+        let nodes: Vec<u32> = events.iter().map(|e| e.kind.node()).collect();
+        assert_eq!(nodes, vec![2, 3, 4], "joins must fill slots in order");
+    }
+
+    #[test]
+    fn quiet_config_generates_no_events() {
+        let events = generate_schedule(&ChurnConfig::default(), 3, 4);
+        assert!(events.is_empty());
+    }
+
+    #[test]
+    fn validation_rejects_bad_knobs() {
+        let n = 4;
+        let bad = [
+            ChurnConfig {
+                arrival_rate: -1.0,
+                ..ChurnConfig::default()
+            },
+            ChurnConfig {
+                mean_lifetime: f64::NAN,
+                ..ChurnConfig::default()
+            },
+            ChurnConfig {
+                stall_rate: 1.0,
+                mean_stall: 0.0,
+                ..ChurnConfig::default()
+            },
+            ChurnConfig {
+                rate_factor_min: 0.0,
+                ..ChurnConfig::default()
+            },
+            ChurnConfig {
+                rate_factor_min: 2.0,
+                rate_factor_max: 1.0,
+                ..ChurnConfig::default()
+            },
+            ChurnConfig {
+                initial_active: 9,
+                ..ChurnConfig::default()
+            },
+        ];
+        for cfg in &bad {
+            assert!(cfg.validate(n).is_err(), "{cfg:?} should be rejected");
+        }
+        assert!(ChurnConfig::default().validate(n).is_ok());
+    }
+
+    #[test]
+    fn toml_table_parses_and_rejects_unknown_keys() {
+        let mut tbl = BTreeMap::new();
+        tbl.insert("arrival_rate".to_string(), Value::Float(0.5));
+        tbl.insert("mean_lifetime".to_string(), Value::Int(8));
+        tbl.insert("initial_active".to_string(), Value::Int(3));
+        let cfg = ChurnConfig::from_toml_table(&tbl).unwrap();
+        assert_eq!(cfg.arrival_rate, 0.5);
+        assert_eq!(cfg.mean_lifetime, 8.0);
+        assert_eq!(cfg.initial_active, 3);
+
+        tbl.insert("lifetime".to_string(), Value::Float(1.0));
+        let err = ChurnConfig::from_toml_table(&tbl).unwrap_err();
+        assert!(err.contains("unknown key 'lifetime'"), "{err}");
+    }
+
+    #[test]
+    fn runtime_tracks_cursor_and_liveness() {
+        let cfg = ChurnConfig {
+            arrival_rate: 1.0,
+            initial_active: 1,
+            max_events: 2,
+            ..ChurnConfig::default()
+        };
+        let mut rt = ChurnRuntime::new(&cfg, 11, 3);
+        assert!(rt.departed[1] && rt.departed[2] && !rt.departed[0]);
+        assert!(rt.next_time().is_finite());
+        let first = rt.pop().unwrap();
+        assert_eq!(first.kind, ChurnEventKind::Join { node: 1 });
+        rt.pop().unwrap();
+        assert!(rt.pop().is_none());
+        assert_eq!(rt.next_time(), f64::INFINITY);
+        rt.pending_seq[2] = 9;
+        assert!(rt.is_live(2, 9));
+        assert!(!rt.is_live(2, 8));
+    }
+}

@@ -47,6 +47,7 @@
 
 pub mod batch;
 pub mod calendar;
+pub mod churn;
 pub mod sharded;
 pub mod soa;
 
@@ -76,6 +77,32 @@ pub(crate) fn service_duration(svc_seed: u64, dist: &ServiceDist, node: u32, cou
     let mut rng = Rng::new(stream_seed(svc_seed, &[node as u64, count]));
     dist.sample(&mut rng)
 }
+
+/// Typed engine-layer failures — conditions a mis-sized or churning
+/// scenario can legitimately hit, which therefore must surface as errors
+/// through the sweep's early-abort path instead of aborting the process.
+/// (The hot-path `TaskPool::push` keeps its panic: once construction
+/// succeeds, the closed-network population invariant makes overflow a
+/// logic bug, not an input error.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineError {
+    /// The task pool (capacity = `pool_capacity`, default C) ran out of
+    /// slots while placing task `node`'s workload.
+    PoolExhausted { node: usize, capacity: usize },
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            EngineError::PoolExhausted { node, capacity } => write!(
+                f,
+                "task pool exhausted at node {node}: population exceeds capacity {capacity}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
 
 /// Which event engine executes a replication.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -174,6 +201,15 @@ pub trait EventEngine {
 
     /// Name of the routing policy in force.
     fn policy_name(&self) -> String;
+
+    /// Queue-length deltas `(time, node, new_len)` applied *outside* the
+    /// CS-step path by churn events during the latest `advance` (a leave
+    /// drains and re-routes its queue), in application order. Aggregators
+    /// flush these before folding the step so time-averaged occupancy
+    /// stays exact under churn. Engines without churn return nothing.
+    fn churn_deltas(&self) -> &[(f64, u32, u32)] {
+        &[]
+    }
 }
 
 /// Initial placement S_0 as (node, selection probability) pairs — shared
@@ -184,10 +220,17 @@ pub(crate) fn initial_placements(
     rng: &mut Rng,
 ) -> Vec<(usize, f64)> {
     let n = cfg.p.len();
+    // Under churn with a partial initial membership, placements go only to
+    // the initially-active prefix [0, k); the caller has already masked
+    // the policy via observe_leave, so Routed draws respect it too.
+    let k = cfg
+        .churn
+        .as_ref()
+        .map_or(n, |c| c.initial_active_count(n));
     match cfg.init {
         InitPlacement::OnePerNode => (0..n).map(|i| (i, policy.prob_of(i))).collect(),
         InitPlacement::RoundRobin => (0..cfg.concurrency)
-            .map(|j| (j % n, policy.prob_of(j % n)))
+            .map(|j| (j % k, policy.prob_of(j % k)))
             .collect(),
         InitPlacement::Routed => {
             let mut lens = vec![0u32; n];
@@ -366,6 +409,16 @@ impl StepAggregator {
         self.q_len[i] = new_len;
     }
 
+    /// Fold queue-length changes applied outside the CS-step path (churn
+    /// leave drains), in the engines' shared application order — called
+    /// before `push_step` so the lazy integrals close each piecewise-
+    /// constant segment at the moment it actually ended.
+    pub fn apply_churn_deltas(&mut self, deltas: &[(f64, u32, u32)]) {
+        for &(t, node, new_len) in deltas {
+            self.flush(node as usize, t, new_len);
+        }
+    }
+
     /// Fold one CS step: `qlen_completed`/`qlen_next` are the POST-step
     /// queue lengths of the completed node and the dispatch target, `busy`
     /// the post-step busy-node count.
@@ -432,6 +485,7 @@ fn collect(
         StepAggregator::new(n, steps, record_tasks, sample_every, |i| net.queue_len(i) as u32);
     for _ in 0..steps {
         let out = net.advance().ok_or("network drained")?;
+        agg.apply_churn_deltas(net.churn_deltas());
         let i = out.completed_node as usize;
         let j = out.next_node as usize;
         agg.push_step(

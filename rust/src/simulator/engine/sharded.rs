@@ -30,6 +30,7 @@
 //! exactly this split).
 
 use super::calendar::{Event, Front, ShardCalendar, EMPTY_FRONT, INF_BITS};
+use super::churn::{ChurnEvent, ChurnEventKind, ChurnRuntime};
 use super::soa::TaskPool;
 use super::{initial_placements, service_duration, service_seed, EventEngine, ROUTE_STREAM};
 use crate::coordinator::policy::SamplingPolicy;
@@ -48,8 +49,9 @@ pub(crate) enum Cmd {
     /// remove the shard's front event (the dispatcher consumed it)
     PopFront,
     /// start a service at `node` at virtual time `time`; the event carries
-    /// the centrally assigned sequence number `seq`
-    Schedule { node: u32, time: f64, seq: u64 },
+    /// the centrally assigned sequence number `seq` and the node's current
+    /// churn rate scale (1.0 when churn is off — `dur * 1.0` is IEEE-exact)
+    Schedule { node: u32, time: f64, seq: u64, scale: f64 },
 }
 
 /// One shard: calendar + keyed-duration state for its nodes.
@@ -87,12 +89,12 @@ impl Shard {
             Cmd::PopFront => {
                 self.calendar.pop();
             }
-            Cmd::Schedule { node, time, seq } => {
+            Cmd::Schedule { node, time, seq, scale } => {
                 let li = (node / self.stride) as usize;
                 let count = self.svc_count[li];
                 self.svc_count[li] = count + 1;
                 let dur = service_duration(self.svc_seed, &self.service[li], node, count);
-                self.calendar.push(Event { time: time + dur, seq, node });
+                self.calendar.push(Event { time: time + dur * scale, seq, node });
             }
         }
     }
@@ -149,6 +151,8 @@ pub(crate) struct ShardedCore<D: ShardDriver> {
     lens_buf: Vec<u32>,
     /// reusable per-step command batch (≤ 3 entries after init)
     cmd_buf: Vec<(u32, Cmd)>,
+    /// open-network lifecycle state (None = closed network)
+    churn: Option<ChurnRuntime>,
 }
 
 /// The sequential sharded engine.
@@ -185,9 +189,29 @@ impl<D: ShardDriver> ShardedCore<D> {
             ));
         }
         let mut route_rng = Rng::new(cfg.seed).derive(ROUTE_STREAM);
+        let churn = cfg.churn.as_ref().map(|c| ChurnRuntime::new(c, cfg.seed, n));
+        // initially-departed nodes are masked out of the policy BEFORE the
+        // initial placements are drawn — identical call sequence to the
+        // heap oracle (part of the bit-identity contract)
+        if let Some(rt) = &churn {
+            #[cfg(debug_assertions)]
+            let route_fp = route_rng.state_fingerprint();
+            for i in 0..n {
+                if rt.departed[i] {
+                    policy.observe_leave(i);
+                }
+            }
+            #[cfg(debug_assertions)]
+            debug_assert_eq!(
+                route_fp,
+                route_rng.state_fingerprint(),
+                "observe_leave moved the routing stream (policy '{}')",
+                policy.name()
+            );
+        }
         let placements = initial_placements(&cfg, policy.as_mut(), &mut route_rng);
         let mut core = ShardedCore {
-            pool: TaskPool::new(n, cfg.concurrency),
+            pool: TaskPool::new(n, cfg.effective_pool_capacity()),
             busy: 0,
             n_shards: n_shards as u32,
             driver,
@@ -198,18 +222,22 @@ impl<D: ShardDriver> ShardedCore<D> {
             cmd_buf: Vec::with_capacity(cfg.concurrency),
             policy,
             route_rng,
+            churn,
         };
         // initial placement: pool pushes are central; the C initial service
         // starts go to the shards as ONE batched epoch (the only epoch with
-        // more than three commands — workers absorb it in parallel)
+        // more than three commands — workers absorb it in parallel).  The
+        // fallible push surfaces a mis-sized pool as a typed error.
         for (node, prob) in placements {
-            let len = core.pool.push(node, 0, 0.0, prob);
+            let len = core.pool.try_push(node, 0, 0.0, prob).map_err(|e| e.to_string())?;
             if len == 1 {
                 core.busy += 1;
                 core.seq += 1;
+                core.set_pending(node as u32, core.seq);
+                let scale = core.rate_scale(node as u32);
                 core.cmd_buf.push((
                     node as u32 % core.n_shards,
-                    Cmd::Schedule { node: node as u32, time: 0.0, seq: core.seq },
+                    Cmd::Schedule { node: node as u32, time: 0.0, seq: core.seq, scale },
                 ));
             }
         }
@@ -244,11 +272,170 @@ impl<D: ShardDriver> ShardedCore<D> {
             Some(best)
         }
     }
+
+    #[inline]
+    fn rate_scale(&self, node: u32) -> f64 {
+        self.churn.as_ref().map_or(1.0, |c| c.rate_scale[node as usize])
+    }
+
+    #[inline]
+    fn set_pending(&mut self, node: u32, seq: u64) {
+        if let Some(rt) = &mut self.churn {
+            rt.pending_seq[node as usize] = seq;
+        }
+    }
+
+    /// Merge to the next *valid* completion, applying every lifecycle
+    /// event that precedes it (churn-first at timestamp ties, schedule
+    /// order at equal times).  Shared prelude contract of all engines.
+    fn next_completion(&mut self) -> Option<Front> {
+        if self.churn.is_none() {
+            return self.merge_front();
+        }
+        self.churn.as_mut().unwrap().log.clear();
+        loop {
+            // lazy cancellation: pop calendar fronts whose seq a stall /
+            // leave invalidated (the pop command re-exposes the shard's
+            // next event, so the merge loop converges)
+            loop {
+                let front = self.merge_front();
+                let stale = match front {
+                    Some((_, seq, node)) => !self.churn.as_ref().unwrap().is_live(node, seq),
+                    None => false,
+                };
+                if !stale {
+                    break;
+                }
+                let (_, _, node) = front.unwrap();
+                self.cmd_buf.clear();
+                self.cmd_buf.push((node % self.n_shards, Cmd::PopFront));
+                self.driver.exec(&self.cmd_buf);
+            }
+            let tcomp = self.merge_front().map_or(f64::INFINITY, |f| f.0);
+            let tchurn = self.churn.as_ref().unwrap().next_time();
+            if tchurn <= tcomp && tchurn.is_finite() {
+                let ev = self.churn.as_mut().unwrap().pop().unwrap();
+                self.now = tchurn;
+                self.apply_churn(ev);
+                continue;
+            }
+            let front = self.merge_front()?;
+            self.churn.as_mut().unwrap().pending_seq[front.2 as usize] = 0;
+            return Some(front);
+        }
+    }
+
+    /// Apply one lifecycle event at its timestamp (same semantics and
+    /// policy call order as the heap oracle's `apply_churn`).
+    fn apply_churn(&mut self, ev: ChurnEvent) {
+        let t = ev.time;
+        self.cmd_buf.clear();
+        match ev.kind {
+            ChurnEventKind::Join { node } => {
+                let rt = self.churn.as_mut().unwrap();
+                rt.departed[node as usize] = false;
+                rt.stalled[node as usize] = false;
+                rt.rate_scale[node as usize] = 1.0;
+                // shard svc_count is NOT reset: duration keys stay unique
+                #[cfg(debug_assertions)]
+                let route_fp = self.route_rng.state_fingerprint();
+                self.policy.observe_join(node as usize);
+                #[cfg(debug_assertions)]
+                debug_assert_eq!(
+                    route_fp,
+                    self.route_rng.state_fingerprint(),
+                    "observe_join moved the routing stream (policy '{}')",
+                    self.policy.name()
+                );
+            }
+            ChurnEventKind::Leave { node } => self.apply_leave(node, t),
+            ChurnEventKind::Stall { node } => {
+                let rt = self.churn.as_mut().unwrap();
+                rt.stalled[node as usize] = true;
+                // cancel the in-flight completion; the queue freezes
+                rt.pending_seq[node as usize] = 0;
+                if self.pool.qlen(node as usize) > 0 {
+                    self.busy -= 1;
+                }
+            }
+            ChurnEventKind::Rejoin { node } => {
+                self.churn.as_mut().unwrap().stalled[node as usize] = false;
+                if self.pool.qlen(node as usize) > 0 {
+                    self.busy += 1;
+                    self.seq += 1;
+                    self.set_pending(node, self.seq);
+                    let scale = self.rate_scale(node);
+                    self.cmd_buf.push((
+                        node % self.n_shards,
+                        Cmd::Schedule { node, time: t, seq: self.seq, scale },
+                    ));
+                }
+            }
+            ChurnEventKind::SetRate { node, scale } => {
+                self.churn.as_mut().unwrap().rate_scale[node as usize] = scale;
+            }
+        }
+        if !self.cmd_buf.is_empty() {
+            self.driver.exec(&self.cmd_buf);
+        }
+    }
+
+    /// A member departs: mask it from the policy, then re-route its queued
+    /// tasks one at a time, each keeping its original dispatch identity.
+    fn apply_leave(&mut self, node: u32, t: f64) {
+        let ni = node as usize;
+        {
+            let rt = self.churn.as_mut().unwrap();
+            rt.pending_seq[ni] = 0;
+            if self.pool.qlen(ni) > 0 && !rt.stalled[ni] {
+                self.busy -= 1;
+            }
+            rt.departed[ni] = true;
+            rt.stalled[ni] = false;
+        }
+        #[cfg(debug_assertions)]
+        let route_fp = self.route_rng.state_fingerprint();
+        self.policy.observe_leave(ni);
+        #[cfg(debug_assertions)]
+        debug_assert_eq!(
+            route_fp,
+            self.route_rng.state_fingerprint(),
+            "observe_leave moved the routing stream (policy '{}')",
+            self.policy.name()
+        );
+        let incremental = self.policy.incremental();
+        while self.pool.qlen(ni) > 0 {
+            let (d_step, d_time, d_prob, _rem) = self.pool.pop(ni);
+            if !incremental {
+                self.lens_buf.clear();
+                self.lens_buf.extend_from_slice(self.pool.qlens());
+                self.policy.observe(&self.lens_buf);
+            }
+            let dest = self.policy.route(&mut self.route_rng) as u32;
+            let dlen = self.pool.push(dest as usize, d_step, d_time, d_prob);
+            let dest_stalled = self.churn.as_ref().unwrap().stalled[dest as usize];
+            if dlen == 1 && !dest_stalled {
+                self.busy += 1;
+                self.seq += 1;
+                self.set_pending(dest, self.seq);
+                let scale = self.rate_scale(dest);
+                self.cmd_buf.push((
+                    dest % self.n_shards,
+                    Cmd::Schedule { node: dest, time: t, seq: self.seq, scale },
+                ));
+            }
+            if incremental {
+                self.policy.observe_node(dest as usize, dlen);
+            }
+            self.churn.as_mut().unwrap().log.push((t, dest, dlen));
+        }
+        self.churn.as_mut().unwrap().log.push((t, node, 0));
+    }
 }
 
 impl<D: ShardDriver> EventEngine for ShardedCore<D> {
     fn advance(&mut self) -> Option<StepOutcome> {
-        let (time, _seq, node32) = self.merge_front()?;
+        let (time, _seq, node32) = self.next_completion()?;
         self.now = time;
         let node = node32 as usize;
         let shard = node32 % self.n_shards;
@@ -257,8 +444,10 @@ impl<D: ShardDriver> EventEngine for ShardedCore<D> {
         let (d_step, d_time, d_prob, new_len) = self.pool.pop(node);
         if new_len > 0 {
             self.seq += 1;
+            self.set_pending(node32, self.seq);
+            let scale = self.rate_scale(node32);
             self.cmd_buf
-                .push((shard, Cmd::Schedule { node: node32, time, seq: self.seq }));
+                .push((shard, Cmd::Schedule { node: node32, time, seq: self.seq, scale }));
         } else {
             self.busy -= 1;
         }
@@ -301,12 +490,15 @@ impl<D: ShardDriver> EventEngine for ShardedCore<D> {
         let next = self.policy.route(&mut self.route_rng) as u32;
         let next_prob = self.policy.prob_of(next as usize);
         let next_len = self.pool.push(next as usize, self.step + 1, time, next_prob);
-        if next_len == 1 {
+        let next_stalled = self.churn.as_ref().is_some_and(|c| c.stalled[next as usize]);
+        if next_len == 1 && !next_stalled {
             self.busy += 1;
             self.seq += 1;
+            self.set_pending(next, self.seq);
+            let scale = self.rate_scale(next);
             self.cmd_buf.push((
                 next % self.n_shards,
-                Cmd::Schedule { node: next, time, seq: self.seq },
+                Cmd::Schedule { node: next, time, seq: self.seq, scale },
             ));
         }
         if incremental {
@@ -342,6 +534,13 @@ impl<D: ShardDriver> EventEngine for ShardedCore<D> {
 
     fn policy_name(&self) -> String {
         self.policy.name()
+    }
+
+    fn churn_deltas(&self) -> &[(f64, u32, u32)] {
+        match &self.churn {
+            Some(rt) => &rt.log,
+            None => &[],
+        }
     }
 }
 
@@ -629,7 +828,7 @@ mod loom_model {
                             "epoch bump must make the staged batch visible"
                         );
                         for &(s, cmd) in &drained {
-                            if let Cmd::Schedule { node, time, seq } = cmd {
+                            if let Cmd::Schedule { node, time, seq, .. } = cmd {
                                 shared.fronts[s as usize].publish((time, seq, node));
                             }
                             applied += 1;
@@ -644,7 +843,7 @@ mod loom_model {
             for e in 1..=2u64 {
                 {
                     let mut q = slot.cmds.lock().unwrap();
-                    q.push((0, Cmd::Schedule { node: 9, time: e as f64, seq: e }));
+                    q.push((0, Cmd::Schedule { node: 9, time: e as f64, seq: e, scale: 1.0 }));
                 }
                 slot.epoch.store(e, Ordering::Release);
                 while slot.done.load(Ordering::Acquire) < e {
@@ -786,6 +985,46 @@ mod tests {
             .unwrap();
             assert_eq!(seq_trace, par_trace, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn churn_trace_is_shard_count_invariant() {
+        use super::super::churn::ChurnConfig;
+        let churn = ChurnConfig {
+            arrival_rate: 0.7,
+            mean_lifetime: 2.5,
+            stall_rate: 0.5,
+            mean_stall: 0.4,
+            rate_change_rate: 0.6,
+            rate_factor_min: 0.5,
+            rate_factor_max: 2.0,
+            initial_active: 6,
+            max_events: 250,
+        };
+        let trace = |shards: usize| -> Vec<(u32, u32, u64)> {
+            let mut c = cfg(9, 5, 11);
+            c.churn = Some(churn.clone());
+            let mut eng = ShardedEngine::sequential(c, policy(9), shards).unwrap();
+            (0..800)
+                .map(|_| {
+                    let o = eng.advance().unwrap();
+                    assert_eq!(eng.population(), 5, "churn must conserve the C tasks");
+                    (o.completed_node, o.next_node, o.time.to_bits())
+                })
+                .collect()
+        };
+        let one = trace(1);
+        assert_eq!(one, trace(4));
+        assert_eq!(one, trace(9));
+    }
+
+    #[test]
+    fn undersized_pool_is_a_typed_error_not_a_panic() {
+        let mut c = cfg(6, 5, 3);
+        c.pool_capacity = 2;
+        let err = ShardedEngine::sequential(c, policy(6), 2).unwrap_err();
+        assert!(err.contains("task pool exhausted"), "{err}");
+        assert!(err.contains("capacity 2"), "{err}");
     }
 
     #[test]

@@ -23,6 +23,8 @@
 //! [`TaskPool::population_of`] expose a single replication's contiguous
 //! window of that layout.
 
+use super::EngineError;
+
 /// Null slot / null node sentinel for the intrusive lists.
 pub(crate) const NIL: u32 = u32::MAX;
 
@@ -36,6 +38,7 @@ pub(crate) struct TaskPool {
     /// next slot in the owning node's FIFO (or the free list)
     next: Vec<u32>,
     free_head: u32,
+    capacity: usize,
     // per-node FIFO state
     head: Vec<u32>,
     tail: Vec<u32>,
@@ -52,6 +55,7 @@ impl TaskPool {
             // free list threads every slot: 0 -> 1 -> ... -> NIL
             next: (1..=cap).map(|i| if i == cap { NIL } else { i }).collect(),
             free_head: if capacity == 0 { NIL } else { 0 },
+            capacity,
             head: vec![NIL; nodes],
             tail: vec![NIL; nodes],
             qlen: vec![0; nodes],
@@ -70,9 +74,33 @@ impl TaskPool {
     }
 
     /// Append a task to `node`'s FIFO; returns the new queue length.
+    /// Panics on an exhausted pool — the hot-path variant, valid once the
+    /// population invariant is established (a CS step frees a slot before
+    /// reusing it). Constructors placing the initial population use
+    /// [`TaskPool::try_push`] so a mis-sized scenario errors instead.
     pub fn push(&mut self, node: usize, step: u64, time: f64, prob: f64) -> u32 {
+        match self.try_push(node, step, time, prob) {
+            Ok(len) => len,
+            // keep the historical panic text: "task pool exhausted ..."
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Fallible append: `EngineError::PoolExhausted` when no slot is free.
+    pub fn try_push(
+        &mut self,
+        node: usize,
+        step: u64,
+        time: f64,
+        prob: f64,
+    ) -> Result<u32, EngineError> {
         let slot = self.free_head;
-        assert_ne!(slot, NIL, "task pool exhausted (population exceeded C)");
+        if slot == NIL {
+            return Err(EngineError::PoolExhausted {
+                node,
+                capacity: self.capacity,
+            });
+        }
         let s = slot as usize;
         self.free_head = self.next[s];
         self.dispatch_step[s] = step;
@@ -86,7 +114,7 @@ impl TaskPool {
         }
         self.tail[node] = slot;
         self.qlen[node] += 1;
-        self.qlen[node]
+        Ok(self.qlen[node])
     }
 
     /// Pop the head of `node`'s FIFO; returns the task's
@@ -194,6 +222,26 @@ mod tests {
         let mut pool = TaskPool::new(1, 1);
         pool.push(0, 0, 0.0, 1.0);
         pool.push(0, 1, 0.0, 1.0);
+    }
+
+    #[test]
+    fn overfull_pool_try_push_returns_typed_error() {
+        let mut pool = TaskPool::new(2, 1);
+        assert_eq!(pool.try_push(0, 0, 0.0, 1.0), Ok(1));
+        let err = pool.try_push(1, 1, 0.0, 1.0).unwrap_err();
+        assert_eq!(
+            err,
+            EngineError::PoolExhausted {
+                node: 1,
+                capacity: 1
+            }
+        );
+        assert!(err.to_string().contains("task pool exhausted"), "{err}");
+        // the failed push must not corrupt the pool: a pop frees the one
+        // slot and the push then succeeds
+        pool.pop(0);
+        assert_eq!(pool.try_push(1, 1, 0.0, 1.0), Ok(1));
+        assert_eq!(pool.population(), 1);
     }
 
     #[test]

@@ -12,8 +12,10 @@ pub mod network;
 pub mod service;
 
 pub use engine::batch::run_batch;
+pub use engine::churn::{generate_schedule, ChurnConfig, ChurnEvent, ChurnEventKind};
 pub use engine::{
-    run, run_with_policy, transient_mi, with_engine, EngineConfig, EngineKind, EventEngine,
+    run, run_with_policy, transient_mi, with_engine, EngineConfig, EngineError, EngineKind,
+    EventEngine,
 };
 pub use network::{
     InitPlacement, Network, SimConfig, SimResult, StepOutcome, TaskRecord,

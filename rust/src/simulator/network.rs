@@ -27,8 +27,10 @@
 //! bit-identical on a shared seed.
 
 use super::engine::calendar::Event;
+use super::engine::churn::{ChurnConfig, ChurnEvent, ChurnEventKind, ChurnRuntime};
 use super::engine::{
-    initial_placements, service_duration, service_seed, EngineConfig, EventEngine, ROUTE_STREAM,
+    initial_placements, service_duration, service_seed, EngineConfig, EngineError, EventEngine,
+    ROUTE_STREAM,
 };
 use super::service::ServiceDist;
 use crate::coordinator::policy::{SamplingPolicy, StaticPolicy};
@@ -62,6 +64,14 @@ pub struct SimConfig {
     /// which event engine executes the run (never changes results — the
     /// engines are bit-identical on a shared seed; see `simulator::engine`)
     pub engine: EngineConfig,
+    /// open-network lifecycle process (None = the paper's closed network).
+    /// The schedule is a pure function of `(churn, seed, n)` on a stream
+    /// of its own, so enabling it never perturbs route/service draws.
+    pub churn: Option<ChurnConfig>,
+    /// task-pool capacity of the flat-pool engines (0 = exactly C).  A
+    /// pool too small for the initial population surfaces a typed
+    /// [`EngineError::PoolExhausted`] instead of a hot-path panic.
+    pub pool_capacity: usize,
 }
 
 impl SimConfig {
@@ -76,6 +86,17 @@ impl SimConfig {
             record_tasks: false,
             queue_sample_every: 0,
             engine: EngineConfig::default(),
+            churn: None,
+            pool_capacity: 0,
+        }
+    }
+
+    /// Effective task-pool capacity (the `0` default means "exactly C").
+    pub fn effective_pool_capacity(&self) -> usize {
+        if self.pool_capacity == 0 {
+            self.concurrency
+        } else {
+            self.pool_capacity
         }
     }
 
@@ -107,6 +128,17 @@ impl SimConfig {
                      GenAsync's eta/(n*p_i) scaling would divide by zero; \
                      drop the node instead of zeroing its probability",
                     sd.rate()
+                ));
+            }
+        }
+        if let Some(churn) = &self.churn {
+            let n = self.p.len();
+            churn.validate(n)?;
+            if self.init == InitPlacement::OnePerNode && churn.initial_active_count(n) < n {
+                return Err(format!(
+                    "OnePerNode requires all nodes active at t = 0, \
+                     but [churn] initial_active = {} < n = {n}",
+                    churn.initial_active_count(n)
                 ));
             }
         }
@@ -182,6 +214,11 @@ impl SimResult {
                 w.merge(&self.delay_steps[i]);
             }
         }
+        // a horizon shorter than the first completion merges zero tasks:
+        // report a defined 0, not the 0/0 NaN of an empty Welford mean
+        if w.count() == 0 {
+            return 0.0;
+        }
         w.mean()
     }
 
@@ -190,8 +227,12 @@ impl SimResult {
         self.delay_steps.iter().map(|w| w.mean()).collect()
     }
 
-    /// CS step *rate* (steps per unit virtual time).
+    /// CS step *rate* (steps per unit virtual time).  Zero-step runs have
+    /// zero elapsed time; the rate is a defined 0 rather than 0/0.
     pub fn step_rate(&self, steps: u64) -> f64 {
+        if self.total_time <= 0.0 {
+            return 0.0;
+        }
         steps as f64 / self.total_time
     }
 }
@@ -216,6 +257,8 @@ pub struct Network {
     busy_count: usize,
     /// reusable queue-length scratch for policy observation
     lens_buf: Vec<u32>,
+    /// open-network lifecycle state (None = closed network)
+    churn: Option<ChurnRuntime>,
 }
 
 /// What happened at one CS step (completion + routing of a fresh task).
@@ -262,11 +305,32 @@ impl Network {
             ));
         }
         let mut route_rng = Rng::new(cfg.seed).derive(ROUTE_STREAM);
+        let churn = cfg.churn.as_ref().map(|c| ChurnRuntime::new(c, cfg.seed, n));
+        // Initially-departed nodes are masked out of the policy BEFORE the
+        // initial placements are drawn, so S_0 routes only over the live
+        // membership — every engine performs this identical call sequence.
+        if let Some(rt) = &churn {
+            #[cfg(debug_assertions)]
+            let route_fp = route_rng.state_fingerprint();
+            for i in 0..n {
+                if rt.departed[i] {
+                    policy.observe_leave(i);
+                }
+            }
+            #[cfg(debug_assertions)]
+            debug_assert_eq!(
+                route_fp,
+                route_rng.state_fingerprint(),
+                "observe_leave moved the routing stream (policy '{}')",
+                policy.name()
+            );
+        }
         // initial placement S_0 — (node, selection probability) pairs,
         // shared with the sharded engine so routing streams decompose
         // identically
         let placements = initial_placements(&cfg, policy.as_mut(), &mut route_rng);
         let svc_seed = service_seed(cfg.seed);
+        let cap = cfg.effective_pool_capacity();
         let mut net = Network {
             queues: vec![VecDeque::new(); n],
             heap: BinaryHeap::new(),
@@ -280,8 +344,14 @@ impl Network {
             cfg,
             route_rng,
             lens_buf: Vec::with_capacity(n),
+            churn,
         };
-        for (node, prob) in placements {
+        for (placed, (node, prob)) in placements.into_iter().enumerate() {
+            // mirror the flat-pool engines' capacity check so a mis-sized
+            // scenario errors identically no matter which engine runs it
+            if placed >= cap {
+                return Err(EngineError::PoolExhausted { node, capacity: cap }.to_string());
+            }
             net.arrive(node as u32, 0, 0.0, prob);
         }
         // incremental policies only ever hear about queues that change, so
@@ -296,9 +366,15 @@ impl Network {
     }
 
     fn arrive(&mut self, node: u32, dispatch_step: u64, t: f64, dispatch_prob: f64) {
-        let q = &mut self.queues[node as usize];
-        q.push_back(Task { dispatch_step, dispatch_time: t, dispatch_prob });
-        if q.len() == 1 {
+        self.queues[node as usize].push_back(Task {
+            dispatch_step,
+            dispatch_time: t,
+            dispatch_prob,
+        });
+        // a stalled node accepts tasks but does not serve them; its
+        // service is (re)scheduled by the Rejoin event
+        let stalled = self.churn.as_ref().is_some_and(|c| c.stalled[node as usize]);
+        if self.queues[node as usize].len() == 1 && !stalled {
             self.busy_count += 1;
             self.schedule_service(node, t);
         }
@@ -308,8 +384,14 @@ impl Network {
         let count = self.svc_count[node as usize];
         self.svc_count[node as usize] = count + 1;
         let dur = service_duration(self.svc_seed, &self.cfg.service[node as usize], node, count);
+        // markov-modulated rate: the scale multiplies the *duration*;
+        // `x * 1.0` is IEEE-exact, so the no-churn trace is unchanged
+        let scale = self.churn.as_ref().map_or(1.0, |c| c.rate_scale[node as usize]);
         self.seq += 1;
-        self.heap.push(Event { time: t + dur, seq: self.seq, node });
+        if let Some(rt) = &mut self.churn {
+            rt.pending_seq[node as usize] = self.seq;
+        }
+        self.heap.push(Event { time: t + dur * scale, seq: self.seq, node });
     }
 
     /// Number of busy nodes right now (for τ_c).
@@ -332,10 +414,144 @@ impl Network {
         self.policy.probs()
     }
 
-    /// Advance one CS step: pop the next completion, route a replacement.
-    /// Returns None when the heap is empty (cannot happen with C >= 1).
+    /// Pop the next *valid* completion, applying every lifecycle event
+    /// that precedes it (churn-first at timestamp ties, schedule order at
+    /// equal times).  Shared prelude contract of all three engines.
+    fn next_completion(&mut self) -> Option<Event> {
+        if self.churn.is_none() {
+            return self.heap.pop();
+        }
+        if let Some(rt) = &mut self.churn {
+            rt.log.clear();
+        }
+        loop {
+            // lazy cancellation: drop calendar fronts whose seq a stall /
+            // leave / reschedule invalidated
+            loop {
+                let stale = match self.heap.peek() {
+                    Some(front) => {
+                        let rt = self.churn.as_ref().unwrap();
+                        !rt.is_live(front.node, front.seq)
+                    }
+                    None => false,
+                };
+                if !stale {
+                    break;
+                }
+                self.heap.pop();
+            }
+            let tcomp = self.heap.peek().map_or(f64::INFINITY, |e| e.time);
+            let tchurn = self.churn.as_ref().unwrap().next_time();
+            if tchurn <= tcomp && tchurn.is_finite() {
+                let ev = self.churn.as_mut().unwrap().pop().unwrap();
+                self.now = tchurn;
+                self.apply_churn(ev);
+                continue;
+            }
+            let ev = self.heap.pop()?;
+            self.churn.as_mut().unwrap().pending_seq[ev.node as usize] = 0;
+            return Some(ev);
+        }
+    }
+
+    /// Apply one lifecycle event at its timestamp.
+    fn apply_churn(&mut self, ev: ChurnEvent) {
+        let t = ev.time;
+        match ev.kind {
+            ChurnEventKind::Join { node } => {
+                let rt = self.churn.as_mut().unwrap();
+                rt.departed[node as usize] = false;
+                rt.stalled[node as usize] = false;
+                rt.rate_scale[node as usize] = 1.0;
+                // svc_count is NOT reset: service-duration keys must stay
+                // unique across a slot's successive tenancies
+                #[cfg(debug_assertions)]
+                let route_fp = self.route_rng.state_fingerprint();
+                self.policy.observe_join(node as usize);
+                #[cfg(debug_assertions)]
+                debug_assert_eq!(
+                    route_fp,
+                    self.route_rng.state_fingerprint(),
+                    "observe_join moved the routing stream (policy '{}')",
+                    self.policy.name()
+                );
+            }
+            ChurnEventKind::Leave { node } => self.apply_leave(node, t),
+            ChurnEventKind::Stall { node } => {
+                let rt = self.churn.as_mut().unwrap();
+                rt.stalled[node as usize] = true;
+                // cancel the in-flight completion; the queue freezes
+                rt.pending_seq[node as usize] = 0;
+                if !self.queues[node as usize].is_empty() {
+                    self.busy_count -= 1;
+                }
+            }
+            ChurnEventKind::Rejoin { node } => {
+                self.churn.as_mut().unwrap().stalled[node as usize] = false;
+                if !self.queues[node as usize].is_empty() {
+                    self.busy_count += 1;
+                    self.schedule_service(node, t);
+                }
+            }
+            ChurnEventKind::SetRate { node, scale } => {
+                self.churn.as_mut().unwrap().rate_scale[node as usize] = scale;
+            }
+        }
+    }
+
+    /// A member departs: mask it from the policy, then re-route its queued
+    /// tasks one at a time, each keeping its original dispatch identity
+    /// (step, time, prob) — a hand-off, not a new dispatch.
+    fn apply_leave(&mut self, node: u32, t: f64) {
+        let ni = node as usize;
+        {
+            let rt = self.churn.as_mut().unwrap();
+            rt.pending_seq[ni] = 0;
+            if !self.queues[ni].is_empty() && !rt.stalled[ni] {
+                self.busy_count -= 1;
+            }
+            rt.departed[ni] = true;
+            rt.stalled[ni] = false;
+        }
+        #[cfg(debug_assertions)]
+        let route_fp = self.route_rng.state_fingerprint();
+        self.policy.observe_leave(ni);
+        #[cfg(debug_assertions)]
+        debug_assert_eq!(
+            route_fp,
+            self.route_rng.state_fingerprint(),
+            "observe_leave moved the routing stream (policy '{}')",
+            self.policy.name()
+        );
+        let incremental = self.policy.incremental();
+        while let Some(task) = self.queues[ni].pop_front() {
+            if !incremental {
+                self.lens_buf.clear();
+                self.lens_buf.extend(self.queues.iter().map(|q| q.len() as u32));
+                self.policy.observe(&self.lens_buf);
+            }
+            let dest = self.policy.route(&mut self.route_rng) as u32;
+            self.queues[dest as usize].push_back(task);
+            let dlen = self.queues[dest as usize].len() as u32;
+            let dest_stalled = self.churn.as_ref().unwrap().stalled[dest as usize];
+            if dlen == 1 && !dest_stalled {
+                self.busy_count += 1;
+                self.schedule_service(dest, t);
+            }
+            if incremental {
+                self.policy.observe_node(dest as usize, dlen);
+            }
+            self.churn.as_mut().unwrap().log.push((t, dest, dlen));
+        }
+        self.churn.as_mut().unwrap().log.push((t, node, 0));
+    }
+
+    /// Advance one CS step: pop the next valid completion — applying any
+    /// lifecycle events that precede it — and route a replacement.
+    /// Returns None only when the calendar and the churn schedule are both
+    /// exhausted (cannot happen with C >= 1: some live node always serves).
     pub fn advance(&mut self) -> Option<StepOutcome> {
-        let ev = self.heap.pop()?;
+        let ev = self.next_completion()?;
         self.now = ev.time;
         let node = ev.node;
         let task = self.queues[node as usize]
@@ -435,6 +651,13 @@ impl EventEngine for Network {
 
     fn policy_name(&self) -> String {
         Network::policy_name(self)
+    }
+
+    fn churn_deltas(&self) -> &[(f64, u32, u32)] {
+        match &self.churn {
+            Some(rt) => &rt.log,
+            None => &[],
+        }
     }
 }
 
@@ -731,6 +954,96 @@ mod tests {
             assert_eq!(*step, 100 * k as u64);
             assert_eq!(qs.iter().map(|&x| x as usize).sum::<usize>(), 4);
         }
+    }
+
+    #[test]
+    fn zero_step_horizon_yields_defined_zeros() {
+        // horizon shorter than the first completion: steps = 0 must give
+        // well-defined zeros, never a 0/0 NaN (satellite of the churn PR)
+        let cfg = SimConfig::new(vec![1.0], vec![ServiceDist::Exp { rate: 1.0 }], 1, 0);
+        let res = run(cfg).unwrap();
+        assert_eq!(res.completions.iter().sum::<u64>(), 0);
+        assert_eq!(res.total_time, 0.0);
+        assert_eq!(res.step_rate(0), 0.0, "0 steps / 0 time must be 0, not NaN");
+        assert_eq!(res.cluster_delay(0..1), 0.0, "empty delay merge must be 0, not NaN");
+        assert!(res.tau_c.is_finite());
+        assert!(res.mean_queue[0].is_finite());
+    }
+
+    #[test]
+    fn undersized_pool_capacity_is_a_typed_error() {
+        let mut cfg = two_cluster_cfg(4, 2, 1.0, 1.0, 4, 10);
+        cfg.pool_capacity = 3;
+        let err = Network::new(cfg).unwrap_err();
+        assert!(err.contains("task pool exhausted"), "{err}");
+        assert!(err.contains("capacity 3"), "{err}");
+    }
+
+    fn churny(initial_active: usize) -> ChurnConfig {
+        ChurnConfig {
+            arrival_rate: 0.6,
+            mean_lifetime: 3.0,
+            stall_rate: 0.4,
+            mean_stall: 0.5,
+            rate_change_rate: 0.5,
+            rate_factor_min: 0.5,
+            rate_factor_max: 2.0,
+            initial_active,
+            max_events: 300,
+        }
+    }
+
+    #[test]
+    fn churn_conserves_population_and_empties_departed_queues() {
+        let mut cfg = two_cluster_cfg(6, 3, 2.0, 1.0, 8, 0);
+        cfg.seed = 21;
+        cfg.churn = Some(churny(4));
+        let mut net = Network::new(cfg).unwrap();
+        for _ in 0..4000 {
+            let out = net.advance().unwrap();
+            assert_eq!(net.population(), 8, "churn must conserve the C tasks");
+            let rt = net.churn.as_ref().unwrap();
+            assert!(
+                !rt.departed[out.next_node as usize],
+                "dispatched to departed node {}",
+                out.next_node
+            );
+            for i in 0..6 {
+                if rt.departed[i] {
+                    assert_eq!(net.queue_len(i), 0, "departed node {i} still holds tasks");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quiet_churn_leaves_the_trace_bit_identical() {
+        // an enabled-but-eventless [churn] block must not perturb a single
+        // draw: rate scale 1.0 multiplies exactly, pending-seq bookkeeping
+        // consumes nothing
+        let mut cfg = two_cluster_cfg(6, 3, 2.0, 1.0, 6, 300);
+        cfg.seed = 23;
+        cfg.record_tasks = true;
+        let base = run(cfg.clone()).unwrap();
+        cfg.churn = Some(ChurnConfig::default());
+        let churned = run(cfg).unwrap();
+        assert_eq!(base.tasks.len(), churned.tasks.len());
+        for (a, b) in base.tasks.iter().zip(&churned.tasks) {
+            assert_eq!(a.node, b.node);
+            assert_eq!(a.complete_time.to_bits(), b.complete_time.to_bits());
+        }
+    }
+
+    #[test]
+    fn one_per_node_with_partial_membership_is_rejected() {
+        let mut cfg = two_cluster_cfg(4, 2, 1.0, 1.0, 4, 10);
+        cfg.init = InitPlacement::OnePerNode;
+        cfg.churn = Some(ChurnConfig {
+            initial_active: 3,
+            ..ChurnConfig::default()
+        });
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("OnePerNode"), "{err}");
     }
 
     #[test]

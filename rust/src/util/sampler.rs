@@ -56,6 +56,43 @@ pub fn linear_route(p: &[f64], u: f64) -> usize {
     last_pos
 }
 
+/// Membership-masked variant of [`linear_route`] for open-network churn:
+/// draw an index from the *unnormalized* weights `p` restricted to
+/// `active` entries, where `total` is the caller-maintained sum of the
+/// active weights. Consumes exactly one uniform `u ∈ [0, 1)` (the
+/// rescaling `u * total` replaces renormalizing the weight vector), so
+/// engines that take this path on the same draw stay draw-for-draw
+/// aligned. Inactive entries are skipped outright — a departed node is
+/// never selected even when floating-point error strands `u * total`
+/// above the accumulated active mass; the fall-through returns the last
+/// active positive-mass index, mirroring `linear_route`.
+pub fn masked_linear_route(p: &[f64], active: &[bool], total: f64, u: f64) -> usize {
+    debug_assert_eq!(p.len(), active.len());
+    debug_assert!(total > 0.0 && total.is_finite());
+    let target = u * total;
+    let mut acc = 0.0f64;
+    let mut last_pos = p.len() - 1;
+    let mut seen_pos = false;
+    for (i, (&pi, &a)) in p.iter().zip(active).enumerate() {
+        if !a {
+            continue;
+        }
+        if pi > 0.0 {
+            last_pos = i;
+            seen_pos = true;
+        }
+        acc += pi;
+        if target < acc {
+            return i;
+        }
+    }
+    debug_assert!(
+        seen_pos,
+        "masked_linear_route with no active positive-mass entry"
+    );
+    last_pos
+}
+
 /// Chunk width of the batched keyed-duration path.  Eight u64/f64 lanes
 /// fill two AVX2 registers (or one AVX-512 register); the integer mixing
 /// pipeline and the `1 - u` / division arithmetic vectorize, while `ln`
@@ -418,5 +455,38 @@ mod tests {
         let p = [0.0, 1.0, 0.0];
         assert_eq!(linear_route(&p, 0.0), 1);
         assert_eq!(linear_route(&p, 1.0 - 1e-17), 1);
+    }
+
+    #[test]
+    fn masked_linear_route_restricts_to_active_entries() {
+        let p = [0.1, 0.2, 0.3, 0.4];
+        let active = [true, false, true, false];
+        let total = 0.1 + 0.3;
+        // Active CDF over {0, 2}: node 0 owns [0, 0.25), node 2 the rest.
+        assert_eq!(masked_linear_route(&p, &active, total, 0.0), 0);
+        assert_eq!(masked_linear_route(&p, &active, total, 0.24), 0);
+        assert_eq!(masked_linear_route(&p, &active, total, 0.25), 2);
+        assert_eq!(masked_linear_route(&p, &active, total, 0.999), 2);
+    }
+
+    #[test]
+    fn masked_linear_route_full_mask_matches_linear_route() {
+        let p = [0.25, 0.15, 0.05, 0.55];
+        let active = [true; 4];
+        let mut rng = Rng::new(31);
+        for _ in 0..10_000 {
+            let u = rng.uniform();
+            assert_eq!(masked_linear_route(&p, &active, 1.0, u), linear_route(&p, u));
+        }
+    }
+
+    #[test]
+    fn masked_linear_route_fallthrough_never_picks_inactive() {
+        // fp gap at the top of the active CDF: the fall-through must land
+        // on the last *active* positive-mass index, not a masked one
+        let p = [0.6, 0.4 - 1e-17, 0.0, 0.9];
+        let active = [true, true, true, false];
+        let total = 1.0 - 1e-17;
+        assert_eq!(masked_linear_route(&p, &active, total, 1.0 - 1e-16), 1);
     }
 }

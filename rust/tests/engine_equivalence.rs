@@ -22,7 +22,7 @@ use fedqueue::coordinator::policy::{
 use fedqueue::coordinator::sweep::{run_sweep, SweepSpec};
 use fedqueue::queueing::ClosedNetwork;
 use fedqueue::simulator::{
-    run_batch, run_with_policy, EngineConfig, EngineKind, InitPlacement, ServiceDist,
+    run_batch, run_with_policy, ChurnConfig, EngineConfig, EngineKind, InitPlacement, ServiceDist,
     ServiceFamily, SimConfig, SimResult,
 };
 use fedqueue::util::proptest::{check, Config as PropConfig, Gen};
@@ -314,6 +314,261 @@ fn proptest_sharded_equals_heap_on_random_configs() {
             let gamma = case.gamma;
             let beta = case.beta;
             match case.policy {
+                0 => assert_equivalent(cfg, || {
+                    Box::new(fedqueue::coordinator::StaticPolicy::new(base.clone()).unwrap())
+                }),
+                1 => assert_equivalent(cfg, || {
+                    Box::new(FenwickAdaptivePolicy::new(base.clone(), gamma).unwrap())
+                }),
+                2 => assert_equivalent(cfg, || {
+                    Box::new(AdaptiveQueuePolicy::new(base.clone(), gamma).unwrap())
+                }),
+                3 => assert_equivalent(cfg, || {
+                    Box::new(FenwickDelayAdaptivePolicy::new(base.clone(), gamma, beta).unwrap())
+                }),
+                _ => assert_equivalent(cfg, || {
+                    Box::new(DelayAdaptivePolicy::new(base.clone(), gamma, beta).unwrap())
+                }),
+            }
+        },
+    );
+}
+
+/// An aggressive open-network lifecycle: joins, leaves, stalls, and
+/// rate switches all active, with `initial_active` nodes live at t = 0.
+fn churny(initial_active: usize) -> ChurnConfig {
+    ChurnConfig {
+        arrival_rate: 0.7,
+        mean_lifetime: 2.5,
+        stall_rate: 0.5,
+        mean_stall: 0.4,
+        rate_change_rate: 0.6,
+        rate_factor_min: 0.5,
+        rate_factor_max: 2.0,
+        initial_active,
+        max_events: 300,
+    }
+}
+
+#[test]
+fn churn_keeps_every_builtin_policy_engine_invariant() {
+    // the tentpole acceptance criterion: with nonzero churn the heap
+    // oracle, the sharded engine (every S x threads combination), and the
+    // width-1 batch arena stay bit-identical for every builtin policy —
+    // membership deltas, FIFO re-dispatch order, and rate-scale reads all
+    // have to decompose identically for this to hold
+    let (n, c, steps) = (14, 9, 1_500);
+    for policy in PolicyRegistry::builtin().names() {
+        let mut cfg = two_cluster(n, c, steps, 29, ServiceFamily::Exponential);
+        cfg.churn = Some(churny(10));
+        let pc = ctx(n, c, steps, 0.6);
+        assert_equivalent(cfg, || PolicyRegistry::builtin().build(&policy, &pc).unwrap())
+            .unwrap_or_else(|e| panic!("policy {policy} under churn: {e}"));
+    }
+}
+
+#[test]
+fn churny_batch_widths_match_their_heap_oracles() {
+    // batch arenas at R in {1, 4, 32}: each replication derives its own
+    // churn schedule from its own seed, so packing must not leak events
+    // across reps — every one equals its seed run alone on the heap
+    let (n, c, steps) = (14usize, 9usize, 1_000u64);
+    let pc = ctx(n, c, steps, 0.6);
+    for policy in PolicyRegistry::builtin().names() {
+        let mut base = two_cluster(n, c, steps, 0, ServiceFamily::Exponential);
+        base.churn = Some(churny(10));
+        base.record_tasks = true;
+        base.queue_sample_every = 97;
+        let mk = || PolicyRegistry::builtin().build(&policy, &pc).unwrap();
+        let seeds: Vec<u64> = (0..32u64).map(|s| stream_seed(1771, &[0, s])).collect();
+        let oracles: Vec<Vec<u64>> = seeds
+            .iter()
+            .map(|&seed| {
+                let mut cfg = base.clone();
+                cfg.seed = seed;
+                digest(&run_with_policy(cfg, mk()).unwrap())
+            })
+            .collect();
+        for r in BATCH_WIDTHS {
+            let results = run_batch(&base, &seeds[..r], |_| Ok(mk())).unwrap();
+            for (i, res) in results.iter().enumerate() {
+                assert_eq!(
+                    digest(res),
+                    oracles[i],
+                    "{policy}: churny batch R={r} rep {i} diverged from its heap oracle"
+                );
+            }
+        }
+    }
+}
+
+/// Shared membership log handle for the draw-guard recorder below.
+type MembershipLog = std::rc::Rc<std::cell::RefCell<Vec<(char, usize)>>>;
+
+/// A static policy instrumented to record every membership notification.
+/// Its callbacks touch no RNG, so a run with the recorder must be
+/// bit-identical to a run with the bare policy — any engine that slipped
+/// a draw (or a skipped notification) into the join/leave path would
+/// break one of the two assertions.
+struct MembershipRecorder {
+    inner: fedqueue::coordinator::StaticPolicy,
+    log: MembershipLog,
+}
+
+impl SamplingPolicy for MembershipRecorder {
+    fn name(&self) -> String {
+        "membership-recorder".into()
+    }
+
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn prob_of(&self, i: usize) -> f64 {
+        self.inner.prob_of(i)
+    }
+
+    fn observe_join(&mut self, node: usize) {
+        self.log.borrow_mut().push(('j', node));
+        self.inner.observe_join(node);
+    }
+
+    fn observe_leave(&mut self, node: usize) {
+        self.log.borrow_mut().push(('l', node));
+        self.inner.observe_leave(node);
+    }
+
+    fn route(&mut self, rng: &mut Rng) -> usize {
+        self.inner.route(rng)
+    }
+}
+
+#[test]
+fn observe_join_and_leave_are_draw_free_and_engine_invariant() {
+    // R1's runtime face: membership callbacks are pure notifications.
+    // In debug builds this run also exercises the engines' routing-stream
+    // fingerprint guards around observe_join/observe_leave.
+    let (n, c, steps) = (12usize, 6usize, 800u64);
+    let mut cfg = two_cluster(n, c, steps, 47, ServiceFamily::Exponential);
+    cfg.churn = Some(churny(8));
+    cfg.record_tasks = true;
+    let p = cfg.p.clone();
+    let bare = || -> Box<dyn SamplingPolicy> {
+        Box::new(fedqueue::coordinator::StaticPolicy::new(p.clone()).unwrap())
+    };
+    let recorded = |log: &MembershipLog| -> Box<dyn SamplingPolicy> {
+        Box::new(MembershipRecorder {
+            inner: fedqueue::coordinator::StaticPolicy::new(p.clone()).unwrap(),
+            log: log.clone(),
+        })
+    };
+    let mut heap_cfg = cfg.clone();
+    heap_cfg.engine = EngineConfig::heap();
+    let oracle = digest(&run_with_policy(heap_cfg.clone(), bare()).unwrap());
+    let heap_log: MembershipLog = Default::default();
+    let with_recorder = digest(&run_with_policy(heap_cfg, recorded(&heap_log)).unwrap());
+    assert_eq!(
+        oracle, with_recorder,
+        "membership notifications must not perturb the trace"
+    );
+    let heap_events = heap_log.borrow().clone();
+    assert!(
+        heap_events.iter().any(|&(k, _)| k == 'l'),
+        "initial_active = 8 of 12 must fire observe_leave at t = 0"
+    );
+    assert!(heap_events.iter().all(|&(_, node)| node < n));
+    // every other engine must fire the identical notification sequence
+    for engine in [
+        EngineConfig { kind: EngineKind::Sharded, shards: 4, threads: 1 },
+        EngineConfig::batch(),
+    ] {
+        let mut c = cfg.clone();
+        c.engine = engine;
+        let log: MembershipLog = Default::default();
+        let got = digest(&run_with_policy(c, recorded(&log)).unwrap());
+        assert_eq!(got, oracle, "{engine:?} diverged under churn");
+        assert_eq!(*log.borrow(), heap_events, "{engine:?} membership order");
+    }
+}
+
+/// Randomized open-network lifecycle for the property harness.
+#[derive(Clone, Debug)]
+struct ChurnCase {
+    sim: SimCase,
+    arrival: f64,
+    lifetime: f64,
+    stall: f64,
+    mean_stall: f64,
+    rate_change: f64,
+    factor_min: f64,
+    factor_spread: f64,
+    initial_active: usize,
+}
+
+struct ChurnCaseGen;
+
+impl Gen for ChurnCaseGen {
+    type Value = ChurnCase;
+
+    fn generate(&self, rng: &mut Rng) -> ChurnCase {
+        let mut sim = SimCaseGen.generate(rng);
+        sim.n = 2 + rng.usize_below(12);
+        sim.steps = 200 + rng.below(500);
+        ChurnCase {
+            initial_active: rng.usize_below(sim.n + 1),
+            sim,
+            arrival: rng.range_f64(0.1, 1.5),
+            lifetime: rng.range_f64(0.5, 5.0),
+            stall: rng.range_f64(0.0, 1.0),
+            mean_stall: rng.range_f64(0.1, 1.0),
+            rate_change: rng.range_f64(0.0, 1.0),
+            factor_min: rng.range_f64(0.3, 1.0),
+            factor_spread: rng.range_f64(0.0, 2.0),
+        }
+    }
+
+    fn shrink(&self, v: &ChurnCase) -> Vec<ChurnCase> {
+        SimCaseGen
+            .shrink(&v.sim)
+            .into_iter()
+            .map(|sim| ChurnCase {
+                initial_active: v.initial_active.min(sim.n),
+                sim,
+                ..v.clone()
+            })
+            .collect()
+    }
+}
+
+#[test]
+fn proptest_random_churn_schedules_keep_engines_equivalent() {
+    check(
+        "churn-engines-equivalent",
+        &ChurnCaseGen,
+        &PropConfig { cases: 24, ..Default::default() },
+        |case| {
+            let family = [
+                ServiceFamily::Exponential,
+                ServiceFamily::Deterministic,
+                ServiceFamily::LogNormal(0.5),
+            ][case.sim.family];
+            let mut cfg =
+                two_cluster(case.sim.n, case.sim.c, case.sim.steps, case.sim.seed, family);
+            cfg.churn = Some(ChurnConfig {
+                arrival_rate: case.arrival,
+                mean_lifetime: case.lifetime,
+                stall_rate: case.stall,
+                mean_stall: case.mean_stall,
+                rate_change_rate: case.rate_change,
+                rate_factor_min: case.factor_min,
+                rate_factor_max: case.factor_min + case.factor_spread,
+                initial_active: case.initial_active,
+                max_events: 400,
+            });
+            let base = cfg.p.clone();
+            let gamma = case.sim.gamma;
+            let beta = case.sim.beta;
+            match case.sim.policy {
                 0 => assert_equivalent(cfg, || {
                     Box::new(fedqueue::coordinator::StaticPolicy::new(base.clone()).unwrap())
                 }),

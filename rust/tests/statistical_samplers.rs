@@ -336,6 +336,103 @@ fn delay_adaptive_agrees_with_exact_oracle_draw_for_draw() {
 }
 
 #[test]
+#[cfg_attr(debug_assertions, ignore = "release-only: large sample counts (CI stat-tests job)")]
+fn mass_collapse_fallback_realizes_the_masked_base_at_extreme_gamma() {
+    // the satellite bug, pinned statistically: γ·D̂ so large that EVERY
+    // tilted weight exp(−γ·D̂_i) underflows to exactly 0.0 — the total
+    // mass collapses and the fallback must engage atomically, routing by
+    // the BASE distribution conditioned on current membership.  Departed
+    // nodes must never be drawn (the chi-square statistic goes infinite
+    // if one is), and the surviving draws must pass goodness of fit
+    // against the masked, renormalized base.
+    let n = 16usize;
+    let base = vec![1.0 / n as f64; n];
+    let (gamma, beta) = (1e4, 0.5);
+    let mut fast = FenwickDelayAdaptivePolicy::new(base.clone(), gamma, beta).unwrap();
+    let mut exact = DelayAdaptivePolicy::new(base.clone(), gamma, beta).unwrap();
+    // one enormous delay per node: D̂ = (1−β)·100 = 50, γ·D̂ = 5·10⁵ ≫ 745
+    // (the f64 exp underflow threshold), so every weight is exactly 0.0
+    for i in 0..n {
+        fast.observe_completion(i, 100, 100.0);
+        exact.observe_completion(i, 100, 100.0);
+    }
+    // two nodes depart while the collapse is in force
+    for node in [3usize, 11] {
+        fast.observe_leave(node);
+        exact.observe_leave(node);
+    }
+    let mut target = base.clone();
+    target[3] = 0.0;
+    target[11] = 0.0;
+    let z: f64 = target.iter().sum();
+    for t in target.iter_mut() {
+        *t /= z;
+    }
+    for i in 0..n {
+        assert!(
+            (fast.prob_of(i) - target[i]).abs() < 1e-12,
+            "node {i}: fenwick fallback {} vs masked base {}",
+            fast.prob_of(i),
+            target[i]
+        );
+        assert!(
+            (exact.prob_of(i) - target[i]).abs() < 1e-12,
+            "node {i}: exact fallback {} vs masked base {}",
+            exact.prob_of(i),
+            target[i]
+        );
+    }
+    let counts = counts_from(n, 400_000, 0x0DD5E, |rng| fast.route(rng));
+    assert_eq!(counts[3], 0, "mass-collapse fallback routed to departed node 3");
+    assert_eq!(counts[11], 0, "mass-collapse fallback routed to departed node 11");
+    assert_gof("mass-collapse/masked-base", &counts, &target);
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "release-only: large sample counts (CI stat-tests job)")]
+fn mass_collapse_fallback_agrees_with_exact_oracle_draw_for_draw() {
+    // same collapse + membership state, shared RNG streams: the Fenwick
+    // policy's masked one-uniform scan and the exact oracle's renormalized
+    // CDF scan must pick the same node draw for draw (fp boundary ties
+    // must be adjacent in CDF order with vanishing mass between)
+    let n = 16usize;
+    let base = vec![1.0 / n as f64; n];
+    let (gamma, beta) = (1e4, 0.5);
+    let mut fast = FenwickDelayAdaptivePolicy::new(base.clone(), gamma, beta).unwrap();
+    let mut exact = DelayAdaptivePolicy::new(base, gamma, beta).unwrap();
+    for i in 0..n {
+        fast.observe_completion(i, 100, 100.0);
+        exact.observe_completion(i, 100, 100.0);
+    }
+    for node in [3usize, 11] {
+        fast.observe_leave(node);
+        exact.observe_leave(node);
+    }
+    let mut rng_a = Rng::new(0x0DD5E);
+    let mut rng_b = Rng::new(0x0DD5E);
+    let trials = 200_000u64;
+    let mut mismatches = 0u64;
+    for _ in 0..trials {
+        let a = fast.route(&mut rng_a);
+        let b = exact.route(&mut rng_b);
+        assert!(a != 3 && a != 11, "fenwick fallback drew departed node {a}");
+        assert!(b != 3 && b != 11, "exact fallback drew departed node {b}");
+        if a != b {
+            mismatches += 1;
+            let probs = exact.probs();
+            let lo = a.min(b);
+            let hi = a.max(b);
+            let gap: f64 = probs[lo + 1..=hi].iter().sum::<f64>() - probs[hi];
+            assert!(gap.abs() < 1e-9, "non-adjacent disagreement {a} vs {b}");
+        }
+    }
+    assert!(
+        (mismatches as f64) < trials as f64 * 1e-3,
+        "{mismatches} oracle disagreements in {trials} draws"
+    );
+}
+
+#[test]
 fn delay_fenwick_and_exact_policies_stay_in_lockstep_through_churn() {
     // the O(log n) policy and the O(n) oracle must realize the same
     // distribution through a long stream of completion observations

@@ -124,8 +124,16 @@ const RNG_CONSUMERS: &[&str] = &[
     "thread_rng",
 ];
 
-/// Roots of the R1 reachability walk.
-const OBSERVE_ROOTS: &[&str] = &["observe", "observe_node", "observe_completion"];
+/// Roots of the R1 reachability walk — every policy callback that sits on
+/// an engine's central dispatcher path, including the membership channel
+/// (`observe_join` / `observe_leave` fire inside the churn event loop).
+const OBSERVE_ROOTS: &[&str] = &[
+    "observe",
+    "observe_node",
+    "observe_completion",
+    "observe_join",
+    "observe_leave",
+];
 
 /// Impl targets whose float accumulation IS the contract (R5 contexts).
 const FLOAT_SINKS: &[&str] = &["StepAggregator", "Welford"];

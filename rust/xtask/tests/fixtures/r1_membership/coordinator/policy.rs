@@ -1,0 +1,20 @@
+// Fixture: R1 — membership callbacks that consume RNG.
+// Not compiled; parsed by the lint only.
+
+pub struct ShufflingPolicy {
+    rng: Rng,
+    order: Vec<usize>,
+    active: Vec<bool>,
+}
+
+impl SamplingPolicy for ShufflingPolicy {
+    fn observe_join(&mut self, node: usize) {
+        self.active[node] = true;
+        self.rng.shuffle(&mut self.order); // deliberate violation: draws on the join path
+    }
+
+    fn observe_leave(&mut self, node: usize) {
+        self.active[node] = false;
+        let _ = self.rng.usize_below(self.order.len()); // deliberate violation: leave-path draw
+    }
+}

@@ -23,6 +23,21 @@ fn r1_observe_path_rng_draw() {
 }
 
 #[test]
+fn r1_membership_callbacks_rng_draw() {
+    // observe_join / observe_leave are R1 roots: the membership channel
+    // fires inside every engine's churn event loop, so a draw there would
+    // desynchronize the routing stream exactly like one in observe()
+    let v = fixture("r1_membership");
+    assert_eq!(v.len(), 2, "diagnostics: {v:?}");
+    for violation in &v {
+        assert_eq!(violation.rule.name(), "R1");
+        assert_eq!(violation.file, "coordinator/policy.rs");
+    }
+    assert!(v[0].msg.contains("observe_join"), "{}", v[0].msg);
+    assert!(v[1].msg.contains("observe_leave"), "{}", v[1].msg);
+}
+
+#[test]
 fn r2_hashmap_in_deterministic_module() {
     let v = fixture("r2");
     assert_eq!(v.len(), 1, "diagnostics: {v:?}");
