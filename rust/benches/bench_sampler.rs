@@ -1,8 +1,8 @@
 //! Routing-sampler bench: dispatch throughput of the O(n) linear CDF scan
 //! vs the O(1) alias table vs the O(log n) Fenwick tree, the full
 //! adaptive-policy step (observe + route) exact vs Fenwick-backed, and
-//! the batched keyed-exponential service path vs per-draw generator
-//! construction.
+//! the batched keyed service paths (exponential and lognormal block
+//! kernels) vs per-draw generator construction.
 //!
 //! Doubles as the CI regression gate: `--assert-speedup X` exits nonzero
 //! unless the alias sampler beats the linear scan by at least X× at
@@ -17,7 +17,7 @@ use fedqueue::coordinator::policy::{AdaptiveQueuePolicy, FenwickAdaptivePolicy, 
 use fedqueue::util::bench::{black_box, Bencher, JsonReport};
 use fedqueue::util::cli::Args;
 use fedqueue::util::rng::{stream_seed, AliasTable, Rng};
-use fedqueue::util::sampler::{batch_exponential, linear_route, FenwickSampler};
+use fedqueue::util::sampler::{batch_exponential, batch_lognormal, linear_route, FenwickSampler};
 
 /// Two-cluster distribution with mild skew (the paper's shape).
 fn two_cluster_p(n: usize) -> Vec<f64> {
@@ -150,6 +150,39 @@ fn main() {
         batched / scalar
     );
     report.speedup("batched_exp_vs_scalar_block=4096", batched / scalar);
+
+    // the same comparison for the lognormal kernel (two uniforms +
+    // Box-Muller per draw): per-draw generator construction vs the
+    // chunked block sampler — again bit-identical values
+    let cvs: Vec<f64> = (0..block).map(|k| if k < block / 2 { 0.5 } else { 1.2 }).collect();
+    let means: Vec<f64> = rates.iter().map(|r| 1.0 / r).collect();
+    let scalar_ln = {
+        let r = b.run(&format!("service/scalar-lognormal/block={block}"), || {
+            for k in 0..block {
+                out[k] = Rng::new(seeds[k]).lognormal_mean_cv(means[k], cvs[k]);
+            }
+            black_box(out[block - 1]);
+        });
+        let per_sec = r.throughput(block as f64);
+        println!("    -> {:.2} M draws/s", per_sec / 1e6);
+        report.throughput(&format!("service/scalar-lognormal/block={block}"), per_sec);
+        per_sec
+    };
+    let batched_ln = {
+        let r = b.run(&format!("service/batched-lognormal/block={block}"), || {
+            batch_lognormal(&seeds, &means, &cvs, &mut out);
+            black_box(out[block - 1]);
+        });
+        let per_sec = r.throughput(block as f64);
+        println!("    -> {:.2} M draws/s", per_sec / 1e6);
+        report.throughput(&format!("service/batched-lognormal/block={block}"), per_sec);
+        per_sec
+    };
+    println!(
+        "    == keyed lognormal: batched {:.1}x over per-draw construction",
+        batched_ln / scalar_ln
+    );
+    report.speedup("batched_lognormal_vs_scalar_block=4096", batched_ln / scalar_ln);
 
     let (linear, alias) = gate.expect("n = 10_000 case always runs");
     let speedup = alias / linear;

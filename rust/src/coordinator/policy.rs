@@ -45,7 +45,7 @@
 //!   against (`tests/statistical_samplers.rs`).
 
 use crate::bound::{BoundParams, MiSource, TwoClusterStudy};
-use crate::util::rng::{AliasTable, Rng};
+use crate::util::rng::{u64_to_uniform, AliasTable, Rng};
 use crate::util::sampler::{linear_route, masked_linear_route, FenwickSampler};
 
 /// The routing-distribution interface consulted by the simulator.
@@ -120,6 +120,31 @@ pub trait SamplingPolicy {
 
     /// Sample the next node K_{k+1} from the distribution in force.
     fn route(&mut self, rng: &mut Rng) -> usize;
+
+    /// Whether this policy supports the block-resolved routing-draw path:
+    /// [`Self::route_prefetched`] fed the routing stream's next raw u64 is
+    /// bit-identical (index AND draws consumed) to [`Self::route`].  The
+    /// batch arena only prefetches raw draws for policies that opt in;
+    /// everything else keeps the scalar path.  Default false so
+    /// third-party policies are unaffected.
+    fn prefetch_routes(&self) -> bool {
+        false
+    }
+
+    /// [`Self::route`] with the routing stream's FIRST raw u64 already
+    /// drawn (`first` must be the value `rng` would have produced next);
+    /// any further draws the sampler needs — alias accept uniforms, rare
+    /// Lemire rejections — continue on `rng`.  Only called when
+    /// [`Self::prefetch_routes`] returns true; the default is a loud
+    /// debug-build assertion with a release-mode fallback that re-routes
+    /// scalar-ly (which would skip a stream value — hence the assertion).
+    fn route_prefetched(&mut self, _first: u64, rng: &mut Rng) -> usize {
+        debug_assert!(
+            false,
+            "route_prefetched on a policy that does not opt in (prefetch_routes() == false)"
+        );
+        self.route(rng)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -225,6 +250,18 @@ impl SamplingPolicy for StaticPolicy {
             // membership-restricted: one-uniform masked CDF scan over the
             // conditioned distribution p_i / active_mass
             masked_linear_route(&self.p, &self.active, self.active_mass, rng.uniform())
+        }
+    }
+
+    fn prefetch_routes(&self) -> bool {
+        true
+    }
+
+    fn route_prefetched(&mut self, first: u64, rng: &mut Rng) -> usize {
+        if self.inactive == 0 {
+            self.alias.sample_prefetched(first, rng)
+        } else {
+            masked_linear_route(&self.p, &self.active, self.active_mass, u64_to_uniform(first))
         }
     }
 }
@@ -401,6 +438,25 @@ impl SamplingPolicy for FenwickAdaptivePolicy {
         }
         self.sampler.sample(rng)
     }
+
+    fn prefetch_routes(&self) -> bool {
+        true
+    }
+
+    fn route_prefetched(&mut self, first: u64, rng: &mut Rng) -> usize {
+        if self.positive == 0 {
+            if self.inactive == 0 {
+                return self.base_alias.sample_prefetched(first, rng);
+            }
+            return masked_linear_route(
+                &self.base,
+                &self.active,
+                self.active_base_mass,
+                u64_to_uniform(first),
+            );
+        }
+        self.sampler.sample_prefetched(first)
+    }
 }
 
 /// The exact adaptive policy: recomputes and renormalizes all n
@@ -519,6 +575,14 @@ impl SamplingPolicy for AdaptiveQueuePolicy {
         // reference CDF scan (fixed fall-through: never lands on a
         // trailing zero-mass node, see util::sampler::linear_route)
         linear_route(&self.probs, rng.uniform())
+    }
+
+    fn prefetch_routes(&self) -> bool {
+        true
+    }
+
+    fn route_prefetched(&mut self, first: u64, _rng: &mut Rng) -> usize {
+        linear_route(&self.probs, u64_to_uniform(first))
     }
 }
 
@@ -698,6 +762,25 @@ impl SamplingPolicy for FenwickDelayAdaptivePolicy {
         }
         self.sampler.sample(rng)
     }
+
+    fn prefetch_routes(&self) -> bool {
+        true
+    }
+
+    fn route_prefetched(&mut self, first: u64, rng: &mut Rng) -> usize {
+        if self.positive == 0 {
+            if self.inactive == 0 {
+                return self.base_alias.sample_prefetched(first, rng);
+            }
+            return masked_linear_route(
+                &self.base,
+                &self.active,
+                self.active_base_mass,
+                u64_to_uniform(first),
+            );
+        }
+        self.sampler.sample_prefetched(first)
+    }
 }
 
 /// The exact delay-feedback policy: updates the completed node's delay
@@ -814,6 +897,14 @@ impl SamplingPolicy for DelayAdaptivePolicy {
 
     fn route(&mut self, rng: &mut Rng) -> usize {
         linear_route(&self.probs, rng.uniform())
+    }
+
+    fn prefetch_routes(&self) -> bool {
+        true
+    }
+
+    fn route_prefetched(&mut self, first: u64, _rng: &mut Rng) -> usize {
+        linear_route(&self.probs, u64_to_uniform(first))
     }
 }
 
@@ -1416,6 +1507,71 @@ mod tests {
         }
         assert_eq!(fast.delay_estimates()[0], 0.0);
         assert_eq!(exact.delay_estimates()[0], 0.0);
+    }
+
+    #[test]
+    fn route_prefetched_is_bit_identical_to_route() {
+        // every built-in opts into the block-resolved routing path; feeding
+        // route_prefetched the raw u64 the scalar stream would have drawn
+        // must reproduce the same index AND leave the generator at the
+        // same position, in every reachable sampler state: full
+        // membership, masked membership, and the all-underflowed fallback
+        fn mk(name: &str, base: &[f64], gamma: f64) -> Box<dyn SamplingPolicy> {
+            let b = base.to_vec();
+            match name {
+                "static" => Box::new(StaticPolicy::new(b).unwrap()),
+                "adaptive" => Box::new(FenwickAdaptivePolicy::new(b, gamma).unwrap()),
+                "adaptive-exact" => Box::new(AdaptiveQueuePolicy::new(b, gamma).unwrap()),
+                "delay-adaptive" => {
+                    Box::new(FenwickDelayAdaptivePolicy::new(b, gamma, 0.0).unwrap())
+                }
+                _ => Box::new(DelayAdaptivePolicy::new(b, gamma, 0.0).unwrap()),
+            }
+        }
+        fn check(name: &str, state: &str, pol: &mut dyn SamplingPolicy, seed: u64) {
+            assert!(pol.prefetch_routes(), "{name} must opt in");
+            let mut scalar = Rng::new(seed);
+            let mut pre = scalar.clone();
+            for k in 0..5_000 {
+                let want = pol.route(&mut scalar);
+                let first = pre.next_u64();
+                let got = pol.route_prefetched(first, &mut pre);
+                assert_eq!(got, want, "{name} {state} draw {k}");
+                assert_eq!(
+                    pre.state_fingerprint(),
+                    scalar.state_fingerprint(),
+                    "{name} {state} draw {k}: stream position diverged"
+                );
+            }
+        }
+        let base = [0.1, 0.2, 0.3, 0.4];
+        let names = [
+            "static",
+            "adaptive",
+            "adaptive-exact",
+            "delay-adaptive",
+            "delay-adaptive-exact",
+        ];
+        for name in names {
+            // fresh distribution
+            let mut pol = mk(name, &base, 0.7);
+            check(name, "fresh", pol.as_mut(), 0xCAFE);
+            // tilted + membership-masked
+            let mut pol = mk(name, &base, 0.7);
+            pol.observe(&[2, 0, 5, 1]);
+            pol.observe_completion(2, 7, 7.0);
+            pol.observe_leave(3);
+            check(name, "masked", pol.as_mut(), 0xCAFF);
+            // all-underflowed fallback (static has no such state)
+            if name != "static" {
+                let mut pol = mk(name, &base, 1e6);
+                pol.observe(&[1000; 4]);
+                for i in 0..4 {
+                    pol.observe_completion(i, 1000, 1000.0);
+                }
+                check(name, "underflow", pol.as_mut(), 0xCB00);
+            }
+        }
     }
 
     #[test]

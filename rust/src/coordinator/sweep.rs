@@ -76,7 +76,7 @@
 //! slow_fraction = [0.5]
 //! gamma = [0.5]              # adaptive / delay-adaptive pressure
 //! beta = [0.9]               # delay-adaptive EWMA momentum
-//! service = ["exp"]          # exp | det | lognormal
+//! service = ["exp"]          # exp | det | lognormal | lognormal:<cv>
 //! policies = ["uniform", "optimal", "adaptive"]
 //! # p_fast = [0.004]         # optional static-tilt axis
 //! # algos = ["gasync"]       # train mode only
@@ -96,8 +96,8 @@ use super::policy::{optimal_two_cluster, PolicyCtx, PolicyRegistry, SamplingPoli
 use crate::coordinator::Experiment;
 use crate::runtime::BackendKind;
 use crate::simulator::{
-    run_batch, run_with_policy, ChurnConfig, EngineConfig, EngineKind, ServiceDist, ServiceFamily,
-    SimConfig, SimResult,
+    batch_vectorizes, run_batch, run_with_policy, ChurnConfig, EngineConfig, EngineKind,
+    ServiceDist, ServiceFamily, SimConfig, SimResult,
 };
 use crate::util::json::Json;
 use crate::util::mem::peak_rss_mib;
@@ -198,11 +198,15 @@ impl ScenarioPoint {
         })
     }
 
-    fn service_name(&self) -> &'static str {
+    fn service_name(&self) -> String {
         match self.service {
-            ServiceFamily::Exponential => "exp",
-            ServiceFamily::Deterministic => "det",
-            ServiceFamily::LogNormal(_) => "lognormal",
+            ServiceFamily::Exponential => "exp".into(),
+            ServiceFamily::Deterministic => "det".into(),
+            // the bare spelling stays the label of the historical default
+            // cv so existing reports diff cleanly; any other cv is spelled
+            // out, keeping grid legs like lognormal:1.2 distinguishable
+            ServiceFamily::LogNormal(cv) if cv == 0.5 => "lognormal".into(),
+            ServiceFamily::LogNormal(cv) => format!("lognormal:{cv}"),
         }
     }
 
@@ -776,13 +780,22 @@ fn sim_metrics(s: &ScenarioPoint, res: &SimResult) -> BTreeMap<String, f64> {
 /// platforms without a probe (see util::mem).  Batched replications
 /// report their arena's per-replication share of the wall clock plus the
 /// arena width.
-fn sim_perf(steps: u64, wall: f64, batch_width: Option<u64>) -> BTreeMap<String, f64> {
+fn sim_perf(
+    steps: u64,
+    wall: f64,
+    batch_width: Option<u64>,
+    vectorized: bool,
+) -> BTreeMap<String, f64> {
     let mut perf = BTreeMap::new();
     perf.insert("wall_secs".into(), wall);
     perf.insert(
         "events_per_sec".into(),
         steps as f64 / wall.max(f64::MIN_POSITIVE),
     );
+    // 1.0 when the cell's service vector is single-family, i.e. the batch
+    // arena draws its durations through a vectorized block kernel; 0.0
+    // flags cells paying the scalar mixed-family fallback
+    perf.insert("service_vectorized".into(), f64::from(u8::from(vectorized)));
     if let Some(rss) = peak_rss_mib() {
         perf.insert("peak_rss_mib".into(), rss);
     }
@@ -801,17 +814,14 @@ fn simulate_replication(
 ) -> Result<RepResult, String> {
     let s = &cell.scenario;
     let policy = cell_policy(cell, cached_p)?;
+    let service = ServiceDist::from_rates(&s.rates(), s.service);
+    let vectorized = batch_vectorizes(&service);
     let cfg = SimConfig {
         seed,
         engine,
         churn: spec.churn.clone(),
         pool_capacity: spec.pool_capacity,
-        ..SimConfig::new(
-            policy.probs(),
-            ServiceDist::from_rates(&s.rates(), s.service),
-            s.concurrency,
-            s.steps,
-        )
+        ..SimConfig::new(policy.probs(), service, s.concurrency, s.steps)
     };
     // lint-allow(R3): wall-clock feeds only the `perf` JSON block, which
     // to_json_deterministic() excludes from the comparison payload
@@ -820,7 +830,7 @@ fn simulate_replication(
     let wall = t0.elapsed().as_secs_f64();
     Ok(RepResult {
         metrics: sim_metrics(s, &res),
-        perf: sim_perf(s.steps, wall, None),
+        perf: sim_perf(s.steps, wall, None, vectorized),
         curve: Vec::new(),
     })
 }
@@ -839,16 +849,13 @@ fn simulate_cell_batch(
 ) -> Result<Vec<RepResult>, String> {
     let s = &cell.scenario;
     let first = cell_policy(cell, cached_p)?;
+    let service = ServiceDist::from_rates(&s.rates(), s.service);
+    let vectorized = batch_vectorizes(&service);
     let base = SimConfig {
         engine: EngineConfig::batch(),
         churn: spec.churn.clone(),
         pool_capacity: spec.pool_capacity,
-        ..SimConfig::new(
-            first.probs(),
-            ServiceDist::from_rates(&s.rates(), s.service),
-            s.concurrency,
-            s.steps,
-        )
+        ..SimConfig::new(first.probs(), service, s.concurrency, s.steps)
     };
     let seeds: Vec<u64> = (seed_lo..seed_hi)
         .map(|idx| stream_seed(spec.base_seed, &[cell.id as u64, idx]))
@@ -871,7 +878,7 @@ fn simulate_cell_batch(
         .iter()
         .map(|res| RepResult {
             metrics: sim_metrics(s, res),
-            perf: sim_perf(s.steps, wall, Some(width)),
+            perf: sim_perf(s.steps, wall, Some(width), vectorized),
             curve: Vec::new(),
         })
         .collect())
@@ -1242,10 +1249,7 @@ impl SweepReport {
                     "p_fast".to_string(),
                     s.p_fast.map(Json::Num).unwrap_or(Json::Null),
                 );
-                sc.insert(
-                    "service".to_string(),
-                    Json::Str(s.service_name().to_string()),
-                );
+                sc.insert("service".to_string(), Json::Str(s.service_name()));
                 let mut obj = BTreeMap::new();
                 obj.insert("id".to_string(), Json::Num(c.cell.id as f64));
                 obj.insert("label".to_string(), Json::Str(c.cell.label()));

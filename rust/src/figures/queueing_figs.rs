@@ -9,6 +9,7 @@ use crate::simulator::{
 };
 use crate::util::stats::Histogram;
 use crate::util::table::Series;
+use crate::util::trace::TraceReader;
 
 /// Fig 1: evolution of m_{i,k}^T for node i=1 (fast), networks of n=10 and
 /// n=50 with full concurrency C=n; nodes 0–4 are 10× faster; T=500.
@@ -50,23 +51,8 @@ pub fn fig1(reps: u64) -> Result<(Series, String), String> {
     Ok((series, summary))
 }
 
-/// Shared driver for the delay-histogram figures.
-struct DelayFigure {
-    result: SimResult,
-    n_fast: usize,
-}
 
-fn histogram_series(fig: &DelayFigure, hi_fast: f64, hi_slow: f64) -> Series {
-    let mut h_fast = Histogram::new(0.0, hi_fast, 50);
-    let mut h_slow = Histogram::new(0.0, hi_slow, 50);
-    for t in &fig.result.tasks {
-        let d = t.delay_steps() as f64;
-        if (t.node as usize) < fig.n_fast {
-            h_fast.push(d);
-        } else {
-            h_slow.push(d);
-        }
-    }
+fn histogram_pair_series(h_fast: &Histogram, h_slow: &Histogram) -> Series {
     let mut s = Series::new(&["fast_bin", "fast_count", "slow_bin", "slow_count"]);
     for i in 0..50 {
         s.push(vec![
@@ -79,14 +65,64 @@ fn histogram_series(fig: &DelayFigure, hi_fast: f64, hi_slow: f64) -> Series {
     s
 }
 
+fn histogram_series(result: &SimResult, n_fast: usize, hi_fast: f64, hi_slow: f64) -> Series {
+    let mut h_fast = Histogram::new(0.0, hi_fast, 50);
+    let mut h_slow = Histogram::new(0.0, hi_slow, 50);
+    for t in &result.tasks {
+        let d = t.delay_steps() as f64;
+        if (t.node as usize) < n_fast {
+            h_fast.push(d);
+        } else {
+            h_slow.push(d);
+        }
+    }
+    histogram_pair_series(&h_fast, &h_slow)
+}
+
+/// The same fast/slow delay histograms, built by STREAMING a disk-spilled
+/// task trace (`util::trace` layout) instead of walking resident records —
+/// the figures-layer reader for `SimConfig::trace_path` runs.
+pub fn histogram_series_from_trace(
+    path: &str,
+    n_fast: usize,
+    hi_fast: f64,
+    hi_slow: f64,
+) -> Result<Series, String> {
+    let mut h_fast = Histogram::new(0.0, hi_fast, 50);
+    let mut h_slow = Histogram::new(0.0, hi_slow, 50);
+    let mut r = TraceReader::open(path)?;
+    while let Some(t) = r.next_record()? {
+        let d = t.delay_steps() as f64;
+        if (t.node as usize) < n_fast {
+            h_fast.push(d);
+        } else {
+            h_slow.push(d);
+        }
+    }
+    Ok(histogram_pair_series(&h_fast, &h_slow))
+}
+
 /// Fig 5 / Fig 10: n=10 (5 fast μ=1.2, 5 slow μ=1), C=1000, uniform p.
 /// Paper: mean delays ≈ 59 (fast) and 1938 (slow) over T=1e6 steps.
 pub fn fig5(steps: u64) -> Result<(Series, String), String> {
+    fig5_inner(steps, None)
+}
+
+/// Fig 5 with the task records disk-spilled to `trace_path`
+/// (`SimConfig::trace_path`) instead of held resident, then streamed back
+/// through the trace reader: identical series and summary to [`fig5`]
+/// with O(1) record memory — the 10^6+-step setting.
+pub fn fig5_spilled(steps: u64, trace_path: &str) -> Result<(Series, String), String> {
+    fig5_inner(steps, Some(trace_path))
+}
+
+fn fig5_inner(steps: u64, spill: Option<&str>) -> Result<(Series, String), String> {
     let n = 10;
     let rates: Vec<f64> = (0..n).map(|i| if i < 5 { 1.2 } else { 1.0 }).collect();
     let cfg = SimConfig {
         seed: 0xF5,
-        record_tasks: true,
+        record_tasks: spill.is_none(),
+        trace_path: spill.map(String::from),
         ..SimConfig::new(
             vec![0.1; n],
             ServiceDist::from_rates(&rates, ServiceFamily::Exponential),
@@ -95,16 +131,18 @@ pub fn fig5(steps: u64) -> Result<(Series, String), String> {
         )
     };
     let result = run(cfg)?;
-    let fig = DelayFigure { result, n_fast: 5 };
-    let series = histogram_series(&fig, 200.0, 4000.0);
-    let fast = fig.result.cluster_delay(0..5);
-    let slow = fig.result.cluster_delay(5..10);
+    let series = match spill {
+        None => histogram_series(&result, 5, 200.0, 4000.0),
+        Some(path) => histogram_series_from_trace(path, 5, 200.0, 4000.0)?,
+    };
+    let fast = result.cluster_delay(0..5);
+    let slow = result.cluster_delay(5..10);
     let tc = TwoCluster::uniform(10, 5, 1.2, 1.0, 1000);
     let (bf, bs) = tc.delay_bounds();
     let summary = format!(
         "fig5: mean delay fast {fast:.0} / slow {slow:.0} (paper: 59 / 1938); \
          theory bounds {bf:.0} / {bs:.0}; τ_max {} ≫ means (paper's point)",
-        fig.result.tau_max
+        result.tau_max
     );
     Ok((series, summary))
 }
@@ -128,10 +166,9 @@ pub fn fig11(steps: u64) -> Result<(Series, String), String> {
         )
     };
     let result = run(cfg)?;
-    let fig = DelayFigure { result, n_fast: 5 };
-    let series = histogram_series(&fig, 60.0, 2000.0);
-    let fast = fig.result.cluster_delay(0..5);
-    let slow = fig.result.cluster_delay(5..10);
+    let series = histogram_series(&result, 5, 60.0, 2000.0);
+    let fast = result.cluster_delay(0..5);
+    let slow = result.cluster_delay(5..10);
     let summary = format!(
         "fig11: optimal sampling p=7.5e-3 → mean delay fast {fast:.1} / slow {slow:.0} \
          (paper: ÷10 and ÷2 vs fig5's 59 / 1938)"
@@ -242,5 +279,22 @@ mod tests {
     fn fig12_cluster_ordering() {
         let (_, summary) = fig12(50_000).unwrap();
         assert!(summary.contains("fig12"));
+    }
+
+    #[test]
+    fn fig5_spilled_reproduces_the_resident_figure_exactly() {
+        let dir = std::env::temp_dir().join("fq_fig_traces");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fig5.trace").to_string_lossy().into_owned();
+        let (resident, sum_a) = fig5(20_000).unwrap();
+        let (spilled, sum_b) = fig5_spilled(20_000, &path).unwrap();
+        assert_eq!(sum_a, sum_b, "summaries must agree bit for bit");
+        assert_eq!(resident.rows.len(), spilled.rows.len());
+        for (ra, rb) in resident.rows.iter().zip(&spilled.rows) {
+            for (a, b) in ra.iter().zip(rb) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        std::fs::remove_file(&path).ok();
     }
 }

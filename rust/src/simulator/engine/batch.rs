@@ -23,10 +23,19 @@
 //!   service draws into a pending block; the end of each round resolves
 //!   the whole block at once.  Durations are keyed by (replication's
 //!   service root, node, service count) — pure functions of the key — so
-//!   deferral and batch order cannot change any value.  For exponential
-//!   cells the block goes through `util::sampler::batch_exponential`
-//!   (chunked integer RNG expansion + inversion, bit-identical to the
-//!   scalar draw); other families fall back to the scalar keyed path.
+//!   deferral and batch order cannot change any value.  Every
+//!   single-family cell (all-exponential, all-deterministic,
+//!   all-lognormal) goes through its chunked-lane kernel in
+//!   `util::sampler` — bit-identical to the scalar keyed draw by
+//!   construction; only mixed-family cells fall back to scalar keyed
+//!   draws, flagged once on stderr.
+//! * **Prefetched routing draws.**  Round boundaries also block-resolve
+//!   each replication's next raw routing u64, so the steady-state step
+//!   never constructs or seeds a scalar generator.  The step's dispatch
+//!   (or the first churn re-route) drains the slot through the policy's
+//!   `route_prefetched` continuation, which is draw-for-draw identical to
+//!   the scalar `route` path — the slot always holds the stream's next
+//!   raw value, whoever consumes it.
 //!
 //! # Determinism contract
 //!
@@ -50,7 +59,79 @@ use crate::coordinator::policy::SamplingPolicy;
 use crate::simulator::network::{SimConfig, SimResult, StepOutcome, TaskRecord};
 use crate::simulator::service::ServiceDist;
 use crate::util::rng::Rng;
-use crate::util::sampler::batch_exponential;
+use crate::util::sampler::{batch_deterministic, batch_exponential, batch_lognormal};
+use crate::util::trace::TraceWriter;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Process-wide once-flag for the scalar-fallback notice: a heterogeneous
+/// service cell silently de-vectorizing the whole sweep is exactly the
+/// regression the raw-speed work guards against, so the first fallback
+/// block says so on stderr (once — sweeps run thousands of blocks).
+static SCALAR_FALLBACK_LOGGED: AtomicBool = AtomicBool::new(false);
+
+/// The vectorized sampling kernel a cell's service-family mix admits.
+/// One family across all nodes → that family's chunked-lane batch kernel
+/// (`util::sampler::batch_*`, each bit-identical to the scalar keyed
+/// draw); mixed families → the scalar keyed fallback.
+enum BatchSampling {
+    /// every node exponential — per-node rates
+    Exp { rates: Vec<f64> },
+    /// every node deterministic — per-node means (no RNG consumed)
+    Det { means: Vec<f64> },
+    /// every node log-normal — per-node (mean, cv)
+    LogNormal { means: Vec<f64>, cvs: Vec<f64> },
+    /// heterogeneous families: scalar keyed draws, flagged loudly
+    Mixed,
+}
+
+impl BatchSampling {
+    fn of(service: &[ServiceDist]) -> BatchSampling {
+        let exp: Option<Vec<f64>> = service
+            .iter()
+            .map(|d| match d {
+                ServiceDist::Exp { rate } => Some(*rate),
+                _ => None,
+            })
+            .collect();
+        if let Some(rates) = exp {
+            return BatchSampling::Exp { rates };
+        }
+        let det: Option<Vec<f64>> = service
+            .iter()
+            .map(|d| match d {
+                ServiceDist::Det { mean } => Some(*mean),
+                _ => None,
+            })
+            .collect();
+        if let Some(means) = det {
+            return BatchSampling::Det { means };
+        }
+        let log: Option<Vec<(f64, f64)>> = service
+            .iter()
+            .map(|d| match d {
+                ServiceDist::LogNormal { mean, cv } => Some((*mean, *cv)),
+                _ => None,
+            })
+            .collect();
+        if let Some(mc) = log {
+            let (means, cvs) = mc.into_iter().unzip();
+            return BatchSampling::LogNormal { means, cvs };
+        }
+        BatchSampling::Mixed
+    }
+
+    fn vectorized(&self) -> bool {
+        !matches!(self, BatchSampling::Mixed)
+    }
+}
+
+/// Whether a cell with these per-node service distributions takes the
+/// vectorized batched sampling path (one family across all nodes) or the
+/// scalar keyed fallback.  The sweep layer reports this per cell in its
+/// perf block so a de-vectorization regression is visible in the JSON.
+pub fn batch_vectorizes(service: &[ServiceDist]) -> bool {
+    BatchSampling::of(service).vectorized()
+}
 
 /// A deferred service draw: everything needed to materialize the
 /// completion event once the round's block is sampled.
@@ -75,9 +156,8 @@ pub(crate) struct BatchArena {
     n: usize,
     /// shared per-node service distributions (identical across reps)
     service: Vec<ServiceDist>,
-    /// per-node rates when EVERY distribution is exponential — enables the
-    /// vectorized sampling path; `None` falls back to scalar keyed draws
-    exp_rates: Option<Vec<f64>>,
+    /// the vectorized kernel this cell's family mix admits
+    sampling: BatchSampling,
     /// one pool for all replications: R·n virtual nodes, capacity R·C
     pool: TaskPool,
     /// per-(rep, node) services started, replication-major like the pool
@@ -86,6 +166,13 @@ pub(crate) struct BatchArena {
     calendars: Vec<ShardCalendar>,
     policies: Vec<Box<dyn SamplingPolicy>>,
     route_rng: Vec<Rng>,
+    /// one-deep prefetched raw routing draw per replication, block-
+    /// resolved at round boundaries for policies that opt in
+    /// (`SamplingPolicy::prefetch_routes`).  The slot always holds the
+    /// stream's NEXT raw u64, so draining it first keeps any interleaving
+    /// of prefetched and scalar consumption draw-for-draw identical to
+    /// the heap oracle.
+    route_prefetch: Vec<Option<u64>>,
     /// per-replication keyed service-stream roots
     svc_base: Vec<u64>,
     seq: Vec<u64>,
@@ -99,6 +186,7 @@ pub(crate) struct BatchArena {
     // reusable scratch for the vectorized sampler and bulk observation
     seed_buf: Vec<u64>,
     rate_buf: Vec<f64>,
+    cv_buf: Vec<f64>,
     dur_buf: Vec<f64>,
     lens_buf: Vec<u32>,
 }
@@ -135,26 +223,25 @@ impl BatchArena {
         }
         let reps = seeds.len();
         let cap = base.effective_pool_capacity();
-        let exp_rates = base
-            .service
-            .iter()
-            .map(|d| match d {
-                ServiceDist::Exp { rate } => Some(*rate),
-                _ => None,
-            })
-            .collect::<Option<Vec<f64>>>();
+        // churn-off steady state holds at most min(n, C) completions per
+        // replication calendar (one per busy node; round-deferred draws
+        // sit in `pending`, not the calendar), so the heaps never regrow
+        let cal_cap = n.min(cap) + 1;
         let mut arena = BatchArena {
             n,
             service: base.service.clone(),
-            exp_rates,
+            sampling: BatchSampling::of(&base.service),
             pool: TaskPool::new(reps * n, reps * cap),
             svc_count: vec![0; reps * n],
-            calendars: (0..reps).map(|_| ShardCalendar::new()).collect(),
+            calendars: (0..reps)
+                .map(|_| ShardCalendar::with_capacity(cal_cap))
+                .collect(),
             policies: Vec::new(),
             route_rng: seeds
                 .iter()
                 .map(|&s| Rng::new(s).derive(ROUTE_STREAM))
                 .collect(),
+            route_prefetch: vec![None; reps],
             svc_base: seeds.iter().map(|&s| service_seed(s)).collect(),
             seq: vec![0; reps],
             now: vec![0.0; reps],
@@ -167,6 +254,7 @@ impl BatchArena {
                 .map(|c| seeds.iter().map(|&s| ChurnRuntime::new(c, s, n)).collect()),
             seed_buf: Vec::new(),
             rate_buf: Vec::new(),
+            cv_buf: Vec::new(),
             dur_buf: Vec::new(),
             lens_buf: Vec::with_capacity(n),
         };
@@ -218,9 +306,34 @@ impl BatchArena {
             }
         }
         arena.policies = policies;
-        // the C·R initial services are the first (and largest) sampled block
-        arena.flush_pending();
+        // the C·R initial services are the first (and largest) sampled
+        // block; the first routing draws prefetch right behind them
+        arena.end_round();
         Ok(arena)
+    }
+
+    /// Round boundary: resolve the round's deferred service block, then
+    /// block-resolve the next raw routing draw of every replication whose
+    /// policy opts into the prefetched path.
+    pub(crate) fn end_round(&mut self) {
+        self.flush_pending();
+        for r in 0..self.route_prefetch.len() {
+            if self.route_prefetch[r].is_none() && self.policies[r].prefetch_routes() {
+                self.route_prefetch[r] = Some(self.route_rng[r].next_u64());
+            }
+        }
+    }
+
+    /// Draw replication `r`'s next routing destination, draining the
+    /// prefetched raw draw first (it is always the stream's next value;
+    /// extra consumers within a round — churn leave re-routes — continue
+    /// on the scalar path, so the stream order never changes).
+    #[inline]
+    fn draw_route(&mut self, r: usize) -> usize {
+        match self.route_prefetch[r].take() {
+            Some(first) => self.policies[r].route_prefetched(first, &mut self.route_rng[r]),
+            None => self.policies[r].route(&mut self.route_rng[r]),
+        }
     }
 
     /// Record a deferred service start for replication `r` at `node`.
@@ -268,46 +381,81 @@ impl BatchArena {
     }
 
     /// Resolve every deferred draw of the round and push the completion
-    /// events.  Vectorized for exponential cells, scalar keyed otherwise —
-    /// identical values either way (the key fully determines the draw).
+    /// events.  Vectorized for single-family cells, scalar keyed for mixed
+    /// cells — identical values either way (the key fully determines the
+    /// draw).
     pub(crate) fn flush_pending(&mut self) {
         if self.pending.is_empty() {
             return;
         }
-        if let Some(rates) = &self.exp_rates {
-            self.seed_buf.clear();
-            self.rate_buf.clear();
-            for p in &self.pending {
-                self.seed_buf.push(crate::util::rng::stream_seed(
-                    self.svc_base[p.rep as usize],
-                    &[p.node as u64, p.count],
-                ));
-                self.rate_buf.push(rates[p.node as usize]);
+        self.dur_buf.clear();
+        match &self.sampling {
+            BatchSampling::Exp { rates } => {
+                self.seed_buf.clear();
+                self.rate_buf.clear();
+                for p in &self.pending {
+                    self.seed_buf.push(crate::util::rng::stream_seed(
+                        self.svc_base[p.rep as usize],
+                        &[p.node as u64, p.count],
+                    ));
+                    self.rate_buf.push(rates[p.node as usize]);
+                }
+                self.dur_buf.resize(self.pending.len(), 0.0);
+                batch_exponential(&self.seed_buf, &self.rate_buf, &mut self.dur_buf);
             }
-            self.dur_buf.clear();
-            self.dur_buf.resize(self.pending.len(), 0.0);
-            batch_exponential(&self.seed_buf, &self.rate_buf, &mut self.dur_buf);
-            for (p, &dur) in self.pending.iter().zip(&self.dur_buf) {
-                self.calendars[p.rep as usize].push(Event {
-                    time: p.start + dur * p.scale,
-                    seq: p.seq,
-                    node: p.node,
-                });
+            BatchSampling::Det { means } => {
+                // no RNG consumed — the "batch" is a mean lookup per draw
+                self.rate_buf.clear();
+                for p in &self.pending {
+                    self.rate_buf.push(means[p.node as usize]);
+                }
+                self.dur_buf.resize(self.pending.len(), 0.0);
+                batch_deterministic(&self.rate_buf, &mut self.dur_buf);
             }
-        } else {
-            for p in &self.pending {
-                let dur = service_duration(
-                    self.svc_base[p.rep as usize],
-                    &self.service[p.node as usize],
-                    p.node,
-                    p.count,
+            BatchSampling::LogNormal { means, cvs } => {
+                self.seed_buf.clear();
+                self.rate_buf.clear();
+                self.cv_buf.clear();
+                for p in &self.pending {
+                    self.seed_buf.push(crate::util::rng::stream_seed(
+                        self.svc_base[p.rep as usize],
+                        &[p.node as u64, p.count],
+                    ));
+                    self.rate_buf.push(means[p.node as usize]);
+                    self.cv_buf.push(cvs[p.node as usize]);
+                }
+                self.dur_buf.resize(self.pending.len(), 0.0);
+                batch_lognormal(&self.seed_buf, &self.rate_buf, &self.cv_buf, &mut self.dur_buf);
+            }
+            BatchSampling::Mixed => {
+                // every single-family cell has a vectorized kernel above,
+                // so landing here means the cell genuinely mixes families
+                debug_assert!(
+                    !batch_vectorizes(&self.service),
+                    "scalar fallback taken for a single-family cell"
                 );
-                self.calendars[p.rep as usize].push(Event {
-                    time: p.start + dur * p.scale,
-                    seq: p.seq,
-                    node: p.node,
-                });
+                if !SCALAR_FALLBACK_LOGGED.swap(true, Ordering::Relaxed) {
+                    eprintln!(
+                        "note: mixed service families in cell — batch engine \
+                         falling back to scalar keyed service draws"
+                    );
+                }
+                for p in &self.pending {
+                    self.dur_buf.push(service_duration(
+                        self.svc_base[p.rep as usize],
+                        &self.service[p.node as usize],
+                        p.node,
+                        p.count,
+                    ));
+                }
             }
+        }
+        for (p, &dur) in self.pending.iter().zip(&self.dur_buf) {
+            self.calendars[p.rep as usize].push(Event {
+                time: p.start + dur * p.scale,
+                seq: p.seq,
+                node: p.node,
+            });
         }
         self.pending.clear();
     }
@@ -429,7 +577,7 @@ impl BatchArena {
                     .extend_from_slice(self.pool.qlens_of(r * self.n, self.n));
                 self.policies[r].observe(&self.lens_buf);
             }
-            let dest = self.policies[r].route(&mut self.route_rng[r]);
+            let dest = self.draw_route(r);
             let dlen = self.pool.push(r * self.n + dest, d_step, d_time, d_prob);
             let dest_stalled = self.churn.as_ref().unwrap()[r].stalled[dest];
             if dlen == 1 && !dest_stalled {
@@ -502,7 +650,7 @@ impl BatchArena {
                 .extend_from_slice(self.pool.qlens_of(r * self.n, self.n));
             self.policies[r].observe(&self.lens_buf);
         }
-        let next = self.policies[r].route(&mut self.route_rng[r]);
+        let next = self.draw_route(r);
         let next_prob = self.policies[r].prob_of(next);
         let next_len = self
             .pool
@@ -561,6 +709,13 @@ pub fn run_batch(
             })
         })
         .collect();
+    // disk-spilled traces: one file per replication, `.rep<r>`-suffixed
+    let mut traces: Vec<Option<TraceWriter>> = match &base.trace_path {
+        Some(p) => (0..reps)
+            .map(|r| TraceWriter::create(&format!("{p}.rep{r}")).map(Some))
+            .collect::<Result<_, String>>()?,
+        None => (0..reps).map(|_| None).collect(),
+    };
     for _ in 0..base.steps {
         // one interleaved round: every replication advances one CS step,
         // then the round's service draws resolve as one sampled block
@@ -577,8 +732,14 @@ pub fn run_batch(
                 arena.pool.qlen(r * n + j),
                 arena.busy[r],
             );
+            if let Some(w) = traces[r].as_mut() {
+                w.push(&out.record)?;
+            }
         }
-        arena.flush_pending();
+        arena.end_round();
+    }
+    for w in traces.into_iter().flatten() {
+        w.finish()?;
     }
     Ok(aggs
         .into_iter()
@@ -607,7 +768,7 @@ impl SingleBatch {
 impl EventEngine for SingleBatch {
     fn advance(&mut self) -> Option<StepOutcome> {
         let out = self.arena.step_rep(0);
-        self.arena.flush_pending();
+        self.arena.end_round();
         out
     }
 
@@ -690,9 +851,15 @@ mod tests {
 
     #[test]
     fn scalar_fallback_families_match_heap_too() {
-        // deterministic + lognormal cells take the non-vectorized branch
-        for family in [ServiceFamily::Deterministic, ServiceFamily::LogNormal(0.5)] {
+        // deterministic + lognormal cells now take their own vectorized
+        // kernels — they must stay bit-identical to the heap oracle
+        for family in [
+            ServiceFamily::Deterministic,
+            ServiceFamily::LogNormal(0.5),
+            ServiceFamily::LogNormal(1.2),
+        ] {
             let base = cfg(6, 4, 400, family);
+            assert!(batch_vectorizes(&base.service), "{family:?}");
             let seeds = [11u64, 12, 13];
             let results = run_batch(&base, &seeds, |_| Ok(static_policy(6))).unwrap();
             for (r, got) in results.iter().enumerate() {
@@ -704,6 +871,23 @@ mod tests {
                 );
                 assert_eq!(got.dispatches, want.dispatches, "{family:?} rep {r}");
             }
+        }
+    }
+
+    #[test]
+    fn mixed_family_cells_take_the_scalar_path_and_still_match() {
+        // the only remaining scalar-fallback route: a cell that genuinely
+        // mixes service families
+        let mut base = cfg(6, 4, 400, ServiceFamily::Exponential);
+        base.service[1] = ServiceDist::Det { mean: 0.25 };
+        base.service[4] = ServiceDist::LogNormal { mean: 1.0, cv: 1.2 };
+        assert!(!batch_vectorizes(&base.service));
+        let seeds = [41u64, 42, 43];
+        let results = run_batch(&base, &seeds, |_| Ok(static_policy(6))).unwrap();
+        for (r, got) in results.iter().enumerate() {
+            let want = heap_oracle(&base, seeds[r]);
+            assert_eq!(got.total_time.to_bits(), want.total_time.to_bits(), "rep {r}");
+            assert_eq!(got.completions, want.completions, "rep {r}");
         }
     }
 

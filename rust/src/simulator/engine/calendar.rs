@@ -68,6 +68,12 @@ impl ShardCalendar {
         ShardCalendar { heap: BinaryHeap::new() }
     }
 
+    /// A calendar pre-sized for its steady-state occupancy, so the hot
+    /// loop's push/pop never regrows the heap's backing storage.
+    pub fn with_capacity(cap: usize) -> ShardCalendar {
+        ShardCalendar { heap: BinaryHeap::with_capacity(cap) }
+    }
+
     #[inline]
     pub fn push(&mut self, ev: Event) {
         self.heap.push(ev);
@@ -127,5 +133,12 @@ mod tests {
     #[test]
     fn inf_bits_matches_ieee() {
         assert_eq!(f64::INFINITY.to_bits(), INF_BITS);
+    }
+
+    #[test]
+    fn with_capacity_preallocates_backing_storage() {
+        let cal = ShardCalendar::with_capacity(17);
+        assert!(cal.heap.capacity() >= 17);
+        assert_eq!(cal.front(), EMPTY_FRONT);
     }
 }

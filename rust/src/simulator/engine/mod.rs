@@ -56,6 +56,7 @@ use super::service::ServiceDist;
 use crate::coordinator::policy::{SamplingPolicy, StaticPolicy};
 use crate::util::rng::{stream_seed, Rng};
 use crate::util::stats::Welford;
+use crate::util::trace::TraceWriter;
 
 /// Tag of the routing stream (the historical `Network` derivation, kept so
 /// initial Routed placements reproduce the pre-engine RNG draws).
@@ -336,8 +337,14 @@ pub fn run_with_policy(
     let record_tasks = cfg.record_tasks;
     let sample_every = cfg.queue_sample_every;
     let concurrency = cfg.concurrency;
+    // disk-spilled trace: open before the engine runs so a bad path fails
+    // fast, stream one record per CS step, patch the count on success
+    let trace = match &cfg.trace_path {
+        Some(p) => Some(TraceWriter::create(p)?),
+        None => None,
+    };
     with_engine(cfg, policy, move |net| {
-        collect(net, n, steps, record_tasks, sample_every, concurrency)
+        collect(net, n, steps, record_tasks, sample_every, concurrency, trace)
     })
 }
 
@@ -480,6 +487,7 @@ fn collect(
     record_tasks: bool,
     sample_every: u64,
     concurrency: usize,
+    mut trace: Option<TraceWriter>,
 ) -> Result<SimResult, String> {
     let mut agg =
         StepAggregator::new(n, steps, record_tasks, sample_every, |i| net.queue_len(i) as u32);
@@ -494,6 +502,12 @@ fn collect(
             net.queue_len(j) as u32,
             net.busy_nodes(),
         );
+        if let Some(w) = trace.as_mut() {
+            w.push(&out.record)?;
+        }
+    }
+    if let Some(w) = trace {
+        w.finish()?;
     }
     debug_assert_eq!(net.population(), concurrency);
     Ok(agg.finish(net.now()))

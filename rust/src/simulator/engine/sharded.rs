@@ -67,7 +67,7 @@ pub(crate) struct Shard {
 }
 
 impl Shard {
-    fn new(id: u32, stride: u32, svc_seed: u64, service_all: &[ServiceDist]) -> Shard {
+    fn new(id: u32, stride: u32, svc_seed: u64, service_all: &[ServiceDist], cal_cap: usize) -> Shard {
         let service: Vec<ServiceDist> = service_all
             .iter()
             .skip(id as usize)
@@ -77,7 +77,9 @@ impl Shard {
         Shard {
             stride,
             svc_seed,
-            calendar: ShardCalendar::new(),
+            // pre-sized to the shard's steady-state occupancy so hot-loop
+            // pushes never regrow the heap (tests/hot_path_alloc.rs)
+            calendar: ShardCalendar::with_capacity(cal_cap),
             svc_count: vec![0; service.len()],
             service,
         }
@@ -103,6 +105,14 @@ impl Shard {
     fn front(&self) -> Front {
         self.calendar.front()
     }
+}
+
+/// Steady-state bound on one shard's calendar occupancy: at most one
+/// in-flight completion per owned node (round-robin ownership → at most
+/// ceil(n/S) owned nodes), never more than the whole population is busy.
+fn shard_calendar_capacity(cfg: &SimConfig, n_shards: usize) -> usize {
+    let n = cfg.p.len();
+    n.div_ceil(n_shards).min(cfg.effective_pool_capacity()).min(n) + 1
 }
 
 /// Where shard commands execute.  `exec` applies a batch (each command
@@ -165,8 +175,9 @@ impl ShardedCore<LocalDriver> {
         n_shards: usize,
     ) -> Result<ShardedEngine, String> {
         let svc_seed = service_seed(cfg.seed);
+        let cal_cap = shard_calendar_capacity(&cfg, n_shards);
         let shards = (0..n_shards)
-            .map(|s| Shard::new(s as u32, n_shards as u32, svc_seed, &cfg.service))
+            .map(|s| Shard::new(s as u32, n_shards as u32, svc_seed, &cfg.service, cal_cap))
             .collect();
         ShardedCore::build(cfg, policy, n_shards, LocalDriver { shards })
     }
@@ -720,12 +731,16 @@ pub(crate) fn run_parallel<R>(
 ) -> Result<R, String> {
     let n_workers = threads.min(n_shards).max(1);
     let svc_seed = service_seed(cfg.seed);
+    let cal_cap = shard_calendar_capacity(&cfg, n_shards);
     let mut per_worker: Vec<Vec<(u32, Shard)>> = (0..n_workers)
         .map(|w| {
             (0..n_shards)
                 .filter(|s| s % n_workers == w)
                 .map(|s| {
-                    (s as u32, Shard::new(s as u32, n_shards as u32, svc_seed, &cfg.service))
+                    (
+                        s as u32,
+                        Shard::new(s as u32, n_shards as u32, svc_seed, &cfg.service, cal_cap),
+                    )
                 })
                 .collect()
         })

@@ -11,7 +11,7 @@ pub mod engine;
 pub mod network;
 pub mod service;
 
-pub use engine::batch::run_batch;
+pub use engine::batch::{batch_vectorizes, run_batch};
 pub use engine::churn::{generate_schedule, ChurnConfig, ChurnEvent, ChurnEventKind};
 pub use engine::{
     run, run_with_policy, transient_mi, with_engine, EngineConfig, EngineError, EngineKind,

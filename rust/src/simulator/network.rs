@@ -72,6 +72,13 @@ pub struct SimConfig {
     /// pool too small for the initial population surfaces a typed
     /// [`EngineError::PoolExhausted`] instead of a hot-path panic.
     pub pool_capacity: usize,
+    /// stream every completed-task record to this file (`util::trace`
+    /// layout) instead of holding O(steps) records resident — the
+    /// disk-spilled form of `record_tasks` for 10^6+-step horizons.
+    /// Batched replications write one file each, suffixed `.rep<r>`.
+    /// Independent of `record_tasks`: set that false when spilling unless
+    /// the resident copy is also wanted.
+    pub trace_path: Option<String>,
 }
 
 impl SimConfig {
@@ -88,6 +95,7 @@ impl SimConfig {
             engine: EngineConfig::default(),
             churn: None,
             pool_capacity: 0,
+            trace_path: None,
         }
     }
 
@@ -331,9 +339,22 @@ impl Network {
         let placements = initial_placements(&cfg, policy.as_mut(), &mut route_rng);
         let svc_seed = service_seed(cfg.seed);
         let cap = cfg.effective_pool_capacity();
+        // Pre-size the hot-loop containers: the heap holds at most one
+        // completion per busy node (advance pops before it pushes, so
+        // occupancy never exceeds min(n, C) + 1), and a queue at most the
+        // full population.  The per-queue reserve is gated so huge n·C
+        // cells don't pay O(n·C) resident memory for a bound a run never
+        // approaches; within the gate the steady-state step allocates
+        // nothing (tests/hot_path_alloc.rs).
+        let mut queues = vec![VecDeque::new(); n];
+        if n.saturating_mul(cap) <= (1 << 22) {
+            for q in &mut queues {
+                q.reserve(cap);
+            }
+        }
         let mut net = Network {
-            queues: vec![VecDeque::new(); n],
-            heap: BinaryHeap::new(),
+            queues,
+            heap: BinaryHeap::with_capacity(n.min(cap) + 1),
             seq: 0,
             now: 0.0,
             step: 0,

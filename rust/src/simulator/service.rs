@@ -66,8 +66,24 @@ impl std::str::FromStr for ServiceFamily {
         match s {
             "exp" | "exponential" => Ok(ServiceFamily::Exponential),
             "det" | "deterministic" => Ok(ServiceFamily::Deterministic),
+            // bare `lognormal` keeps the historical default cv
             "lognormal" => Ok(ServiceFamily::LogNormal(0.5)),
-            other => Err(format!("unknown service family '{other}' (exp|det|lognormal)")),
+            other => {
+                if let Some(cv_str) = other.strip_prefix("lognormal:") {
+                    let cv: f64 = cv_str.parse().map_err(|_| {
+                        format!("lognormal cv '{cv_str}' is not a number (want lognormal:<cv>)")
+                    })?;
+                    if !cv.is_finite() || cv <= 0.0 {
+                        return Err(format!(
+                            "lognormal cv must be finite and > 0, got {cv}"
+                        ));
+                    }
+                    return Ok(ServiceFamily::LogNormal(cv));
+                }
+                Err(format!(
+                    "unknown service family '{other}' (exp|det|lognormal|lognormal:<cv>)"
+                ))
+            }
         }
     }
 }
@@ -106,6 +122,32 @@ mod tests {
         assert_eq!("exp".parse::<ServiceFamily>().unwrap(), ServiceFamily::Exponential);
         assert_eq!("det".parse::<ServiceFamily>().unwrap(), ServiceFamily::Deterministic);
         assert!("weibull".parse::<ServiceFamily>().is_err());
+    }
+
+    #[test]
+    fn lognormal_parsing_accepts_explicit_cv() {
+        assert_eq!(
+            "lognormal".parse::<ServiceFamily>().unwrap(),
+            ServiceFamily::LogNormal(0.5),
+            "bare spelling keeps the historical default"
+        );
+        assert_eq!(
+            "lognormal:1.2".parse::<ServiceFamily>().unwrap(),
+            ServiceFamily::LogNormal(1.2)
+        );
+        assert_eq!(
+            "lognormal:0.05".parse::<ServiceFamily>().unwrap(),
+            ServiceFamily::LogNormal(0.05)
+        );
+        for bad in ["lognormal:0", "lognormal:-1", "lognormal:nan", "lognormal:inf"] {
+            let err = bad.parse::<ServiceFamily>().unwrap_err();
+            assert!(
+                err.contains("cv"),
+                "{bad}: error should name the cv: {err}"
+            );
+        }
+        assert!("lognormal:abc".parse::<ServiceFamily>().is_err());
+        assert!("lognormal:".parse::<ServiceFamily>().is_err());
     }
 
     #[test]

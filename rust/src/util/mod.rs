@@ -17,3 +17,4 @@ pub mod stats;
 pub mod sync;
 pub mod table;
 pub mod toml;
+pub mod trace;

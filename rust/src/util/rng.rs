@@ -47,6 +47,36 @@ pub fn first_u64_of(seed: u64) -> u64 {
     s0.wrapping_add(s3).rotate_left(23).wrapping_add(s0)
 }
 
+/// First TWO raw outputs of `Rng::new(seed)` without materializing the
+/// generator — the two-draw analogue of [`first_u64_of`] for keyed streams
+/// that consume exactly one Box–Muller pair per key (the log-normal
+/// service family).  The second Xoshiro output only reads `s[0]` and
+/// `s[3]` after one state transition, and that transition only folds in
+/// `s[1]` (`s3' = (s3 ^ s1).rotl(45)`, `s0' = s0 ^ s3 ^ s1`), so three of
+/// the four SplitMix expansions suffice.  Straight-line integer math,
+/// chunkable across lanes; pinned against the full generator in tests.
+#[inline(always)]
+pub fn first_two_u64_of(seed: u64) -> (u64, u64) {
+    let s0 = splitmix_mix(seed.wrapping_add(SPLITMIX_GAMMA));
+    let s1 = splitmix_mix(seed.wrapping_add(SPLITMIX_GAMMA.wrapping_mul(2)));
+    let s3 = splitmix_mix(seed.wrapping_add(SPLITMIX_GAMMA.wrapping_mul(4)));
+    let out1 = s0.wrapping_add(s3).rotate_left(23).wrapping_add(s0);
+    let x = s3 ^ s1;
+    let s0n = s0 ^ x;
+    let s3n = x.rotate_left(45);
+    (out1, s0n.wrapping_add(s3n).rotate_left(23).wrapping_add(s0n))
+}
+
+/// Map a raw u64 draw to the uniform-in-`[0, 1)` variate
+/// [`Rng::uniform`] derives from it — 53-bit resolution, bit-identical by
+/// sharing the exact conversion expression.  The bridge between
+/// block-resolved raw draws (routing prefetch, keyed service lanes) and
+/// the inverse-CDF samplers that consume uniforms.
+#[inline(always)]
+pub fn u64_to_uniform(x: u64) -> f64 {
+    (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
 /// Derive a well-separated u64 seed for a tagged replication stream.
 ///
 /// The sweep engine gives every (cell, seed-index) replication its own
@@ -129,7 +159,7 @@ impl Rng {
     /// Uniform in [0, 1) with 53-bit resolution.
     #[inline]
     pub fn uniform(&mut self) -> f64 {
-        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+        u64_to_uniform(self.next_u64())
     }
 
     /// Uniform in (0, 1] — safe as log() argument.
@@ -141,8 +171,20 @@ impl Rng {
     /// Uniform integer in [0, n) without modulo bias (Lemire).
     #[inline]
     pub fn below(&mut self, n: u64) -> u64 {
+        let x = self.next_u64();
+        self.below_from(x, n)
+    }
+
+    /// [`Rng::below`] resumed from an already-drawn first variate: `first`
+    /// must be the raw u64 this generator would have produced next.  The
+    /// rare Lemire rejection continues on `self`, so the call consumes
+    /// exactly the draws `below` would have — the routing-prefetch path
+    /// (block-resolved raw draws fed back through the policy samplers)
+    /// stays draw-for-draw identical to the scalar stream.
+    #[inline]
+    pub fn below_from(&mut self, first: u64, n: u64) -> u64 {
         debug_assert!(n > 0);
-        let mut x = self.next_u64();
+        let mut x = first;
         let mut m = (x as u128) * (n as u128);
         let mut l = m as u64;
         if l < n {
@@ -285,6 +327,21 @@ impl AliasTable {
         }
     }
 
+    /// [`AliasTable::sample`] with the first raw draw already resolved:
+    /// `first` must be the u64 `rng` would have produced next.  The bucket
+    /// index resumes Lemire from it ([`Rng::below_from`]) and the accept
+    /// uniform still comes from `rng`, so the draw sequence — and thus the
+    /// sampled index — is bit-identical to the scalar call.
+    #[inline]
+    pub fn sample_prefetched(&self, first: u64, rng: &mut Rng) -> usize {
+        let i = rng.below_from(first, self.prob.len() as u64) as usize;
+        if rng.uniform() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.prob.len()
     }
@@ -326,6 +383,66 @@ mod tests {
         }
         for s in [0u64, 1, u64::MAX, stream_seed(7, &[3, 9])] {
             assert_eq!(first_u64_of(s), Rng::new(s).next_u64());
+        }
+    }
+
+    #[test]
+    fn first_two_u64_of_matches_full_generator() {
+        // the batched log-normal sampler relies on this collapse being
+        // exact for BOTH outputs
+        let mut seeds = SplitMix64(0xBEEF);
+        for _ in 0..256 {
+            let s = seeds.next_u64();
+            let mut full = Rng::new(s);
+            let want = (full.next_u64(), full.next_u64());
+            assert_eq!(first_two_u64_of(s), want, "seed {s:#x}");
+        }
+        for s in [0u64, 1, u64::MAX, stream_seed(7, &[3, 9])] {
+            let mut full = Rng::new(s);
+            assert_eq!(first_two_u64_of(s), (full.next_u64(), full.next_u64()));
+        }
+    }
+
+    #[test]
+    fn u64_to_uniform_matches_uniform() {
+        let mut a = Rng::new(0xA11A5);
+        let mut b = a.clone();
+        for _ in 0..256 {
+            let want = a.uniform();
+            let got = u64_to_uniform(b.next_u64());
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn below_from_resumes_the_lemire_path() {
+        // prefetching the first raw draw must leave both the result and
+        // the generator position bit-identical, including when n forces
+        // the rejection loop (n close to u64::MAX rejects ~half the time)
+        for n in [1u64, 2, 3, 7, 1000, u64::MAX / 2 + 3, u64::MAX - 1] {
+            for seed in 0..64u64 {
+                let mut scalar = Rng::new(seed);
+                let want = scalar.below(n);
+                let mut pre = Rng::new(seed);
+                let first = pre.next_u64();
+                let got = pre.below_from(first, n);
+                assert_eq!(got, want, "n={n} seed={seed}");
+                assert_eq!(pre.state_fingerprint(), scalar.state_fingerprint());
+            }
+        }
+    }
+
+    #[test]
+    fn alias_sample_prefetched_matches_sample() {
+        let t = AliasTable::new(&[0.1, 0.2, 0.3, 0.4]).unwrap();
+        let mut scalar = Rng::new(0x5A);
+        let mut pre = Rng::new(0x5A);
+        for _ in 0..10_000 {
+            let want = t.sample(&mut scalar);
+            let first = pre.next_u64();
+            let got = t.sample_prefetched(first, &mut pre);
+            assert_eq!(got, want);
+            assert_eq!(pre.state_fingerprint(), scalar.state_fingerprint());
         }
     }
 

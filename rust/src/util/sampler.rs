@@ -25,7 +25,7 @@
 //! operation sequence, so the batch is bit-identical to the one-draw-at-a-
 //! time oracle by construction.
 
-use crate::util::rng::{first_u64_of, Rng};
+use crate::util::rng::{first_two_u64_of, first_u64_of, u64_to_uniform, Rng};
 
 /// Draw an index from the distribution `p` given a uniform variate
 /// `u ∈ [0, 1)` by scanning the cumulative sum — the reference sampler.
@@ -101,16 +101,14 @@ pub fn masked_linear_route(p: &[f64], active: &[bool], total: f64, u: f64) -> us
 /// oracle).
 pub const EXP_LANES: usize = 8;
 
-const U53_INV: f64 = 1.0 / (1u64 << 53) as f64;
-
 /// The first uniform-in-(0, 1] variate of `Rng::new(seed)` — bit-identical
 /// to `Rng::new(seed).uniform_pos()`.  The log-uniform building block of
 /// the keyed service stream: an exponential draw is `-ln(u)/rate` of this
-/// value, and a future batched log-normal path would feed pairs of them
-/// through Box–Muller.
+/// value, and the batched log-normal path ([`batch_lognormal`]) feeds the
+/// two-draw analogue through Box–Muller.
 #[inline(always)]
 pub fn first_uniform_pos(seed: u64) -> f64 {
-    1.0 - (first_u64_of(seed) >> 11) as f64 * U53_INV
+    1.0 - u64_to_uniform(first_u64_of(seed))
 }
 
 /// Batched keyed-exponential sampling: `out[i]` is bit-identical to
@@ -141,6 +139,71 @@ pub fn batch_exponential(seeds: &[u64], rates: &[f64], out: &mut [f64]) {
     for i in chunks * EXP_LANES..seeds.len() {
         out[i] = -first_uniform_pos(seeds[i]).ln() / rates[i];
     }
+}
+
+/// Batched deterministic service durations: `out[i]` is bit-identical to
+/// `ServiceDist::Det { mean }.sample(..)`, which returns the mean verbatim
+/// and consumes NO draws — so the batch is a straight lane copy (memcpy,
+/// the widest vectorization there is) and takes no seed slice at all.
+/// Kept alongside the stochastic families so the batch arena dispatches
+/// every service family through one block-resolve seam.
+pub fn batch_deterministic(means: &[f64], out: &mut [f64]) {
+    assert_eq!(means.len(), out.len(), "means/out length mismatch");
+    out.copy_from_slice(means);
+}
+
+/// Batched keyed log-normal sampling: `out[i]` is bit-identical to
+/// `Rng::new(seeds[i]).lognormal_mean_cv(means[i], cvs[i])` — the scalar
+/// keyed service draw for the `LogNormal` family — for every `i`.
+///
+/// The scalar path consumes exactly two raw u64s (the Box–Muller pair of
+/// a fresh generator: `u1 = uniform_pos()`, `u2 = uniform()`) and takes
+/// the cosine branch, so the whole draw collapses to
+/// [`first_two_u64_of`] plus straight-line float math per lane.  The
+/// integer expansion and the `σ²/µ` arithmetic run in [`EXP_LANES`]-wide
+/// chunks for the autovectorizer; `ln`/`sqrt`/`cos`/`exp` stay per-lane
+/// libm calls (no stable vector math, and a polynomial approximation
+/// would break bit-identity with the scalar oracle).
+pub fn batch_lognormal(seeds: &[u64], means: &[f64], cvs: &[f64], out: &mut [f64]) {
+    assert_eq!(seeds.len(), means.len(), "seeds/means length mismatch");
+    assert_eq!(seeds.len(), cvs.len(), "seeds/cvs length mismatch");
+    assert_eq!(seeds.len(), out.len(), "seeds/out length mismatch");
+    let chunks = seeds.len() / EXP_LANES;
+    for c in 0..chunks {
+        let at = c * EXP_LANES;
+        // lane-wise integer expansion: two raw draws per key
+        let mut u1 = [0.0f64; EXP_LANES];
+        let mut u2 = [0.0f64; EXP_LANES];
+        for l in 0..EXP_LANES {
+            let (x1, x2) = first_two_u64_of(seeds[at + l]);
+            u1[l] = 1.0 - u64_to_uniform(x1);
+            u2[l] = u64_to_uniform(x2);
+        }
+        for l in 0..EXP_LANES {
+            out[at + l] = lognormal_of(u1[l], u2[l], means[at + l], cvs[at + l]);
+        }
+    }
+    for i in chunks * EXP_LANES..seeds.len() {
+        let (x1, x2) = first_two_u64_of(seeds[i]);
+        out[i] = lognormal_of(
+            1.0 - u64_to_uniform(x1),
+            u64_to_uniform(x2),
+            means[i],
+            cvs[i],
+        );
+    }
+}
+
+/// The exact scalar tail of `Rng::lognormal_mean_cv` given the Box–Muller
+/// uniforms: same expressions, same order, bit-identical by construction.
+#[inline(always)]
+fn lognormal_of(u1: f64, u2: f64, mean: f64, cv: f64) -> f64 {
+    let r = (-2.0 * u1.ln()).sqrt();
+    let th = 2.0 * std::f64::consts::PI * u2;
+    let z = r * th.cos();
+    let sigma2 = (1.0 + cv * cv).ln();
+    let mu = mean.ln() - 0.5 * sigma2;
+    (mu + sigma2.sqrt() * z).exp()
 }
 
 /// Fenwick (binary indexed) tree over non-negative f64 weights, supporting
@@ -263,6 +326,16 @@ impl FenwickSampler {
         let total = self.total();
         debug_assert!(total > 0.0 && total.is_finite(), "total {total}");
         self.sample_at(rng.uniform() * total)
+    }
+
+    /// [`FenwickSampler::sample`] with its single raw draw already
+    /// resolved: `first` must be the u64 the scalar path's generator would
+    /// have produced next.  Shares the uniform conversion and descent, so
+    /// the returned index is bit-identical to the scalar call.
+    pub fn sample_prefetched(&self, first: u64) -> usize {
+        let total = self.total();
+        debug_assert!(total > 0.0 && total.is_finite(), "total {total}");
+        self.sample_at(u64_to_uniform(first) * total)
     }
 
     /// Inverse CDF at `target ∈ [0, total)`: the smallest index i with
@@ -411,6 +484,61 @@ mod tests {
                     out[i]
                 );
             }
+        }
+    }
+
+    #[test]
+    fn batch_lognormal_is_bit_identical_to_scalar() {
+        use crate::util::rng::stream_seed;
+        // lengths straddling the chunk width exercise both the vector body
+        // and the scalar tail
+        for len in [0usize, 1, 7, 8, 9, 16, 37, 64] {
+            let seeds: Vec<u64> = (0..len as u64).map(|i| stream_seed(6, &[i, 13])).collect();
+            let means: Vec<f64> = (0..len).map(|i| 0.25 + (i % 5) as f64).collect();
+            let cvs: Vec<f64> = (0..len).map(|i| 0.3 + (i % 4) as f64 * 0.45).collect();
+            let mut out = vec![0.0; len];
+            batch_lognormal(&seeds, &means, &cvs, &mut out);
+            for i in 0..len {
+                let want = Rng::new(seeds[i]).lognormal_mean_cv(means[i], cvs[i]);
+                assert_eq!(
+                    out[i].to_bits(),
+                    want.to_bits(),
+                    "lane {i} of {len}: {} vs {want}",
+                    out[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_deterministic_is_a_bit_exact_copy() {
+        // the Det family returns the mean verbatim and consumes no draws;
+        // the batch must preserve every payload bit (incl. non-finite)
+        let means = [1.5, 0.25, f64::MIN_POSITIVE, 3.0e17];
+        let mut out = [0.0; 4];
+        batch_deterministic(&means, &mut out);
+        for i in 0..4 {
+            assert_eq!(out[i].to_bits(), means[i].to_bits());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn batch_lognormal_rejects_ragged_inputs() {
+        let mut out = vec![0.0; 3];
+        batch_lognormal(&[1, 2, 3], &[1.0, 1.0], &[0.5, 0.5, 0.5], &mut out);
+    }
+
+    #[test]
+    fn fenwick_sample_prefetched_matches_sample() {
+        let w = vec![0.1, 0.0, 0.4, 0.2, 0.3];
+        let f = FenwickSampler::new(&w).unwrap();
+        let mut scalar = Rng::new(29);
+        let mut pre = Rng::new(29);
+        for _ in 0..10_000 {
+            let want = f.sample(&mut scalar);
+            let got = f.sample_prefetched(pre.next_u64());
+            assert_eq!(got, want);
         }
     }
 

@@ -1,0 +1,347 @@
+//! Disk-spilled task traces: stream [`TaskRecord`]s to a binary file
+//! instead of holding O(steps) of them resident.
+//!
+//! `record_tasks` keeps every completed-task record in `SimResult::tasks`
+//! — fine for figure-sized runs, fatal at 10^6+ steps where the Vec alone
+//! dwarfs the simulator state.  Setting `SimConfig::trace_path` streams
+//! the identical records through a buffered writer as the run progresses,
+//! so memory stays flat no matter the horizon; the figures layer reads
+//! them back with [`TraceReader`] / [`read_trace`].
+//!
+//! # Layout (version 1)
+//!
+//! All integers and floats little-endian:
+//!
+//! ```text
+//! offset  size  field
+//!      0     8  magic  b"FQTRACE1"
+//!      8     4  version      u32 = 1
+//!     12     4  record_size  u32 = 44
+//!     16     8  count        u64 (patched by `finish`)
+//!     24   44·k records:
+//!              node          u32
+//!              dispatch_step u64
+//!              complete_step u64
+//!              dispatch_time f64
+//!              complete_time f64
+//!              dispatch_prob f64
+//! ```
+//!
+//! The count field is written as `u64::MAX` at creation and patched on
+//! `finish`, so a reader can both detect a truncated (crashed) trace and
+//! still recover its complete prefix records.
+
+use crate::simulator::network::TaskRecord;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+pub const TRACE_MAGIC: [u8; 8] = *b"FQTRACE1";
+pub const TRACE_VERSION: u32 = 1;
+/// On-disk record size: u32 + u64 + u64 + f64 + f64 + f64, packed LE.
+pub const RECORD_SIZE: usize = 44;
+const HEADER_SIZE: u64 = 24;
+const COUNT_OFFSET: u64 = 16;
+
+fn encode(rec: &TaskRecord, buf: &mut [u8; RECORD_SIZE]) {
+    buf[0..4].copy_from_slice(&rec.node.to_le_bytes());
+    buf[4..12].copy_from_slice(&rec.dispatch_step.to_le_bytes());
+    buf[12..20].copy_from_slice(&rec.complete_step.to_le_bytes());
+    buf[20..28].copy_from_slice(&rec.dispatch_time.to_le_bytes());
+    buf[28..36].copy_from_slice(&rec.complete_time.to_le_bytes());
+    buf[36..44].copy_from_slice(&rec.dispatch_prob.to_le_bytes());
+}
+
+fn decode(buf: &[u8; RECORD_SIZE]) -> TaskRecord {
+    let u32_at = |o: usize| u32::from_le_bytes(buf[o..o + 4].try_into().unwrap());
+    let u64_at = |o: usize| u64::from_le_bytes(buf[o..o + 8].try_into().unwrap());
+    let f64_at = |o: usize| f64::from_le_bytes(buf[o..o + 8].try_into().unwrap());
+    TaskRecord {
+        node: u32_at(0),
+        dispatch_step: u64_at(4),
+        complete_step: u64_at(12),
+        dispatch_time: f64_at(20),
+        complete_time: f64_at(28),
+        dispatch_prob: f64_at(36),
+    }
+}
+
+/// Streaming trace writer: buffered, constant-memory, one `push` per
+/// completed task.  Call [`TraceWriter::finish`] to patch the record count
+/// into the header — a dropped-without-finish file is readable but reports
+/// itself truncated.
+pub struct TraceWriter {
+    w: BufWriter<File>,
+    count: u64,
+    path: String,
+}
+
+impl TraceWriter {
+    pub fn create(path: &str) -> Result<TraceWriter, String> {
+        if let Some(dir) = Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .map_err(|e| format!("trace '{path}': create dir: {e}"))?;
+            }
+        }
+        let f = File::create(path).map_err(|e| format!("trace '{path}': create: {e}"))?;
+        let mut w = BufWriter::new(f);
+        let mut header = [0u8; HEADER_SIZE as usize];
+        header[0..8].copy_from_slice(&TRACE_MAGIC);
+        header[8..12].copy_from_slice(&TRACE_VERSION.to_le_bytes());
+        header[12..16].copy_from_slice(&(RECORD_SIZE as u32).to_le_bytes());
+        header[16..24].copy_from_slice(&u64::MAX.to_le_bytes());
+        w.write_all(&header)
+            .map_err(|e| format!("trace '{path}': header: {e}"))?;
+        Ok(TraceWriter { w, count: 0, path: path.to_string() })
+    }
+
+    #[inline]
+    pub fn push(&mut self, rec: &TaskRecord) -> Result<(), String> {
+        let mut buf = [0u8; RECORD_SIZE];
+        encode(rec, &mut buf);
+        self.w
+            .write_all(&buf)
+            .map_err(|e| format!("trace '{}': write: {e}", self.path))?;
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Records written so far.
+    pub fn len(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Flush, patch the header's record count, and close.  Returns the
+    /// number of records written.
+    pub fn finish(mut self) -> Result<u64, String> {
+        let path = std::mem::take(&mut self.path);
+        self.w
+            .flush()
+            .map_err(|e| format!("trace '{path}': flush: {e}"))?;
+        let mut f = self
+            .w
+            .into_inner()
+            .map_err(|e| format!("trace '{path}': flush: {e}"))?;
+        f.seek(SeekFrom::Start(COUNT_OFFSET))
+            .map_err(|e| format!("trace '{path}': seek: {e}"))?;
+        f.write_all(&self.count.to_le_bytes())
+            .map_err(|e| format!("trace '{path}': patch count: {e}"))?;
+        f.sync_all()
+            .map_err(|e| format!("trace '{path}': sync: {e}"))?;
+        Ok(self.count)
+    }
+}
+
+/// Sequential trace reader over the version-1 layout.
+pub struct TraceReader {
+    r: BufReader<File>,
+    /// records the header claims (None: unfinished/truncated trace — read
+    /// whole-record prefixes until EOF)
+    declared: Option<u64>,
+    read: u64,
+    path: String,
+}
+
+impl TraceReader {
+    pub fn open(path: &str) -> Result<TraceReader, String> {
+        let f = File::open(path).map_err(|e| format!("trace '{path}': open: {e}"))?;
+        let mut r = BufReader::new(f);
+        let mut header = [0u8; HEADER_SIZE as usize];
+        r.read_exact(&mut header)
+            .map_err(|e| format!("trace '{path}': header: {e}"))?;
+        if header[0..8] != TRACE_MAGIC {
+            return Err(format!("trace '{path}': bad magic (not a task trace)"));
+        }
+        let version = u32::from_le_bytes(header[8..12].try_into().unwrap());
+        if version != TRACE_VERSION {
+            return Err(format!(
+                "trace '{path}': version {version} (this reader understands {TRACE_VERSION})"
+            ));
+        }
+        let rec_size = u32::from_le_bytes(header[12..16].try_into().unwrap());
+        if rec_size as usize != RECORD_SIZE {
+            return Err(format!(
+                "trace '{path}': record size {rec_size} (expected {RECORD_SIZE})"
+            ));
+        }
+        let count = u64::from_le_bytes(header[16..24].try_into().unwrap());
+        let declared = if count == u64::MAX { None } else { Some(count) };
+        Ok(TraceReader { r, declared, read: 0, path: path.to_string() })
+    }
+
+    /// Record count from the header; None for an unfinished trace.
+    pub fn declared_len(&self) -> Option<u64> {
+        self.declared
+    }
+
+    /// Next record, or None at end of trace.
+    pub fn next_record(&mut self) -> Result<Option<TaskRecord>, String> {
+        if self.declared == Some(self.read) {
+            return Ok(None);
+        }
+        let mut buf = [0u8; RECORD_SIZE];
+        match self.r.read_exact(&mut buf) {
+            Ok(()) => {
+                self.read += 1;
+                Ok(Some(decode(&buf)))
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                if let Some(d) = self.declared {
+                    return Err(format!(
+                        "trace '{}': truncated at record {} of {d}",
+                        self.path, self.read
+                    ));
+                }
+                Ok(None)
+            }
+            Err(e) => Err(format!("trace '{}': read: {e}", self.path)),
+        }
+    }
+}
+
+/// Load a whole trace into memory — the figures-layer entry point for
+/// spilled runs (moderate sizes; streaming consumers use [`TraceReader`]).
+pub fn read_trace(path: &str) -> Result<Vec<TaskRecord>, String> {
+    let mut r = TraceReader::open(path)?;
+    let mut out = Vec::with_capacity(r.declared_len().unwrap_or(0).min(1 << 24) as usize);
+    while let Some(rec) = r.next_record()? {
+        out.push(rec);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(i: u64) -> TaskRecord {
+        TaskRecord {
+            node: (i % 7) as u32,
+            dispatch_step: i,
+            complete_step: i + 3,
+            dispatch_time: i as f64 * 0.25,
+            complete_time: i as f64 * 0.25 + 1.5,
+            dispatch_prob: 1.0 / (1.0 + i as f64),
+        }
+    }
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join("fq_trace_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn record_encoding_is_44_bytes_and_round_trips() {
+        let mut buf = [0u8; RECORD_SIZE];
+        for i in [0u64, 1, 12345, u32::MAX as u64 + 9] {
+            let r = rec(i);
+            encode(&r, &mut buf);
+            let b = decode(&buf);
+            assert_eq!(r.node, b.node);
+            assert_eq!(r.dispatch_step, b.dispatch_step);
+            assert_eq!(r.complete_step, b.complete_step);
+            assert_eq!(r.dispatch_time.to_bits(), b.dispatch_time.to_bits());
+            assert_eq!(r.complete_time.to_bits(), b.complete_time.to_bits());
+            assert_eq!(r.dispatch_prob.to_bits(), b.dispatch_prob.to_bits());
+        }
+    }
+
+    #[test]
+    fn write_read_round_trip_preserves_every_bit() {
+        let path = tmp("round_trip.bin");
+        let mut w = TraceWriter::create(&path).unwrap();
+        for i in 0..1000 {
+            w.push(&rec(i)).unwrap();
+        }
+        assert_eq!(w.finish().unwrap(), 1000);
+        let got = read_trace(&path).unwrap();
+        assert_eq!(got.len(), 1000);
+        for (i, b) in got.iter().enumerate() {
+            let a = rec(i as u64);
+            assert_eq!(a.node, b.node);
+            assert_eq!(a.dispatch_step, b.dispatch_step);
+            assert_eq!(a.complete_time.to_bits(), b.complete_time.to_bits());
+            assert_eq!(a.dispatch_prob.to_bits(), b.dispatch_prob.to_bits());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn file_size_is_header_plus_44_per_record() {
+        let path = tmp("sized.bin");
+        let mut w = TraceWriter::create(&path).unwrap();
+        for i in 0..17 {
+            w.push(&rec(i)).unwrap();
+        }
+        w.finish().unwrap();
+        let len = std::fs::metadata(&path).unwrap().len();
+        assert_eq!(len, HEADER_SIZE + 17 * RECORD_SIZE as u64);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn unfinished_trace_reads_its_prefix() {
+        let path = tmp("unfinished.bin");
+        let mut w = TraceWriter::create(&path).unwrap();
+        for i in 0..5 {
+            w.push(&rec(i)).unwrap();
+        }
+        // drop without finish: count stays the u64::MAX sentinel
+        w.w.flush().unwrap();
+        drop(w);
+        let mut r = TraceReader::open(&path).unwrap();
+        assert_eq!(r.declared_len(), None);
+        let mut n = 0;
+        while r.next_record().unwrap().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 5);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_finished_trace_is_an_error_not_garbage() {
+        let path = tmp("truncated.bin");
+        let mut w = TraceWriter::create(&path).unwrap();
+        for i in 0..10 {
+            w.push(&rec(i)).unwrap();
+        }
+        w.finish().unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 11]).unwrap();
+        let mut r = TraceReader::open(&path).unwrap();
+        let mut res = Ok(());
+        while let Some(x) = r.next_record().transpose() {
+            if let Err(e) = x {
+                res = Err(e);
+                break;
+            }
+        }
+        let err = res.unwrap_err();
+        assert!(err.contains("truncated"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn foreign_files_are_rejected_by_magic_and_version() {
+        let path = tmp("foreign.bin");
+        std::fs::write(&path, b"definitely not a trace file").unwrap();
+        let err = TraceReader::open(&path).unwrap_err();
+        assert!(err.contains("bad magic"), "{err}");
+        let mut header = Vec::new();
+        header.extend_from_slice(&TRACE_MAGIC);
+        header.extend_from_slice(&99u32.to_le_bytes());
+        header.extend_from_slice(&(RECORD_SIZE as u32).to_le_bytes());
+        header.extend_from_slice(&0u64.to_le_bytes());
+        std::fs::write(&path, &header).unwrap();
+        let err = TraceReader::open(&path).unwrap_err();
+        assert!(err.contains("version 99"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+}

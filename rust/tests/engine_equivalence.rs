@@ -197,12 +197,15 @@ fn batch_arena_matches_heap_for_every_builtin_policy_and_width() {
 
 #[test]
 fn batch_arena_matches_heap_across_service_families() {
-    // deterministic and lognormal cells exercise the scalar fallback of
-    // the block sampler; exponential the vectorized path
+    // every single-family cell takes a vectorized block kernel now
+    // (exponential / deterministic / lognormal each have one); the scalar
+    // fallback only fires for genuinely mixed cells, pinned separately in
+    // `engine::batch::tests`
     for family in [
         ServiceFamily::Exponential,
         ServiceFamily::Deterministic,
         ServiceFamily::LogNormal(0.5),
+        ServiceFamily::LogNormal(1.2),
     ] {
         let mut base = two_cluster(10, 6, 1_000, 0, family);
         base.record_tasks = true;
@@ -398,6 +401,47 @@ fn churny_batch_widths_match_their_heap_oracles() {
                     "{policy}: churny batch R={r} rep {i} diverged from its heap oracle"
                 );
             }
+        }
+    }
+}
+
+#[test]
+fn lognormal_high_cv_with_churn_keeps_engines_bit_identical() {
+    // the raw-speed grid leg: a heavy-tailed `lognormal:1.2` cell with the
+    // full churn lifecycle on, across the heap oracle, every (S, threads)
+    // sharded combination, and the batch arena — the vectorized lognormal
+    // block kernel and the prefetched routing draws must both decompose
+    // identically while joins/leaves interleave with the CS-step stream
+    let (n, c, steps) = (12usize, 8usize, 1_200u64);
+    let mut cfg = two_cluster(n, c, steps, 53, ServiceFamily::LogNormal(1.2));
+    cfg.churn = Some(churny(9));
+    let p = cfg.p.clone();
+    assert_equivalent(cfg.clone(), || {
+        Box::new(fedqueue::coordinator::StaticPolicy::new(p.clone()).unwrap())
+    })
+    .unwrap_or_else(|e| panic!("static lognormal:1.2 + churn: {e}"));
+    assert_equivalent(cfg.clone(), || {
+        Box::new(FenwickAdaptivePolicy::new(p.clone(), 0.6).unwrap())
+    })
+    .unwrap_or_else(|e| panic!("adaptive lognormal:1.2 + churn: {e}"));
+    // and at real batch widths: each replication draws its own churn
+    // schedule AND its own lognormal blocks from the shared arena
+    cfg.record_tasks = true;
+    let mk = || -> Box<dyn SamplingPolicy> {
+        Box::new(fedqueue::coordinator::StaticPolicy::new(p.clone()).unwrap())
+    };
+    let seeds: Vec<u64> = (0..32u64).map(|s| stream_seed(2026, &[0, s])).collect();
+    for r in BATCH_WIDTHS {
+        let results = run_batch(&cfg, &seeds[..r], |_| Ok(mk())).unwrap();
+        for (i, res) in results.iter().enumerate() {
+            let mut solo = cfg.clone();
+            solo.seed = seeds[i];
+            let oracle = digest(&run_with_policy(solo, mk()).unwrap());
+            assert_eq!(
+                digest(res),
+                oracle,
+                "lognormal:1.2 churny batch R={r} rep {i} diverged from its heap oracle"
+            );
         }
     }
 }

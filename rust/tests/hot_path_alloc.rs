@@ -1,0 +1,114 @@
+//! Zero-allocation steady state: after warm-up, a CS step allocates
+//! NOTHING on any engine.
+//!
+//! Every hot-loop container is pre-sized at construction (event heaps,
+//! task pools, per-node queues, scratch buffers) and the batch arena's
+//! vectorized sampling + prefetched routing never build a per-step Rng,
+//! so the steady-state step count can rise without a single trip to the
+//! allocator.  A counting `#[global_allocator]` makes that a hard
+//! invariant instead of a hope: 10^4 steps after a 10^3-step warm-up
+//! must leave the allocation counter untouched, per engine, for both an
+//! alias-backed static policy and the Fenwick adaptive policy.
+//!
+//! Release builds only: debug builds keep their fingerprint guards and
+//! unoptimized container paths, which is not the configuration the
+//! raw-speed contract targets (CI runs this under `--release` in the
+//! stat-tests job).  Threaded sharded dispatch is exercised elsewhere
+//! (`tests/threaded_driver.rs`) — its mailbox protocol allocates by
+//! design, so the zero-alloc contract covers the sequential drivers.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use fedqueue::coordinator::{FenwickAdaptivePolicy, SamplingPolicy, StaticPolicy};
+use fedqueue::simulator::{with_engine, EngineConfig, ServiceDist, ServiceFamily, SimConfig};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+const WARMUP: u64 = 1_000;
+const MEASURED: u64 = 10_000;
+
+fn cfg(engine: EngineConfig) -> SimConfig {
+    let n = 16;
+    let rates: Vec<f64> = (0..n).map(|i| if i < n / 2 { 2.0 } else { 1.0 }).collect();
+    SimConfig {
+        seed: 42,
+        engine,
+        ..SimConfig::new(
+            vec![1.0 / n as f64; n],
+            ServiceDist::from_rates(&rates, ServiceFamily::Exponential),
+            64,
+            WARMUP + MEASURED,
+        )
+    }
+}
+
+/// Allocations made by `MEASURED` steps after `WARMUP` steps.
+fn steady_state_allocs(c: SimConfig, policy: Box<dyn SamplingPolicy>) -> u64 {
+    with_engine(c, policy, |net| {
+        for _ in 0..WARMUP {
+            net.advance().ok_or("network drained in warm-up")?;
+        }
+        let before = ALLOCS.load(Ordering::Relaxed);
+        for _ in 0..MEASURED {
+            net.advance().ok_or("network drained")?;
+        }
+        Ok(ALLOCS.load(Ordering::Relaxed) - before)
+    })
+    .unwrap()
+}
+
+#[test]
+fn steady_state_steps_allocate_nothing() {
+    if cfg!(debug_assertions) {
+        return; // release-only contract; see module doc
+    }
+    let engines = [
+        ("heap", EngineConfig::heap()),
+        ("sharded_S4", EngineConfig::sharded(4, 1)),
+        ("batch", EngineConfig::batch()),
+    ];
+    let policies: [(&str, fn(usize) -> Box<dyn SamplingPolicy>); 2] = [
+        ("static", |n| {
+            Box::new(StaticPolicy::new(vec![1.0 / n as f64; n]).unwrap())
+        }),
+        ("fenwick-adaptive", |n| {
+            Box::new(FenwickAdaptivePolicy::new(vec![1.0 / n as f64; n], 0.8).unwrap())
+        }),
+    ];
+    for (ename, engine) in engines {
+        for (pname, mk) in policies {
+            let got = steady_state_allocs(cfg(engine), mk(16));
+            assert_eq!(
+                got, 0,
+                "{ename}/{pname}: {got} allocations in {MEASURED} steady-state steps"
+            );
+        }
+    }
+}

@@ -61,6 +61,28 @@ fn every_scenario_file_parses_through_its_validator() {
 }
 
 #[test]
+fn explicit_lognormal_cv_flows_from_grid_toml_to_cell_labels() {
+    // `service = ["lognormal:<cv>"]` parses through the same FromStr the
+    // CLI uses, and the cv survives into the cell label so two lognormal
+    // legs with different tails never collide in a report
+    let grid = "[sweep]\nseeds = 1\n[grid]\nclients = [10]\n\
+                service = [\"lognormal\", \"lognormal:1.2\"]\n";
+    let spec = SweepSpec::from_toml(grid).unwrap();
+    assert_eq!(spec.cells.len(), 2);
+    let labels: Vec<String> = spec.cells.iter().map(|c| c.scenario.label()).collect();
+    assert!(labels[0].ends_with("lognormal"), "{}", labels[0]);
+    assert!(labels[1].ends_with("lognormal:1.2"), "{}", labels[1]);
+    // degenerate tails die at parse time, naming the cv
+    for bad_cv in ["0", "-0.5", "nan"] {
+        let bad = format!(
+            "[sweep]\nseeds = 1\n[grid]\nclients = [10]\nservice = [\"lognormal:{bad_cv}\"]\n"
+        );
+        let err = SweepSpec::from_toml(&bad).unwrap_err();
+        assert!(err.contains("cv"), "lognormal:{bad_cv}: {err}");
+    }
+}
+
+#[test]
 fn stale_scenario_keys_fail_the_lint_not_the_user() {
     // the detection rule routes each format to the validator that rejects
     // its mistakes: a typoed grid key and a typoed experiment key both
