@@ -15,6 +15,7 @@
 
 use super::driver::{build_loaders, Driver, DriverConfig, TrainResult};
 use super::policy::{PolicyCtx, PolicyRegistry, SamplingPolicy};
+use super::serve::ServeConfig;
 use crate::data::{generate, EvalBatches, Partition, PartitionScheme, SynthSpec};
 use crate::fl::{ServerStrategy, StrategyParams, StrategyRegistry};
 use crate::queueing::{ClosedNetwork, MiEstimator};
@@ -71,7 +72,38 @@ pub struct Experiment {
     pub seed: u64,
     /// optional open-network node lifecycle (None = closed network)
     pub churn: Option<ChurnConfig>,
+    /// optional admission-control knobs for `fedqueue serve` (None =
+    /// serve-mode defaults)
+    pub serve: Option<ServeConfig>,
 }
+
+/// Keys the `[experiment]` table accepts — the single list shared by the
+/// parser below and the `docs/SCENARIOS.md` cross-check in
+/// `tests/scenario_lint.rs`.
+pub const EXPERIMENT_KEYS: &[&str] = &[
+    "variant",
+    "backend",
+    "algo",
+    "clients",
+    "concurrency",
+    "steps",
+    "eta",
+    "slow_fraction",
+    "mu_fast",
+    "n_train",
+    "n_val",
+    "classes_per_client",
+    "eval_every",
+    "seed",
+];
+
+/// Keys the `[policy]` table accepts (same contract as
+/// [`EXPERIMENT_KEYS`]).
+pub const POLICY_KEYS: &[&str] = &["kind", "p_fast", "gamma", "beta"];
+
+/// Keys the `[strategy]` table accepts (same contract as
+/// [`EXPERIMENT_KEYS`]).
+pub const STRATEGY_KEYS: &[&str] = &["fedbuff_z", "fedavg_s", "favano_interval", "kappa"];
 
 impl Experiment {
     /// Start from sane laptop-scale defaults (tiny variant, native backend)
@@ -102,6 +134,7 @@ impl Experiment {
                 eval_every: 20,
                 seed: 0,
                 churn: None,
+                serve: None,
             },
         }
     }
@@ -179,30 +212,16 @@ impl Experiment {
         for (table, keys) in &doc.tables {
             let known: &[&str] = match table.as_str() {
                 "" => &[],
-                "experiment" => &[
-                    "variant",
-                    "backend",
-                    "algo",
-                    "clients",
-                    "concurrency",
-                    "steps",
-                    "eta",
-                    "slow_fraction",
-                    "mu_fast",
-                    "n_train",
-                    "n_val",
-                    "classes_per_client",
-                    "eval_every",
-                    "seed",
-                ],
-                "policy" => &["kind", "p_fast", "gamma", "beta"],
-                "strategy" => &["fedbuff_z", "fedavg_s", "favano_interval", "kappa"],
-                // [churn] keys are validated (strictly) by
-                // ChurnConfig::from_toml_table — one authority, no drift
-                "churn" => continue,
+                "experiment" => EXPERIMENT_KEYS,
+                "policy" => POLICY_KEYS,
+                "strategy" => STRATEGY_KEYS,
+                // [churn]/[serve] keys are validated (strictly) by
+                // ChurnConfig::from_toml_table / ServeConfig::
+                // from_toml_table — one authority each, no drift
+                "churn" | "serve" => continue,
                 other => {
                     return Err(format!(
-                        "unknown table [{other}] (experiment|policy|strategy|churn)"
+                        "unknown table [{other}] (experiment|policy|strategy|churn|serve)"
                     ))
                 }
             };
@@ -244,6 +263,9 @@ impl Experiment {
         }
         if let Some(tbl) = doc.tables.get("churn") {
             b = b.churn(ChurnConfig::from_toml_table(tbl)?);
+        }
+        if let Some(tbl) = doc.tables.get("serve") {
+            b = b.serve(ServeConfig::from_toml_table(tbl)?);
         }
         b.build()
     }
@@ -356,6 +378,9 @@ impl Experiment {
         }
         if let Some(churn) = &self.churn {
             churn.validate(self.n_clients)?;
+        }
+        if let Some(serve) = &self.serve {
+            serve.validate()?;
         }
         Ok(())
     }
@@ -571,6 +596,12 @@ impl ExperimentBuilder {
     /// Open-network node lifecycle for the queueing substrate.
     pub fn churn(mut self, c: ChurnConfig) -> Self {
         self.exp.churn = Some(c);
+        self
+    }
+
+    /// Admission-control knobs for `fedqueue serve`.
+    pub fn serve(mut self, c: ServeConfig) -> Self {
+        self.exp.serve = Some(c);
         self
     }
 

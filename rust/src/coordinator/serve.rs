@@ -1,0 +1,927 @@
+//! `fedqueue serve` — the event-driven coordinator service mode.
+//!
+//! Every other mode in this repo *replays* a precomputed schedule; this
+//! one *reacts*.  Simulated clients run as spawned futures on the
+//! deterministic single-threaded executor (`runtime::executor`), and the
+//! coordinator makes a live decision per dispatch:
+//!
+//! 1. **Estimate** — per client, two EWMA estimators track observed
+//!    queue time (everything between dispatch and the gradient landing
+//!    that is not compute) and compute time.
+//! 2. **Admit** — time is divided into synchronization windows of
+//!    length `t_sync`.  A dispatch whose estimated round trip fits in
+//!    the current window (plus an `admission_tolerance` slack, plus a
+//!    `safety_buffer` margin) goes out immediately; otherwise it is
+//!    deferred to the next window boundary — never further, so progress
+//!    is guaranteed even when every estimate blows the window.  During
+//!    a client's `warm_up` first completions there is no trusted
+//!    estimate and dispatches are unconditional.  The shape follows
+//!    APPFL's `QueueScheduler` (t_sync windows, warm-up, safety
+//!    buffer).
+//! 3. **Aggregate** — completions feed the unchanged
+//!    [`ServerStrategy`]/[`SamplingPolicy`] registries: the strategy's
+//!    `on_gradient` sees real dispatch-time probabilities and staleness,
+//!    and the policy's `observe_completion` channel (RNG-free, lint
+//!    rule R1) drives `delay-adaptive` sampling exactly as in the
+//!    offline engines.
+//!
+//! Determinism: the executor's virtual clock orders all events by
+//! `(time, registration sequence)`; compute draws are keyed per
+//! `(client, per-client dispatch index)` on a serve-private stream, and
+//! the routing RNG is consumed in completion order — so the
+//! [`ServeReport`]'s deterministic core (`to_json_deterministic`) is
+//! bit-identical across runs on a shared seed.  Wall-clock throughput
+//! (dispatches/sec) lives only in the full report's `perf` block.
+//!
+//! [`ServerStrategy`]: crate::fl::ServerStrategy
+//! [`SamplingPolicy`]: crate::coordinator::policy::SamplingPolicy
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, VecDeque};
+use std::future::Future;
+use std::pin::Pin;
+use std::rc::Rc;
+use std::task::{Context, Poll, Waker};
+
+use crate::coordinator::experiment::{
+    two_cluster_n_fast, two_cluster_p, two_cluster_rates, Experiment,
+};
+use crate::coordinator::policy::{PolicyCtx, PolicyRegistry, SamplingPolicy};
+use crate::fl::{GradientCtx, ModelState, ServerStrategy, StrategyParams, StrategyRegistry};
+use crate::runtime::executor::{Executor, Handle};
+use crate::util::json::Json;
+use crate::util::rng::{stream_seed, Rng};
+use crate::util::stats::{Ewma, Welford};
+use crate::util::toml::Value;
+
+/// Serve-private RNG stream tags (fully separate from the offline
+/// engines' routing/service/churn streams).
+const SERVE_ROUTE_STREAM: u64 = 0x5E_47_E0;
+const SERVE_SERVICE_STREAM: u64 = 0x5E_47_E1;
+const SERVE_JOIN_STREAM: u64 = 0x5E_47_E2;
+
+/// Width of the stand-in model the strategies aggregate into.  Serve
+/// mode exercises version counting, staleness damping, and IPW scaling
+/// — not learning — so the tensor is tiny and the gradients are zero.
+const SERVE_MODEL_DIM: usize = 8;
+
+/// Every key the `[serve]` TOML table accepts, in documentation order.
+/// `docs/SCENARIOS.md` must list each of these (pinned by
+/// `tests/scenario_lint.rs`).
+pub const SERVE_KEYS: &[&str] = &[
+    "t_sync",
+    "warm_up",
+    "alpha_queue",
+    "alpha_compute",
+    "safety_buffer",
+    "admission_tolerance",
+    "server_time",
+    "ramp_time",
+];
+
+/// Admission-control knobs for serve mode (the `[serve]` TOML table).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Synchronization-window length in virtual time.
+    pub t_sync: f64,
+    /// Completions a client must report before its estimates are
+    /// trusted; until then dispatches to it are unconditional.
+    pub warm_up: u64,
+    /// EWMA weight for queue-time observations, in (0, 1].
+    pub alpha_queue: f64,
+    /// EWMA weight for compute-time observations, in (0, 1].
+    pub alpha_compute: f64,
+    /// Fixed margin added to the round-trip estimate before the window
+    /// check.
+    pub safety_buffer: f64,
+    /// Fraction of `t_sync` a round trip may overshoot the window
+    /// boundary and still be admitted; also sets each task's deadline.
+    pub admission_tolerance: f64,
+    /// Server-side processing time per gradient (sequential, FIFO) —
+    /// the source of observable queue time at high concurrency.
+    pub server_time: f64,
+    /// When > 0, every odd-indexed client starts outside the network
+    /// (`observe_leave`) and joins at a seeded uniform time in
+    /// `[0, ramp_time)` — the mid-window-join path.
+    pub ramp_time: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            t_sync: 50.0,
+            warm_up: 3,
+            alpha_queue: 0.5,
+            alpha_compute: 0.5,
+            safety_buffer: 0.0,
+            admission_tolerance: 0.15,
+            server_time: 0.01,
+            ramp_time: 0.0,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Parse a `[serve]` table.  This function is the single authority
+    /// on the table's keys (mirroring `ChurnConfig::from_toml_table`):
+    /// `Experiment::from_toml` and `SweepSpec::from_toml` both delegate
+    /// here.
+    pub fn from_toml_table(tbl: &BTreeMap<String, Value>) -> Result<ServeConfig, String> {
+        let mut cfg = ServeConfig::default();
+        let num = |k: &str, v: &Value| {
+            v.as_f64().ok_or_else(|| format!("[serve] {k} must be a number"))
+        };
+        let count = |k: &str, v: &Value| -> Result<u64, String> {
+            match v.as_i64() {
+                Some(i) if i >= 0 => Ok(i as u64),
+                _ => Err(format!("[serve] {k} must be a non-negative integer")),
+            }
+        };
+        for (k, v) in tbl {
+            match k.as_str() {
+                "t_sync" => cfg.t_sync = num(k, v)?,
+                "warm_up" => cfg.warm_up = count(k, v)?,
+                "alpha_queue" => cfg.alpha_queue = num(k, v)?,
+                "alpha_compute" => cfg.alpha_compute = num(k, v)?,
+                "safety_buffer" => cfg.safety_buffer = num(k, v)?,
+                "admission_tolerance" => cfg.admission_tolerance = num(k, v)?,
+                "server_time" => cfg.server_time = num(k, v)?,
+                "ramp_time" => cfg.ramp_time = num(k, v)?,
+                other => {
+                    return Err(format!(
+                        "unknown key '{other}' in [serve] ({})",
+                        SERVE_KEYS.join("|")
+                    ))
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Structural validation (positivity/finiteness of every knob).
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.t_sync > 0.0) || !self.t_sync.is_finite() {
+            return Err(format!("[serve] t_sync {} must be finite and > 0", self.t_sync));
+        }
+        for (name, a) in [("alpha_queue", self.alpha_queue), ("alpha_compute", self.alpha_compute)]
+        {
+            if !(a > 0.0 && a <= 1.0) {
+                return Err(format!("[serve] {name} {a} must be in (0, 1]"));
+            }
+        }
+        for (name, x) in [
+            ("safety_buffer", self.safety_buffer),
+            ("admission_tolerance", self.admission_tolerance),
+            ("server_time", self.server_time),
+            ("ramp_time", self.ramp_time),
+        ] {
+            if !(x >= 0.0) || !x.is_finite() {
+                return Err(format!("[serve] {name} {x} must be finite and >= 0"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Outcome of one admission decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// No trusted estimate yet — dispatched unconditionally.
+    Warm,
+    /// Estimated round trip fits the current window — dispatched now.
+    Admitted,
+    /// Estimate blows the window — delivery deferred to the next
+    /// window boundary (never further, so progress is guaranteed).
+    Deferred,
+}
+
+/// End of the synchronization window containing time `t`.
+fn window_end_of(t: f64, t_sync: f64) -> f64 {
+    (t / t_sync).floor() * t_sync + t_sync
+}
+
+/// The pure admission decision: given the current virtual time and the
+/// coordinator's round-trip estimate for the target client (`None`
+/// while the client is warming up), decide when the task is delivered.
+/// Returns the classification and the delivery time (`now` for
+/// `Warm`/`Admitted`, the next window boundary for `Deferred`).
+pub fn decide_dispatch(cfg: &ServeConfig, now: f64, estimate: Option<f64>) -> (Admission, f64) {
+    match estimate {
+        None => (Admission::Warm, now),
+        Some(est) => {
+            let window_end = window_end_of(now, cfg.t_sync);
+            let slack = cfg.admission_tolerance * cfg.t_sync;
+            if now + est + cfg.safety_buffer <= window_end + slack {
+                (Admission::Admitted, now)
+            } else {
+                (Admission::Deferred, window_end)
+            }
+        }
+    }
+}
+
+/// Everything needed to run one serve session.  Built from an
+/// [`Experiment`] (CLI path) or assembled directly (sweep path, tests).
+#[derive(Clone, Debug)]
+pub struct ServeSetup {
+    /// Number of simulated clients n.
+    pub clients: usize,
+    /// Tasks kept in flight (initial dispatch fan-out C).
+    pub concurrency: usize,
+    /// Total dispatch budget — the serve analogue of `steps`.
+    pub dispatches: u64,
+    /// Fraction of clients in the slow cluster (rate 1).
+    pub slow_fraction: f64,
+    /// Compute rate of the fast cluster.
+    pub mu_fast: f64,
+    /// Optional per-fast-node sampling tilt (None = uniform).
+    pub p_fast: Option<f64>,
+    /// Queue/delay-pressure strength for the adaptive policies.
+    pub gamma: f64,
+    /// EWMA momentum for the delay-adaptive policy.
+    pub beta: f64,
+    /// Server learning rate (strategies).
+    pub eta: f64,
+    /// Staleness-damping strength for `genasync-damped`.
+    pub kappa: f64,
+    /// Sampling-policy registry name.
+    pub policy: String,
+    /// Server-strategy registry name.
+    pub algo: String,
+    /// Root seed for the serve-private RNG streams.
+    pub seed: u64,
+    /// Admission-control knobs.
+    pub cfg: ServeConfig,
+}
+
+impl ServeSetup {
+    /// Build from a parsed scenario (the `fedqueue serve` CLI path).
+    /// `steps` becomes the dispatch budget; a missing `[serve]` table
+    /// means default admission knobs.
+    pub fn from_experiment(exp: &Experiment) -> ServeSetup {
+        ServeSetup {
+            clients: exp.n_clients,
+            concurrency: exp.concurrency,
+            dispatches: exp.steps,
+            slow_fraction: exp.slow_fraction,
+            mu_fast: exp.mu_fast,
+            p_fast: exp.p_fast,
+            gamma: exp.gamma,
+            beta: exp.beta,
+            eta: exp.eta,
+            kappa: exp.kappa,
+            policy: exp.policy.clone(),
+            algo: exp.algo.clone(),
+            seed: exp.seed,
+            cfg: exp.serve.clone().unwrap_or_default(),
+        }
+    }
+
+    /// Structural validation; policy/algo names are checked against the
+    /// registries when [`ServeSetup::run`] builds them.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.clients == 0 {
+            return Err("serve: clients must be >= 1".into());
+        }
+        if self.concurrency == 0 {
+            return Err("serve: concurrency must be >= 1".into());
+        }
+        if self.dispatches == 0 {
+            return Err("serve: dispatch budget (steps) must be >= 1".into());
+        }
+        if !(0.0..=1.0).contains(&self.slow_fraction) {
+            return Err(format!("serve: slow_fraction {} not in [0,1]", self.slow_fraction));
+        }
+        if !(self.mu_fast > 0.0) || !self.mu_fast.is_finite() {
+            return Err(format!("serve: mu_fast {} must be finite and > 0", self.mu_fast));
+        }
+        self.cfg.validate()
+    }
+
+    fn policy_ctx(&self) -> Result<PolicyCtx, String> {
+        Ok(PolicyCtx {
+            n: self.clients,
+            base_p: two_cluster_p(self.clients, self.slow_fraction, self.p_fast),
+            gamma: self.gamma,
+            beta: self.beta,
+            n_fast: two_cluster_n_fast(self.clients, self.slow_fraction),
+            mu_fast: self.mu_fast,
+            mu_slow: 1.0,
+            concurrency: self.concurrency,
+            steps: self.dispatches,
+        })
+    }
+
+    /// Run the serve session to quiescence and return its report.
+    pub fn run(&self) -> Result<ServeReport, String> {
+        self.validate()?;
+        let ctx = self.policy_ctx()?;
+        let policy = PolicyRegistry::builtin().build(&self.policy, &ctx)?;
+        let mut params = StrategyParams::new(self.eta, policy.probs());
+        params.kappa = self.kappa;
+        let strategy = StrategyRegistry::builtin().build(&self.algo, &params)?;
+        let policy_name = policy.name();
+        let algo_name = strategy.name().to_string();
+
+        let exec = Executor::new();
+        let h = exec.handle();
+        let n = self.clients;
+        let cfg = self.cfg.clone();
+
+        let mut st = ServeState {
+            cfg: cfg.clone(),
+            policy,
+            strategy,
+            model: ModelState {
+                tensors: vec![vec![0.0f32; SERVE_MODEL_DIM]],
+                shapes: vec![vec![SERVE_MODEL_DIM]],
+            },
+            grads: vec![vec![0.0f32; SERVE_MODEL_DIM]],
+            route_rng: Rng::new(stream_seed(self.seed, &[SERVE_ROUTE_STREAM])),
+            service_root: stream_seed(self.seed, &[SERVE_SERVICE_STREAM]),
+            rates: two_cluster_rates(self.clients, self.slow_fraction, self.mu_fast),
+            clients: (0..n)
+                .map(|_| ClientState {
+                    inbox: VecDeque::new(),
+                    waker: None,
+                    ewma_queue: Ewma::new(cfg.alpha_queue),
+                    ewma_compute: Ewma::new(cfg.alpha_compute),
+                    completions: 0,
+                    dispatches: 0,
+                })
+                .collect(),
+            budget: self.dispatches,
+            dispatched: 0,
+            completed: 0,
+            server_free: 0.0,
+            warm: 0,
+            admitted: 0,
+            deferred: 0,
+            deadline_misses: 0,
+            joins: 0,
+            delay_w: Welford::new(),
+            queue_w: Welford::new(),
+            compute_w: Welford::new(),
+            est_err_w: Welford::new(),
+        };
+
+        // Ramp: odd-indexed clients start outside the network and join
+        // at seeded times; even-indexed clients anchor both clusters so
+        // the initial routing distribution always has support.
+        let join_root = stream_seed(self.seed, &[SERVE_JOIN_STREAM]);
+        let join_at: Vec<f64> = (0..n)
+            .map(|i| {
+                if cfg.ramp_time > 0.0 && i % 2 == 1 {
+                    cfg.ramp_time * Rng::new(stream_seed(join_root, &[i as u64])).uniform()
+                } else {
+                    -1.0
+                }
+            })
+            .collect();
+        for (i, at) in join_at.iter().enumerate() {
+            if *at >= 0.0 {
+                st.policy.observe_leave(i);
+            }
+        }
+
+        let st = Rc::new(RefCell::new(st));
+        for (i, at) in join_at.into_iter().enumerate() {
+            exec.spawn(client_loop(h.clone(), Rc::clone(&st), i, at));
+        }
+        // Initial fan-out: C tasks routed at t = 0, all through the
+        // same admission path completions use later.
+        let fan_out = (self.concurrency as u64).min(self.dispatches);
+        for _ in 0..fan_out {
+            route_and_dispatch(&st, &h, 0.0);
+        }
+
+        let wall_start = std::time::Instant::now(); // lint-allow(R3): wall clock feeds only the perf block, which to_json_deterministic() excludes from the comparison payload
+        exec.run();
+        let wall_secs = wall_start.elapsed().as_secs_f64();
+
+        let g = st.borrow();
+        debug_assert_eq!(g.completed, g.dispatched, "serve run did not drain");
+        let virtual_time = exec.now();
+        Ok(ServeReport {
+            setup: self.clone(),
+            policy_name,
+            algo_name,
+            dispatched: g.dispatched,
+            completed: g.completed,
+            versions: g.strategy.version(),
+            received: g.strategy.received(),
+            warm: g.warm,
+            admitted: g.admitted,
+            deferred: g.deferred,
+            deadline_misses: g.deadline_misses,
+            joins: g.joins,
+            virtual_time,
+            windows: (virtual_time / self.cfg.t_sync).floor() as u64 + 1,
+            delay: g.delay_w.clone(),
+            queue_time: g.queue_w.clone(),
+            compute_time: g.compute_w.clone(),
+            estimate_abs_err: g.est_err_w.clone(),
+            wall_secs,
+        })
+    }
+}
+
+/// One in-flight task, created at routing time and consumed at
+/// completion time.
+#[derive(Clone, Copy, Debug)]
+struct TaskMsg {
+    /// Virtual time the admission decision scheduled delivery for.
+    dispatch_time: f64,
+    /// Policy probability of the target at routing time (IPW channel).
+    dispatch_prob: f64,
+    /// Strategy version at routing time (staleness channel).
+    version_at_dispatch: u64,
+    /// Deadline: end of the delivery window plus the tolerance slack.
+    deadline: f64,
+}
+
+/// Per-client coordinator state: the inbox models the client's task
+/// queue, the waker parks its future between tasks.
+struct ClientState {
+    inbox: VecDeque<TaskMsg>,
+    waker: Option<Waker>,
+    ewma_queue: Ewma,
+    ewma_compute: Ewma,
+    completions: u64,
+    /// Per-client dispatch counter k — the second tag of the keyed
+    /// compute draw, so draws are independent of scheduling order.
+    dispatches: u64,
+}
+
+/// Shared coordinator state, behind `Rc<RefCell<…>>` so every client
+/// future reaches it.
+struct ServeState {
+    cfg: ServeConfig,
+    policy: Box<dyn SamplingPolicy>,
+    strategy: Box<dyn ServerStrategy>,
+    model: ModelState,
+    grads: Vec<Vec<f32>>,
+    route_rng: Rng,
+    service_root: u64,
+    rates: Vec<f64>,
+    clients: Vec<ClientState>,
+    budget: u64,
+    dispatched: u64,
+    completed: u64,
+    /// Virtual time until which the (sequential) server is busy — the
+    /// FIFO bookkeeping that turns concurrency into queue time.
+    server_free: f64,
+    warm: u64,
+    admitted: u64,
+    deferred: u64,
+    deadline_misses: u64,
+    joins: u64,
+    delay_w: Welford,
+    queue_w: Welford,
+    compute_w: Welford,
+    est_err_w: Welford,
+}
+
+/// Future resolving to the client's next task: pops the inbox or parks
+/// the client's waker.
+struct NextTask {
+    st: Rc<RefCell<ServeState>>,
+    client: usize,
+}
+
+impl Future for NextTask {
+    type Output = TaskMsg;
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<TaskMsg> {
+        let this = self.get_mut();
+        let mut g = this.st.borrow_mut();
+        let c = &mut g.clients[this.client];
+        match c.inbox.pop_front() {
+            Some(msg) => Poll::Ready(msg),
+            None => {
+                c.waker = Some(cx.waker().clone());
+                Poll::Pending
+            }
+        }
+    }
+}
+
+/// Push a task into client `j`'s inbox and wake its future.
+fn deliver(st: &Rc<RefCell<ServeState>>, j: usize, msg: TaskMsg) {
+    let waker = {
+        let mut g = st.borrow_mut();
+        let c = &mut g.clients[j];
+        c.inbox.push_back(msg);
+        c.waker.take()
+    };
+    if let Some(w) = waker {
+        w.wake();
+    }
+}
+
+/// Route the next dispatch (if budget remains) and deliver it now or,
+/// when the admission controller defers, at the next window boundary.
+fn route_and_dispatch(st: &Rc<RefCell<ServeState>>, h: &Handle, now: f64) {
+    let decision = {
+        let mut g = st.borrow_mut();
+        let s = &mut *g;
+        if s.budget == 0 {
+            return;
+        }
+        s.budget -= 1;
+        // Contract order (matches the offline engines): the completion
+        // callback has already fired, so routing sees updated weights.
+        let j = s.policy.route(&mut s.route_rng);
+        let estimate = {
+            let c = &s.clients[j];
+            if c.completions >= s.cfg.warm_up {
+                match (c.ewma_queue.estimate(), c.ewma_compute.estimate()) {
+                    (Some(q), Some(cp)) => Some(q + cp),
+                    _ => None,
+                }
+            } else {
+                None
+            }
+        };
+        let (adm, at) = decide_dispatch(&s.cfg, now, estimate);
+        match adm {
+            Admission::Warm => s.warm += 1,
+            Admission::Admitted => s.admitted += 1,
+            Admission::Deferred => s.deferred += 1,
+        }
+        s.dispatched += 1;
+        let msg = TaskMsg {
+            dispatch_time: at,
+            dispatch_prob: s.policy.prob_of(j),
+            version_at_dispatch: s.strategy.version(),
+            deadline: window_end_of(at, s.cfg.t_sync)
+                + s.cfg.admission_tolerance * s.cfg.t_sync,
+        };
+        s.strategy.on_dispatch(j, s.dispatched, at);
+        (j, msg, at)
+    };
+    let (j, msg, at) = decision;
+    if at <= now {
+        deliver(st, j, msg);
+    } else {
+        let st2 = Rc::clone(st);
+        let h2 = h.clone();
+        h.spawn(async move {
+            h2.sleep_until(at).await;
+            deliver(&st2, j, msg);
+        });
+    }
+}
+
+/// Fold a finished round trip into the model, the policy's delay
+/// channel, the EWMAs, and the report aggregates — then route the next
+/// dispatch at the freed capacity.
+fn complete(st: &Rc<RefCell<ServeState>>, h: &Handle, i: usize, msg: TaskMsg, compute: f64, now: f64) {
+    {
+        let mut g = st.borrow_mut();
+        let s = &mut *g;
+        s.completed += 1;
+        let delay_time = now - msg.dispatch_time;
+        let delay_steps = s.strategy.version().saturating_sub(msg.version_at_dispatch);
+        let ctx = GradientCtx {
+            node: i,
+            step: s.completed,
+            time: now,
+            delay_steps,
+            dispatch_prob: msg.dispatch_prob,
+            grads: &s.grads,
+        };
+        s.strategy.on_gradient(&mut s.model, &ctx);
+        s.policy.observe_completion(i, delay_steps, delay_time);
+        let queue_time = (delay_time - compute).max(0.0);
+        if now > msg.deadline {
+            s.deadline_misses += 1;
+        }
+        // Score the pre-update estimate against the realized round trip
+        // (only once warm — the quantity the admission check used).
+        let c = &s.clients[i];
+        if c.completions >= s.cfg.warm_up {
+            if let (Some(q), Some(cp)) = (c.ewma_queue.estimate(), c.ewma_compute.estimate()) {
+                s.est_err_w.push((q + cp - delay_time).abs());
+            }
+        }
+        let c = &mut s.clients[i];
+        c.ewma_queue.push(queue_time);
+        c.ewma_compute.push(compute);
+        c.completions += 1;
+        s.delay_w.push(delay_time);
+        s.queue_w.push(queue_time);
+        s.compute_w.push(compute);
+    }
+    route_and_dispatch(st, h, now);
+}
+
+/// One simulated client: optionally join mid-ramp, then loop — await a
+/// task, compute for a keyed-exponential duration, wait for the
+/// (sequential) server to fold the gradient in, report completion.
+async fn client_loop(h: Handle, st: Rc<RefCell<ServeState>>, i: usize, join_at: f64) {
+    if join_at >= 0.0 {
+        h.sleep_until(join_at).await;
+        let mut g = st.borrow_mut();
+        g.policy.observe_join(i);
+        g.joins += 1;
+        drop(g);
+    }
+    loop {
+        let msg = NextTask { st: Rc::clone(&st), client: i }.await;
+        let compute = {
+            let mut g = st.borrow_mut();
+            let s = &mut *g;
+            let k = s.clients[i].dispatches;
+            s.clients[i].dispatches += 1;
+            let seed = stream_seed(s.service_root, &[i as u64, k]);
+            Rng::new(seed).exponential(s.rates[i])
+        };
+        h.sleep_until(h.now() + compute).await;
+        let finish = {
+            let mut g = st.borrow_mut();
+            let arrival = h.now();
+            let begin = if g.server_free > arrival { g.server_free } else { arrival };
+            let fin = begin + g.cfg.server_time;
+            g.server_free = fin;
+            fin
+        };
+        h.sleep_until(finish).await;
+        complete(&st, &h, i, msg, compute, finish);
+    }
+}
+
+/// Result of one serve session.  The deterministic core
+/// ([`ServeReport::to_json_deterministic`]) is bit-identical across
+/// runs on a shared seed; wall-clock throughput lives only in the full
+/// report's `perf` block.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Echo of the setup that produced this report.
+    pub setup: ServeSetup,
+    /// Resolved policy name (aliases normalized).
+    pub policy_name: String,
+    /// Resolved strategy name (aliases normalized).
+    pub algo_name: String,
+    /// Tasks routed (== completions at quiescence).
+    pub dispatched: u64,
+    /// Gradients folded in.
+    pub completed: u64,
+    /// Final strategy version counter.
+    pub versions: u64,
+    /// Final strategy received counter.
+    pub received: u64,
+    /// Dispatches sent during a client's warm-up (no estimate).
+    pub warm: u64,
+    /// Dispatches whose estimate fit the window.
+    pub admitted: u64,
+    /// Dispatches deferred to the next window boundary.
+    pub deferred: u64,
+    /// Completions that landed after their deadline.
+    pub deadline_misses: u64,
+    /// Ramped clients that joined mid-session.
+    pub joins: u64,
+    /// Virtual time at quiescence.
+    pub virtual_time: f64,
+    /// Synchronization windows the session spanned.
+    pub windows: u64,
+    /// Round-trip delay (dispatch → gradient applied).
+    pub delay: Welford,
+    /// Non-compute share of the round trip.
+    pub queue_time: Welford,
+    /// Keyed-exponential compute share.
+    pub compute_time: Welford,
+    /// |estimate − realized round trip| for warm dispatches.
+    pub estimate_abs_err: Welford,
+    /// Wall-clock seconds of the executor run (perf block only).
+    pub wall_secs: f64,
+}
+
+fn num(x: f64) -> Json {
+    if x.is_finite() { Json::Num(x) } else { Json::Null }
+}
+
+fn welford_json(w: &Welford) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("count".to_string(), Json::Num(w.count() as f64));
+    m.insert("mean".to_string(), num(w.mean()));
+    m.insert("std".to_string(), num(w.std()));
+    m.insert("min".to_string(), num(w.min()));
+    m.insert("max".to_string(), num(w.max()));
+    Json::Obj(m)
+}
+
+impl ServeReport {
+    /// Dispatch throughput against the wall clock (perf metric).
+    pub fn dispatches_per_sec(&self) -> f64 {
+        self.dispatched as f64 / self.wall_secs.max(1e-12)
+    }
+
+    fn render_json(&self, include_perf: bool) -> Json {
+        let s = &self.setup;
+        let mut config = BTreeMap::new();
+        config.insert("clients".into(), Json::Num(s.clients as f64));
+        config.insert("concurrency".into(), Json::Num(s.concurrency as f64));
+        config.insert("dispatch_budget".into(), Json::Num(s.dispatches as f64));
+        config.insert("seed".into(), Json::Num(s.seed as f64));
+        config.insert("policy".into(), Json::Str(self.policy_name.clone()));
+        config.insert("algo".into(), Json::Str(self.algo_name.clone()));
+        config.insert("eta".into(), num(s.eta));
+        config.insert("kappa".into(), num(s.kappa));
+        config.insert("mu_fast".into(), num(s.mu_fast));
+        config.insert("slow_fraction".into(), num(s.slow_fraction));
+        config.insert("gamma".into(), num(s.gamma));
+        config.insert("beta".into(), num(s.beta));
+        config.insert("p_fast".into(), s.p_fast.map_or(Json::Null, num));
+        config.insert("t_sync".into(), num(s.cfg.t_sync));
+        config.insert("warm_up".into(), Json::Num(s.cfg.warm_up as f64));
+        config.insert("alpha_queue".into(), num(s.cfg.alpha_queue));
+        config.insert("alpha_compute".into(), num(s.cfg.alpha_compute));
+        config.insert("safety_buffer".into(), num(s.cfg.safety_buffer));
+        config.insert("admission_tolerance".into(), num(s.cfg.admission_tolerance));
+        config.insert("server_time".into(), num(s.cfg.server_time));
+        config.insert("ramp_time".into(), num(s.cfg.ramp_time));
+
+        let mut totals = BTreeMap::new();
+        totals.insert("dispatched".into(), Json::Num(self.dispatched as f64));
+        totals.insert("completed".into(), Json::Num(self.completed as f64));
+        totals.insert("versions".into(), Json::Num(self.versions as f64));
+        totals.insert("received".into(), Json::Num(self.received as f64));
+        totals.insert("virtual_time".into(), num(self.virtual_time));
+        totals.insert("windows".into(), Json::Num(self.windows as f64));
+
+        let mut admission = BTreeMap::new();
+        admission.insert("warm".into(), Json::Num(self.warm as f64));
+        admission.insert("admitted".into(), Json::Num(self.admitted as f64));
+        admission.insert("deferred".into(), Json::Num(self.deferred as f64));
+        admission.insert("deadline_misses".into(), Json::Num(self.deadline_misses as f64));
+        admission.insert("joins".into(), Json::Num(self.joins as f64));
+
+        let mut root = BTreeMap::new();
+        root.insert("mode".into(), Json::Str("serve".into()));
+        root.insert("config".into(), Json::Obj(config));
+        root.insert("totals".into(), Json::Obj(totals));
+        root.insert("admission".into(), Json::Obj(admission));
+        root.insert("delay".into(), welford_json(&self.delay));
+        root.insert("queue_time".into(), welford_json(&self.queue_time));
+        root.insert("compute_time".into(), welford_json(&self.compute_time));
+        root.insert("estimate_abs_err".into(), welford_json(&self.estimate_abs_err));
+        if include_perf {
+            let mut perf = BTreeMap::new();
+            perf.insert("wall_secs".into(), num(self.wall_secs));
+            perf.insert("dispatches_per_sec".into(), num(self.dispatches_per_sec()));
+            root.insert("perf".into(), Json::Obj(perf));
+        }
+        Json::Obj(root)
+    }
+
+    /// Full report, including the wall-clock `perf` block.
+    pub fn to_json(&self) -> Json {
+        self.render_json(true)
+    }
+
+    /// Deterministic core only: everything except wall-clock perf.
+    /// This rendering is byte-identical across runs on a shared seed.
+    pub fn to_json_deterministic(&self) -> Json {
+        self.render_json(false)
+    }
+
+    /// Human-readable multi-line summary for the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "serve {}/{}: {} dispatched, {} completed over {} windows \
+             (virtual time {:.2})\n\
+             admission: warm {} | admitted {} | deferred {} | \
+             deadline misses {} | joins {}\n\
+             delay mean {:.4} | queue mean {:.4} | compute mean {:.4} | \
+             est |err| mean {:.4}\n",
+            self.policy_name,
+            self.algo_name,
+            self.dispatched,
+            self.completed,
+            self.windows,
+            self.virtual_time,
+            self.warm,
+            self.admitted,
+            self.deferred,
+            self.deadline_misses,
+            self.joins,
+            self.delay.mean(),
+            self.queue_time.mean(),
+            self.compute_time.mean(),
+            self.estimate_abs_err.mean(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ServeSetup {
+        ServeSetup {
+            clients: 16,
+            concurrency: 4,
+            dispatches: 200,
+            slow_fraction: 0.5,
+            mu_fast: 4.0,
+            p_fast: None,
+            gamma: 0.5,
+            beta: 0.9,
+            eta: 0.05,
+            kappa: 0.5,
+            policy: "delay-adaptive".into(),
+            algo: "genasync-damped".into(),
+            seed: 11,
+            cfg: ServeConfig { t_sync: 10.0, server_time: 0.05, ..ServeConfig::default() },
+        }
+    }
+
+    #[test]
+    fn decision_is_warm_without_estimate() {
+        let cfg = ServeConfig::default();
+        assert_eq!(decide_dispatch(&cfg, 123.0, None), (Admission::Warm, 123.0));
+    }
+
+    #[test]
+    fn decision_boundary_with_zero_safety_buffer() {
+        let cfg = ServeConfig {
+            t_sync: 10.0,
+            safety_buffer: 0.0,
+            admission_tolerance: 0.0,
+            ..ServeConfig::default()
+        };
+        // 4 + 6 lands exactly on the boundary: admitted.
+        assert_eq!(decide_dispatch(&cfg, 4.0, Some(6.0)), (Admission::Admitted, 4.0));
+        // One epsilon over: deferred to the boundary.
+        assert_eq!(decide_dispatch(&cfg, 4.0, Some(6.1)), (Admission::Deferred, 10.0));
+        // The safety buffer alone can push a fitting estimate over.
+        let buffered = ServeConfig { safety_buffer: 1.0, ..cfg };
+        assert_eq!(decide_dispatch(&buffered, 4.0, Some(5.5)), (Admission::Deferred, 10.0));
+    }
+
+    #[test]
+    fn deferral_never_skips_a_window() {
+        let cfg = ServeConfig { t_sync: 10.0, ..ServeConfig::default() };
+        let (adm, at) = decide_dispatch(&cfg, 17.0, Some(1e9));
+        assert_eq!(adm, Admission::Deferred);
+        assert_eq!(at, 20.0, "deferred exactly one boundary, however bad the estimate");
+    }
+
+    #[test]
+    fn serve_drains_its_budget() {
+        let report = tiny().run().unwrap();
+        assert_eq!(report.dispatched, 200);
+        assert_eq!(report.completed, 200);
+        assert_eq!(report.warm + report.admitted + report.deferred, 200);
+        assert!(report.virtual_time > 0.0);
+        assert_eq!(report.received, 200);
+    }
+
+    #[test]
+    fn serve_toml_table_roundtrip_and_unknown_key() {
+        let mut tbl = BTreeMap::new();
+        tbl.insert("t_sync".to_string(), Value::Float(25.0));
+        tbl.insert("warm_up".to_string(), Value::Int(5));
+        tbl.insert("safety_buffer".to_string(), Value::Float(1.5));
+        let cfg = ServeConfig::from_toml_table(&tbl).unwrap();
+        assert_eq!(cfg.t_sync, 25.0);
+        assert_eq!(cfg.warm_up, 5);
+        assert_eq!(cfg.safety_buffer, 1.5);
+        tbl.insert("tsync".to_string(), Value::Float(1.0));
+        let err = ServeConfig::from_toml_table(&tbl).unwrap_err();
+        assert!(err.contains("unknown key 'tsync'"), "{err}");
+    }
+
+    #[test]
+    fn serve_config_rejects_degenerate_knobs() {
+        for (patch, needle) in [
+            (ServeConfig { t_sync: 0.0, ..ServeConfig::default() }, "t_sync"),
+            (ServeConfig { alpha_queue: 0.0, ..ServeConfig::default() }, "alpha_queue"),
+            (ServeConfig { alpha_compute: 1.5, ..ServeConfig::default() }, "alpha_compute"),
+            (ServeConfig { safety_buffer: -1.0, ..ServeConfig::default() }, "safety_buffer"),
+            (ServeConfig { server_time: f64::NAN, ..ServeConfig::default() }, "server_time"),
+        ] {
+            let err = patch.validate().unwrap_err();
+            assert!(err.contains(needle), "{err}");
+        }
+    }
+
+    #[test]
+    fn deterministic_core_is_identical_across_runs() {
+        let a = tiny().run().unwrap();
+        let b = tiny().run().unwrap();
+        assert_eq!(
+            a.to_json_deterministic().render(),
+            b.to_json_deterministic().render()
+        );
+        // and a different seed moves the aggregate
+        let mut other = tiny();
+        other.seed = 12;
+        let c = other.run().unwrap();
+        assert_ne!(
+            a.to_json_deterministic().render(),
+            c.to_json_deterministic().render()
+        );
+    }
+}

@@ -93,6 +93,7 @@
 
 use super::experiment::{two_cluster_n_fast, two_cluster_p, two_cluster_rates};
 use super::policy::{optimal_two_cluster, PolicyCtx, PolicyRegistry, SamplingPolicy, StaticPolicy};
+use super::serve::{ServeConfig, ServeSetup};
 use crate::coordinator::Experiment;
 use crate::runtime::BackendKind;
 use crate::simulator::{
@@ -117,6 +118,9 @@ pub enum SweepMode {
     /// Full DL experiments through [`Experiment::run`] on the native
     /// backend — scales in seeds, not nodes.
     Train,
+    /// Event-driven coordinator sessions ([`ServeSetup::run`]) — live
+    /// admission control over the same policy/strategy registries.
+    Serve,
 }
 
 impl std::str::FromStr for SweepMode {
@@ -126,7 +130,8 @@ impl std::str::FromStr for SweepMode {
         match s {
             "simulate" => Ok(SweepMode::Simulate),
             "train" => Ok(SweepMode::Train),
-            other => Err(format!("unknown sweep mode '{other}' (simulate|train)")),
+            "serve" => Ok(SweepMode::Serve),
+            other => Err(format!("unknown sweep mode '{other}' (simulate|train|serve)")),
         }
     }
 }
@@ -302,9 +307,46 @@ pub struct SweepSpec {
     pub pool_capacity: usize,
     /// optional open-network node lifecycle applied to every cell
     pub churn: Option<ChurnConfig>,
+    /// admission-control knobs applied to every serve-mode cell (None =
+    /// serve defaults)
+    pub serve: Option<ServeConfig>,
     pub cells: Vec<SweepCell>,
     pub train: TrainKnobs,
 }
+
+/// Keys the `[sweep]` table accepts — the single list shared by the
+/// parser below and the `docs/SCENARIOS.md` cross-check in
+/// `tests/scenario_lint.rs`.
+pub const SWEEP_KEYS: &[&str] = &[
+    "name", "mode", "seeds", "base_seed", "threads", "out", "engine", "shards", "big_n",
+    "batch_width", "pool_capacity",
+];
+
+/// Keys the `[grid]` table accepts (same contract as [`SWEEP_KEYS`]).
+pub const GRID_KEYS: &[&str] = &[
+    "clients",
+    "concurrency",
+    "steps",
+    "mu_fast",
+    "slow_fraction",
+    "gamma",
+    "beta",
+    "p_fast",
+    "service",
+    "policies",
+    "algos",
+];
+
+/// Keys the `[train]` table accepts (same contract as [`SWEEP_KEYS`]).
+pub const TRAIN_KEYS: &[&str] = &[
+    "variant",
+    "eta",
+    "n_train",
+    "n_val",
+    "classes_per_client",
+    "eval_every",
+    "kappa",
+];
 
 impl SweepSpec {
     pub fn from_path(path: &Path) -> Result<SweepSpec, String> {
@@ -318,36 +360,18 @@ impl SweepSpec {
         for (table, keys) in &doc.tables {
             let known: &[&str] = match table.as_str() {
                 "" => &[],
-                "sweep" => &[
-                    "name", "mode", "seeds", "base_seed", "threads", "out", "engine", "shards",
-                    "big_n", "batch_width", "pool_capacity",
-                ],
-                // [churn] keys are validated (strictly) by
-                // ChurnConfig::from_toml_table — one authority, no drift
-                "churn" => continue,
-                "grid" => &[
-                    "clients",
-                    "concurrency",
-                    "steps",
-                    "mu_fast",
-                    "slow_fraction",
-                    "gamma",
-                    "beta",
-                    "p_fast",
-                    "service",
-                    "policies",
-                    "algos",
-                ],
-                "train" => &[
-                    "variant",
-                    "eta",
-                    "n_train",
-                    "n_val",
-                    "classes_per_client",
-                    "eval_every",
-                    "kappa",
-                ],
-                other => return Err(format!("unknown table [{other}] (sweep|grid|churn|train)")),
+                "sweep" => SWEEP_KEYS,
+                // [churn]/[serve] keys are validated (strictly) by
+                // ChurnConfig::from_toml_table / ServeConfig::
+                // from_toml_table — one authority each, no drift
+                "churn" | "serve" => continue,
+                "grid" => GRID_KEYS,
+                "train" => TRAIN_KEYS,
+                other => {
+                    return Err(format!(
+                        "unknown table [{other}] (sweep|grid|churn|serve|train)"
+                    ))
+                }
             };
             for k in keys.keys() {
                 if !known.contains(&k.as_str()) {
@@ -389,6 +413,10 @@ impl SweepSpec {
         // own "[churn]" context
         let churn = match doc.tables.get("churn") {
             Some(tbl) => Some(ChurnConfig::from_toml_table(tbl)?),
+            None => None,
+        };
+        let serve = match doc.tables.get("serve") {
+            Some(tbl) => Some(ServeConfig::from_toml_table(tbl)?),
             None => None,
         };
 
@@ -471,7 +499,7 @@ impl SweepSpec {
         let policies = strings("policies", "uniform")?;
         let algos = match mode {
             SweepMode::Simulate => vec!["-".to_string()],
-            SweepMode::Train => strings("algos", "gasync")?,
+            SweepMode::Train | SweepMode::Serve => strings("algos", "gasync")?,
         };
         let registry = PolicyRegistry::builtin();
         for p in &policies {
@@ -482,7 +510,7 @@ impl SweepSpec {
                 ));
             }
         }
-        if mode == SweepMode::Train {
+        if mode != SweepMode::Simulate {
             let strategies = crate::fl::StrategyRegistry::builtin();
             for a in &algos {
                 if !strategies.contains(a) {
@@ -587,6 +615,7 @@ impl SweepSpec {
             batch_width: batch_width as usize,
             pool_capacity: pool_capacity as usize,
             churn,
+            serve,
             cells,
             train,
         })
@@ -597,8 +626,9 @@ impl SweepSpec {
     /// never perturbs the deterministic report.  `worker_threads` only
     /// sizes the shard-level pool of big-n cells.
     pub fn engine_for_cell(&self, cell: &SweepCell, worker_threads: usize) -> EngineConfig {
-        if self.mode == SweepMode::Train {
-            // the DL driver holds the heap engine directly
+        if self.mode != SweepMode::Simulate {
+            // train: the DL driver holds the heap engine directly;
+            // serve: replications run on the single-threaded executor
             return EngineConfig::heap();
         }
         let n = cell.scenario.clients as u64;
@@ -923,6 +953,45 @@ fn train_replication(cell: &SweepCell, knobs: &TrainKnobs, seed: u64) -> Result<
     Ok(RepResult { metrics: m, perf: BTreeMap::new(), curve })
 }
 
+/// One serve session as a sweep replication: same admission knobs for
+/// every cell, the cell's scenario/policy/algo for everything else, the
+/// shared `[train]` eta/kappa for the strategies.
+fn serve_replication(spec: &SweepSpec, cell: &SweepCell, seed: u64) -> Result<RepResult, String> {
+    let s = &cell.scenario;
+    let setup = ServeSetup {
+        clients: s.clients,
+        concurrency: s.concurrency,
+        dispatches: s.steps,
+        slow_fraction: s.slow_fraction,
+        mu_fast: s.mu_fast,
+        p_fast: s.p_fast,
+        gamma: s.gamma,
+        beta: s.beta,
+        eta: spec.train.eta,
+        kappa: spec.train.kappa,
+        policy: cell.policy.clone(),
+        algo: cell.algo.clone(),
+        seed,
+        cfg: spec.serve.clone().unwrap_or_default(),
+    };
+    let rep = setup.run()?;
+    let mut m = BTreeMap::new();
+    m.insert("dispatched".into(), rep.dispatched as f64);
+    m.insert("completed".into(), rep.completed as f64);
+    m.insert("mean_delay".into(), rep.delay.mean());
+    m.insert("mean_queue_time".into(), rep.queue_time.mean());
+    m.insert("mean_compute_time".into(), rep.compute_time.mean());
+    m.insert("virtual_time".into(), rep.virtual_time);
+    m.insert("windows".into(), rep.windows as f64);
+    let denom = (rep.completed as f64).max(1.0);
+    m.insert("deadline_miss_rate".into(), rep.deadline_misses as f64 / denom);
+    m.insert("deferred_rate".into(), rep.deferred as f64 / denom);
+    let mut perf = BTreeMap::new();
+    perf.insert("wall_secs".into(), rep.wall_secs);
+    perf.insert("dispatches_per_sec".into(), rep.dispatches_per_sec());
+    Ok(RepResult { metrics: m, perf, curve: Vec::new() })
+}
+
 fn run_replication(
     spec: &SweepSpec,
     cell: &SweepCell,
@@ -936,6 +1005,7 @@ fn run_replication(
     match spec.mode {
         SweepMode::Simulate => simulate_replication(spec, cell, cached_p, engine, seed),
         SweepMode::Train => train_replication(cell, &spec.train, seed),
+        SweepMode::Serve => serve_replication(spec, cell, seed),
     }
 }
 
@@ -1160,13 +1230,17 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
             }
         }
         let e = engines[cell.id];
-        let engine = match e.kind {
-            EngineKind::Heap => "heap".to_string(),
-            EngineKind::Sharded => {
-                format!("sharded(S={})", e.resolve_shards(cell.scenario.clients))
+        let engine = if spec.mode == SweepMode::Serve {
+            "serve".to_string()
+        } else {
+            match e.kind {
+                EngineKind::Heap => "heap".to_string(),
+                EngineKind::Sharded => {
+                    format!("sharded(S={})", e.resolve_shards(cell.scenario.clients))
+                }
+                // the chunk target width; a cell's tail chunk may be narrower
+                EngineKind::Batch => format!("batch(R={})", batch_width.min(spec.seeds)),
             }
-            // the chunk target width; a cell's tail chunk may be narrower
-            EngineKind::Batch => format!("batch(R={})", batch_width.min(spec.seeds)),
         };
         cells.push(CellReport { cell: cell.clone(), engine, metrics, perf, curve });
     }
@@ -1225,6 +1299,7 @@ impl SweepReport {
                 match self.mode {
                     SweepMode::Simulate => "simulate",
                     SweepMode::Train => "train",
+                    SweepMode::Serve => "serve",
                 }
                 .to_string(),
             ),
@@ -1339,6 +1414,13 @@ impl SweepReport {
                     fmt(c.metrics.get("final_accuracy")),
                     fmt(c.metrics.get("final_val_loss")),
                     fmt(c.metrics.get("tau_max")),
+                ),
+                SweepMode::Serve => format!(
+                    "{:<48} delay {} | miss rate {} | deferred {}",
+                    c.cell.label(),
+                    fmt(c.metrics.get("mean_delay")),
+                    fmt(c.metrics.get("deadline_miss_rate")),
+                    fmt(c.metrics.get("deferred_rate")),
                 ),
             };
             out.push_str(&line);

@@ -1,16 +1,10 @@
 //! fedqueue CLI — the leader entrypoint.
 //!
-//! Subcommands:
-//!   train      run one asynchronous FL experiment (Algorithm 1 + baselines)
-//!   simulate   run the closed-network simulator and report delay stats
-//!   bounds     evaluate/optimize the Theorem-1 bound for a 2-cluster setup
-//!   figure N   regenerate one paper figure/table (fig1..fig12, table1/2)
-//!   figures    regenerate everything into --out (default results/)
-//!   info       runtime/artifact diagnostics
-//!
-//! Algorithm and policy lists in the usage/error text are generated from
-//! the strategy/policy registries — registering a new strategy makes it
-//! reachable from `train` with no CLI changes.
+//! Subcommands are registered in the [`COMMANDS`] table; the usage text
+//! and the unknown-command error enumerate that table, and the algorithm
+//! and policy lists are generated from the strategy/policy registries —
+//! registering a new strategy makes it reachable from `train` with no
+//! CLI changes.
 
 use fedqueue::bound::{BoundParams, MiSource, TwoClusterStudy};
 use fedqueue::coordinator::{Experiment, PolicyRegistry};
@@ -22,6 +16,26 @@ use fedqueue::simulator::{run as sim_run, EngineConfig, ServiceDist, ServiceFami
 use fedqueue::util::cli::Args;
 use fedqueue::util::table::Series;
 use std::path::Path;
+
+/// Every subcommand with a one-line summary.  `usage()` and the
+/// unknown-command error are rendered from this table, so the list the
+/// user sees is always the list `main()` dispatches on.
+const COMMANDS: &[(&str, &str)] = &[
+    ("train", "run one asynchronous FL experiment (Algorithm 1 + baselines)"),
+    ("simulate", "run the closed-network simulator and report delay stats"),
+    ("serve", "event-driven coordinator session with admission control"),
+    ("sweep", "multi-seed scenario grid -> mean +/- CI JSON"),
+    ("bounds", "evaluate/optimize the Theorem-1 bound for a 2-cluster setup"),
+    ("figure", "regenerate one paper figure/table (fig1..fig12, table1/2)"),
+    ("figures", "regenerate every table/figure into --out"),
+    ("info", "runtime/artifact diagnostics"),
+    ("help", "print this help"),
+];
+
+/// `train|simulate|serve|...` — for the unknown-command error.
+fn command_list() -> String {
+    COMMANDS.iter().map(|(n, _)| *n).collect::<Vec<_>>().join("|")
+}
 
 fn usage() -> String {
     let strategies = StrategyRegistry::builtin();
@@ -41,7 +55,10 @@ fedqueue — Queuing dynamics of asynchronous Federated Learning (AISTATS 2024)
 
 USAGE: fedqueue <command> [options]
 
-COMMANDS
+COMMANDS (from the command table)
+{cmds}
+
+OPTIONS BY COMMAND
   train     --scenario scenarios/NAME.toml | flags:
             --algo {algo_list}
             --policy {policy_list}
@@ -55,11 +72,18 @@ COMMANDS
   simulate  --n N --c C --steps N --mu-fast F --n-fast N --p-fast F --seed S
             --engine heap|sharded|batch --shards S --shard-threads T
             (engines are bit-identical; sharded scales to n = 10^6 nodes)
+  serve     --scenario scenarios/serve_quick.toml
+            [--clients N --concurrency C --dispatches N --seed S]
+            [--out results/serve.json]
+            simulated clients on the deterministic async executor; the
+            scenario's [serve] table sets t_sync/warm_up/safety_buffer/
+            admission_tolerance/server_time/ramp_time; the report JSON is
+            bit-identical across runs except its `perf` block
   sweep     --grid scenarios/sweep_fig6.toml [--threads N] [--seeds S]
             [--engine auto|heap|sharded|batch] [--batch-width R]
             [--out results/sweep.json]
             multi-seed grid -> mean ± CI JSON (+ per-cell events/sec and
-            peak-RSS perf block) + error-band CSV (see README schema);
+            peak-RSS perf block) + error-band CSV (keys: docs/SCENARIOS.md);
             small-n cells batch R seeds through one SoA arena
   bounds    --c C --mu-fast F --n N --n-fast N [--physical-time U]
   figure    <fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|table1|table2>
@@ -73,6 +97,12 @@ ALGORITHMS (server strategies, from the registry)
 POLICIES (sampling distributions, from the registry)
 {pols}
 ",
+        cmds = bullets(
+            COMMANDS
+                .iter()
+                .map(|(n, s)| (n.to_string(), s.to_string()))
+                .collect()
+        ),
         algos = bullets(strategies.summaries()),
         pols = bullets(policies.summaries()),
     )
@@ -95,6 +125,7 @@ fn main() {
     let result = match cmd.as_str() {
         "train" => cmd_train(&args),
         "simulate" => cmd_simulate(&args),
+        "serve" => cmd_serve(&args),
         "sweep" => cmd_sweep(&args),
         "bounds" => cmd_bounds(&args),
         "figure" => cmd_figure(&args),
@@ -104,7 +135,11 @@ fn main() {
             println!("{}", usage());
             Ok(())
         }
-        other => Err(format!("unknown command '{other}'\n\n{}", usage())),
+        other => Err(format!(
+            "unknown command '{other}' ({})\n\n{}",
+            command_list(),
+            usage()
+        )),
     };
     if let Err(e) = result {
         eprintln!("error: {e}");
@@ -254,6 +289,35 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         res.step_rate(steps),
         an.cs_rate,
         res.total_time
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let scenario = args
+        .get("scenario")
+        .ok_or("serve: --scenario scenarios/serve_quick.toml is required")?;
+    let mut exp = Experiment::from_scenario(Path::new(scenario))?;
+    exp.n_clients = args.usize_or("clients", exp.n_clients)?;
+    exp.concurrency = args.usize_or("concurrency", exp.concurrency)?;
+    exp.seed = args.u64_or("seed", exp.seed)?;
+    let mut setup = fedqueue::coordinator::ServeSetup::from_experiment(&exp);
+    setup.dispatches = args.u64_or("dispatches", setup.dispatches)?;
+    let report = setup.run()?;
+    print!("{}", report.summary());
+    let out = args.str_or("out", "results/serve.json");
+    let out_path = Path::new(&out);
+    if let Some(dir) = out_path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        }
+    }
+    std::fs::write(out_path, report.to_json().render()).map_err(|e| e.to_string())?;
+    println!(
+        "wrote {}  [{:.1}s wall, {:.0} dispatches/sec]",
+        out_path.display(),
+        report.wall_secs,
+        report.dispatches_per_sec()
     );
     Ok(())
 }

@@ -1,0 +1,626 @@
+//! Deterministic single-threaded async executor with a virtual clock.
+//!
+//! This is the substrate under `fedqueue serve` (see
+//! `coordinator::serve`): simulated clients run as spawned futures, and
+//! every interleaving decision is made here, deterministically, so a
+//! serve run is bit-identical across machines and repetitions on a
+//! shared seed.  The design follows the single-threaded simulation
+//! executors used by discrete-event frameworks (nexosim's
+//! `st_executor` shape):
+//!
+//! - **Slab task pool** — tasks live in a `Vec` of slots with a LIFO
+//!   free list, so completing or cancelling a task recycles its slot
+//!   (and allocation) for the next spawn.  A `(slot, generation)` pair
+//!   ([`TaskId`]) names a task; the generation is bumped on release so
+//!   stale wakes and stale cancels are rejected instead of hitting an
+//!   unrelated task that reused the slot.
+//! - **Cancellable futures** — [`Executor::cancel`] drops a pending
+//!   task's future in place.  Timers it registered stay in the heap but
+//!   fire into a dead generation, which is filtered at wake time.
+//! - **FIFO runnable queue** — woken tasks are polled in the order they
+//!   were woken, never by pointer identity or hash order.
+//! - **Virtual clock** — there is no real time here.  [`Handle::
+//!   sleep_until`] registers a `(time, sequence)`-ordered timer; when no
+//!   task is runnable the executor advances `now` to the earliest timer
+//!   and wakes it.  Equal-time timers fire in registration order.
+//!
+//! [`Executor::run`] drives the loop until *quiescence*: no runnable
+//! task and no pending timer.  Tasks still parked on an external waker
+//! (e.g. a channel nobody will ever write to) are simply left in the
+//! slab — that is the graceful-termination path the serve loop relies
+//! on when the dispatch budget is exhausted.
+//!
+//! The module is on the determinism contract's module list: `cargo
+//! xtask lint` rules R1–R5 apply (no wall clock, no RNG, no
+//! hash-ordered containers).
+
+use std::cell::RefCell;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+use std::future::Future;
+use std::pin::Pin;
+use std::rc::Rc;
+use std::sync::{Arc, Mutex};
+use std::task::{Context, Poll, Wake, Waker};
+
+/// Handle naming a spawned task: slab slot plus the generation the slot
+/// had at spawn time.  Stale ids (the task completed or was cancelled,
+/// and the slot possibly reused) are detected and ignored by
+/// [`Executor::cancel`] / [`Executor::is_alive`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TaskId {
+    slot: usize,
+    generation: u64,
+}
+
+impl TaskId {
+    /// Slab slot index (mainly useful to assert slot reuse in tests).
+    pub fn slot(&self) -> usize {
+        self.slot
+    }
+}
+
+/// One task: the future, the waker that re-queues it, and a flag that
+/// keeps it from being enqueued twice.
+struct TaskEntry {
+    future: Pin<Box<dyn Future<Output = ()>>>,
+    waker: Waker,
+    queued: bool,
+}
+
+/// A slab slot.  `generation` counts releases; `task` is `None` while
+/// the slot is free (or while its future is temporarily moved out to be
+/// polled).
+struct Slot {
+    generation: u64,
+    task: Option<TaskEntry>,
+}
+
+/// Pending virtual-clock timer.  Ordered by `(at_bits, seq)`: virtual
+/// times are non-negative finite `f64`s, whose IEEE-754 bit patterns
+/// order identically to their values, and `seq` breaks ties in
+/// registration order.  The waker does not participate in the ordering.
+struct TimerEntry {
+    at_bits: u64,
+    seq: u64,
+    waker: Waker,
+}
+
+impl PartialEq for TimerEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.at_bits == other.at_bits && self.seq == other.seq
+    }
+}
+impl Eq for TimerEntry {}
+impl PartialOrd for TimerEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for TimerEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at_bits, self.seq).cmp(&(other.at_bits, other.seq))
+    }
+}
+
+/// Wakes land here, outside the executor's `RefCell`, so a future may
+/// wake any task (including itself) while the executor is mid-poll.
+struct WakeQueue {
+    woken: Mutex<Vec<(usize, u64)>>,
+}
+
+/// The `std::task::Wake` implementation: waking pushes the task's
+/// `(slot, generation)` onto the shared wake queue.  Generation-stale
+/// wakes are filtered when the queue is drained.
+struct TaskWaker {
+    slot: usize,
+    generation: u64,
+    queue: Arc<WakeQueue>,
+}
+
+impl Wake for TaskWaker {
+    fn wake(self: Arc<Self>) {
+        self.wake_by_ref();
+    }
+    fn wake_by_ref(self: &Arc<Self>) {
+        self.queue.woken.lock().unwrap().push((self.slot, self.generation));
+    }
+}
+
+/// Mutable executor state behind the `Rc<RefCell<…>>` shared with every
+/// [`Handle`].
+struct Inner {
+    slots: Vec<Slot>,
+    free: Vec<usize>,
+    runnable: VecDeque<(usize, u64)>,
+    timers: BinaryHeap<Reverse<TimerEntry>>,
+    timer_seq: u64,
+    now: f64,
+    live: usize,
+    spawned: u64,
+}
+
+/// The deterministic single-threaded executor.  See the module docs for
+/// the design; see [`Handle`] for the API visible to spawned futures.
+pub struct Executor {
+    inner: Rc<RefCell<Inner>>,
+    wakes: Arc<WakeQueue>,
+}
+
+/// Cheap clonable handle passed into spawned futures: spawn more tasks,
+/// read the virtual clock, and sleep on it.
+#[derive(Clone)]
+pub struct Handle {
+    inner: Rc<RefCell<Inner>>,
+    wakes: Arc<WakeQueue>,
+}
+
+/// Future returned by [`Handle::sleep_until`]: pending until the
+/// virtual clock reaches `at`.  A deadline at or before the current
+/// virtual time completes immediately without registering a timer.
+pub struct Sleep {
+    inner: Rc<RefCell<Inner>>,
+    at: f64,
+}
+
+impl Future for Sleep {
+    type Output = ();
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        let this = self.get_mut();
+        let mut g = this.inner.borrow_mut();
+        if g.now >= this.at {
+            return Poll::Ready(());
+        }
+        let seq = g.timer_seq;
+        g.timer_seq += 1;
+        g.timers.push(Reverse(TimerEntry {
+            at_bits: this.at.max(0.0).to_bits(),
+            seq,
+            waker: cx.waker().clone(),
+        }));
+        Poll::Pending
+    }
+}
+
+fn cancel_in(inner: &Rc<RefCell<Inner>>, id: TaskId) -> bool {
+    let entry = {
+        let mut g = inner.borrow_mut();
+        let Some(s) = g.slots.get_mut(id.slot) else { return false };
+        if s.generation != id.generation || s.task.is_none() {
+            return false;
+        }
+        let entry = s.task.take();
+        s.generation += 1;
+        g.free.push(id.slot);
+        g.live -= 1;
+        entry
+    };
+    // Drop the future outside the borrow in case its Drop impl re-enters
+    // the executor (spawning cleanup tasks, reading now()).
+    drop(entry);
+    true
+}
+
+fn spawn_into(
+    inner: &Rc<RefCell<Inner>>,
+    wakes: &Arc<WakeQueue>,
+    future: impl Future<Output = ()> + 'static,
+) -> TaskId {
+    let mut g = inner.borrow_mut();
+    let slot = match g.free.pop() {
+        Some(s) => s,
+        None => {
+            g.slots.push(Slot { generation: 0, task: None });
+            g.slots.len() - 1
+        }
+    };
+    let generation = g.slots[slot].generation;
+    let waker = Waker::from(Arc::new(TaskWaker {
+        slot,
+        generation,
+        queue: Arc::clone(wakes),
+    }));
+    g.slots[slot].task = Some(TaskEntry { future: Box::pin(future), waker, queued: true });
+    g.runnable.push_back((slot, generation));
+    g.live += 1;
+    g.spawned += 1;
+    TaskId { slot, generation }
+}
+
+impl Handle {
+    /// Current virtual time.
+    pub fn now(&self) -> f64 {
+        self.inner.borrow().now
+    }
+
+    /// Spawn a task; it is queued runnable and will be polled in FIFO
+    /// order relative to other pending wakes.
+    pub fn spawn(&self, future: impl Future<Output = ()> + 'static) -> TaskId {
+        spawn_into(&self.inner, &self.wakes, future)
+    }
+
+    /// Sleep until virtual time `at` (completes immediately if `at` is
+    /// already in the past).
+    pub fn sleep_until(&self, at: f64) -> Sleep {
+        debug_assert!(!at.is_nan(), "sleep_until(NaN)");
+        Sleep { inner: Rc::clone(&self.inner), at }
+    }
+
+    /// Cancel another task from inside a running one — identical to
+    /// [`Executor::cancel`].
+    pub fn cancel(&self, id: TaskId) -> bool {
+        cancel_in(&self.inner, id)
+    }
+}
+
+impl Default for Executor {
+    fn default() -> Self {
+        Executor::new()
+    }
+}
+
+impl Executor {
+    /// New executor with an empty slab and the virtual clock at 0.
+    pub fn new() -> Executor {
+        Executor {
+            inner: Rc::new(RefCell::new(Inner {
+                slots: Vec::new(),
+                free: Vec::new(),
+                runnable: VecDeque::new(),
+                timers: BinaryHeap::new(),
+                timer_seq: 0,
+                now: 0.0,
+                live: 0,
+                spawned: 0,
+            })),
+            wakes: Arc::new(WakeQueue { woken: Mutex::new(Vec::new()) }),
+        }
+    }
+
+    /// Handle for use inside spawned futures.
+    pub fn handle(&self) -> Handle {
+        Handle { inner: Rc::clone(&self.inner), wakes: Arc::clone(&self.wakes) }
+    }
+
+    /// Spawn a task from outside the executor (identical to
+    /// [`Handle::spawn`]).
+    pub fn spawn(&self, future: impl Future<Output = ()> + 'static) -> TaskId {
+        spawn_into(&self.inner, &self.wakes, future)
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> f64 {
+        self.inner.borrow().now
+    }
+
+    /// Tasks alive in the slab (spawned, not yet completed/cancelled).
+    pub fn live(&self) -> usize {
+        self.inner.borrow().live
+    }
+
+    /// Total tasks ever spawned.
+    pub fn spawned(&self) -> u64 {
+        self.inner.borrow().spawned
+    }
+
+    /// Slab capacity (total slots ever allocated — stays flat when the
+    /// free list recycles slots).
+    pub fn slot_count(&self) -> usize {
+        self.inner.borrow().slots.len()
+    }
+
+    /// Whether `id` still names a live task.
+    pub fn is_alive(&self, id: TaskId) -> bool {
+        let g = self.inner.borrow();
+        g.slots
+            .get(id.slot)
+            .is_some_and(|s| s.generation == id.generation && s.task.is_some())
+    }
+
+    /// Cancel a pending task: its future is dropped, its slot is
+    /// recycled, and any timers or queued wakes it left behind are
+    /// invalidated via the generation bump.  Returns `false` for a
+    /// stale id — or for the task currently being polled, which cannot
+    /// cancel itself.
+    pub fn cancel(&self, id: TaskId) -> bool {
+        cancel_in(&self.inner, id)
+    }
+
+    /// Move pending wakes into the runnable queue, dropping stale
+    /// generations and de-duplicating via the per-task `queued` flag.
+    fn drain_wakes(&self) {
+        let woken: Vec<(usize, u64)> = {
+            let mut q = self.wakes.woken.lock().unwrap();
+            std::mem::take(&mut *q)
+        };
+        if woken.is_empty() {
+            return;
+        }
+        let mut g = self.inner.borrow_mut();
+        for (slot, generation) in woken {
+            let enqueue = match g.slots.get_mut(slot) {
+                Some(s) if s.generation == generation => match s.task.as_mut() {
+                    Some(entry) if !entry.queued => {
+                        entry.queued = true;
+                        true
+                    }
+                    _ => false,
+                },
+                _ => false,
+            };
+            if enqueue {
+                g.runnable.push_back((slot, generation));
+            }
+        }
+    }
+
+    /// Pop the earliest timer, advance the clock to it, and fire its
+    /// waker.  Returns `false` when no timers remain.
+    fn fire_next_timer(&self) -> bool {
+        let entry = {
+            let mut g = self.inner.borrow_mut();
+            match g.timers.pop() {
+                Some(Reverse(e)) => {
+                    let at = f64::from_bits(e.at_bits);
+                    if at > g.now {
+                        g.now = at;
+                    }
+                    e
+                }
+                None => return false,
+            }
+        };
+        entry.waker.wake();
+        true
+    }
+
+    /// Run to quiescence: poll runnable tasks in FIFO wake order; when
+    /// none are runnable, advance the virtual clock to the earliest
+    /// timer.  Returns when there is neither a runnable task nor a
+    /// pending timer.  Tasks parked on wakers nobody will fire are left
+    /// alive in the slab (inspect with [`Executor::live`]).
+    pub fn run(&self) {
+        loop {
+            self.drain_wakes();
+            let next = self.inner.borrow_mut().runnable.pop_front();
+            if let Some((slot, generation)) = next {
+                // Move the future out of the slab to poll it without
+                // holding the RefCell: the poll may spawn, sleep, wake,
+                // or (unsuccessfully) try to cancel itself.
+                let taken = {
+                    let mut g = self.inner.borrow_mut();
+                    match g.slots.get_mut(slot) {
+                        Some(s) if s.generation == generation => {
+                            if let Some(entry) = s.task.as_mut() {
+                                entry.queued = false;
+                            }
+                            s.task.take()
+                        }
+                        _ => None,
+                    }
+                };
+                let Some(mut entry) = taken else { continue };
+                let mut cx = Context::from_waker(&entry.waker);
+                let poll = entry.future.as_mut().poll(&mut cx);
+                let mut g = self.inner.borrow_mut();
+                let s = &mut g.slots[slot];
+                debug_assert_eq!(s.generation, generation, "slot reused mid-poll");
+                match poll {
+                    Poll::Ready(()) => {
+                        s.generation += 1;
+                        g.free.push(slot);
+                        g.live -= 1;
+                        drop(g);
+                        drop(entry);
+                    }
+                    Poll::Pending => {
+                        s.task = Some(entry);
+                    }
+                }
+                continue;
+            }
+            if !self.fire_next_timer() {
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::Cell;
+
+    /// Always-pending future that never registers its waker: parks its
+    /// task forever (until cancelled).
+    struct Forever;
+    impl Future for Forever {
+        type Output = ();
+        fn poll(self: Pin<&mut Self>, _cx: &mut Context<'_>) -> Poll<()> {
+            Poll::Pending
+        }
+    }
+
+    #[test]
+    fn tasks_run_in_spawn_order() {
+        let ex = Executor::new();
+        let order = Rc::new(RefCell::new(Vec::new()));
+        for i in 0..3 {
+            let order = Rc::clone(&order);
+            ex.spawn(async move { order.borrow_mut().push(i) });
+        }
+        ex.run();
+        assert_eq!(*order.borrow(), vec![0, 1, 2]);
+        assert_eq!(ex.live(), 0);
+    }
+
+    #[test]
+    fn virtual_clock_orders_timers_not_spawns() {
+        let ex = Executor::new();
+        let h = ex.handle();
+        let order = Rc::new(RefCell::new(Vec::new()));
+        for (i, at) in [5.0, 1.0, 3.0].into_iter().enumerate() {
+            let (h, order) = (h.clone(), Rc::clone(&order));
+            ex.spawn(async move {
+                h.sleep_until(at).await;
+                order.borrow_mut().push((i, at));
+            });
+        }
+        ex.run();
+        assert_eq!(*order.borrow(), vec![(1, 1.0), (2, 3.0), (0, 5.0)]);
+        assert_eq!(ex.now(), 5.0);
+    }
+
+    #[test]
+    fn equal_time_timers_fire_in_registration_order() {
+        let ex = Executor::new();
+        let h = ex.handle();
+        let order = Rc::new(RefCell::new(Vec::new()));
+        for i in 0..4 {
+            let (h, order) = (h.clone(), Rc::clone(&order));
+            ex.spawn(async move {
+                h.sleep_until(2.5).await;
+                order.borrow_mut().push(i);
+            });
+        }
+        ex.run();
+        assert_eq!(*order.borrow(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn sleep_in_the_past_is_immediate() {
+        let ex = Executor::new();
+        let h = ex.handle();
+        let done = Rc::new(Cell::new(false));
+        let flag = Rc::clone(&done);
+        ex.spawn(async move {
+            h.sleep_until(0.0).await;
+            h.sleep_until(-1.0).await;
+            flag.set(true);
+        });
+        ex.run();
+        assert!(done.get());
+        assert_eq!(ex.now(), 0.0);
+    }
+
+    #[test]
+    fn cancel_frees_the_slot_and_the_next_spawn_reuses_it() {
+        let ex = Executor::new();
+        ex.spawn(async {}); // slot 0, completes immediately on run
+        let parked = ex.spawn(Forever); // slot 1
+        ex.run();
+        assert_eq!(ex.live(), 1);
+        assert!(ex.is_alive(parked));
+        assert!(ex.cancel(parked));
+        assert!(!ex.is_alive(parked));
+        assert!(!ex.cancel(parked), "stale cancel must be a no-op");
+        assert_eq!(ex.live(), 0);
+        let next = ex.spawn(async {});
+        assert_eq!(next.slot(), parked.slot(), "freed slot is recycled");
+        assert!(ex.is_alive(next), "new generation is live despite stale id");
+        assert_eq!(ex.slot_count(), 2, "slab did not grow");
+        ex.run();
+        assert_eq!(ex.live(), 0);
+    }
+
+    #[test]
+    fn slab_stays_flat_under_spawn_complete_churn() {
+        let ex = Executor::new();
+        let h = ex.handle();
+        // Each wave completes before the next spawns, so the free list
+        // must absorb every slot: the slab never exceeds one wave.
+        let driver = h.clone();
+        ex.spawn(async move {
+            for wave in 0..16u32 {
+                for i in 0..8u32 {
+                    let h2 = driver.clone();
+                    let at = f64::from(wave) + f64::from(i) * 0.01;
+                    driver.spawn(async move { h2.sleep_until(at).await });
+                }
+                driver.sleep_until(f64::from(wave) + 0.5).await;
+            }
+        });
+        ex.run();
+        assert_eq!(ex.live(), 0);
+        assert_eq!(ex.spawned(), 16 * 8 + 1);
+        assert!(
+            ex.slot_count() <= 10,
+            "slab grew to {} slots for 8-task waves",
+            ex.slot_count()
+        );
+    }
+
+    #[test]
+    fn cancelled_sleeper_never_runs_and_stale_timer_is_harmless() {
+        let ex = Executor::new();
+        let h = ex.handle();
+        let ran = Rc::new(Cell::new(false));
+        let flag = Rc::clone(&ran);
+        let sleeper = ex.spawn(async move {
+            h.sleep_until(10.0).await;
+            flag.set(true);
+        });
+        // A second task cancels the sleeper at t = 1.0, while the 10.0
+        // timer is already registered.
+        let h2 = ex.handle();
+        let cancelled = Rc::new(Cell::new(false));
+        let cflag = Rc::clone(&cancelled);
+        ex.spawn(async move {
+            h2.sleep_until(1.0).await;
+            cflag.set(h2.cancel(sleeper));
+        });
+        // run() fires the stale 10.0 timer into a dead generation.
+        ex.run();
+        assert!(cancelled.get(), "mid-run cancel of a live sleeper");
+        assert!(!ran.get(), "cancelled task must not run");
+        assert_eq!(ex.live(), 0);
+        assert_eq!(ex.now(), 10.0, "clock still advanced to the stale timer");
+    }
+
+    #[test]
+    fn tasks_spawned_mid_run_are_polled() {
+        let ex = Executor::new();
+        let h = ex.handle();
+        let count = Rc::new(Cell::new(0u32));
+        let c = Rc::clone(&count);
+        ex.spawn(async move {
+            for _ in 0..3 {
+                let c2 = Rc::clone(&c);
+                h.spawn(async move { c2.set(c2.get() + 1) });
+            }
+        });
+        ex.run();
+        assert_eq!(count.get(), 3);
+    }
+
+    #[test]
+    fn self_wake_yields_then_resumes() {
+        /// Classic yield-now: wakes itself and returns Pending once.
+        struct YieldOnce(bool);
+        impl Future for YieldOnce {
+            type Output = ();
+            fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+                if self.0 {
+                    Poll::Ready(())
+                } else {
+                    self.0 = true;
+                    cx.waker().wake_by_ref();
+                    Poll::Pending
+                }
+            }
+        }
+        let ex = Executor::new();
+        let order = Rc::new(RefCell::new(Vec::new()));
+        let o1 = Rc::clone(&order);
+        ex.spawn(async move {
+            o1.borrow_mut().push("a1");
+            YieldOnce(false).await;
+            o1.borrow_mut().push("a2");
+        });
+        let o2 = Rc::clone(&order);
+        ex.spawn(async move { o2.borrow_mut().push("b") });
+        ex.run();
+        // The yield put task A behind task B in the FIFO.
+        assert_eq!(*order.borrow(), vec!["a1", "b", "a2"]);
+    }
+}

@@ -3,15 +3,27 @@
 //! behind the `pjrt` feature) — plus a pure-Rust `native` backend with
 //! identical semantics for fast sweeps and numerical cross-checks.
 //! Python never runs here.
+//!
+//! The layer also hosts [`executor`], the deterministic single-threaded
+//! async executor (slab task pool, virtual clock) that `fedqueue serve`
+//! schedules its simulated clients on.
 
+// `executor` is fully documented; the older modules still carry the
+// missing_docs debt marker (see the crate-root docs ratchet note).
+#[allow(missing_docs)]
 pub mod artifact;
+#[allow(missing_docs)]
 pub mod backend;
+pub mod executor;
+#[allow(missing_docs)]
 pub mod native;
 #[cfg(feature = "pjrt")]
+#[allow(missing_docs)]
 pub mod pjrt;
 
 pub use artifact::{Manifest, VariantMeta};
 pub use backend::{Backend, EvalSummary, ModelSpec};
+pub use executor::{Executor, Handle, TaskId};
 pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
@@ -19,7 +31,9 @@ pub use pjrt::PjrtBackend;
 /// Backend selector used by CLI/config.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendKind {
+    /// Pure-Rust reference backend (always available).
     Native,
+    /// PJRT C-API backend over AOT HLO artifacts (`pjrt` cargo feature).
     Pjrt,
 }
 

@@ -72,6 +72,22 @@ pub struct ChurnConfig {
     pub max_events: usize,
 }
 
+/// Every `[churn]` TOML key, in the order the error message lists them.
+/// Shared by [`ChurnConfig::from_toml_table`] and the docs cross-check
+/// (`tests/scenario_lint.rs`) so the parser and `docs/SCENARIOS.md`
+/// cannot drift apart.
+pub const CHURN_KEYS: &[&str] = &[
+    "arrival_rate",
+    "mean_lifetime",
+    "stall_rate",
+    "mean_stall",
+    "rate_change_rate",
+    "rate_factor_min",
+    "rate_factor_max",
+    "initial_active",
+    "max_events",
+];
+
 impl Default for ChurnConfig {
     fn default() -> Self {
         ChurnConfig {
@@ -162,10 +178,8 @@ impl ChurnConfig {
                 "max_events" => cfg.max_events = count(k, v)?,
                 other => {
                     return Err(format!(
-                        "unknown key '{other}' in [churn] \
-                         (arrival_rate|mean_lifetime|stall_rate|mean_stall|\
-                         rate_change_rate|rate_factor_min|rate_factor_max|\
-                         initial_active|max_events)"
+                        "unknown key '{other}' in [churn] ({})",
+                        CHURN_KEYS.join("|")
                     ))
                 }
             }

@@ -95,6 +95,52 @@ impl Welford {
     }
 }
 
+/// Exponentially weighted moving average with explicit warm-up semantics.
+///
+/// The serve-mode coordinator keeps one of these per client and per
+/// quantity (queue time, compute time).  Before the first observation
+/// [`Ewma::estimate`] returns `None`, which the admission controller
+/// reads as "no estimate yet — dispatch unconditionally" (the warm-up
+/// path).  The first `push` seeds the average with the raw observation;
+/// subsequent pushes blend with weight `alpha` on the new sample:
+/// `v ← alpha·x + (1 − alpha)·v`.
+#[derive(Clone, Copy, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: f64,
+    n: u64,
+}
+
+impl Ewma {
+    /// New empty estimator.  `alpha` in `(0, 1]`: 1 tracks only the most
+    /// recent sample, small values average over long horizons.
+    pub fn new(alpha: f64) -> Self {
+        Ewma { alpha, value: 0.0, n: 0 }
+    }
+
+    /// Record one observation.
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        if self.n == 0 {
+            self.value = x;
+        } else {
+            self.value = self.alpha * x + (1.0 - self.alpha) * self.value;
+        }
+        self.n += 1;
+    }
+
+    /// Current estimate, or `None` before the first observation.
+    #[inline]
+    pub fn estimate(&self) -> Option<f64> {
+        if self.n == 0 { None } else { Some(self.value) }
+    }
+
+    /// Number of observations folded in so far.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+}
+
 /// Fixed-width histogram over [lo, hi); out-of-range goes to under/overflow.
 #[derive(Clone, Debug)]
 pub struct Histogram {
@@ -460,5 +506,38 @@ mod tests {
         let v = [-1000.0, -1000.0];
         assert!((logsumexp(&v) - (-1000.0 + (2.0f64).ln())).abs() < 1e-12);
         assert_eq!(logsumexp(&[f64::NEG_INFINITY]), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn ewma_warm_up_then_blend() {
+        let mut e = Ewma::new(0.5);
+        assert_eq!(e.estimate(), None);
+        assert_eq!(e.count(), 0);
+        e.push(4.0); // first sample seeds, no blend with the 0 default
+        assert_eq!(e.estimate(), Some(4.0));
+        e.push(8.0);
+        assert_eq!(e.estimate(), Some(6.0));
+        e.push(6.0);
+        assert_eq!(e.estimate(), Some(6.0));
+        assert_eq!(e.count(), 3);
+    }
+
+    #[test]
+    fn ewma_alpha_one_tracks_last_sample() {
+        let mut e = Ewma::new(1.0);
+        for x in [3.0, 9.0, 1.5] {
+            e.push(x);
+            assert_eq!(e.estimate(), Some(x));
+        }
+    }
+
+    #[test]
+    fn ewma_converges_to_constant_input() {
+        let mut e = Ewma::new(0.25);
+        e.push(100.0);
+        for _ in 0..200 {
+            e.push(2.0);
+        }
+        assert!((e.estimate().unwrap() - 2.0).abs() < 1e-9);
     }
 }

@@ -4,13 +4,23 @@
 //!
 //! Format detection mirrors the CLI surfaces: files with a `[sweep]` or
 //! `[grid]` table are sweep grids (`fedqueue sweep --grid`), everything
-//! else is a train scenario (`fedqueue train --scenario`).  Both parsers
-//! run their full structural validation at parse time (axis types, policy
-//! and algorithm registry membership, two-cluster shape for `optimal`,
-//! engine names), which is exactly what this lint wants to pin.
+//! else is a train/serve scenario (`fedqueue train|serve --scenario`).
+//! Both parsers run their full structural validation at parse time (axis
+//! types, policy and algorithm registry membership, two-cluster shape for
+//! `optimal`, engine names), which is exactly what this lint wants to pin.
+//!
+//! The second half cross-checks `docs/SCENARIOS.md` against the parsers'
+//! own known-key tables, in both directions: a key the parsers accept but
+//! the page doesn't document fails, and so does a documented key the
+//! parsers no longer accept.
 
+use fedqueue::coordinator::experiment::{EXPERIMENT_KEYS, POLICY_KEYS, STRATEGY_KEYS};
+use fedqueue::coordinator::serve::SERVE_KEYS;
+use fedqueue::coordinator::sweep::{GRID_KEYS, SWEEP_KEYS, TRAIN_KEYS};
 use fedqueue::coordinator::{Experiment, SweepSpec};
+use fedqueue::simulator::CHURN_KEYS;
 use fedqueue::util::toml::Doc;
+use std::collections::BTreeSet;
 use std::path::PathBuf;
 
 fn scenarios_dir() -> PathBuf {
@@ -38,6 +48,7 @@ fn every_scenario_file_parses_through_its_validator() {
     );
     let mut grids = 0usize;
     let mut trains = 0usize;
+    let mut serves = 0usize;
     for path in &files {
         let text = std::fs::read_to_string(path)
             .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
@@ -53,11 +64,93 @@ fn every_scenario_file_parses_through_its_validator() {
                 .unwrap_or_else(|e| panic!("{}: train scenario: {e}", path.display()));
             exp.validate()
                 .unwrap_or_else(|e| panic!("{}: train scenario: {e}", path.display()));
+            if doc.tables.contains_key("serve") {
+                serves += 1;
+            }
             trains += 1;
         }
     }
     assert!(grids >= 2, "expected sweep grids among scenarios/, found {grids}");
     assert!(trains >= 3, "expected train scenarios among scenarios/, found {trains}");
+    assert!(
+        serves >= 2,
+        "expected serve scenarios ([serve] table) among scenarios/, found {serves}"
+    );
+}
+
+/// Every (table, key) row of the docs reference, parsed from its markdown
+/// tables: `| `[table]` | `key` | … |`.
+fn documented_keys() -> BTreeSet<(String, String)> {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../docs/SCENARIOS.md");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("docs reference {}: {e}", path.display()));
+    let mut rows = BTreeSet::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if !line.starts_with('|') {
+            continue;
+        }
+        let cells: Vec<&str> = line.split('|').map(str::trim).collect();
+        // cells[0] is the empty slice before the leading '|'
+        if cells.len() < 3 {
+            continue;
+        }
+        let (table, key) = (cells[1], cells[2]);
+        let backticked = |s: &str| s.len() > 2 && s.starts_with('`') && s.ends_with('`');
+        if !backticked(table) || !backticked(key) {
+            continue;
+        }
+        let table = table.trim_matches('`');
+        if !(table.starts_with('[') && table.ends_with(']')) {
+            continue;
+        }
+        rows.insert((
+            table[1..table.len() - 1].to_string(),
+            key.trim_matches('`').to_string(),
+        ));
+    }
+    assert!(
+        rows.len() >= 40,
+        "only {} documented (table, key) rows parsed from {} — format drift?",
+        rows.len(),
+        path.display()
+    );
+    rows
+}
+
+/// The parsers' own known-key tables — the same consts the strict
+/// unknown-key checks run against, so there is exactly one authority.
+fn parsed_keys() -> BTreeSet<(String, String)> {
+    let tables: &[(&str, &[&str])] = &[
+        ("experiment", EXPERIMENT_KEYS),
+        ("policy", POLICY_KEYS),
+        ("strategy", STRATEGY_KEYS),
+        ("serve", SERVE_KEYS),
+        ("churn", CHURN_KEYS),
+        ("sweep", SWEEP_KEYS),
+        ("grid", GRID_KEYS),
+        ("train", TRAIN_KEYS),
+    ];
+    tables
+        .iter()
+        .flat_map(|(t, keys)| keys.iter().map(move |k| (t.to_string(), k.to_string())))
+        .collect()
+}
+
+#[test]
+fn every_parsed_key_is_documented_and_vice_versa() {
+    let documented = documented_keys();
+    let parsed = parsed_keys();
+    let undocumented: Vec<_> = parsed.difference(&documented).collect();
+    assert!(
+        undocumented.is_empty(),
+        "keys the parsers accept but docs/SCENARIOS.md does not document: {undocumented:?}"
+    );
+    let stale: Vec<_> = documented.difference(&parsed).collect();
+    assert!(
+        stale.is_empty(),
+        "keys docs/SCENARIOS.md documents but no parser accepts: {stale:?}"
+    );
 }
 
 #[test]

@@ -1,0 +1,120 @@
+//! Admission-control edge cases for `fedqueue serve` — the warm-up path,
+//! boundary admission, pathological deadlines, mid-window joins, and the
+//! bit-identity guarantee, all through the public [`ServeSetup`] surface.
+
+use fedqueue::coordinator::{ServeConfig, ServeSetup};
+
+/// Small two-cluster session that drains in well under a second.
+fn base() -> ServeSetup {
+    ServeSetup {
+        clients: 16,
+        concurrency: 4,
+        dispatches: 300,
+        slow_fraction: 0.5,
+        mu_fast: 8.0,
+        p_fast: None,
+        gamma: 0.5,
+        beta: 0.2,
+        eta: 0.05,
+        kappa: 0.1,
+        policy: "delay-adaptive".to_string(),
+        algo: "genasync-damped".to_string(),
+        seed: 7,
+        cfg: ServeConfig { t_sync: 10.0, server_time: 0.05, ..ServeConfig::default() },
+    }
+}
+
+#[test]
+fn infinite_warm_up_keeps_every_dispatch_unconditional() {
+    let mut setup = base();
+    setup.cfg.warm_up = u64::MAX;
+    let report = setup.run().unwrap();
+    assert_eq!(report.dispatched, setup.dispatches);
+    assert_eq!(report.completed, setup.dispatches);
+    assert_eq!(report.warm, report.dispatched, "no estimate may ever be trusted");
+    assert_eq!(report.admitted, 0);
+    assert_eq!(report.deferred, 0);
+}
+
+#[test]
+fn zero_safety_buffer_admits_on_the_raw_estimate_and_drains() {
+    let mut setup = base();
+    setup.cfg.warm_up = 1;
+    setup.cfg.safety_buffer = 0.0;
+    let report = setup.run().unwrap();
+    assert_eq!(report.completed, setup.dispatches);
+    assert_eq!(
+        report.warm + report.admitted + report.deferred,
+        report.dispatched,
+        "every dispatch takes exactly one admission branch"
+    );
+    assert!(report.admitted > 0, "post-warm-up estimates must drive admissions");
+}
+
+#[test]
+fn pathological_deadlines_degrade_gracefully() {
+    // Windows far shorter than any compute time: once estimates warm up,
+    // every admission check fails (defer) and every completion lands past
+    // its deadline — the session must still drain its whole budget.
+    let mut setup = base();
+    setup.cfg.t_sync = 0.001;
+    setup.cfg.admission_tolerance = 0.0;
+    setup.cfg.warm_up = 0;
+    setup.cfg.server_time = 0.0;
+    let report = setup.run().unwrap();
+    assert_eq!(report.completed, setup.dispatches);
+    assert!(report.deferred > 0, "estimates over the window must defer");
+    assert!(
+        report.deadline_misses as f64 >= 0.9 * report.completed as f64,
+        "misses {} of {} completions — expected nearly all",
+        report.deadline_misses,
+        report.completed
+    );
+}
+
+#[test]
+fn ramped_clients_join_mid_session() {
+    let mut setup = base();
+    setup.cfg.ramp_time = 25.0;
+    let report = setup.run().unwrap();
+    assert_eq!(report.joins, setup.clients as u64 / 2, "odd-index clients ramp in");
+    assert_eq!(report.completed, setup.dispatches, "joins must not strand budget");
+}
+
+#[test]
+fn server_contention_shows_up_as_queue_time() {
+    let mut setup = base();
+    setup.concurrency = 8;
+    setup.cfg.server_time = 0.5;
+    let report = setup.run().unwrap();
+    assert!(
+        report.queue_time.mean() > 0.0,
+        "sequential server bookkeeping must produce positive queue time, got {}",
+        report.queue_time.mean()
+    );
+    assert!(report.delay.mean() > report.compute_time.mean());
+}
+
+#[test]
+fn deterministic_report_is_bit_identical_across_runs() {
+    let setup = base();
+    let a = setup.run().unwrap().to_json_deterministic().render();
+    let b = setup.run().unwrap().to_json_deterministic().render();
+    assert_eq!(a, b, "deterministic core must be byte-identical on a shared seed");
+}
+
+/// Release-only scale smoke: 10^6 simulated clients as executor futures.
+/// Debug builds skip it (the slab alone is hundreds of MB and unoptimized
+/// polling is ~30x slower).
+#[test]
+#[cfg_attr(debug_assertions, ignore)]
+fn million_client_session_drains() {
+    let mut setup = base();
+    setup.clients = 1_000_000;
+    setup.concurrency = 1_000;
+    setup.dispatches = 20_000;
+    setup.cfg.server_time = 0.001;
+    let report = setup.run().unwrap();
+    assert_eq!(report.completed, 20_000);
+    assert!(report.dispatches_per_sec() > 0.0);
+}

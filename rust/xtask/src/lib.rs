@@ -3,8 +3,8 @@
 //! The only subcommand today is `lint`: a dependency-free static-analysis
 //! pass (the build container is offline, so no `syn`) that enforces the
 //! determinism contract as rules R1–R5.  See [`rules`] for the rule
-//! definitions and the `lint-allow` suppression syntax, and the README's
-//! "Determinism contract" section for the rationale.
+//! definitions and the `lint-allow` suppression syntax, and
+//! docs/ARCHITECTURE.md "Determinism contract" for the rationale.
 
 pub mod lexer;
 pub mod model;

@@ -12,9 +12,10 @@
 //!   path desynchronizes the routing stream and shows up only as a digest
 //!   mismatch hours later.
 //! * **R2** — no `HashMap`/`HashSet` in deterministic modules
-//!   (`simulator/**`, `coordinator/policy.rs`, `coordinator/sweep.rs`,
-//!   `util/stats.rs`).  Iteration order is randomized per process; one
-//!   `for (k, v) in map` in a result path breaks run-to-run identity.
+//!   (`simulator/**`, `coordinator/policy.rs`, `coordinator/serve.rs`,
+//!   `coordinator/sweep.rs`, `runtime/executor.rs`, `util/stats.rs`).
+//!   Iteration order is randomized per process; one `for (k, v) in map`
+//!   in a result path breaks run-to-run identity.
 //! * **R3** — no `Instant`/`SystemTime`/`thread_rng` in those same
 //!   modules, where results flow into `to_json_deterministic()`.
 //! * **R4** — RNG construction from a bare integer-literal seed
@@ -83,11 +84,14 @@ impl fmt::Display for Violation {
 }
 
 /// Deterministic modules (R2/R3): the engines, the policies, the sweep
-/// serializer, and the stats substrate.
+/// serializer, the serve coordinator and its async executor, and the
+/// stats substrate.
 fn is_deterministic(rel: &str) -> bool {
     rel.starts_with("simulator/")
         || rel == "coordinator/policy.rs"
+        || rel == "coordinator/serve.rs"
         || rel == "coordinator/sweep.rs"
+        || rel == "runtime/executor.rs"
         || rel == "util/stats.rs"
 }
 
