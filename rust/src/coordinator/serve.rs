@@ -379,11 +379,20 @@ impl ServeSetup {
                 }
             })
             .collect();
+        #[cfg(debug_assertions)]
+        let route_fp = st.route_rng.state_fingerprint();
         for (i, at) in join_at.iter().enumerate() {
             if *at >= 0.0 {
                 st.policy.observe_leave(i);
             }
         }
+        #[cfg(debug_assertions)]
+        debug_assert_eq!(
+            route_fp,
+            st.route_rng.state_fingerprint(),
+            "observe_leave moved the routing stream (policy '{}')",
+            st.policy.name()
+        );
 
         let st = Rc::new(RefCell::new(st));
         for (i, at) in join_at.into_iter().enumerate() {
@@ -592,7 +601,16 @@ fn complete(st: &Rc<RefCell<ServeState>>, h: &Handle, i: usize, msg: TaskMsg, co
             grads: &s.grads,
         };
         s.strategy.on_gradient(&mut s.model, &ctx);
+        #[cfg(debug_assertions)]
+        let route_fp = s.route_rng.state_fingerprint();
         s.policy.observe_completion(i, delay_steps, delay_time);
+        #[cfg(debug_assertions)]
+        debug_assert_eq!(
+            route_fp,
+            s.route_rng.state_fingerprint(),
+            "observe_completion moved the routing stream (policy '{}')",
+            s.policy.name()
+        );
         let queue_time = (delay_time - compute).max(0.0);
         if now > msg.deadline {
             s.deadline_misses += 1;
@@ -623,7 +641,16 @@ async fn client_loop(h: Handle, st: Rc<RefCell<ServeState>>, i: usize, join_at: 
     if join_at >= 0.0 {
         h.sleep_until(join_at).await;
         let mut g = st.borrow_mut();
+        #[cfg(debug_assertions)]
+        let route_fp = g.route_rng.state_fingerprint();
         g.policy.observe_join(i);
+        #[cfg(debug_assertions)]
+        debug_assert_eq!(
+            route_fp,
+            g.route_rng.state_fingerprint(),
+            "observe_join moved the routing stream (policy '{}')",
+            g.policy.name()
+        );
         g.joins += 1;
         drop(g);
     }

@@ -7,6 +7,10 @@ use super::synth::Dataset;
 use crate::util::rng::Rng;
 use std::sync::Arc;
 
+/// Stream id for per-client batch shuffling (R6: named so collisions with
+/// other streams are auditable crate-wide).
+const LOADER_STREAM: u64 = 0x10AD;
+
 /// A batch ready for the backend: flattened f32 tensors.
 #[derive(Clone, Debug)]
 pub struct Batch {
@@ -41,7 +45,7 @@ impl ClientLoader {
         if shard.is_empty() {
             return Err("client shard is empty".into());
         }
-        let mut rng = Rng::new(seed).derive(0x10AD);
+        let mut rng = Rng::new(seed).derive(LOADER_STREAM);
         let mut indices = shard;
         rng.shuffle(&mut indices);
         Ok(ClientLoader { data, indices, cursor: 0, rng, batch_size, augment })

@@ -8,6 +8,10 @@
 use super::synth::Dataset;
 use crate::util::rng::Rng;
 
+/// Stream id for shard assignment draws (R6: named so collisions with
+/// other streams are auditable crate-wide).
+const PARTITION_STREAM: u64 = 0x9A47;
+
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum PartitionScheme {
     Iid,
@@ -32,7 +36,7 @@ impl Partition {
         if n_clients == 0 {
             return Err("need at least one client".into());
         }
-        let mut rng = Rng::new(seed).derive(0x9A47);
+        let mut rng = Rng::new(seed).derive(PARTITION_STREAM);
         let mut shards = vec![Vec::new(); n_clients];
         match scheme {
             PartitionScheme::Iid => {

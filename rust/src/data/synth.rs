@@ -13,6 +13,10 @@
 
 use crate::util::rng::Rng;
 
+/// Stream id for dataset generation draws (R6: named so collisions with
+/// other streams are auditable crate-wide).
+const SYNTH_STREAM: u64 = 0xDA7A;
+
 /// A dense dataset of flattened images.
 #[derive(Clone, Debug)]
 pub struct Dataset {
@@ -115,7 +119,7 @@ fn class_template(spec: &SynthSpec, class: usize) -> Vec<f32> {
 
 /// Generate a dataset of `n` samples with balanced random classes.
 pub fn generate(spec: &SynthSpec, n: usize, seed: u64) -> Dataset {
-    let mut rng = Rng::new(seed).derive(0xDA7A);
+    let mut rng = Rng::new(seed).derive(SYNTH_STREAM);
     let dim = spec.dim();
     let templates: Vec<Vec<f32>> = (0..spec.classes).map(|c| class_template(spec, c)).collect();
     let (h, w, ch) = (spec.height, spec.width, spec.channels);

@@ -15,6 +15,10 @@ use super::oracle::GradOracle;
 use crate::simulator::ServiceDist;
 use crate::util::rng::Rng;
 
+/// Stream id for FAVANO's service-time draws (R6: named so collisions
+/// with other streams are auditable crate-wide).
+const FAVANO_STREAM: u64 = 0xFA7A_0;
+
 #[derive(Clone, Copy, Debug)]
 pub struct FavanoConfig {
     /// server update interval Δ (virtual time)
@@ -44,7 +48,7 @@ impl Favano {
     pub fn new(cfg: FavanoConfig, model: &ModelState, n: usize, seed: u64) -> Favano {
         Favano {
             cfg,
-            rng: Rng::new(seed).derive(0xFA7A_0),
+            rng: Rng::new(seed).derive(FAVANO_STREAM),
             locals: vec![model.clone(); n],
             carry: vec![0.0; n],
         }

@@ -11,6 +11,10 @@ use super::oracle::GradOracle;
 use crate::simulator::ServiceDist;
 use crate::util::rng::Rng;
 
+/// Stream id for FedAvg's client-sampling draws (R6: named so collisions
+/// with other streams are auditable crate-wide).
+const FEDAVG_STREAM: u64 = 0xFEDA;
+
 #[derive(Clone, Copy, Debug)]
 pub struct FedAvgConfig {
     /// clients per round
@@ -37,7 +41,7 @@ pub struct RoundOutcome {
 
 impl FedAvg {
     pub fn new(cfg: FedAvgConfig, seed: u64) -> FedAvg {
-        FedAvg { cfg, rng: Rng::new(seed).derive(0xFEDA) }
+        FedAvg { cfg, rng: Rng::new(seed).derive(FEDAVG_STREAM) }
     }
 
     pub fn round<O: GradOracle>(

@@ -3,6 +3,10 @@
 
 use crate::util::rng::Rng;
 
+/// Stream id for He-normal weight initialization (R6: named so collisions
+/// with other streams are auditable crate-wide).
+const MODEL_INIT_STREAM: u64 = 0x1417;
+
 #[derive(Clone, Debug)]
 pub struct ModelState {
     pub tensors: Vec<Vec<f32>>,
@@ -13,7 +17,7 @@ impl ModelState {
     /// He-normal init for 2-D weights (fan-in scaling), zeros for 1-D
     /// biases — mirrors the L2 model's scheme.
     pub fn init_he(shapes: &[Vec<usize>], seed: u64) -> ModelState {
-        let mut rng = Rng::new(seed).derive(0x1417);
+        let mut rng = Rng::new(seed).derive(MODEL_INIT_STREAM);
         let tensors = shapes
             .iter()
             .map(|s| {

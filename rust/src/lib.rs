@@ -22,8 +22,8 @@
 //! * [`util`] — offline substrates (PRNG, stats, TOML/JSON, CLI, bench)
 //!
 //! The determinism contract between the three engines is machine-checked:
-//! `cargo xtask lint` enforces rules R1–R5 (see docs/ARCHITECTURE.md
-//! "Determinism contract"), and the loom/Miri/TSan suites model-check the
+//! `cargo xtask lint` enforces rules R1–R8 via a sources/sinks taint
+//! pass (see docs/LINTS.md), and the loom/Miri/TSan suites model-check the
 //! concurrency seams the static pass cannot see.
 
 // `cfg(loom)` is a custom cfg set via RUSTFLAGS by the loom CI leg; the

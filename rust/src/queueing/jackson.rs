@@ -66,6 +66,8 @@ impl ClosedNetwork {
         if p.len() != mu.len() || p.is_empty() {
             return Err("p and mu must be equal-length, non-empty".into());
         }
+        // lint-allow(R8): validation sum over the user-supplied p vector in
+        // its given order — a fixed-order check, not a cross-engine digest
         let sum: f64 = p.iter().sum();
         if (sum - 1.0).abs() > 1e-9 {
             return Err(format!("routing probabilities sum to {sum}, expected 1"));
@@ -251,6 +253,8 @@ impl ClosedNetwork {
         let mut states = Vec::new();
         let mut x = vec![0usize; self.n()];
         enumerate_comps(c, 0, &mut x, &mut states, &th);
+        // lint-allow(R8): normalization over the lexicographic state
+        // enumeration — order is fixed by construction, validation-only path
         let z: f64 = states.iter().map(|(_, w)| *w).sum();
         states.iter_mut().for_each(|(_, w)| *w /= z);
         states

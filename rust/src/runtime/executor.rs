@@ -31,7 +31,7 @@
 //! on when the dispatch budget is exhausted.
 //!
 //! The module is on the determinism contract's module list: `cargo
-//! xtask lint` rules R1–R5 apply (no wall clock, no RNG, no
+//! xtask lint` rules R1–R8 apply (no wall clock, no RNG, no
 //! hash-ordered containers).
 
 use std::cell::RefCell;

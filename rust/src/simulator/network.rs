@@ -122,6 +122,8 @@ impl SimConfig {
                 self.p.len()
             ));
         }
+        // lint-allow(R8): input validation over the config's p vector in its
+        // given order — rejects bad configs, never feeds the digest
         let sum: f64 = self.p.iter().sum();
         if (sum - 1.0).abs() > 1e-9 {
             return Err(format!("p sums to {sum}"));

@@ -14,7 +14,6 @@ pub mod bench;
 pub mod cli;
 #[allow(missing_docs)]
 pub mod json;
-#[allow(missing_docs)]
 pub mod mem;
 #[allow(missing_docs)]
 pub mod proptest;

@@ -4,9 +4,13 @@
 //! dependency-free by design, so the lint cannot pull in `syn`.  The rules
 //! in `rules.rs` only need token streams with line numbers, comment text
 //! (for `lint-allow` suppressions), and brace structure — a hand-rolled
-//! lexer covers that.  It understands line/block comments (nested), string
-//! and raw-string literals, byte strings, char literals vs. lifetimes, and
-//! numeric literals with suffixes; everything else is an ident or punct.
+//! lexer covers that.  It understands line/block comments (nested, with
+//! per-line text attribution so multi-line blocks participate in the
+//! contiguous-comment suppression walk), doc comments (`///`, `//!`,
+//! `/**`, `/*!` — kept in a separate table so prose can *mention*
+//! `lint-allow` without minting a suppression), string and raw-string
+//! literals, byte strings, char literals vs. lifetimes, and numeric
+//! literals with suffixes; everything else is an ident or punct.
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -50,8 +54,15 @@ impl Tok {
 #[derive(Debug, Default)]
 pub struct Lexed {
     pub toks: Vec<Tok>,
-    /// Concatenated comment text (line and block) per 1-based line.
+    /// Concatenated non-doc comment text per 1-based line.  Multi-line
+    /// block comments contribute to EVERY line they span, so a
+    /// `lint-allow` on the last line of a block sits adjacent to the code
+    /// it suppresses.
     pub comments: BTreeMap<u32, String>,
+    /// Doc-comment text (`///`, `//!`, `/**`, `/*!`) per line.  Kept apart
+    /// from [`Lexed::comments`]: documentation may cite the suppression
+    /// syntax without creating one.
+    pub doc_comments: BTreeMap<u32, String>,
     /// Lines that contain at least one token (i.e. are not comment/blank).
     pub code_lines: BTreeSet<u32>,
 }
@@ -67,9 +78,14 @@ pub fn lex(src: &str) -> Lexed {
         out.code_lines.insert(line);
         out.toks.push(Tok { kind, text, line });
     };
-    let note_comment = |out: &mut Lexed, line: u32, text: &str| {
-        let slot = out.comments.entry(line).or_default();
-        if !slot.is_empty() {
+    let note = |map: &mut BTreeMap<u32, String>, line: u32, text: &str| {
+        let text = text.trim();
+        if text.is_empty() {
+            // Blank interior lines of a block comment still count as
+            // comment lines for the contiguous-suppression walk.
+        }
+        let slot = map.entry(line).or_default();
+        if !slot.is_empty() && !text.is_empty() {
             slot.push(' ');
         }
         slot.push_str(text);
@@ -86,38 +102,53 @@ pub fn lex(src: &str) -> Lexed {
             i += 1;
             continue;
         }
-        // Line comment.
+        // Line comment.  `///` and `//!` are doc comments; `////...` is
+        // rustc-normal but we keep it with the docs — it never carries
+        // suppressions in this repo.
         if c == '/' && i + 1 < n && bytes[i + 1] == '/' {
             let start = i;
             while i < n && bytes[i] != '\n' {
                 i += 1;
             }
             let text: String = bytes[start..i].iter().collect();
-            note_comment(&mut out, line, text.trim());
+            let is_doc = text.starts_with("///") || text.starts_with("//!");
+            let map = if is_doc { &mut out.doc_comments } else { &mut out.comments };
+            note(map, line, &text);
             continue;
         }
-        // Block comment (nested).
+        // Block comment (nested).  `/**` (but not the empty `/**/`) and
+        // `/*!` are doc comments.  Text is attributed PER LINE so the
+        // suppression logic sees every line the block covers.
         if c == '/' && i + 1 < n && bytes[i + 1] == '*' {
-            let start_line = line;
-            let start = i;
+            let is_doc = (i + 2 < n && bytes[i + 2] == '*' && !(i + 3 < n && bytes[i + 3] == '/'))
+                || (i + 2 < n && bytes[i + 2] == '!');
             let mut depth = 1usize;
             i += 2;
+            let mut buf = String::new();
             while i < n && depth > 0 {
-                if bytes[i] == '\n' {
-                    line += 1;
-                    i += 1;
-                } else if bytes[i] == '/' && i + 1 < n && bytes[i + 1] == '*' {
+                if bytes[i] == '/' && i + 1 < n && bytes[i + 1] == '*' {
                     depth += 1;
+                    buf.push_str("/*");
                     i += 2;
                 } else if bytes[i] == '*' && i + 1 < n && bytes[i + 1] == '/' {
                     depth -= 1;
+                    if depth > 0 {
+                        buf.push_str("*/");
+                    }
                     i += 2;
+                } else if bytes[i] == '\n' {
+                    let map = if is_doc { &mut out.doc_comments } else { &mut out.comments };
+                    note(map, line, &buf);
+                    buf.clear();
+                    line += 1;
+                    i += 1;
                 } else {
+                    buf.push(bytes[i]);
                     i += 1;
                 }
             }
-            let text: String = bytes[start..i].iter().collect();
-            note_comment(&mut out, start_line, text.trim());
+            let map = if is_doc { &mut out.doc_comments } else { &mut out.comments };
+            note(map, line, &buf);
             continue;
         }
         // String-ish literals, including raw and byte prefixes.
@@ -381,5 +412,50 @@ mod tests {
         let l = lex("let s = r#\"HashMap \" inside\"#; let t = 1;");
         assert!(!l.toks.iter().any(|t| t.is_ident("HashMap")));
         assert!(l.toks.iter().any(|t| t.is_ident("t")));
+    }
+
+    #[test]
+    fn nested_block_comment_terminates_correctly() {
+        // Regression: `/* outer /* inner */ tail */` must consume the
+        // whole comment (depth-counted), not resume lexing at the first
+        // `*/`.  `tail` and the inner text are comment, not code.
+        let l = lex("/* outer /* inner */ tail */ let live = 1;");
+        assert!(!l.toks.iter().any(|t| t.is_ident("tail")));
+        assert!(!l.toks.iter().any(|t| t.is_ident("inner")));
+        assert!(l.toks.iter().any(|t| t.is_ident("live")));
+    }
+
+    #[test]
+    fn block_comment_text_attributed_per_line() {
+        // Regression: text inside a multi-line block comment used to be
+        // attributed wholesale to the block's FIRST line, so a
+        // `lint-allow` on the last line of the block was invisible to the
+        // contiguous-suppression walk.  Every spanned line must now carry
+        // its own text and count as a comment line.
+        let l = lex("/* one\n   two lint-allow(R5): why\n   three */\nlet x = 1;\n");
+        assert!(l.comments.get(&1).unwrap().contains("one"));
+        assert!(l.comments.get(&2).unwrap().contains("lint-allow(R5)"));
+        assert!(l.comments.get(&3).unwrap().contains("three"));
+        assert!(!l.code_lines.contains(&2));
+        assert!(l.code_lines.contains(&4));
+    }
+
+    #[test]
+    fn doc_comments_are_segregated() {
+        let src = "//! module doc lint-allow(R2): not a suppression\n/// item doc\n/** block doc */\nfn f() {}\n";
+        let l = lex(src);
+        assert!(l.comments.is_empty(), "doc text must not land in comments: {:?}", l.comments);
+        assert!(l.doc_comments.get(&1).unwrap().contains("lint-allow"));
+        assert!(l.doc_comments.contains_key(&2));
+        assert!(l.doc_comments.contains_key(&3));
+    }
+
+    #[test]
+    fn empty_block_comment_is_not_doc() {
+        // `/**/` is an empty ordinary comment, not an unterminated doc
+        // block.
+        let l = lex("/**/ let x = 1;");
+        assert!(l.toks.iter().any(|t| t.is_ident("x")));
+        assert!(l.doc_comments.is_empty());
     }
 }

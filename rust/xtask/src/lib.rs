@@ -2,12 +2,16 @@
 //!
 //! The only subcommand today is `lint`: a dependency-free static-analysis
 //! pass (the build container is offline, so no `syn`) that enforces the
-//! determinism contract as rules R1–R5.  See [`rules`] for the rule
-//! definitions and the `lint-allow` suppression syntax, and
-//! docs/ARCHITECTURE.md "Determinism contract" for the rationale.
+//! determinism contract as rules R1–R8.  The scope of the digest rules
+//! (R2/R3) is computed by a crate-wide taint pass ([`taint`]) rather than
+//! a hand-curated module list.  See [`rules`] for the rule definitions,
+//! the `lint-allow` suppression syntax, and the stale-suppression audit;
+//! docs/LINTS.md for the user-facing catalogue; and docs/ARCHITECTURE.md
+//! "Determinism contract" for the rationale.
 
 pub mod lexer;
 pub mod model;
 pub mod rules;
+pub mod taint;
 
-pub use rules::{lint_root, Rule, Violation};
+pub use rules::{lint_report, lint_root, render_json, AllowRecord, LintReport, Rule, Violation};

@@ -1,8 +1,14 @@
 //! `cargo xtask <command>` — repo-local tooling.
 //!
 //! Commands:
-//!   lint [PATH]   run the determinism lint (R1–R5) over PATH, defaulting
-//!                 to the fedqueue crate's src/ directory.
+//!   lint [PATH] [--json FILE] [--allow-report]
+//!       Run the determinism lint (R1–R8) over PATH, defaulting to the
+//!       fedqueue crate's src/ directory.  `--json FILE` additionally
+//!       writes the full machine-readable report (violations, the
+//!       lint-allow census, and the digest-region map) to FILE; `-` means
+//!       stdout.  `--allow-report` prints the suppression census to
+//!       stderr — every `lint-allow` with its reason and whether it still
+//!       suppresses anything (stale allows are also hard failures).
 
 use std::path::PathBuf;
 use std::process::ExitCode;
@@ -11,23 +17,71 @@ fn main() -> ExitCode {
     let mut args = std::env::args().skip(1);
     match args.next().as_deref() {
         Some("lint") => {
-            let root = args.next().map(PathBuf::from).unwrap_or_else(default_src);
+            let mut root: Option<PathBuf> = None;
+            let mut json_out: Option<String> = None;
+            let mut allow_report = false;
+            while let Some(arg) = args.next() {
+                match arg.as_str() {
+                    "--json" => match args.next() {
+                        Some(path) => json_out = Some(path),
+                        None => {
+                            eprintln!("xtask lint: --json requires a file path (or `-`)");
+                            return ExitCode::FAILURE;
+                        }
+                    },
+                    "--allow-report" => allow_report = true,
+                    other if root.is_none() && !other.starts_with('-') => {
+                        root = Some(PathBuf::from(other));
+                    }
+                    other => {
+                        eprintln!("xtask lint: unknown argument `{other}`");
+                        return ExitCode::FAILURE;
+                    }
+                }
+            }
+            let root = root.unwrap_or_else(default_src);
             if !root.is_dir() {
                 eprintln!("xtask lint: no such directory: {}", root.display());
                 return ExitCode::FAILURE;
             }
-            let violations = xtask::lint_root(&root);
-            for v in &violations {
+            let report = xtask::lint_report(&root);
+            for v in &report.violations {
                 println!("{v}");
             }
-            if violations.is_empty() {
+            if let Some(path) = json_out {
+                let rendered = xtask::render_json(&report);
+                if path == "-" {
+                    print!("{rendered}");
+                } else if let Err(e) = std::fs::write(&path, rendered) {
+                    eprintln!("xtask lint: cannot write {path}: {e}");
+                    return ExitCode::FAILURE;
+                }
+            }
+            if allow_report {
+                eprintln!(
+                    "xtask lint: {} lint-allow site(s) across {} file(s):",
+                    report.allows.len(),
+                    report.files_linted
+                );
+                for a in &report.allows {
+                    eprintln!(
+                        "  {}:{}: lint-allow({}) [{}] — {}",
+                        a.file,
+                        a.line,
+                        a.rule,
+                        if a.used { "used" } else { "STALE" },
+                        a.reason
+                    );
+                }
+            }
+            if report.violations.is_empty() {
                 eprintln!("xtask lint: clean ({})", root.display());
                 ExitCode::SUCCESS
             } else {
                 eprintln!(
                     "xtask lint: {} violation(s); suppress a justified site with \
                      `// lint-allow(<rule>): <reason>`",
-                    violations.len()
+                    report.violations.len()
                 );
                 ExitCode::FAILURE
             }
@@ -37,7 +91,7 @@ fn main() -> ExitCode {
             ExitCode::FAILURE
         }
         None => {
-            eprintln!("usage: cargo xtask lint [PATH]");
+            eprintln!("usage: cargo xtask lint [PATH] [--json FILE] [--allow-report]");
             ExitCode::FAILURE
         }
     }

@@ -2,14 +2,20 @@
 //!
 //! Built on top of [`crate::lexer`], this extracts just enough structure
 //! for the determinism rules: which line ranges are `#[cfg(test)]` (and
-//! `#[test]`) code, which line ranges belong to which `impl` target, and a
-//! table of function definitions with the names they call (the module-level
-//! call graph R1 walks).  It is deliberately conservative: names are
-//! matched without path resolution, so an edge `a -> b` exists whenever
-//! some function named `b` is called from `a`'s body.  That over-
-//! approximates reachability, which is the correct direction for a
-//! determinism lint — false negatives corrupt digests, false positives
-//! cost a `lint-allow` with a written reason.
+//! `#[test]`) code, which line ranges belong to which `impl` target, a
+//! table of function definitions with the names they call (the crate-level
+//! call graph R1 and the taint pass walk), `use` aliases (so
+//! `use std::collections::HashMap as Map` still reads as a source), and
+//! the crate's named `*_STREAM` constants (R6 collision audit).  It is
+//! deliberately conservative: names are matched without full path
+//! resolution, so an edge `a -> b` exists whenever some function named `b`
+//! is called from `a`'s body — qualified calls (`Type::b(..)`) narrow the
+//! candidates to impls of `Type` when any exist.  That over-approximates
+//! reachability, which is the correct direction for a determinism lint —
+//! false negatives corrupt digests, false positives cost a `lint-allow`
+//! with a written reason.
+
+use std::collections::BTreeMap;
 
 use crate::lexer::{lex, Lexed, Tok, TokKind};
 
@@ -33,15 +39,48 @@ pub struct ImplBlock {
     pub range: LineRange,
 }
 
+/// One call site inside a function body.  `qualifier` is set for
+/// `Type::name(..)` paths — the taint pass uses it to narrow candidate
+/// definitions to impls of `Type`; plain `name(..)` and `.name(..)` calls
+/// stay name-only.
+#[derive(Clone, Debug)]
+pub struct Call {
+    pub name: String,
+    pub qualifier: Option<String>,
+    pub line: u32,
+}
+
 /// One `fn` definition: name, where it lives, whether its signature
-/// mentions `Rng`, and every name it calls (with call-site lines).
+/// mentions `Rng`, every name it calls (with call-site lines), whether it
+/// is `async` (or spawns an `async` block), which impl it sits in, and its
+/// token spans so rules can scan the signature/body directly.
 #[derive(Clone, Debug)]
 pub struct FnDef {
     pub name: String,
     pub line: u32,
     pub range: LineRange,
     pub sig_has_rng: bool,
-    pub calls: Vec<(String, u32)>,
+    pub is_async: bool,
+    /// Self type of the enclosing `impl`, if any (filled post-scan).
+    pub impl_target: Option<String>,
+    pub calls: Vec<Call>,
+    /// Token index of the `fn` keyword (signature start).
+    pub tok_sig: usize,
+    /// Token index range of the body `{ ... }`, inclusive; `None` for
+    /// bodiless trait declarations.
+    pub tok_body: Option<(usize, usize)>,
+}
+
+/// A `const NAME_STREAM: u64 = <value>;` item — the named stream keys the
+/// R6 collision audit compares crate-wide.
+#[derive(Clone, Debug)]
+pub struct StreamConst {
+    pub name: String,
+    /// Parsed literal value when the initializer is a single integer
+    /// literal; `None` for computed initializers (still collision-checked
+    /// by name only).
+    pub value: Option<u64>,
+    pub line: u32,
 }
 
 /// Parsed file model.
@@ -53,6 +92,10 @@ pub struct FileModel {
     pub test_ranges: Vec<LineRange>,
     pub impls: Vec<ImplBlock>,
     pub fns: Vec<FnDef>,
+    /// `use .. as alias` map: alias -> canonical (last path segment).
+    pub use_aliases: BTreeMap<String, String>,
+    /// Named `*_STREAM` constants defined in this file.
+    pub stream_consts: Vec<StreamConst>,
 }
 
 impl FileModel {
@@ -62,9 +105,21 @@ impl FileModel {
             test_ranges: Vec::new(),
             impls: Vec::new(),
             fns: Vec::new(),
+            use_aliases: BTreeMap::new(),
+            stream_consts: Vec::new(),
             lexed,
         };
         model.scan();
+        // Attribute each fn to its innermost enclosing impl; impl blocks
+        // are only complete once the scan has finished.
+        let targets: Vec<Option<String>> = model
+            .fns
+            .iter()
+            .map(|f| model.impl_target_at(f.line).map(str::to_string))
+            .collect();
+        for (f, t) in model.fns.iter_mut().zip(targets) {
+            f.impl_target = t;
+        }
         model
     }
 
@@ -81,6 +136,28 @@ impl FileModel {
             .map(|b| b.target.as_str())
     }
 
+    /// Resolve an identifier through this file's `use .. as ..` aliases.
+    pub fn resolve<'a>(&'a self, name: &'a str) -> &'a str {
+        self.use_aliases.get(name).map(String::as_str).unwrap_or(name)
+    }
+
+    /// Does `f`'s signature-or-body mention `name` as a bare identifier?
+    pub fn fn_mentions(&self, f: &FnDef, name: &str) -> bool {
+        let end = f.tok_body.map(|(_, e)| e).unwrap_or(f.tok_sig);
+        self.lexed.toks[f.tok_sig..=end.min(self.lexed.toks.len() - 1)]
+            .iter()
+            .any(|t| t.is_ident(name))
+    }
+
+    /// Does `f`'s signature (up to the body `{` / trailing `;`) mention
+    /// `name`?
+    pub fn sig_mentions(&self, f: &FnDef, name: &str) -> bool {
+        let end = f.tok_body.map(|(o, _)| o).unwrap_or(self.lexed.toks.len());
+        self.lexed.toks[f.tok_sig..end.min(self.lexed.toks.len())]
+            .iter()
+            .any(|t| t.is_ident(name))
+    }
+
     fn scan(&mut self) {
         let toks = &self.lexed.toks;
         let n = toks.len();
@@ -88,6 +165,11 @@ impl FileModel {
         // `true` after an attribute list mentioning `test` or `loom`, until
         // the next item keyword consumes it.
         let mut pending_test_attr = false;
+        let mut test_ranges = Vec::new();
+        let mut impls = Vec::new();
+        let mut fns = Vec::new();
+        let mut use_aliases = BTreeMap::new();
+        let mut stream_consts = Vec::new();
         while i < n {
             let t = &toks[i];
             if t.is_punct("#") && i + 1 < n && toks[i + 1].is_punct("[") {
@@ -105,7 +187,7 @@ impl FileModel {
                     "mod" => {
                         if let Some(body) = item_body(toks, i) {
                             if pending_test_attr {
-                                self.test_ranges.push(body.lines);
+                                test_ranges.push(body.lines);
                             }
                             // Recurse into the module body by just
                             // continuing the linear scan: nested items are
@@ -126,7 +208,7 @@ impl FileModel {
                             );
                         if !type_position {
                             if let Some((target, body)) = impl_header(toks, i) {
-                                self.impls.push(ImplBlock {
+                                impls.push(ImplBlock {
                                     target,
                                     range: body.lines,
                                 });
@@ -139,15 +221,25 @@ impl FileModel {
                     "fn" => {
                         if let Some(def) = fn_def(toks, i) {
                             if pending_test_attr {
-                                self.test_ranges.push(def.range);
+                                test_ranges.push(def.range);
                             }
-                            self.fns.push(def);
+                            fns.push(def);
                         }
                         pending_test_attr = false;
                         i += 1;
                         continue;
                     }
-                    "struct" | "enum" | "trait" | "use" | "static" | "const" | "type" => {
+                    "use" => {
+                        collect_use_aliases(toks, i, &mut use_aliases);
+                        pending_test_attr = false;
+                    }
+                    "const" => {
+                        if let Some(sc) = stream_const(toks, i) {
+                            stream_consts.push(sc);
+                        }
+                        pending_test_attr = false;
+                    }
+                    "struct" | "enum" | "trait" | "static" | "type" => {
                         pending_test_attr = false;
                     }
                     _ => {}
@@ -155,6 +247,11 @@ impl FileModel {
             }
             i += 1;
         }
+        self.test_ranges = test_ranges;
+        self.impls = impls;
+        self.fns = fns;
+        self.use_aliases = use_aliases;
+        self.stream_consts = stream_consts;
     }
 }
 
@@ -201,6 +298,78 @@ fn item_body(toks: &[Tok], kw: usize) -> Option<Body> {
         i += 1;
     }
     None
+}
+
+/// Record `use path::Orig as Alias` pairs (including inside `use a::{x as
+/// y, z}` groups): alias -> Orig.  Walks the statement up to its `;`.
+fn collect_use_aliases(toks: &[Tok], kw: usize, out: &mut BTreeMap<String, String>) {
+    let n = toks.len();
+    let mut i = kw + 1;
+    let mut last: Option<&str> = None;
+    while i < n && !toks[i].is_punct(";") {
+        let t = &toks[i];
+        if t.kind == TokKind::Ident {
+            if t.text == "as" {
+                if let (Some(orig), Some(alias)) = (last, toks.get(i + 1)) {
+                    if alias.kind == TokKind::Ident {
+                        out.insert(alias.text.clone(), orig.to_string());
+                        i += 2;
+                        continue;
+                    }
+                }
+            }
+            last = Some(t.text.as_str());
+        }
+        i += 1;
+    }
+}
+
+/// Parse `const NAME_STREAM: <ty> = <int literal>;` starting at the
+/// `const` keyword.  Only `*_STREAM`-named constants are recorded.
+fn stream_const(toks: &[Tok], kw: usize) -> Option<StreamConst> {
+    let name_tok = toks.get(kw + 1)?;
+    if name_tok.kind != TokKind::Ident || !name_tok.text.ends_with("_STREAM") {
+        return None;
+    }
+    let mut i = kw + 2;
+    while i < toks.len() && !toks[i].is_punct("=") && !toks[i].is_punct(";") {
+        i += 1;
+    }
+    let mut value = None;
+    if i < toks.len() && toks[i].is_punct("=") {
+        if let Some(v) = toks.get(i + 1) {
+            if v.kind == TokKind::IntLit {
+                value = parse_int_literal(&v.text);
+            }
+        }
+    }
+    Some(StreamConst {
+        name: name_tok.text.clone(),
+        value,
+        line: name_tok.line,
+    })
+}
+
+/// Parse a Rust integer literal (`0x...`, `0b...`, `0o...`, decimal, with
+/// `_` separators and an optional type suffix).
+pub fn parse_int_literal(text: &str) -> Option<u64> {
+    let t: String = text.chars().filter(|c| *c != '_').collect();
+    let (digits, radix) = if let Some(h) = t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+        (h, 16)
+    } else if let Some(b) = t.strip_prefix("0b") {
+        (b, 2)
+    } else if let Some(o) = t.strip_prefix("0o") {
+        (o, 8)
+    } else {
+        (t.as_str(), 10)
+    };
+    // Trim a type suffix (u64, usize, ...) if present.
+    let end = digits
+        .char_indices()
+        .find(|(_, c)| !c.is_digit(radix))
+        .map(|(i, _)| i)
+        .unwrap_or(digits.len());
+    u64::from_str_radix(&digits[..end], radix).ok()
 }
 
 /// Parse an `impl` header starting at the `impl` keyword: returns the
@@ -307,7 +476,8 @@ fn skip_generic_args(toks: &[Tok], i: &mut usize) {
 const KEYWORDS: &[&str] = &[
     "if", "else", "while", "for", "loop", "match", "return", "let", "fn", "in", "as", "move",
     "mut", "ref", "break", "continue", "unsafe", "where", "impl", "dyn", "Self", "self", "super",
-    "crate", "pub", "use", "mod", "struct", "enum", "trait", "type", "const", "static",
+    "crate", "pub", "use", "mod", "struct", "enum", "trait", "type", "const", "static", "async",
+    "await",
 ];
 
 /// Parse a `fn` definition starting at the `fn` keyword.
@@ -319,6 +489,7 @@ fn fn_def(toks: &[Tok], kw: usize) -> Option<FnDef> {
     }
     let name = toks[name_idx].text.clone();
     let line = toks[name_idx].line;
+    let header_async = kw > 0 && toks[kw - 1].is_ident("async");
     // Parameter list.
     let mut i = name_idx + 1;
     if i < n && toks[i].is_punct("<") {
@@ -342,31 +513,40 @@ fn fn_def(toks: &[Tok], kw: usize) -> Option<FnDef> {
         }
         j += 1;
     }
-    let (range, calls) = match brace {
+    let (range, calls, tok_body, body_async) = match brace {
         Some(open) => {
             let close = match_bracket(toks, open, "{", "}");
+            let close = close.min(n - 1);
+            let body = &toks[open..=close];
             (
                 LineRange {
                     start: line,
                     end: toks[close].line,
                 },
-                collect_calls(&toks[open..=close.min(n - 1)]),
+                collect_calls(body),
+                Some((open, close)),
+                body.iter().any(|t| t.is_ident("async")),
             )
         }
-        None => (LineRange { start: line, end: line }, Vec::new()),
+        None => (LineRange { start: line, end: line }, Vec::new(), None, false),
     };
     Some(FnDef {
         name,
         line,
         range,
         sig_has_rng,
+        is_async: header_async || body_async,
+        impl_target: None,
         calls,
+        tok_sig: kw,
+        tok_body,
     })
 }
 
-/// Every `name(` or `.name(` in a body slice, excluding macro invocations
-/// (`name!(...)`) and keywords.
-fn collect_calls(body: &[Tok]) -> Vec<(String, u32)> {
+/// Every `name(`, `.name(`, or `Type::name(` in a body slice, excluding
+/// macro invocations (`name!(...)`) and keywords.  `Type::name(` records
+/// `Type` as the call's qualifier.
+fn collect_calls(body: &[Tok]) -> Vec<Call> {
     let mut out = Vec::new();
     let n = body.len();
     for i in 0..n {
@@ -382,7 +562,17 @@ fn collect_calls(body: &[Tok]) -> Vec<(String, u32)> {
             continue;
         }
         if i + 1 < n && body[i + 1].is_punct("(") {
-            out.push((name.to_string(), body[i].line));
+            let qualifier = if i >= 2 && body[i - 1].is_punct("::") && body[i - 2].kind == TokKind::Ident
+            {
+                Some(body[i - 2].text.clone())
+            } else {
+                None
+            };
+            out.push(Call {
+                name: name.to_string(),
+                qualifier,
+                line: body[i].line,
+            });
         } else if i + 1 < n && body[i + 1].is_punct("!") {
             // macro — skip
         }
@@ -409,6 +599,8 @@ mod tests {
         assert_eq!(m.impl_target_at(2), Some("StepAggregator"));
         assert_eq!(m.impl_target_at(5), Some("Core"));
         assert_eq!(m.impl_target_at(8), Some("Fixed"));
+        let push = m.fns.iter().find(|f| f.name == "push").unwrap();
+        assert_eq!(push.impl_target.as_deref(), Some("StepAggregator"));
     }
 
     #[test]
@@ -417,10 +609,10 @@ mod tests {
         let m = FileModel::parse(src);
         let draw = m.fns.iter().find(|f| f.name == "draw").unwrap();
         assert!(draw.sig_has_rng);
-        assert!(draw.calls.iter().any(|(c, _)| c == "uniform"));
+        assert!(draw.calls.iter().any(|c| c.name == "uniform"));
         let outer = m.fns.iter().find(|f| f.name == "outer").unwrap();
-        assert!(outer.calls.iter().any(|(c, _)| c == "draw"));
-        assert!(!outer.calls.iter().any(|(c, _)| c == "helper_macro"));
+        assert!(outer.calls.iter().any(|c| c.name == "draw"));
+        assert!(!outer.calls.iter().any(|c| c.name == "helper_macro"));
     }
 
     #[test]
@@ -430,5 +622,44 @@ mod tests {
         let route = m.fns.iter().find(|f| f.name == "route").unwrap();
         assert!(route.sig_has_rng);
         assert!(route.calls.is_empty());
+    }
+
+    #[test]
+    fn qualified_calls_record_their_type() {
+        let src = "fn f() { let a = Welford::merge(x, y); plain(); obj.method(); }\n";
+        let m = FileModel::parse(src);
+        let f = &m.fns[0];
+        let merge = f.calls.iter().find(|c| c.name == "merge").unwrap();
+        assert_eq!(merge.qualifier.as_deref(), Some("Welford"));
+        assert!(f.calls.iter().any(|c| c.name == "plain" && c.qualifier.is_none()));
+        assert!(f.calls.iter().any(|c| c.name == "method" && c.qualifier.is_none()));
+    }
+
+    #[test]
+    fn async_fns_and_async_blocks() {
+        let src = "async fn task() {}\nfn spawns() { h.spawn(async move { tick() }); }\nfn plain() {}\n";
+        let m = FileModel::parse(src);
+        assert!(m.fns.iter().find(|f| f.name == "task").unwrap().is_async);
+        assert!(m.fns.iter().find(|f| f.name == "spawns").unwrap().is_async);
+        assert!(!m.fns.iter().find(|f| f.name == "plain").unwrap().is_async);
+    }
+
+    #[test]
+    fn use_aliases_resolve() {
+        let src = "use std::collections::HashMap as Map;\nuse std::collections::{HashSet as Set, BTreeMap};\nfn f() {}\n";
+        let m = FileModel::parse(src);
+        assert_eq!(m.resolve("Map"), "HashMap");
+        assert_eq!(m.resolve("Set"), "HashSet");
+        assert_eq!(m.resolve("BTreeMap"), "BTreeMap");
+    }
+
+    #[test]
+    fn stream_consts_collected_and_parsed() {
+        let src = "pub const ROUTE_STREAM: u64 = 0x51_3A_77;\nconst OTHER: u64 = 7;\nconst DEC_STREAM: u64 = 42;\n";
+        let m = FileModel::parse(src);
+        assert_eq!(m.stream_consts.len(), 2);
+        assert_eq!(m.stream_consts[0].name, "ROUTE_STREAM");
+        assert_eq!(m.stream_consts[0].value, Some(0x513A77));
+        assert_eq!(m.stream_consts[1].value, Some(42));
     }
 }

@@ -2,22 +2,28 @@
 //!
 //! Every guarantee the crate reproduces (Theorem-1 optimal sampling, the
 //! delay-adaptive policies, η/(n·p_i) weighting) rests on bit-identity
-//! between the heap oracle, the sharded engine, and the batch arena.  The
-//! conventions that keep them in lockstep used to live in doc comments
-//! ("MUST consume no RNG"); this module enforces them at lint time:
+//! between the heap oracle, the sharded engine, the batch arena, and the
+//! event-driven serve coordinator.  The conventions that keep them in
+//! lockstep used to live in doc comments ("MUST consume no RNG"); this
+//! module enforces them at lint time:
 //!
 //! * **R1** — no RNG consumption reachable from any
 //!   `SamplingPolicy::observe_*` implementation.  Policies are observed at
 //!   different moments in each engine; a single stray draw in an observe
 //!   path desynchronizes the routing stream and shows up only as a digest
 //!   mismatch hours later.
-//! * **R2** — no `HashMap`/`HashSet` in deterministic modules
-//!   (`simulator/**`, `coordinator/policy.rs`, `coordinator/serve.rs`,
-//!   `coordinator/sweep.rs`, `runtime/executor.rs`, `util/stats.rs`).
-//!   Iteration order is randomized per process; one `for (k, v) in map`
-//!   in a result path breaks run-to-run identity.
-//! * **R3** — no `Instant`/`SystemTime`/`thread_rng` in those same
-//!   modules, where results flow into `to_json_deterministic()`.
+//! * **R2** — no `HashMap`/`HashSet`/`RandomState` in the **digest
+//!   region**: the forward call-closure of every function in direct
+//!   contact with a determinism sink (`to_json_deterministic`,
+//!   `StepAggregator`, `Welford`), computed by [`crate::taint`].  New
+//!   modules are covered the day they are written — there is no module
+//!   list to enroll in.
+//! * **R3** — no wall-clock / OS-entropy reads (`Instant`, `SystemTime`,
+//!   `thread_rng`, `available_parallelism`, `thread::current`,
+//!   `env::var` & friends) in the digest region.  `util/bench.rs` is the
+//!   blessed perf-measurement home, exactly as `util/rng.rs` is the
+//!   entropy home — wall-clock readings must live somewhere, and keeping
+//!   them in one audited module is the point.
 //! * **R4** — RNG construction from a bare integer-literal seed
 //!   (`Rng::new(0x...)`, `stream_seed(12345, ..)`) only inside
 //!   `util/rng.rs`; everywhere else seeds must arrive via keyed streams or
@@ -25,18 +31,32 @@
 //! * **R5** — float accumulation (`+=` with an f32/f64 operand) in engine
 //!   step paths must route through `StepAggregator`/`Welford`, whose
 //!   summation order is part of the cross-engine contract.
+//! * **R6** — RNG stream discipline: `.derive(..)` stream keys and
+//!   `stream_seed(seed, &[..])` id arrays must start from a named
+//!   `*_STREAM` constant, and no two stream constants may share a value —
+//!   a collision silently correlates routing, churn, and serve draws.
+//! * **R7** — nothing blocking on the virtual-clock executor: no
+//!   `thread::sleep`, blocking file I/O, or wall-clock reads reachable
+//!   from an `async fn` / future `poll` (function-granular closure).
+//! * **R8** — float reductions (`.sum()`, `fold(0.0, ..)`, bare float
+//!   accumulators) in digest-sink files outside `StepAggregator`/`Welford`
+//!   (the generalization of R5 beyond engine step paths; `util/stats.rs`
+//!   is the blessed float-reduction home).
 //!
 //! Each rule is individually suppressible at the violation site with
 //! `// lint-allow(<rule>): <reason>` — the reason string is mandatory and
-//! its absence is itself a diagnostic.
+//! its absence is itself a diagnostic (`lint-allow-syntax`).  Doc comments
+//! (`///`, `//!`) never mint suppressions.  A suppression that no longer
+//! suppresses anything is itself a violation (`stale-allow`), so the allow
+//! census can only shrink unless a new written reason is added.
 
 use std::collections::BTreeMap;
 use std::fmt;
 use std::fs;
 use std::path::{Path, PathBuf};
 
-use crate::lexer::TokKind;
-use crate::model::{FileModel, FnDef};
+use crate::lexer::{Tok, TokKind};
+use crate::taint::{self, FileEntry, TaintAnalysis};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Rule {
@@ -45,8 +65,13 @@ pub enum Rule {
     R3,
     R4,
     R5,
+    R6,
+    R7,
+    R8,
     /// Malformed `lint-allow` (missing rule or reason).
     AllowSyntax,
+    /// A `lint-allow` that suppresses nothing.
+    StaleAllow,
 }
 
 impl Rule {
@@ -57,7 +82,11 @@ impl Rule {
             Rule::R3 => "R3",
             Rule::R4 => "R4",
             Rule::R5 => "R5",
+            Rule::R6 => "R6",
+            Rule::R7 => "R7",
+            Rule::R8 => "R8",
             Rule::AllowSyntax => "lint-allow-syntax",
+            Rule::StaleAllow => "stale-allow",
         }
     }
 }
@@ -83,16 +112,25 @@ impl fmt::Display for Violation {
     }
 }
 
-/// Deterministic modules (R2/R3): the engines, the policies, the sweep
-/// serializer, the serve coordinator and its async executor, and the
-/// stats substrate.
-fn is_deterministic(rel: &str) -> bool {
-    rel.starts_with("simulator/")
-        || rel == "coordinator/policy.rs"
-        || rel == "coordinator/serve.rs"
-        || rel == "coordinator/sweep.rs"
-        || rel == "runtime/executor.rs"
-        || rel == "util/stats.rs"
+/// One `lint-allow` site, as reported by the suppression census.
+#[derive(Clone, Debug)]
+pub struct AllowRecord {
+    pub file: String,
+    pub line: u32,
+    pub rule: String,
+    pub reason: String,
+    pub used: bool,
+}
+
+/// Full lint output: surviving violations plus the census and region data
+/// the `--json` / `--allow-report` surfaces expose.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub violations: Vec<Violation>,
+    pub allows: Vec<AllowRecord>,
+    /// Digest-region membership: (file, witness chain).
+    pub digest_region: Vec<(String, String)>,
+    pub files_linted: usize,
 }
 
 /// Engine step paths (R5): everything that feeds the cross-engine digest.
@@ -100,9 +138,25 @@ fn is_engine_step(rel: &str) -> bool {
     rel.starts_with("simulator/engine/") || rel == "simulator/network.rs"
 }
 
-/// The one module allowed to mint RNG state from raw literals (R4).
+/// The one module allowed to mint RNG state from raw literals (R4) and
+/// hold the stream-derivation plumbing R6 audits everywhere else.
 fn is_rng_home(rel: &str) -> bool {
     rel == "util/rng.rs"
+}
+
+/// The one module allowed to read the wall clock inside the digest region
+/// (R3): the bench harness measures elapsed time by design, and its
+/// readings feed only the perf block that `to_json_deterministic()`
+/// excludes.
+fn is_perf_home(rel: &str) -> bool {
+    rel == "util/bench.rs"
+}
+
+/// The one module allowed free-form float reductions inside digest-sink
+/// files (R8): the stats substrate (Welford/StepAggregator/quantiles) IS
+/// the blessed reduction order.
+fn is_stats_home(rel: &str) -> bool {
+    rel == "util/stats.rs"
 }
 
 /// Names whose call consumes routing/service RNG state (R1 markers), plus
@@ -139,18 +193,39 @@ const OBSERVE_ROOTS: &[&str] = &[
     "observe_leave",
 ];
 
-/// Impl targets whose float accumulation IS the contract (R5 contexts).
-const FLOAT_SINKS: &[&str] = &["StepAggregator", "Welford"];
+/// Impl targets whose float accumulation IS the contract (R5/R8
+/// contexts).
+const FLOAT_SINKS: &[&str] = &["StepAggregator", "Welford", "Ewma", "Histogram"];
 
-struct LintedFile {
-    rel: String,
-    model: FileModel,
+/// Wall-clock / OS-entropy identifiers (R3 sources).
+const R3_SOURCES: &[&str] = &["Instant", "SystemTime", "thread_rng", "available_parallelism"];
+
+/// `std::env` readers (R3 sources when qualified as `env::<name>`).
+const ENV_READERS: &[&str] = &["var", "vars", "var_os", "args", "args_os", "temp_dir"];
+
+/// Blocking / wall-clock identifiers forbidden on the executor (R7).
+const R7_BLOCKING: &[&str] = &[
+    "Instant",
+    "SystemTime",
+    "File",
+    "OpenOptions",
+    "read_to_string",
+    "read_dir",
+    "stdin",
+    "thread_rng",
+];
+
+/// Lint every `.rs` file under `src_root` and return just the surviving
+/// diagnostics (the shape the fixture tests and CI text output consume).
+pub fn lint_root(src_root: &Path) -> Vec<Violation> {
+    lint_report(src_root).violations
 }
 
 /// Lint every `.rs` file under `src_root` (the crate's `src/` directory,
 /// or a fixture tree mirroring its layout).  Returns the surviving
-/// diagnostics, deterministically ordered.
-pub fn lint_root(src_root: &Path) -> Vec<Violation> {
+/// diagnostics, the `lint-allow` census, and the digest-region map,
+/// deterministically ordered.
+pub fn lint_report(src_root: &Path) -> LintReport {
     let mut files = Vec::new();
     let mut paths = Vec::new();
     walk(src_root, &mut paths);
@@ -164,32 +239,71 @@ pub fn lint_root(src_root: &Path) -> Vec<Violation> {
         let Ok(src) = fs::read_to_string(path) else {
             continue;
         };
-        files.push(LintedFile {
+        files.push(FileEntry {
             rel,
-            model: FileModel::parse(&src),
+            model: crate::model::FileModel::parse(&src),
         });
     }
 
+    let taint = taint::analyze(&files);
+
     let mut violations = Vec::new();
     for f in &files {
-        check_tokens(f, &mut violations);
+        check_tokens(f, &taint, &mut violations);
     }
     check_observe_reachability(&files, &mut violations);
+    check_executor_blocking(&files, &taint, &mut violations);
+    check_stream_collisions(&files, &mut violations);
 
-    // Allow-comment pass: drop suppressed violations, add syntax
-    // diagnostics for malformed allows.
+    // Allow-comment pass: drop suppressed violations (marking their allow
+    // as used), add syntax diagnostics for malformed allows, then turn
+    // every unused allow into a stale-allow violation.
     let mut out = Vec::new();
+    let mut census: Vec<AllowRecord> = Vec::new();
     for f in &files {
-        let allows = parse_allows(f, &mut out);
+        let mut allows = parse_allows(f, &mut out);
         for v in violations.iter().filter(|v| v.file == f.rel) {
-            if !is_suppressed(f, &allows, v) {
-                out.push(v.clone());
+            match find_suppressor(f, &allows, v) {
+                Some(i) => allows[i].used = true,
+                None => out.push(v.clone()),
             }
+        }
+        for a in &allows {
+            if !a.used {
+                out.push(Violation {
+                    file: f.rel.clone(),
+                    line: a.line,
+                    rule: Rule::StaleAllow,
+                    msg: format!(
+                        "lint-allow({}) suppresses nothing — remove the stale \
+                         suppression or restore the code it covered",
+                        a.rule
+                    ),
+                });
+            }
+            census.push(AllowRecord {
+                file: f.rel.clone(),
+                line: a.line,
+                rule: a.rule.clone(),
+                reason: a.reason.clone(),
+                used: a.used,
+            });
         }
     }
     out.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
     out.dedup_by(|a, b| a.file == b.file && a.line == b.line && a.rule == b.rule);
-    out
+    census.sort_by(|a, b| (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule)));
+
+    LintReport {
+        violations: out,
+        allows: census,
+        digest_region: taint
+            .digest_files
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect(),
+        files_linted: files.len(),
+    }
 }
 
 fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
@@ -206,14 +320,25 @@ fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
     }
 }
 
-/// Token-local rules: R2, R3, R4, R5.
-fn check_tokens(f: &LintedFile, out: &mut Vec<Violation>) {
+/// Token-local rules: R2, R3 (taint-scoped), R4, R5, R6 call sites, R8.
+fn check_tokens(f: &FileEntry, taint: &TaintAnalysis, out: &mut Vec<Violation>) {
     let rel = f.rel.as_str();
     let model = &f.model;
     let toks = &model.lexed.toks;
-    let deterministic = is_deterministic(rel);
+    let in_digest_region = taint.digest_files.contains_key(rel);
+    let region_via = taint.digest_files.get(rel).map(String::as_str).unwrap_or("");
+    let is_seed_file = taint.seed_files.contains(rel);
     let engine_step = is_engine_step(rel);
     let rng_home = is_rng_home(rel);
+
+    let push = |out: &mut Vec<Violation>, line: u32, rule: Rule, msg: String| {
+        out.push(Violation {
+            file: rel.to_string(),
+            line,
+            rule,
+            msg,
+        });
+    };
 
     for (i, t) in toks.iter().enumerate() {
         if t.kind != TokKind::Ident && !t.is_punct("+=") {
@@ -222,33 +347,48 @@ fn check_tokens(f: &LintedFile, out: &mut Vec<Violation>) {
         if model.in_test(t.line) {
             continue;
         }
-        // R2: unordered collections in deterministic modules.
-        if deterministic && (t.is_ident("HashMap") || t.is_ident("HashSet")) {
-            out.push(Violation {
-                file: rel.to_string(),
-                line: t.line,
-                rule: Rule::R2,
-                msg: format!(
-                    "`{}` in deterministic module — iteration order is \
-                     process-random; use BTreeMap/Vec or suppress with a reason",
+        let canon = if t.kind == TokKind::Ident {
+            model.resolve(&t.text)
+        } else {
+            ""
+        };
+        // R2: unordered collections anywhere in the digest region.
+        if in_digest_region && matches!(canon, "HashMap" | "HashSet" | "RandomState") {
+            push(
+                out,
+                t.line,
+                Rule::R2,
+                format!(
+                    "`{}` in the digest region (tainted via {region_via}) — iteration \
+                     order is process-random; use BTreeMap/Vec or suppress with a reason",
                     t.text
                 ),
-            });
+            );
         }
-        // R3: wall-clock / OS entropy in deterministic modules.
-        if deterministic
-            && (t.is_ident("Instant") || t.is_ident("SystemTime") || t.is_ident("thread_rng"))
-        {
-            out.push(Violation {
-                file: rel.to_string(),
-                line: t.line,
-                rule: Rule::R3,
-                msg: format!(
-                    "`{}` in a module whose results flow through \
-                     to_json_deterministic() — timing belongs in the perf block only",
-                    t.text
-                ),
-            });
+        // R3: wall-clock / OS entropy anywhere in the digest region,
+        // except the audited perf home.
+        if in_digest_region && !is_perf_home(rel) {
+            let source: Option<String> = if R3_SOURCES.contains(&canon) {
+                Some(t.text.clone())
+            } else if ENV_READERS.contains(&canon) && qualified_by(toks, i, "env") {
+                Some(format!("env::{}", t.text))
+            } else if t.text == "current" && qualified_by(toks, i, "thread") {
+                Some("thread::current".to_string())
+            } else {
+                None
+            };
+            if let Some(what) = source {
+                push(
+                    out,
+                    t.line,
+                    Rule::R3,
+                    format!(
+                        "`{what}` in the digest region (tainted via {region_via}) — \
+                         results here flow through to_json_deterministic(); timing \
+                         belongs in the perf block only"
+                    ),
+                );
+            }
         }
         // R4: ad-hoc RNG seeds outside util/rng.rs.
         if !rng_home {
@@ -264,14 +404,14 @@ fn check_tokens(f: &LintedFile, out: &mut Vec<Violation>) {
             });
             if let Some(open) = seed_call {
                 if first_arg_is_bare_int(toks, open) {
-                    out.push(Violation {
-                        file: rel.to_string(),
-                        line: t.line,
-                        rule: Rule::R4,
-                        msg: "RNG constructed from a bare literal seed — derive via \
-                              stream_seed(seed, [..]) keyed streams or a named config seed"
+                    push(
+                        out,
+                        t.line,
+                        Rule::R4,
+                        "RNG constructed from a bare literal seed — derive via \
+                         stream_seed(seed, [..]) keyed streams or a named config seed"
                             .to_string(),
-                    });
+                    );
                 }
             }
         }
@@ -282,24 +422,190 @@ fn check_tokens(f: &LintedFile, out: &mut Vec<Violation>) {
                 .impl_target_at(t.line)
                 .is_some_and(|target| FLOAT_SINKS.contains(&target));
             if !in_sink && rhs_is_floaty(toks, i) {
-                out.push(Violation {
-                    file: rel.to_string(),
-                    line: t.line,
-                    rule: Rule::R5,
-                    msg: "bare float `+=` in an engine step path — route the \
-                          accumulation through StepAggregator/Welford so summation \
-                          order stays part of the contract"
+                push(
+                    out,
+                    t.line,
+                    Rule::R5,
+                    "bare float `+=` in an engine step path — route the \
+                     accumulation through StepAggregator/Welford so summation \
+                     order stays part of the contract"
                         .to_string(),
-                });
+                );
+            }
+        }
+        // R6: stream keys must be named `*_STREAM` constants.
+        if !rng_home {
+            // `.derive(<key>)` — the preceding `.` distinguishes the RNG
+            // stream API from `#[derive(..)]` attributes.
+            if t.is_ident("derive")
+                && i > 0
+                && toks[i - 1].is_punct(".")
+                && toks.get(i + 1).is_some_and(|t| t.is_punct("("))
+            {
+                match toks.get(i + 2) {
+                    Some(arg) if arg.kind == TokKind::IntLit => push(
+                        out,
+                        t.line,
+                        Rule::R6,
+                        format!(
+                            "RNG stream derived from bare literal `{}` — key streams \
+                             off a named `*_STREAM` constant so ids stay \
+                             collision-auditable",
+                            arg.text
+                        ),
+                    ),
+                    Some(arg)
+                        if arg.kind == TokKind::Ident
+                            && !model.resolve(&arg.text).ends_with("_STREAM")
+                            && !arg.is_ident("self") =>
+                    {
+                        push(
+                            out,
+                            t.line,
+                            Rule::R6,
+                            format!(
+                                "RNG stream key `{}` is not a named `*_STREAM` \
+                                 constant — stream ids must be auditable for \
+                                 collisions",
+                                arg.text
+                            ),
+                        )
+                    }
+                    _ => {}
+                }
+            }
+            // `stream_seed(seed, &[<id>, ..])` — the id array must not
+            // start with a bare literal.
+            if t.is_ident("stream_seed") && toks.get(i + 1).is_some_and(|t| t.is_punct("(")) {
+                if let Some(first_id) = stream_id_first_element(toks, i + 1) {
+                    if first_id.kind == TokKind::IntLit {
+                        push(
+                            out,
+                            first_id.line,
+                            Rule::R6,
+                            format!(
+                                "stream id array starts with bare literal `{}` — use \
+                                 a named `*_STREAM` constant",
+                                first_id.text
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+        // R8: float reductions in digest-sink files outside the blessed
+        // accumulators.  Engine-step `+=` stays R5's domain.
+        if is_seed_file && !is_stats_home(rel) {
+            let in_sink = model
+                .impl_target_at(t.line)
+                .is_some_and(|target| FLOAT_SINKS.contains(&target));
+            if !in_sink {
+                if t.is_ident("sum") && i > 0 && toks[i - 1].is_punct(".") {
+                    let turbofish_float = toks.get(i + 1).is_some_and(|t| t.is_punct("::"))
+                        && toks
+                            .get(i + 3)
+                            .is_some_and(|t| t.is_ident("f64") || t.is_ident("f32"));
+                    let ascribed_float = !turbofish_float
+                        && toks.get(i + 1).is_some_and(|t| t.is_punct("("))
+                        && stmt_span_mentions_float(toks, i);
+                    if turbofish_float || ascribed_float {
+                        push(
+                            out,
+                            t.line,
+                            Rule::R8,
+                            "float reduction (`.sum()`) in a digest-sink file outside \
+                             StepAggregator/Welford — summation order is part of the \
+                             cross-engine contract; use util/stats helpers or suppress \
+                             with a reason"
+                                .to_string(),
+                        );
+                    }
+                }
+                if t.is_ident("fold")
+                    && toks.get(i + 1).is_some_and(|t| t.is_punct("("))
+                    && toks.get(i + 2).is_some_and(|t| t.kind == TokKind::FloatLit)
+                {
+                    push(
+                        out,
+                        t.line,
+                        Rule::R8,
+                        "float reduction (`fold` with float init) in a digest-sink \
+                         file outside StepAggregator/Welford — summation order is \
+                         part of the cross-engine contract"
+                            .to_string(),
+                    );
+                }
+                if t.is_punct("+=") && !engine_step && rhs_is_floaty(toks, i) {
+                    push(
+                        out,
+                        t.line,
+                        Rule::R8,
+                        "bare float `+=` accumulator in a digest-sink file outside \
+                         StepAggregator/Welford — summation order is part of the \
+                         cross-engine contract"
+                            .to_string(),
+                    );
+                }
             }
         }
     }
 }
 
+/// Is token `i` path-qualified as `<qual>::<tok i>`?
+fn qualified_by(toks: &[Tok], i: usize, qual: &str) -> bool {
+    i >= 2 && toks[i - 1].is_punct("::") && toks[i - 2].is_ident(qual)
+}
+
+/// For `stream_seed(` with the `(` at `open`, find the first element of
+/// the second argument's `&[..]` id array.
+fn stream_id_first_element(toks: &[Tok], open: usize) -> Option<&Tok> {
+    let mut depth = 0i32;
+    let mut i = open;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.is_punct("(") || t.is_punct("[") {
+            depth += 1;
+        } else if t.is_punct(")") || t.is_punct("]") {
+            depth -= 1;
+            if depth == 0 {
+                return None;
+            }
+        } else if t.is_punct(",") && depth == 1 {
+            // Skip `&` / `[` prefix tokens of the array expression.
+            let mut j = i + 1;
+            while j < toks.len() && (toks[j].is_punct("&") || toks[j].is_punct("[")) {
+                j += 1;
+            }
+            return toks.get(j);
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Backscan from a `.sum()` call to the start of its statement (the
+/// previous `;`, `{`, or `}`): does the span mention f32/f64?  Catches
+/// `let x: f64 = xs.iter().sum();` while leaving integer sums and
+/// tail-expression sums (whose `-> f64` sits outside the body) alone.
+fn stmt_span_mentions_float(toks: &[Tok], sum_idx: usize) -> bool {
+    let mut i = sum_idx;
+    while i > 0 {
+        i -= 1;
+        let t = &toks[i];
+        if t.is_punct(";") || t.is_punct("{") || t.is_punct("}") {
+            break;
+        }
+        if t.is_ident("f64") || t.is_ident("f32") {
+            return true;
+        }
+    }
+    false
+}
+
 /// First argument of the call whose `(` sits at `open`: bare integer
 /// literal iff the tokens up to the first top-level `,` or the closing `)`
 /// are exactly one `IntLit`.
-fn first_arg_is_bare_int(toks: &[crate::lexer::Tok], open: usize) -> bool {
+fn first_arg_is_bare_int(toks: &[Tok], open: usize) -> bool {
     let mut depth = 0i32;
     let mut arg_toks = 0usize;
     let mut bare = false;
@@ -327,7 +633,7 @@ fn first_arg_is_bare_int(toks: &[crate::lexer::Tok], open: usize) -> bool {
 
 /// Tokens from the `+=` to the statement's `;` mention f32/f64 (cast,
 /// typed temporary, or float literal).
-fn rhs_is_floaty(toks: &[crate::lexer::Tok], op: usize) -> bool {
+fn rhs_is_floaty(toks: &[Tok], op: usize) -> bool {
     let mut depth = 0i32;
     for t in &toks[op + 1..] {
         match t.text.as_str() {
@@ -350,8 +656,10 @@ fn rhs_is_floaty(toks: &[crate::lexer::Tok], op: usize) -> bool {
 
 /// R1: walk the name-based call graph from every `observe_*` definition;
 /// any path to an RNG-consuming name (or to a function taking `Rng` in its
-/// signature) is a violation at the offending call site.
-fn check_observe_reachability(files: &[LintedFile], out: &mut Vec<Violation>) {
+/// signature) is a violation at the offending call site.  R1 keeps FULL
+/// edges (no stoplist): a false edge costs a written reason, a missed
+/// edge costs a corrupted digest.
+fn check_observe_reachability(files: &[FileEntry], out: &mut Vec<Violation>) {
     // Global fn table: name -> [(file index, fn index)].
     let mut by_name: BTreeMap<&str, Vec<(usize, usize)>> = BTreeMap::new();
     for (fi, f) in files.iter().enumerate() {
@@ -361,8 +669,6 @@ fn check_observe_reachability(files: &[LintedFile], out: &mut Vec<Violation>) {
             }
         }
     }
-    let def = |fi: usize, di: usize| -> &FnDef { &files[fi].model.fns[di] };
-
     for (&root_name, roots) in &by_name {
         if !OBSERVE_ROOTS.contains(&root_name) {
             continue;
@@ -376,11 +682,13 @@ fn check_observe_reachability(files: &[LintedFile], out: &mut Vec<Violation>) {
                     continue;
                 }
                 visited.push((fi, di));
-                for (callee, line) in &def(fi, di).calls {
+                for call in &files[fi].model.fns[di].calls {
+                    let callee = &call.name;
+                    let line = call.line;
                     if RNG_CONSUMERS.contains(&callee.as_str()) {
                         out.push(Violation {
                             file: files[fi].rel.clone(),
-                            line: *line,
+                            line,
                             rule: Rule::R1,
                             msg: format!(
                                 "RNG consumption reachable from `{}` \
@@ -394,10 +702,10 @@ fn check_observe_reachability(files: &[LintedFile], out: &mut Vec<Violation>) {
                     }
                     if let Some(callees) = by_name.get(callee.as_str()) {
                         for &(cfi, cdi) in callees {
-                            if def(cfi, cdi).sig_has_rng {
+                            if files[cfi].model.fns[cdi].sig_has_rng {
                                 out.push(Violation {
                                     file: files[fi].rel.clone(),
-                                    line: *line,
+                                    line,
                                     rule: Rule::R1,
                                     msg: format!(
                                         "`{callee}` takes an Rng and is reachable \
@@ -420,48 +728,126 @@ fn check_observe_reachability(files: &[LintedFile], out: &mut Vec<Violation>) {
     }
 }
 
+/// R7: scan every function reachable from an executor future for blocking
+/// or wall-clock operations.
+fn check_executor_blocking(files: &[FileEntry], taint: &TaintAnalysis, out: &mut Vec<Violation>) {
+    for &(fi, di, ref chain) in &taint.executor_fns {
+        let f = &files[fi];
+        let d = &f.model.fns[di];
+        let Some((lo, hi)) = d.tok_body else {
+            continue;
+        };
+        let toks = &f.model.lexed.toks;
+        for i in lo..=hi.min(toks.len() - 1) {
+            let t = &toks[i];
+            if t.kind != TokKind::Ident || f.model.in_test(t.line) {
+                continue;
+            }
+            let canon = f.model.resolve(&t.text);
+            // `sleep` exactly (the virtual-clock `sleep_until` is a
+            // different token); a leading `.` would be a method on our own
+            // handle types, which is fine.
+            let blocking = (R7_BLOCKING.contains(&canon))
+                || (t.text == "sleep" && !(i > 0 && toks[i - 1].is_punct(".")));
+            if blocking {
+                out.push(Violation {
+                    file: f.rel.clone(),
+                    line: t.line,
+                    rule: Rule::R7,
+                    msg: format!(
+                        "`{}` is blocking/wall-clock and runs on the virtual-clock \
+                         executor (chain: {chain}) — futures must advance via the \
+                         virtual clock only",
+                        t.text
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// R6 (crate-wide part): no two `*_STREAM` constants may share a value.
+fn check_stream_collisions(files: &[FileEntry], out: &mut Vec<Violation>) {
+    // (value -> first-seen (name, file, line)), in deterministic file
+    // order (files arrive sorted by path).
+    let mut seen: BTreeMap<u64, (String, String, u32)> = BTreeMap::new();
+    for f in files {
+        for c in &f.model.stream_consts {
+            if f.model.in_test(c.line) {
+                continue;
+            }
+            let Some(v) = c.value else {
+                continue;
+            };
+            match seen.get(&v) {
+                Some((name, file, line)) if *name != c.name || *file != f.rel => {
+                    out.push(Violation {
+                        file: f.rel.clone(),
+                        line: c.line,
+                        rule: Rule::R6,
+                        msg: format!(
+                            "stream constant {} ({v:#x}) collides with {name} at \
+                             {file}:{line} — colliding ids correlate \
+                             supposedly-independent RNG streams",
+                            c.name
+                        ),
+                    });
+                }
+                Some(_) => {}
+                None => {
+                    seen.insert(v, (c.name.clone(), f.rel.clone(), c.line));
+                }
+            }
+        }
+    }
+}
+
 /// A parsed `// lint-allow(<rule>): <reason>` comment.
 struct Allow {
     line: u32,
     rule: String,
+    reason: String,
+    used: bool,
 }
 
-/// Extract allows from a file's comments; malformed ones (no rule, or no
-/// non-empty reason after `:`) become `lint-allow-syntax` diagnostics.
-fn parse_allows(f: &LintedFile, out: &mut Vec<Violation>) -> Vec<Allow> {
+/// Extract allows from a file's non-doc comments; malformed ones (no rule,
+/// or no non-empty reason after `:`) become `lint-allow-syntax`
+/// diagnostics.  The marker is `lint-allow(` — prose that merely mentions
+/// the words is ignored — and doc comments are deliberately not consulted:
+/// documentation may cite the syntax without minting a suppression.
+fn parse_allows(f: &FileEntry, out: &mut Vec<Violation>) -> Vec<Allow> {
     let mut allows = Vec::new();
     for (&line, text) in &f.model.lexed.comments {
         let mut rest = text.as_str();
-        while let Some(pos) = rest.find("lint-allow") {
-            rest = &rest[pos + "lint-allow".len()..];
-            let Some(stripped) = rest.strip_prefix('(') else {
-                out.push(syntax_err(f, line, "expected `lint-allow(<rule>): <reason>`"));
-                continue;
-            };
+        while let Some(pos) = rest.find("lint-allow(") {
+            let stripped = &rest[pos + "lint-allow(".len()..];
             let Some(close) = stripped.find(')') else {
                 out.push(syntax_err(f, line, "unclosed rule name in lint-allow"));
                 break;
             };
             let rule = stripped[..close].trim().to_string();
             let after = &stripped[close + 1..];
-            let reason_ok = after
-                .strip_prefix(':')
-                .map(|r| {
-                    let r = r.trim();
-                    let end = r.find("lint-allow").unwrap_or(r.len());
-                    !r[..end].trim().is_empty()
-                })
-                .unwrap_or(false);
+            let reason: Option<String> = after.strip_prefix(':').and_then(|r| {
+                let r = r.trim();
+                let end = r.find("lint-allow(").unwrap_or(r.len());
+                let r = r[..end].trim();
+                (!r.is_empty()).then(|| r.to_string())
+            });
             if rule.is_empty() {
                 out.push(syntax_err(f, line, "empty rule name in lint-allow"));
-            } else if !reason_ok {
+            } else if let Some(reason) = reason {
+                allows.push(Allow {
+                    line,
+                    rule,
+                    reason,
+                    used: false,
+                });
+            } else {
                 out.push(syntax_err(
                     f,
                     line,
                     &format!("lint-allow({rule}) requires a reason: `lint-allow({rule}): <why>`"),
                 ));
-            } else {
-                allows.push(Allow { line, rule });
             }
             rest = after;
         }
@@ -469,7 +855,7 @@ fn parse_allows(f: &LintedFile, out: &mut Vec<Violation>) -> Vec<Allow> {
     allows
 }
 
-fn syntax_err(f: &LintedFile, line: u32, msg: &str) -> Violation {
+fn syntax_err(f: &FileEntry, line: u32, msg: &str) -> Violation {
     Violation {
         file: f.rel.clone(),
         line,
@@ -479,15 +865,16 @@ fn syntax_err(f: &LintedFile, line: u32, msg: &str) -> Violation {
 }
 
 /// A violation is suppressed by a matching allow on the same line, or on
-/// the contiguous run of comment-only lines directly above it.
-fn is_suppressed(f: &LintedFile, allows: &[Allow], v: &Violation) -> bool {
+/// the contiguous run of comment-only lines directly above it.  Returns
+/// the index of the suppressing allow so the census can mark it used.
+fn find_suppressor(f: &FileEntry, allows: &[Allow], v: &Violation) -> Option<usize> {
     let matches_at = |line: u32| {
         allows
             .iter()
-            .any(|a| a.line == line && a.rule == v.rule.name())
+            .position(|a| a.line == line && a.rule == v.rule.name())
     };
-    if matches_at(v.line) {
-        return true;
+    if let Some(i) = matches_at(v.line) {
+        return Some(i);
     }
     let mut line = v.line;
     while line > 1 {
@@ -495,11 +882,88 @@ fn is_suppressed(f: &LintedFile, allows: &[Allow], v: &Violation) -> bool {
         let comment_only = f.model.lexed.comments.contains_key(&line)
             && !f.model.lexed.code_lines.contains(&line);
         if !comment_only {
-            return false;
+            return None;
         }
-        if matches_at(line) {
-            return true;
+        if let Some(i) = matches_at(line) {
+            return Some(i);
         }
     }
-    false
+    None
+}
+
+/// Render the report as deterministic, dependency-free JSON (the
+/// `--json` output the CI problem matcher and trend tooling consume).
+pub fn render_json(report: &LintReport) -> String {
+    fn esc(s: &str) -> String {
+        let mut out = String::with_capacity(s.len() + 2);
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\t' => out.push_str("\\t"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out
+    }
+
+    let mut s = String::new();
+    s.push_str("{\n  \"version\": 1,\n  \"violations\": [");
+    for (i, v) in report.violations.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "\n    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"msg\": \"{}\"}}",
+            esc(&v.file),
+            v.line,
+            v.rule.name(),
+            esc(&v.msg)
+        ));
+    }
+    if !report.violations.is_empty() {
+        s.push_str("\n  ");
+    }
+    s.push_str("],\n  \"allows\": [");
+    for (i, a) in report.allows.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "\n    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"reason\": \"{}\", \"used\": {}}}",
+            esc(&a.file),
+            a.line,
+            esc(&a.rule),
+            esc(&a.reason),
+            a.used
+        ));
+    }
+    if !report.allows.is_empty() {
+        s.push_str("\n  ");
+    }
+    s.push_str("],\n  \"digest_region\": [");
+    for (i, (file, via)) in report.digest_region.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "\n    {{\"file\": \"{}\", \"via\": \"{}\"}}",
+            esc(file),
+            esc(via)
+        ));
+    }
+    if !report.digest_region.is_empty() {
+        s.push_str("\n  ");
+    }
+    let stale = report.allows.iter().filter(|a| !a.used).count();
+    s.push_str(&format!(
+        "],\n  \"summary\": {{\"files_linted\": {}, \"violations\": {}, \"allows\": {}, \"stale_allows\": {}}}\n}}\n",
+        report.files_linted,
+        report.violations.len(),
+        report.allows.len(),
+        stale
+    ));
+    s
 }

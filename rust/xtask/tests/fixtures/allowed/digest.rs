@@ -1,0 +1,10 @@
+// Fixture scaffold: `digest_step` touches the StepAggregator sink, so the
+// taint pass pulls everything it (transitively) calls into the digest
+// region — including the file under test.
+
+pub fn digest_step(agg: &mut StepAggregator, n: usize) -> usize {
+    let a = scratch(n);
+    let b = inline_allowed();
+    agg.push_step((a + b) as f64);
+    a + b
+}

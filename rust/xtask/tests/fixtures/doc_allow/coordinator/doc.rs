@@ -1,0 +1,9 @@
+// Fixture: doc-comment text never mints a suppression — the `///` line
+// below is documentation, not a directive, so R2 must still fire.
+
+pub fn digest_step(agg: &mut StepAggregator, xs: &[u32]) -> usize {
+    /// lint-allow(R2): this is prose, not a suppression
+    let mut m = std::collections::HashMap::new();
+    m.insert(xs.len(), ());
+    m.len()
+}

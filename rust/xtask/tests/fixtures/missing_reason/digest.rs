@@ -1,0 +1,9 @@
+// Fixture scaffold: `digest_step` touches the StepAggregator sink, so the
+// taint pass pulls everything it (transitively) calls into the digest
+// region — including the file under test.
+
+pub fn digest_step(agg: &mut StepAggregator, n: usize) -> usize {
+    let k = bad(n);
+    agg.push_step(k as f64);
+    k
+}

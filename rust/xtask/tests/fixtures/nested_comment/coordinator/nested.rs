@@ -1,0 +1,10 @@
+// Fixture: nested block comments terminate correctly, and a lint-allow on
+// the last line of a block comment suppresses the code directly below.
+
+pub fn digest_step(agg: &mut StepAggregator, xs: &[u32]) -> usize {
+    /* scratch bookkeeping /* nested: not the end */ continues here;
+       lint-allow(R2): drained map; len() is order-independent */
+    let mut m = std::collections::HashMap::new();
+    m.insert(xs.len(), ());
+    m.len()
+}

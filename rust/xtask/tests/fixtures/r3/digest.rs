@@ -1,0 +1,9 @@
+// Fixture scaffold: `digest_step` touches the StepAggregator sink, so the
+// taint pass pulls everything it (transitively) calls into the digest
+// region — including the file under test.
+
+pub fn digest_step(agg: &mut StepAggregator) -> f64 {
+    let t = stamp_secs();
+    agg.push_step(t);
+    t
+}

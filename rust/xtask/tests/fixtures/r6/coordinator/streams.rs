@@ -1,0 +1,12 @@
+// Fixture: R6 — RNG stream derived from a bare literal key instead of a
+// named `*_STREAM` constant.
+
+pub fn split(rng: &mut Rng) -> Rng {
+    rng.derive(0xBAD_5EED) // deliberate violation
+}
+
+pub const FIXTURE_STREAM: u64 = 0x0F17;
+
+pub fn split_named(rng: &mut Rng) -> Rng {
+    rng.derive(FIXTURE_STREAM) // named constant: fine
+}

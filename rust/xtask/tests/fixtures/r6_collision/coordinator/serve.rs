@@ -1,0 +1,5 @@
+// Fixture: R6 collision — distinct stream constants are fine; a reused
+// value elsewhere in the crate is not.
+
+pub const SERVE_STREAM: u64 = 0x5E47;
+pub const JOIN_STREAM: u64 = 0x5E48;

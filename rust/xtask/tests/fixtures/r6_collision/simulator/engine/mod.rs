@@ -1,0 +1,3 @@
+// Fixture: R6 collision — ROUTE_STREAM reuses SERVE_STREAM's value.
+
+pub const ROUTE_STREAM: u64 = 0x5E47; // deliberate violation

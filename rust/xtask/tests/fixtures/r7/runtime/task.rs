@@ -1,0 +1,9 @@
+// Fixture: R7 — blocking sleep reachable from an executor future.
+
+async fn client_loop(h: &Handle) {
+    pace(h);
+}
+
+fn pace(_h: &Handle) {
+    std::thread::sleep(std::time::Duration::from_millis(1)); // deliberate violation
+}

@@ -1,0 +1,16 @@
+// Fixture: R8 — ad-hoc float reduction in a digest-sink file; the same
+// reduction inside the Welford impl is the blessed accumulator and exempt.
+
+pub fn band_means(w: &Welford, xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64 // deliberate violation
+}
+
+pub struct Welford {
+    total: f64,
+}
+
+impl Welford {
+    pub fn merge_sum(&mut self, xs: &[f64]) {
+        self.total += xs.iter().sum::<f64>(); // sink impl: allowed
+    }
+}

@@ -1,0 +1,20 @@
+// Fixture: stale-allow — the live suppression below keeps working; the
+// one covering removed code must itself be diagnosed.
+
+pub fn digest_step(agg: &mut StepAggregator, xs: &[u32]) -> usize {
+    count_kinds(xs)
+}
+
+pub fn count_kinds(xs: &[u32]) -> usize {
+    // lint-allow(R2): drained scratch map; len() is order-independent
+    let mut m = std::collections::HashMap::new();
+    for &x in xs {
+        m.insert(x, ());
+    }
+    m.len()
+}
+
+pub fn tidy() -> u32 {
+    // lint-allow(R3): the Instant this covered was removed in a refactor
+    42
+}

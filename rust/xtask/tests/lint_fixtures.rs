@@ -1,15 +1,19 @@
-//! One deliberate violation per rule R1–R5, plus suppression behavior,
-//! each asserting the exact rule-name diagnostic.
+//! One deliberate violation per rule R1–R8, plus suppression behavior
+//! (doc comments, nested block comments, stale allows) and the JSON
+//! rendering, each asserting the exact diagnostic.
 
 use std::path::PathBuf;
 
-use xtask::{lint_root, Violation};
+use xtask::{lint_report, lint_root, render_json, Violation};
+
+fn fixture_root(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name)
+}
 
 fn fixture(name: &str) -> Vec<Violation> {
-    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
-        .join("tests/fixtures")
-        .join(name);
-    lint_root(&root)
+    lint_root(&fixture_root(name))
 }
 
 #[test]
@@ -38,21 +42,34 @@ fn r1_membership_callbacks_rng_draw() {
 }
 
 #[test]
-fn r2_hashmap_in_deterministic_module() {
+fn r2_hashmap_in_digest_region() {
+    // the fixture file never names a module from the old hard-coded list;
+    // it is tainted because digest_step touches StepAggregator and calls
+    // tally, which owns the HashMap
     let v = fixture("r2");
     assert_eq!(v.len(), 1, "diagnostics: {v:?}");
     assert_eq!(v[0].rule.name(), "R2");
     assert_eq!(v[0].file, "simulator/state.rs");
     assert_eq!(v[0].line, 4);
+    assert!(
+        v[0].msg.contains("tainted via digest_step -> tally"),
+        "witness chain must name the taint path: {}",
+        v[0].msg
+    );
 }
 
 #[test]
-fn r3_instant_in_deterministic_module() {
+fn r3_instant_in_digest_region() {
     let v = fixture("r3");
     assert_eq!(v.len(), 1, "diagnostics: {v:?}");
     assert_eq!(v[0].rule.name(), "R3");
     assert_eq!(v[0].file, "simulator/clock.rs");
     assert_eq!(v[0].line, 4);
+    assert!(
+        v[0].msg.contains("tainted via digest_step -> stamp_secs"),
+        "witness chain must name the taint path: {}",
+        v[0].msg
+    );
 }
 
 #[test]
@@ -74,9 +91,78 @@ fn r5_bare_float_accumulation() {
 }
 
 #[test]
+fn r6_bare_literal_stream_key() {
+    let v = fixture("r6");
+    assert_eq!(v.len(), 1, "diagnostics: {v:?}");
+    assert_eq!(v[0].rule.name(), "R6");
+    assert_eq!(v[0].file, "coordinator/streams.rs");
+    assert_eq!(v[0].line, 5, "the *_STREAM const derive below must not fire");
+    assert_eq!(
+        v[0].msg,
+        "RNG stream derived from bare literal `0xBAD_5EED` — key streams off a named \
+         `*_STREAM` constant so ids stay collision-auditable"
+    );
+}
+
+#[test]
+fn r6_stream_constant_collision() {
+    // two *_STREAM consts in different modules share a value; the later
+    // site (files sorted) carries the diagnostic and names the earlier one
+    let v = fixture("r6_collision");
+    assert_eq!(v.len(), 1, "diagnostics: {v:?}");
+    assert_eq!(v[0].rule.name(), "R6");
+    assert_eq!(v[0].file, "simulator/engine/mod.rs");
+    assert_eq!(v[0].line, 3);
+    assert_eq!(
+        v[0].msg,
+        "stream constant ROUTE_STREAM (0x5e47) collides with SERVE_STREAM at \
+         coordinator/serve.rs:4 — colliding ids correlate supposedly-independent RNG streams"
+    );
+}
+
+#[test]
+fn r7_blocking_call_reachable_from_async() {
+    // thread::sleep lives in a sync helper two hops from the async fn; the
+    // diagnostic lands on the sleep and reports the call chain
+    let v = fixture("r7");
+    assert_eq!(v.len(), 1, "diagnostics: {v:?}");
+    assert_eq!(v[0].rule.name(), "R7");
+    assert_eq!(v[0].file, "runtime/task.rs");
+    assert_eq!(v[0].line, 8);
+    assert!(v[0].msg.contains("`sleep`"), "{}", v[0].msg);
+    assert!(
+        v[0].msg.contains("chain: client_loop -> pace"),
+        "chain must start at the async root: {}",
+        v[0].msg
+    );
+}
+
+#[test]
+fn r8_float_reduction_in_sink_file() {
+    // the .sum::<f64>() outside the Welford impl fires; the identical
+    // reduction inside the impl is the sink's own accumulator and is exempt
+    let v = fixture("r8");
+    assert_eq!(v.len(), 1, "diagnostics: {v:?}");
+    assert_eq!(v[0].rule.name(), "R8");
+    assert_eq!(v[0].file, "figures/band.rs");
+    assert_eq!(v[0].line, 5, "Welford impl below must not fire");
+    assert!(v[0].msg.contains("`.sum()`"), "{}", v[0].msg);
+}
+
+#[test]
 fn valid_lint_allow_suppresses() {
-    let v = fixture("allowed");
-    assert!(v.is_empty(), "expected clean, got: {v:?}");
+    let report = lint_report(&fixture_root("allowed"));
+    assert!(
+        report.violations.is_empty(),
+        "expected clean, got: {:?}",
+        report.violations
+    );
+    assert_eq!(report.allows.len(), 2, "census: {:?}", report.allows);
+    assert!(
+        report.allows.iter().all(|a| a.used),
+        "both allows are live: {:?}",
+        report.allows
+    );
 }
 
 #[test]
@@ -90,5 +176,69 @@ fn lint_allow_without_reason_is_rejected() {
     assert!(
         rules.contains(&"R2"),
         "malformed allow must not suppress: {v:?}"
+    );
+}
+
+#[test]
+fn stale_allow_fails_live_allow_survives() {
+    // one file, two allows: the R2 one suppresses a real HashMap and stays
+    // silent; the R3 one covers nothing and must itself be a violation
+    let report = lint_report(&fixture_root("stale_allow"));
+    assert_eq!(
+        report.violations.len(),
+        1,
+        "only the stale allow fails: {:?}",
+        report.violations
+    );
+    let v = &report.violations[0];
+    assert_eq!(v.rule.name(), "stale-allow");
+    assert_eq!(v.file, "coordinator/audit.rs");
+    assert_eq!(v.line, 18);
+    assert_eq!(
+        v.msg,
+        "lint-allow(R3) suppresses nothing — remove the stale suppression or \
+         restore the code it covered"
+    );
+    let used: Vec<bool> = report.allows.iter().map(|a| a.used).collect();
+    assert_eq!(used, [true, false], "census: {:?}", report.allows);
+}
+
+#[test]
+fn doc_comment_allow_does_not_suppress() {
+    // `/// lint-allow(R2): ...` is documentation, not a directive
+    let v = fixture("doc_allow");
+    assert_eq!(v.len(), 1, "diagnostics: {v:?}");
+    assert_eq!(v[0].rule.name(), "R2");
+    assert_eq!(v[0].file, "coordinator/doc.rs");
+    assert_eq!(v[0].line, 6);
+}
+
+#[test]
+fn nested_block_comment_allow_suppresses() {
+    // the allow sits on the closing line of a nested block comment; a lexer
+    // that ends the comment at the first `*/` would mis-attribute it
+    let report = lint_report(&fixture_root("nested_comment"));
+    assert!(
+        report.violations.is_empty(),
+        "expected clean, got: {:?}",
+        report.violations
+    );
+    assert_eq!(report.allows.len(), 1);
+    assert!(report.allows[0].used);
+}
+
+#[test]
+fn json_report_matches_golden() {
+    // the machine-readable shape is a contract with CI (problem matcher +
+    // artifact consumers): pin it byte-for-byte against a committed golden
+    let report = lint_report(&fixture_root("stale_allow"));
+    let got = render_json(&report);
+    let golden_path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/stale_allow.json");
+    let want = std::fs::read_to_string(&golden_path).expect("golden file");
+    assert_eq!(
+        got.trim_end(),
+        want.trim_end(),
+        "JSON shape drifted from {}",
+        golden_path.display()
     );
 }
